@@ -1,0 +1,24 @@
+use dla_codesign::arch::detect_host;
+use dla_codesign::gemm::{ConfigMode, GemmEngine};
+use dla_codesign::model::{GemmDims, MicroKernel};
+use dla_codesign::util::{MatrixF64, Pcg64};
+use dla_codesign::util::timer::measure;
+fn main() {
+    let arch = detect_host();
+    let mut rng = Pcg64::seed(1);
+    for (m, n, k) in [(2000, 2000, 256), (2000, 2000, 96)] {
+        let dims = GemmDims::new(m, n, k);
+        let a = MatrixF64::random(m, k, &mut rng);
+        let b = MatrixF64::random(k, n, &mut rng);
+        let mut c = MatrixF64::zeros(m, n);
+        for (label, mode) in [
+            ("BLIS-static", ConfigMode::BlisStatic),
+            ("MOD 8x6", ConfigMode::RefinedWithKernel(MicroKernel::new(8, 6))),
+            ("dynamic", ConfigMode::Refined),
+        ] {
+            let mut e = GemmEngine::new(arch.clone(), mode);
+            let meas = measure(3, 1.0, || e.gemm(1.0, a.view(), b.view(), 0.0, &mut c.view_mut()));
+            println!("{m}x{n}x{k} {label:<12} {:>7.2} GFLOPS (best {:.2})", meas.gflops(dims.flops()), meas.gflops_best(dims.flops()));
+        }
+    }
+}

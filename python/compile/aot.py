@@ -1,0 +1,118 @@
+"""AOT exporter: lower the L2/L1 functions to HLO *text* artifacts the
+Rust PJRT runtime loads at startup.
+
+HLO text — NOT ``lowered.compile()`` or serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--quick]
+
+Writes one ``<name>.hlo.txt`` per artifact plus ``manifest.tsv`` with
+columns: name, file, kind, params (key=value;...). The Rust
+``runtime::registry`` parses the manifest.
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # the paper's FP64 precision
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import gemm_pallas  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+def i64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int64)
+
+
+def artifact_list(quick: bool):
+    """(name, fn, example_args, kind, params) for every artifact."""
+    arts = []
+
+    # --- GEMM kernels: the e2e LU shape + bench shapes + variants -----
+    gemm_shapes = [(256, 256, 32), (128, 128, 128)]
+    if not quick:
+        gemm_shapes += [(256, 256, 64), (512, 512, 64)]
+    for (m, n, k) in gemm_shapes:
+        for variant in (["mk8x8", "mk12x4"] if not quick else ["mk8x8"]):
+            name = f"gemm_{m}x{n}x{k}_{variant}"
+            fn = model.make_gemm(variant=variant)
+            arts.append(
+                (name, fn, (f64(m, k), f64(k, n)), "gemm",
+                 dict(m=m, n=n, k=k, variant=variant))
+            )
+    # Trailing-update form used by the coordinator's LU driver.
+    for (m, n, k) in [(256, 256, 32)] + ([] if quick else [(512, 512, 64)]):
+        name = f"gemm_update_{m}x{n}x{k}_mk8x8"
+        fn = model.make_gemm_update(variant="mk8x8")
+        arts.append(
+            (name, fn, (f64(m, n), f64(m, k), f64(k, n)), "gemm_update",
+             dict(m=m, n=n, k=k, variant="mk8x8"))
+        )
+
+    # --- LU step + full factorization ---------------------------------
+    lu_shapes = [(256, 32)]
+    if not quick:
+        lu_shapes += [(128, 16)]
+    for (s, b) in lu_shapes:
+        step = model.make_lu_step(s, b)
+        arts.append(
+            (f"lu_step_s{s}_b{b}", step, (f64(s, s), i64(s), i64()), "lu_step",
+             dict(s=s, b=b))
+        )
+        full = model.make_lu_full(s, b)
+        arts.append(
+            (f"lu_full_s{s}_b{b}", full, (f64(s, s),), "lu_full",
+             dict(s=s, b=b))
+        )
+    return arts
+
+
+def export_all(out_dir: str, quick: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_rows = []
+    for name, fn, args, kind, params in artifact_list(quick):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        pstr = ";".join(f"{k}={v}" for k, v in sorted(params.items()))
+        manifest_rows.append(f"{name}\t{fname}\t{kind}\t{pstr}")
+        print(f"  {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("# name\tfile\tkind\tparams\n")
+        f.write("\n".join(manifest_rows) + "\n")
+    print(f"wrote {len(manifest_rows)} artifacts to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="minimal artifact set")
+    args = ap.parse_args()
+    export_all(args.out_dir, args.quick)
+
+
+if __name__ == "__main__":
+    main()

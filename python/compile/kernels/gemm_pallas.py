@@ -1,0 +1,133 @@
+"""Layer-1: the GEMM hot spot as Pallas kernels.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles for
+CPU caches and NEON/AVX register files; on TPU the same co-design insight
+maps onto BlockSpec tile selection for VMEM and the MXU:
+
+- packed buffer ``Ac`` in L2          -> the (bm, bk) A tile staged in VMEM
+- micro-panel ``Br`` in L1            -> the (bk, bn) B tile in VMEM
+- ``mr x nr`` register micro-tile     -> the (bm, bn) MXU accumulator tile
+- CCP choice (mc, nc, kc)             -> (bm, bn, bk) chosen from VMEM
+                                          capacity by the same refined,
+                                          dimension-aware model
+
+The kernel *variants* mirror the paper's micro-kernel family: each scales
+an ``mr x nr`` aspect ratio up to MXU-aligned tiles, and the co-design
+selector (Rust layer 3) decides which compiled artifact serves a request.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and the numerics of the interpret path are
+exactly those the Rust runtime replays (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper's micro-kernel family, scaled by 16x to MXU-aligned tiles
+# (e.g. MK8x6 -> 128 x 96). Keys match the Rust selector's variant names.
+VARIANTS = {
+    "mk8x6": (128, 96),
+    "mk6x8": (96, 128),
+    "mk12x4": (192, 64),
+    "mk4x12": (64, 192),
+    "mk8x8": (128, 128),
+}
+
+DEFAULT_VARIANT = "mk8x8"
+
+
+def _gemm_kernel_fullk(a_ref, b_ref, o_ref):
+    """2-D grid kernel: each program computes one (bm, bn) output tile
+    from a full-k (bm, K) x (K, bn) pair of VMEM tiles."""
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def _gemm_kernel_blockk(a_ref, b_ref, o_ref):
+    """3-D grid kernel: k is blocked too; program (i, j, p) accumulates
+    the p-th (bm, bk) x (bk, bn) partial product into the output tile.
+
+    The K grid axis iterates innermost ("arbitrary" semantics in
+    interpret mode), so the accumulation o += a @ b is safe: the same
+    (i, j) tile is revisited across p with the partial sums persisted.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def _round_block(dim, want):
+    """Largest block <= want dividing dim (fall back to dim itself)."""
+    want = min(want, dim)
+    for cand in range(want, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "block_k"))
+def gemm(a, b, variant=DEFAULT_VARIANT, block_k=None):
+    """C = A @ B through the Pallas kernel.
+
+    ``variant`` selects the tile aspect ratio (micro-kernel analogue);
+    ``block_k`` enables the 3-D-grid accumulator kernel with the given k
+    block (the kc analogue), otherwise the full-k kernel is used.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm_want, bn_want = VARIANTS[variant]
+    bm = _round_block(m, bm_want)
+    bn = _round_block(n, bn_want)
+    out_shape = jax.ShapeDtypeStruct((m, n), a.dtype)
+    if block_k is None:
+        grid = (m // bm, n // bn)
+        return pl.pallas_call(
+            _gemm_kernel_fullk,
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+                pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            interpret=True,
+        )(a, b)
+    bk = _round_block(k, block_k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_kernel_blockk,
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, p: (i, p)),
+            pl.BlockSpec((bk, bn), lambda i, j, p: (p, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, p: (i, j)),
+        interpret=True,
+    )(a, b)
+
+
+def gemm_update(c, a, b, alpha=1.0, beta=1.0, variant=DEFAULT_VARIANT):
+    """C := alpha * A @ B + beta * C — the LU trailing-update form."""
+    return alpha * gemm(a, b, variant=variant) + beta * c
+
+
+def vmem_bytes(variant, k, dtype_bytes=8):
+    """Estimated VMEM footprint of one program instance of the full-k
+    kernel: A tile + B tile + O tile. Used by DESIGN.md's §Perf L1 notes
+    and asserted against the 16 MB VMEM budget in tests."""
+    bm, bn = VARIANTS[variant]
+    return dtype_bytes * (bm * k + k * bn + bm * bn)
+
+
+def mxu_alignment(variant):
+    """Fraction of the tile that is MXU-aligned (128-multiples)."""
+    bm, bn = VARIANTS[variant]
+    am = (bm // 128) * 128 / bm if bm >= 128 else bm / 128
+    an = (bn // 128) * 128 / bn if bn >= 128 else bn / 128
+    return am * an

@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the JAX model.
+
+Everything here is deliberately written in the most transparent way
+possible (no tiling, no pallas, no clever masking): pytest compares the
+production kernels against these, making this file the root of the
+correctness chain for the Python layers.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def gemm_ref(a, b):
+    """C = A @ B, plain jnp."""
+    return jnp.matmul(a, b)
+
+
+def gemm_update_ref(c, a, b, alpha=1.0, beta=1.0):
+    """C := alpha * A @ B + beta * C (the trailing-update form)."""
+    return alpha * jnp.matmul(a, b) + beta * c
+
+
+def lu_partial_pivot_ref(a):
+    """Unblocked LU with partial pivoting, numpy loops (oracle only).
+
+    Returns (lu, piv) in LAPACK convention: lu holds L (strict lower,
+    unit diagonal implicit) and U; piv[j] = row swapped with j at step j.
+    """
+    a = np.array(a, dtype=np.float64, copy=True)
+    s = a.shape[0]
+    assert a.shape == (s, s)
+    piv = np.zeros(s, dtype=np.int64)
+    for j in range(s):
+        p = j + int(np.argmax(np.abs(a[j:, j])))
+        piv[j] = p
+        if p != j:
+            a[[j, p], :] = a[[p, j], :]
+        if a[j, j] == 0.0:
+            raise ZeroDivisionError(f"singular at column {j}")
+        a[j + 1 :, j] /= a[j, j]
+        a[j + 1 :, j + 1 :] -= np.outer(a[j + 1 :, j], a[j, j + 1 :])
+    return a, piv
+
+
+def apply_pivots_ref(x, piv):
+    """Apply the pivot sequence to rows of x (compute P @ x)."""
+    x = np.array(x, copy=True)
+    for j, p in enumerate(piv):
+        if p != j:
+            x[[j, p]] = x[[p, j]]
+    return x
+
+
+def reconstruct_ref(lu, piv, a0):
+    """max |P A0 - L U| (normalized by max|A0|)."""
+    s = lu.shape[0]
+    lo = np.tril(lu, -1) + np.eye(s)
+    up = np.triu(lu)
+    pa = apply_pivots_ref(a0, piv)
+    err = np.max(np.abs(pa - lo @ up))
+    return err / max(np.max(np.abs(np.array(a0))), 1e-300)

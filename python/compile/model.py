@@ -1,0 +1,185 @@
+"""Layer-2: the JAX compute graph — blocked LU with partial pivoting.
+
+This is the paper's Figure 2 algorithm expressed at fixed shape so one
+compiled artifact serves every iteration: the step index ``k`` is a traced
+scalar and all panel/strip extractions use static-size dynamic slices plus
+masking. The trailing update is the paper's skinny-k GEMM and runs through
+the Layer-1 Pallas kernel.
+
+Exported entry points (see aot.py):
+
+- ``gemm_fn(a, b)``            — the Pallas GEMM at a fixed shape.
+- ``lu_step_fn(a, piv, k)``    — one blocked-LU iteration (PFACT + swaps
+                                 + TSOLVE + GEMM); the Rust coordinator
+                                 drives the loop over ``k``.
+- ``lu_full_fn(a)``            — the whole factorization as one artifact
+                                 (``fori_loop`` over steps).
+
+Everything is FP64 (the paper's precision); aot.py enables x64.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm_pallas
+
+
+def tri_solve_unit_lower(l11, r):
+    """R := Lower_unit(L11)^{-1} R by forward substitution.
+
+    Hand-rolled (fori_loop of masked rank-1 updates) instead of
+    ``jax.scipy.linalg.solve_triangular``: the SciPy route lowers to a
+    LAPACK typed-FFI custom-call that the Rust runtime's XLA
+    (xla_extension 0.5.1) cannot execute, while this version is pure HLO.
+    Only the strictly-lower part of ``l11`` is referenced.
+    """
+    b = l11.shape[0]
+    assert l11.shape == (b, b) and r.shape[0] == b
+    rows = jnp.arange(b)
+
+    def body(i, r):
+        row_i = jax.lax.dynamic_index_in_dim(r, i, axis=0, keepdims=False)
+        col_i = jax.lax.dynamic_index_in_dim(l11, i, axis=1, keepdims=False)
+        col_i = jnp.where(rows > i, col_i, 0.0)
+        return r - jnp.outer(col_i, row_i)
+
+    return jax.lax.fori_loop(0, b, body, r)
+
+
+def _panel_factor(strip, k, s, b):
+    """Factor the s x b panel ``strip`` (global rows, columns [k, k+b))
+    with partial pivoting, restricted to rows >= k + j at local column j.
+
+    Returns (factored strip, local pivot rows as global indices, ok flag).
+    Rows above the diagonal of the panel are left untouched.
+    """
+    rows = jnp.arange(s)
+
+    def step(j, carry):
+        a, piv, ok = carry
+        col = k + j  # global row of the panel diagonal
+        colv = jax.lax.dynamic_index_in_dim(a, j, axis=1, keepdims=False)
+        valid = rows >= col
+        mag = jnp.where(valid, jnp.abs(colv), -1.0)
+        p = jnp.argmax(mag)  # global pivot row
+        ok = jnp.logical_and(ok, mag[p] > 0.0)
+        # Swap rows col <-> p of the strip.
+        rowc = jax.lax.dynamic_slice(a, (col, 0), (1, b))
+        rowp = jax.lax.dynamic_slice(a, (p, 0), (1, b))
+        a = jax.lax.dynamic_update_slice(a, rowp, (col, 0))
+        a = jax.lax.dynamic_update_slice(a, rowc, (p, 0))
+        piv = piv.at[col].set(p)
+        # Scale the sub-column and apply the rank-1 update to the panel.
+        colv = jax.lax.dynamic_index_in_dim(a, j, axis=1, keepdims=False)
+        pivot = colv[col]
+        inv = jnp.where(pivot != 0.0, 1.0 / pivot, 0.0)
+        below = rows > col
+        lcol = jnp.where(below, colv * inv, colv)
+        a = a.at[:, j].set(lcol)
+        # Rank-1 on panel columns > j, rows > col.
+        urow = jax.lax.dynamic_index_in_dim(a, col, axis=0, keepdims=False)  # length b
+        cols_p = jnp.arange(b)
+        umask = jnp.where(cols_p > j, urow, 0.0)
+        lmask = jnp.where(below, lcol, 0.0)
+        a = a - jnp.outer(lmask, umask)
+        return a, piv, ok
+
+    piv0 = jnp.arange(s)
+    strip, piv, ok = jax.lax.fori_loop(0, b, step, (strip, piv0, jnp.bool_(True)))
+    return strip, piv, ok
+
+
+def make_lu_step(s, b, variant=gemm_pallas.DEFAULT_VARIANT):
+    """Build the fixed-shape LU step function for matrix order ``s`` and
+    algorithmic block size ``b`` (both static)."""
+    assert s % b == 0, "s must be a multiple of b for the exported artifact"
+
+    def lu_step(a, piv, k):
+        """One iteration of the blocked right-looking LU at panel start
+        ``k`` (traced scalar). Returns (a', piv', ok)."""
+        rows = jnp.arange(s)
+        cols = jnp.arange(s)
+        # ---- PFACT on the s x b panel --------------------------------
+        strip = jax.lax.dynamic_slice(a, (0, k), (s, b))
+        strip_f, piv_step, ok = _panel_factor(strip, k, s, b)
+        # ---- Row interchanges on the rest of the matrix --------------
+        # Apply the same swap sequence to the complement columns; the
+        # panel columns are replaced wholesale by the factored strip.
+        def apply_swap(j, am):
+            col = k + j
+            p = piv_step[col]
+            rowc = jax.lax.dynamic_slice(am, (col, 0), (1, s))
+            rowp = jax.lax.dynamic_slice(am, (p, 0), (1, s))
+            am = jax.lax.dynamic_update_slice(am, rowp, (col, 0))
+            am = jax.lax.dynamic_update_slice(am, rowc, (p, 0))
+            return am
+
+        a = jax.lax.fori_loop(0, b, apply_swap, a)
+        a = jax.lax.dynamic_update_slice(a, strip_f, (0, k))
+        # Record pivots at their global positions.
+        in_panel = jnp.logical_and(rows >= k, rows < k + b)
+        piv = jnp.where(in_panel, piv_step, piv)
+        # ---- TSOLVE: U12 = L11^{-1} A12 ------------------------------
+        l11 = jax.lax.dynamic_slice(a, (k, k), (b, b))
+        rstrip = jax.lax.dynamic_slice(a, (k, 0), (b, s))
+        solved = tri_solve_unit_lower(l11, rstrip)
+        right = cols >= k + b
+        rstrip = jnp.where(right[None, :], solved, rstrip)
+        a = jax.lax.dynamic_update_slice(a, rstrip, (k, 0))
+        # ---- GEMM: A22 -= A21 * U12 (k-dim = b), via Pallas ----------
+        below = rows >= k + b
+        a21 = jax.lax.dynamic_slice(a, (0, k), (s, b))
+        a21 = jnp.where(below[:, None], a21, 0.0)
+        u12 = jnp.where(right[None, :], rstrip, 0.0)
+        a = a - gemm_pallas.gemm(a21, u12, variant=variant)
+        return a, piv, ok
+
+    return lu_step
+
+
+def make_lu_full(s, b, variant=gemm_pallas.DEFAULT_VARIANT):
+    """Whole blocked LU as a single function (fori_loop over steps)."""
+    lu_step = make_lu_step(s, b, variant)
+
+    def lu_full(a):
+        piv0 = jnp.arange(s)
+        ok0 = jnp.bool_(True)
+
+        def body(i, carry):
+            a, piv, ok = carry
+            a, piv, ok_i = lu_step(a, piv, i * b)
+            return a, piv, jnp.logical_and(ok, ok_i)
+
+        return jax.lax.fori_loop(0, s // b, body, (a, piv0, ok0))
+
+    return lu_full
+
+
+def make_gemm(variant=gemm_pallas.DEFAULT_VARIANT, block_k=None):
+    """Fixed-variant GEMM entry point (shape fixed at lowering time)."""
+
+    def gemm_fn(a, b):
+        return gemm_pallas.gemm(a, b, variant=variant, block_k=block_k)
+
+    return gemm_fn
+
+
+def make_gemm_update(variant=gemm_pallas.DEFAULT_VARIANT):
+    """Trailing-update GEMM: C := C - A @ B (alpha = -1, beta = 1)."""
+
+    def gemm_update_fn(c, a, b):
+        return gemm_pallas.gemm_update(c, a, b, alpha=-1.0, beta=1.0, variant=variant)
+
+    return gemm_update_fn
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_lu_step(s, b, variant=gemm_pallas.DEFAULT_VARIANT):
+    return jax.jit(make_lu_step(s, b, variant))
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_lu_full(s, b, variant=gemm_pallas.DEFAULT_VARIANT):
+    return jax.jit(make_lu_full(s, b, variant))

@@ -1,0 +1,5 @@
+"""Shared pytest configuration: FP64 everywhere (the paper's precision)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

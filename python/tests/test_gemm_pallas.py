@@ -1,0 +1,119 @@
+"""L1 kernel correctness: the Pallas GEMM vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes, as required: the kernel must be
+exact (up to accumulation roundoff) for every variant, every tile-divide
+and non-divide shape, and both grid styles (full-k and blocked-k).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm_pallas, ref
+
+VARIANTS = sorted(gemm_pallas.VARIANTS)
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+def _tol(dtype, k):
+    eps = np.finfo(dtype).eps
+    return 20 * eps * max(k, 1)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_exact_tile_shapes(variant):
+    bm, bn = gemm_pallas.VARIANTS[variant]
+    a = _rand((bm * 2, 64), np.float64, 1)
+    b = _rand((64, bn * 2), np.float64, 2)
+    got = np.array(gemm_pallas.gemm(a, b, variant=variant))
+    want = np.array(ref.gemm_ref(a, b))
+    np.testing.assert_allclose(got, want, atol=_tol(np.float64, 64))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    n=st.integers(1, 96),
+    k=st.integers(1, 96),
+    variant=st.sampled_from(VARIANTS),
+)
+def test_hypothesis_shapes_f64(m, n, k, variant):
+    a = _rand((m, k), np.float64, m * 7 + k)
+    b = _rand((k, n), np.float64, n * 13 + k)
+    got = np.array(gemm_pallas.gemm(a, b, variant=variant))
+    want = a @ b
+    np.testing.assert_allclose(got, want, atol=_tol(np.float64, k))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    n=st.integers(1, 64),
+    k=st.integers(1, 64),
+)
+def test_hypothesis_shapes_f32(m, n, k):
+    a = _rand((m, k), np.float32, m + k)
+    b = _rand((k, n), np.float32, n + 2 * k)
+    got = np.array(gemm_pallas.gemm(a, b))
+    want = a @ b
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, want, atol=_tol(np.float32, k))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mt=st.integers(1, 3),
+    nt=st.integers(1, 3),
+    kt=st.integers(1, 4),
+    bk=st.sampled_from([8, 16, 32]),
+)
+def test_blocked_k_accumulator(mt, nt, kt, bk):
+    """The 3-D-grid kernel (kc analogue) must accumulate correctly."""
+    m, n, k = 32 * mt, 32 * nt, bk * kt
+    a = _rand((m, k), np.float64, m + k)
+    b = _rand((k, n), np.float64, n + k)
+    got = np.array(gemm_pallas.gemm(a, b, block_k=bk))
+    np.testing.assert_allclose(got, a @ b, atol=_tol(np.float64, k))
+
+
+def test_gemm_update_alpha_beta():
+    c = _rand((48, 40), np.float64, 3)
+    a = _rand((48, 24), np.float64, 4)
+    b = _rand((24, 40), np.float64, 5)
+    got = np.array(gemm_pallas.gemm_update(c, a, b, alpha=-1.0, beta=1.0))
+    want = np.array(ref.gemm_update_ref(c, a, b, alpha=-1.0, beta=1.0))
+    np.testing.assert_allclose(got, want, atol=1e-12)
+
+
+def test_identity_and_zero():
+    a = _rand((33, 33), np.float64, 9)
+    eye = np.eye(33)
+    np.testing.assert_allclose(np.array(gemm_pallas.gemm(a, eye)), a, atol=1e-13)
+    z = np.zeros((33, 17))
+    assert np.all(np.array(gemm_pallas.gemm(a, z)) == 0.0)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_vmem_budget(variant):
+    """DESIGN.md §Perf L1: every exported tile configuration must fit the
+    16 MB VMEM budget at the largest exported k."""
+    assert gemm_pallas.vmem_bytes(variant, k=512) < 16 * 1024 * 1024
+
+
+def test_mxu_alignment_reported():
+    # The default variant is fully MXU-aligned; skinny family members
+    # trade alignment for shape, mirroring the paper's micro-kernels.
+    assert gemm_pallas.mxu_alignment("mk8x8") == 1.0
+    assert 0.0 < gemm_pallas.mxu_alignment("mk12x4") <= 1.0
+
+
+def test_inner_dim_mismatch_raises():
+    a = np.zeros((4, 5))
+    b = np.zeros((6, 4))
+    with pytest.raises(AssertionError):
+        gemm_pallas.gemm(a, b)

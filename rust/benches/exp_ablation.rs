@@ -1,0 +1,95 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Model vs exhaustive autotuning** — the paper's claim that the
+//!    refined analytical model "avoids a costly optimization search":
+//!    sweep a CCP grid on the host, compare the best-found configuration
+//!    against the model's one-shot pick (quality and search cost).
+//! 2. **Micro-kernel family sweep** — every SIMD kernel under MOD CCPs
+//!    (the §3.4 selection space).
+//! 3. **Workspace pooling** — pooled packing buffers (the paper's
+//!    "sufficiently large workspace") vs per-call allocation.
+use dla_codesign::arch::detect_host;
+use dla_codesign::bench::BenchGroup;
+use dla_codesign::gemm::microkernel::for_shape;
+use dla_codesign::gemm::{gemm_blocked, ConfigMode, GemmEngine, Workspace};
+use dla_codesign::model::ccp::GemmConfig;
+use dla_codesign::model::{refined_ccp, Ccp, GemmDims, MicroKernel};
+use dla_codesign::util::timer::measure;
+use dla_codesign::util::{MatrixF64, Pcg64, Stopwatch};
+
+fn main() {
+    let arch = detect_host();
+    let mn = std::env::var("DLA_MN").ok().and_then(|v| v.parse().ok()).unwrap_or(768usize);
+    let k = 96;
+    let dims = GemmDims::new(mn, mn, k);
+    let mut rng = Pcg64::seed(5);
+    let a = MatrixF64::random(mn, k, &mut rng);
+    let b = MatrixF64::random(k, mn, &mut rng);
+    let mut c = MatrixF64::zeros(mn, mn);
+    let mk = MicroKernel::new(8, 6);
+    let kernel = for_shape(mk).unwrap();
+
+    // --- 1. model pick vs exhaustive grid search -----------------------
+    println!("=== ablation 1: refined model vs exhaustive CCP search ({mn}x{mn}x{k}) ===");
+    let model_ccp = refined_ccp(&arch, mk, dims).clamp_to(dims);
+    let mut g = BenchGroup::new("model vs autotune");
+    let mut ws = Workspace::new();
+    g.case(&format!("model pick {model_ccp}"), dims.flops(), || {
+        let cfg = GemmConfig { mk, ccp: model_ccp };
+        gemm_blocked(&cfg, &kernel, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut(), &mut ws);
+    });
+    let sweep = Stopwatch::start();
+    let mut best = (Ccp::new(1, 1, 1), 0.0f64);
+    let mut tried = 0;
+    for mc in [48, 96, 192, 384, 768, 1536] {
+        for nc in [96, 192, 384, 768, 1536] {
+            for kc in [32, 64, 96] {
+                let ccp = Ccp::new(mc, nc, kc).clamp_to(dims);
+                let cfg = GemmConfig { mk, ccp };
+                let m = measure(1, 0.05, || {
+                    gemm_blocked(&cfg, &kernel, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut(), &mut ws);
+                });
+                let gf = m.gflops_best(dims.flops());
+                tried += 1;
+                if gf > best.1 {
+                    best = (ccp, gf);
+                }
+            }
+        }
+    }
+    let sweep_s = sweep.elapsed_secs();
+    g.record(&format!("autotune best {} ({tried} configs, {sweep_s:.1}s search)", best.0),
+             dims.flops() / best.1 / 1e9, dims.flops());
+    g.finish("bench_ablation_autotune");
+    println!("-> search cost {sweep_s:.1}s vs model cost ~0s; quality gap = model/best ratio above\n");
+
+    // --- 2. micro-kernel family under MOD CCPs --------------------------
+    println!("=== ablation 2: micro-kernel family at {mn}x{mn}x{k} ===");
+    let mut g2 = BenchGroup::new("micro-kernel family (MOD CCPs)");
+    let eng = GemmEngine::new(arch.clone(), ConfigMode::Refined);
+    for spec in eng.family() {
+        let kern = match for_shape(spec) {
+            Some(kk) => kk,
+            None => continue,
+        };
+        let ccp = refined_ccp(&arch, spec, dims).clamp_to(dims);
+        let cfg = GemmConfig { mk: spec, ccp };
+        g2.case(&format!("{spec} {ccp}"), dims.flops(), || {
+            gemm_blocked(&cfg, &kern, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut(), &mut ws);
+        });
+    }
+    g2.finish("bench_ablation_family");
+
+    // --- 3. workspace pooling vs per-call allocation --------------------
+    println!("=== ablation 3: pooled vs per-call workspace ===");
+    let mut g3 = BenchGroup::new("workspace pooling");
+    let cfg = GemmConfig { mk, ccp: model_ccp };
+    g3.case("pooled workspace", dims.flops(), || {
+        gemm_blocked(&cfg, &kernel, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut(), &mut ws);
+    });
+    g3.case("fresh workspace per call", dims.flops(), || {
+        let mut fresh = Workspace::new();
+        gemm_blocked(&cfg, &kernel, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut(), &mut fresh);
+    });
+    g3.finish("bench_ablation_workspace");
+}

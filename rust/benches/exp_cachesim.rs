@@ -1,0 +1,39 @@
+//! Cache-simulator throughput bench (DESIGN.md §Perf target:
+//! >= 50 M line-accesses/s) plus a GEMM-trace replay cost profile.
+use dla_codesign::arch::carmel;
+use dla_codesign::bench::BenchGroup;
+use dla_codesign::cachesim::Hierarchy;
+use dla_codesign::harness::cfg_mod;
+use dla_codesign::model::{GemmDims, MicroKernel};
+use dla_codesign::trace::{simulate_gemm, TraceOptions};
+use dla_codesign::util::Pcg64;
+
+fn main() {
+    println!("=== exp_cachesim ===");
+    let arch = carmel();
+    let mut g = BenchGroup::new("cache simulator");
+    // Raw access throughput: streaming + random mixes.
+    let n_acc = 2_000_000u64;
+    let mut h = Hierarchy::new(&arch);
+    g.case("stream 2M line accesses", n_acc as f64, || {
+        for i in 0..n_acc {
+            h.access_line(i * 64 % (8 * 1024 * 1024));
+        }
+    });
+    let mut h2 = Hierarchy::new(&arch);
+    let mut rng = Pcg64::seed(3);
+    let addrs: Vec<u64> = (0..n_acc).map(|_| rng.next_below(64 * 1024 * 1024)).collect();
+    g.case("random 2M line accesses", n_acc as f64, || {
+        for &a in &addrs {
+            h2.access_line(a);
+        }
+    });
+    // Full GEMM trace replay (the fig11 hit-ratio workload).
+    let dims = GemmDims::new(1000, 1000, 96);
+    let cfg = cfg_mod(&arch, MicroKernel::new(6, 8), dims);
+    g.case("gemm trace 1000x1000x96 sampled", dims.flops(), || {
+        let _ = simulate_gemm(&arch, dims, &cfg, TraceOptions::sampled(), false);
+    });
+    g.finish("bench_cachesim");
+    eprintln!("note: 'GFLOPS' column = accesses/s * 1e-9 for the access cases");
+}

@@ -1,0 +1,11 @@
+//! Bench target regenerating Figure 10 (LU vs b on Carmel, sequential +
+//! 8-core G4 model).
+use dla_codesign::harness::{fig10, HarnessOpts};
+
+fn main() {
+    println!("=== exp_fig10 ===");
+    let mut opts = HarnessOpts::default();
+    opts.lu_s = std::env::var("DLA_LU_S").ok().and_then(|v| v.parse().ok()).unwrap_or(opts.lu_s);
+    fig10::run(&opts, false);
+    fig10::run(&opts, true);
+}

@@ -1,0 +1,9 @@
+//! Bench target regenerating Figure 11 (GEMM on EPYC + L2 hit ratio).
+use dla_codesign::harness::{fig11, HarnessOpts};
+
+fn main() {
+    println!("=== exp_fig11 ===");
+    let mut opts = HarnessOpts::default();
+    opts.gemm_mn = std::env::var("DLA_MN").ok().and_then(|v| v.parse().ok()).unwrap_or(opts.gemm_mn);
+    fig11::run(&opts, true);
+}

@@ -1,0 +1,11 @@
+//! Bench target regenerating Figure 12 (LU on EPYC: sequential, G3, G4).
+use dla_codesign::harness::{fig12, fig12::Panel, HarnessOpts};
+
+fn main() {
+    println!("=== exp_fig12 ===");
+    let mut opts = HarnessOpts::default();
+    opts.lu_s = std::env::var("DLA_LU_S").ok().and_then(|v| v.parse().ok()).unwrap_or(opts.lu_s);
+    fig12::run(&opts, Panel::Sequential);
+    fig12::run(&opts, Panel::ParallelG3);
+    fig12::run(&opts, Panel::ParallelG4);
+}

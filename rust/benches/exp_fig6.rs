@@ -1,0 +1,9 @@
+//! Bench target regenerating Figure 6 (occupancy + BLIS GFLOPS vs k).
+use dla_codesign::harness::{fig6, HarnessOpts};
+
+fn main() {
+    println!("=== exp_fig6 ===");
+    let mut opts = HarnessOpts::default();
+    opts.gemm_mn = std::env::var("DLA_MN").ok().and_then(|v| v.parse().ok()).unwrap_or(opts.gemm_mn);
+    fig6::run(&opts);
+}

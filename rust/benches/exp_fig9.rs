@@ -1,0 +1,10 @@
+//! Bench target regenerating Figure 9 (GEMM variants, Carmel model +
+//! host measured).
+use dla_codesign::harness::{fig9, HarnessOpts};
+
+fn main() {
+    println!("=== exp_fig9 ===");
+    let mut opts = HarnessOpts::default();
+    opts.gemm_mn = std::env::var("DLA_MN").ok().and_then(|v| v.parse().ok()).unwrap_or(opts.gemm_mn);
+    fig9::run(&opts);
+}

@@ -1,0 +1,33 @@
+//! Micro-kernel microbenchmarks: every registered kernel over packed
+//! panels (the paper's §3.4 comparison at the smallest granularity),
+//! plus an ablation of the prefetch variants.
+use dla_codesign::bench::BenchGroup;
+use dla_codesign::gemm::microkernel::registry;
+use dla_codesign::gemm::packing::{pack_a, pack_b, packed_a_len, packed_b_len};
+use dla_codesign::util::{MatrixF64, Pcg64};
+
+fn main() {
+    println!("=== exp_microkernels ===");
+    let kc = 256;
+    let reps_inner = 2000; // tiles per measured call to amortize timer cost
+    let mut g = BenchGroup::new(&format!("micro-kernels, kc={kc}, {reps_inner} tiles/call"));
+    for imp in registry() {
+        let (mr, nr) = (imp.spec.mr, imp.spec.nr);
+        let mut rng = Pcg64::seed(1);
+        let a = MatrixF64::random(mr, kc, &mut rng);
+        let b = MatrixF64::random(kc, nr, &mut rng);
+        let mut c = MatrixF64::zeros(mr, nr);
+        let mut abuf = vec![0.0; packed_a_len(mr, kc, mr)];
+        let mut bbuf = vec![0.0; packed_b_len(kc, nr, nr)];
+        pack_a(a.view(), &mut abuf, mr, 1.0);
+        pack_b(b.view(), &mut bbuf, nr);
+        let ldc = c.ld();
+        let flops = 2.0 * (mr * nr * kc) as f64 * reps_inner as f64;
+        g.case(imp.name, flops, || {
+            for _ in 0..reps_inner {
+                unsafe { (imp.func)(kc, abuf.as_ptr(), bbuf.as_ptr(), c.as_mut_ptr(), ldc) };
+            }
+        });
+    }
+    g.finish("bench_microkernels");
+}

@@ -1,0 +1,16 @@
+//! Bench target for Tables 1-2 + Figure 6 (left): pure-model table
+//! regeneration (timed for completeness; the content is the deliverable).
+use dla_codesign::bench::BenchGroup;
+use dla_codesign::harness::tables;
+
+fn main() {
+    println!("=== exp_tables: Tables 1, 2 and Figure 6 (left) ===");
+    tables::run();
+    let mut g = BenchGroup::new("table regeneration cost");
+    g.case("table1+table2+fig6left", 0.0, || {
+        let _ = tables::table1().render();
+        let _ = tables::table2().render();
+        let _ = tables::fig6_left().render();
+    });
+    g.finish("bench_tables");
+}

@@ -1,0 +1,108 @@
+//! Host cache-geometry detection from Linux sysfs
+//! (`/sys/devices/system/cpu/cpu0/cache/index*`), falling back to the
+//! static [`super::host_xeon`] preset when sysfs is unavailable (e.g.
+//! inside minimal containers).
+
+use super::{Arch, CacheLevel};
+use std::fs;
+use std::path::Path;
+
+fn read_trim(p: &Path) -> Option<String> {
+    fs::read_to_string(p).ok().map(|s| s.trim().to_string())
+}
+
+/// Parse sysfs sizes like "32K", "1024K", "32M".
+fn parse_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    if let Some(v) = s.strip_suffix('K') {
+        v.parse::<usize>().ok().map(|k| k * 1024)
+    } else if let Some(v) = s.strip_suffix('M') {
+        v.parse::<usize>().ok().map(|m| m * 1024 * 1024)
+    } else {
+        s.parse::<usize>().ok()
+    }
+}
+
+fn detect_levels() -> Option<Vec<CacheLevel>> {
+    let base = Path::new("/sys/devices/system/cpu/cpu0/cache");
+    if !base.exists() {
+        return None;
+    }
+    let mut levels: Vec<(u32, CacheLevel)> = Vec::new();
+    for idx in 0..8 {
+        let dir = base.join(format!("index{idx}"));
+        if !dir.exists() {
+            break;
+        }
+        let ctype = read_trim(&dir.join("type"))?;
+        if ctype == "Instruction" {
+            continue;
+        }
+        let level: u32 = read_trim(&dir.join("level"))?.parse().ok()?;
+        let size = parse_size(&read_trim(&dir.join("size"))?)?;
+        let ways: usize = read_trim(&dir.join("ways_of_associativity"))?.parse().ok()?;
+        let line: usize = read_trim(&dir.join("coherency_line_size"))?.parse().ok()?;
+        let shared = read_trim(&dir.join("shared_cpu_list"))
+            .map(|l| l.split(',').count())
+            .unwrap_or(1);
+        if ways == 0 || line == 0 {
+            continue; // fully-assoc encodings we do not model
+        }
+        levels.push((
+            level,
+            CacheLevel {
+                size_bytes: size,
+                line_bytes: line,
+                ways,
+                shared_by: shared,
+                // Rough per-level latency defaults; refined by perfmodel
+                // calibration, not load-bearing for curve shapes.
+                latency_cycles: match level {
+                    1 => 4.0,
+                    2 => 14.0,
+                    _ => 44.0,
+                },
+            },
+        ));
+    }
+    levels.sort_by_key(|(l, _)| *l);
+    let out: Vec<CacheLevel> = levels.into_iter().map(|(_, c)| c).collect();
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Detect the host architecture; any field sysfs cannot provide falls back
+/// to the [`super::host_xeon`] preset.
+pub fn detect_host() -> Arch {
+    let mut arch = super::host_xeon();
+    if let Some(levels) = detect_levels() {
+        arch.levels = levels;
+        arch.name = format!("{} (sysfs-detected caches)", arch.name);
+    }
+    arch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sizes() {
+        assert_eq!(parse_size("32K"), Some(32 * 1024));
+        assert_eq!(parse_size("16M"), Some(16 * 1024 * 1024));
+        assert_eq!(parse_size("123"), Some(123));
+        assert_eq!(parse_size("x"), None);
+    }
+
+    #[test]
+    fn detect_host_always_yields_usable_arch() {
+        let a = detect_host();
+        assert!(!a.levels.is_empty());
+        assert!(a.l1().size_bytes >= 16 * 1024);
+        assert!(a.l1().sets() > 0);
+        assert!(a.peak_gflops_core() > 0.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Architecture descriptions: cache geometry, SIMD/register files, and
+//! presets for the paper's evaluation platforms.
+//!
+//! The paper's whole argument is driven by cache geometry arithmetic
+//! (§3.2–§3.3), so this module is the ground truth every model, simulator
+//! and selector consumes.
+
+mod detect;
+mod presets;
+
+pub use detect::detect_host;
+pub use presets::{carmel, epyc7282, host_xeon, preset_by_name, tpu_vmem, PRESET_NAMES};
+
+/// One level of a cache hierarchy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheLevel {
+    /// Total capacity in bytes (per cache instance, not per core).
+    pub size_bytes: usize,
+    /// Cache line size in bytes.
+    pub line_bytes: usize,
+    /// Associativity (ways per set).
+    pub ways: usize,
+    /// Number of cores sharing one instance of this cache.
+    pub shared_by: usize,
+    /// Approximate access latency in core cycles (used by the performance
+    /// model; values are documented estimates, not vendor specs).
+    pub latency_cycles: f64,
+}
+
+impl CacheLevel {
+    /// Number of sets.
+    pub fn sets(&self) -> usize {
+        self.size_bytes / (self.ways * self.line_bytes)
+    }
+
+    /// Capacity of a single way in bytes.
+    pub fn way_bytes(&self) -> usize {
+        self.size_bytes / self.ways
+    }
+
+    /// Capacity in KiB (for table rendering).
+    pub fn size_kib(&self) -> f64 {
+        self.size_bytes as f64 / 1024.0
+    }
+}
+
+/// SIMD register file description.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RegisterFile {
+    /// Number of architectural vector registers.
+    pub vector_regs: usize,
+    /// Vector register width in bits.
+    pub vector_bits: usize,
+}
+
+impl RegisterFile {
+    /// FP64 lanes per vector register.
+    pub fn f64_lanes(&self) -> usize {
+        self.vector_bits / 64
+    }
+}
+
+/// A target architecture: cache hierarchy (L1 first) + compute resources.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Arch {
+    pub name: String,
+    /// Cache levels ordered L1 data cache first.
+    pub levels: Vec<CacheLevel>,
+    pub regs: RegisterFile,
+    /// Core clock in GHz (paper: MAXN for Carmel, 2.3 GHz pinned for EPYC).
+    pub freq_ghz: f64,
+    /// FP64 FMA operations issued per cycle per core (each FMA counts as
+    /// one instruction over `regs.f64_lanes()` lanes; 2 flops per lane).
+    pub fma_per_cycle: f64,
+    /// Physical cores in the socket.
+    pub cores: usize,
+    /// Approximate DRAM access latency in cycles.
+    pub mem_latency_cycles: f64,
+}
+
+impl Arch {
+    pub fn l1(&self) -> &CacheLevel {
+        &self.levels[0]
+    }
+
+    pub fn l2(&self) -> &CacheLevel {
+        &self.levels[1]
+    }
+
+    pub fn l3(&self) -> Option<&CacheLevel> {
+        self.levels.get(2)
+    }
+
+    /// Peak FP64 GFLOPS of one core:
+    /// `freq * fma_per_cycle * lanes * 2` (multiply + add).
+    pub fn peak_gflops_core(&self) -> f64 {
+        self.freq_ghz * self.fma_per_cycle * self.regs.f64_lanes() as f64 * 2.0
+    }
+
+    /// Peak FP64 GFLOPS of the full socket.
+    pub fn peak_gflops_socket(&self) -> f64 {
+        self.peak_gflops_core() * self.cores as f64
+    }
+
+    /// FP64 elements per cache line (all models count in elements).
+    pub fn line_elems(&self) -> usize {
+        self.levels[0].line_bytes / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn carmel_geometry_matches_paper() {
+        // §3.1: 64 KB 4-assoc L1; 2 MB 16-assoc L2 shared by 2; 4 MB
+        // 16-way L3 shared by 8.
+        let a = carmel();
+        assert_eq!(a.l1().size_bytes, 64 * 1024);
+        assert_eq!(a.l1().ways, 4);
+        assert_eq!(a.l1().sets(), 256);
+        assert_eq!(a.l1().way_bytes(), 16 * 1024);
+        assert_eq!(a.l2().size_bytes, 2 * 1024 * 1024);
+        assert_eq!(a.l2().ways, 16);
+        assert_eq!(a.l2().sets(), 2048);
+        assert_eq!(a.l2().shared_by, 2);
+        let l3 = a.l3().unwrap();
+        assert_eq!(l3.size_bytes, 4 * 1024 * 1024);
+        assert_eq!(l3.ways, 16);
+        assert_eq!(l3.sets(), 4096);
+        assert_eq!(a.regs.vector_regs, 32);
+        assert_eq!(a.regs.f64_lanes(), 2);
+        assert_eq!(a.cores, 8);
+    }
+
+    #[test]
+    fn epyc_geometry_matches_paper() {
+        // §4.1: 32 KB L1d / 512 KB L2 per core, 16 MB L3 per 4-core CCX.
+        let a = epyc7282();
+        assert_eq!(a.l1().size_bytes, 32 * 1024);
+        assert_eq!(a.l1().ways, 8);
+        assert_eq!(a.l1().sets(), 64);
+        assert_eq!(a.l2().size_bytes, 512 * 1024);
+        assert_eq!(a.l2().sets(), 1024);
+        assert_eq!(a.l2().shared_by, 1);
+        let l3 = a.l3().unwrap();
+        assert_eq!(l3.size_bytes, 16 * 1024 * 1024);
+        assert_eq!(l3.shared_by, 4);
+        assert_eq!(a.regs.vector_regs, 16);
+        assert_eq!(a.regs.f64_lanes(), 4);
+        assert_eq!(a.cores, 16);
+        assert!((a.freq_ghz - 2.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peak_gflops() {
+        let e = epyc7282();
+        // 2.3 GHz * 2 FMA/cyc * 4 lanes * 2 flops = 36.8 GFLOPS/core.
+        assert!((e.peak_gflops_core() - 36.8).abs() < 1e-9);
+        assert!((e.peak_gflops_socket() - 16.0 * 36.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn preset_lookup() {
+        for name in PRESET_NAMES {
+            assert!(preset_by_name(name).is_some(), "missing preset {name}");
+        }
+        assert!(preset_by_name("carmel").unwrap().name.contains("Carmel"));
+        assert!(preset_by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,102 @@
+//! Architecture presets.
+//!
+//! The Carmel and EPYC geometries are taken verbatim from the paper
+//! (§3.1 Figure 5 and §4.1 Figure 8). Latency figures are documented
+//! estimates used only by the performance model; the *shape* of every
+//! reproduced curve is driven by the geometry, which is exact.
+
+use super::{Arch, CacheLevel, RegisterFile};
+
+/// Names accepted by [`preset_by_name`].
+pub const PRESET_NAMES: &[&str] = &["carmel", "epyc7282", "host", "tpu-vmem"];
+
+/// NVIDIA Carmel (ARMv8.2) on the Jetson AGX Xavier, as in paper §3.1:
+/// per-core 64 KB 4-way L1d; 2 MB 16-way L2 shared by a core pair;
+/// 4 MB 16-way L3 shared by all 8 cores; 128-bit NEON, 32 vector regs.
+pub fn carmel() -> Arch {
+    Arch {
+        name: "NVIDIA Carmel (ARMv8.2, NEON)".into(),
+        levels: vec![
+            CacheLevel { size_bytes: 64 * 1024, line_bytes: 64, ways: 4, shared_by: 1, latency_cycles: 4.0 },
+            CacheLevel { size_bytes: 2 * 1024 * 1024, line_bytes: 64, ways: 16, shared_by: 2, latency_cycles: 14.0 },
+            CacheLevel { size_bytes: 4 * 1024 * 1024, line_bytes: 64, ways: 16, shared_by: 8, latency_cycles: 38.0 },
+        ],
+        regs: RegisterFile { vector_regs: 32, vector_bits: 128 },
+        // MAXN mode pins cores at 2.265 GHz.
+        freq_ghz: 2.265,
+        // Two 128-bit FMA pipes per core.
+        fma_per_cycle: 2.0,
+        cores: 8,
+        mem_latency_cycles: 180.0,
+    }
+}
+
+/// AMD EPYC 7282 ("Rome"), as in paper §4.1: per-core 32 KB 8-way L1d and
+/// 512 KB 8-way L2; 16 MB 16-way L3 per 4-core CCX (4 CCXs per socket);
+/// AVX2 (256-bit), 16 vector regs; frequency pinned to 2.3 GHz (§4.1).
+pub fn epyc7282() -> Arch {
+    Arch {
+        name: "AMD EPYC 7282 (x86-64, AVX2)".into(),
+        levels: vec![
+            CacheLevel { size_bytes: 32 * 1024, line_bytes: 64, ways: 8, shared_by: 1, latency_cycles: 4.0 },
+            CacheLevel { size_bytes: 512 * 1024, line_bytes: 64, ways: 8, shared_by: 1, latency_cycles: 12.0 },
+            CacheLevel { size_bytes: 16 * 1024 * 1024, line_bytes: 64, ways: 16, shared_by: 4, latency_cycles: 40.0 },
+        ],
+        regs: RegisterFile { vector_regs: 16, vector_bits: 256 },
+        freq_ghz: 2.3,
+        // Rome: two 256-bit FMA pipes per core.
+        fma_per_cycle: 2.0,
+        cores: 16,
+        mem_latency_cycles: 220.0,
+    }
+}
+
+/// The local sandbox host (Intel Xeon, AVX2+FMA, 1 visible core). Cache
+/// sizes follow a typical Skylake-SP-like virtualized topology and are
+/// overridden by [`super::detect_host`] when sysfs exposes real values.
+pub fn host_xeon() -> Arch {
+    Arch {
+        name: "Host Intel Xeon (AVX2)".into(),
+        levels: vec![
+            CacheLevel { size_bytes: 32 * 1024, line_bytes: 64, ways: 8, shared_by: 1, latency_cycles: 4.0 },
+            CacheLevel { size_bytes: 1024 * 1024, line_bytes: 64, ways: 16, shared_by: 1, latency_cycles: 14.0 },
+            CacheLevel { size_bytes: 32 * 1024 * 1024, line_bytes: 64, ways: 11, shared_by: 1, latency_cycles: 44.0 },
+        ],
+        regs: RegisterFile { vector_regs: 16, vector_bits: 256 },
+        freq_ghz: 2.1,
+        fma_per_cycle: 2.0,
+        cores: 1,
+        mem_latency_cycles: 200.0,
+    }
+}
+
+/// TPU-style "VMEM" pseudo-hierarchy used for the Pallas BlockSpec sizing
+/// (DESIGN.md §Hardware-Adaptation): one ~16 MB software-managed level.
+/// Associativity is irrelevant for a scratchpad; we model it as fully
+/// associative with one set so the same CCP machinery can size tiles.
+pub fn tpu_vmem() -> Arch {
+    Arch {
+        name: "TPU VMEM scratchpad model".into(),
+        levels: vec![
+            CacheLevel { size_bytes: 16 * 1024 * 1024, line_bytes: 512, ways: 32768, shared_by: 1, latency_cycles: 1.0 },
+            // HBM stands in as the "next level".
+            CacheLevel { size_bytes: 16 * 1024 * 1024 * 1024, line_bytes: 512, ways: 32768, shared_by: 1, latency_cycles: 100.0 },
+        ],
+        regs: RegisterFile { vector_regs: 64, vector_bits: 8 * 128 * 64 },
+        freq_ghz: 0.94,
+        fma_per_cycle: 128.0 * 128.0,
+        cores: 1,
+        mem_latency_cycles: 500.0,
+    }
+}
+
+/// Look up a preset by CLI name.
+pub fn preset_by_name(name: &str) -> Option<Arch> {
+    match name {
+        "carmel" => Some(carmel()),
+        "epyc7282" | "epyc" => Some(epyc7282()),
+        "host" => Some(super::detect_host()),
+        "tpu-vmem" => Some(tpu_vmem()),
+        _ => None,
+    }
+}

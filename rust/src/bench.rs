@@ -1,0 +1,114 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Used by every `rust/benches/exp_*.rs` target (built with
+//! `harness = false`): each case is measured with warm-up + repetition
+//! (paper: "average numbers collected for a large number of repetitions")
+//! and reported as a table plus TSV under `results/`.
+
+use crate::util::table::Table;
+use crate::util::timer::{measure, Measurement};
+
+/// One benchmark case result.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub name: String,
+    pub measurement: Measurement,
+    pub flops: f64,
+}
+
+impl CaseResult {
+    pub fn gflops(&self) -> f64 {
+        self.measurement.gflops(self.flops)
+    }
+}
+
+/// A named group of benchmark cases.
+pub struct BenchGroup {
+    pub name: String,
+    pub min_reps: usize,
+    pub min_time_s: f64,
+    results: Vec<CaseResult>,
+}
+
+impl BenchGroup {
+    pub fn new(name: &str) -> Self {
+        // Defaults tuned for the experiment harness: enough repetitions
+        // for stability, bounded wall-time per case. Override per group
+        // with the DLA_BENCH_REPS / DLA_BENCH_SECS environment knobs.
+        let min_reps = std::env::var("DLA_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+        let min_time_s =
+            std::env::var("DLA_BENCH_SECS").ok().and_then(|v| v.parse().ok()).unwrap_or(0.5);
+        Self { name: name.to_string(), min_reps, min_time_s, results: Vec::new() }
+    }
+
+    /// Time a case; `flops` is per-repetition work for GFLOPS reporting.
+    pub fn case(&mut self, name: &str, flops: f64, f: impl FnMut()) -> &CaseResult {
+        let m = measure(self.min_reps, self.min_time_s, f);
+        eprintln!(
+            "  {:<40} {:>10.3} ms   {:>8.2} GFLOPS  ({} reps)",
+            name,
+            m.mean_s * 1e3,
+            flops / m.mean_s / 1e9,
+            m.reps
+        );
+        self.results.push(CaseResult { name: name.to_string(), measurement: m, flops });
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally computed result (e.g. model-based estimates
+    /// that are not wall-clock measured).
+    pub fn record(&mut self, name: &str, seconds: f64, flops: f64) {
+        let m = Measurement { reps: 1, mean_s: seconds, min_s: seconds, median_s: seconds, max_s: seconds };
+        self.results.push(CaseResult { name: name.to_string(), measurement: m, flops });
+    }
+
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+
+    /// Render the group as a table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&self.name, &["case", "mean ms", "min ms", "GFLOPS", "reps"]);
+        for r in &self.results {
+            t.row(&[
+                r.name.clone(),
+                format!("{:.3}", r.measurement.mean_s * 1e3),
+                format!("{:.3}", r.measurement.min_s * 1e3),
+                format!("{:.2}", r.gflops()),
+                r.measurement.reps.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Print the table and write `results/<file>.tsv`.
+    pub fn finish(&self, file: &str) {
+        let t = self.table();
+        t.print();
+        let path = format!("results/{file}.tsv");
+        if let Err(e) = t.write_tsv(&path) {
+            eprintln!("warning: could not write {path}: {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_collects_cases() {
+        std::env::set_var("DLA_BENCH_REPS", "2");
+        std::env::set_var("DLA_BENCH_SECS", "0.0");
+        let mut g = BenchGroup::new("t");
+        let mut x = 0u64;
+        g.case("noop", 1e6, || x = x.wrapping_add(1));
+        g.record("model", 0.5, 1e9);
+        assert_eq!(g.results().len(), 2);
+        assert!((g.results()[1].gflops() - 2.0).abs() < 1e-12);
+        let rendered = g.table().render();
+        assert!(rendered.contains("noop") && rendered.contains("model"));
+        std::env::remove_var("DLA_BENCH_REPS");
+        std::env::remove_var("DLA_BENCH_SECS");
+    }
+}

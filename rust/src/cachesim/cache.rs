@@ -1,0 +1,232 @@
+//! A single set-associative cache with true-LRU replacement.
+//!
+//! Tags are kept per-set in MRU-first order, so a hit is usually found at
+//! index 0 for the streaming-with-reuse patterns GEMM generates — the
+//! common case costs one comparison, keeping the simulator fast enough to
+//! replay the multi-hundred-million-access traces of the paper's
+//! m = n = 2000 GEMMs in seconds.
+
+use crate::arch::CacheLevel;
+
+/// Hit/miss counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub accesses: u64,
+    pub hits: u64,
+}
+
+impl CacheStats {
+    pub fn misses(&self) -> u64 {
+        self.accesses - self.hits
+    }
+
+    pub fn hit_ratio(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// One set-associative cache level.
+pub struct SetAssocCache {
+    /// MRU-first tag array, `sets * ways` entries; `u64::MAX` = invalid.
+    tags: Vec<u64>,
+    sets: usize,
+    ways: usize,
+    line_shift: u32,
+    /// Precomputed log2(sets): tag = line >> set_shift (hot path).
+    set_shift: u32,
+    set_mask: u64,
+    pub stats: CacheStats,
+}
+
+const INVALID: u64 = u64::MAX;
+
+impl SetAssocCache {
+    /// Build from an architecture cache level description.
+    pub fn new(level: &CacheLevel) -> Self {
+        let sets = level.sets();
+        assert!(sets.is_power_of_two(), "set count must be a power of two (got {sets})");
+        assert!(level.line_bytes.is_power_of_two());
+        Self {
+            tags: vec![INVALID; sets * level.ways],
+            sets,
+            ways: level.ways,
+            line_shift: level.line_bytes.trailing_zeros(),
+            set_shift: sets.trailing_zeros(),
+            set_mask: (sets - 1) as u64,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+
+    pub fn ways(&self) -> usize {
+        self.ways
+    }
+
+    pub fn line_bytes(&self) -> usize {
+        1 << self.line_shift
+    }
+
+    /// Access one *line* address (byte address; the line index is derived
+    /// internally). Returns true on hit. On miss the line is allocated,
+    /// evicting the set's LRU entry.
+    #[inline]
+    pub fn access(&mut self, addr: u64) -> bool {
+        let line = addr >> self.line_shift;
+        let set = (line & self.set_mask) as usize;
+        let tag = line >> self.set_shift;
+        let base = set * self.ways;
+        let set_tags = &mut self.tags[base..base + self.ways];
+        self.stats.accesses += 1;
+        // MRU-first linear probe.
+        if set_tags[0] == tag {
+            self.stats.hits += 1;
+            return true;
+        }
+        for i in 1..self.ways {
+            if set_tags[i] == tag {
+                // Move to front (true LRU).
+                set_tags.copy_within(0..i, 1);
+                set_tags[0] = tag;
+                self.stats.hits += 1;
+                return true;
+            }
+        }
+        // Miss: insert at MRU, dropping the LRU tail.
+        set_tags.copy_within(0..self.ways - 1, 1);
+        set_tags[0] = tag;
+        false
+    }
+
+    /// Check residency without touching LRU state or counters.
+    pub fn probe(&self, addr: u64) -> bool {
+        let line = addr >> self.line_shift;
+        let set = (line & self.set_mask) as usize;
+        let tag = line >> self.set_shift;
+        let base = set * self.ways;
+        self.tags[base..base + self.ways].contains(&tag)
+    }
+
+    /// Invalidate everything and clear statistics.
+    pub fn reset(&mut self) {
+        self.tags.fill(INVALID);
+        self.stats = CacheStats::default();
+    }
+
+    /// Number of distinct resident lines (for occupancy assertions).
+    pub fn resident_lines(&self) -> usize {
+        self.tags.iter().filter(|&&t| t != INVALID).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::CacheLevel;
+
+    fn tiny(ways: usize, sets: usize, line: usize) -> SetAssocCache {
+        SetAssocCache::new(&CacheLevel {
+            size_bytes: ways * sets * line,
+            line_bytes: line,
+            ways,
+            shared_by: 1,
+            latency_cycles: 1.0,
+        })
+    }
+
+    #[test]
+    fn cold_miss_then_hit() {
+        let mut c = tiny(2, 4, 64);
+        assert!(!c.access(0x1000));
+        assert!(c.access(0x1000));
+        assert!(c.access(0x1038)); // same 64B line
+        assert!(!c.access(0x1040)); // next line
+        assert_eq!(c.stats.accesses, 4);
+        assert_eq!(c.stats.hits, 2);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // 2-way cache: A, B fill a set; touching A then inserting C must
+        // evict B (the LRU), not A.
+        let mut c = tiny(2, 4, 64);
+        let set_stride = 4 * 64; // lines mapping to the same set
+        let (a, b, d) = (0u64, set_stride as u64, 2 * set_stride as u64);
+        c.access(a);
+        c.access(b);
+        c.access(a); // refresh A
+        c.access(d); // evicts B
+        assert!(c.probe(a));
+        assert!(!c.probe(b));
+        assert!(c.probe(d));
+    }
+
+    #[test]
+    fn full_associativity_within_set() {
+        let mut c = tiny(4, 2, 64);
+        let stride = (2 * 64) as u64;
+        // 4 distinct lines in one set all stay resident.
+        for i in 0..4 {
+            c.access(i * stride);
+        }
+        for i in 0..4 {
+            assert!(c.probe(i * stride), "way {i} should be resident");
+        }
+        assert_eq!(c.resident_lines(), 4);
+    }
+
+    #[test]
+    fn working_set_larger_than_cache_thrashes() {
+        // Cyclic sweep over 2x the capacity with LRU = zero hits.
+        let mut c = tiny(4, 16, 64);
+        let lines = 4 * 16 * 2;
+        for _round in 0..3 {
+            for i in 0..lines {
+                c.access(i as u64 * 64);
+            }
+        }
+        assert_eq!(c.stats.hits, 0, "LRU must thrash on a cyclic over-capacity sweep");
+    }
+
+    #[test]
+    fn working_set_fitting_cache_all_hits_after_warmup() {
+        let mut c = tiny(4, 16, 64);
+        let lines = 4 * 16;
+        for i in 0..lines {
+            c.access(i as u64 * 64);
+        }
+        let warm = c.stats;
+        assert_eq!(warm.hits, 0);
+        for _ in 0..10 {
+            for i in 0..lines {
+                assert!(c.access(i as u64 * 64));
+            }
+        }
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut c = tiny(2, 2, 64);
+        c.access(0);
+        c.reset();
+        assert_eq!(c.stats, CacheStats::default());
+        assert_eq!(c.resident_lines(), 0);
+        assert!(!c.probe(0));
+    }
+
+    #[test]
+    fn paper_geometries_construct() {
+        for a in [crate::arch::carmel(), crate::arch::epyc7282()] {
+            for l in &a.levels {
+                let c = SetAssocCache::new(l);
+                assert_eq!(c.sets() * c.ways() * c.line_bytes(), l.size_bytes);
+            }
+        }
+    }
+}

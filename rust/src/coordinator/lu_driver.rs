@@ -1,0 +1,92 @@
+//! PJRT-backed blocked LU: the Rust coordinator drives the loop F1 of
+//! paper Figure 2, executing one compiled `lu_step` artifact per
+//! iteration — the end-to-end three-layer path (Rust -> XLA -> Pallas
+//! GEMM) with Python nowhere at runtime.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::convert::{
+    literal_to_bool, literal_to_matrix, literal_to_vec_i64, matrix_to_literal, scalar_i64,
+    vec_to_literal_i64,
+};
+use crate::runtime::{execute_tupled, Registry};
+use crate::util::{MatrixF64, Stopwatch};
+
+/// Result of an artifact-driven LU run.
+pub struct LuArtifactResult {
+    /// Factored matrix (L strict lower + U upper).
+    pub lu: MatrixF64,
+    /// Global pivot rows (LAPACK convention).
+    pub pivots: Vec<usize>,
+    /// Seconds per step (the latency series the e2e example reports).
+    pub step_seconds: Vec<f64>,
+    /// Total wall time.
+    pub total_seconds: f64,
+}
+
+impl LuArtifactResult {
+    pub fn gflops(&self) -> f64 {
+        crate::lapack::lu::lu_flops(self.lu.rows()) / self.total_seconds / 1e9
+    }
+}
+
+/// Run the blocked LU through the `lu_step_s{s}_b{b}` artifact.
+pub fn lu_via_artifacts(registry: &Registry, a0: &MatrixF64, block: usize) -> Result<LuArtifactResult> {
+    let s = a0.rows();
+    if a0.cols() != s {
+        bail!("LU requires a square matrix");
+    }
+    let art = registry
+        .find_lu_step(s, block)
+        .with_context(|| format!("no lu_step artifact for s={s} b={block} (see aot.py)"))?;
+    let total = Stopwatch::start();
+    let mut a_lit = matrix_to_literal(a0)?;
+    let mut piv_lit = vec_to_literal_i64(&(0..s as i64).collect::<Vec<_>>());
+    let mut step_seconds = Vec::new();
+    let mut k = 0usize;
+    while k < s {
+        let sw = Stopwatch::start();
+        let outs = execute_tupled(&art.exe, &[a_lit, piv_lit, scalar_i64(k as i64)])
+            .with_context(|| format!("lu_step at k={k}"))?;
+        if outs.len() != 3 {
+            bail!("lu_step returned {} outputs, expected 3", outs.len());
+        }
+        let mut it = outs.into_iter();
+        a_lit = it.next().unwrap();
+        piv_lit = it.next().unwrap();
+        let ok = literal_to_bool(&it.next().unwrap())?;
+        if !ok {
+            bail!("singular pivot in panel starting at column {k}");
+        }
+        step_seconds.push(sw.elapsed_secs());
+        k += block;
+    }
+    let lu = literal_to_matrix(&a_lit)?;
+    let pivots: Vec<usize> = literal_to_vec_i64(&piv_lit)?.into_iter().map(|v| v as usize).collect();
+    Ok(LuArtifactResult { lu, pivots, step_seconds, total_seconds: total.elapsed_secs() })
+}
+
+/// Run the single-artifact whole factorization (`lu_full`), for
+/// comparison with the step-driven path.
+pub fn lu_full_via_artifact(registry: &Registry, a0: &MatrixF64, block: usize) -> Result<LuArtifactResult> {
+    let s = a0.rows();
+    let art = registry
+        .find_lu_full(s, block)
+        .with_context(|| format!("no lu_full artifact for s={s} b={block}"))?;
+    let total = Stopwatch::start();
+    let outs = execute_tupled(&art.exe, &[matrix_to_literal(a0)?])?;
+    if outs.len() != 3 {
+        bail!("lu_full returned {} outputs, expected 3", outs.len());
+    }
+    let ok = literal_to_bool(&outs[2])?;
+    if !ok {
+        bail!("singular matrix");
+    }
+    let lu = literal_to_matrix(&outs[0])?;
+    let pivots: Vec<usize> = literal_to_vec_i64(&outs[1])?.into_iter().map(|v| v as usize).collect();
+    let dt = total.elapsed_secs();
+    Ok(LuArtifactResult { lu, pivots, step_seconds: vec![dt], total_seconds: dt })
+}
+
+// Integration tests live in rust/tests/e2e_artifacts.rs (they need the
+// compiled artifacts on disk).

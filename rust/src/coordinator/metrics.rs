@@ -1,0 +1,126 @@
+//! Per-kind request metrics: latency histograms and flop throughput.
+
+use std::collections::BTreeMap;
+
+use crate::util::stats::{Accumulator, LatencyHistogram};
+
+/// Metrics for one request kind.
+#[derive(Default)]
+pub struct KindMetrics {
+    pub latency: LatencyHistogram,
+    pub flops: Accumulator,
+}
+
+/// Coordinator-wide metrics.
+#[derive(Default)]
+pub struct Metrics {
+    kinds: BTreeMap<String, KindMetrics>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, kind: &str, seconds: f64, flops: f64) {
+        let km = self.kinds.entry(kind.to_string()).or_default();
+        km.latency.record_secs(seconds);
+        km.flops.add(flops);
+    }
+
+    pub fn count(&self, kind: &str) -> u64 {
+        self.kinds.get(kind).map(|k| k.latency.count()).unwrap_or(0)
+    }
+
+    pub fn total_count(&self) -> u64 {
+        self.kinds.values().map(|k| k.latency.count()).sum()
+    }
+
+    /// Mean GFLOPS of a kind (total flops / total time).
+    pub fn mean_gflops(&self, kind: &str) -> f64 {
+        match self.kinds.get(kind) {
+            None => 0.0,
+            Some(k) => {
+                let total_s = k.latency.mean_us() * 1e-6 * k.latency.count() as f64;
+                if total_s == 0.0 {
+                    0.0
+                } else {
+                    k.flops.sum / total_s / 1e9
+                }
+            }
+        }
+    }
+
+    pub fn merge(&mut self, other: Metrics) {
+        for (kind, km) in other.kinds {
+            let mine = self.kinds.entry(kind).or_default();
+            mine.flops.merge(&km.flops);
+            // Histogram merge: re-record aggregate mean/count is lossy;
+            // keep it simple by folding counts through record_secs.
+            // (Workers usually report disjoint kinds or are summarized
+            // individually; see server::drain_metrics.)
+            for _ in 0..km.latency.count() {
+                mine.latency.record_secs(km.latency.mean_us() * 1e-6);
+            }
+            let _ = km;
+        }
+    }
+
+    /// Render a summary table.
+    pub fn summary(&self) -> String {
+        let mut t = crate::util::table::Table::new(
+            "coordinator metrics",
+            &["kind", "count", "mean ms", "p99 ms", "max ms", "GFLOPS"],
+        );
+        for (kind, km) in &self.kinds {
+            t.row(&[
+                kind.clone(),
+                km.latency.count().to_string(),
+                format!("{:.3}", km.latency.mean_us() / 1e3),
+                format!("{:.3}", km.latency.quantile_us(0.99) / 1e3),
+                format!("{:.3}", km.latency.max_us() / 1e3),
+                format!("{:.2}", self.mean_gflops(kind)),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut m = Metrics::new();
+        m.record("gemm", 0.001, 2e6);
+        m.record("gemm", 0.003, 2e6);
+        m.record("lu", 0.1, 6e9);
+        assert_eq!(m.count("gemm"), 2);
+        assert_eq!(m.count("lu"), 1);
+        assert_eq!(m.total_count(), 3);
+        // 4e6 flops over 4 ms = 1 GFLOPS.
+        assert!((m.mean_gflops("gemm") - 1.0).abs() < 0.01);
+        let s = m.summary();
+        assert!(s.contains("gemm") && s.contains("lu"));
+    }
+
+    #[test]
+    fn merge_accumulates_counts() {
+        let mut a = Metrics::new();
+        a.record("gemm", 0.001, 1e6);
+        let mut b = Metrics::new();
+        b.record("gemm", 0.002, 1e6);
+        b.record("lu", 0.01, 1e9);
+        a.merge(b);
+        assert_eq!(a.count("gemm"), 2);
+        assert_eq!(a.count("lu"), 1);
+    }
+
+    #[test]
+    fn unknown_kind_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.count("nope"), 0);
+        assert_eq!(m.mean_gflops("nope"), 0.0);
+    }
+}

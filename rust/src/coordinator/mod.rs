@@ -1,0 +1,151 @@
+//! Layer-3 coordinator: the serving layer that makes the paper's
+//! co-design *operational*.
+//!
+//! A [`Coordinator`] owns
+//!
+//! - the native [`crate::gemm::GemmEngine`] (with its pooled workspaces —
+//!   the paper's "sufficiently-large workspace buffers"),
+//! - optionally a PJRT [`crate::runtime::Registry`] of AOT artifacts,
+//! - per-request metrics,
+//!
+//! and dispatches incoming DLA requests (GEMM, LU, Cholesky), performing
+//! the per-call dynamic selection of micro-kernel + CCPs that the paper
+//! argues BLAS libraries should expose. [`server`] wraps it in a
+//! worker-thread request loop; [`lu_driver`] is the PJRT-backed blocked
+//! LU (the end-to-end example's hot path).
+
+pub mod lu_driver;
+pub mod metrics;
+pub mod requests;
+pub mod server;
+
+pub use lu_driver::{lu_via_artifacts, LuArtifactResult};
+pub use metrics::Metrics;
+pub use requests::{DlaRequest, DlaResponse};
+pub use server::{CoordinatorServer, ServerConfig};
+
+use crate::arch::Arch;
+use crate::gemm::{ConfigMode, GemmEngine};
+use crate::lapack;
+use crate::util::{MatrixF64, Stopwatch};
+use anyhow::Result;
+
+/// The coordinator: policy + engine + metrics.
+pub struct Coordinator {
+    pub engine: GemmEngine,
+    pub metrics: Metrics,
+}
+
+impl Coordinator {
+    pub fn new(arch: Arch, mode: ConfigMode) -> Self {
+        Self { engine: GemmEngine::new(arch, mode), metrics: Metrics::new() }
+    }
+
+    /// Handle one request synchronously.
+    pub fn handle(&mut self, req: DlaRequest) -> Result<DlaResponse> {
+        let sw = Stopwatch::start();
+        let resp = match req {
+            DlaRequest::Gemm { alpha, a, b, beta, mut c } => {
+                let flops = 2.0 * a.rows() as f64 * b.cols() as f64 * a.cols() as f64;
+                self.engine.gemm(alpha, a.view(), b.view(), beta, &mut c.view_mut());
+                let dt = sw.elapsed_secs();
+                self.metrics.record("gemm", dt, flops);
+                DlaResponse::Matrix {
+                    result: c,
+                    config: self.engine.last_config.map(|c| c.to_string()),
+                    seconds: dt,
+                }
+            }
+            DlaRequest::LuFactor { a, block } => {
+                let flops = lapack::lu::lu_flops(a.rows());
+                let factors = lapack::lu_factor(&a, block, &mut self.engine)
+                    .map_err(|col| anyhow::anyhow!("singular at column {col}"))?;
+                let dt = sw.elapsed_secs();
+                self.metrics.record("lu", dt, flops);
+                DlaResponse::Lu { factors, seconds: dt }
+            }
+            DlaRequest::Cholesky { a, block } => {
+                let s = a.rows();
+                let flops = (s * s * s) as f64 / 3.0;
+                let mut m = a;
+                lapack::cholesky::cholesky_blocked(&mut m, block, &mut self.engine)
+                    .map_err(|col| anyhow::anyhow!("not SPD at column {col}"))?;
+                let dt = sw.elapsed_secs();
+                self.metrics.record("cholesky", dt, flops);
+                DlaResponse::Matrix { result: m, config: None, seconds: dt }
+            }
+        };
+        Ok(resp)
+    }
+
+    /// Convenience: factor + solve in one call (the "real small workload"
+    /// of the end-to-end example).
+    pub fn solve(&mut self, a: &MatrixF64, rhs: &MatrixF64, block: usize) -> Result<MatrixF64> {
+        match self.handle(DlaRequest::LuFactor { a: a.clone(), block })? {
+            DlaResponse::Lu { factors, .. } => Ok(factors.solve(rhs)),
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::host_xeon;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn coordinator_gemm_roundtrip() {
+        let mut co = Coordinator::new(host_xeon(), ConfigMode::Refined);
+        let mut rng = Pcg64::seed(1);
+        let a = MatrixF64::random(40, 24, &mut rng);
+        let b = MatrixF64::random(24, 32, &mut rng);
+        let c = MatrixF64::zeros(40, 32);
+        let resp = co
+            .handle(DlaRequest::Gemm { alpha: 1.0, a: a.clone(), b: b.clone(), beta: 0.0, c })
+            .unwrap();
+        let DlaResponse::Matrix { result, config, .. } = resp else { panic!() };
+        let mut expect = MatrixF64::zeros(40, 32);
+        crate::gemm::gemm_reference(1.0, a.view(), b.view(), 0.0, &mut expect.view_mut());
+        assert!(result.max_abs_diff(&expect) < 1e-11);
+        assert!(config.is_some());
+        assert_eq!(co.metrics.count("gemm"), 1);
+    }
+
+    #[test]
+    fn coordinator_lu_and_solve() {
+        let mut co = Coordinator::new(host_xeon(), ConfigMode::Refined);
+        let mut rng = Pcg64::seed(2);
+        let a = MatrixF64::random_diag_dominant(48, &mut rng);
+        let x_true = MatrixF64::random(48, 2, &mut rng);
+        let mut rhs = MatrixF64::zeros(48, 2);
+        crate::gemm::gemm_reference(1.0, a.view(), x_true.view(), 0.0, &mut rhs.view_mut());
+        let x = co.solve(&a, &rhs, 8).unwrap();
+        assert!(x.max_abs_diff(&x_true) < 1e-8);
+        assert_eq!(co.metrics.count("lu"), 1);
+    }
+
+    #[test]
+    fn coordinator_rejects_singular() {
+        let mut co = Coordinator::new(host_xeon(), ConfigMode::Refined);
+        let a = MatrixF64::zeros(8, 8);
+        let err = co.handle(DlaRequest::LuFactor { a, block: 4 });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn coordinator_cholesky() {
+        let mut co = Coordinator::new(host_xeon(), ConfigMode::Refined);
+        let mut rng = Pcg64::seed(3);
+        let m = MatrixF64::random(24, 24, &mut rng);
+        let mt = m.transposed();
+        let mut a = MatrixF64::zeros(24, 24);
+        crate::gemm::gemm_reference(1.0, m.view(), mt.view(), 0.0, &mut a.view_mut());
+        for i in 0..24 {
+            a[(i, i)] += 24.0;
+        }
+        let resp = co.handle(DlaRequest::Cholesky { a: a.clone(), block: 8 }).unwrap();
+        let DlaResponse::Matrix { result, .. } = resp else { panic!() };
+        assert!(crate::lapack::cholesky::cholesky_residual(&a, &result) < 1e-11);
+    }
+}

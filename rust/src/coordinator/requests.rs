@@ -1,0 +1,72 @@
+//! Request/response types of the coordinator.
+
+use crate::lapack::LuFactors;
+use crate::util::MatrixF64;
+
+/// A DLA service request.
+pub enum DlaRequest {
+    /// `C = alpha * A * B + beta * C`.
+    Gemm { alpha: f64, a: MatrixF64, b: MatrixF64, beta: f64, c: MatrixF64 },
+    /// Blocked LU with partial pivoting.
+    LuFactor { a: MatrixF64, block: usize },
+    /// Blocked lower Cholesky (SPD input).
+    Cholesky { a: MatrixF64, block: usize },
+}
+
+impl DlaRequest {
+    /// Kind label for metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            DlaRequest::Gemm { .. } => "gemm",
+            DlaRequest::LuFactor { .. } => "lu",
+            DlaRequest::Cholesky { .. } => "cholesky",
+        }
+    }
+
+    /// Nominal flop count (for throughput accounting).
+    pub fn flops(&self) -> f64 {
+        match self {
+            DlaRequest::Gemm { a, b, .. } => 2.0 * a.rows() as f64 * b.cols() as f64 * a.cols() as f64,
+            DlaRequest::LuFactor { a, .. } => crate::lapack::lu::lu_flops(a.rows()),
+            DlaRequest::Cholesky { a, .. } => (a.rows() as f64).powi(3) / 3.0,
+        }
+    }
+}
+
+/// A DLA service response.
+pub enum DlaResponse {
+    /// Result matrix (GEMM / Cholesky), optionally with the configuration
+    /// string the co-design selector chose.
+    Matrix { result: MatrixF64, config: Option<String>, seconds: f64 },
+    /// LU factors.
+    Lu { factors: LuFactors, seconds: f64 },
+}
+
+impl DlaResponse {
+    pub fn seconds(&self) -> f64 {
+        match self {
+            DlaResponse::Matrix { seconds, .. } | DlaResponse::Lu { seconds, .. } => *seconds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_and_flops() {
+        let req = DlaRequest::Gemm {
+            alpha: 1.0,
+            a: MatrixF64::zeros(10, 20),
+            b: MatrixF64::zeros(20, 30),
+            beta: 0.0,
+            c: MatrixF64::zeros(10, 30),
+        };
+        assert_eq!(req.kind(), "gemm");
+        assert_eq!(req.flops(), 2.0 * 10.0 * 30.0 * 20.0);
+        let lu = DlaRequest::LuFactor { a: MatrixF64::zeros(30, 30), block: 8 };
+        assert_eq!(lu.kind(), "lu");
+        assert!(lu.flops() > 0.0);
+    }
+}

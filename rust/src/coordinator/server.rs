@@ -1,0 +1,152 @@
+//! A worker-thread request loop around the [`super::Coordinator`]:
+//! requests flow through a bounded channel (backpressure), each worker
+//! owns its engine (and thus its workspace pool), and per-worker metrics
+//! are merged at shutdown.
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::arch::Arch;
+use crate::gemm::ConfigMode;
+
+use super::metrics::Metrics;
+use super::requests::{DlaRequest, DlaResponse};
+use super::Coordinator;
+
+/// Server configuration.
+#[derive(Clone)]
+pub struct ServerConfig {
+    pub workers: usize,
+    pub arch: Arch,
+    pub mode: ConfigMode,
+    /// Channel capacity (backpressure bound).
+    pub queue_depth: usize,
+}
+
+impl ServerConfig {
+    pub fn new(arch: Arch, mode: ConfigMode) -> Self {
+        Self { workers: 1, arch, mode, queue_depth: 64 }
+    }
+
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+}
+
+type Job = (DlaRequest, mpsc::Sender<anyhow::Result<DlaResponse>>);
+
+/// A running coordinator server.
+pub struct CoordinatorServer {
+    tx: Option<mpsc::SyncSender<Job>>,
+    handles: Vec<thread::JoinHandle<Metrics>>,
+}
+
+impl CoordinatorServer {
+    /// Start `cfg.workers` worker threads.
+    pub fn start(cfg: ServerConfig) -> Self {
+        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
+        let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
+        let mut handles = Vec::new();
+        for _ in 0..cfg.workers {
+            let rx = rx.clone();
+            let arch = cfg.arch.clone();
+            let mode = cfg.mode.clone();
+            handles.push(thread::spawn(move || {
+                let mut co = Coordinator::new(arch, mode);
+                loop {
+                    // Hold the lock only while receiving.
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok((req, reply)) => {
+                            let resp = co.handle(req);
+                            let _ = reply.send(resp);
+                        }
+                        Err(_) => break, // channel closed: drain done
+                    }
+                }
+                co.metrics
+            }));
+        }
+        Self { tx: Some(tx), handles }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: DlaRequest) -> mpsc::Receiver<anyhow::Result<DlaResponse>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server already shut down")
+            .send((req, reply_tx))
+            .expect("worker pool gone");
+        reply_rx
+    }
+
+    /// Submit and wait.
+    pub fn call(&self, req: DlaRequest) -> anyhow::Result<DlaResponse> {
+        self.submit(req).recv().expect("worker dropped reply channel")
+    }
+
+    /// Shut down and merge worker metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        drop(self.tx.take());
+        let mut all = Metrics::new();
+        for h in self.handles.drain(..) {
+            all.merge(h.join().expect("worker panicked"));
+        }
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::host_xeon;
+    use crate::util::{MatrixF64, Pcg64};
+
+    fn gemm_req(rng: &mut Pcg64, m: usize, n: usize, k: usize) -> DlaRequest {
+        DlaRequest::Gemm {
+            alpha: 1.0,
+            a: MatrixF64::random(m, k, rng),
+            b: MatrixF64::random(k, n, rng),
+            beta: 0.0,
+            c: MatrixF64::zeros(m, n),
+        }
+    }
+
+    #[test]
+    fn server_round_trip() {
+        let server = CoordinatorServer::start(ServerConfig::new(host_xeon(), ConfigMode::Refined));
+        let mut rng = Pcg64::seed(9);
+        let resp = server.call(gemm_req(&mut rng, 30, 20, 10)).unwrap();
+        assert!(resp.seconds() >= 0.0);
+        let metrics = server.shutdown();
+        assert_eq!(metrics.count("gemm"), 1);
+    }
+
+    #[test]
+    fn server_multiple_workers_process_all() {
+        let server = CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined).with_workers(3),
+        );
+        let mut rng = Pcg64::seed(10);
+        let mut pending = Vec::new();
+        for i in 0..12 {
+            let sz = 16 + (i % 4) * 8;
+            pending.push(server.submit(gemm_req(&mut rng, sz, sz, 8)));
+        }
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.count("gemm"), 12);
+    }
+
+    #[test]
+    fn server_propagates_errors() {
+        let server = CoordinatorServer::start(ServerConfig::new(host_xeon(), ConfigMode::Refined));
+        let resp = server.call(DlaRequest::LuFactor { a: MatrixF64::zeros(6, 6), block: 2 });
+        assert!(resp.is_err());
+        server.shutdown();
+    }
+}

@@ -1,0 +1,259 @@
+//! The co-design GEMM API: the paper's proposal made concrete.
+//!
+//! A [`GemmEngine`] owns an architecture description, the registry of
+//! runnable micro-kernels and a workspace pool. Its [`ConfigMode`] selects
+//! the paper's three compared policies:
+//!
+//! - [`ConfigMode::BlisStatic`] — baseline R1: a single stock micro-kernel
+//!   and CCPs fixed per architecture, only clamped by the dimensions.
+//! - [`ConfigMode::OriginalModel`] — Low-et-al. CCPs, shape-independent.
+//! - [`ConfigMode::Refined`] — the contribution: per-call dynamic
+//!   selection of micro-kernel + CCPs from the refined dimension-aware
+//!   model (§3.3/§3.4).
+//! - [`ConfigMode::Fixed`] — pin an explicit configuration (used by the
+//!   experiment harness to reproduce a specific paper variant).
+
+use crate::arch::Arch;
+use crate::model::ccp::GemmConfig;
+use crate::model::selector::{select_from, AnalyticScorer};
+use crate::model::{blis_static, original_ccp, refined_ccp, GemmDims, MicroKernel};
+use crate::util::matrix::{MatView, MatViewMut};
+
+use super::blocked::{gemm_blocked, Workspace};
+use super::microkernel::{for_shape, registry, MicroKernelImpl};
+use super::parallel::{gemm_parallel, ThreadPlan};
+
+/// Configuration policy for the engine.
+#[derive(Clone, Debug)]
+pub enum ConfigMode {
+    /// BLIS-like baseline: static CCPs + single stock micro-kernel.
+    BlisStatic,
+    /// Original analytical model (shape-independent CCPs), stock kernel.
+    OriginalModel,
+    /// The paper's refined dimension-aware model with dynamic
+    /// micro-kernel selection over the runnable family.
+    Refined,
+    /// Refined CCPs for one pinned micro-kernel shape.
+    RefinedWithKernel(MicroKernel),
+    /// Fully pinned configuration.
+    Fixed(GemmConfig),
+}
+
+/// The engine: arch + kernels + workspaces + policy.
+pub struct GemmEngine {
+    pub arch: Arch,
+    pub mode: ConfigMode,
+    pub plan: ThreadPlan,
+    kernels: Vec<MicroKernelImpl>,
+    workspaces: Vec<Workspace>,
+    /// Last configuration chosen (introspection for tests/harness).
+    pub last_config: Option<GemmConfig>,
+}
+
+impl GemmEngine {
+    /// Engine with every kernel runnable on this host.
+    pub fn new(arch: Arch, mode: ConfigMode) -> Self {
+        Self::with_kernels(arch, mode, registry())
+    }
+
+    /// Engine restricted to an explicit kernel set.
+    pub fn with_kernels(arch: Arch, mode: ConfigMode, kernels: Vec<MicroKernelImpl>) -> Self {
+        assert!(!kernels.is_empty(), "no micro-kernels available");
+        Self {
+            arch,
+            mode,
+            plan: ThreadPlan::sequential(),
+            kernels,
+            workspaces: vec![Workspace::new()],
+            last_config: None,
+        }
+    }
+
+    /// Set the threading plan (one workspace per thread is provisioned).
+    pub fn with_plan(mut self, plan: ThreadPlan) -> Self {
+        while self.workspaces.len() < plan.threads.max(1) {
+            self.workspaces.push(Workspace::new());
+        }
+        self.plan = plan;
+        self
+    }
+
+    /// The micro-kernel shapes eligible for *dynamic selection*: prefetch
+    /// variants are explicit choices, and when SIMD implementations exist
+    /// the scalar fallbacks are excluded — the analytical scorer ranks
+    /// shapes by cache behaviour and register-file arithmetic, which only
+    /// compares like-for-like implementations (a scalar 8x8 would rank
+    /// well on paper and run an order of magnitude slower).
+    pub fn family(&self) -> Vec<MicroKernel> {
+        let any_simd = self.kernels.iter().any(|k| k.simd);
+        let mut f: Vec<MicroKernel> = self
+            .kernels
+            .iter()
+            .filter(|k| !k.prefetch && (!any_simd || k.simd))
+            .map(|k| k.spec)
+            .collect();
+        f.sort();
+        f.dedup();
+        f
+    }
+
+    fn implementation_for(&self, spec: MicroKernel) -> MicroKernelImpl {
+        self.kernels
+            .iter()
+            .find(|k| k.spec == spec && !k.prefetch)
+            .copied()
+            .or_else(|| for_shape(spec))
+            .unwrap_or_else(|| panic!("no implementation for {spec}"))
+    }
+
+    /// Resolve the configuration this engine would use for `dims`.
+    pub fn plan_config(&self, dims: GemmDims) -> GemmConfig {
+        match &self.mode {
+            ConfigMode::BlisStatic => {
+                let cfg = blis_static(&self.arch.name)
+                    .expect("no BLIS static preset for this architecture");
+                GemmConfig { mk: cfg.mk, ccp: cfg.ccp.clamp_to(dims) }
+            }
+            ConfigMode::OriginalModel => {
+                let mk = blis_static(&self.arch.name).map(|c| c.mk).unwrap_or(MicroKernel::new(8, 6));
+                GemmConfig { mk, ccp: original_ccp(&self.arch, mk).clamp_to(dims) }
+            }
+            ConfigMode::Refined => {
+                select_from(&self.arch, dims, &AnalyticScorer, &self.family()).config
+            }
+            ConfigMode::RefinedWithKernel(mk) => {
+                GemmConfig { mk: *mk, ccp: refined_ccp(&self.arch, *mk, dims).clamp_to(dims) }
+            }
+            ConfigMode::Fixed(cfg) => GemmConfig { mk: cfg.mk, ccp: cfg.ccp.clamp_to(dims) },
+        }
+    }
+
+    /// `C = alpha * A * B + beta * C`.
+    pub fn gemm(
+        &mut self,
+        alpha: f64,
+        a: MatView<'_>,
+        b: MatView<'_>,
+        beta: f64,
+        c: &mut MatViewMut<'_>,
+    ) {
+        let dims = GemmDims::new(a.rows, b.cols, a.cols);
+        let cfg = self.plan_config(dims);
+        let kernel = self.implementation_for(cfg.mk);
+        self.last_config = Some(cfg);
+        if self.plan.threads > 1 {
+            gemm_parallel(&cfg, &kernel, alpha, a, b, beta, c, self.plan, &mut self.workspaces);
+        } else {
+            gemm_blocked(&cfg, &kernel, alpha, a, b, beta, c, &mut self.workspaces[0]);
+        }
+    }
+
+    /// Run with an explicit configuration, bypassing the policy (used by
+    /// the experiment harness).
+    pub fn gemm_with_config(
+        &mut self,
+        cfg: &GemmConfig,
+        alpha: f64,
+        a: MatView<'_>,
+        b: MatView<'_>,
+        beta: f64,
+        c: &mut MatViewMut<'_>,
+    ) {
+        let kernel = self.implementation_for(cfg.mk);
+        self.last_config = Some(*cfg);
+        if self.plan.threads > 1 {
+            gemm_parallel(&cfg.clone(), &kernel, alpha, a, b, beta, c, self.plan, &mut self.workspaces);
+        } else {
+            gemm_blocked(cfg, &kernel, alpha, a, b, beta, c, &mut self.workspaces[0]);
+        }
+    }
+
+    /// Run with an explicit named kernel (including prefetch variants).
+    pub fn gemm_with_kernel_name(
+        &mut self,
+        name: &str,
+        ccp: crate::model::Ccp,
+        alpha: f64,
+        a: MatView<'_>,
+        b: MatView<'_>,
+        beta: f64,
+        c: &mut MatViewMut<'_>,
+    ) {
+        let kernel = self
+            .kernels
+            .iter()
+            .find(|k| k.name == name)
+            .copied()
+            .unwrap_or_else(|| panic!("kernel {name} not registered"));
+        let dims = GemmDims::new(a.rows, b.cols, a.cols);
+        let cfg = GemmConfig { mk: kernel.spec, ccp: ccp.clamp_to(dims) };
+        self.last_config = Some(cfg);
+        gemm_blocked(&cfg, &kernel, alpha, a, b, beta, c, &mut self.workspaces[0]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{carmel, epyc7282, host_xeon};
+    use crate::gemm::gemm_reference;
+    use crate::util::{MatrixF64, Pcg64};
+
+    fn check_engine(mut eng: GemmEngine, m: usize, n: usize, k: usize) -> GemmConfig {
+        let mut rng = Pcg64::seed(77);
+        let a = MatrixF64::random(m, k, &mut rng);
+        let b = MatrixF64::random(k, n, &mut rng);
+        let mut c = MatrixF64::random(m, n, &mut rng);
+        let mut expect = c.clone();
+        gemm_reference(1.5, a.view(), b.view(), 0.5, &mut expect.view_mut());
+        eng.gemm(1.5, a.view(), b.view(), 0.5, &mut c.view_mut());
+        assert!(c.max_abs_diff(&expect) < 1e-12 * k as f64, "engine mode {:?}", eng.mode);
+        eng.last_config.unwrap()
+    }
+
+    #[test]
+    fn all_modes_correct() {
+        for mode in [
+            ConfigMode::BlisStatic,
+            ConfigMode::OriginalModel,
+            ConfigMode::Refined,
+            ConfigMode::RefinedWithKernel(MicroKernel::new(12, 4)),
+        ] {
+            check_engine(GemmEngine::new(carmel(), mode), 70, 50, 30);
+        }
+    }
+
+    #[test]
+    fn refined_mode_adapts_ccp_to_k() {
+        let eng = GemmEngine::new(epyc7282(), ConfigMode::Refined);
+        let skinny = eng.plan_config(GemmDims::new(2000, 2000, 64));
+        let fat = eng.plan_config(GemmDims::new(2000, 2000, 2000));
+        assert!(skinny.ccp.mc > fat.ccp.mc, "refined mc must grow as k shrinks");
+        assert_eq!(skinny.ccp.kc, 64);
+    }
+
+    #[test]
+    fn blis_static_mode_pins_ccp() {
+        let eng = GemmEngine::new(carmel(), ConfigMode::BlisStatic);
+        let cfg = eng.plan_config(GemmDims::new(2000, 2000, 128));
+        assert_eq!(cfg.ccp, crate::model::Ccp::new(120, 2000, 128));
+        assert_eq!(cfg.mk, MicroKernel::new(6, 8));
+    }
+
+    #[test]
+    fn parallel_engine_correct() {
+        let eng = GemmEngine::new(host_xeon(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads: 3, target: crate::gemm::ParallelLoop::G4 });
+        check_engine(eng, 90, 70, 40);
+    }
+
+    #[test]
+    fn engine_family_nonempty_and_deduped() {
+        let eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+        let fam = eng.family();
+        assert!(!fam.is_empty());
+        let mut f2 = fam.clone();
+        f2.dedup();
+        assert_eq!(fam, f2);
+    }
+}

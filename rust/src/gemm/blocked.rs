@@ -1,0 +1,293 @@
+//! The blocked GEMM algorithm: five loops around packing and the
+//! micro-kernel (paper Figure 3, left).
+//!
+//! Loop structure and cache intent (paper §2.2, Figure 4):
+//!
+//! ```text
+//! G1: jc over n in steps of nc      Bc panel -> L3
+//! G2: pc over k in steps of kc      pack Bc
+//! G3: ic over m in steps of mc      pack Ac -> L2
+//! G4: jr over nc in steps of nr     Br micro-panel -> L1
+//! G5: ir over mc in steps of mr     micro-kernel on Cr
+//! ```
+
+use crate::model::ccp::GemmConfig;
+use crate::util::matrix::{MatView, MatViewMut};
+
+use super::microkernel::MicroKernelImpl;
+use super::packing::{pack_a, pack_b, packed_a_len, packed_b_len};
+
+/// Reusable packing workspace (`Ac` + `Bc`). The paper stresses providing
+/// "sufficiently-large workspace buffers to GEMM"; the coordinator pools
+/// these so the hot path never allocates.
+#[derive(Default)]
+pub struct Workspace {
+    pub a_buf: Vec<f64>,
+    pub b_buf: Vec<f64>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow (never shrink) to fit a configuration.
+    pub fn ensure(&mut self, cfg: &GemmConfig) {
+        let a_need = packed_a_len(cfg.ccp.mc, cfg.ccp.kc, cfg.mk.mr);
+        let b_need = packed_b_len(cfg.ccp.kc, cfg.ccp.nc, cfg.mk.nr);
+        if self.a_buf.len() < a_need {
+            self.a_buf.resize(a_need, 0.0);
+        }
+        if self.b_buf.len() < b_need {
+            self.b_buf.resize(b_need, 0.0);
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        8 * (self.a_buf.len() + self.b_buf.len())
+    }
+}
+
+/// Scale `C *= beta` (handled once, before the accumulation passes).
+fn scale_c(beta: f64, c: &mut MatViewMut<'_>) {
+    if beta == 1.0 {
+        return;
+    }
+    for j in 0..c.cols {
+        let col = &mut c.data[j * c.ld..j * c.ld + c.rows];
+        if beta == 0.0 {
+            col.fill(0.0);
+        } else {
+            for v in col {
+                *v *= beta;
+            }
+        }
+    }
+}
+
+/// Run the macro-kernel: loops G4/G5 over one packed (Ac, Bc) pair,
+/// updating the `mc_eff x nc_eff` block of C whose (0,0) element is at
+/// `c_ptr` with leading dimension `ldc`.
+///
+/// Raw-pointer based so the G3/G4-parallel drivers can hand disjoint
+/// regions of C to worker threads (paper §2.2's loop parallelization).
+///
+/// # Safety
+/// `c_ptr` must point to a valid column-major block of at least
+/// `mc_eff x nc_eff` elements with stride `ldc >= mc_eff`, and no other
+/// thread may concurrently touch the `(ir, jr)` tiles in `jr_range`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn macro_kernel(
+    kernel: &MicroKernelImpl,
+    kc_eff: usize,
+    mc_eff: usize,
+    nc_eff: usize,
+    a_buf: &[f64],
+    b_buf: &[f64],
+    c_ptr: *mut f64,
+    ldc: usize,
+    jr_range: (usize, usize),
+) {
+    let (mr, nr) = (kernel.spec.mr, kernel.spec.nr);
+    let (jr_lo, jr_hi) = jr_range;
+    debug_assert_eq!(jr_lo % nr, 0, "jr partition must align to nr");
+    let mut jr = jr_lo;
+    while jr < jr_hi {
+        let nr_eff = nr.min(nc_eff - jr);
+        let b_panel = &b_buf[(jr / nr) * nr * kc_eff..];
+        let mut ir = 0;
+        while ir < mc_eff {
+            let mr_eff = mr.min(mc_eff - ir);
+            let a_panel = &a_buf[(ir / mr) * mr * kc_eff..];
+            if mr_eff == mr && nr_eff == nr {
+                // Full tile: straight into C.
+                (kernel.func)(kc_eff, a_panel.as_ptr(), b_panel.as_ptr(), c_ptr.add(jr * ldc + ir), ldc);
+            } else {
+                // Fringe tile: compute into an mr x nr scratch (packed
+                // operands are zero-padded so the excess rows/cols are
+                // exact zeros), then accumulate the live region.
+                let mut scratch = [0.0f64; 32 * 32];
+                debug_assert!(mr * nr <= scratch.len());
+                (kernel.func)(kc_eff, a_panel.as_ptr(), b_panel.as_ptr(), scratch.as_mut_ptr(), mr);
+                for j in 0..nr_eff {
+                    for i in 0..mr_eff {
+                        *c_ptr.add((jr + j) * ldc + ir + i) += scratch[j * mr + i];
+                    }
+                }
+            }
+            ir += mr;
+        }
+        jr += nr;
+    }
+}
+
+/// Sequential blocked GEMM: `C = alpha * A * B + beta * C` with explicit
+/// configuration (micro-kernel + CCPs). This is loop G1..G5 verbatim.
+pub fn gemm_blocked(
+    cfg: &GemmConfig,
+    kernel: &MicroKernelImpl,
+    alpha: f64,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    beta: f64,
+    c: &mut MatViewMut<'_>,
+    ws: &mut Workspace,
+) {
+    assert_eq!(kernel.spec, cfg.mk, "kernel/config shape mismatch");
+    assert_eq!(a.cols, b.rows, "inner dimension mismatch");
+    assert_eq!(c.rows, a.rows, "C row mismatch");
+    assert_eq!(c.cols, b.cols, "C col mismatch");
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    scale_c(beta, c);
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+    let ccp = cfg.ccp.clamp_to(crate::model::GemmDims::new(m, n, k));
+    let eff_cfg = GemmConfig { mk: cfg.mk, ccp };
+    ws.ensure(&eff_cfg);
+    let (mc, nc, kc) = (ccp.mc, ccp.nc, ccp.kc);
+
+    let mut jc = 0; // Loop G1
+    while jc < n {
+        let nc_eff = nc.min(n - jc);
+        let mut pc = 0; // Loop G2
+        while pc < k {
+            let kc_eff = kc.min(k - pc);
+            pack_b(b.sub(pc, jc, kc_eff, nc_eff), &mut ws.b_buf, cfg.mk.nr);
+            let mut ic = 0; // Loop G3
+            while ic < m {
+                let mc_eff = mc.min(m - ic);
+                pack_a(a.sub(ic, pc, mc_eff, kc_eff), &mut ws.a_buf, cfg.mk.mr, alpha);
+                let c_ptr = unsafe { c.data.as_mut_ptr().add(jc * c.ld + ic) };
+                unsafe {
+                    macro_kernel(
+                        kernel,
+                        kc_eff,
+                        mc_eff,
+                        nc_eff,
+                        &ws.a_buf,
+                        &ws.b_buf,
+                        c_ptr,
+                        c.ld,
+                        (0, nc_eff),
+                    )
+                };
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::gemm_reference;
+    use crate::gemm::microkernel::{for_shape, registry};
+    use crate::model::{Ccp, MicroKernel};
+    use crate::util::{MatrixF64, Pcg64};
+
+    fn run_case(mk: MicroKernel, ccp: Ccp, m: usize, n: usize, k: usize, alpha: f64, beta: f64) {
+        let kernel = for_shape(mk).expect("kernel registered");
+        let cfg = GemmConfig { mk, ccp };
+        let mut rng = Pcg64::seed((m * 31 + n * 7 + k) as u64);
+        let a = MatrixF64::random(m, k, &mut rng);
+        let b = MatrixF64::random(k, n, &mut rng);
+        let mut c = MatrixF64::random(m, n, &mut rng);
+        let mut expect = c.clone();
+        gemm_reference(alpha, a.view(), b.view(), beta, &mut expect.view_mut());
+        let mut ws = Workspace::new();
+        gemm_blocked(&cfg, &kernel, alpha, a.view(), b.view(), beta, &mut c.view_mut(), &mut ws);
+        let scale = (k as f64).max(1.0);
+        assert!(
+            c.max_abs_diff(&expect) < 1e-12 * scale,
+            "blocked GEMM {}x{}x{} mk={} ccp={} diverges",
+            m,
+            n,
+            k,
+            mk,
+            ccp
+        );
+    }
+
+    #[test]
+    fn matches_reference_square() {
+        run_case(MicroKernel::new(8, 6), Ccp::new(64, 96, 32), 100, 100, 100, 1.0, 1.0);
+    }
+
+    #[test]
+    fn matches_reference_awkward_sizes() {
+        // Dimensions NOT multiples of anything, CCPs bigger than dims,
+        // CCPs of 1, alpha/beta combinations.
+        run_case(MicroKernel::new(8, 6), Ccp::new(37, 29, 13), 61, 53, 47, 1.0, 0.0);
+        run_case(MicroKernel::new(6, 8), Ccp::new(1000, 1000, 1000), 23, 19, 17, -0.5, 2.0);
+        run_case(MicroKernel::new(12, 4), Ccp::new(24, 16, 8), 25, 17, 9, 2.0, 1.0);
+        run_case(MicroKernel::new(4, 12), Ccp::new(12, 24, 5), 4, 12, 5, 1.0, 1.0);
+        run_case(MicroKernel::new(10, 4), Ccp::new(20, 8, 3), 11, 5, 4, 1.0, -1.0);
+    }
+
+    #[test]
+    fn matches_reference_skinny_k_paper_shape() {
+        // The paper's shape of interest: large m=n, small k.
+        run_case(MicroKernel::new(8, 6), Ccp::new(768, 2000, 64), 200, 200, 64, 1.0, 1.0);
+    }
+
+    #[test]
+    fn one_by_one() {
+        run_case(MicroKernel::new(1, 1), Ccp::new(1, 1, 1), 1, 1, 1, 3.0, 0.5);
+        run_case(MicroKernel::new(1, 1), Ccp::new(2, 2, 2), 3, 3, 3, 1.0, 1.0);
+    }
+
+    #[test]
+    fn alpha_zero_only_scales() {
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp: Ccp::new(8, 8, 8) };
+        let mut rng = Pcg64::seed(9);
+        let a = MatrixF64::random(10, 10, &mut rng);
+        let b = MatrixF64::random(10, 10, &mut rng);
+        let mut c = MatrixF64::random(10, 10, &mut rng);
+        let expect = MatrixF64::from_fn(10, 10, |i, j| 2.0 * c[(i, j)]);
+        let mut ws = Workspace::new();
+        gemm_blocked(&cfg, &kernel, 0.0, a.view(), b.view(), 2.0, &mut c.view_mut(), &mut ws);
+        assert!(c.max_abs_diff(&expect) < 1e-13);
+    }
+
+    #[test]
+    fn every_kernel_runs_the_blocked_path() {
+        for imp in registry() {
+            if imp.prefetch {
+                continue;
+            }
+            let ccp = Ccp::new(3 * imp.spec.mr, 2 * imp.spec.nr, 16);
+            run_case(imp.spec, ccp, 2 * imp.spec.mr + 3, 2 * imp.spec.nr + 1, 33, 1.0, 1.0);
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_grows_monotonically() {
+        let mut ws = Workspace::new();
+        let cfg_small = GemmConfig { mk: MicroKernel::new(8, 6), ccp: Ccp::new(16, 12, 8) };
+        let cfg_big = GemmConfig { mk: MicroKernel::new(8, 6), ccp: Ccp::new(64, 48, 32) };
+        ws.ensure(&cfg_small);
+        let small = ws.bytes();
+        ws.ensure(&cfg_big);
+        let big = ws.bytes();
+        ws.ensure(&cfg_small);
+        assert!(big > small);
+        assert_eq!(ws.bytes(), big, "workspace must not shrink");
+    }
+
+    #[test]
+    fn empty_dims_are_noops() {
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp: Ccp::new(8, 8, 8) };
+        let a = MatrixF64::zeros(0, 5);
+        let b = MatrixF64::zeros(5, 0);
+        let mut c = MatrixF64::zeros(0, 0);
+        let mut ws = Workspace::new();
+        gemm_blocked(&cfg, &kernel, 1.0, a.view(), b.view(), 1.0, &mut c.view_mut(), &mut ws);
+    }
+}

@@ -1,0 +1,346 @@
+//! Micro-kernel implementations (paper §2.3, §3.4 and Figure 7).
+//!
+//! Every kernel computes `Cr += Ar * Br` over packed micro-panels:
+//! `Ar` is `mr x kc` (column-contiguous), `Br` is `kc x nr`
+//! (row-contiguous), `Cr` is an `mr x nr` tile of the column-major output
+//! with leading dimension `ldc`. Alpha is folded into `Ar` by packing.
+//!
+//! Two families are provided, mirroring the paper's intrinsics-vs-assembly
+//! discussion:
+//!
+//! - **AVX2+FMA kernels** (`avx2_*`): the broadcast coding style of paper
+//!   Figure 7 translated to x86 — `MR/4` ymm loads of the `Ar` column, one
+//!   `broadcast_sd` per `Br` element, FMA into an `MR/4 x NR` accumulator
+//!   file. Register budget (16 ymm) checks: 8x6 = 12+2+1 = 15,
+//!   12x4 = 12+3+1 = 16, 4x12 = 12+1+1 = 14.
+//! - **Portable scalar kernels** (`scalar_*`): const-generic Rust that the
+//!   compiler auto-vectorizes; these cover shapes whose `mr` is not a
+//!   multiple of the AVX2 lane count (e.g. the paper's ARM `MK6x8`) and
+//!   any host without AVX2.
+//!
+//! Prefetch variants mirror the paper's BLIS-with-prefetching comparison
+//! on the AMD platform (§4.1): identical arithmetic plus software
+//! prefetches of the next `Ar`/`Br` lines and the `Cr` tile.
+
+use crate::model::MicroKernel;
+
+/// Signature of a micro-kernel over packed operands.
+///
+/// # Safety
+/// `a` must point to `mr*kc` packed elements, `b` to `kc*nr`, and `c` to a
+/// column-major `mr x nr` tile with leading dimension `ldc >= mr`.
+pub type MicroKernelFn = unsafe fn(kc: usize, a: *const f64, b: *const f64, c: *mut f64, ldc: usize);
+
+/// A registered micro-kernel implementation.
+#[derive(Clone, Copy)]
+pub struct MicroKernelImpl {
+    pub spec: MicroKernel,
+    pub func: MicroKernelFn,
+    pub name: &'static str,
+    /// True for the intrinsics (SIMD) family, false for portable scalar.
+    pub simd: bool,
+    /// True when the kernel issues software prefetches.
+    pub prefetch: bool,
+}
+
+impl std::fmt::Debug for MicroKernelImpl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MicroKernelImpl({})", self.name)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Portable const-generic scalar kernels
+// ---------------------------------------------------------------------------
+
+/// Portable kernel: full unroll over an `MR x NR` accumulator tile.
+///
+/// # Safety
+/// See [`MicroKernelFn`].
+unsafe fn scalar_kernel<const MR: usize, const NR: usize>(
+    kc: usize,
+    a: *const f64,
+    b: *const f64,
+    c: *mut f64,
+    ldc: usize,
+) {
+    let mut acc = [[0.0f64; MR]; NR];
+    let mut ap = a;
+    let mut bp = b;
+    for _ in 0..kc {
+        // One column of Ar and one row of Br per iteration (Figure 3,
+        // top-right): a sequence of rank-1 updates.
+        let mut av = [0.0f64; MR];
+        for (i, v) in av.iter_mut().enumerate() {
+            *v = *ap.add(i);
+        }
+        for j in 0..NR {
+            let bv = *bp.add(j);
+            for i in 0..MR {
+                // Plain mul+add, NOT f64::mul_add: without +fma in the
+                // target features, mul_add lowers to a libm call (measured
+                // 70x slower); mul+add auto-vectorizes cleanly.
+                acc[j][i] += av[i] * bv;
+            }
+        }
+        ap = ap.add(MR);
+        bp = bp.add(NR);
+    }
+    for j in 0..NR {
+        let cj = c.add(j * ldc);
+        for i in 0..MR {
+            *cj.add(i) += acc[j][i];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA kernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    /// AVX2 kernel over an `(4*MRV) x NR` tile; `PF` enables software
+    /// prefetching of upcoming packed data and the C tile.
+    ///
+    /// # Safety
+    /// Caller must ensure `avx2` and `fma` are available and the pointer
+    /// contracts of [`super::MicroKernelFn`] hold with `mr = 4 * MRV`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn kernel<const MRV: usize, const NR: usize, const PF: bool>(
+        kc: usize,
+        a: *const f64,
+        b: *const f64,
+        c: *mut f64,
+        ldc: usize,
+    ) {
+        let mr = 4 * MRV;
+        let mut acc = [[_mm256_setzero_pd(); MRV]; NR];
+        if PF {
+            // Prefetch the C tile so the final accumulate does not stall
+            // (the BLIS kernels prefetch C early for the same reason).
+            for j in 0..NR {
+                _mm_prefetch::<_MM_HINT_T0>(c.add(j * ldc) as *const i8);
+            }
+        }
+        let mut ap = a;
+        let mut bp = b;
+        for p in 0..kc {
+            if PF && p + 8 < kc {
+                _mm_prefetch::<_MM_HINT_T0>(ap.add(8 * mr) as *const i8);
+                _mm_prefetch::<_MM_HINT_T0>(bp.add(8 * NR) as *const i8);
+            }
+            let mut av = [_mm256_setzero_pd(); MRV];
+            for (i, v) in av.iter_mut().enumerate() {
+                *v = _mm256_loadu_pd(ap.add(4 * i));
+            }
+            // NR broadcast+FMA groups: the WAR-aware ordering of paper
+            // Figure 7 (all loads of the iteration before the updates).
+            for j in 0..NR {
+                let bv = _mm256_broadcast_sd(&*bp.add(j));
+                for i in 0..MRV {
+                    acc[j][i] = _mm256_fmadd_pd(av[i], bv, acc[j][i]);
+                }
+            }
+            ap = ap.add(mr);
+            bp = bp.add(NR);
+        }
+        for j in 0..NR {
+            let cj = c.add(j * ldc);
+            for i in 0..MRV {
+                let cur = _mm256_loadu_pd(cj.add(4 * i));
+                _mm256_storeu_pd(cj.add(4 * i), _mm256_add_pd(cur, acc[j][i]));
+            }
+        }
+    }
+}
+
+/// Wrap an AVX2 const-generic instantiation in a plain `unsafe fn` so it
+/// can live in the registry (feature detection happens at registration).
+macro_rules! avx2_entry {
+    ($name:ident, $mrv:literal, $nr:literal, $pf:literal) => {
+        /// # Safety
+        /// AVX2+FMA must be available; pointer contracts per [`MicroKernelFn`].
+        #[cfg(target_arch = "x86_64")]
+        unsafe fn $name(kc: usize, a: *const f64, b: *const f64, c: *mut f64, ldc: usize) {
+            avx2::kernel::<$mrv, $nr, $pf>(kc, a, b, c, ldc)
+        }
+    };
+}
+
+avx2_entry!(avx2_8x6, 2, 6, false);
+avx2_entry!(avx2_8x6_pf, 2, 6, true);
+avx2_entry!(avx2_12x4, 3, 4, false);
+avx2_entry!(avx2_12x4_pf, 3, 4, true);
+avx2_entry!(avx2_4x12, 1, 12, false);
+avx2_entry!(avx2_8x4, 2, 4, false);
+avx2_entry!(avx2_4x8, 1, 8, false);
+avx2_entry!(avx2_4x10, 1, 10, false);
+avx2_entry!(avx2_8x2, 2, 2, false);
+avx2_entry!(avx2_4x4, 1, 4, false);
+
+macro_rules! scalar_entry {
+    ($name:ident, $mr:literal, $nr:literal) => {
+        /// # Safety
+        /// Pointer contracts per [`MicroKernelFn`].
+        unsafe fn $name(kc: usize, a: *const f64, b: *const f64, c: *mut f64, ldc: usize) {
+            scalar_kernel::<$mr, $nr>(kc, a, b, c, ldc)
+        }
+    };
+}
+
+scalar_entry!(scalar_6x8, 6, 8);
+scalar_entry!(scalar_8x6, 8, 6);
+scalar_entry!(scalar_12x4, 12, 4);
+scalar_entry!(scalar_4x12, 4, 12);
+scalar_entry!(scalar_10x4, 10, 4);
+scalar_entry!(scalar_4x10, 4, 10);
+scalar_entry!(scalar_8x8, 8, 8);
+scalar_entry!(scalar_4x4, 4, 4);
+scalar_entry!(scalar_2x2, 2, 2);
+scalar_entry!(scalar_1x1, 1, 1);
+
+/// True when the host can run the AVX2+FMA family.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Build the registry of micro-kernels runnable on this host.
+/// SIMD kernels are listed first so name-free lookups prefer them.
+pub fn registry() -> Vec<MicroKernelImpl> {
+    let mut v: Vec<MicroKernelImpl> = Vec::new();
+    let mk = MicroKernel::new;
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        let simd = |spec, func, name| MicroKernelImpl { spec, func, name, simd: true, prefetch: false };
+        v.push(simd(mk(8, 6), avx2_8x6 as MicroKernelFn, "avx2_8x6"));
+        v.push(MicroKernelImpl { spec: mk(8, 6), func: avx2_8x6_pf, name: "avx2_8x6_pf", simd: true, prefetch: true });
+        v.push(simd(mk(12, 4), avx2_12x4, "avx2_12x4"));
+        v.push(MicroKernelImpl { spec: mk(12, 4), func: avx2_12x4_pf, name: "avx2_12x4_pf", simd: true, prefetch: true });
+        v.push(simd(mk(4, 12), avx2_4x12, "avx2_4x12"));
+        v.push(simd(mk(8, 4), avx2_8x4, "avx2_8x4"));
+        v.push(simd(mk(4, 8), avx2_4x8, "avx2_4x8"));
+        v.push(simd(mk(4, 10), avx2_4x10, "avx2_4x10"));
+        v.push(simd(mk(8, 2), avx2_8x2, "avx2_8x2"));
+        v.push(simd(mk(4, 4), avx2_4x4, "avx2_4x4"));
+    }
+    let scalar = |spec, func, name| MicroKernelImpl { spec, func, name, simd: false, prefetch: false };
+    v.push(scalar(mk(6, 8), scalar_6x8 as MicroKernelFn, "scalar_6x8"));
+    v.push(scalar(mk(8, 6), scalar_8x6, "scalar_8x6"));
+    v.push(scalar(mk(12, 4), scalar_12x4, "scalar_12x4"));
+    v.push(scalar(mk(4, 12), scalar_4x12, "scalar_4x12"));
+    v.push(scalar(mk(10, 4), scalar_10x4, "scalar_10x4"));
+    v.push(scalar(mk(4, 10), scalar_4x10, "scalar_4x10"));
+    v.push(scalar(mk(8, 8), scalar_8x8, "scalar_8x8"));
+    v.push(scalar(mk(4, 4), scalar_4x4, "scalar_4x4"));
+    v.push(scalar(mk(2, 2), scalar_2x2, "scalar_2x2"));
+    v.push(scalar(mk(1, 1), scalar_1x1, "scalar_1x1"));
+    v
+}
+
+/// Find a kernel by name.
+pub fn by_name(name: &str) -> Option<MicroKernelImpl> {
+    registry().into_iter().find(|k| k.name == name)
+}
+
+/// Find the preferred (first-registered) kernel for a shape.
+pub fn for_shape(spec: MicroKernel) -> Option<MicroKernelImpl> {
+    registry().into_iter().find(|k| k.spec == spec && !k.prefetch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::packing::{pack_a, pack_b, packed_a_len, packed_b_len};
+    use crate::util::{MatrixF64, Pcg64};
+
+    /// Drive one micro-kernel over a random full-tile problem and compare
+    /// with the naive product.
+    fn check_kernel(imp: &MicroKernelImpl, kc: usize) {
+        let (mr, nr) = (imp.spec.mr, imp.spec.nr);
+        let mut rng = Pcg64::seed(kc as u64 * 31 + mr as u64 * 7 + nr as u64);
+        let a = MatrixF64::random(mr, kc, &mut rng);
+        let b = MatrixF64::random(kc, nr, &mut rng);
+        let mut c = MatrixF64::random(mr, nr, &mut rng);
+        let mut expect = c.clone();
+        crate::gemm::gemm_reference(1.0, a.view(), b.view(), 1.0, &mut expect.view_mut());
+
+        let mut abuf = vec![0.0; packed_a_len(mr, kc, mr)];
+        let mut bbuf = vec![0.0; packed_b_len(kc, nr, nr)];
+        pack_a(a.view(), &mut abuf, mr, 1.0);
+        pack_b(b.view(), &mut bbuf, nr);
+        let ldc = c.ld();
+        unsafe { (imp.func)(kc, abuf.as_ptr(), bbuf.as_ptr(), c.as_mut_ptr(), ldc) };
+        assert!(
+            c.max_abs_diff(&expect) < 1e-11,
+            "kernel {} kc={} diverges from reference",
+            imp.name,
+            kc
+        );
+    }
+
+    #[test]
+    fn every_registered_kernel_matches_reference() {
+        for imp in registry() {
+            for kc in [1, 2, 7, 64, 129] {
+                check_kernel(&imp, kc);
+            }
+        }
+    }
+
+    #[test]
+    fn kc_zero_is_identity() {
+        for imp in registry().into_iter().take(3) {
+            let (mr, nr) = (imp.spec.mr, imp.spec.nr);
+            let mut c = MatrixF64::from_fn(mr, nr, |i, j| (i + 10 * j) as f64);
+            let orig = c.clone();
+            let abuf = vec![0.0; mr];
+            let bbuf = vec![0.0; nr];
+            let ldc = c.ld();
+            unsafe { (imp.func)(0, abuf.as_ptr(), bbuf.as_ptr(), c.as_mut_ptr(), ldc) };
+            assert_eq!(c, orig, "{} with kc=0 must not touch C", imp.name);
+        }
+    }
+
+    #[test]
+    fn registry_contains_paper_shapes() {
+        let shapes: Vec<(usize, usize)> = registry().iter().map(|k| (k.spec.mr, k.spec.nr)).collect();
+        for s in [(6, 8), (8, 6), (12, 4), (4, 12), (10, 4), (4, 10)] {
+            assert!(shapes.contains(&s), "missing MK{}x{}", s.0, s.1);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name_and_shape() {
+        assert!(by_name("scalar_6x8").is_some());
+        assert!(by_name("does_not_exist").is_none());
+        let k = for_shape(MicroKernel::new(8, 6)).unwrap();
+        assert_eq!((k.spec.mr, k.spec.nr), (8, 6));
+        if avx2_available() {
+            assert!(k.simd, "SIMD kernel must be preferred for 8x6");
+        }
+    }
+
+    #[test]
+    fn prefetch_variant_same_numerics() {
+        if !avx2_available() {
+            return;
+        }
+        let plain = by_name("avx2_8x6").unwrap();
+        let pf = by_name("avx2_8x6_pf").unwrap();
+        for kc in [3, 64] {
+            check_kernel(&plain, kc);
+            check_kernel(&pf, kc);
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Packing routines (paper Figure 3, bottom-right).
+//!
+//! `pack_a` copies an `mc x kc` block of A into the contiguous buffer `Ac`
+//! laid out as a sequence of `mr x kc` micro-panels: panel i holds rows
+//! `[i*mr, (i+1)*mr)` and stores, for each p in `0..kc`, the `mr` elements
+//! of column p consecutively. The micro-kernel then loads one column of
+//! `Ar` with consecutive (SIMD-friendly) reads.
+//!
+//! `pack_b` copies a `kc x nc` block of B into `Bc` as `kc x nr`
+//! micro-panels: panel j holds columns `[j*nr, (j+1)*nr)` and stores, for
+//! each p, the `nr` elements of row p consecutively.
+//!
+//! Fringe micro-panels are zero-padded to full `mr`/`nr` so the
+//! micro-kernel never needs edge cases on the packed side; the extra
+//! zeros contribute nothing to the rank-1 updates.
+
+use crate::util::matrix::MatView;
+
+/// Number of f64 elements `pack_a` writes for an `mc x kc` block.
+pub fn packed_a_len(mc: usize, kc: usize, mr: usize) -> usize {
+    mc.div_ceil(mr) * mr * kc
+}
+
+/// Number of f64 elements `pack_b` writes for a `kc x nc` block.
+pub fn packed_b_len(kc: usize, nc: usize, nr: usize) -> usize {
+    nc.div_ceil(nr) * nr * kc
+}
+
+/// Pack `a` (an `mc x kc` view) into `buf` as `mr`-row micro-panels,
+/// scaling every element by `alpha` (folding the GEMM alpha into the
+/// packed operand keeps the micro-kernels pure accumulate).
+pub fn pack_a(a: MatView<'_>, buf: &mut [f64], mr: usize, alpha: f64) {
+    let (mc, kc) = (a.rows, a.cols);
+    let n_panels = mc.div_ceil(mr);
+    assert!(buf.len() >= n_panels * mr * kc, "pack_a buffer too small");
+    let mut off = 0;
+    for ip in 0..n_panels {
+        let i0 = ip * mr;
+        let rows = mr.min(mc - i0);
+        if rows == mr {
+            // Full panel: tight copy loop (the hot path). alpha == 1.0 is
+            // the common case (LU folds its -1 into alpha only once per
+            // call) and turns into a straight memcpy per column.
+            if alpha == 1.0 {
+                for p in 0..kc {
+                    let col = &a.data[p * a.ld + i0..p * a.ld + i0 + mr];
+                    buf[off..off + mr].copy_from_slice(col);
+                    off += mr;
+                }
+            } else {
+                for p in 0..kc {
+                    let col = &a.data[p * a.ld + i0..p * a.ld + i0 + mr];
+                    let dst = &mut buf[off..off + mr];
+                    for (d, &s) in dst.iter_mut().zip(col) {
+                        *d = alpha * s;
+                    }
+                    off += mr;
+                }
+            }
+        } else {
+            // Fringe panel: zero-pad the missing rows.
+            for p in 0..kc {
+                for r in 0..rows {
+                    buf[off + r] = alpha * a.at(i0 + r, p);
+                }
+                for r in rows..mr {
+                    buf[off + r] = 0.0;
+                }
+                off += mr;
+            }
+        }
+    }
+}
+
+/// Pack `b` (a `kc x nc` view) into `buf` as `nr`-column micro-panels.
+pub fn pack_b(b: MatView<'_>, buf: &mut [f64], nr: usize) {
+    let (kc, nc) = (b.rows, b.cols);
+    let n_panels = nc.div_ceil(nr);
+    assert!(buf.len() >= n_panels * nr * kc, "pack_b buffer too small");
+    let mut off = 0;
+    for jp in 0..n_panels {
+        let j0 = jp * nr;
+        let cols = nr.min(nc - j0);
+        for p in 0..kc {
+            for c in 0..cols {
+                buf[off + c] = b.at(p, j0 + c);
+            }
+            for c in cols..nr {
+                buf[off + c] = 0.0;
+            }
+            off += nr;
+        }
+    }
+}
+
+/// Test helper: read element (i, p) of a packed Ac.
+#[cfg(test)]
+pub fn packed_a_at(buf: &[f64], mr: usize, kc: usize, i: usize, p: usize) -> f64 {
+    let panel = i / mr;
+    let row = i % mr;
+    buf[panel * mr * kc + p * mr + row]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{MatrixF64, Pcg64};
+
+    fn packed_b_at_kc(buf: &[f64], nr: usize, kc: usize, j: usize, p: usize) -> f64 {
+        let panel = j / nr;
+        let col = j % nr;
+        buf[panel * nr * kc + p * nr + col]
+    }
+
+    #[test]
+    fn pack_a_roundtrip_exact_multiple() {
+        let mut rng = Pcg64::seed(1);
+        let a = MatrixF64::random(12, 5, &mut rng);
+        let mr = 4;
+        let mut buf = vec![f64::NAN; packed_a_len(12, 5, mr)];
+        pack_a(a.view(), &mut buf, mr, 1.0);
+        for i in 0..12 {
+            for p in 0..5 {
+                assert_eq!(packed_a_at(&buf, mr, 5, i, p), a[(i, p)]);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_a_fringe_zero_padded() {
+        let mut rng = Pcg64::seed(2);
+        let a = MatrixF64::random(10, 3, &mut rng);
+        let mr = 4; // 10 = 2 full panels + fringe of 2
+        let mut buf = vec![f64::NAN; packed_a_len(10, 3, mr)];
+        pack_a(a.view(), &mut buf, mr, 1.0);
+        for i in 0..10 {
+            for p in 0..3 {
+                assert_eq!(packed_a_at(&buf, mr, 3, i, p), a[(i, p)]);
+            }
+        }
+        // Padded rows 10, 11 of the last panel are zero.
+        for i in 10..12 {
+            for p in 0..3 {
+                assert_eq!(packed_a_at(&buf, mr, 3, i, p), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_a_applies_alpha() {
+        let a = MatrixF64::from_row_major(2, 2, &[1., 2., 3., 4.]);
+        let mut buf = vec![0.0; packed_a_len(2, 2, 2)];
+        pack_a(a.view(), &mut buf, 2, -2.0);
+        assert_eq!(packed_a_at(&buf, 2, 2, 1, 1), -8.0);
+    }
+
+    #[test]
+    fn pack_b_roundtrip_with_fringe() {
+        let mut rng = Pcg64::seed(3);
+        let b = MatrixF64::random(4, 11, &mut rng);
+        let nr = 6; // 11 = 1 full panel + fringe of 5
+        let mut buf = vec![f64::NAN; packed_b_len(4, 11, nr)];
+        pack_b(b.view(), &mut buf, nr);
+        for p in 0..4 {
+            for j in 0..11 {
+                assert_eq!(packed_b_at_kc(&buf, nr, 4, j, p), b[(p, j)]);
+            }
+            // Padding.
+            assert_eq!(packed_b_at_kc(&buf, nr, 4, 11, p), 0.0);
+        }
+    }
+
+    #[test]
+    fn pack_b_micropanel_layout_is_row_contiguous() {
+        // Within a micro-panel, row p of B occupies nr consecutive slots:
+        // exactly what Figure 3 (bottom-right) highlights in blue.
+        let b = MatrixF64::from_fn(3, 4, |i, j| (10 * i + j) as f64);
+        let nr = 4;
+        let mut buf = vec![0.0; packed_b_len(3, 4, nr)];
+        pack_b(b.view(), &mut buf, nr);
+        assert_eq!(&buf[0..4], &[0., 1., 2., 3.]);
+        assert_eq!(&buf[4..8], &[10., 11., 12., 13.]);
+        assert_eq!(&buf[8..12], &[20., 21., 22., 23.]);
+    }
+
+    #[test]
+    fn packed_lengths() {
+        assert_eq!(packed_a_len(10, 3, 4), 12 * 3);
+        assert_eq!(packed_b_len(4, 11, 6), 12 * 4);
+    }
+}

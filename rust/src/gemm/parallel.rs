@@ -1,0 +1,329 @@
+//! Multi-threaded GEMM: loop G3 / loop G4 parallelization (paper §2.2).
+//!
+//! - **G4** ("when the L2 is shared"): all threads share one packed `Ac`
+//!   and `Bc`; the `jr` loop over `nc` is partitioned at `nr` granularity.
+//!   Distribution grain is small (`nr`), so 16 threads are easily fed —
+//!   the behaviour paper §4.3.2 observes on the bottom plot of Figure 12.
+//! - **G3** ("when L1 and L2 are private"): the `ic` loop over `m` is
+//!   partitioned at `mc` granularity; each thread packs its own `Ac` into
+//!   a private workspace. With the refined model's *large* `mc` there are
+//!   few iterations to hand out (`m/mc` chunks), reproducing the paper's
+//!   G3 load-imbalance analysis (`10,000/384/16 = 1.62 iterations per
+//!   thread`).
+//!
+//! The host sandbox exposes a single core, so these paths are validated
+//! for correctness here while parallel *performance* figures come from
+//! [`crate::perfmodel`] (see DESIGN.md substitutions).
+
+use crate::model::ccp::GemmConfig;
+use crate::util::matrix::{MatView, MatViewMut};
+
+use super::blocked::{macro_kernel, Workspace};
+use super::microkernel::MicroKernelImpl;
+use super::packing::{pack_a, pack_b};
+
+/// Which loop the threads split (paper §2.2 discussion).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParallelLoop {
+    /// Partition `ic` over `m` (grain `mc`, private `Ac` per thread).
+    G3,
+    /// Partition `jr` over `nc` (grain `nr`, shared `Ac`/`Bc`).
+    G4,
+}
+
+/// A threading plan for one GEMM call.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadPlan {
+    pub threads: usize,
+    pub target: ParallelLoop,
+}
+
+impl ThreadPlan {
+    pub fn sequential() -> Self {
+        Self { threads: 1, target: ParallelLoop::G4 }
+    }
+}
+
+/// Send-able raw pointer to C (threads write disjoint tiles).
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    /// Accessor (not a field read) so closures capture the whole wrapper
+    /// instead of the raw pointer under edition-2021 disjoint capture.
+    fn ptr(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+/// Split `total` items into `parts` contiguous chunks at `grain`
+/// alignment; returns (start, end) per part. Chunks may be empty.
+pub fn partition(total: usize, parts: usize, grain: usize) -> Vec<(usize, usize)> {
+    assert!(parts > 0 && grain > 0);
+    let blocks = total.div_ceil(grain);
+    let per = blocks.div_ceil(parts);
+    (0..parts)
+        .map(|t| {
+            let lo = (t * per * grain).min(total);
+            let hi = ((t + 1) * per * grain).min(total);
+            (lo, hi)
+        })
+        .collect()
+}
+
+/// Multi-threaded blocked GEMM: `C = alpha*A*B + beta*C`.
+///
+/// `workspaces` must provide one [`Workspace`] per thread for G3 (private
+/// `Ac`); for G4 only `workspaces[0]` is used.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_parallel(
+    cfg: &GemmConfig,
+    kernel: &MicroKernelImpl,
+    alpha: f64,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    beta: f64,
+    c: &mut MatViewMut<'_>,
+    plan: ThreadPlan,
+    workspaces: &mut [Workspace],
+) {
+    assert!(workspaces.len() >= plan.threads.max(1), "one workspace per thread required");
+    if plan.threads <= 1 {
+        super::blocked::gemm_blocked(cfg, kernel, alpha, a, b, beta, c, &mut workspaces[0]);
+        return;
+    }
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    // beta scaling once, up front (single-threaded; O(mn)).
+    if beta != 1.0 {
+        for j in 0..c.cols {
+            let col = &mut c.data[j * c.ld..j * c.ld + c.rows];
+            if beta == 0.0 {
+                col.fill(0.0);
+            } else {
+                for v in col {
+                    *v *= beta;
+                }
+            }
+        }
+    }
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+    let ccp = cfg.ccp.clamp_to(crate::model::GemmDims::new(m, n, k));
+    let eff = GemmConfig { mk: cfg.mk, ccp };
+    for ws in workspaces.iter_mut() {
+        ws.ensure(&eff);
+    }
+    match plan.target {
+        ParallelLoop::G4 => gemm_parallel_g4(&eff, kernel, alpha, a, b, c, plan.threads, &mut workspaces[0]),
+        ParallelLoop::G3 => gemm_parallel_g3(&eff, kernel, alpha, a, b, c, plan.threads, workspaces),
+    }
+}
+
+fn gemm_parallel_g4(
+    cfg: &GemmConfig,
+    kernel: &MicroKernelImpl,
+    alpha: f64,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    c: &mut MatViewMut<'_>,
+    threads: usize,
+    ws: &mut Workspace,
+) {
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    let (mc, nc, kc) = (cfg.ccp.mc, cfg.ccp.nc, cfg.ccp.kc);
+    let ldc = c.ld;
+    let mut jc = 0;
+    while jc < n {
+        let nc_eff = nc.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc_eff = kc.min(k - pc);
+            pack_b(b.sub(pc, jc, kc_eff, nc_eff), &mut ws.b_buf, cfg.mk.nr);
+            let mut ic = 0;
+            while ic < m {
+                let mc_eff = mc.min(m - ic);
+                pack_a(a.sub(ic, pc, mc_eff, kc_eff), &mut ws.a_buf, cfg.mk.mr, alpha);
+                let base = SendPtr(unsafe { c.data.as_mut_ptr().add(jc * ldc + ic) });
+                let parts = partition(nc_eff, threads, cfg.mk.nr);
+                let a_buf = &ws.a_buf;
+                let b_buf = &ws.b_buf;
+                std::thread::scope(|s| {
+                    for &(lo, hi) in parts.iter().skip(1) {
+                        if lo >= hi {
+                            continue;
+                        }
+                        let base = base;
+                        s.spawn(move || unsafe {
+                            macro_kernel(kernel, kc_eff, mc_eff, nc_eff, a_buf, b_buf, base.ptr(), ldc, (lo, hi));
+                        });
+                    }
+                    // Leader takes the first chunk.
+                    let (lo, hi) = parts[0];
+                    if lo < hi {
+                        unsafe {
+                            macro_kernel(kernel, kc_eff, mc_eff, nc_eff, a_buf, b_buf, base.ptr(), ldc, (lo, hi));
+                        }
+                    }
+                });
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+fn gemm_parallel_g3(
+    cfg: &GemmConfig,
+    kernel: &MicroKernelImpl,
+    alpha: f64,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    c: &mut MatViewMut<'_>,
+    threads: usize,
+    workspaces: &mut [Workspace],
+) {
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    let (mc, nc, kc) = (cfg.ccp.mc, cfg.ccp.nc, cfg.ccp.kc);
+    let ldc = c.ld;
+    // The shared Bc lives in workspace 0; split A workspaces off first so
+    // each worker gets a disjoint &mut Workspace.
+    let (ws0, rest) = workspaces.split_first_mut().unwrap();
+    let mut jc = 0;
+    while jc < n {
+        let nc_eff = nc.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc_eff = kc.min(k - pc);
+            pack_b(b.sub(pc, jc, kc_eff, nc_eff), &mut ws0.b_buf, cfg.mk.nr);
+            let b_buf = &ws0.b_buf;
+            // Partition the ic range at mc granularity (the paper's point:
+            // only ceil(m/mc) chunks exist to distribute).
+            let parts = partition(m, threads, mc);
+            let base = SendPtr(unsafe { c.data.as_mut_ptr().add(jc * ldc) });
+            std::thread::scope(|s| {
+                let mut rest_iter = rest.iter_mut();
+                for (t, &(lo, hi)) in parts.iter().enumerate().skip(1) {
+                    let ws_t = rest_iter.next().expect("workspace per thread");
+                    if lo >= hi {
+                        continue;
+                    }
+                    let base = base;
+                    s.spawn(move || {
+                        let mut ic = lo;
+                        while ic < hi {
+                            let mc_eff = mc.min(hi - ic);
+                            pack_a(a.sub(ic, pc, mc_eff, kc_eff), &mut ws_t.a_buf, cfg.mk.mr, alpha);
+                            unsafe {
+                                macro_kernel(
+                                    kernel, kc_eff, mc_eff, nc_eff, &ws_t.a_buf, b_buf,
+                                    base.ptr().add(ic), ldc, (0, nc_eff),
+                                );
+                            }
+                            ic += mc;
+                        }
+                        let _ = t;
+                    });
+                }
+                // Leader handles chunk 0 with ws0's a_buf.
+                let (lo, hi) = parts[0];
+                let mut ic = lo;
+                while ic < hi {
+                    let mc_eff = mc.min(hi - ic);
+                    pack_a(a.sub(ic, pc, mc_eff, kc_eff), &mut ws0.a_buf, cfg.mk.mr, alpha);
+                    unsafe {
+                        macro_kernel(
+                            kernel, kc_eff, mc_eff, nc_eff, &ws0.a_buf, b_buf,
+                            base.ptr().add(ic), ldc, (0, nc_eff),
+                        );
+                    }
+                    ic += mc;
+                }
+            });
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::gemm_reference;
+    use crate::gemm::microkernel::for_shape;
+    use crate::model::{Ccp, MicroKernel};
+    use crate::util::{MatrixF64, Pcg64};
+
+    fn run_parallel(target: ParallelLoop, threads: usize, m: usize, n: usize, k: usize, ccp: Ccp) {
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp };
+        let mut rng = Pcg64::seed((m + n + k + threads) as u64);
+        let a = MatrixF64::random(m, k, &mut rng);
+        let b = MatrixF64::random(k, n, &mut rng);
+        let mut c = MatrixF64::random(m, n, &mut rng);
+        let mut expect = c.clone();
+        gemm_reference(1.0, a.view(), b.view(), 1.0, &mut expect.view_mut());
+        let mut wss: Vec<Workspace> = (0..threads).map(|_| Workspace::new()).collect();
+        gemm_parallel(
+            &cfg, &kernel, 1.0, a.view(), b.view(), 1.0, &mut c.view_mut(),
+            ThreadPlan { threads, target }, &mut wss,
+        );
+        assert!(
+            c.max_abs_diff(&expect) < 1e-12 * (k as f64),
+            "{target:?} x{threads} {m}x{n}x{k} diverges"
+        );
+    }
+
+    #[test]
+    fn g4_matches_reference() {
+        run_parallel(ParallelLoop::G4, 2, 64, 96, 40, Ccp::new(32, 24, 16));
+        run_parallel(ParallelLoop::G4, 4, 61, 53, 47, Ccp::new(37, 29, 13));
+        run_parallel(ParallelLoop::G4, 3, 100, 30, 20, Ccp::new(48, 12, 8));
+    }
+
+    #[test]
+    fn g3_matches_reference() {
+        run_parallel(ParallelLoop::G3, 2, 64, 96, 40, Ccp::new(32, 24, 16));
+        run_parallel(ParallelLoop::G3, 4, 61, 53, 47, Ccp::new(16, 29, 13));
+        run_parallel(ParallelLoop::G3, 3, 100, 30, 20, Ccp::new(24, 12, 8));
+    }
+
+    #[test]
+    fn more_threads_than_work() {
+        // 8 threads but only 2 mc chunks / tiny nc: empty chunks allowed.
+        run_parallel(ParallelLoop::G3, 8, 20, 12, 10, Ccp::new(16, 12, 8));
+        run_parallel(ParallelLoop::G4, 8, 20, 12, 10, Ccp::new(16, 12, 8));
+    }
+
+    #[test]
+    fn single_thread_delegates_to_blocked() {
+        run_parallel(ParallelLoop::G3, 1, 33, 21, 17, Ccp::new(16, 12, 8));
+    }
+
+    #[test]
+    fn partition_covers_and_aligns() {
+        for (total, parts, grain) in [(100, 4, 8), (7, 3, 8), (0, 2, 4), (64, 16, 6)] {
+            let p = partition(total, parts, grain);
+            assert_eq!(p.len(), parts);
+            // Coverage without gaps/overlap.
+            let mut pos = 0;
+            for &(lo, hi) in &p {
+                assert_eq!(lo, pos.min(total));
+                assert!(hi >= lo);
+                pos = hi;
+            }
+            assert_eq!(p.last().unwrap().1, total);
+            // Alignment of interior boundaries.
+            for &(lo, _) in &p {
+                assert!(lo == total || lo % grain == 0);
+            }
+        }
+    }
+}

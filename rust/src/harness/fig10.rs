@@ -1,0 +1,143 @@
+//! Figure 10: LU factorization on the Carmel, varying the algorithmic
+//! block size b — sequential (top) and parallel loop-G4 on 8 cores
+//! (bottom).
+//!
+//! The modeled curves use the paper's s = 10000; the measured host curve
+//! runs a real (smaller) factorization through the native engine.
+
+use crate::arch::{carmel, detect_host};
+use crate::gemm::{ConfigMode, GemmEngine, ParallelLoop};
+use crate::lapack::lu::{lu_factor, lu_flops};
+use crate::model::{GemmDims, MicroKernel};
+use crate::perfmodel::{lu_perf, ModelParams};
+use crate::util::table::{ascii_plot, Table};
+use crate::util::{MatrixF64, Pcg64};
+
+use super::{cfg_blis, cfg_mod, HarnessOpts, PAPER_KS};
+
+/// The paper's three variants as configuration policies for the model.
+fn model_variants() -> Vec<(&'static str, Box<dyn Fn(GemmDims) -> crate::model::ccp::GemmConfig>)> {
+    vec![
+        ("BLIS MK6x8", Box::new(|d| cfg_blis(&carmel(), d))),
+        ("MOD MK6x8", Box::new(|d| cfg_mod(&carmel(), MicroKernel::new(6, 8), d))),
+        ("MOD MK12x4", Box::new(|d| cfg_mod(&carmel(), MicroKernel::new(12, 4), d))),
+    ]
+}
+
+/// Modeled Carmel LU (threads = 1 for the top plot, 8/G4 for the bottom).
+pub fn modeled_carmel(s: usize, threads: usize) -> Vec<(String, Vec<f64>)> {
+    let arch = carmel();
+    let p = ModelParams::default();
+    model_variants()
+        .into_iter()
+        .map(|(label, cfg_fn)| {
+            let ys = PAPER_KS
+                .iter()
+                .map(|&b| {
+                    lu_perf(&arch, s, b, &cfg_fn, threads, ParallelLoop::G4, false, &p).gflops
+                })
+                .collect();
+            (format!("model/carmel {label} x{threads}"), ys)
+        })
+        .collect()
+}
+
+/// Measured host LU, sequential.
+pub fn measured_host(s: usize) -> Vec<(String, Vec<f64>)> {
+    let arch = detect_host();
+    let mut rng = Pcg64::seed(17);
+    let a0 = MatrixF64::random_diag_dominant(s, &mut rng);
+    let modes = [
+        ("BLIS static", ConfigMode::BlisStatic),
+        ("MOD MK8x6", ConfigMode::RefinedWithKernel(MicroKernel::new(8, 6))),
+        ("MOD dynamic", ConfigMode::Refined),
+    ];
+    modes
+        .into_iter()
+        .map(|(label, mode)| {
+            let ys = PAPER_KS
+                .iter()
+                .map(|&b| {
+                    let mut engine = GemmEngine::new(arch.clone(), mode.clone());
+                    // Warm-up factorization, then best of 2.
+                    let mut best = f64::INFINITY;
+                    for _ in 0..2 {
+                        let sw = crate::util::Stopwatch::start();
+                        lu_factor(&a0, b, &mut engine).expect("dd matrix is nonsingular");
+                        best = best.min(sw.elapsed_secs());
+                    }
+                    lu_flops(s) / best / 1e9
+                })
+                .collect();
+            (format!("host {label}"), ys)
+        })
+        .collect()
+}
+
+fn emit(title: &str, file: &str, series: &[(String, Vec<f64>)]) {
+    let mut headers = vec!["b".to_string()];
+    headers.extend(series.iter().map(|(l, _)| l.clone()));
+    if series.len() > 1 {
+        for (l, _) in &series[1..] {
+            headers.push(format!("speedup {l}"));
+        }
+    }
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &hrefs);
+    for (i, &b) in PAPER_KS.iter().enumerate() {
+        let mut row = vec![b.to_string()];
+        for (_, ys) in series {
+            row.push(format!("{:.2}", ys[i]));
+        }
+        if series.len() > 1 {
+            for (_, ys) in &series[1..] {
+                row.push(format!("{:.2}", ys[i] / series[0].1[i]));
+            }
+        }
+        t.row(&row);
+    }
+    t.print();
+    t.write_tsv(format!("results/{file}.tsv")).ok();
+    let plot: Vec<(&str, Vec<f64>)> = series.iter().map(|(l, y)| (l.as_str(), y.clone())).collect();
+    println!("{}", ascii_plot(title, PAPER_KS, &plot, 48));
+}
+
+pub fn run(opts: &HarnessOpts, parallel: bool) {
+    if opts.modeled {
+        let s = 10_000; // the paper's size; the model scales fine
+        if parallel {
+            emit("Figure 10 (bottom): LU s=10000, 8 cores, loop G4 (model)", "fig10_parallel", &modeled_carmel(s, 8));
+        } else {
+            emit("Figure 10 (top): LU s=10000, sequential (model)", "fig10_seq", &modeled_carmel(s, 1));
+        }
+    }
+    if opts.measured && !parallel {
+        emit(
+            &format!("Figure 10 (measured host): LU s={}, sequential", opts.lu_s),
+            "fig10_host",
+            &measured_host(opts.lu_s),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_model_prefers_smaller_b_for_mk12x4() {
+        // The paper's Figure 10 story: MOD MK12x4 keeps GEMM fast at
+        // small b, so the parallel LU peaks at a smaller b than BLIS and
+        // outperforms it there.
+        let series = modeled_carmel(4096, 8);
+        let blis = &series[0].1;
+        let mk12 = &series[2].1;
+        let b64 = 0; // index of b = 64
+        assert!(
+            mk12[b64] > blis[b64],
+            "MOD MK12x4 ({:.1}) must beat BLIS ({:.1}) at b=64 in parallel",
+            mk12[b64],
+            blis[b64]
+        );
+    }
+}

@@ -1,0 +1,171 @@
+//! Figure 11: GEMM on the AMD EPYC 7282 — performance (top) and the L2
+//! hit ratio "hardware counter" (bottom).
+//!
+//! Modeled variants follow the paper's four: BLIS without prefetch, BLIS
+//! with prefetch, MOD MK6x8, MOD MK8x6. The measured host curves contrast
+//! the AVX2 engine's prefetch/no-prefetch kernels and the MOD CCPs.
+
+use crate::arch::{detect_host, epyc7282};
+use crate::gemm::{ConfigMode, GemmEngine};
+use crate::model::{GemmDims, MicroKernel};
+use crate::perfmodel::{gemm_perf, ModelParams};
+use crate::trace::TraceOptions;
+use crate::util::table::{ascii_plot, Table};
+use crate::util::timer::measure;
+use crate::util::{MatrixF64, Pcg64};
+
+use super::{cfg_blis, cfg_mod, HarnessOpts, PAPER_KS};
+
+/// Modeled EPYC curves: (label, gflops, l2_hit_ratio) per variant.
+pub fn modeled_epyc(mn: usize) -> Vec<(String, Vec<f64>, Vec<f64>)> {
+    let arch = epyc7282();
+    let p = ModelParams::default();
+    type CfgFn = Box<dyn Fn(GemmDims) -> crate::model::ccp::GemmConfig>;
+    let variants: Vec<(&str, bool, CfgFn)> = vec![
+        ("BLIS no-prefetch", false, Box::new(|d| cfg_blis(&epyc7282(), d))),
+        ("BLIS prefetch", true, Box::new(|d| cfg_blis(&epyc7282(), d))),
+        ("MOD MK6x8", false, Box::new(|d| cfg_mod(&epyc7282(), MicroKernel::new(6, 8), d))),
+        ("MOD MK8x6", false, Box::new(|d| cfg_mod(&epyc7282(), MicroKernel::new(8, 6), d))),
+    ];
+    variants
+        .into_iter()
+        .map(|(label, prefetch, cfg_fn)| {
+            let mut gf = Vec::new();
+            let mut hr = Vec::new();
+            for &k in PAPER_KS {
+                let dims = GemmDims::new(mn, mn, k);
+                let cfg = cfg_fn(dims);
+                let est = gemm_perf(&arch, dims, &cfg, prefetch, TraceOptions::sampled(), &p);
+                gf.push(est.gflops);
+                hr.push(est.l2_hit_ratio.unwrap_or(0.0) * 100.0);
+            }
+            (format!("model/epyc {label}"), gf, hr)
+        })
+        .collect()
+}
+
+/// Measured host curves: prefetch on/off and MOD CCPs (wall clock).
+pub fn measured_host(mn: usize) -> Vec<(String, Vec<f64>)> {
+    let arch = detect_host();
+    let mut rng = Pcg64::seed(31);
+    let kmax = *PAPER_KS.iter().max().unwrap();
+    let a_full = MatrixF64::random(mn, kmax, &mut rng);
+    let b_full = MatrixF64::random(kmax, mn, &mut rng);
+    let mut c = MatrixF64::zeros(mn, mn);
+    let blis_host = crate::model::blis_static(&arch.name).unwrap();
+    let mut out = Vec::new();
+    // (label, kernel name override or None for policy mode, mode)
+    let cases: Vec<(&str, Option<&str>, ConfigMode)> = vec![
+        ("BLIS no-prefetch", Some("avx2_8x6"), ConfigMode::BlisStatic),
+        ("BLIS prefetch", Some("avx2_8x6_pf"), ConfigMode::BlisStatic),
+        ("MOD MK8x6", None, ConfigMode::RefinedWithKernel(MicroKernel::new(8, 6))),
+        ("MOD MK12x4", None, ConfigMode::RefinedWithKernel(MicroKernel::new(12, 4))),
+    ];
+    for (label, kernel_name, mode) in cases {
+        let mut engine = GemmEngine::new(arch.clone(), mode);
+        let ys = PAPER_KS
+            .iter()
+            .map(|&k| {
+                let dims = GemmDims::new(mn, mn, k);
+                let a = a_full.sub(0, 0, mn, k).to_owned_matrix();
+                let b = b_full.sub(0, 0, k, mn).to_owned_matrix();
+                let meas = measure(2, 0.25, || match kernel_name {
+                    Some(name) => engine.gemm_with_kernel_name(
+                        name,
+                        blis_host.ccp,
+                        1.0,
+                        a.view(),
+                        b.view(),
+                        0.0,
+                        &mut c.view_mut(),
+                    ),
+                    None => engine.gemm(1.0, a.view(), b.view(), 0.0, &mut c.view_mut()),
+                });
+                meas.gflops(dims.flops())
+            })
+            .collect();
+        out.push((format!("host {label}"), ys));
+    }
+    out
+}
+
+pub fn run(opts: &HarnessOpts, hitratio: bool) {
+    if opts.modeled {
+        let series = modeled_epyc(2000);
+        // Top: GFLOPS.
+        let mut headers = vec!["k".to_string()];
+        headers.extend(series.iter().map(|(l, _, _)| l.clone()));
+        let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new("Figure 11 (top): GEMM on EPYC 7282 (GFLOPS, model)", &hrefs);
+        for (i, &k) in PAPER_KS.iter().enumerate() {
+            let mut row = vec![k.to_string()];
+            for (_, gf, _) in &series {
+                row.push(format!("{:.2}", gf[i]));
+            }
+            t.row(&row);
+        }
+        t.print();
+        t.write_tsv("results/fig11_model.tsv").ok();
+        if hitratio {
+            // Bottom: L2 hit ratio (the PMU-counter substitute).
+            let mut t2 = Table::new("Figure 11 (bottom): L2 hit ratio % (simulated)", &hrefs);
+            for (i, &k) in PAPER_KS.iter().enumerate() {
+                let mut row = vec![k.to_string()];
+                for (_, _, hr) in &series {
+                    row.push(format!("{:.1}", hr[i]));
+                }
+                t2.row(&row);
+            }
+            t2.print();
+            t2.write_tsv("results/fig11_hitratio.tsv").ok();
+        }
+    }
+    if opts.measured {
+        let series = measured_host(opts.gemm_mn);
+        let mut headers = vec!["k".to_string()];
+        headers.extend(series.iter().map(|(l, _)| l.clone()));
+        let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new("Figure 11 (measured host): GEMM GFLOPS", &hrefs);
+        for (i, &k) in PAPER_KS.iter().enumerate() {
+            let mut row = vec![k.to_string()];
+            for (_, ys) in &series {
+                row.push(format!("{:.2}", ys[i]));
+            }
+            t.row(&row);
+        }
+        t.print();
+        t.write_tsv("results/fig11_host.tsv").ok();
+        let plot: Vec<(&str, Vec<f64>)> =
+            series.iter().map(|(l, y)| (l.as_str(), y.clone())).collect();
+        println!("{}", ascii_plot("Figure 11 (host)", PAPER_KS, &plot, 48));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2_hit_ratio_ranking_matches_paper() {
+        // Figure 11 (bottom): at small k, MOD's L2 hit ratio exceeds
+        // BLIS's on the EPYC geometry.
+        let series = modeled_epyc(1000);
+        let blis_hr = &series[0].2;
+        let mod86_hr = &series[3].2;
+        assert!(
+            mod86_hr[0] > blis_hr[0],
+            "MOD L2 hit ratio ({:.1}%) must exceed BLIS ({:.1}%) at k=64",
+            mod86_hr[0],
+            blis_hr[0]
+        );
+    }
+
+    #[test]
+    fn prefetch_model_never_slower() {
+        let series = modeled_epyc(1000);
+        let (no_pf, pf) = (&series[0].1, &series[1].1);
+        for i in 0..no_pf.len() {
+            assert!(pf[i] >= no_pf[i] * 0.999, "prefetch slower at index {i}");
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Figure 12: LU factorization on the AMD EPYC 7282 — sequential (top),
+//! parallel loop G3 on 16 cores (middle; the inversion where BLIS wins
+//! through better load balance), and parallel loop G4 (bottom; MOD wins
+//! again).
+
+use crate::arch::{detect_host, epyc7282};
+use crate::gemm::{ConfigMode, GemmEngine, ParallelLoop};
+use crate::lapack::lu::{lu_factor, lu_flops};
+use crate::model::{GemmDims, MicroKernel};
+use crate::perfmodel::{lu_perf, ModelParams};
+use crate::util::table::{ascii_plot, Table};
+use crate::util::{MatrixF64, Pcg64};
+
+use super::{cfg_blis, cfg_mod, HarnessOpts, PAPER_KS};
+
+type CfgFn = Box<dyn Fn(GemmDims) -> crate::model::ccp::GemmConfig>;
+
+/// The paper's four variants (prefetch contrast + the two MOD kernels).
+fn model_variants() -> Vec<(&'static str, bool, CfgFn)> {
+    vec![
+        ("BLIS no-prefetch", false, Box::new(|d| cfg_blis(&epyc7282(), d))),
+        ("BLIS prefetch", true, Box::new(|d| cfg_blis(&epyc7282(), d))),
+        ("MOD MK6x8", false, Box::new(|d| cfg_mod(&epyc7282(), MicroKernel::new(6, 8), d))),
+        ("MOD MK8x6", false, Box::new(|d| cfg_mod(&epyc7282(), MicroKernel::new(8, 6), d))),
+    ]
+}
+
+/// Modeled EPYC LU for a given thread count and parallel loop.
+pub fn modeled_epyc(s: usize, threads: usize, target: ParallelLoop) -> Vec<(String, Vec<f64>)> {
+    let arch = epyc7282();
+    let p = ModelParams::default();
+    model_variants()
+        .into_iter()
+        .map(|(label, prefetch, cfg_fn)| {
+            let ys = PAPER_KS
+                .iter()
+                .map(|&b| lu_perf(&arch, s, b, &cfg_fn, threads, target, prefetch, &p).gflops)
+                .collect();
+            let tgt = if threads > 1 {
+                format!(" x{threads}/{}", if target == ParallelLoop::G3 { "G3" } else { "G4" })
+            } else {
+                String::new()
+            };
+            (format!("model/epyc {label}{tgt}"), ys)
+        })
+        .collect()
+}
+
+/// Measured host LU (sequential; the host has one core).
+pub fn measured_host(s: usize) -> Vec<(String, Vec<f64>)> {
+    let arch = detect_host();
+    let mut rng = Pcg64::seed(23);
+    let a0 = MatrixF64::random_diag_dominant(s, &mut rng);
+    [
+        ("BLIS static", ConfigMode::BlisStatic),
+        ("MOD MK8x6", ConfigMode::RefinedWithKernel(MicroKernel::new(8, 6))),
+    ]
+    .into_iter()
+    .map(|(label, mode)| {
+        let ys = PAPER_KS
+            .iter()
+            .map(|&b| {
+                let mut engine = GemmEngine::new(arch.clone(), mode.clone());
+                let mut best = f64::INFINITY;
+                for _ in 0..2 {
+                    let sw = crate::util::Stopwatch::start();
+                    lu_factor(&a0, b, &mut engine).expect("nonsingular");
+                    best = best.min(sw.elapsed_secs());
+                }
+                lu_flops(s) / best / 1e9
+            })
+            .collect();
+        (format!("host {label}"), ys)
+    })
+    .collect()
+}
+
+fn emit(title: &str, file: &str, series: &[(String, Vec<f64>)]) {
+    let mut headers = vec!["b".to_string()];
+    headers.extend(series.iter().map(|(l, _)| l.clone()));
+    for (l, _) in &series[1..] {
+        headers.push(format!("speedup {l}"));
+    }
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &hrefs);
+    for (i, &b) in PAPER_KS.iter().enumerate() {
+        let mut row = vec![b.to_string()];
+        for (_, ys) in series {
+            row.push(format!("{:.2}", ys[i]));
+        }
+        for (_, ys) in &series[1..] {
+            row.push(format!("{:.2}", ys[i] / series[0].1[i]));
+        }
+        t.row(&row);
+    }
+    t.print();
+    t.write_tsv(format!("results/{file}.tsv")).ok();
+    let plot: Vec<(&str, Vec<f64>)> = series.iter().map(|(l, y)| (l.as_str(), y.clone())).collect();
+    println!("{}", ascii_plot(title, PAPER_KS, &plot, 48));
+}
+
+/// Which of the three panels to run.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub enum Panel {
+    Sequential,
+    ParallelG3,
+    ParallelG4,
+}
+
+pub fn run(opts: &HarnessOpts, panel: Panel) {
+    if opts.modeled {
+        let s = 10_000;
+        match panel {
+            Panel::Sequential => emit(
+                "Figure 12 (top): LU s=10000 on EPYC, sequential (model)",
+                "fig12_seq",
+                &modeled_epyc(s, 1, ParallelLoop::G4),
+            ),
+            Panel::ParallelG3 => emit(
+                "Figure 12 (middle): LU s=10000 on EPYC, 16 cores, loop G3 (model)",
+                "fig12_g3",
+                &modeled_epyc(s, 16, ParallelLoop::G3),
+            ),
+            Panel::ParallelG4 => emit(
+                "Figure 12 (bottom): LU s=10000 on EPYC, 16 cores, loop G4 (model)",
+                "fig12_g4",
+                &modeled_epyc(s, 16, ParallelLoop::G4),
+            ),
+        }
+    }
+    if opts.measured && panel == Panel::Sequential {
+        emit(
+            &format!("Figure 12 (measured host): LU s={}, sequential", opts.lu_s),
+            "fig12_host",
+            &measured_host(opts.lu_s),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn g3_vs_g4_inversion() {
+        // The paper's headline parallel finding: under loop G3 the MOD
+        // configurations lose their edge vs BLIS (imbalance from large
+        // mc), while under loop G4 they keep it.
+        let s = 4096;
+        let g3 = modeled_epyc(s, 16, ParallelLoop::G3);
+        let g4 = modeled_epyc(s, 16, ParallelLoop::G4);
+        // Compare MOD MK8x6 (index 3) against BLIS no-prefetch (index 0)
+        // at b = 64 (index 0).
+        let ratio_g3 = g3[3].1[0] / g3[0].1[0];
+        let ratio_g4 = g4[3].1[0] / g4[0].1[0];
+        assert!(
+            ratio_g4 > ratio_g3,
+            "MOD/BLIS must improve from G3 ({ratio_g3:.2}) to G4 ({ratio_g4:.2})"
+        );
+        assert!(ratio_g4 > 1.0, "MOD must beat BLIS under G4 (got {ratio_g4:.2})");
+    }
+}

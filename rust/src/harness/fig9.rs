@@ -1,0 +1,151 @@
+//! Figure 9: GEMM with m = n = 2000 and varying k under distinct CCPs
+//! and micro-kernels, single core.
+//!
+//! - **Modeled (Carmel)**: the paper's exact three variants — R1 = BLIS
+//!   statics + MK6x8, R2 = MOD + MK6x8, R3 = MOD + MK12x4 — through the
+//!   simulation-backed performance model.
+//! - **Measured (host)**: the same experiment run for real on the host
+//!   CPU with the AVX2 engine: BLIS-style statics + stock MK8x6 vs MOD
+//!   CCPs with MK8x6 and MK12x4.
+
+use crate::arch::{carmel, detect_host};
+use crate::gemm::{ConfigMode, GemmEngine};
+use crate::model::{GemmDims, MicroKernel};
+use crate::perfmodel::{gemm_perf, ModelParams};
+use crate::trace::TraceOptions;
+use crate::util::table::{ascii_plot, Table};
+use crate::util::timer::measure;
+use crate::util::{MatrixF64, Pcg64};
+
+use super::{cfg_blis, cfg_mod, HarnessOpts, PAPER_KS};
+
+/// One series of GFLOPS over the k sweep.
+pub struct Series {
+    pub label: String,
+    pub gflops: Vec<f64>,
+}
+
+/// Modeled Carmel curves (the paper's R1/R2/R3).
+pub fn modeled_carmel(mn: usize) -> (Vec<usize>, Vec<Series>) {
+    let arch = carmel();
+    let p = ModelParams::default();
+    let variants: [(&str, Box<dyn Fn(GemmDims) -> crate::model::ccp::GemmConfig>); 3] = [
+        ("R1 BLIS MK6x8", Box::new(move |d| cfg_blis(&carmel(), d))),
+        ("R2 MOD MK6x8", Box::new(move |d| cfg_mod(&carmel(), MicroKernel::new(6, 8), d))),
+        ("R3 MOD MK12x4", Box::new(move |d| cfg_mod(&carmel(), MicroKernel::new(12, 4), d))),
+    ];
+    let mut out = Vec::new();
+    for (label, cfg_fn) in &variants {
+        let gflops = PAPER_KS
+            .iter()
+            .map(|&k| {
+                let dims = GemmDims::new(mn, mn, k);
+                gemm_perf(&arch, dims, &cfg_fn(dims), false, TraceOptions::sampled(), &p).gflops
+            })
+            .collect();
+        out.push(Series { label: format!("model/carmel {label}"), gflops });
+    }
+    (PAPER_KS.to_vec(), out)
+}
+
+/// Measured host curves (real wall-clock, AVX2 engine).
+pub fn measured_host(mn: usize) -> (Vec<usize>, Vec<Series>) {
+    let arch = detect_host();
+    let modes: [(&str, ConfigMode); 3] = [
+        ("R1 BLIS MK8x6", ConfigMode::BlisStatic),
+        ("R2 MOD MK8x6", ConfigMode::RefinedWithKernel(MicroKernel::new(8, 6))),
+        ("R3 MOD MK12x4", ConfigMode::RefinedWithKernel(MicroKernel::new(12, 4))),
+    ];
+    let mut rng = Pcg64::seed(99);
+    let kmax = *PAPER_KS.iter().max().unwrap();
+    let a_full = MatrixF64::random(mn, kmax, &mut rng);
+    let b_full = MatrixF64::random(kmax, mn, &mut rng);
+    let mut c = MatrixF64::zeros(mn, mn);
+    let mut out = Vec::new();
+    for (label, mode) in modes {
+        let mut engine = GemmEngine::new(arch.clone(), mode);
+        let gflops = PAPER_KS
+            .iter()
+            .map(|&k| {
+                let dims = GemmDims::new(mn, mn, k);
+                let a = a_full.sub(0, 0, mn, k).to_owned_matrix();
+                let b = b_full.sub(0, 0, k, mn).to_owned_matrix();
+                let meas = measure(2, 0.3, || {
+                    engine.gemm(1.0, a.view(), b.view(), 0.0, &mut c.view_mut());
+                });
+                meas.gflops(dims.flops())
+            })
+            .collect();
+        out.push(Series { label: format!("host {label}"), gflops });
+    }
+    (PAPER_KS.to_vec(), out)
+}
+
+/// Build the figure table (+ speedup columns like the paper's inset).
+pub fn table(ks: &[usize], series: &[Series]) -> Table {
+    let mut headers: Vec<String> = vec!["k".into()];
+    headers.extend(series.iter().map(|s| s.label.clone()));
+    for s in &series[1..] {
+        headers.push(format!("speedup {}", s.label));
+    }
+    let hrefs: Vec<&str> = headers.iter().map(|h| h.as_str()).collect();
+    let mut t = Table::new("Figure 9: GEMM m=n=2000, varying k (GFLOPS)", &hrefs);
+    for (i, &k) in ks.iter().enumerate() {
+        let mut row = vec![k.to_string()];
+        for s in series {
+            row.push(format!("{:.2}", s.gflops[i]));
+        }
+        for s in &series[1..] {
+            row.push(format!("{:.2}", s.gflops[i] / series[0].gflops[i]));
+        }
+        t.row(&row);
+    }
+    t
+}
+
+/// Run the experiment per the options and emit table + TSV + plot.
+pub fn run(opts: &HarnessOpts) {
+    let mut all: Vec<(Vec<usize>, Vec<Series>)> = Vec::new();
+    if opts.modeled {
+        all.push(modeled_carmel(2000));
+    }
+    if opts.measured {
+        all.push(measured_host(opts.gemm_mn));
+    }
+    for (ks, series) in &all {
+        let t = table(ks, series);
+        t.print();
+        let tag = if series[0].label.starts_with("model") { "model" } else { "host" };
+        t.write_tsv(format!("results/fig9_{tag}.tsv")).ok();
+        let plot_series: Vec<(&str, Vec<f64>)> =
+            series.iter().map(|s| (s.label.as_str(), s.gflops.clone())).collect();
+        println!("{}", ascii_plot("Figure 9", ks, &plot_series, 48));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modeled_series_reproduce_paper_ranking_at_small_k() {
+        let (ks, series) = modeled_carmel(2000);
+        assert_eq!(series.len(), 3);
+        let idx64 = ks.iter().position(|&k| k == 64).unwrap();
+        let (r1, r2, r3) = (series[0].gflops[idx64], series[1].gflops[idx64], series[2].gflops[idx64]);
+        // Paper Figure 9 speedups at k=64: R2/R1 = 1.14, R3/R1 = 1.28.
+        assert!(r2 > r1, "MOD MK6x8 ({r2:.2}) must beat BLIS ({r1:.2}) at k=64");
+        assert!(r3 > r2, "MOD MK12x4 ({r3:.2}) must beat MOD MK6x8 ({r2:.2}) at k=64");
+    }
+
+    #[test]
+    fn table_contains_speedups() {
+        let series = vec![
+            Series { label: "a".into(), gflops: vec![1.0, 2.0] },
+            Series { label: "b".into(), gflops: vec![2.0, 2.0] },
+        ];
+        let t = table(&[64, 96], &series).render();
+        assert!(t.contains("2.00"));
+        assert!(t.contains("speedup b"));
+    }
+}

@@ -1,0 +1,91 @@
+//! Experiment harness: one submodule per table/figure of the paper's
+//! evaluation (see DESIGN.md §5 for the experiment index).
+//!
+//! Every experiment produces (a) a rendered text table/plot on stdout and
+//! (b) a TSV under `results/` for machine consumption. Measured curves
+//! run the native engine on the host CPU; platform curves (Carmel/EPYC)
+//! come from the simulation-backed performance model (the documented
+//! hardware substitution).
+
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig6;
+pub mod fig9;
+pub mod tables;
+
+use crate::arch::Arch;
+use crate::model::ccp::GemmConfig;
+use crate::model::{blis_static, refined_ccp, GemmDims, MicroKernel};
+
+/// The k-range of the paper's skinny-k sweeps.
+pub const PAPER_KS: &[usize] = &[64, 96, 128, 160, 192, 224, 256];
+
+/// Harness-wide options (scaled-down sizes keep the full suite minutes,
+/// not hours; pass `--full` to the CLI for paper-size runs).
+#[derive(Clone, Copy, Debug)]
+pub struct HarnessOpts {
+    /// m = n of the GEMM sweeps (paper: 2000).
+    pub gemm_mn: usize,
+    /// Matrix order of the LU sweeps (paper: 10000).
+    pub lu_s: usize,
+    /// Run the wall-clock measured (host) curves.
+    pub measured: bool,
+    /// Run the model-based (Carmel/EPYC) curves.
+    pub modeled: bool,
+}
+
+impl Default for HarnessOpts {
+    fn default() -> Self {
+        Self { gemm_mn: 768, lu_s: 1024, measured: true, modeled: true }
+    }
+}
+
+impl HarnessOpts {
+    /// Paper-scale settings.
+    pub fn full() -> Self {
+        Self { gemm_mn: 2000, lu_s: 4096, measured: true, modeled: true }
+    }
+
+    /// Tiny settings for CI-style smoke runs.
+    pub fn smoke() -> Self {
+        Self { gemm_mn: 192, lu_s: 192, measured: true, modeled: true }
+    }
+}
+
+/// Build the BLIS-baseline configuration for an arch and problem.
+pub fn cfg_blis(arch: &Arch, dims: GemmDims) -> GemmConfig {
+    let cfg = blis_static(&arch.name).expect("no BLIS preset for arch");
+    GemmConfig { mk: cfg.mk, ccp: cfg.ccp.clamp_to(dims) }
+}
+
+/// Build the refined-model configuration for a pinned micro-kernel.
+pub fn cfg_mod(arch: &Arch, mk: MicroKernel, dims: GemmDims) -> GemmConfig {
+    GemmConfig { mk, ccp: refined_ccp(arch, mk, dims).clamp_to(dims) }
+}
+
+/// Format a speedup column like the paper's tables.
+pub fn speedup(ours: f64, baseline: f64) -> String {
+    format!("{:.2}", ours / baseline)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::carmel;
+
+    #[test]
+    fn cfg_builders() {
+        let arch = carmel();
+        let dims = GemmDims::new(2000, 2000, 128);
+        let b = cfg_blis(&arch, dims);
+        assert_eq!(b.ccp.mc, 120);
+        let m = cfg_mod(&arch, MicroKernel::new(6, 8), dims);
+        assert_eq!(m.ccp.mc, 1792);
+    }
+
+    #[test]
+    fn speedup_format() {
+        assert_eq!(speedup(1.42, 1.0), "1.42");
+    }
+}

@@ -1,0 +1,126 @@
+//! Tables 1 and 2: theoretical cache occupancy, BLIS vs MOD CCPs and the
+//! alternative micro-kernel family. Pure model — regenerates the paper's
+//! numbers exactly (verified digit-for-digit by `model::occupancy` tests).
+
+use crate::arch::carmel;
+use crate::model::{blis_static, occupancy_row, refined_ccp, GemmDims, MicroKernel, OccupancyRow};
+use crate::util::table::Table;
+
+fn fmt_max(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.1}")).unwrap_or_else(|| "-".into())
+}
+
+fn push_row(t: &mut Table, label: &str, r: &OccupancyRow) {
+    t.row(&[
+        label.to_string(),
+        r.k.to_string(),
+        r.mc.to_string(),
+        r.nc.to_string(),
+        r.kc.to_string(),
+        r.mr.to_string(),
+        r.nr.to_string(),
+        format!("{:.1}", r.l1_kib),
+        format!("{:.1}", r.l1_pct),
+        fmt_max(r.l1_max_pct),
+        format!("{:.1}", r.l2_kib),
+        format!("{:.1}", r.l2_pct),
+        fmt_max(r.l2_max_pct),
+    ]);
+}
+
+const HEADERS: &[&str] = &[
+    "params", "k", "mc", "nc", "kc", "mr", "nr", "L1 KB", "L1 %", "L1 Max", "L2 KB", "L2 %", "L2 Max",
+];
+
+/// Table 1: BLIS vs MOD occupancy for MK6x8 on Carmel, m = n = 2000.
+pub fn table1() -> Table {
+    let arch = carmel();
+    let blis = blis_static("carmel").unwrap();
+    let mk = MicroKernel::new(6, 8);
+    let mut t = Table::new(
+        "Table 1: L1|L2 occupation of Br|Ac, Carmel, MK6x8, m=n=2000",
+        HEADERS,
+    );
+    for k in [64, 96, 128, 160, 192, 224, 256, 2000] {
+        let dims = GemmDims::new(2000, 2000, k);
+        let rb = occupancy_row(&arch, blis.mk, dims, blis.ccp.clamp_to(dims), false);
+        push_row(&mut t, "BLIS", &rb);
+        let rm = occupancy_row(&arch, mk, dims, refined_ccp(&arch, mk, dims).clamp_to(dims), true);
+        push_row(&mut t, "MOD", &rm);
+    }
+    t
+}
+
+/// Table 2: MOD occupancy for the alternative micro-kernels on Carmel.
+pub fn table2() -> Table {
+    let arch = carmel();
+    let mut t = Table::new(
+        "Table 2: L1|L2 occupation for alternative micro-kernels, Carmel, m=n=2000",
+        HEADERS,
+    );
+    for k in [64, 128, 192, 256] {
+        for (mr, nr) in [(4, 10), (4, 12), (10, 4), (12, 4)] {
+            let mk = MicroKernel::new(mr, nr);
+            let dims = GemmDims::new(2000, 2000, k);
+            let ccp = refined_ccp(&arch, mk, dims).clamp_to(dims);
+            let r = occupancy_row(&arch, mk, dims, ccp, true);
+            push_row(&mut t, "MOD", &r);
+        }
+    }
+    t
+}
+
+/// Figure 6 (left): occupancy table under BLIS CCPs for k in [64, 240]
+/// and 2000.
+pub fn fig6_left() -> Table {
+    let arch = carmel();
+    let blis = blis_static("carmel").unwrap();
+    let mut t = Table::new(
+        "Figure 6 (left): Br|Ac occupancy with BLIS CCPs, Carmel, m=n=2000",
+        &["k", "kc", "L1 KB", "L1 %", "L2 KB", "L2 %"],
+    );
+    for k in [64, 96, 128, 160, 192, 224, 240, 2000] {
+        let dims = GemmDims::new(2000, 2000, k);
+        let r = occupancy_row(&arch, blis.mk, dims, blis.ccp.clamp_to(dims), false);
+        t.row(&[
+            k.to_string(),
+            r.kc.to_string(),
+            format!("{:.1}", r.l1_kib),
+            format!("{:.1}", r.l1_pct),
+            format!("{:.1}", r.l2_kib),
+            format!("{:.1}", r.l2_pct),
+        ]);
+    }
+    t
+}
+
+/// Run all three and write TSVs.
+pub fn run() {
+    for (t, file) in [
+        (fig6_left(), "fig6_left"),
+        (table1(), "table1"),
+        (table2(), "table2"),
+    ] {
+        t.print();
+        println!();
+        t.write_tsv(format!("results/{file}.tsv")).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render_expected_rows() {
+        let t1 = table1().render();
+        // Spot checks against the paper's printed values.
+        assert!(t1.contains("1792"), "MOD mc=1792 missing");
+        assert!(t1.contains("87.5"), "87.5% occupancy missing");
+        let t2 = table2().render();
+        assert!(t2.contains("1664"), "MK4x10 mc=1664 missing");
+        let f6 = fig6_left().render();
+        assert!(f6.contains("23.4"), "BLIS max L1 occupancy 23.4% missing");
+        assert!(f6.contains("11.0"), "BLIS max L2 occupancy 11.0% missing");
+    }
+}

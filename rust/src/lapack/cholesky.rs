@@ -1,0 +1,154 @@
+//! Blocked Cholesky factorization (extension): a second LAPACK-level
+//! consumer of the co-design GEMM, demonstrating that the paper's
+//! skinny-k trailing updates (`k = b`) are not LU-specific.
+//!
+//! Right-looking lower Cholesky: for each `b`-column panel,
+//!
+//! ```text
+//! A11 = L11 L11^T          (unblocked potf2)
+//! A21 := A21 L11^{-T}      (trsm, right upper)
+//! A22 := A22 - A21 A21^T   (syrk, cast as the skinny-k GEMM)
+//! ```
+
+use crate::gemm::GemmEngine;
+use crate::util::matrix::{MatrixF64, MatViewMut};
+
+use super::trsm::trsm_right_upper;
+
+/// Unblocked lower Cholesky of a small `q x q` block (in place; upper
+/// triangle left untouched). Returns `Err(j)` when the matrix is not
+/// positive definite at step j.
+pub fn potf2(a: &mut MatViewMut<'_>) -> Result<(), usize> {
+    let q = a.rows;
+    assert_eq!(a.cols, q);
+    for j in 0..q {
+        let mut d = a.at(j, j);
+        for t in 0..j {
+            let l = a.at(j, t);
+            d -= l * l;
+        }
+        if d <= 0.0 {
+            return Err(j);
+        }
+        let d = d.sqrt();
+        a.set(j, j, d);
+        let inv = 1.0 / d;
+        for i in j + 1..q {
+            let mut v = a.at(i, j);
+            for t in 0..j {
+                v -= a.at(i, t) * a.at(j, t);
+            }
+            a.set(i, j, v * inv);
+        }
+    }
+    Ok(())
+}
+
+/// Blocked lower Cholesky in place; only the lower triangle of `a` is
+/// referenced and overwritten with L. Trailing updates run through the
+/// engine so they follow the co-design policy.
+pub fn cholesky_blocked(a: &mut MatrixF64, block: usize, engine: &mut GemmEngine) -> Result<(), usize> {
+    let s = a.rows();
+    assert_eq!(a.cols(), s);
+    let mut k = 0;
+    while k < s {
+        let b = block.min(s - k);
+        // A11 = L11 L11^T
+        {
+            let mut a11 = a.sub_mut(k, k, b, b);
+            potf2(&mut a11).map_err(|j| k + j)?;
+        }
+        if k + b < s {
+            let rest = s - k - b;
+            // A21 := A21 * L11^{-T}  (right solve with upper U = L11^T).
+            {
+                let l11t = a.sub(k, k, b, b).to_owned_matrix().transposed();
+                let mut a21 = a.sub_mut(k + b, k, rest, b);
+                trsm_right_upper(l11t.view(), &mut a21);
+            }
+            // A22 := A22 - A21 * A21^T (skinny-k GEMM with k = b).
+            {
+                let a21 = a.sub(k + b, k, rest, b).to_owned_matrix();
+                let a21t = a21.transposed();
+                let mut a22 = a.sub_mut(k + b, k + b, rest, rest);
+                engine.gemm(-1.0, a21.view(), a21t.view(), 1.0, &mut a22);
+            }
+        }
+        k += b;
+    }
+    Ok(())
+}
+
+/// `max|A - L L^T|` over the lower triangle, normalized by `max|A|`.
+pub fn cholesky_residual(a0: &MatrixF64, l_packed: &MatrixF64) -> f64 {
+    let s = a0.rows();
+    let l = MatrixF64::from_fn(s, s, |i, j| if i >= j { l_packed[(i, j)] } else { 0.0 });
+    let lt = l.transposed();
+    let mut llt = MatrixF64::zeros(s, s);
+    crate::gemm::gemm_reference(1.0, l.view(), lt.view(), 0.0, &mut llt.view_mut());
+    let mut err: f64 = 0.0;
+    for j in 0..s {
+        for i in j..s {
+            err = err.max((a0[(i, j)] - llt[(i, j)]).abs());
+        }
+    }
+    err / a0.max_abs().max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::host_xeon;
+    use crate::gemm::ConfigMode;
+    use crate::util::{MatrixF64, Pcg64};
+
+    fn spd(s: usize, rng: &mut Pcg64) -> MatrixF64 {
+        // A = M M^T + s*I is SPD.
+        let m = MatrixF64::random(s, s, rng);
+        let mt = m.transposed();
+        let mut a = MatrixF64::zeros(s, s);
+        crate::gemm::gemm_reference(1.0, m.view(), mt.view(), 0.0, &mut a.view_mut());
+        for i in 0..s {
+            a[(i, i)] += s as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn blocked_cholesky_reconstructs() {
+        let mut rng = Pcg64::seed(60);
+        for (s, b) in [(16, 4), (45, 8), (64, 64), (33, 7)] {
+            let a0 = spd(s, &mut rng);
+            let mut a = a0.clone();
+            let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+            cholesky_blocked(&mut a, b, &mut eng).unwrap();
+            let err = cholesky_residual(&a0, &a);
+            assert!(err < 1e-11, "s={s} b={b}: residual {err}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_unblocked() {
+        let mut rng = Pcg64::seed(61);
+        let a0 = spd(24, &mut rng);
+        let mut ab = a0.clone();
+        let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+        cholesky_blocked(&mut ab, 6, &mut eng).unwrap();
+        let mut au = a0.clone();
+        potf2(&mut au.view_mut()).unwrap();
+        // Compare lower triangles.
+        for j in 0..24 {
+            for i in j..24 {
+                assert!((ab[(i, j)] - au[(i, j)]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let mut a = MatrixF64::identity(8);
+        a[(5, 5)] = -1.0;
+        let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+        assert_eq!(cholesky_blocked(&mut a, 4, &mut eng), Err(5));
+    }
+}

@@ -1,0 +1,174 @@
+//! Level-3 BLAS kernels built on top of GEMM (paper §1: "for
+//! portability, a majority of the Level-3 BLAS are built on top of the
+//! general matrix multiplication kernel").
+//!
+//! - [`syrk_lower`] — symmetric rank-k update `C := alpha A A^T + beta C`
+//!   (lower triangle only): the Cholesky trailing update, done properly
+//!   (diagonal blocks get a half-flop triangular update, off-diagonal
+//!   blocks are plain GEMMs through the co-design engine).
+//! - [`trsm_blocked_left_lower_unit`] — the LU TSOLVE at scale: the
+//!   triangular factor is processed in `nb x nb` diagonal blocks with the
+//!   bulk of the flops cast as GEMM (exactly how LAPACK casts TRSM).
+
+use crate::gemm::GemmEngine;
+use crate::util::matrix::{MatrixF64, MatViewMut};
+
+use super::trsm::trsm_left_lower_unit;
+
+/// `C := alpha * A * A^T + beta * C`, updating only the lower triangle of
+/// the `n x n` matrix `c`; `a` is `n x k`. Off-diagonal blocks flow
+/// through the engine's GEMM (and thus the co-design selection).
+pub fn syrk_lower(
+    alpha: f64,
+    a: &MatrixF64,
+    beta: f64,
+    c: &mut MatrixF64,
+    block: usize,
+    engine: &mut GemmEngine,
+) {
+    let n = c.rows();
+    assert_eq!(c.cols(), n, "C must be square");
+    assert_eq!(a.rows(), n, "A row mismatch");
+    let k = a.cols();
+    let nb = block.max(1);
+    let mut i = 0;
+    while i < n {
+        let ib = nb.min(n - i);
+        // Diagonal block: triangular update, half the flops.
+        {
+            let mut cd = c.sub_mut(i, i, ib, ib);
+            for jj in 0..ib {
+                for ii in jj..ib {
+                    let mut acc = 0.0;
+                    for p in 0..k {
+                        acc += a[(i + ii, p)] * a[(i + jj, p)];
+                    }
+                    let old = cd.at(ii, jj);
+                    cd.set(ii, jj, alpha * acc + beta * old);
+                }
+            }
+        }
+        // Off-diagonal block row: C[i+ib.., i..i+ib] += A[i+ib..,:] A[i..i+ib,:]^T.
+        if i + ib < n {
+            let rows = n - i - ib;
+            let a_low = a.sub(i + ib, 0, rows, k).to_owned_matrix();
+            let a_diag_t = a.sub(i, 0, ib, k).to_owned_matrix().transposed();
+            let mut c_block = c.sub_mut(i + ib, i, rows, ib);
+            engine.gemm(alpha, a_low.view(), a_diag_t.view(), beta, &mut c_block);
+        }
+        i += nb;
+    }
+}
+
+/// Blocked `B := Lower_unit(L)^{-1} B` for a large `q x q` L: diagonal
+/// `nb x nb` blocks are solved with the unblocked kernel, and the
+/// remaining updates are GEMMs `B2 -= L21 * B1` through the engine.
+pub fn trsm_blocked_left_lower_unit(
+    l: &MatrixF64,
+    b: &mut MatViewMut<'_>,
+    block: usize,
+    engine: &mut GemmEngine,
+) {
+    let q = l.rows();
+    assert_eq!(l.cols(), q);
+    assert_eq!(b.rows, q);
+    let nb = block.max(1);
+    let n = b.cols;
+    let mut i = 0;
+    while i < q {
+        let ib = nb.min(q - i);
+        // Solve the diagonal block.
+        {
+            let l_diag = l.sub(i, i, ib, ib).to_owned_matrix();
+            let mut b_blk = b.sub_mut(i, 0, ib, n);
+            trsm_left_lower_unit(l_diag.view(), &mut b_blk);
+        }
+        // GEMM update of the rows below: B[i+ib..] -= L[i+ib.., i..i+ib] * B[i..i+ib].
+        if i + ib < q {
+            let rows = q - i - ib;
+            let l21 = l.sub(i + ib, i, rows, ib).to_owned_matrix();
+            let b1 = b.as_view().sub(i, 0, ib, n).to_owned_matrix();
+            let mut b2 = b.sub_mut(i + ib, 0, rows, n);
+            engine.gemm(-1.0, l21.view(), b1.view(), 1.0, &mut b2);
+        }
+        i += nb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::host_xeon;
+    use crate::gemm::{gemm_reference, ConfigMode};
+    use crate::util::Pcg64;
+
+    fn engine() -> GemmEngine {
+        GemmEngine::new(host_xeon(), ConfigMode::Refined)
+    }
+
+    #[test]
+    fn syrk_matches_gemm_lower_triangle() {
+        let mut rng = Pcg64::seed(70);
+        for (n, k, nb) in [(20, 8, 6), (33, 15, 8), (16, 16, 16), (7, 3, 2)] {
+            let a = MatrixF64::random(n, k, &mut rng);
+            let c0 = MatrixF64::random(n, n, &mut rng);
+            let mut c = c0.clone();
+            syrk_lower(-1.0, &a, 1.0, &mut c, nb, &mut engine());
+            // Reference: full GEMM, compare lower triangles.
+            let at = a.transposed();
+            let mut full = c0.clone();
+            gemm_reference(-1.0, a.view(), at.view(), 1.0, &mut full.view_mut());
+            for j in 0..n {
+                for i in j..n {
+                    assert!(
+                        (c[(i, j)] - full[(i, j)]).abs() < 1e-11,
+                        "n={n} k={k} nb={nb} ({i},{j})"
+                    );
+                }
+                // Upper triangle untouched.
+                for i in 0..j {
+                    assert_eq!(c[(i, j)], c0[(i, j)], "upper triangle must be untouched");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_trsm_matches_unblocked() {
+        let mut rng = Pcg64::seed(71);
+        for (q, n, nb) in [(24, 10, 8), (37, 5, 6), (16, 16, 16)] {
+            let l = MatrixF64::from_fn(q, q, |i, j| {
+                if i > j {
+                    rng.next_f64() - 0.5
+                } else if i == j {
+                    1.0
+                } else {
+                    0.0
+                }
+            });
+            let b0 = MatrixF64::random(q, n, &mut rng);
+            let mut b_blk = b0.clone();
+            trsm_blocked_left_lower_unit(&l, &mut b_blk.view_mut(), nb, &mut engine());
+            let mut b_ref = b0.clone();
+            trsm_left_lower_unit(l.view(), &mut b_ref.view_mut());
+            assert!(b_blk.max_abs_diff(&b_ref) < 1e-10, "q={q} n={n} nb={nb}");
+        }
+    }
+
+    #[test]
+    fn syrk_half_flop_diagonal_is_exact() {
+        // A single diagonal block (n <= nb) must still be exact.
+        let mut rng = Pcg64::seed(72);
+        let a = MatrixF64::random(5, 9, &mut rng);
+        let mut c = MatrixF64::zeros(5, 5);
+        syrk_lower(1.0, &a, 0.0, &mut c, 64, &mut engine());
+        let at = a.transposed();
+        let mut full = MatrixF64::zeros(5, 5);
+        gemm_reference(1.0, a.view(), at.view(), 0.0, &mut full.view_mut());
+        for j in 0..5 {
+            for i in j..5 {
+                assert!((c[(i, j)] - full[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+}

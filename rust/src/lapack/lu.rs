@@ -1,0 +1,273 @@
+//! Right-looking blocked LU factorization with partial pivoting — the
+//! paper's Figure 2 algorithm, verbatim:
+//!
+//! ```text
+//! for k = 0, b, 2b, ...          (loop F1)
+//!   PFACT : [A11; A21] = [L11; L21] U11   (panel, partial pivoting)
+//!   swaps : apply pivots to A(:, left) and A(:, right)
+//!   TSOLVE: A12 := Lower_unit(A11)^{-1} A12
+//!   GEMM  : A22 := A22 - A21 * A12        (trailing update, k-dim = b)
+//! ```
+//!
+//! The trailing GEMM has `m = n = s - k - b` (shrinking) and constant
+//! `k = b` — the skinny-k shape whose cache behaviour the paper studies.
+
+use crate::gemm::GemmEngine;
+use crate::util::matrix::MatrixF64;
+
+use super::pfact::{getf2, laswp};
+use super::trsm::trsm_left_lower_unit;
+
+/// Result of a blocked LU factorization.
+pub struct LuFactors {
+    /// Factored matrix: strictly-lower = L (unit diag), upper = U.
+    pub lu: MatrixF64,
+    /// Pivot rows per step, LAPACK ipiv convention (0-based, relative to
+    /// the whole matrix): at step j, rows j and pivots[j] were swapped.
+    pub pivots: Vec<usize>,
+    /// Algorithmic block size used.
+    pub block: usize,
+}
+
+impl LuFactors {
+    /// Apply the recorded permutation to a fresh copy of `x` (compute
+    /// `P * x` where `P A = L U`).
+    pub fn permute(&self, x: &MatrixF64) -> MatrixF64 {
+        let mut px = x.clone();
+        for (j, &pj) in self.pivots.iter().enumerate() {
+            if j != pj {
+                for c in 0..px.cols() {
+                    let t = px[(j, c)];
+                    px[(j, c)] = px[(pj, c)];
+                    px[(pj, c)] = t;
+                }
+            }
+        }
+        px
+    }
+
+    /// Explicit L factor (s x s, unit lower).
+    pub fn l_matrix(&self) -> MatrixF64 {
+        let s = self.lu.rows();
+        MatrixF64::from_fn(s, s, |i, j| {
+            if i == j {
+                1.0
+            } else if i > j {
+                self.lu[(i, j)]
+            } else {
+                0.0
+            }
+        })
+    }
+
+    /// Explicit U factor (s x s, upper).
+    pub fn u_matrix(&self) -> MatrixF64 {
+        let s = self.lu.rows();
+        MatrixF64::from_fn(s, s, |i, j| if i <= j { self.lu[(i, j)] } else { 0.0 })
+    }
+
+    /// Solve `A x = rhs` using the factorization (forward + backward
+    /// substitution on the permuted right-hand side).
+    pub fn solve(&self, rhs: &MatrixF64) -> MatrixF64 {
+        let s = self.lu.rows();
+        assert_eq!(rhs.rows(), s);
+        let mut x = self.permute(rhs);
+        // Forward: L y = P rhs (unit lower).
+        trsm_left_lower_unit(self.lu.view(), &mut x.view_mut());
+        // Backward: U x = y.
+        for c in 0..x.cols() {
+            for jj in (0..s).rev() {
+                let mut acc = x[(jj, c)];
+                for t in jj + 1..s {
+                    acc -= self.lu[(jj, t)] * x[(t, c)];
+                }
+                x[(jj, c)] = acc / self.lu[(jj, jj)];
+            }
+        }
+        x
+    }
+
+    /// Residual `max|P A - L U|` against the original matrix, normalized
+    /// by `max|A|` (cheap full-reconstruction check used by tests and the
+    /// end-to-end example).
+    pub fn reconstruction_error(&self, a0: &MatrixF64) -> f64 {
+        let pa = self.permute(a0);
+        let l = self.l_matrix();
+        let u = self.u_matrix();
+        let mut lu = MatrixF64::zeros(pa.rows(), pa.cols());
+        crate::gemm::gemm_reference(1.0, l.view(), u.view(), 0.0, &mut lu.view_mut());
+        pa.max_abs_diff(&lu) / a0.max_abs().max(1e-300)
+    }
+}
+
+/// Blocked right-looking LU with partial pivoting, in place over `a`,
+/// trailing updates through the supplied [`GemmEngine`] (this is where
+/// the co-design policy — CCPs + micro-kernel per call — takes effect).
+pub fn lu_blocked(a: &mut MatrixF64, block: usize, engine: &mut GemmEngine) -> Result<Vec<usize>, usize> {
+    let s = a.rows();
+    assert_eq!(a.cols(), s, "LU requires a square matrix");
+    assert!(block >= 1);
+    let mut pivots = vec![0usize; s];
+    let mut k = 0;
+    while k < s {
+        let b = block.min(s - k);
+        // --- PFACT on the panel A[k.., k..k+b] --------------------------
+        {
+            let mut panel = a.sub_mut(k, k, s - k, b);
+            let mut piv_local = vec![0usize; b];
+            getf2(&mut panel, &mut piv_local).map_err(|j| k + j)?;
+            for (j, pj) in piv_local.iter().enumerate() {
+                pivots[k + j] = k + pj;
+            }
+        }
+        // --- Row interchanges on the left and right of the panel --------
+        {
+            let piv_local: Vec<usize> = (0..b).map(|j| pivots[k + j] - k).collect();
+            if k > 0 {
+                let mut left = a.sub_mut(0, 0, s, k);
+                laswp(&mut left, k, &piv_local);
+            }
+            if k + b < s {
+                let mut right = a.sub_mut(0, k + b, s, s - k - b);
+                laswp(&mut right, k, &piv_local);
+            }
+        }
+        if k + b < s {
+            let rest = s - k - b;
+            // --- TSOLVE: A12 := L11^{-1} A12 ----------------------------
+            {
+                let l11 = a.sub(k, k, b, b).to_owned_matrix();
+                let mut a12 = a.sub_mut(k, k + b, b, rest);
+                trsm_left_lower_unit(l11.view(), &mut a12);
+            }
+            // --- GEMM: A22 -= A21 * A12 (k-dimension = b) ---------------
+            {
+                let a21 = a.sub(k + b, k, rest, b).to_owned_matrix();
+                let a12 = a.sub(k, k + b, b, rest).to_owned_matrix();
+                let mut a22 = a.sub_mut(k + b, k + b, rest, rest);
+                engine.gemm(-1.0, a21.view(), a12.view(), 1.0, &mut a22);
+            }
+        }
+        k += b;
+    }
+    Ok(pivots)
+}
+
+/// Convenience wrapper returning [`LuFactors`].
+pub fn lu_factor(a0: &MatrixF64, block: usize, engine: &mut GemmEngine) -> Result<LuFactors, usize> {
+    let mut a = a0.clone();
+    let pivots = lu_blocked(&mut a, block, engine)?;
+    Ok(LuFactors { lu: a, pivots, block })
+}
+
+/// Flop count of an LU factorization of order s (2/3 s^3 to leading order;
+/// exact: `s^2(s-1)/2 * ...` — we use the standard `2/3 s^3 - s^2/2` form
+/// the paper's GFLOPS plots divide by).
+pub fn lu_flops(s: usize) -> f64 {
+    let sf = s as f64;
+    2.0 / 3.0 * sf * sf * sf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::host_xeon;
+    use crate::gemm::ConfigMode;
+    use crate::util::{MatrixF64, Pcg64};
+
+    fn engine() -> GemmEngine {
+        GemmEngine::new(host_xeon(), ConfigMode::Refined)
+    }
+
+    #[test]
+    fn lu_reconstructs_pa() {
+        let mut rng = Pcg64::seed(42);
+        for (s, b) in [(16, 4), (50, 8), (64, 64), (37, 5), (96, 32)] {
+            let a0 = MatrixF64::random(s, s, &mut rng);
+            let f = lu_factor(&a0, b, &mut engine()).unwrap();
+            let err = f.reconstruction_error(&a0);
+            assert!(err < 1e-10, "s={s} b={b}: |PA - LU| = {err}");
+        }
+    }
+
+    #[test]
+    fn lu_matches_unblocked_getf2() {
+        // The blocked algorithm must produce exactly the same factors and
+        // pivots as the unblocked reference (partial pivoting is
+        // deterministic).
+        let mut rng = Pcg64::seed(43);
+        let a0 = MatrixF64::random(24, 24, &mut rng);
+        let f = lu_factor(&a0, 6, &mut engine()).unwrap();
+        let mut ref_a = a0.clone();
+        let mut ref_piv = vec![0usize; 24];
+        getf2(&mut ref_a.view_mut(), &mut ref_piv).unwrap();
+        assert_eq!(f.pivots, ref_piv, "pivot sequence differs from getf2");
+        assert!(f.lu.max_abs_diff(&ref_a) < 1e-9, "factors differ from getf2");
+    }
+
+    #[test]
+    fn lu_block_size_does_not_change_result() {
+        let mut rng = Pcg64::seed(44);
+        let a0 = MatrixF64::random(48, 48, &mut rng);
+        let f1 = lu_factor(&a0, 4, &mut engine()).unwrap();
+        let f2 = lu_factor(&a0, 16, &mut engine()).unwrap();
+        let f3 = lu_factor(&a0, 48, &mut engine()).unwrap();
+        assert!(f1.lu.max_abs_diff(&f2.lu) < 1e-9);
+        assert!(f1.lu.max_abs_diff(&f3.lu) < 1e-9);
+        assert_eq!(f1.pivots, f2.pivots);
+        assert_eq!(f1.pivots, f3.pivots);
+    }
+
+    #[test]
+    fn lu_solve_linear_system() {
+        let mut rng = Pcg64::seed(45);
+        let a0 = MatrixF64::random_diag_dominant(40, &mut rng);
+        let x_true = MatrixF64::random(40, 3, &mut rng);
+        let mut rhs = MatrixF64::zeros(40, 3);
+        crate::gemm::gemm_reference(1.0, a0.view(), x_true.view(), 0.0, &mut rhs.view_mut());
+        let f = lu_factor(&a0, 8, &mut engine()).unwrap();
+        let x = f.solve(&rhs);
+        assert!(x.max_abs_diff(&x_true) < 1e-8);
+    }
+
+    #[test]
+    fn lu_singular_detected() {
+        let mut a = MatrixF64::zeros(8, 8);
+        for i in 0..8 {
+            a[(i, i)] = 1.0;
+        }
+        // Make column 3 linearly dependent (equal to column 2).
+        for i in 0..8 {
+            let v = a[(i, 2)];
+            a[(i, 3)] = v;
+        }
+        let err = lu_factor(&a, 4, &mut engine());
+        assert!(err.is_err(), "rank-deficient matrix must be detected");
+    }
+
+    #[test]
+    fn lu_block_larger_than_matrix() {
+        let mut rng = Pcg64::seed(46);
+        let a0 = MatrixF64::random(10, 10, &mut rng);
+        let f = lu_factor(&a0, 64, &mut engine()).unwrap();
+        assert!(f.reconstruction_error(&a0) < 1e-11);
+    }
+
+    #[test]
+    fn pivot_growth_bounded() {
+        // With partial pivoting all multipliers are <= 1.
+        let mut rng = Pcg64::seed(47);
+        let a0 = MatrixF64::random(30, 30, &mut rng);
+        let f = lu_factor(&a0, 8, &mut engine()).unwrap();
+        for j in 0..30 {
+            for i in j + 1..30 {
+                assert!(f.lu[(i, j)].abs() <= 1.0 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn flops_formula_scale() {
+        assert!((lu_flops(1000) - 2.0 / 3.0 * 1e9).abs() < 1e3);
+    }
+}

@@ -1,0 +1,26 @@
+//! The LAPACK-level layer: blocked algorithms built on the GEMM engine,
+//! exactly as the paper's Figure 2 stack (LAPACK -> Level-3 BLAS -> GEMM
+//! -> micro-kernel).
+//!
+//! - [`pfact`] — unblocked panel factorization with partial pivoting
+//!   (PFACT; LAPACK's `getf2`) and the row-interchange helper `laswp`.
+//! - [`trsm`] — triangular solves (TSOLVE; the cases the LU and Cholesky
+//!   algorithms need).
+//! - [`lu`] — the right-looking blocked LU of paper Figure 2, with
+//!   partial pivoting, whose trailing update is the skinny-k GEMM the
+//!   whole paper is about.
+//! - [`cholesky`] — blocked Cholesky (extension; a second consumer of the
+//!   co-design GEMM showing the approach generalizes beyond LU).
+
+pub mod cholesky;
+pub mod level3;
+pub mod lu;
+pub mod pfact;
+pub mod qr;
+pub mod trsm;
+
+pub use level3::{syrk_lower, trsm_blocked_left_lower_unit};
+pub use lu::{lu_blocked, lu_factor, LuFactors};
+pub use qr::{qr_blocked, QrFactors};
+pub use pfact::{getf2, laswp};
+pub use trsm::{trsm_left_lower_unit, trsm_right_upper};

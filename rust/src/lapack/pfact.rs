@@ -1,0 +1,196 @@
+//! Panel factorization (PFACT) with partial pivoting — LAPACK's `getf2` —
+//! and the row-interchange helper `laswp`.
+//!
+//! PFACT is the mostly-sequential kernel on the critical path of the
+//! blocked LU (paper §2.1): right-looking rank-1 updates on a tall-skinny
+//! `p x b` panel.
+
+use crate::util::matrix::MatViewMut;
+
+/// Unblocked LU with partial pivoting of a `p x q` panel (in place).
+///
+/// On return the strictly-lower part holds the unit-lower factor L (unit
+/// diagonal implicit) and the upper part holds U. `pivots[j] = i` records
+/// that row `j` was swapped with row `i >= j` at step j (LAPACK ipiv
+/// convention, 0-based).
+///
+/// Returns `Err(j)` if an exact zero pivot is met at column j (matrix
+/// singular to working precision).
+pub fn getf2(a: &mut MatViewMut<'_>, pivots: &mut [usize]) -> Result<(), usize> {
+    let p = a.rows;
+    let q = a.cols;
+    let steps = p.min(q);
+    assert!(pivots.len() >= steps, "pivot buffer too small");
+    for j in 0..steps {
+        // Find the pivot: argmax |A(i, j)| over i >= j.
+        let mut imax = j;
+        let mut vmax = a.at(j, j).abs();
+        for i in j + 1..p {
+            let v = a.at(i, j).abs();
+            if v > vmax {
+                vmax = v;
+                imax = i;
+            }
+        }
+        pivots[j] = imax;
+        if vmax == 0.0 {
+            return Err(j);
+        }
+        // Swap rows j and imax across the whole panel.
+        if imax != j {
+            for c in 0..q {
+                let t = a.at(j, c);
+                let v = a.at(imax, c);
+                a.set(j, c, v);
+                a.set(imax, c, t);
+            }
+        }
+        // Scale the sub-column and apply the rank-1 update to the
+        // trailing sub-panel.
+        let pivot = a.at(j, j);
+        let inv = 1.0 / pivot;
+        for i in j + 1..p {
+            let l = a.at(i, j) * inv;
+            a.set(i, j, l);
+        }
+        for c in j + 1..q {
+            let ujc = a.at(j, c);
+            if ujc == 0.0 {
+                continue;
+            }
+            // Column-major AXPY down column c.
+            let col_off = c * a.ld;
+            let lcol_off = j * a.ld;
+            for i in j + 1..p {
+                a.data[col_off + i] -= a.data[lcol_off + i] * ujc;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Apply the row interchanges recorded by [`getf2`] to another block of
+/// the same matrix rows (LAPACK `laswp`): for each step j, swap rows
+/// `offset + j` and `offset + pivots[j]`.
+pub fn laswp(a: &mut MatViewMut<'_>, offset: usize, pivots: &[usize]) {
+    for (j, &pj) in pivots.iter().enumerate() {
+        let r1 = offset + j;
+        let r2 = offset + pj;
+        if r1 == r2 {
+            continue;
+        }
+        for c in 0..a.cols {
+            let t = a.at(r1, c);
+            let v = a.at(r2, c);
+            a.set(r1, c, v);
+            a.set(r2, c, t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{MatrixF64, Pcg64};
+
+    /// Reconstruct P*A0 and L*U from a factored panel and compare.
+    fn verify_panel(a0: &MatrixF64, fact: &MatrixF64, pivots: &[usize]) {
+        let p = a0.rows();
+        let q = a0.cols();
+        let steps = p.min(q);
+        // Build permuted copy of A0.
+        let mut pa = a0.clone();
+        laswp(&mut pa.view_mut(), 0, &pivots[..steps]);
+        // L (p x steps, unit diag) * U (steps x q).
+        let mut lu = MatrixF64::zeros(p, q);
+        for i in 0..p {
+            for j in 0..q {
+                let mut acc = 0.0;
+                for t in 0..steps {
+                    let l = if i == t {
+                        1.0
+                    } else if i > t {
+                        fact[(i, t)]
+                    } else {
+                        0.0
+                    };
+                    let u = if t <= j { if t < steps { fact[(t, j)] } else { 0.0 } } else { 0.0 };
+                    acc += l * u;
+                }
+                lu[(i, j)] = acc;
+            }
+        }
+        assert!(pa.max_abs_diff(&lu) < 1e-10 * (p as f64), "PA != LU for panel");
+    }
+
+    #[test]
+    fn getf2_square() {
+        let mut rng = Pcg64::seed(100);
+        let a0 = MatrixF64::random(8, 8, &mut rng);
+        let mut a = a0.clone();
+        let mut piv = vec![0usize; 8];
+        getf2(&mut a.view_mut(), &mut piv).unwrap();
+        verify_panel(&a0, &a, &piv);
+    }
+
+    #[test]
+    fn getf2_tall_panel() {
+        let mut rng = Pcg64::seed(101);
+        let a0 = MatrixF64::random(40, 8, &mut rng);
+        let mut a = a0.clone();
+        let mut piv = vec![0usize; 8];
+        getf2(&mut a.view_mut(), &mut piv).unwrap();
+        verify_panel(&a0, &a, &piv);
+    }
+
+    #[test]
+    fn getf2_picks_largest_pivot() {
+        // First column is [1, -9, 3]^T: pivot row must be 1.
+        let mut a = MatrixF64::from_row_major(3, 3, &[1., 2., 3., -9., 5., 6., 3., 8., 10.]);
+        let mut piv = vec![0usize; 3];
+        getf2(&mut a.view_mut(), &mut piv).unwrap();
+        assert_eq!(piv[0], 1);
+        // Multipliers are bounded by 1 in magnitude with partial pivoting.
+        for j in 0..3 {
+            for i in j + 1..3 {
+                assert!(a[(i, j)].abs() <= 1.0 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn getf2_detects_singularity() {
+        let mut a = MatrixF64::zeros(3, 3);
+        a[(0, 0)] = 1.0; // column 1 is entirely zero below/at the diagonal
+        a[(0, 1)] = 2.0;
+        a[(0, 2)] = 3.0;
+        let mut piv = vec![0usize; 3];
+        assert_eq!(getf2(&mut a.view_mut(), &mut piv), Err(1));
+    }
+
+    #[test]
+    fn laswp_applies_same_permutation() {
+        let mut rng = Pcg64::seed(7);
+        let a0 = MatrixF64::random(6, 4, &mut rng);
+        let mut a = a0.clone();
+        let mut piv = vec![0usize; 4];
+        getf2(&mut a.view_mut(), &mut piv).unwrap();
+        // laswp on an identity tracks the permutation matrix.
+        let mut perm = MatrixF64::identity(6);
+        laswp(&mut perm.view_mut(), 0, &piv);
+        // Rows of perm * a0 must equal the pivoted order getf2 used.
+        let mut pa = MatrixF64::zeros(6, 4);
+        crate::gemm::gemm_reference(1.0, perm.view(), a0.view(), 0.0, &mut pa.view_mut());
+        let mut pa2 = a0.clone();
+        laswp(&mut pa2.view_mut(), 0, &piv);
+        assert!(pa.max_abs_diff(&pa2) < 1e-14);
+    }
+
+    #[test]
+    fn laswp_with_offset() {
+        let mut a = MatrixF64::from_fn(4, 1, |i, _| i as f64);
+        laswp(&mut a.view_mut(), 2, &[1]); // swap rows 2 and 3
+        assert_eq!(a[(2, 0)], 3.0);
+        assert_eq!(a[(3, 0)], 2.0);
+    }
+}

@@ -1,0 +1,264 @@
+//! Blocked Householder QR (extension): a third LAPACK-level consumer of
+//! the co-design GEMM.
+//!
+//! The blocked algorithm follows LAPACK's `geqrf`: factor a `b`-column
+//! panel with Householder reflectors (`geqr2`), build the compact-WY
+//! triangular factor `T` (`larft`), and apply `(I - V T V^T)^T` to the
+//! trailing columns with two GEMM-rich steps (`larfb`) — the trailing
+//! update again has inner dimension `b`, the paper's skinny-k shape.
+
+use crate::gemm::GemmEngine;
+use crate::util::matrix::{MatrixF64, MatViewMut};
+
+/// Result of a blocked QR factorization.
+pub struct QrFactors {
+    /// Packed factors: R in the upper triangle, Householder vectors V
+    /// (unit lower trapezoid, implicit leading 1) below the diagonal.
+    pub qr: MatrixF64,
+    /// Scalar reflector coefficients tau, one per column.
+    pub tau: Vec<f64>,
+    pub block: usize,
+}
+
+impl QrFactors {
+    /// Assemble the explicit `m x m` orthogonal factor Q (test/demo use).
+    pub fn q_matrix(&self) -> MatrixF64 {
+        let m = self.qr.rows();
+        let n = self.qr.cols().min(m);
+        let mut q = MatrixF64::identity(m);
+        // Apply H_0 H_1 ... H_{n-1} to I from the left, in reverse.
+        for j in (0..n).rev() {
+            let tau = self.tau[j];
+            if tau == 0.0 {
+                continue;
+            }
+            // v = [0_{j}, 1, qr[j+1.., j]]
+            let mut v = vec![0.0; m];
+            v[j] = 1.0;
+            for i in j + 1..m {
+                v[i] = self.qr[(i, j)];
+            }
+            // Q := (I - tau v v^T) Q
+            for c in 0..m {
+                let mut dot = 0.0;
+                for r in j..m {
+                    dot += v[r] * q[(r, c)];
+                }
+                let s = tau * dot;
+                for r in j..m {
+                    let upd = q[(r, c)] - s * v[r];
+                    q[(r, c)] = upd;
+                }
+            }
+        }
+        q
+    }
+
+    /// Explicit R (upper triangular/trapezoidal).
+    pub fn r_matrix(&self) -> MatrixF64 {
+        let (m, n) = (self.qr.rows(), self.qr.cols());
+        MatrixF64::from_fn(m, n, |i, j| if i <= j { self.qr[(i, j)] } else { 0.0 })
+    }
+
+    /// `max |A - Q R| / max|A|`.
+    pub fn reconstruction_error(&self, a0: &MatrixF64) -> f64 {
+        let q = self.q_matrix();
+        let r = self.r_matrix();
+        let mut qr = MatrixF64::zeros(a0.rows(), a0.cols());
+        crate::gemm::gemm_reference(1.0, q.view(), r.view(), 0.0, &mut qr.view_mut());
+        qr.max_abs_diff(a0) / a0.max_abs().max(1e-300)
+    }
+
+    /// `max |Q^T Q - I|` (orthogonality).
+    pub fn orthogonality_error(&self) -> f64 {
+        let q = self.q_matrix();
+        let qt = q.transposed();
+        let mut qtq = MatrixF64::zeros(q.rows(), q.rows());
+        crate::gemm::gemm_reference(1.0, qt.view(), q.view(), 0.0, &mut qtq.view_mut());
+        qtq.max_abs_diff(&MatrixF64::identity(q.rows()))
+    }
+}
+
+/// Unblocked Householder QR of a panel (LAPACK `geqr2`), in place.
+pub fn geqr2(a: &mut MatViewMut<'_>, tau: &mut [f64]) {
+    let (m, n) = (a.rows, a.cols);
+    let steps = m.min(n);
+    assert!(tau.len() >= steps);
+    for j in 0..steps {
+        // Householder vector for column j below the diagonal.
+        let alpha = a.at(j, j);
+        let mut xnorm2 = 0.0;
+        for i in j + 1..m {
+            let v = a.at(i, j);
+            xnorm2 += v * v;
+        }
+        if xnorm2 == 0.0 {
+            tau[j] = 0.0;
+            continue;
+        }
+        let norm = (alpha * alpha + xnorm2).sqrt();
+        let beta = if alpha >= 0.0 { -norm } else { norm };
+        let tj = (beta - alpha) / beta;
+        tau[j] = tj;
+        let scale = 1.0 / (alpha - beta);
+        for i in j + 1..m {
+            let v = a.at(i, j) * scale;
+            a.set(i, j, v);
+        }
+        a.set(j, j, beta);
+        // Apply H_j to the remaining panel columns: A := (I - tau v v^T) A.
+        for c in j + 1..n {
+            let mut dot = a.at(j, c);
+            for i in j + 1..m {
+                dot += a.at(i, j) * a.at(i, c);
+            }
+            let s = tj * dot;
+            let upd0 = a.at(j, c) - s;
+            a.set(j, c, upd0);
+            for i in j + 1..m {
+                let upd = a.at(i, c) - s * a.at(i, j);
+                a.set(i, c, upd);
+            }
+        }
+    }
+}
+
+/// Build the upper-triangular compact-WY factor T (LAPACK `larft`,
+/// forward/columnwise) for the b reflectors stored in `v` (unit lower
+/// trapezoid, `rows x b`).
+fn larft(v: &MatrixF64, tau: &[f64]) -> MatrixF64 {
+    let b = v.cols();
+    let rows = v.rows();
+    let mut t = MatrixF64::zeros(b, b);
+    for j in 0..b {
+        t[(j, j)] = tau[j];
+        if tau[j] == 0.0 {
+            continue;
+        }
+        // t[0..j, j] = -tau_j * T[0..j, 0..j] * V[:, 0..j]^T v_j
+        let mut w = vec![0.0; j];
+        for c in 0..j {
+            // dot of V[:, c] (unit at row c) with v_j (unit at row j).
+            let mut dot = if j < rows { v[(j, c)] } else { 0.0 }; // V[j, c] * v_j[j] (=1)
+            for r in j + 1..rows {
+                dot += v[(r, c)] * v[(r, j)];
+            }
+            w[c] = dot;
+        }
+        for r in 0..j {
+            let mut acc = 0.0;
+            for c in r..j {
+                acc += t[(r, c)] * w[c];
+            }
+            t[(r, j)] = -tau[j] * acc;
+        }
+    }
+    t
+}
+
+/// Blocked QR: factor `a` (m x n, m >= n) in place with block size `b`;
+/// trailing updates go through the co-design engine.
+pub fn qr_blocked(a0: &MatrixF64, block: usize, engine: &mut GemmEngine) -> QrFactors {
+    let (m, n) = (a0.rows(), a0.cols());
+    assert!(m >= n, "qr_blocked expects m >= n");
+    let mut a = a0.clone();
+    let mut tau = vec![0.0; n];
+    let b = block.max(1);
+    let mut k = 0;
+    while k < n {
+        let bb = b.min(n - k);
+        let rows = m - k;
+        // Panel factorization.
+        {
+            let mut panel = a.sub_mut(k, k, rows, bb);
+            geqr2(&mut panel, &mut tau[k..k + bb]);
+        }
+        // Trailing update: A2 := (I - V T V^T)^T A2 = A2 - V T^T (V^T A2).
+        if k + bb < n {
+            let cols = n - k - bb;
+            // V: rows x bb unit-lower-trapezoid from the factored panel.
+            let v = MatrixF64::from_fn(rows, bb, |i, j| {
+                if i == j {
+                    1.0
+                } else if i > j {
+                    a[(k + i, k + j)]
+                } else {
+                    0.0
+                }
+            });
+            let t = larft(&v, &tau[k..k + bb]);
+            let a2 = a.sub(k, k + bb, rows, cols).to_owned_matrix();
+            // W = V^T A2  (bb x cols): skinny-k GEMM, k-dim = rows.
+            let vt = v.transposed();
+            let mut w = MatrixF64::zeros(bb, cols);
+            engine.gemm(1.0, vt.view(), a2.view(), 0.0, &mut w.view_mut());
+            // W := T^T W (small triangular multiply).
+            let tt = t.transposed();
+            let mut tw = MatrixF64::zeros(bb, cols);
+            engine.gemm(1.0, tt.view(), w.view(), 0.0, &mut tw.view_mut());
+            // A2 := A2 - V W: the paper's skinny-k trailing update.
+            let mut a2m = a.sub_mut(k, k + bb, rows, cols);
+            engine.gemm(-1.0, v.view(), tw.view(), 1.0, &mut a2m);
+        }
+        k += bb;
+    }
+    QrFactors { qr: a, tau, block: b }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::host_xeon;
+    use crate::gemm::ConfigMode;
+    use crate::util::Pcg64;
+
+    fn engine() -> GemmEngine {
+        GemmEngine::new(host_xeon(), ConfigMode::Refined)
+    }
+
+    #[test]
+    fn qr_reconstructs_a() {
+        let mut rng = Pcg64::seed(80);
+        for (m, n, b) in [(16, 16, 4), (40, 24, 8), (33, 17, 5), (24, 24, 24)] {
+            let a0 = MatrixF64::random(m, n, &mut rng);
+            let f = qr_blocked(&a0, b, &mut engine());
+            let recon = f.reconstruction_error(&a0);
+            let ortho = f.orthogonality_error();
+            assert!(recon < 1e-10, "m={m} n={n} b={b}: |A-QR| = {recon}");
+            assert!(ortho < 1e-10, "m={m} n={n} b={b}: |QtQ-I| = {ortho}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_unblocked() {
+        let mut rng = Pcg64::seed(81);
+        let a0 = MatrixF64::random(30, 18, &mut rng);
+        let blocked = qr_blocked(&a0, 6, &mut engine());
+        let mut unb = a0.clone();
+        let mut tau = vec![0.0; 18];
+        geqr2(&mut unb.view_mut(), &mut tau);
+        assert!(blocked.qr.max_abs_diff(&unb) < 1e-9, "factors differ");
+        for (a, b) in blocked.tau.iter().zip(&tau) {
+            assert!((a - b).abs() < 1e-10, "tau differs");
+        }
+    }
+
+    #[test]
+    fn r_diagonal_nonzero_for_full_rank() {
+        let mut rng = Pcg64::seed(82);
+        let a0 = MatrixF64::random(20, 12, &mut rng);
+        let f = qr_blocked(&a0, 4, &mut engine());
+        for j in 0..12 {
+            assert!(f.qr[(j, j)].abs() > 1e-8, "R[{j},{j}] suspiciously small");
+        }
+    }
+
+    #[test]
+    fn tall_skinny_panel_only() {
+        // n <= b: single panel, no trailing update.
+        let mut rng = Pcg64::seed(83);
+        let a0 = MatrixF64::random(50, 8, &mut rng);
+        let f = qr_blocked(&a0, 32, &mut engine());
+        assert!(f.reconstruction_error(&a0) < 1e-11);
+    }
+}

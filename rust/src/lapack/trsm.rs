@@ -1,0 +1,152 @@
+//! Triangular solves (TSOLVE). Two cases are needed by the blocked
+//! factorizations:
+//!
+//! - `trsm_left_lower_unit`: `B := L^{-1} B` with L unit lower triangular
+//!   (the LU trailing-update solve `U12 = L11^{-1} A12` of paper §2.1);
+//! - `trsm_right_upper`: `B := B U^{-1}` with U upper triangular,
+//!   transposed-right form used by blocked Cholesky.
+//!
+//! Both are forward/back substitutions over the small `b x b` triangle;
+//! the flop volume is `O(b^2 n)`, a lower-order term next to the GEMM, so
+//! a cache-friendly loop order (column-major AXPY) is sufficient here.
+
+use crate::util::matrix::{MatView, MatViewMut};
+
+/// `B := Lower_unit(L)^{-1} * B`, where `l` is `q x q` (only its strictly
+/// lower part is referenced; unit diagonal assumed) and `b` is `q x n`.
+pub fn trsm_left_lower_unit(l: MatView<'_>, b: &mut MatViewMut<'_>) {
+    let q = l.rows;
+    assert_eq!(l.cols, q, "L must be square");
+    assert_eq!(b.rows, q, "B row mismatch");
+    let n = b.cols;
+    // Forward substitution, one column of B at a time; inner loop is a
+    // column-major AXPY over L's column j.
+    for c in 0..n {
+        let bcol = c * b.ld;
+        for j in 0..q {
+            let xj = b.data[bcol + j];
+            if xj == 0.0 {
+                continue;
+            }
+            let lcol = j * l.ld;
+            for i in j + 1..q {
+                b.data[bcol + i] -= l.data[lcol + i] * xj;
+            }
+        }
+    }
+}
+
+/// `B := B * Upper(U)^{-1}`, where `u` is `q x q` (upper triangle
+/// referenced, non-unit diagonal) and `b` is `m x q`.
+pub fn trsm_right_upper(u: MatView<'_>, b: &mut MatViewMut<'_>) {
+    let q = u.rows;
+    assert_eq!(u.cols, q, "U must be square");
+    assert_eq!(b.cols, q, "B col mismatch");
+    let m = b.rows;
+    for j in 0..q {
+        // B(:, j) = (B(:, j) - sum_{t<j} B(:, t) U(t, j)) / U(j, j)
+        let ucol = j * u.ld;
+        for t in 0..j {
+            let utj = u.data[ucol + t];
+            if utj == 0.0 {
+                continue;
+            }
+            let (bt, bj) = (t * b.ld, j * b.ld);
+            for i in 0..m {
+                b.data[bj + i] -= b.data[bt + i] * utj;
+            }
+        }
+        let ujj = u.data[ucol + j];
+        assert!(ujj != 0.0, "singular U in trsm_right_upper");
+        let inv = 1.0 / ujj;
+        let bj = j * b.ld;
+        for i in 0..m {
+            b.data[bj + i] *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::gemm_reference;
+    use crate::util::{MatrixF64, Pcg64};
+
+    fn unit_lower(q: usize, rng: &mut Pcg64) -> MatrixF64 {
+        MatrixF64::from_fn(q, q, |i, j| {
+            if i == j {
+                1.0
+            } else if i > j {
+                rng.next_f64() - 0.5
+            } else {
+                0.0
+            }
+        })
+    }
+
+    fn upper(q: usize, rng: &mut Pcg64) -> MatrixF64 {
+        MatrixF64::from_fn(q, q, |i, j| {
+            if i < j {
+                rng.next_f64() - 0.5
+            } else if i == j {
+                1.0 + rng.next_f64() // well away from zero
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn left_lower_unit_solves() {
+        let mut rng = Pcg64::seed(21);
+        let q = 16;
+        let l = unit_lower(q, &mut rng);
+        let x_true = MatrixF64::random(q, 9, &mut rng);
+        // B = L * X; solve must recover X.
+        let mut b = MatrixF64::zeros(q, 9);
+        gemm_reference(1.0, l.view(), x_true.view(), 0.0, &mut b.view_mut());
+        trsm_left_lower_unit(l.view(), &mut b.view_mut());
+        assert!(b.max_abs_diff(&x_true) < 1e-10);
+    }
+
+    #[test]
+    fn left_lower_ignores_upper_and_diagonal_of_l() {
+        let mut rng = Pcg64::seed(22);
+        let q = 8;
+        let mut l = unit_lower(q, &mut rng);
+        let x_true = MatrixF64::random(q, 3, &mut rng);
+        let mut b = MatrixF64::zeros(q, 3);
+        gemm_reference(1.0, l.view(), x_true.view(), 0.0, &mut b.view_mut());
+        // Poison the upper triangle + diagonal: result must not change.
+        for j in 0..q {
+            for i in 0..=j {
+                l[(i, j)] = f64::NAN;
+            }
+        }
+        trsm_left_lower_unit(l.view(), &mut b.view_mut());
+        assert!(b.max_abs_diff(&x_true) < 1e-10);
+    }
+
+    #[test]
+    fn right_upper_solves() {
+        let mut rng = Pcg64::seed(23);
+        let q = 12;
+        let u = upper(q, &mut rng);
+        let x_true = MatrixF64::random(7, q, &mut rng);
+        let mut b = MatrixF64::zeros(7, q);
+        gemm_reference(1.0, x_true.view(), u.view(), 0.0, &mut b.view_mut());
+        trsm_right_upper(u.view(), &mut b.view_mut());
+        assert!(b.max_abs_diff(&x_true) < 1e-9);
+    }
+
+    #[test]
+    fn trivial_sizes() {
+        let l = MatrixF64::identity(1);
+        let mut b = MatrixF64::from_row_major(1, 1, &[5.0]);
+        trsm_left_lower_unit(l.view(), &mut b.view_mut());
+        assert_eq!(b[(0, 0)], 5.0);
+        // Zero-width B.
+        let mut b0 = MatrixF64::zeros(1, 0);
+        trsm_left_lower_unit(l.view(), &mut b0.view_mut());
+    }
+}

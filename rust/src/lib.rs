@@ -1,0 +1,51 @@
+//! # dla-codesign
+//!
+//! A reproduction of *"Co-Design of the Dense Linear Algebra Software Stack
+//! for Multicore Processors"* (CS.DC 2023).
+//!
+//! The crate implements the whole stack the paper describes:
+//!
+//! - [`arch`] — architecture descriptions (cache geometry, SIMD, register
+//!   files) with presets for the paper's two platforms (NVIDIA Carmel,
+//!   AMD EPYC 7282) plus the local host.
+//! - [`model`] — the analytical machinery: the micro-kernel
+//!   register-pressure/flops-per-memop model, the original Low-et-al. CCP
+//!   model, the paper's **refined dimension-aware model**, occupancy
+//!   calculators, and the runtime [`model::selector`] that performs the
+//!   paper's co-design selection per GEMM call.
+//! - [`gemm`] — a native blocked GEMM engine (GotoBLAS 5-loop structure,
+//!   packing, a family of micro-kernels — portable const-generic and
+//!   AVX2+FMA — and G3/G4 multithreading).
+//! - [`lapack`] — blocked LU with partial pivoting (plus TRSM, unblocked
+//!   panel factorization, row swaps and a blocked Cholesky extension) built
+//!   on top of [`gemm`], exactly as the paper's Figure 2 algorithm.
+//! - [`cachesim`] + [`trace`] — a trace-driven set-associative cache
+//!   hierarchy simulator and a GEMM/LU memory-trace generator; together
+//!   they substitute for the paper's PMU hardware counters.
+//! - [`perfmodel`] — an analytical performance model (single-core and
+//!   multicore G3/G4) that turns simulated miss counts into GFLOPS curves.
+//! - [`runtime`] — a PJRT runtime that loads the AOT-compiled JAX/Pallas
+//!   artifacts (HLO text) and executes them from Rust.
+//! - [`coordinator`] — the serving layer: a request loop with a workspace
+//!   pool and per-call dynamic (model-driven) configuration.
+//! - [`harness`] — regeneration code for every table and figure in the
+//!   paper's evaluation section.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod arch;
+pub mod bench;
+pub mod cachesim;
+pub mod coordinator;
+pub mod gemm;
+pub mod harness;
+pub mod lapack;
+pub mod model;
+pub mod perfmodel;
+pub mod runtime;
+pub mod testutil;
+pub mod trace;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

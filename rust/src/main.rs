@@ -1,0 +1,154 @@
+//! `dla` — the launcher for the co-design DLA stack.
+//!
+//! Subcommands regenerate every table and figure of the paper, inspect
+//! the analytical model, run the cache simulator, or exercise the
+//! serving layer. See `dla help`.
+
+use dla_codesign::arch::{preset_by_name, PRESET_NAMES};
+use dla_codesign::harness::{self, fig12::Panel, HarnessOpts};
+use dla_codesign::model::{refined_ccp, select, AnalyticScorer, GemmDims, MicroKernel};
+use dla_codesign::util::cli::Args;
+
+const USAGE: &str = r#"dla — co-design of the dense linear algebra stack (paper reproduction)
+
+USAGE: dla <command> [options]
+
+COMMANDS
+  tables              Regenerate Table 1, Table 2 and Figure 6 (left)
+  fig6                Figure 6: BLIS occupancy + GFLOPS vs k
+  fig9                Figure 9: GEMM variants on Carmel (model) + host (measured)
+  fig10 [--parallel]  Figure 10: LU vs b on Carmel (seq / 8-core G4)
+  fig11 [--hitratio]  Figure 11: GEMM on EPYC + simulated L2 hit ratio
+  fig12 [--panel P]   Figure 12: LU on EPYC; P = seq | g3 | g4 (default all)
+  all                 Every experiment above, in paper order
+  model               Show CCP selections for --arch/--m/--n/--k [--mk MRxNR]
+  select              Run the dynamic selector and print the ranked family
+  arch [--arch NAME]  Print an architecture description
+
+OPTIONS
+  --arch NAME         carmel | epyc7282 | host | tpu-vmem   (default carmel)
+  --mn N              GEMM sweep m = n for measured curves  (default 768)
+  --lu-s N            LU order for measured curves          (default 1024)
+  --full              Paper-scale sizes (mn=2000, lu-s=4096)
+  --smoke             Tiny sizes for CI smoke runs
+  --no-measured       Skip wall-clock (host) curves
+  --no-modeled        Skip model (Carmel/EPYC) curves
+"#;
+
+fn opts_from(args: &Args) -> HarnessOpts {
+    let mut o = if args.flag("full") {
+        HarnessOpts::full()
+    } else if args.flag("smoke") {
+        HarnessOpts::smoke()
+    } else {
+        HarnessOpts::default()
+    };
+    o.gemm_mn = args.get_usize("mn", o.gemm_mn);
+    o.lu_s = args.get_usize("lu-s", o.lu_s);
+    if args.flag("no-measured") {
+        o.measured = false;
+    }
+    if args.flag("no-modeled") {
+        o.modeled = false;
+    }
+    o
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let opts = opts_from(&args);
+    match cmd {
+        "tables" => harness::tables::run(),
+        "fig6" => harness::fig6::run(&opts),
+        "fig9" => harness::fig9::run(&opts),
+        "fig10" => harness::fig10::run(&opts, args.flag("parallel")),
+        "fig11" => harness::fig11::run(&opts, true),
+        "fig12" => match args.get_str("panel", "all") {
+            "seq" => harness::fig12::run(&opts, Panel::Sequential),
+            "g3" => harness::fig12::run(&opts, Panel::ParallelG3),
+            "g4" => harness::fig12::run(&opts, Panel::ParallelG4),
+            _ => {
+                harness::fig12::run(&opts, Panel::Sequential);
+                harness::fig12::run(&opts, Panel::ParallelG3);
+                harness::fig12::run(&opts, Panel::ParallelG4);
+            }
+        },
+        "all" => {
+            harness::tables::run();
+            harness::fig6::run(&opts);
+            harness::fig9::run(&opts);
+            harness::fig10::run(&opts, false);
+            harness::fig10::run(&opts, true);
+            harness::fig11::run(&opts, true);
+            harness::fig12::run(&opts, Panel::Sequential);
+            harness::fig12::run(&opts, Panel::ParallelG3);
+            harness::fig12::run(&opts, Panel::ParallelG4);
+        }
+        "model" => {
+            let arch = preset_by_name(args.get_str("arch", "carmel")).expect("unknown arch");
+            let dims = GemmDims::new(
+                args.get_usize("m", 2000),
+                args.get_usize("n", 2000),
+                args.get_usize("k", 128),
+            );
+            let mk_str = args.get_str("mk", "6x8");
+            let (mr, nr) = mk_str.split_once('x').expect("--mk like 6x8");
+            let mk = MicroKernel::new(mr.parse().unwrap(), nr.parse().unwrap());
+            let orig = dla_codesign::model::original_ccp(&arch, mk);
+            let refd = refined_ccp(&arch, mk, dims);
+            println!("arch: {}", arch.name);
+            println!("GEMM {dims}, micro-kernel MK{mk_str}");
+            println!("  original model : {orig}");
+            println!("  refined model  : {refd}");
+        }
+        "select" => {
+            let arch = preset_by_name(args.get_str("arch", "carmel")).expect("unknown arch");
+            let dims = GemmDims::new(
+                args.get_usize("m", 2000),
+                args.get_usize("n", 2000),
+                args.get_usize("k", 128),
+            );
+            let sel = select(&arch, dims, &AnalyticScorer);
+            println!("arch: {} | GEMM {dims}", arch.name);
+            println!("chosen: {} (est {:.3} ms)\n", sel.config, sel.est_time_s * 1e3);
+            println!("ranked candidates:");
+            for (cfg, t) in sel.ranked.iter().take(10) {
+                println!("  {:<40} {:>9.3} ms", cfg.to_string(), t * 1e3);
+            }
+        }
+        "arch" => {
+            let name = args.get_str("arch", "carmel");
+            match preset_by_name(name) {
+                Some(a) => {
+                    println!("{}", a.name);
+                    println!(
+                        "  cores: {} | {:.2} GHz | peak {:.1} GFLOPS/core",
+                        a.cores,
+                        a.freq_ghz,
+                        a.peak_gflops_core()
+                    );
+                    println!("  vector: {} regs x {} bits", a.regs.vector_regs, a.regs.vector_bits);
+                    for (i, l) in a.levels.iter().enumerate() {
+                        println!(
+                            "  L{}: {:>8.0} KiB, {:>2}-way, {}B lines, {} sets, shared by {}",
+                            i + 1,
+                            l.size_kib(),
+                            l.ways,
+                            l.line_bytes,
+                            l.sets(),
+                            l.shared_by
+                        );
+                    }
+                }
+                None => println!("unknown arch {name:?}; presets: {}", PRESET_NAMES.join(", ")),
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! The original analytical CCP model of Low et al. (TOMS 2016), as
+//! summarized in paper §3.2–§3.3.
+//!
+//! Per cache level, the `W` ways of each set are allocated: one line per
+//! set is reserved for the output micro-tile `C`, and the remaining
+//! `W - 1` are split between the two input operands proportionally to
+//! their footprint-per-set ratio. The fill-level parameters follow:
+//!
+//! - **L1** hosts the `kc x nr` micro-panel `Br` while `mr x kc`
+//!   micro-panels of `Ac` stream through: split by `nr : mr`, then
+//!   `kc* = C_Ar * S1 * line / (mr * 8)`.
+//! - **L2** hosts the `mc x kc` packed buffer `Ac` while `kc x nr`
+//!   micro-panels of `Bc` stream: split by `nr : kc`, then
+//!   `mc* = C_Ac * S2 * line / (kc * 8)`.
+//! - **L3** hosts the `kc x nc` packed buffer `Bc` while `mc x kc` blocks
+//!   of `A` stream: split by `kc : mc`, then
+//!   `nc* = C_Bc * S3 * line / (kc * 8)`.
+//!
+//! `mc`/`nc` are rounded down to multiples of [`CCP_GRANULE`] — this
+//! reproduces every CCP row published in the paper's Tables 1–2 (e.g.
+//! `mc = 1424` at `kc = 160`, `nc = 480` at `kc = 341` on Carmel, and
+//! `(768, 2000, 64)`/`(192, 2000, 256)` on the EPYC).
+
+use crate::arch::{Arch, CacheLevel};
+use crate::model::{Ccp, MicroKernel};
+use crate::util::round_down;
+
+/// Granule that published CCPs are rounded down to (elements).
+pub const CCP_GRANULE: usize = 16;
+
+/// Way allocation of one cache level: lines per set for C, A and B.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WayAlloc {
+    pub c: usize,
+    pub a: usize,
+    pub b: usize,
+}
+
+impl WayAlloc {
+    pub fn total(&self) -> usize {
+        self.c + self.a + self.b
+    }
+}
+
+/// Split `w - 1` ways between A and B proportionally to `a_weight :
+/// b_weight`, reserving one way for C and at least one way for each
+/// operand. B receives `ceil((w-1) * b_weight / (a_weight + b_weight))`.
+fn split_ways_ceil_b(w: usize, a_weight: f64, b_weight: f64) -> WayAlloc {
+    assert!(w >= 3, "need at least 3 ways to hold C, A and B");
+    let avail = w - 1;
+    let b = ((avail as f64) * b_weight / (a_weight + b_weight)).ceil() as usize;
+    let b = b.clamp(1, avail - 1);
+    WayAlloc { c: 1, a: avail - b, b }
+}
+
+/// As above but rounding B's share to nearest (used at L3; reproduces the
+/// paper's published `nc` values).
+fn split_ways_round_b(w: usize, a_weight: f64, b_weight: f64) -> WayAlloc {
+    assert!(w >= 3, "need at least 3 ways to hold C, A and B");
+    let avail = w - 1;
+    let b = ((avail as f64) * b_weight / (a_weight + b_weight)).round() as usize;
+    let b = b.clamp(1, avail - 1);
+    WayAlloc { c: 1, a: avail - b, b }
+}
+
+/// L1 way allocation for a micro-kernel: split by `mr : nr`
+/// (paper §3.2: MK6x8 on Carmel -> 1 line C, 1 line A, 2 lines B).
+pub fn l1_allocation(l1: &CacheLevel, mk: MicroKernel) -> WayAlloc {
+    split_ways_ceil_b(l1.ways, mk.mr as f64, mk.nr as f64)
+}
+
+/// Optimal `kc*`: largest kc such that the `mr x kc` A micro-panel fits
+/// its L1 ways AND the `kc x nr` B micro-panel fits its L1 ways.
+pub fn kc_star(l1: &CacheLevel, mk: MicroKernel) -> usize {
+    let alloc = l1_allocation(l1, mk);
+    let per_way_bytes = l1.sets() * l1.line_bytes;
+    let kc_a = alloc.a * per_way_bytes / (mk.mr * 8);
+    let kc_b = alloc.b * per_way_bytes / (mk.nr * 8);
+    kc_a.min(kc_b).max(1)
+}
+
+/// L2 way allocation given the effective `kc`: split by `kc : nr`
+/// (paper §3.2: ratio `kc/nr = 240/8 = 30` -> 14 lines for A on Carmel).
+pub fn l2_allocation(l2: &CacheLevel, mk: MicroKernel, kc: usize) -> WayAlloc {
+    split_ways_ceil_b(l2.ways, kc as f64, mk.nr as f64)
+}
+
+/// Optimal `mc` for a given `kc` (exact, before granule rounding).
+pub fn mc_exact(l2: &CacheLevel, mk: MicroKernel, kc: usize) -> f64 {
+    let alloc = l2_allocation(l2, mk, kc);
+    (alloc.a * l2.sets() * l2.line_bytes) as f64 / (kc * 8) as f64
+}
+
+/// L3 way allocation given effective `kc` and (exact) `mc`: split by
+/// `mc : kc` — `Bc`'s per-set footprint scales with `kc`, the streaming
+/// `Ac` block's with `mc`.
+pub fn l3_allocation(l3: &CacheLevel, kc: usize, mc_exact: f64) -> WayAlloc {
+    split_ways_round_b(l3.ways, mc_exact, kc as f64)
+}
+
+/// Optimal `nc` for given `kc`/`mc` (exact, before granule rounding).
+pub fn nc_exact(l3: &CacheLevel, kc: usize, mc: f64) -> f64 {
+    let alloc = l3_allocation(l3, kc, mc);
+    (alloc.b * l3.sets() * l3.line_bytes) as f64 / (kc * 8) as f64
+}
+
+/// The **original** (shape-independent) model: compute `(mc*, nc*, kc*)`
+/// from the architecture alone, with `kc` fixed at its L1 optimum.
+///
+/// Paper §3.3 check (Carmel, MK6x8): `(672, 480, 341)`.
+pub fn original_ccp(arch: &Arch, mk: MicroKernel) -> Ccp {
+    let kc = kc_star(arch.l1(), mk);
+    let mc_x = mc_exact(arch.l2(), mk, kc);
+    let mc = round_down(mc_x as usize, CCP_GRANULE).max(mk.mr);
+    let nc = match arch.l3() {
+        Some(l3) => round_down(nc_exact(l3, kc, mc_x) as usize, CCP_GRANULE).max(mk.nr),
+        // No L3: stage B panels straight from memory; pick a large nc.
+        None => round_down(8192, CCP_GRANULE),
+    };
+    Ccp { mc, nc, kc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{carmel, epyc7282};
+
+    #[test]
+    fn carmel_l1_allocation_matches_paper() {
+        // §3.2: "one line of each cache set should be dedicated to C,
+        // while the remaining lines should be distributed between the
+        // entries of B and A proportionally to nr/mr = 8/6": 1 A, 2 B.
+        let a = l1_allocation(carmel().l1(), MicroKernel::new(6, 8));
+        assert_eq!(a, WayAlloc { c: 1, a: 1, b: 2 });
+        // -> "up to 32 KB (50%) of the L1 to Br".
+        assert_eq!(a.b * carmel().l1().way_bytes(), 32 * 1024);
+    }
+
+    #[test]
+    fn carmel_l2_allocation_matches_paper() {
+        // §3.2: ratio kc/nr = 240/8 = 30 -> "14 lines per set to A,
+        // yielding a maximum usage of 1.75 MB (87.5%) of the L2".
+        let a = l2_allocation(carmel().l2(), MicroKernel::new(6, 8), 240);
+        assert_eq!(a, WayAlloc { c: 1, a: 14, b: 1 });
+        assert_eq!(a.a * carmel().l2().way_bytes(), 1792 * 1024);
+    }
+
+    #[test]
+    fn carmel_original_model_matches_paper() {
+        // §3.3 / Table 1 row k=2000: (mc, nc, kc) = (672, 480, 341).
+        let ccp = original_ccp(&carmel(), MicroKernel::new(6, 8));
+        assert_eq!(ccp.kc, 341);
+        assert_eq!(ccp.mc, 672);
+        assert_eq!(ccp.nc, 480);
+    }
+
+    #[test]
+    fn epyc_kc_star() {
+        // §4.1: the refined model picks kc = 256 for MK8x6 when k >= 256.
+        assert_eq!(kc_star(epyc7282().l1(), MicroKernel::new(8, 6)), 256);
+        assert_eq!(kc_star(epyc7282().l1(), MicroKernel::new(6, 8)), 256);
+    }
+
+    #[test]
+    fn way_alloc_invariants() {
+        for arch in [carmel(), epyc7282()] {
+            for mk in crate::model::microkernel::candidate_family(&arch.regs) {
+                let a1 = l1_allocation(arch.l1(), mk);
+                assert_eq!(a1.total(), arch.l1().ways);
+                assert!(a1.a >= 1 && a1.b >= 1);
+                for kc in [32, 64, 341, 512] {
+                    let a2 = l2_allocation(arch.l2(), mk, kc);
+                    assert_eq!(a2.total(), arch.l2().ways);
+                    assert!(a2.a >= 1 && a2.b >= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kc_star_fits_l1_by_construction() {
+        for arch in [carmel(), epyc7282()] {
+            for mk in crate::model::microkernel::candidate_family(&arch.regs) {
+                let kc = kc_star(arch.l1(), mk);
+                let alloc = l1_allocation(arch.l1(), mk);
+                let way = arch.l1().way_bytes();
+                assert!(mk.mr * kc * 8 <= alloc.a * way, "{mk} A micro-panel overflows");
+                assert!(kc * mk.nr * 8 <= alloc.b * way, "{mk} B micro-panel overflows");
+            }
+        }
+    }
+}

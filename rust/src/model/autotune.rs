@@ -1,0 +1,126 @@
+//! Empirical CCP autotuner — the "costly optimization search" the
+//! paper's analytical model replaces (§3.3). Provided as library code so
+//! the ablation bench and the CLI can quantify both sides of the
+//! trade-off: search cost vs configuration quality.
+
+use crate::gemm::microkernel::MicroKernelImpl;
+use crate::gemm::{gemm_blocked, Workspace};
+use crate::model::ccp::GemmConfig;
+use crate::model::{Ccp, GemmDims};
+use crate::util::timer::measure;
+use crate::util::{MatrixF64, Pcg64};
+
+/// Search space description.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub mc: Vec<usize>,
+    pub nc: Vec<usize>,
+    pub kc: Vec<usize>,
+}
+
+impl SearchSpace {
+    /// A small default grid around powers of two (what hand-tuners try).
+    pub fn default_grid(dims: GemmDims) -> Self {
+        let caps = |vals: &[usize], max: usize| -> Vec<usize> {
+            let mut v: Vec<usize> = vals.iter().copied().filter(|&x| x <= 2 * max).collect();
+            if v.is_empty() {
+                v.push(max.max(1));
+            }
+            v
+        };
+        SearchSpace {
+            mc: caps(&[48, 96, 192, 384, 768, 1536, 3072], dims.m),
+            nc: caps(&[96, 192, 384, 768, 1536, 3072], dims.n),
+            kc: caps(&[32, 64, 128, 256, 512], dims.k),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.mc.len() * self.nc.len() * self.kc.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Result of an autotuning run.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub best: GemmConfig,
+    pub best_gflops: f64,
+    pub configs_tried: usize,
+    pub search_seconds: f64,
+    /// (config, gflops) for every point, best first.
+    pub all: Vec<(Ccp, f64)>,
+}
+
+/// Exhaustively time the grid for one micro-kernel implementation and
+/// return the best configuration. `probe_secs` bounds per-point cost.
+pub fn autotune(
+    kernel: &MicroKernelImpl,
+    dims: GemmDims,
+    space: &SearchSpace,
+    probe_secs: f64,
+) -> TuneResult {
+    let sw = crate::util::Stopwatch::start();
+    let mut rng = Pcg64::seed(0xA0707);
+    let a = MatrixF64::random(dims.m, dims.k, &mut rng);
+    let b = MatrixF64::random(dims.k, dims.n, &mut rng);
+    let mut c = MatrixF64::zeros(dims.m, dims.n);
+    let mut ws = Workspace::new();
+    let mut all = Vec::new();
+    for &mc in &space.mc {
+        for &nc in &space.nc {
+            for &kc in &space.kc {
+                let ccp = Ccp::new(mc, nc, kc).clamp_to(dims);
+                let cfg = GemmConfig { mk: kernel.spec, ccp };
+                let m = measure(1, probe_secs, || {
+                    gemm_blocked(&cfg, kernel, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut(), &mut ws);
+                });
+                all.push((ccp, m.gflops_best(dims.flops())));
+            }
+        }
+    }
+    all.sort_by(|x, y| y.1.total_cmp(&x.1));
+    let (best_ccp, best_gflops) = all[0];
+    TuneResult {
+        best: GemmConfig { mk: kernel.spec, ccp: best_ccp },
+        best_gflops,
+        configs_tried: all.len(),
+        search_seconds: sw.elapsed_secs(),
+        all,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::microkernel::for_shape;
+    use crate::model::MicroKernel;
+
+    #[test]
+    fn grid_respects_dims() {
+        let s = SearchSpace::default_grid(GemmDims::new(100, 100, 40));
+        assert!(!s.is_empty());
+        assert!(s.mc.iter().all(|&m| m <= 200));
+        assert!(s.kc.iter().all(|&k| k <= 80));
+    }
+
+    #[test]
+    fn autotune_small_problem_finds_reasonable_config() {
+        let kernel = for_shape(MicroKernel::new(8, 6)).unwrap();
+        let dims = GemmDims::new(64, 64, 32);
+        let space = SearchSpace { mc: vec![16, 64], nc: vec![24, 64], kc: vec![16, 32] };
+        let res = autotune(&kernel, dims, &space, 0.0);
+        assert_eq!(res.configs_tried, 8);
+        assert!(res.best_gflops > 0.0);
+        assert!(res.search_seconds >= 0.0);
+        // Ranked order.
+        for w in res.all.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        // Best must be a clamped member of the grid.
+        assert!(res.best.ccp.mc <= 64 && res.best.ccp.kc <= 32);
+    }
+}

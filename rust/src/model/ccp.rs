@@ -1,0 +1,136 @@
+//! Cache configuration parameters (CCPs) and the static BLIS presets the
+//! paper uses as its baseline.
+
+use super::MicroKernel;
+use std::fmt;
+
+/// GEMM problem dimensions: `C(m x n) += A(m x k) * B(k x n)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GemmDims {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GemmDims {
+    pub const fn new(m: usize, n: usize, k: usize) -> Self {
+        Self { m, n, k }
+    }
+
+    /// Flop count of the multiply-accumulate (2mnk).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+}
+
+impl fmt::Display for GemmDims {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}", self.m, self.n, self.k)
+    }
+}
+
+/// The cache configuration parameters: strides of loops G1/G3/G2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Ccp {
+    pub mc: usize,
+    pub nc: usize,
+    pub kc: usize,
+}
+
+impl Ccp {
+    pub const fn new(mc: usize, nc: usize, kc: usize) -> Self {
+        Self { mc, nc, kc }
+    }
+
+    /// Effective CCPs for a concrete problem: each parameter is clamped by
+    /// the matching dimension (the `min(k, kc^B)` remark of §3.1).
+    pub fn clamp_to(&self, dims: GemmDims) -> Ccp {
+        Ccp {
+            mc: self.mc.min(dims.m).max(1),
+            nc: self.nc.min(dims.n).max(1),
+            kc: self.kc.min(dims.k).max(1),
+        }
+    }
+
+    /// Bytes of packed-buffer workspace required (`Ac` + `Bc`, FP64).
+    pub fn workspace_bytes(&self, mk: MicroKernel) -> usize {
+        // Packed buffers are padded up to full micro-panels.
+        let mc_pad = self.mc.div_ceil(mk.mr) * mk.mr;
+        let nc_pad = self.nc.div_ceil(mk.nr) * mk.nr;
+        8 * (mc_pad * self.kc + self.kc * nc_pad)
+    }
+}
+
+impl fmt::Display for Ccp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(mc={}, nc={}, kc={})", self.mc, self.nc, self.kc)
+    }
+}
+
+/// A fully specified GEMM configuration: which micro-kernel and which CCPs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GemmConfig {
+    pub mk: MicroKernel,
+    pub ccp: Ccp,
+}
+
+impl fmt::Display for GemmConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}", self.mk, self.ccp)
+    }
+}
+
+/// The static CCPs + stock micro-kernel that BLIS hard-codes for each of
+/// the paper's platforms (§3.1 and §4.1). These are the baseline ("R1").
+pub fn blis_static(arch_name: &str) -> Option<GemmConfig> {
+    let lower = arch_name.to_ascii_lowercase();
+    if lower.contains("carmel") || lower.contains("arm") {
+        // §3.1: MK6x8, (mc, nc, kc) = (120, 3072, 240).
+        Some(GemmConfig { mk: MicroKernel::new(6, 8), ccp: Ccp::new(120, 3072, 240) })
+    } else if lower.contains("epyc") || lower.contains("amd") {
+        // §4.1: MK8x6 (column-major view of BLIS's 6x8), (72, 2040, 512).
+        Some(GemmConfig { mk: MicroKernel::new(8, 6), ccp: Ccp::new(72, 2040, 512) })
+    } else if lower.contains("xeon") || lower.contains("intel") || lower.contains("host") {
+        // BLIS haswell defaults (same generation as the host AVX2 Xeon):
+        // MK8x6 with (mc, nc, kc) = (72, 4080, 256).
+        Some(GemmConfig { mk: MicroKernel::new(8, 6), ccp: Ccp::new(72, 4080, 256) })
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamps_follow_the_paper() {
+        // §3.1: nc^B = 3072 but for n = 2000 the actual nc is 2000;
+        // kc^B = 240 so k = 128 gives kc = 128.
+        let blis = blis_static("NVIDIA Carmel").unwrap();
+        let eff = blis.ccp.clamp_to(GemmDims::new(2000, 2000, 128));
+        assert_eq!(eff, Ccp::new(120, 2000, 128));
+        let eff2 = blis.ccp.clamp_to(GemmDims::new(2000, 2000, 2000));
+        assert_eq!(eff2, Ccp::new(120, 2000, 240));
+    }
+
+    #[test]
+    fn presets_exist_for_paper_platforms() {
+        assert_eq!(blis_static("NVIDIA Carmel (ARMv8.2)").unwrap().ccp, Ccp::new(120, 3072, 240));
+        assert_eq!(blis_static("AMD EPYC 7282").unwrap().ccp, Ccp::new(72, 2040, 512));
+        assert!(blis_static("Unknown Arch").is_none());
+    }
+
+    #[test]
+    fn workspace_padding() {
+        let ccp = Ccp::new(100, 100, 50);
+        let mk = MicroKernel::new(6, 8);
+        // mc padded to 102 (17 panels of 6), nc padded to 104 (13 of 8).
+        assert_eq!(ccp.workspace_bytes(mk), 8 * (102 * 50 + 50 * 104));
+    }
+
+    #[test]
+    fn flops_formula() {
+        assert_eq!(GemmDims::new(10, 20, 30).flops(), 12000.0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Micro-kernel shapes and their analytical properties (§2.3, §3.4).
+//!
+//! A micro-kernel `MK_{mr x nr}` performs `kc` rank-1 updates on an
+//! `mr x nr` micro-tile of C held in vector registers. Its feasibility is
+//! bounded by the register file, and its efficiency by the flops/memops
+//! ratio `2 mr nr kc / (2 mr nr + mr kc + kc nr)`.
+
+use crate::arch::RegisterFile;
+use std::fmt;
+
+/// A micro-kernel shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MicroKernel {
+    pub mr: usize,
+    pub nr: usize,
+}
+
+impl MicroKernel {
+    pub const fn new(mr: usize, nr: usize) -> Self {
+        Self { mr, nr }
+    }
+
+    /// Vector registers required with the "broadcast-from-lane" coding
+    /// style used in the paper's Figure 7 (`vfmaq_laneq_f64` on NEON,
+    /// `vfmadd + permute` on AVX2): C is register-resident as
+    /// `ceil(mr/lanes) * nr` accumulators, one column of Ar takes
+    /// `ceil(mr/lanes)` registers and one row of Br takes
+    /// `ceil(nr/lanes)` registers.
+    ///
+    /// Paper §3.4 check (NEON, lanes = 2): MK6x8 = 24 + 3 + 4 = 31,
+    /// MK12x4 = 24 + 6 + 2 = 32.
+    pub fn vector_regs_needed(&self, lanes: usize) -> usize {
+        let cm = self.mr.div_ceil(lanes);
+        let cn = self.nr.div_ceil(lanes);
+        cm * self.nr + cm + cn
+    }
+
+    /// True when the kernel fits the register file without spilling C.
+    pub fn fits(&self, regs: &RegisterFile) -> bool {
+        self.vector_regs_needed(regs.f64_lanes()) <= regs.vector_regs
+    }
+
+    /// True when at least one dimension is a multiple of the SIMD lane
+    /// count (paper §3.4's restriction for candidate micro-kernels).
+    pub fn simd_aligned(&self, lanes: usize) -> bool {
+        self.mr % lanes == 0 || self.nr % lanes == 0
+    }
+
+    /// Flops performed per micro-kernel invocation.
+    pub fn flops(&self, kc: usize) -> f64 {
+        2.0 * (self.mr * self.nr * kc) as f64
+    }
+
+    /// Memory operations (element loads/stores): C read+written once,
+    /// Ar and Br streamed once.
+    pub fn memops(&self, kc: usize) -> f64 {
+        (2 * self.mr * self.nr + self.mr * kc + kc * self.nr) as f64
+    }
+
+    /// The flops/memops ratio of §2.3. Paper check at kc = 128:
+    /// MK6x8 = 6.5, MK4x10 = 5.5, MK4x12 = 5.7.
+    pub fn flops_per_memop(&self, kc: usize) -> f64 {
+        self.flops(kc) / self.memops(kc)
+    }
+
+    /// "Squarishness" in [0, 1]: 1.0 for mr == nr.
+    pub fn squareness(&self) -> f64 {
+        let (a, b) = (self.mr.min(self.nr) as f64, self.mr.max(self.nr) as f64);
+        a / b
+    }
+}
+
+impl fmt::Display for MicroKernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "MK{}x{}", self.mr, self.nr)
+    }
+}
+
+/// The candidate micro-kernel family studied by the paper (§3.4, §4):
+/// shapes with at least one SIMD-aligned dimension that avoid spilling.
+pub fn candidate_family(regs: &RegisterFile) -> Vec<MicroKernel> {
+    let lanes = regs.f64_lanes();
+    let mut out = Vec::new();
+    for mr in 1..=16 {
+        for nr in 1..=16 {
+            let mk = MicroKernel::new(mr, nr);
+            // Skip degenerate shapes: both dims >= 2 keeps the rank-1
+            // update meaningful, and tiny tiles (< 16 flops/iter) are
+            // never competitive.
+            if mr * nr < 16 {
+                continue;
+            }
+            if mk.simd_aligned(lanes) && mk.fits(regs) {
+                out.push(mk);
+            }
+        }
+    }
+    // Largest compute tiles first, squarest first among equals.
+    out.sort_by(|a, b| {
+        (b.mr * b.nr)
+            .cmp(&(a.mr * a.nr))
+            .then(b.squareness().total_cmp(&a.squareness()))
+            .then(a.mr.cmp(&b.mr))
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{carmel, epyc7282};
+
+    #[test]
+    fn neon_register_counts_match_paper() {
+        // §3.4: "MK6x8 employs 24 vector registers to store Cr, 3 for the
+        // column of Ar, and 4 for the row of Br, for a total of 31.
+        // MK12x4 employs 24 for Cr, 6 for Ar, and 2 for Br: 32."
+        assert_eq!(MicroKernel::new(6, 8).vector_regs_needed(2), 31);
+        assert_eq!(MicroKernel::new(12, 4).vector_regs_needed(2), 32);
+        assert_eq!(MicroKernel::new(4, 12).vector_regs_needed(2), 32);
+        let neon = carmel().regs;
+        assert!(MicroKernel::new(6, 8).fits(&neon));
+        assert!(MicroKernel::new(12, 4).fits(&neon));
+        // 8x10 would need 40+4+5 > 32.
+        assert!(!MicroKernel::new(8, 10).fits(&neon));
+    }
+
+    #[test]
+    fn avx2_fits_blis_kernel() {
+        let avx2 = epyc7282().regs;
+        // BLIS's 8x6 for AVX2: 2*6 + 2 + 2 = 16 regs, exactly the file.
+        assert_eq!(MicroKernel::new(8, 6).vector_regs_needed(4), 16);
+        assert!(MicroKernel::new(8, 6).fits(&avx2));
+        assert!(!MicroKernel::new(8, 8).fits(&avx2));
+    }
+
+    #[test]
+    fn flops_per_memop_matches_paper() {
+        // §3.4: kc = 128 -> MK6x8: 6.5, MK4x10: 5.5, MK4x12: 5.7.
+        assert!((MicroKernel::new(6, 8).flops_per_memop(128) - 6.5).abs() < 0.05);
+        assert!((MicroKernel::new(4, 10).flops_per_memop(128) - 5.5).abs() < 0.05);
+        assert!((MicroKernel::new(4, 12).flops_per_memop(128) - 5.7).abs() < 0.05);
+    }
+
+    #[test]
+    fn family_contains_papers_kernels() {
+        let fam = candidate_family(&carmel().regs);
+        for mk in [(6, 8), (12, 4), (4, 12), (10, 4), (4, 10), (8, 6)] {
+            assert!(
+                fam.contains(&MicroKernel::new(mk.0, mk.1)),
+                "family missing MK{}x{}",
+                mk.0,
+                mk.1
+            );
+        }
+        // Family must respect the register file.
+        for mk in &fam {
+            assert!(mk.fits(&carmel().regs));
+        }
+    }
+
+    #[test]
+    fn squareness_bounds() {
+        assert_eq!(MicroKernel::new(8, 8).squareness(), 1.0);
+        assert!(MicroKernel::new(12, 4).squareness() < MicroKernel::new(6, 8).squareness());
+    }
+}

@@ -1,0 +1,29 @@
+//! Analytical machinery of the paper.
+//!
+//! - [`microkernel`] — micro-kernel shapes, register-pressure feasibility
+//!   and the flops/memops ratio of §2.3.
+//! - [`ccp`] — cache-configuration-parameter types and the BLIS static
+//!   presets the paper compares against.
+//! - [`analytical`] — the original Low-et-al. (TOMS 2016) model: way
+//!   allocations per cache level and the shape-independent optimal CCPs.
+//! - [`refined`] — the paper's contribution (§3.3): the dimension-aware
+//!   refinement `kc = min(k, kc*)` propagated into the `mc`/`nc` choices.
+//! - [`occupancy`] — theoretical L1/L2 occupancy used by Tables 1–2 and
+//!   Figure 6 (left).
+//! - [`selector`] — the runtime co-design selection of (micro-kernel,
+//!   CCPs) per GEMM call (§5's "no longer monolithic" message).
+
+pub mod analytical;
+pub mod autotune;
+pub mod ccp;
+pub mod microkernel;
+pub mod occupancy;
+pub mod refined;
+pub mod selector;
+
+pub use analytical::{l1_allocation, l2_allocation, l3_allocation, original_ccp, WayAlloc};
+pub use ccp::{blis_static, Ccp, GemmDims};
+pub use microkernel::MicroKernel;
+pub use occupancy::{occupancy_row, OccupancyRow};
+pub use refined::refined_ccp;
+pub use selector::{select, AnalyticScorer, Scorer, Selection};

@@ -1,0 +1,192 @@
+//! Theoretical cache-occupancy analysis (Tables 1–2, Figure 6 left).
+//!
+//! For a GEMM with effective CCPs, the resident blocks are the `kc x nr`
+//! micro-panel `Br` in L1 and the `mc x kc` packed buffer `Ac` in L2.
+//! "Max" is the share of each level the model's way allocation permits.
+
+use crate::arch::Arch;
+use crate::model::analytical::{l1_allocation, l2_allocation};
+use crate::model::{Ccp, GemmDims, MicroKernel};
+
+/// One row of the paper's occupancy tables.
+#[derive(Clone, Copy, Debug)]
+pub struct OccupancyRow {
+    pub k: usize,
+    pub mc: usize,
+    pub nc: usize,
+    pub kc: usize,
+    pub mr: usize,
+    pub nr: usize,
+    /// `Br` footprint in KiB and as a fraction of L1.
+    pub l1_kib: f64,
+    pub l1_pct: f64,
+    /// Model maximum share of L1 for `Br` (None for static-CCP rows,
+    /// rendered "-" like the paper).
+    pub l1_max_pct: Option<f64>,
+    /// `Ac` footprint in KiB and as a fraction of L2.
+    pub l2_kib: f64,
+    pub l2_pct: f64,
+    pub l2_max_pct: Option<f64>,
+}
+
+/// Compute an occupancy row for a *clamped* CCP choice. `with_max` adds
+/// the model's way-allocation maxima (the paper reports these only for
+/// MOD rows).
+pub fn occupancy_row(
+    arch: &Arch,
+    mk: MicroKernel,
+    dims: GemmDims,
+    ccp_effective: Ccp,
+    with_max: bool,
+) -> OccupancyRow {
+    let l1 = arch.l1();
+    let l2 = arch.l2();
+    let br_bytes = (ccp_effective.kc * mk.nr * 8) as f64;
+    let ac_bytes = (ccp_effective.mc * ccp_effective.kc * 8) as f64;
+    let (l1_max, l2_max) = if with_max {
+        let a1 = l1_allocation(l1, mk);
+        let a2 = l2_allocation(l2, mk, ccp_effective.kc);
+        (
+            Some(100.0 * a1.b as f64 / l1.ways as f64),
+            Some(100.0 * a2.a as f64 / l2.ways as f64),
+        )
+    } else {
+        (None, None)
+    };
+    OccupancyRow {
+        k: dims.k,
+        mc: ccp_effective.mc,
+        nc: ccp_effective.nc,
+        kc: ccp_effective.kc,
+        mr: mk.mr,
+        nr: mk.nr,
+        l1_kib: br_bytes / 1024.0,
+        l1_pct: 100.0 * br_bytes / l1.size_bytes as f64,
+        l1_max_pct: l1_max,
+        l2_kib: ac_bytes / 1024.0,
+        l2_pct: 100.0 * ac_bytes / l2.size_bytes as f64,
+        l2_max_pct: l2_max,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::carmel;
+    use crate::model::{blis_static, refined_ccp};
+
+    const MK68: MicroKernel = MicroKernel::new(6, 8);
+
+    fn blis_row(k: usize) -> OccupancyRow {
+        let dims = GemmDims::new(2000, 2000, k);
+        let cfg = blis_static("carmel").unwrap();
+        occupancy_row(&carmel(), cfg.mk, dims, cfg.ccp.clamp_to(dims), false)
+    }
+
+    fn mod_row(k: usize) -> OccupancyRow {
+        let dims = GemmDims::new(2000, 2000, k);
+        let ccp = refined_ccp(&carmel(), MK68, dims);
+        occupancy_row(&carmel(), MK68, dims, ccp, true)
+    }
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 0.06
+    }
+
+    #[test]
+    fn table1_blis_rows_match_paper() {
+        // (k, L1 KB, L1 %, L2 KB, L2 %) from Table 1's BLIS rows.
+        let expect = [
+            (64, 4.0, 6.2, 60.0, 2.9),
+            (96, 6.0, 9.4, 90.0, 4.4),
+            (128, 8.0, 12.5, 120.0, 5.9),
+            (160, 10.0, 15.6, 150.0, 7.3),
+            (192, 12.0, 18.8, 180.0, 8.8),
+            (224, 14.0, 21.9, 210.0, 10.3),
+            (256, 15.0, 23.4, 225.0, 11.0),
+            (2000, 15.0, 23.4, 225.0, 11.0),
+        ];
+        for (k, l1kb, l1p, l2kb, l2p) in expect {
+            let r = blis_row(k);
+            assert!(close(r.l1_kib, l1kb), "k={k} L1 KiB {} != {l1kb}", r.l1_kib);
+            assert!(close(r.l1_pct, l1p), "k={k} L1 % {} != {l1p}", r.l1_pct);
+            assert!(close(r.l2_kib, l2kb), "k={k} L2 KiB {} != {l2kb}", r.l2_kib);
+            assert!(close(r.l2_pct, l2p), "k={k} L2 % {} != {l2p}", r.l2_pct);
+            assert!(r.l1_max_pct.is_none());
+        }
+    }
+
+    #[test]
+    fn table1_mod_rows_match_paper() {
+        // (k, L1 KB, L1 %, L1 max, L2 KB, L2 %, L2 max) from MOD rows.
+        let expect = [
+            (64, 4.0, 6.2, 50.0, 1000.0, 48.8, 81.2),
+            (96, 6.0, 9.4, 50.0, 1500.0, 73.2, 81.2),
+            (128, 8.0, 12.5, 50.0, 1792.0, 87.5, 87.5),
+            (160, 10.0, 15.6, 50.0, 1780.0, 86.9, 87.5),
+            (192, 12.0, 18.8, 50.0, 1776.0, 86.7, 87.5),
+            (224, 14.0, 21.9, 50.0, 1792.0, 87.5, 87.5),
+            (256, 16.0, 25.0, 50.0, 1792.0, 87.5, 87.5),
+            (2000, 21.3, 33.3, 50.0, 1790.2, 87.4, 87.5),
+        ];
+        for (k, l1kb, l1p, l1max, l2kb, l2p, l2max) in expect {
+            let r = mod_row(k);
+            assert!(close(r.l1_kib, l1kb), "k={k} L1 KiB {} != {l1kb}", r.l1_kib);
+            assert!(close(r.l1_pct, l1p), "k={k} L1 % {} != {l1p}", r.l1_pct);
+            assert!(close(r.l1_max_pct.unwrap(), l1max), "k={k} L1 max");
+            assert!(close(r.l2_kib, l2kb), "k={k} L2 KiB {} != {l2kb}", r.l2_kib);
+            assert!(close(r.l2_pct, l2p), "k={k} L2 % {} != {l2p}", r.l2_pct);
+            assert!(close(r.l2_max_pct.unwrap(), l2max), "k={k} L2 max {} != {l2max}", r.l2_max_pct.unwrap());
+        }
+    }
+
+    #[test]
+    fn table2_rows_match_paper() {
+        // Table 2: (mr, nr, k) -> (mc, L1 KB, L1 %, L1 max, L2 KB, L2 %, L2 max).
+        let cc = carmel();
+        let cases = [
+            (4, 10, 64, 2000, 5.0, 7.8, 50.0, 1000.0, 48.8, 75.0),
+            (4, 12, 64, 2000, 6.0, 9.4, 50.0, 1000.0, 48.8, 75.0),
+            (10, 4, 64, 2000, 2.0, 3.1, 25.0, 1000.0, 48.8, 87.5),
+            (12, 4, 64, 2000, 2.0, 3.1, 25.0, 1000.0, 48.8, 87.5),
+            (4, 10, 128, 1664, 10.0, 15.6, 50.0, 1664.0, 81.2, 81.2),
+            (4, 12, 128, 1664, 12.0, 18.8, 50.0, 1664.0, 81.2, 81.2),
+            (10, 4, 128, 1792, 4.0, 6.2, 25.0, 1792.0, 87.5, 87.5),
+            (12, 4, 128, 1792, 4.0, 6.2, 25.0, 1792.0, 87.5, 87.5),
+            (4, 10, 192, 1184, 15.0, 23.4, 50.0, 1776.0, 86.7, 87.5),
+            (4, 12, 192, 1184, 18.0, 28.1, 50.0, 1776.0, 86.7, 87.5),
+            (10, 4, 192, 1184, 6.0, 9.4, 25.0, 1776.0, 86.7, 87.5),
+            (12, 4, 192, 1184, 6.0, 9.4, 25.0, 1776.0, 86.7, 87.5),
+            (4, 10, 256, 896, 20.0, 31.2, 50.0, 1792.0, 87.5, 87.5),
+            (4, 12, 256, 896, 24.0, 37.5, 50.0, 1792.0, 87.5, 87.5),
+            (10, 4, 256, 896, 8.0, 12.5, 25.0, 1792.0, 87.5, 87.5),
+            (12, 4, 256, 896, 8.0, 12.5, 25.0, 1792.0, 87.5, 87.5),
+        ];
+        for (mr, nr, k, mc, l1kb, l1p, l1max, l2kb, l2p, l2max) in cases {
+            let mk = MicroKernel::new(mr, nr);
+            let dims = GemmDims::new(2000, 2000, k);
+            let ccp = refined_ccp(&cc, mk, dims);
+            assert_eq!(ccp.mc, mc, "MK{mr}x{nr} k={k} mc");
+            assert_eq!(ccp.kc, k, "MK{mr}x{nr} k={k} kc");
+            let r = occupancy_row(&cc, mk, dims, ccp, true);
+            assert!(close(r.l1_kib, l1kb), "MK{mr}x{nr} k={k} L1 KiB {}", r.l1_kib);
+            assert!(close(r.l1_pct, l1p), "MK{mr}x{nr} k={k} L1 %");
+            assert!(close(r.l1_max_pct.unwrap(), l1max), "MK{mr}x{nr} k={k} L1 max");
+            assert!(close(r.l2_kib, l2kb), "MK{mr}x{nr} k={k} L2 KiB {}", r.l2_kib);
+            assert!(close(r.l2_pct, l2p), "MK{mr}x{nr} k={k} L2 %");
+            assert!(close(r.l2_max_pct.unwrap(), l2max), "MK{mr}x{nr} k={k} L2 max {}", r.l2_max_pct.unwrap());
+        }
+    }
+
+    #[test]
+    fn occupancy_never_exceeds_cache() {
+        for k in [1, 17, 64, 341, 4096] {
+            let r = mod_row(k);
+            assert!(r.l1_pct <= 100.0 && r.l2_pct <= 100.0);
+            if let (Some(m1), Some(m2)) = (r.l1_max_pct, r.l2_max_pct) {
+                assert!(r.l1_pct <= m1 + 0.1, "k={k}: L1 occupancy above model max");
+                assert!(r.l2_pct <= m2 + 0.1, "k={k}: L2 occupancy above model max");
+            }
+        }
+    }
+}

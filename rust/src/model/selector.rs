@@ -1,0 +1,175 @@
+//! Runtime co-design selection (the paper's §5 message): per GEMM call,
+//! pick both the micro-kernel and the CCPs from the architecture *and* the
+//! operand shape, instead of a static per-ISA choice.
+//!
+//! The selector enumerates the feasible micro-kernel family, derives the
+//! refined CCPs for each, and ranks candidates with a pluggable
+//! [`Scorer`]. The default [`AnalyticScorer`] estimates the per-flop
+//! memory cost the way the paper reasons about it: the L2 residency of
+//! `Ac` governs the stream cost of the inner loops, and the micro-kernel's
+//! flops/memops ratio governs register traffic.
+
+use crate::arch::Arch;
+use crate::model::analytical::{l1_allocation, l2_allocation};
+use crate::model::ccp::GemmConfig;
+use crate::model::microkernel::candidate_family;
+use crate::model::{refined_ccp, Ccp, GemmDims, MicroKernel};
+
+/// A scored configuration choice.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    pub config: GemmConfig,
+    /// Estimated execution time in seconds (lower is better).
+    pub est_time_s: f64,
+    /// All candidates considered, best first (for introspection/ablation).
+    pub ranked: Vec<(GemmConfig, f64)>,
+}
+
+/// Scores a candidate configuration; returns estimated seconds.
+pub trait Scorer {
+    fn score(&self, arch: &Arch, dims: GemmDims, mk: MicroKernel, ccp: Ccp) -> f64;
+}
+
+/// Closed-form cost estimate (no simulation):
+///
+/// * compute term — `2mnk / peak`, de-rated by micro-kernel efficiency
+///   (loop overhead amortized over `mr*nr`, edge-tile waste for
+///   non-dividing shapes);
+/// * memory term — per-element stream costs of the packed buffers with
+///   effective latencies chosen by which level each operand resides in
+///   (the paper's L1/L2 residency argument), plus C update traffic
+///   amplified by `k/kc` passes.
+pub struct AnalyticScorer;
+
+impl Scorer for AnalyticScorer {
+    fn score(&self, arch: &Arch, dims: GemmDims, mk: MicroKernel, ccp: Ccp) -> f64 {
+        let GemmDims { m, n, k } = dims;
+        let (mf, nf, kf) = (m as f64, n as f64, k as f64);
+        let flops = 2.0 * mf * nf * kf;
+
+        // --- Compute term -------------------------------------------------
+        // Edge waste: padded tile work for the fringe of each dimension.
+        let m_pad = (m.div_ceil(mk.mr) * mk.mr) as f64 / mf.max(1.0);
+        let n_pad = (n.div_ceil(mk.nr) * mk.nr) as f64 / nf.max(1.0);
+        // Per-iteration loop overhead shrinks with tile area; model as a
+        // fixed issue cost amortized over mr*nr FMA lanes.
+        let lanes = arch.regs.f64_lanes() as f64;
+        let fma_per_iter = (mk.mr as f64 / lanes).ceil() * mk.nr as f64;
+        let issue_overhead = 1.0 + 2.0 / fma_per_iter;
+        let compute_s = flops / (arch.peak_gflops_core() * 1e9) * m_pad * n_pad * issue_overhead;
+
+        // --- Memory term --------------------------------------------------
+        let l1 = arch.l1();
+        let l2 = arch.l2();
+        let cyc = |c: f64| c / (arch.freq_ghz * 1e9);
+        // Does Ac fit its allocated L2 ways? Fraction resident determines
+        // the blended latency of streaming A in the micro-kernel.
+        let a2 = l2_allocation(l2, mk, ccp.kc);
+        let ac_bytes = (ccp.mc * ccp.kc * 8) as f64;
+        let ac_cap = (a2.a * l2.way_bytes()) as f64;
+        let ac_resident = (ac_cap / ac_bytes).min(1.0);
+        let l3_lat = arch.l3().map(|l| l.latency_cycles).unwrap_or(arch.mem_latency_cycles);
+        // Elements of A are touched once per (n / nc) pass of loop G1.
+        let a_passes = (nf / ccp.nc as f64).max(1.0);
+        let a_lat = ac_resident * l2.latency_cycles + (1.0 - ac_resident) * l3_lat;
+        let line = arch.line_elems() as f64;
+        let a_cost = mf * kf * a_passes * cyc(a_lat) / line
+            // packing cost: one read from memory + one write, amortized
+            + mf * kf * cyc(l3_lat) / line;
+        // B micro-panels live in L1 if they fit their ways.
+        let a1 = l1_allocation(l1, mk);
+        let br_bytes = (ccp.kc * mk.nr * 8) as f64;
+        let br_resident = ((a1.b * l1.way_bytes()) as f64 / br_bytes).min(1.0);
+        let b_lat = br_resident * l1.latency_cycles + (1.0 - br_resident) * l2.latency_cycles;
+        // Each Bc element is re-read once per mc block of loop G3.
+        let b_passes = (mf / ccp.mc as f64).max(1.0);
+        let b_cost = kf * nf * b_passes * cyc(b_lat) / line + kf * nf * cyc(l3_lat) / line;
+        // C is read+written once per kc pass of loop G2.
+        let c_passes = (kf / ccp.kc as f64).max(1.0);
+        let c_cost = 2.0 * mf * nf * c_passes * cyc(l3_lat) / line;
+
+        // Memory cost overlaps with compute; the un-hidable share grows
+        // when flops/memop is low.
+        let overlap = (mk.flops_per_memop(ccp.kc) / 8.0).min(0.95);
+        compute_s + (1.0 - overlap) * (a_cost + b_cost + c_cost)
+    }
+}
+
+/// Run the co-design selection for one GEMM call.
+pub fn select(arch: &Arch, dims: GemmDims, scorer: &dyn Scorer) -> Selection {
+    select_from(arch, dims, scorer, &candidate_family(&arch.regs))
+}
+
+/// As [`select`] but over an explicit candidate family (used by the
+/// native engine, which only registers micro-kernels it has code for).
+pub fn select_from(
+    arch: &Arch,
+    dims: GemmDims,
+    scorer: &dyn Scorer,
+    family: &[MicroKernel],
+) -> Selection {
+    assert!(!family.is_empty(), "empty micro-kernel family");
+    let mut ranked: Vec<(GemmConfig, f64)> = family
+        .iter()
+        .map(|&mk| {
+            let ccp = refined_ccp(arch, mk, dims).clamp_to(dims);
+            let t = scorer.score(arch, dims, mk, ccp);
+            (GemmConfig { mk, ccp }, t)
+        })
+        .collect();
+    ranked.sort_by(|a, b| a.1.total_cmp(&b.1));
+    Selection { config: ranked[0].0, est_time_s: ranked[0].1, ranked }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{carmel, epyc7282};
+
+    #[test]
+    fn selection_is_feasible_and_clamped() {
+        let arch = carmel();
+        for k in [8, 64, 256, 2000] {
+            let dims = GemmDims::new(2000, 2000, k);
+            let sel = select(&arch, dims, &AnalyticScorer);
+            assert!(sel.config.mk.fits(&arch.regs));
+            assert!(sel.config.ccp.kc <= k);
+            assert!(sel.config.ccp.mc <= 2000 && sel.config.ccp.nc <= 2000);
+            assert!(sel.est_time_s > 0.0);
+            // Ranked list is sorted.
+            for w in sel.ranked.windows(2) {
+                assert!(w[0].1 <= w[1].1);
+            }
+        }
+    }
+
+    #[test]
+    fn skinny_k_changes_the_choice() {
+        // The whole point of the paper: the best configuration for a
+        // skinny-k GEMM differs from the best for a square one.
+        let arch = carmel();
+        let skinny = select(&arch, GemmDims::new(2000, 2000, 64), &AnalyticScorer);
+        let square = select(&arch, GemmDims::new(2000, 2000, 2000), &AnalyticScorer);
+        assert_ne!(
+            skinny.config.ccp, square.config.ccp,
+            "refined CCPs must differ between skinny and square k"
+        );
+        // Skinny k gets a larger mc (the L2-filling move).
+        assert!(skinny.config.ccp.mc > square.config.ccp.mc);
+    }
+
+    #[test]
+    fn select_from_respects_family() {
+        let arch = epyc7282();
+        let fam = [MicroKernel::new(8, 6)];
+        let sel = select_from(&arch, GemmDims::new(500, 500, 64), &AnalyticScorer, &fam);
+        assert_eq!(sel.config.mk, MicroKernel::new(8, 6));
+        assert_eq!(sel.ranked.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty micro-kernel family")]
+    fn empty_family_panics() {
+        select_from(&carmel(), GemmDims::new(8, 8, 8), &AnalyticScorer, &[]);
+    }
+}

@@ -1,0 +1,93 @@
+//! Conversions between this crate's column-major [`MatrixF64`] and XLA
+//! literals (row-major, XLA's default rank-2 layout — matching the JAX
+//! arrays the artifacts were lowered from).
+
+use crate::util::MatrixF64;
+use anyhow::{ensure, Context, Result};
+
+/// Column-major matrix -> row-major f64 literal of shape `[rows, cols]`.
+pub fn matrix_to_literal(m: &MatrixF64) -> Result<xla::Literal> {
+    let (r, c) = (m.rows(), m.cols());
+    let mut row_major = Vec::with_capacity(r * c);
+    for i in 0..r {
+        for j in 0..c {
+            row_major.push(m[(i, j)]);
+        }
+    }
+    xla::Literal::vec1(&row_major)
+        .reshape(&[r as i64, c as i64])
+        .context("reshaping matrix literal")
+}
+
+/// Row-major f64 literal -> column-major matrix.
+pub fn literal_to_matrix(lit: &xla::Literal) -> Result<MatrixF64> {
+    let shape = lit.array_shape().context("literal has no array shape")?;
+    let dims = shape.dims();
+    ensure!(dims.len() == 2, "expected rank-2 literal, got rank {}", dims.len());
+    let (r, c) = (dims[0] as usize, dims[1] as usize);
+    let v = lit.to_vec::<f64>().context("reading f64 literal")?;
+    ensure!(v.len() == r * c, "literal size mismatch");
+    Ok(MatrixF64::from_row_major(r, c, &v))
+}
+
+/// i64 vector literal.
+pub fn vec_to_literal_i64(v: &[i64]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Read an i64 vector literal.
+pub fn literal_to_vec_i64(lit: &xla::Literal) -> Result<Vec<i64>> {
+    lit.to_vec::<i64>().context("reading i64 literal")
+}
+
+/// Scalar i64 literal (loop counters like the LU step index).
+pub fn scalar_i64(v: i64) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read a scalar boolean-ish literal (exported `ok` flags are PRED).
+pub fn literal_to_bool(lit: &xla::Literal) -> Result<bool> {
+    // PRED has no direct host type in the xla crate; convert to S32.
+    let as_i32 = lit.convert(xla::PrimitiveType::S32).context("converting pred literal")?;
+    let v = as_i32.get_first_element::<i32>().context("reading pred literal")?;
+    Ok(v != 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn matrix_roundtrip() {
+        let mut rng = Pcg64::seed(5);
+        let m = MatrixF64::random(7, 5, &mut rng);
+        let lit = matrix_to_literal(&m).unwrap();
+        let back = literal_to_matrix(&lit).unwrap();
+        assert_eq!(back.rows(), 7);
+        assert_eq!(back.cols(), 5);
+        assert!(m.max_abs_diff(&back) == 0.0);
+    }
+
+    #[test]
+    fn layout_is_row_major() {
+        // Element (0, 1) must be the second entry of the flat row-major
+        // buffer the literal sees.
+        let m = MatrixF64::from_row_major(2, 2, &[1., 2., 3., 4.]);
+        let lit = matrix_to_literal(&m).unwrap();
+        assert_eq!(lit.to_vec::<f64>().unwrap(), vec![1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn i64_roundtrip() {
+        let v = vec![3i64, 1, 4, 1, 5];
+        let lit = vec_to_literal_i64(&v);
+        assert_eq!(literal_to_vec_i64(&lit).unwrap(), v);
+    }
+
+    #[test]
+    fn rank_mismatch_rejected() {
+        let lit = xla::Literal::vec1(&[1.0f64, 2.0]);
+        assert!(literal_to_matrix(&lit).is_err());
+    }
+}

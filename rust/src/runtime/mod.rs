@@ -1,0 +1,73 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! by `python/compile/aot.py`) and executes them from Rust — the bridge
+//! between Layer 3 (this crate) and Layers 1/2 (JAX + Pallas).
+//!
+//! Python never runs at request time: the HLO text is parsed by XLA's
+//! text parser (`HloModuleProto::from_text_file`, which reassigns
+//! instruction ids — see /opt/xla-example/README.md for why text, not
+//! serialized protos), compiled once per artifact on the PJRT CPU
+//! client, and cached.
+
+pub mod convert;
+pub mod registry;
+
+pub use convert::{literal_to_matrix, matrix_to_literal};
+pub use registry::{Artifact, ArtifactKind, Registry};
+
+use anyhow::{Context, Result};
+
+/// A process-wide PJRT client handle.
+pub struct PjrtEngine {
+    pub client: xla::PjRtClient,
+}
+
+impl PjrtEngine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text file and compile it to an executable.
+    pub fn compile_hlo_text(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+/// Execute a compiled artifact on literals and un-tuple the result
+/// (aot.py lowers with `return_tuple=True`, so outputs are always a
+/// top-level tuple).
+pub fn execute_tupled(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(inputs)?[0][0]
+        .to_literal_sync()
+        .context("fetching result literal")?;
+    result.to_tuple().context("untupling result")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests need the PJRT client; they are exercised together with
+    // the artifact files in `rust/tests/e2e_artifacts.rs`. Here we only
+    // check client construction (cheap, no artifacts required).
+    #[test]
+    fn cpu_client_comes_up() {
+        let eng = PjrtEngine::cpu().expect("PJRT CPU client");
+        assert!(eng.platform().to_lowercase().contains("cpu") || !eng.platform().is_empty());
+    }
+}

@@ -1,0 +1,179 @@
+//! Artifact registry: parses `artifacts/manifest.tsv`, compiles every
+//! HLO-text artifact once, and serves executables by name or by
+//! (kind, params) query — the lookup the coordinator's dispatch uses.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::PjrtEngine;
+
+/// Artifact categories emitted by aot.py.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Gemm,
+    GemmUpdate,
+    LuStep,
+    LuFull,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "gemm" => Self::Gemm,
+            "gemm_update" => Self::GemmUpdate,
+            "lu_step" => Self::LuStep,
+            "lu_full" => Self::LuFull,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One compiled artifact.
+pub struct Artifact {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub params: BTreeMap<String, String>,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Integer parameter accessor (`m`, `n`, `k`, `s`, `b`).
+    pub fn param_usize(&self, key: &str) -> Result<usize> {
+        self.params
+            .get(key)
+            .with_context(|| format!("artifact {} missing param {key}", self.name))?
+            .parse()
+            .with_context(|| format!("artifact {} param {key} not an integer", self.name))
+    }
+
+    pub fn variant(&self) -> &str {
+        self.params.get("variant").map(|s| s.as_str()).unwrap_or("default")
+    }
+}
+
+/// The registry of all compiled artifacts.
+pub struct Registry {
+    pub engine: PjrtEngine,
+    artifacts: Vec<Artifact>,
+}
+
+impl Registry {
+    /// Load and compile everything listed in `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let engine = PjrtEngine::cpu()?;
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", manifest.display()))?;
+        let mut artifacts = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                bail!("malformed manifest line: {line:?}");
+            }
+            let (name, file, kind, params) = (cols[0], cols[1], cols[2], cols[3]);
+            let kind = ArtifactKind::parse(kind)?;
+            let mut map = BTreeMap::new();
+            for pair in params.split(';').filter(|p| !p.is_empty()) {
+                let (k, v) = pair
+                    .split_once('=')
+                    .with_context(|| format!("malformed param {pair:?} in {name}"))?;
+                map.insert(k.to_string(), v.to_string());
+            }
+            let exe = engine.compile_hlo_text(&dir.join(file))?;
+            artifacts.push(Artifact { name: name.to_string(), kind, params: map, exe });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest {} lists no artifacts", manifest.display());
+        }
+        Ok(Self { engine, artifacts })
+    }
+
+    /// Default artifact directory (repo-root `artifacts/`), honouring the
+    /// `DLA_ARTIFACTS` environment variable.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("DLA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts of a kind.
+    pub fn by_kind(&self, kind: ArtifactKind) -> Vec<&Artifact> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+
+    /// Find a GEMM artifact matching exact dimensions, preferring the
+    /// requested variant (the co-design dispatch: the selector names a
+    /// micro-kernel analogue, the registry serves a compiled tile).
+    pub fn find_gemm(&self, m: usize, n: usize, k: usize, prefer_variant: &str) -> Option<&Artifact> {
+        let matches: Vec<&Artifact> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Gemm
+                    && a.param_usize("m").ok() == Some(m)
+                    && a.param_usize("n").ok() == Some(n)
+                    && a.param_usize("k").ok() == Some(k)
+            })
+            .collect();
+        matches
+            .iter()
+            .find(|a| a.variant() == prefer_variant)
+            .copied()
+            .or_else(|| matches.first().copied())
+    }
+
+    /// Find the LU-step artifact for a given order/block.
+    pub fn find_lu_step(&self, s: usize, b: usize) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| {
+            a.kind == ArtifactKind::LuStep
+                && a.param_usize("s").ok() == Some(s)
+                && a.param_usize("b").ok() == Some(b)
+        })
+    }
+
+    pub fn find_lu_full(&self, s: usize, b: usize) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| {
+            a.kind == ArtifactKind::LuFull
+                && a.param_usize("s").ok() == Some(s)
+                && a.param_usize("b").ok() == Some(b)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(ArtifactKind::parse("gemm").unwrap(), ArtifactKind::Gemm);
+        assert_eq!(ArtifactKind::parse("lu_step").unwrap(), ArtifactKind::LuStep);
+        assert!(ArtifactKind::parse("bogus").is_err());
+    }
+
+    // Full registry loading requires artifact files; covered by
+    // rust/tests/e2e_artifacts.rs which runs after `make artifacts`.
+}

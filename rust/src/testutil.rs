@@ -1,0 +1,148 @@
+//! Minimal property-testing helper (proptest is unavailable offline).
+//!
+//! [`forall`] runs a property over generated cases with a deterministic
+//! (env-overridable) seed and, on failure, greedily shrinks via the
+//! user-provided `shrink` candidates before panicking with the smallest
+//! reproducer it found.
+
+use crate::util::Pcg64;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        let seed = std::env::var("DLA_PROPTEST_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xD1A_5EED);
+        let cases = std::env::var("DLA_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        Self { cases, seed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs. `prop` returns
+/// `Err(message)` to signal a violation.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cfg: PropConfig,
+    mut generate: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Pcg64::seed(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name} failed at case {case_idx} (seed {}):\n  input: {input:?}\n  {msg}\n  \
+                 rerun with DLA_PROPTEST_SEED={} to reproduce",
+                cfg.seed, cfg.seed
+            );
+        }
+    }
+}
+
+/// [`forall`] with shrinking: on failure, repeatedly tries the candidates
+/// from `shrink(input)` (smaller inputs first) while they still fail.
+pub fn forall_shrink<T: std::fmt::Debug + Clone>(
+    name: &str,
+    cfg: PropConfig,
+    mut generate: impl FnMut(&mut Pcg64) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Pcg64::seed(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let input = generate(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink loop.
+            let mut smallest = input.clone();
+            let mut msg = first_msg;
+            'outer: loop {
+                for cand in shrink(&smallest) {
+                    if let Err(m) = prop(&cand) {
+                        smallest = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property {name} failed at case {case_idx} (seed {}):\n  shrunk input: {smallest:?}\n  {msg}\n  \
+                 rerun with DLA_PROPTEST_SEED={} to reproduce",
+                cfg.seed, cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience generators.
+pub mod gen {
+    use crate::util::{MatrixF64, Pcg64};
+
+    /// Random dimension in [1, max].
+    pub fn dim(rng: &mut Pcg64, max: usize) -> usize {
+        rng.range(1, max + 1)
+    }
+
+    /// Random matrix with dims in [1, max_dim].
+    pub fn matrix(rng: &mut Pcg64, max_dim: usize) -> MatrixF64 {
+        let r = dim(rng, max_dim);
+        let c = dim(rng, max_dim);
+        MatrixF64::random(r, c, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall(
+            "count",
+            PropConfig { cases: 10, seed: 1 },
+            |rng| rng.range(0, 100),
+            |_| {
+                n += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property bad failed")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            "bad",
+            PropConfig { cases: 10, seed: 2 },
+            |rng| rng.range(0, 100),
+            |&x| if x < 1000 { Err(format!("x = {x}")) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_smaller_case() {
+        let result = std::panic::catch_unwind(|| {
+            forall_shrink(
+                "shrinkme",
+                PropConfig { cases: 5, seed: 3 },
+                |rng| rng.range(50, 100),
+                |&x| if x > 10 { vec![x / 2, x - 1] } else { vec![] },
+                |&x| if x >= 10 { Err("too big".into()) } else { Ok(()) },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink must reach the boundary value 10.
+        assert!(msg.contains("shrunk input: 10"), "got: {msg}");
+    }
+}

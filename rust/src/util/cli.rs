@@ -1,0 +1,110 @@
+//! A small hand-rolled CLI argument parser (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (first element must NOT be argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Self {
+        let mut args = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    args.options.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment, skipping argv[0].
+    pub fn from_env() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}"))).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}"))).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Comma-separated list of integers, e.g. `--k 64,96,128`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|t| t.trim().parse().unwrap_or_else(|_| panic!("--{name} expects a comma-separated integer list, got {v:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("fig9 --k 64,96 --arch=carmel --verbose --reps 5");
+        assert_eq!(a.positional, vec!["fig9"]);
+        assert_eq!(a.get_str("arch", "x"), "carmel");
+        assert_eq!(a.get_usize("reps", 0), 5);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_usize_list("k", &[]), vec![64, 96]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("cmd");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_f64("t", 1.5), 1.5);
+        assert!(!a.flag("x"));
+        assert_eq!(a.get_usize_list("k", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_positional() {
+        // `--verbose fig9`: "fig9" does not start with --, so it would be
+        // consumed as the value; callers put flags last or use `=`.
+        let a = parse("fig9 --dry-run");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.positional, vec!["fig9"]);
+    }
+}

@@ -1,0 +1,359 @@
+//! Column-major `f64` matrices.
+//!
+//! The whole DLA stack in this crate (packing, micro-kernels, LU) follows
+//! the BLAS/LAPACK convention: matrices are stored column-major with an
+//! explicit leading dimension, so sub-matrix views ("panels" in the paper's
+//! terminology) are cheap and map 1:1 onto the algorithm descriptions.
+
+use crate::util::rng::Pcg64;
+use std::fmt;
+
+/// An owned column-major `f64` matrix.
+#[derive(Clone, PartialEq)]
+pub struct MatrixF64 {
+    rows: usize,
+    cols: usize,
+    /// Leading dimension (stride between columns). `ld >= rows`.
+    ld: usize,
+    data: Vec<f64>,
+}
+
+impl MatrixF64 {
+    /// Zero-filled `rows x cols` matrix with a tight leading dimension.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, ld: rows.max(1), data: vec![0.0; rows.max(1) * cols] }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Matrix with entries drawn uniformly from `[-1, 1)`.
+    pub fn random(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m[(i, j)] = rng.next_f64() * 2.0 - 1.0;
+            }
+        }
+        m
+    }
+
+    /// A random diagonally-dominant matrix (safe for unpivoted demos and a
+    /// well-conditioned input for LU with partial pivoting).
+    pub fn random_diag_dominant(n: usize, rng: &mut Pcg64) -> Self {
+        let mut m = Self::random(n, n, rng);
+        for i in 0..n {
+            let row_sum: f64 = (0..n).map(|j| m[(i, j)].abs()).sum();
+            m[(i, i)] = row_sum + 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Build from a row-major slice (convenience for tests).
+    pub fn from_row_major(rows: usize, cols: usize, v: &[f64]) -> Self {
+        assert_eq!(v.len(), rows * cols);
+        Self::from_fn(rows, cols, |i, j| v[i * cols + j])
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn ld(&self) -> usize {
+        self.ld
+    }
+
+    /// Raw column-major storage.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn as_ptr(&self) -> *const f64 {
+        self.data.as_ptr()
+    }
+
+    #[inline]
+    pub fn as_mut_ptr(&mut self) -> *mut f64 {
+        self.data.as_mut_ptr()
+    }
+
+    /// Immutable view of the whole matrix.
+    pub fn view(&self) -> MatView<'_> {
+        MatView { rows: self.rows, cols: self.cols, ld: self.ld, data: &self.data }
+    }
+
+    /// Immutable view of the sub-matrix starting at `(i, j)` of size
+    /// `r x c`.
+    pub fn sub(&self, i: usize, j: usize, r: usize, c: usize) -> MatView<'_> {
+        assert!(i + r <= self.rows && j + c <= self.cols, "sub out of bounds");
+        MatView { rows: r, cols: c, ld: self.ld, data: &self.data[j * self.ld + i..] }
+    }
+
+    /// Mutable view of the whole matrix.
+    pub fn view_mut(&mut self) -> MatViewMut<'_> {
+        MatViewMut { rows: self.rows, cols: self.cols, ld: self.ld, data: &mut self.data }
+    }
+
+    /// Mutable view of the sub-matrix starting at `(i, j)` of size `r x c`.
+    pub fn sub_mut(&mut self, i: usize, j: usize, r: usize, c: usize) -> MatViewMut<'_> {
+        assert!(i + r <= self.rows && j + c <= self.cols, "sub_mut out of bounds");
+        let ld = self.ld;
+        MatViewMut { rows: r, cols: c, ld, data: &mut self.data[j * ld + i..] }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.view().fro_norm()
+    }
+
+    /// Max-abs (entrywise infinity) norm.
+    pub fn max_abs(&self) -> f64 {
+        self.view().max_abs()
+    }
+
+    /// `max |self - other|` over all entries.
+    pub fn max_abs_diff(&self, other: &MatrixF64) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut d: f64 = 0.0;
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                d = d.max((self[(i, j)] - other[(i, j)]).abs());
+            }
+        }
+        d
+    }
+
+    /// Transposed copy.
+    pub fn transposed(&self) -> MatrixF64 {
+        MatrixF64::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for MatrixF64 {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[j * self.ld + i]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for MatrixF64 {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[j * self.ld + i]
+    }
+}
+
+impl fmt::Debug for MatrixF64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "MatrixF64 {}x{} (ld={})", self.rows, self.cols, self.ld)?;
+        let rmax = self.rows.min(8);
+        let cmax = self.cols.min(8);
+        for i in 0..rmax {
+            for j in 0..cmax {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > cmax { "..." } else { "" })?;
+        }
+        if self.rows > rmax {
+            writeln!(f, "...")?;
+        }
+        Ok(())
+    }
+}
+
+/// Borrowed column-major view (`rows x cols`, stride `ld`).
+#[derive(Clone, Copy)]
+pub struct MatView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub ld: usize,
+    /// Backing slice; element `(i, j)` lives at `data[j * ld + i]`.
+    pub data: &'a [f64],
+}
+
+impl<'a> MatView<'a> {
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.ld + i]
+    }
+
+    /// Sub-view at `(i, j)` of size `r x c`.
+    pub fn sub(&self, i: usize, j: usize, r: usize, c: usize) -> MatView<'a> {
+        assert!(i + r <= self.rows && j + c <= self.cols, "sub out of bounds");
+        MatView { rows: r, cols: c, ld: self.ld, data: &self.data[j * self.ld + i..] }
+    }
+
+    pub fn to_owned_matrix(&self) -> MatrixF64 {
+        MatrixF64::from_fn(self.rows, self.cols, |i, j| self.at(i, j))
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        let mut s = 0.0;
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                let v = self.at(i, j);
+                s += v * v;
+            }
+        }
+        s.sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        let mut d: f64 = 0.0;
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                d = d.max(self.at(i, j).abs());
+            }
+        }
+        d
+    }
+}
+
+/// Mutable column-major view.
+pub struct MatViewMut<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub ld: usize,
+    pub data: &'a mut [f64],
+}
+
+impl<'a> MatViewMut<'a> {
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.ld + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.ld + i] = v;
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[j * self.ld + i]
+    }
+
+    /// Reborrow as an immutable view.
+    pub fn as_view(&self) -> MatView<'_> {
+        MatView { rows: self.rows, cols: self.cols, ld: self.ld, data: self.data }
+    }
+
+    /// Reborrow a mutable sub-view at `(i, j)` of size `r x c`.
+    pub fn sub_mut(&mut self, i: usize, j: usize, r: usize, c: usize) -> MatViewMut<'_> {
+        assert!(i + r <= self.rows && j + c <= self.cols, "sub_mut out of bounds");
+        let ld = self.ld;
+        MatViewMut { rows: r, cols: c, ld, data: &mut self.data[j * ld + i..] }
+    }
+
+    /// Split into two disjoint mutable column-block views:
+    /// `[0, jsplit)` and `[jsplit, cols)`.
+    pub fn split_cols_mut(&mut self, jsplit: usize) -> (MatViewMut<'_>, MatViewMut<'_>) {
+        assert!(jsplit <= self.cols);
+        let ld = self.ld;
+        let (left, right) = self.data.split_at_mut(jsplit * ld);
+        (
+            MatViewMut { rows: self.rows, cols: jsplit, ld, data: left },
+            MatViewMut { rows: self.rows, cols: self.cols - jsplit, ld, data: right },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_views() {
+        let mut m = MatrixF64::zeros(4, 3);
+        m[(2, 1)] = 7.5;
+        assert_eq!(m.view().at(2, 1), 7.5);
+        let v = m.sub(1, 1, 3, 2);
+        assert_eq!(v.at(1, 0), 7.5);
+        let mut vm = m.sub_mut(2, 0, 2, 3);
+        vm.set(0, 1, -1.0);
+        assert_eq!(m[(2, 1)], -1.0);
+    }
+
+    #[test]
+    fn from_row_major_layout() {
+        let m = MatrixF64::from_row_major(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(0, 2)], 3.0);
+        assert_eq!(m[(1, 0)], 4.0);
+        // Column-major storage: first column is (1, 4).
+        assert_eq!(&m.as_slice()[0..2], &[1.0, 4.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let m = MatrixF64::from_row_major(2, 2, &[3., 0., 0., 4.]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(m.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn diag_dominant_is_dominant() {
+        let mut rng = Pcg64::seed(42);
+        let m = MatrixF64::random_diag_dominant(16, &mut rng);
+        for i in 0..16 {
+            let off: f64 = (0..16).filter(|&j| j != i).map(|j| m[(i, j)].abs()).sum();
+            assert!(m[(i, i)].abs() > off);
+        }
+    }
+
+    #[test]
+    fn split_cols_disjoint() {
+        let mut m = MatrixF64::zeros(3, 4);
+        let mut vm = m.view_mut();
+        let (mut l, mut r) = vm.split_cols_mut(2);
+        l.set(0, 0, 1.0);
+        r.set(2, 1, 2.0);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(2, 3)], 2.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg64::seed(1);
+        let m = MatrixF64::random(5, 7, &mut rng);
+        assert_eq!(m.transposed().transposed(), m);
+    }
+}

@@ -1,0 +1,50 @@
+//! Foundation utilities: column-major matrices, RNG, timing, text tables,
+//! CLI parsing and small statistics helpers.
+
+pub mod cli;
+pub mod matrix;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use matrix::MatrixF64;
+pub use rng::Pcg64;
+pub use timer::Stopwatch;
+
+/// Round `x` up to the next multiple of `m` (`m > 0`).
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Round `x` down to the previous multiple of `m` (`m > 0`).
+#[inline]
+pub fn round_down(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    (x / m) * m
+}
+
+/// `ceil(a / b)` for positive integers.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounding_helpers() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_down(9, 8), 8);
+        assert_eq!(round_down(7, 8), 0);
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+    }
+}

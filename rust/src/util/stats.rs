@@ -1,0 +1,146 @@
+//! Small statistics helpers used by the coordinator metrics and the
+//! experiment harness.
+
+/// Streaming mean/min/max/count accumulator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Accumulator {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Self { count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &Accumulator) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Fixed-bucket latency histogram (log2 buckets over microseconds).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// bucket i counts latencies in [2^i, 2^(i+1)) microseconds.
+    buckets: Vec<u64>,
+    acc: Accumulator,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 40], acc: Accumulator::new() }
+    }
+
+    pub fn record_secs(&mut self, secs: f64) {
+        let us = (secs * 1e6).max(0.0);
+        self.acc.add(us);
+        let idx = if us < 1.0 { 0 } else { (us.log2().floor() as usize).min(self.buckets.len() - 1) };
+        self.buckets[idx] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.acc.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.acc.mean()
+    }
+
+    pub fn max_us(&self) -> f64 {
+        if self.acc.count == 0 {
+            0.0
+        } else {
+            self.acc.max
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of bucket).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// Geometric mean of a slice of positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_basics() {
+        let mut a = Accumulator::new();
+        for x in [1.0, 2.0, 3.0] {
+            a.add(x);
+        }
+        assert_eq!(a.count, 3);
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 3.0);
+        assert!((a.mean() - 2.0).abs() < 1e-12);
+        let mut b = Accumulator::new();
+        b.add(10.0);
+        a.merge(&b);
+        assert_eq!(a.count, 4);
+        assert_eq!(a.max, 10.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record_secs(i as f64 * 1e-6);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn geomean_of_equal_is_equal() {
+        assert!((geomean(&[4.0, 4.0, 4.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,177 @@
+//! Plain-text table rendering in the style of the paper's tables, plus a
+//! TSV writer for machine-readable results under `results/`.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Column alignment.
+#[derive(Clone, Copy, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A text table builder.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Set per-column alignment (defaults to right-aligned).
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: a row of displayable items.
+    pub fn row_disp(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], out: &mut String| {
+            out.push('|');
+            for i in 0..ncol {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.len();
+                match self.aligns[i] {
+                    Align::Left => {
+                        let _ = write!(out, " {}{} |", cell, " ".repeat(pad));
+                    }
+                    Align::Right => {
+                        let _ = write!(out, " {}{} |", " ".repeat(pad), cell);
+                    }
+                }
+            }
+            out.push('\n');
+        };
+        out.push_str(&sep);
+        out.push('\n');
+        fmt_row(&self.headers, &mut out);
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Write the table as TSV (headers + rows) to `path`, creating parent
+    /// directories as needed.
+    pub fn write_tsv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "# {}", self.title)?;
+        writeln!(f, "{}", self.headers.join("\t"))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join("\t"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Render a GFLOPS-vs-x series as a rough ASCII plot (the "figure" analogue
+/// for a terminal). `series` is a list of (label, points) with shared xs.
+pub fn ascii_plot(title: &str, xs: &[usize], series: &[(&str, Vec<f64>)], width: usize) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "-- {} --", title);
+    let ymax = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    for (label, ys) in series {
+        let _ = writeln!(out, "  {}", label);
+        for (x, y) in xs.iter().zip(ys) {
+            let n = ((y / ymax) * width as f64).round() as usize;
+            let _ = writeln!(out, "  {:>6} | {}{:>8.2}", x, "#".repeat(n), y);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["k", "GFLOPS"]);
+        t.row(&["64".into(), "3.10".into()]);
+        t.row(&["2000".into(), "10.25".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("|   64 |"));
+        assert!(r.contains("| 2000 |"));
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let p = std::env::temp_dir().join("dla_table_test.tsv");
+        t.write_tsv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("a\tb"));
+        assert!(s.contains("1\t2"));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

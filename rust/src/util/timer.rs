@@ -1,0 +1,120 @@
+//! Timing helpers: a stopwatch and a repetition-based measurement loop
+//! (the paper reports averages over many repetitions; we do the same and
+//! additionally keep min/median for robustness on a noisy shared host).
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Aggregated timing of repeated runs of one operation.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub reps: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub max_s: f64,
+}
+
+impl Measurement {
+    /// GFLOPS given the flop count of ONE repetition, using the mean time
+    /// (matching the paper's averaged reporting).
+    pub fn gflops(&self, flops: f64) -> f64 {
+        flops / self.mean_s / 1e9
+    }
+
+    /// GFLOPS using the minimum time (least-noise estimate).
+    pub fn gflops_best(&self, flops: f64) -> f64 {
+        flops / self.min_s / 1e9
+    }
+}
+
+/// Run `f` repeatedly until both `min_reps` runs and `min_time_s` seconds
+/// of accumulated work are reached, then aggregate.
+pub fn measure(min_reps: usize, min_time_s: f64, mut f: impl FnMut()) -> Measurement {
+    // One warm-up run (population of caches, page faults, lazy init).
+    f();
+    let mut times = Vec::new();
+    let total = Stopwatch::start();
+    loop {
+        let sw = Stopwatch::start();
+        f();
+        times.push(sw.elapsed_secs());
+        if times.len() >= min_reps && total.elapsed_secs() >= min_time_s {
+            break;
+        }
+        // Hard cap so a badly mis-sized workload cannot hang a bench run.
+        if times.len() >= 10_000 {
+            break;
+        }
+    }
+    summarize(&times)
+}
+
+/// Aggregate a set of per-repetition times (seconds).
+pub fn summarize(times: &[f64]) -> Measurement {
+    assert!(!times.is_empty());
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+    Measurement {
+        reps: sorted.len(),
+        mean_s: mean,
+        min_s: sorted[0],
+        median_s: sorted[sorted.len() / 2],
+        max_s: *sorted.last().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_basic() {
+        let m = summarize(&[3.0, 1.0, 2.0]);
+        assert_eq!(m.reps, 3);
+        assert_eq!(m.min_s, 1.0);
+        assert_eq!(m.max_s, 3.0);
+        assert_eq!(m.median_s, 2.0);
+        assert!((m.mean_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measure_runs_at_least_min_reps() {
+        let mut n = 0usize;
+        let m = measure(5, 0.0, || n += 1);
+        assert!(m.reps >= 5);
+        assert_eq!(n, m.reps + 1); // +1 warm-up
+    }
+
+    #[test]
+    fn gflops_math() {
+        let m = Measurement { reps: 1, mean_s: 0.5, min_s: 0.25, median_s: 0.5, max_s: 0.5 };
+        assert!((m.gflops(1e9) - 2.0).abs() < 1e-12);
+        assert!((m.gflops_best(1e9) - 4.0).abs() < 1e-12);
+    }
+}

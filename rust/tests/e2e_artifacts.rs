@@ -1,0 +1,156 @@
+//! Integration tests over the real AOT artifacts: the full three-layer
+//! path (Rust PJRT runtime -> XLA executable -> Pallas-lowered HLO).
+//!
+//! Requires `make artifacts` to have produced `artifacts/manifest.tsv`;
+//! run via `make test`. Compiling the registry once per process keeps the
+//! suite fast.
+
+use dla_codesign::coordinator::lu_driver::{lu_full_via_artifact, lu_via_artifacts};
+use dla_codesign::lapack::LuFactors;
+use dla_codesign::runtime::convert::{literal_to_matrix, matrix_to_literal};
+use dla_codesign::runtime::{execute_tupled, ArtifactKind, Registry};
+use dla_codesign::util::{MatrixF64, Pcg64};
+
+// The xla crate's PJRT handles hold raw pointers (not Sync), so each test
+// builds its own registry; the artifacts are small and compile in
+// milliseconds on the CPU client.
+fn registry() -> Registry {
+    Registry::load(Registry::default_dir())
+        .expect("artifacts missing: run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn registry_loads_all_kinds() {
+    let reg = &registry();
+    assert!(reg.len() >= 4, "expected several artifacts, got {}", reg.len());
+    assert!(!reg.by_kind(ArtifactKind::Gemm).is_empty());
+    assert!(!reg.by_kind(ArtifactKind::LuStep).is_empty());
+    assert!(!reg.by_kind(ArtifactKind::LuFull).is_empty());
+    assert!(reg.by_name("lu_step_s256_b32").is_some());
+}
+
+#[test]
+fn gemm_artifact_matches_native_reference() {
+    let reg = &registry();
+    for art in reg.by_kind(ArtifactKind::Gemm) {
+        let (m, n, k) = (
+            art.param_usize("m").unwrap(),
+            art.param_usize("n").unwrap(),
+            art.param_usize("k").unwrap(),
+        );
+        let mut rng = Pcg64::seed((m + n + k) as u64);
+        let a = MatrixF64::random(m, k, &mut rng);
+        let b = MatrixF64::random(k, n, &mut rng);
+        let outs = execute_tupled(
+            &art.exe,
+            &[matrix_to_literal(&a).unwrap(), matrix_to_literal(&b).unwrap()],
+        )
+        .unwrap();
+        assert_eq!(outs.len(), 1, "{}", art.name);
+        let c = literal_to_matrix(&outs[0]).unwrap();
+        let mut expect = MatrixF64::zeros(m, n);
+        dla_codesign::gemm::gemm_reference(1.0, a.view(), b.view(), 0.0, &mut expect.view_mut());
+        let err = c.max_abs_diff(&expect);
+        assert!(err < 1e-10 * k as f64, "{}: artifact GEMM diverges by {err}", art.name);
+    }
+}
+
+#[test]
+fn gemm_update_artifact_is_trailing_update() {
+    let reg = &registry();
+    let art = reg
+        .by_kind(ArtifactKind::GemmUpdate)
+        .into_iter()
+        .next()
+        .expect("gemm_update artifact");
+    let (m, n, k) = (
+        art.param_usize("m").unwrap(),
+        art.param_usize("n").unwrap(),
+        art.param_usize("k").unwrap(),
+    );
+    let mut rng = Pcg64::seed(7);
+    let c0 = MatrixF64::random(m, n, &mut rng);
+    let a = MatrixF64::random(m, k, &mut rng);
+    let b = MatrixF64::random(k, n, &mut rng);
+    let outs = execute_tupled(
+        &art.exe,
+        &[
+            matrix_to_literal(&c0).unwrap(),
+            matrix_to_literal(&a).unwrap(),
+            matrix_to_literal(&b).unwrap(),
+        ],
+    )
+    .unwrap();
+    let c = literal_to_matrix(&outs[0]).unwrap();
+    // C := C - A @ B
+    let mut expect = c0.clone();
+    dla_codesign::gemm::gemm_reference(-1.0, a.view(), b.view(), 1.0, &mut expect.view_mut());
+    assert!(c.max_abs_diff(&expect) < 1e-10 * k as f64);
+}
+
+#[test]
+fn lu_step_driver_reconstructs_pa() {
+    let reg = &registry();
+    let mut rng = Pcg64::seed(42);
+    let a0 = MatrixF64::random(256, 256, &mut rng);
+    let res = lu_via_artifacts(reg, &a0, 32).unwrap();
+    assert_eq!(res.step_seconds.len(), 256 / 32);
+    let factors = LuFactors { lu: res.lu.clone(), pivots: res.pivots.clone(), block: 32 };
+    let err = factors.reconstruction_error(&a0);
+    assert!(err < 1e-10, "|PA - LU| = {err}");
+}
+
+#[test]
+fn lu_artifact_matches_native_lu_exactly() {
+    // The PJRT path and the native Rust path must agree bit-for-bit on
+    // pivots and closely on factors (same algorithm, same pivoting rule).
+    let reg = &registry();
+    let mut rng = Pcg64::seed(43);
+    let a0 = MatrixF64::random(128, 128, &mut rng);
+    let art_res = lu_via_artifacts(reg, &a0, 16).unwrap();
+    let mut engine = dla_codesign::gemm::GemmEngine::new(
+        dla_codesign::arch::host_xeon(),
+        dla_codesign::gemm::ConfigMode::Refined,
+    );
+    let native = dla_codesign::lapack::lu_factor(&a0, 16, &mut engine).unwrap();
+    assert_eq!(art_res.pivots, native.pivots, "pivot sequences differ");
+    assert!(art_res.lu.max_abs_diff(&native.lu) < 1e-9);
+}
+
+#[test]
+fn lu_full_artifact_agrees_with_step_driver() {
+    let reg = &registry();
+    let mut rng = Pcg64::seed(44);
+    let a0 = MatrixF64::random(256, 256, &mut rng);
+    let stepped = lu_via_artifacts(reg, &a0, 32).unwrap();
+    let full = lu_full_via_artifact(reg, &a0, 32).unwrap();
+    assert_eq!(stepped.pivots, full.pivots);
+    assert!(stepped.lu.max_abs_diff(&full.lu) < 1e-11);
+}
+
+#[test]
+fn lu_driver_flags_singular_input() {
+    let reg = &registry();
+    let mut a0 = MatrixF64::zeros(256, 256);
+    for i in 0..256 {
+        a0[(i, i)] = 1.0;
+    }
+    // Zero out a pivot column entirely.
+    for i in 0..256 {
+        a0[(i, 5)] = 0.0;
+    }
+    a0[(5, 5)] = 0.0;
+    let res = lu_via_artifacts(reg, &a0, 32);
+    assert!(res.is_err(), "singular input must be rejected");
+}
+
+#[test]
+fn registry_gemm_lookup_prefers_variant() {
+    let reg = &registry();
+    if let Some(a) = reg.find_gemm(256, 256, 32, "mk12x4") {
+        assert_eq!(a.variant(), "mk12x4");
+    }
+    let any = reg.find_gemm(256, 256, 32, "not_a_variant");
+    assert!(any.is_some(), "fallback to any variant must work");
+    assert!(reg.find_gemm(9999, 1, 1, "mk8x8").is_none());
+}

@@ -1,0 +1,263 @@
+//! Cross-module integration tests: the full native stack exercised end
+//! to end (no PJRT artifacts needed — those are covered by
+//! `e2e_artifacts.rs`).
+
+use dla_codesign::arch::{carmel, detect_host, epyc7282, host_xeon};
+use dla_codesign::coordinator::{Coordinator, CoordinatorServer, DlaRequest, DlaResponse, ServerConfig};
+use dla_codesign::gemm::{ConfigMode, GemmEngine};
+use dla_codesign::harness::{self, HarnessOpts};
+use dla_codesign::lapack::{self, qr_blocked, syrk_lower};
+use dla_codesign::model::autotune::{autotune, SearchSpace};
+use dla_codesign::model::{refined_ccp, select, AnalyticScorer, GemmDims, MicroKernel};
+use dla_codesign::perfmodel::{gemm_perf, ModelParams};
+use dla_codesign::trace::{simulate_gemm, TraceOptions};
+use dla_codesign::util::{MatrixF64, Pcg64};
+
+/// A linear-solver pipeline through the coordinator: factor with LU,
+/// refine the solution with one step of iterative refinement computed
+/// via engine GEMMs — every flop flows through the co-design stack.
+#[test]
+fn solver_pipeline_with_iterative_refinement() {
+    let mut co = Coordinator::new(detect_host(), ConfigMode::Refined);
+    let mut rng = Pcg64::seed(1001);
+    let n = 96;
+    let a = MatrixF64::random_diag_dominant(n, &mut rng);
+    let x_true = MatrixF64::random(n, 2, &mut rng);
+    let mut rhs = MatrixF64::zeros(n, 2);
+    dla_codesign::gemm::gemm_reference(1.0, a.view(), x_true.view(), 0.0, &mut rhs.view_mut());
+    let x0 = co.solve(&a, &rhs, 16).unwrap();
+    // Residual r = rhs - A x0 via the engine; correction dx = A^{-1} r.
+    let mut r = rhs.clone();
+    co.engine.gemm(-1.0, a.view(), x0.view(), 1.0, &mut r.view_mut());
+    let dx = co.solve(&a, &r, 16).unwrap();
+    let x1 = MatrixF64::from_fn(n, 2, |i, j| x0[(i, j)] + dx[(i, j)]);
+    let e0 = x0.max_abs_diff(&x_true);
+    let e1 = x1.max_abs_diff(&x_true);
+    assert!(e1 <= e0 * 1.5, "refinement must not diverge ({e0} -> {e1})");
+    assert!(e1 < 1e-9);
+}
+
+/// QR and LU agree on the solution of the same system.
+#[test]
+fn qr_and_lu_solve_agree() {
+    let mut rng = Pcg64::seed(1002);
+    let n = 40;
+    let a = MatrixF64::random_diag_dominant(n, &mut rng);
+    let b = MatrixF64::random(n, 1, &mut rng);
+    let mut engine = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+    // LU solve.
+    let lu = lapack::lu_factor(&a, 8, &mut engine).unwrap();
+    let x_lu = lu.solve(&b);
+    // QR solve: R x = Q^T b.
+    let f = qr_blocked(&a, 8, &mut engine);
+    let q = f.q_matrix();
+    let qt = q.transposed();
+    let mut qtb = MatrixF64::zeros(n, 1);
+    dla_codesign::gemm::gemm_reference(1.0, qt.view(), b.view(), 0.0, &mut qtb.view_mut());
+    let r = f.r_matrix();
+    // Back substitution on R.
+    let mut x_qr = qtb.clone();
+    for i in (0..n).rev() {
+        let mut acc = x_qr[(i, 0)];
+        for j in i + 1..n {
+            acc -= r[(i, j)] * x_qr[(j, 0)];
+        }
+        x_qr[(i, 0)] = acc / r[(i, i)];
+    }
+    assert!(x_lu.max_abs_diff(&x_qr) < 1e-8, "LU and QR solutions diverge");
+}
+
+/// Cholesky via true SYRK equals Cholesky via full GEMM.
+#[test]
+fn cholesky_with_syrk_trailing_update() {
+    let mut rng = Pcg64::seed(1003);
+    let n = 48;
+    let m = MatrixF64::random(n, n, &mut rng);
+    let mt = m.transposed();
+    let mut a = MatrixF64::zeros(n, n);
+    dla_codesign::gemm::gemm_reference(1.0, m.view(), mt.view(), 0.0, &mut a.view_mut());
+    for i in 0..n {
+        a[(i, i)] += n as f64;
+    }
+    // Hand-rolled blocked Cholesky with syrk_lower trailing updates.
+    let mut engine = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+    let b = 12;
+    let mut l = a.clone();
+    let mut k = 0;
+    while k < n {
+        let bb = b.min(n - k);
+        {
+            let mut d = l.sub_mut(k, k, bb, bb);
+            lapack::cholesky::potf2(&mut d).unwrap();
+        }
+        if k + bb < n {
+            let rest = n - k - bb;
+            {
+                let l11t = l.sub(k, k, bb, bb).to_owned_matrix().transposed();
+                let mut a21 = l.sub_mut(k + bb, k, rest, bb);
+                lapack::trsm_right_upper(l11t.view(), &mut a21);
+            }
+            let a21 = l.sub(k + bb, k, rest, bb).to_owned_matrix();
+            // syrk over the owned trailing block, then write back.
+            let mut c22 = l.sub(k + bb, k + bb, rest, rest).to_owned_matrix();
+            syrk_lower(-1.0, &a21, 1.0, &mut c22, 16, &mut engine);
+            for j in 0..rest {
+                for i in j..rest {
+                    l[(k + bb + i, k + bb + j)] = c22[(i, j)];
+                }
+            }
+        }
+        k += bb;
+    }
+    assert!(lapack::cholesky::cholesky_residual(&a, &l) < 1e-11);
+    // And matches the library's gemm-based Cholesky.
+    let mut l2 = a.clone();
+    lapack::cholesky::cholesky_blocked(&mut l2, b, &mut engine).unwrap();
+    for j in 0..n {
+        for i in j..n {
+            assert!((l[(i, j)] - l2[(i, j)]).abs() < 1e-9);
+        }
+    }
+}
+
+/// The analytic selector's choice is never far from the autotuner's best
+/// on a small measured grid (the paper's "model is enough" claim as an
+/// automated check; generous 40% tolerance for a noisy shared host).
+#[test]
+fn selector_choice_close_to_autotuned_best() {
+    let arch = detect_host();
+    let dims = GemmDims::new(256, 256, 64);
+    let sel = select(&arch, dims, &AnalyticScorer);
+    let kernel = dla_codesign::gemm::microkernel::for_shape(sel.config.mk)
+        .expect("selected kernel must be implemented");
+    let space = SearchSpace { mc: vec![32, 128, 256], nc: vec![48, 256], kc: vec![32, 64] };
+    let tuned = autotune(&kernel, dims, &space, 0.02);
+    // Measure the selector's pick through the same harness.
+    let pick_space = SearchSpace {
+        mc: vec![sel.config.ccp.mc],
+        nc: vec![sel.config.ccp.nc],
+        kc: vec![sel.config.ccp.kc],
+    };
+    let picked = autotune(&kernel, dims, &pick_space, 0.02);
+    assert!(
+        picked.best_gflops > tuned.best_gflops * 0.6,
+        "model pick {:.2} GFLOPS too far from tuned best {:.2}",
+        picked.best_gflops,
+        tuned.best_gflops
+    );
+}
+
+/// Model/simulator consistency: higher simulated L2 hit ratio implies
+/// the perf model ranks that configuration at least as fast, everything
+/// else (kernel, dims) equal.
+#[test]
+fn perfmodel_consistent_with_simulated_hit_ratio() {
+    let arch = epyc7282();
+    let dims = GemmDims::new(1000, 1000, 64);
+    let mk = MicroKernel::new(8, 6);
+    let blis = dla_codesign::model::blis_static("epyc").unwrap();
+    let cfg_b = dla_codesign::model::ccp::GemmConfig { mk, ccp: blis.ccp.clamp_to(dims) };
+    let cfg_m = dla_codesign::model::ccp::GemmConfig { mk, ccp: refined_ccp(&arch, mk, dims).clamp_to(dims) };
+    let p = ModelParams::default();
+    let eb = gemm_perf(&arch, dims, &cfg_b, false, TraceOptions::sampled(), &p);
+    let em = gemm_perf(&arch, dims, &cfg_m, false, TraceOptions::sampled(), &p);
+    let (hb, hm) = (eb.l2_hit_ratio.unwrap(), em.l2_hit_ratio.unwrap());
+    assert!(hm > hb, "MOD must have the higher simulated L2 hit ratio");
+    assert!(em.gflops >= eb.gflops, "higher hit ratio must not model slower");
+}
+
+/// The trace generator's coverage accounting is exact for an unsampled
+/// run and the sampled counters scale to within 15% of exact.
+#[test]
+fn sampling_scales_counters_consistently() {
+    let arch = carmel();
+    let dims = GemmDims::new(600, 600, 64);
+    let mk = MicroKernel::new(6, 8);
+    let cfg = dla_codesign::model::ccp::GemmConfig {
+        mk,
+        ccp: dla_codesign::model::Ccp::new(150, 200, 64),
+    };
+    let exact = simulate_gemm(&arch, dims, &cfg, TraceOptions::default(), false);
+    let sampled = simulate_gemm(&arch, dims, &cfg, TraceOptions::sampled(), false);
+    assert_eq!(exact.coverage, 1.0);
+    assert!(sampled.coverage < 1.0);
+    let (e1, ..) = exact.scaled_accesses();
+    let (s1, ..) = sampled.scaled_accesses();
+    let rel = (e1 - s1).abs() / e1;
+    assert!(rel < 0.15, "sampled L1 access estimate off by {:.1}%", rel * 100.0);
+}
+
+/// Smoke: every harness experiment runs at tiny sizes and writes TSVs.
+#[test]
+fn harness_smoke_all_experiments() {
+    let mut opts = HarnessOpts::smoke();
+    opts.modeled = false; // modeled paths covered by their own unit tests
+    harness::tables::run();
+    harness::fig6::run(&opts);
+    harness::fig9::run(&opts);
+    harness::fig10::run(&opts, false);
+    harness::fig11::run(&opts, true);
+    harness::fig12::run(&opts, harness::fig12::Panel::Sequential);
+    for f in ["table1", "table2", "fig6_left", "fig9_host", "fig10_host", "fig11_host", "fig12_host"] {
+        let p = format!("results/{f}.tsv");
+        assert!(std::path::Path::new(&p).exists(), "{p} missing");
+    }
+}
+
+/// Server under a mixed concurrent load with an injected failure in the
+/// middle: the failure is isolated to its request.
+#[test]
+fn server_isolates_request_failures() {
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined).with_workers(2),
+    );
+    let mut rng = Pcg64::seed(1004);
+    let mut pending = Vec::new();
+    for i in 0..10 {
+        let req = if i == 5 {
+            // Singular: all-zero matrix.
+            DlaRequest::LuFactor { a: MatrixF64::zeros(16, 16), block: 4 }
+        } else {
+            DlaRequest::Gemm {
+                alpha: 1.0,
+                a: MatrixF64::random(24, 12, &mut rng),
+                b: MatrixF64::random(12, 20, &mut rng),
+                beta: 0.0,
+                c: MatrixF64::zeros(24, 20),
+            }
+        };
+        pending.push((i, server.submit(req)));
+    }
+    for (i, rx) in pending {
+        let resp = rx.recv().unwrap();
+        if i == 5 {
+            assert!(resp.is_err(), "request 5 must fail");
+        } else {
+            let ok = resp.unwrap();
+            if let DlaResponse::Matrix { result, .. } = ok {
+                assert_eq!(result.rows(), 24);
+            } else {
+                panic!("unexpected response kind");
+            }
+        }
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.count("gemm"), 9);
+}
+
+/// Engines are deterministic: same seed + policy => bitwise-equal output.
+#[test]
+fn engine_determinism() {
+    let run = || {
+        let mut rng = Pcg64::seed(1005);
+        let a = MatrixF64::random(64, 32, &mut rng);
+        let b = MatrixF64::random(32, 48, &mut rng);
+        let mut c = MatrixF64::zeros(64, 48);
+        let mut e = GemmEngine::new(detect_host(), ConfigMode::Refined);
+        e.gemm(1.0, a.view(), b.view(), 0.0, &mut c.view_mut());
+        c
+    };
+    let c1 = run();
+    let c2 = run();
+    assert_eq!(c1, c2, "same inputs must produce bitwise-identical results");
+}

@@ -1,0 +1,271 @@
+//! Property-based tests over the whole native stack (testutil's
+//! mini-proptest; seeds overridable via DLA_PROPTEST_SEED).
+//!
+//! These complement the per-module unit tests with randomized invariants:
+//! packing round-trips, blocked-GEMM-vs-reference equivalence over
+//! arbitrary shapes/CCPs, LU reconstruction, model feasibility bounds and
+//! cache-simulator conservation laws.
+
+use dla_codesign::arch::{carmel, epyc7282, host_xeon};
+use dla_codesign::cachesim::Hierarchy;
+use dla_codesign::gemm::microkernel::registry;
+use dla_codesign::gemm::packing::{pack_a, pack_b, packed_a_len, packed_b_len};
+use dla_codesign::gemm::{gemm_blocked, gemm_reference, Workspace};
+use dla_codesign::lapack::lu_factor;
+use dla_codesign::model::analytical::{kc_star, l1_allocation, l2_allocation};
+use dla_codesign::model::ccp::GemmConfig;
+use dla_codesign::model::{refined_ccp, Ccp, GemmDims};
+use dla_codesign::testutil::{forall, PropConfig};
+use dla_codesign::util::{MatrixF64, Pcg64};
+
+fn cfgn(cases: usize) -> PropConfig {
+    PropConfig { cases, ..Default::default() }
+}
+
+#[test]
+fn prop_blocked_gemm_equals_reference_for_random_shapes_and_ccps() {
+    let kernels = registry();
+    forall(
+        "blocked_gemm==reference",
+        cfgn(40),
+        |rng| {
+            let m = rng.range(1, 80);
+            let n = rng.range(1, 80);
+            let k = rng.range(1, 80);
+            let kern = rng.range(0, kernels.len());
+            let ccp = Ccp::new(rng.range(1, 100), rng.range(1, 100), rng.range(1, 100));
+            let alpha = rng.next_f64() * 4.0 - 2.0;
+            let beta = rng.next_f64() * 2.0 - 1.0;
+            (m, n, k, kern, ccp, alpha, beta, rng.next_u64())
+        },
+        |&(m, n, k, kern, ccp, alpha, beta, seed)| {
+            let imp = kernels[kern];
+            let mut rng = Pcg64::seed(seed);
+            let a = MatrixF64::random(m, k, &mut rng);
+            let b = MatrixF64::random(k, n, &mut rng);
+            let mut c = MatrixF64::random(m, n, &mut rng);
+            let mut expect = c.clone();
+            gemm_reference(alpha, a.view(), b.view(), beta, &mut expect.view_mut());
+            let cfg = GemmConfig { mk: imp.spec, ccp };
+            let mut ws = Workspace::new();
+            gemm_blocked(&cfg, &imp, alpha, a.view(), b.view(), beta, &mut c.view_mut(), &mut ws);
+            let err = c.max_abs_diff(&expect);
+            let tol = 1e-12 * (k.max(1) as f64) * (1.0 + alpha.abs());
+            if err > tol {
+                return Err(format!("kernel {} err {err} > {tol}", imp.name));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_packing_roundtrip_any_geometry() {
+    forall(
+        "packing_roundtrip",
+        cfgn(60),
+        |rng| (rng.range(1, 60), rng.range(1, 60), rng.range(1, 17), rng.range(1, 17), rng.next_u64()),
+        |&(rows, cols, mr, nr, seed)| {
+            let mut rng = Pcg64::seed(seed);
+            let a = MatrixF64::random(rows, cols, &mut rng);
+            // pack_a: element (i, p) must survive; padding must be zero.
+            let mut abuf = vec![f64::NAN; packed_a_len(rows, cols, mr)];
+            pack_a(a.view(), &mut abuf, mr, 1.0);
+            let panels = rows.div_ceil(mr);
+            for panel in 0..panels {
+                for p in 0..cols {
+                    for r in 0..mr {
+                        let i = panel * mr + r;
+                        let v = abuf[panel * mr * cols + p * mr + r];
+                        let want = if i < rows { a[(i, p)] } else { 0.0 };
+                        if v != want {
+                            return Err(format!("pack_a mismatch at panel {panel} p {p} r {r}"));
+                        }
+                    }
+                }
+            }
+            // pack_b symmetric check.
+            let b = MatrixF64::random(cols, rows, &mut rng);
+            let mut bbuf = vec![f64::NAN; packed_b_len(cols, rows, nr)];
+            pack_b(b.view(), &mut bbuf, nr);
+            let bpanels = rows.div_ceil(nr);
+            for panel in 0..bpanels {
+                for p in 0..cols {
+                    for cidx in 0..nr {
+                        let j = panel * nr + cidx;
+                        let v = bbuf[panel * nr * cols + p * nr + cidx];
+                        let want = if j < rows { b[(p, j)] } else { 0.0 };
+                        if v != want {
+                            return Err(format!("pack_b mismatch at panel {panel} p {p} c {cidx}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lu_reconstruction_random_sizes_and_blocks() {
+    forall(
+        "lu_PA==LU",
+        cfgn(25),
+        |rng| (rng.range(2, 96), rng.range(1, 40), rng.next_u64()),
+        |&(s, b, seed)| {
+            let mut rng = Pcg64::seed(seed);
+            let a0 = MatrixF64::random(s, s, &mut rng);
+            let mut engine = dla_codesign::gemm::GemmEngine::new(
+                host_xeon(),
+                dla_codesign::gemm::ConfigMode::Refined,
+            );
+            match lu_factor(&a0, b, &mut engine) {
+                Err(col) => Err(format!("unexpected singularity at {col}")),
+                Ok(f) => {
+                    let err = f.reconstruction_error(&a0);
+                    if err > 1e-10 * s as f64 {
+                        return Err(format!("recon err {err}"));
+                    }
+                    // Pivots must be a valid partial-pivoting sequence:
+                    // piv[j] >= j.
+                    for (j, &p) in f.pivots.iter().enumerate() {
+                        if p < j || p >= s {
+                            return Err(format!("invalid pivot {p} at step {j}"));
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_refined_model_feasible_on_all_archs() {
+    let archs = [carmel(), epyc7282(), host_xeon()];
+    forall(
+        "refined_model_feasibility",
+        cfgn(120),
+        |rng| {
+            (
+                rng.range(0, 3),
+                rng.range(1, 5000),
+                rng.range(1, 5000),
+                rng.range(1, 3000),
+                rng.range(1, 17),
+                rng.range(1, 17),
+            )
+        },
+        |&(ai, m, n, k, mr, nr)| {
+            let arch = &archs[ai];
+            let mk = dla_codesign::model::MicroKernel::new(mr, nr);
+            let dims = GemmDims::new(m, n, k);
+            let ccp = refined_ccp(arch, mk, dims);
+            // Feasibility invariants.
+            if ccp.kc > kc_star(arch.l1(), mk) {
+                return Err(format!("kc {} exceeds L1 optimum", ccp.kc));
+            }
+            if ccp.kc > k.max(1) {
+                return Err("kc exceeds k".into());
+            }
+            // Br must fit its allocated L1 ways; Ac its L2 ways.
+            let a1 = l1_allocation(arch.l1(), mk);
+            if ccp.kc * nr * 8 > a1.b * arch.l1().way_bytes() {
+                return Err("Br overflows its L1 allocation".into());
+            }
+            let a2 = l2_allocation(arch.l2(), mk, ccp.kc);
+            // mc is clamped by m, so only check when the model chose it.
+            let mc_model = (a2.a * arch.l2().sets() * arch.l2().line_bytes) / (ccp.kc * 8);
+            if ccp.mc > mc_model.max(mr) && ccp.mc > m {
+                return Err(format!("mc {} above both model bound and m", ccp.mc));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cachesim_conservation() {
+    // For any access stream: hits <= accesses at each level, and every
+    // L1 miss is an L2 access (walk-down conservation).
+    forall(
+        "cachesim_conservation",
+        cfgn(20),
+        |rng| {
+            let n = rng.range(1000, 20_000);
+            let span = rng.range(1, 1 << 22);
+            (n, span as u64, rng.next_u64())
+        },
+        |&(n, span, seed)| {
+            let mut h = Hierarchy::new(&carmel());
+            let mut rng = Pcg64::seed(seed);
+            for _ in 0..n {
+                h.access_line(rng.next_below(span));
+            }
+            let l1 = h.level_stats(0);
+            let l2 = h.level_stats(1);
+            let l3 = h.level_stats(2);
+            if l1.hits > l1.accesses || l2.hits > l2.accesses || l3.hits > l3.accesses {
+                return Err("hits exceed accesses".into());
+            }
+            if l1.accesses != n as u64 {
+                return Err("L1 must see every access".into());
+            }
+            if l2.accesses != l1.misses() {
+                return Err(format!("L2 accesses {} != L1 misses {}", l2.accesses, l1.misses()));
+            }
+            if l3.accesses != l2.misses() {
+                return Err("L3 accesses != L2 misses".into());
+            }
+            if h.dram_lines() != l3.misses() {
+                return Err("DRAM lines != L3 misses".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_gemm_any_plan_matches_reference() {
+    use dla_codesign::gemm::{parallel::gemm_parallel, ParallelLoop, ThreadPlan};
+    let kernels = registry();
+    forall(
+        "parallel_gemm==reference",
+        cfgn(15),
+        |rng| {
+            (
+                rng.range(1, 70),
+                rng.range(1, 70),
+                rng.range(1, 50),
+                rng.range(1, 5),
+                rng.range(0, 2),
+                rng.range(0, kernels.len()),
+                rng.next_u64(),
+            )
+        },
+        |&(m, n, k, threads, loop_sel, kern, seed)| {
+            let imp = kernels[kern];
+            let target = if loop_sel == 0 { ParallelLoop::G3 } else { ParallelLoop::G4 };
+            let mut rng = Pcg64::seed(seed);
+            let a = MatrixF64::random(m, k, &mut rng);
+            let b = MatrixF64::random(k, n, &mut rng);
+            let mut c = MatrixF64::random(m, n, &mut rng);
+            let mut expect = c.clone();
+            gemm_reference(1.0, a.view(), b.view(), 1.0, &mut expect.view_mut());
+            let cfg = GemmConfig {
+                mk: imp.spec,
+                ccp: Ccp::new(4 * imp.spec.mr, 3 * imp.spec.nr, 16),
+            };
+            let mut wss: Vec<Workspace> = (0..threads).map(|_| Workspace::new()).collect();
+            gemm_parallel(
+                &cfg, &imp, 1.0, a.view(), b.view(), 1.0, &mut c.view_mut(),
+                ThreadPlan { threads, target }, &mut wss,
+            );
+            let err = c.max_abs_diff(&expect);
+            if err > 1e-12 * k.max(1) as f64 {
+                return Err(format!("{target:?} x{threads} kernel {} err {err}", imp.name));
+            }
+            Ok(())
+        },
+    );
+}
