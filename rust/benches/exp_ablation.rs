@@ -8,12 +8,18 @@
 //!    (the §3.4 selection space).
 //! 3. **Workspace pooling** — pooled packing buffers (the paper's
 //!    "sufficiently large workspace") vs per-call allocation.
+//! 4. **Persistent pool vs spawn-per-block** — the paper's hot sequence
+//!    (LU-style trailing updates: m = n shrinking, k = b) on the
+//!    persistent worker pool vs the seed's spawn-per-macro-block driver,
+//!    with the trajectory written to `BENCH_gemm.json` for future PRs.
 use dla_codesign::arch::detect_host;
-use dla_codesign::bench::BenchGroup;
+use dla_codesign::bench::{BenchGroup, JsonBench};
 use dla_codesign::gemm::microkernel::for_shape;
-use dla_codesign::gemm::{gemm_blocked, ConfigMode, GemmEngine, Workspace};
+use dla_codesign::gemm::parallel::{gemm_parallel, gemm_parallel_spawning};
+use dla_codesign::gemm::{gemm_blocked, ConfigMode, GemmEngine, ParallelLoop, Workspace};
 use dla_codesign::model::ccp::GemmConfig;
 use dla_codesign::model::{refined_ccp, Ccp, GemmDims, MicroKernel};
+use dla_codesign::runtime::pool::WorkerPool;
 use dla_codesign::util::timer::measure;
 use dla_codesign::util::{MatrixF64, Pcg64, Stopwatch};
 
@@ -92,4 +98,106 @@ fn main() {
         gemm_blocked(&cfg, &kernel, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut(), &mut fresh);
     });
     g3.finish("bench_ablation_workspace");
+
+    // --- 4. persistent pool vs spawn-per-block -------------------------
+    // The paper's hot sequence: one blocked-factorization sweep of
+    // trailing updates (m = n shrinking by b per step, k = b). The seed
+    // architecture spawned threads inside every macro-block; the pool
+    // broadcasts one job per GEMM to parked workers.
+    let threads: usize =
+        std::env::var("DLA_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(4).max(1);
+    println!("=== ablation 4: persistent pool vs spawn-per-block (x{threads}, k={k}) ===");
+    let mut sizes = Vec::new();
+    let mut s = mn.saturating_sub(k);
+    while s >= k {
+        sizes.push(s);
+        s -= k;
+    }
+    if sizes.is_empty() {
+        println!("-> DLA_MN too small for a trailing sweep; skipping");
+        return;
+    }
+    let total_flops: f64 = sizes.iter().map(|&s| 2.0 * (s * s * k) as f64).sum();
+    let cfg_for = |s: usize| {
+        let d = GemmDims::new(s, s, k);
+        GemmConfig { mk, ccp: refined_ccp(&arch, mk, d).clamp_to(d) }
+    };
+    let pool = WorkerPool::new(threads);
+    let mut g4 = BenchGroup::new("pool vs spawn-per-block (trailing sweep)");
+    let pooled = g4
+        .case(&format!("pooled x{threads} G4"), total_flops, || {
+            for &s in &sizes {
+                let cfg = cfg_for(s);
+                let mut cv = c.sub_mut(0, 0, s, s);
+                gemm_parallel(
+                    &cfg, &kernel, 1.0, a.sub(0, 0, s, k), b.sub(0, 0, k, s), 0.0, &mut cv,
+                    ParallelLoop::G4, &pool,
+                );
+            }
+        })
+        .clone();
+    let mut ws_spawn = Workspace::new();
+    let spawning = g4
+        .case(&format!("spawn-per-block x{threads} (seed path)"), total_flops, || {
+            for &s in &sizes {
+                let cfg = cfg_for(s);
+                let mut cv = c.sub_mut(0, 0, s, s);
+                gemm_parallel_spawning(
+                    &cfg, &kernel, 1.0, a.sub(0, 0, s, k), b.sub(0, 0, k, s), 0.0, &mut cv,
+                    threads, &mut ws_spawn,
+                );
+            }
+        })
+        .clone();
+    g4.finish("bench_ablation_pool");
+    assert_eq!(
+        pool.spawned_workers(),
+        threads.saturating_sub(1),
+        "pool must never respawn workers"
+    );
+
+    // Config-selection memo accounting over the same sweep, engine-driven.
+    let mut eng = GemmEngine::new(arch.clone(), ConfigMode::Refined);
+    for _ in 0..2 {
+        for &s in &sizes {
+            let mut cv = c.sub_mut(0, 0, s, s);
+            eng.gemm(1.0, a.sub(0, 0, s, k), b.sub(0, 0, k, s), 0.0, &mut cv);
+        }
+    }
+    let stats = eng.config_cache_stats();
+
+    let mut j = JsonBench::new("gemm trailing-update sweep (m=n shrinking, k=b)");
+    j.entry(
+        "pooled_g4",
+        &[
+            ("threads", threads as f64),
+            ("mean_seconds", pooled.measurement.mean_s),
+            ("min_seconds", pooled.measurement.min_s),
+            ("gflops", pooled.gflops()),
+        ],
+    );
+    j.entry(
+        "spawn_per_block",
+        &[
+            ("threads", threads as f64),
+            ("mean_seconds", spawning.measurement.mean_s),
+            ("min_seconds", spawning.measurement.min_s),
+            ("gflops", spawning.gflops()),
+        ],
+    );
+    j.entry(
+        "pooled_speedup_vs_spawn",
+        &[("mean", spawning.measurement.mean_s / pooled.measurement.mean_s)],
+    );
+    j.entry(
+        "config_cache",
+        &[("hits", stats.hits as f64), ("misses", stats.misses as f64)],
+    );
+    match j.write("BENCH_gemm.json") {
+        Ok(()) => println!(
+            "-> BENCH_gemm.json written: pooled {:.2}x vs spawn-per-block at x{threads}",
+            spawning.measurement.mean_s / pooled.measurement.mean_s
+        ),
+        Err(e) => eprintln!("warning: could not write BENCH_gemm.json: {e}"),
+    }
 }

@@ -1,10 +1,17 @@
 //! Bench target regenerating Figure 12 (LU on EPYC: sequential, G3, G4).
+//!
+//! Knobs: `DLA_LU_S` sets the measured host LU order; `DLA_THREADS=<n>`
+//! runs the measured host trailing updates on an n-thread persistent
+//! worker pool (loop G4) instead of sequentially — the pool is spawned
+//! once per engine and reused across the whole b sweep.
 use dla_codesign::harness::{fig12, fig12::Panel, HarnessOpts};
 
 fn main() {
     println!("=== exp_fig12 ===");
-    let mut opts = HarnessOpts::default();
-    opts.lu_s = std::env::var("DLA_LU_S").ok().and_then(|v| v.parse().ok()).unwrap_or(opts.lu_s);
+    let defaults = HarnessOpts::default();
+    let lu_s =
+        std::env::var("DLA_LU_S").ok().and_then(|v| v.parse().ok()).unwrap_or(defaults.lu_s);
+    let opts = HarnessOpts { lu_s, ..defaults };
     fig12::run(&opts, Panel::Sequential);
     fig12::run(&opts, Panel::ParallelG3);
     fig12::run(&opts, Panel::ParallelG4);

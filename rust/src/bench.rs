@@ -92,9 +92,87 @@ impl BenchGroup {
     }
 }
 
+/// Minimal JSON trend-file emitter (serde is unavailable offline): a flat
+/// list of `{"case": ..., "metric": value, ...}` entries under a named
+/// header, written e.g. to `BENCH_gemm.json` so successive PRs can track
+/// the performance trajectory with plain tooling.
+pub struct JsonBench {
+    name: String,
+    entries: Vec<String>,
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => vec!['\\', '"'],
+            '\\' => vec!['\\', '\\'],
+            '\n' => vec!['\\', 'n'],
+            c => vec![c],
+        })
+        .collect()
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl JsonBench {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), entries: Vec::new() }
+    }
+
+    /// Append one entry: a case label plus numeric fields.
+    pub fn entry(&mut self, case: &str, fields: &[(&str, f64)]) {
+        let mut parts = vec![format!("\"case\": \"{}\"", json_escape(case))];
+        for (k, v) in fields {
+            parts.push(format!("\"{}\": {}", json_escape(k), json_num(*v)));
+        }
+        self.entries.push(format!("    {{{}}}", parts.join(", ")));
+    }
+
+    /// Render the document.
+    pub fn render(&self) -> String {
+        format!(
+            "{{\n  \"bench\": \"{}\",\n  \"entries\": [\n{}\n  ]\n}}\n",
+            json_escape(&self.name),
+            self.entries.join(",\n")
+        )
+    }
+
+    /// Write to `path` (creating parent directories as needed).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_bench_renders_valid_entries() {
+        let mut j = JsonBench::new("pool vs spawn");
+        j.entry("pooled x4", &[("seconds", 0.25), ("gflops", 8.0)]);
+        j.entry("spawn \"legacy\"", &[("seconds", f64::NAN)]);
+        let doc = j.render();
+        assert!(doc.contains("\"bench\": \"pool vs spawn\""));
+        assert!(doc.contains("\"seconds\": 0.250000"));
+        assert!(doc.contains("\"gflops\": 8.000000"));
+        assert!(doc.contains("spawn \\\"legacy\\\""));
+        assert!(doc.contains("\"seconds\": null"));
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+        assert_eq!(doc.matches('[').count(), doc.matches(']').count());
+    }
 
     #[test]
     fn group_collects_cases() {

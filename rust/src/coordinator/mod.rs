@@ -14,11 +14,13 @@
 //! worker-thread request loop; [`lu_driver`] is the PJRT-backed blocked
 //! LU (the end-to-end example's hot path).
 
+#[cfg(feature = "pjrt")]
 pub mod lu_driver;
 pub mod metrics;
 pub mod requests;
 pub mod server;
 
+#[cfg(feature = "pjrt")]
 pub use lu_driver::{lu_via_artifacts, LuArtifactResult};
 pub use metrics::Metrics;
 pub use requests::{DlaRequest, DlaResponse};
@@ -39,6 +41,21 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(arch: Arch, mode: ConfigMode) -> Self {
         Self { engine: GemmEngine::new(arch, mode), metrics: Metrics::new() }
+    }
+
+    /// Attach a shared persistent worker pool (see
+    /// [`crate::runtime::pool::WorkerPool`]): the engine keeps the team —
+    /// and its memoized config selections — alive across every request
+    /// this coordinator serves.
+    pub fn with_pool(mut self, pool: std::sync::Arc<crate::runtime::pool::WorkerPool>) -> Self {
+        self.engine.set_shared_pool(pool);
+        self
+    }
+
+    /// Hit/miss accounting of the engine's config-selection memo cache
+    /// (one selector run per distinct request shape, lookups thereafter).
+    pub fn config_cache_stats(&self) -> crate::gemm::ConfigCacheStats {
+        self.engine.config_cache_stats()
     }
 
     /// Handle one request synchronously.

@@ -1,13 +1,23 @@
 //! A worker-thread request loop around the [`super::Coordinator`]:
 //! requests flow through a bounded channel (backpressure), each worker
-//! owns its engine (and thus its workspace pool), and per-worker metrics
-//! are merged at shutdown.
+//! owns its engine (and thus its workspace pool and config-selection memo
+//! cache), and per-worker metrics are merged at shutdown.
+//!
+//! With [`ServerConfig::with_gemm_threads`] the server provisions **one**
+//! persistent GEMM worker pool at startup and shares it across every
+//! request worker's engine: heavy requests get intra-request parallelism,
+//! the team is spawned exactly once for the lifetime of the server (pool
+//! `run`s from different workers serialize on the pool's leader lock, so
+//! the machine is never oversubscribed), and no request ever pays thread
+//! creation cost.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread;
 
 use crate::arch::Arch;
 use crate::gemm::ConfigMode;
+use crate::runtime::pool::WorkerPool;
 
 use super::metrics::Metrics;
 use super::requests::{DlaRequest, DlaResponse};
@@ -21,15 +31,23 @@ pub struct ServerConfig {
     pub mode: ConfigMode,
     /// Channel capacity (backpressure bound).
     pub queue_depth: usize,
+    /// Width of the shared intra-request GEMM pool (1 = sequential GEMMs).
+    pub gemm_threads: usize,
 }
 
 impl ServerConfig {
     pub fn new(arch: Arch, mode: ConfigMode) -> Self {
-        Self { workers: 1, arch, mode, queue_depth: 64 }
+        Self { workers: 1, arch, mode, queue_depth: 64, gemm_threads: 1 }
     }
 
     pub fn with_workers(mut self, n: usize) -> Self {
         self.workers = n.max(1);
+        self
+    }
+
+    /// Share one persistent `n`-thread GEMM pool across all workers.
+    pub fn with_gemm_threads(mut self, n: usize) -> Self {
+        self.gemm_threads = n.max(1);
         self
     }
 }
@@ -43,17 +61,24 @@ pub struct CoordinatorServer {
 }
 
 impl CoordinatorServer {
-    /// Start `cfg.workers` worker threads.
+    /// Start `cfg.workers` worker threads (plus, when `gemm_threads > 1`,
+    /// one shared persistent GEMM pool spawned here, once).
     pub fn start(cfg: ServerConfig) -> Self {
         let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
         let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
+        let gemm_pool =
+            (cfg.gemm_threads > 1).then(|| Arc::new(WorkerPool::new(cfg.gemm_threads)));
         let mut handles = Vec::new();
         for _ in 0..cfg.workers {
             let rx = rx.clone();
             let arch = cfg.arch.clone();
             let mode = cfg.mode.clone();
+            let pool = gemm_pool.clone();
             handles.push(thread::spawn(move || {
                 let mut co = Coordinator::new(arch, mode);
+                if let Some(pool) = pool {
+                    co = co.with_pool(pool);
+                }
                 loop {
                     // Hold the lock only while receiving.
                     let job = { rx.lock().unwrap().recv() };
@@ -140,6 +165,25 @@ mod tests {
         }
         let metrics = server.shutdown();
         assert_eq!(metrics.count("gemm"), 12);
+    }
+
+    #[test]
+    fn server_shares_one_gemm_pool_across_workers() {
+        let server = CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined)
+                .with_workers(2)
+                .with_gemm_threads(3),
+        );
+        let mut rng = Pcg64::seed(11);
+        let mut pending = Vec::new();
+        for _ in 0..6 {
+            pending.push(server.submit(gemm_req(&mut rng, 48, 40, 16)));
+        }
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.count("gemm"), 6);
     }
 
     #[test]

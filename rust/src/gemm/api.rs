@@ -1,8 +1,9 @@
 //! The co-design GEMM API: the paper's proposal made concrete.
 //!
 //! A [`GemmEngine`] owns an architecture description, the registry of
-//! runnable micro-kernels and a workspace pool. Its [`ConfigMode`] selects
-//! the paper's three compared policies:
+//! runnable micro-kernels, a sequential workspace, an optional persistent
+//! [`WorkerPool`] (parallel plans) and a **config-selection memoization
+//! cache**. Its [`ConfigMode`] selects the paper's compared policies:
 //!
 //! - [`ConfigMode::BlisStatic`] — baseline R1: a single stock micro-kernel
 //!   and CCPs fixed per architecture, only clamped by the dimensions.
@@ -12,11 +13,36 @@
 //!   model (§3.3/§3.4).
 //! - [`ConfigMode::Fixed`] — pin an explicit configuration (used by the
 //!   experiment harness to reproduce a specific paper variant).
+//!
+//! # Memoized selection
+//!
+//! Blocked LU/Cholesky/QR call the engine once per panel step with a
+//! small set of recurring shapes (`m = n` shrinking, `k = b`), and a
+//! serving coordinator sees the same request shapes over and over. The
+//! engine therefore memoizes [`GemmEngine::plan_config`] on
+//! `(mode, GemmDims)`: the analytical/refined scorer runs once per
+//! distinct shape, and every later call is a hash lookup.
+//! [`GemmEngine::config_cache_stats`] exposes hit/miss counts so tests
+//! and benches can assert the accounting.
+//!
+//! # Threading
+//!
+//! [`GemmEngine::with_plan`] provisions a persistent worker pool sized to
+//! the plan — created **once**, reused by every subsequent GEMM (and by a
+//! whole LU/Cholesky/QR factorization sweep). Pools can also be shared
+//! between engines ([`GemmEngine::set_shared_pool`]); the coordinator
+//! server uses that to run all request workers against one machine-wide
+//! team.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::arch::Arch;
 use crate::model::ccp::GemmConfig;
 use crate::model::selector::{select_from, AnalyticScorer};
 use crate::model::{blis_static, original_ccp, refined_ccp, GemmDims, MicroKernel};
+use crate::runtime::pool::WorkerPool;
 use crate::util::matrix::{MatView, MatViewMut};
 
 use super::blocked::{gemm_blocked, Workspace};
@@ -39,13 +65,48 @@ pub enum ConfigMode {
     Fixed(GemmConfig),
 }
 
-/// The engine: arch + kernels + workspaces + policy.
+/// Hashable fingerprint of a [`ConfigMode`] used as part of the memo key,
+/// so mutating `engine.mode` can never serve a stale selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum ModeKey {
+    Blis,
+    Original,
+    Refined,
+    RefinedWith(MicroKernel),
+    Fixed(GemmConfig),
+}
+
+fn mode_key(mode: &ConfigMode) -> ModeKey {
+    match mode {
+        ConfigMode::BlisStatic => ModeKey::Blis,
+        ConfigMode::OriginalModel => ModeKey::Original,
+        ConfigMode::Refined => ModeKey::Refined,
+        ConfigMode::RefinedWithKernel(mk) => ModeKey::RefinedWith(*mk),
+        ConfigMode::Fixed(cfg) => ModeKey::Fixed(*cfg),
+    }
+}
+
+/// Hit/miss accounting of the config-selection memo cache.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ConfigCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// The engine: arch + kernels + workspace + pool + policy.
 pub struct GemmEngine {
     pub arch: Arch,
     pub mode: ConfigMode,
     pub plan: ThreadPlan,
     kernels: Vec<MicroKernelImpl>,
-    workspaces: Vec<Workspace>,
+    /// Workspace for the sequential path (parallel paths use the pool's
+    /// per-worker pinned workspaces).
+    workspace: Workspace,
+    /// Persistent worker team; `None` until a parallel plan is set.
+    pool: Option<Arc<WorkerPool>>,
+    /// Memoized `(mode, dims) -> config` selections.
+    config_cache: RefCell<HashMap<(ModeKey, GemmDims), GemmConfig>>,
+    cache_stats: Cell<ConfigCacheStats>,
     /// Last configuration chosen (introspection for tests/harness).
     pub last_config: Option<GemmConfig>,
 }
@@ -64,18 +125,41 @@ impl GemmEngine {
             mode,
             plan: ThreadPlan::sequential(),
             kernels,
-            workspaces: vec![Workspace::new()],
+            workspace: Workspace::new(),
+            pool: None,
+            config_cache: RefCell::new(HashMap::new()),
+            cache_stats: Cell::new(ConfigCacheStats::default()),
             last_config: None,
         }
     }
 
-    /// Set the threading plan (one workspace per thread is provisioned).
+    /// Set the threading plan. A persistent worker pool is provisioned
+    /// once (and re-provisioned only if the thread count changes); every
+    /// subsequent GEMM reuses it with zero thread spawns.
     pub fn with_plan(mut self, plan: ThreadPlan) -> Self {
-        while self.workspaces.len() < plan.threads.max(1) {
-            self.workspaces.push(Workspace::new());
+        let need_new = plan.threads > 1
+            && match &self.pool {
+                Some(p) => p.threads() != plan.threads,
+                None => true,
+            };
+        if need_new {
+            self.pool = Some(Arc::new(WorkerPool::new(plan.threads)));
         }
         self.plan = plan;
         self
+    }
+
+    /// Adopt an externally owned pool (e.g. one team shared by every
+    /// worker of the coordinator server). The plan's thread count is
+    /// aligned with the pool's.
+    pub fn set_shared_pool(&mut self, pool: Arc<WorkerPool>) {
+        self.plan = ThreadPlan { threads: pool.threads(), target: self.plan.target };
+        self.pool = Some(pool);
+    }
+
+    /// The persistent pool, if a parallel plan was provisioned.
+    pub fn pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.pool.as_ref()
     }
 
     /// The micro-kernel shapes eligible for *dynamic selection*: prefetch
@@ -106,8 +190,8 @@ impl GemmEngine {
             .unwrap_or_else(|| panic!("no implementation for {spec}"))
     }
 
-    /// Resolve the configuration this engine would use for `dims`.
-    pub fn plan_config(&self, dims: GemmDims) -> GemmConfig {
+    /// Run the configured selection policy for `dims` (uncached).
+    fn compute_config(&self, dims: GemmDims) -> GemmConfig {
         match &self.mode {
             ConfigMode::BlisStatic => {
                 let cfg = blis_static(&self.arch.name)
@@ -128,6 +212,75 @@ impl GemmEngine {
         }
     }
 
+    /// Upper bound on memoized selections: a long-lived server engine fed
+    /// ever-changing shapes must not grow without bound. On overflow the
+    /// whole map is reset (an epoch flush is simpler than LRU and the
+    /// recurring-shape workloads this cache targets refill it in a few
+    /// misses); stats keep accumulating across flushes.
+    const CONFIG_CACHE_CAP: usize = 4096;
+
+    /// Resolve the configuration this engine would use for `dims`,
+    /// memoized on `(mode, dims)` — repeated shapes (an LU trailing-update
+    /// sweep, a steady request mix) skip the scorer entirely.
+    pub fn plan_config(&self, dims: GemmDims) -> GemmConfig {
+        let key = (mode_key(&self.mode), dims);
+        if let Some(cfg) = self.config_cache.borrow().get(&key) {
+            let mut s = self.cache_stats.get();
+            s.hits += 1;
+            self.cache_stats.set(s);
+            return *cfg;
+        }
+        let cfg = self.compute_config(dims);
+        {
+            let mut cache = self.config_cache.borrow_mut();
+            if cache.len() >= Self::CONFIG_CACHE_CAP {
+                cache.clear();
+            }
+            cache.insert(key, cfg);
+        }
+        let mut s = self.cache_stats.get();
+        s.misses += 1;
+        self.cache_stats.set(s);
+        cfg
+    }
+
+    /// Memo-cache accounting (hits/misses of [`Self::plan_config`]).
+    pub fn config_cache_stats(&self) -> ConfigCacheStats {
+        self.cache_stats.get()
+    }
+
+    /// Number of selections currently memoized (bounded by the cap).
+    pub fn config_cache_len(&self) -> usize {
+        self.config_cache.borrow().len()
+    }
+
+    /// Drop all memoized selections and reset the accounting.
+    pub fn clear_config_cache(&mut self) {
+        self.config_cache.borrow_mut().clear();
+        self.cache_stats.set(ConfigCacheStats::default());
+    }
+
+    /// Dispatch one configured GEMM to the pool-parallel or sequential
+    /// blocked driver.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch(
+        &mut self,
+        cfg: &GemmConfig,
+        kernel: &MicroKernelImpl,
+        alpha: f64,
+        a: MatView<'_>,
+        b: MatView<'_>,
+        beta: f64,
+        c: &mut MatViewMut<'_>,
+    ) {
+        match &self.pool {
+            Some(pool) if self.plan.threads > 1 => {
+                gemm_parallel(cfg, kernel, alpha, a, b, beta, c, self.plan.target, pool);
+            }
+            _ => gemm_blocked(cfg, kernel, alpha, a, b, beta, c, &mut self.workspace),
+        }
+    }
+
     /// `C = alpha * A * B + beta * C`.
     pub fn gemm(
         &mut self,
@@ -141,15 +294,12 @@ impl GemmEngine {
         let cfg = self.plan_config(dims);
         let kernel = self.implementation_for(cfg.mk);
         self.last_config = Some(cfg);
-        if self.plan.threads > 1 {
-            gemm_parallel(&cfg, &kernel, alpha, a, b, beta, c, self.plan, &mut self.workspaces);
-        } else {
-            gemm_blocked(&cfg, &kernel, alpha, a, b, beta, c, &mut self.workspaces[0]);
-        }
+        self.dispatch(&cfg, &kernel, alpha, a, b, beta, c);
     }
 
     /// Run with an explicit configuration, bypassing the policy (used by
     /// the experiment harness).
+    #[allow(clippy::too_many_arguments)]
     pub fn gemm_with_config(
         &mut self,
         cfg: &GemmConfig,
@@ -161,14 +311,11 @@ impl GemmEngine {
     ) {
         let kernel = self.implementation_for(cfg.mk);
         self.last_config = Some(*cfg);
-        if self.plan.threads > 1 {
-            gemm_parallel(&cfg.clone(), &kernel, alpha, a, b, beta, c, self.plan, &mut self.workspaces);
-        } else {
-            gemm_blocked(cfg, &kernel, alpha, a, b, beta, c, &mut self.workspaces[0]);
-        }
+        self.dispatch(cfg, &kernel, alpha, a, b, beta, c);
     }
 
     /// Run with an explicit named kernel (including prefetch variants).
+    #[allow(clippy::too_many_arguments)]
     pub fn gemm_with_kernel_name(
         &mut self,
         name: &str,
@@ -188,7 +335,7 @@ impl GemmEngine {
         let dims = GemmDims::new(a.rows, b.cols, a.cols);
         let cfg = GemmConfig { mk: kernel.spec, ccp: ccp.clamp_to(dims) };
         self.last_config = Some(cfg);
-        gemm_blocked(&cfg, &kernel, alpha, a, b, beta, c, &mut self.workspaces[0]);
+        gemm_blocked(&cfg, &kernel, alpha, a, b, beta, c, &mut self.workspace);
     }
 }
 
@@ -241,10 +388,59 @@ mod tests {
     }
 
     #[test]
-    fn parallel_engine_correct() {
+    fn parallel_engine_correct_and_pool_persistent() {
         let eng = GemmEngine::new(host_xeon(), ConfigMode::Refined)
             .with_plan(ThreadPlan { threads: 3, target: crate::gemm::ParallelLoop::G4 });
+        let pool = Arc::clone(eng.pool().expect("parallel plan provisions a pool"));
         check_engine(eng, 90, 70, 40);
+        assert_eq!(pool.threads(), 3);
+        assert_eq!(pool.spawned_workers(), 2, "exactly threads-1 workers, spawned once");
+    }
+
+    #[test]
+    fn with_plan_keeps_existing_pool_for_same_width() {
+        let eng = GemmEngine::new(host_xeon(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads: 3, target: crate::gemm::ParallelLoop::G4 });
+        let first = Arc::clone(eng.pool().unwrap());
+        let eng = eng.with_plan(ThreadPlan { threads: 3, target: crate::gemm::ParallelLoop::G3 });
+        assert!(Arc::ptr_eq(&first, eng.pool().unwrap()), "same width must reuse the pool");
+    }
+
+    #[test]
+    fn config_cache_hits_and_misses_are_accounted() {
+        let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+        let dims = GemmDims::new(120, 120, 24);
+        let first = eng.plan_config(dims);
+        assert_eq!(eng.config_cache_stats(), ConfigCacheStats { hits: 0, misses: 1 });
+        for _ in 0..4 {
+            assert_eq!(eng.plan_config(dims), first, "cached selection must be stable");
+        }
+        assert_eq!(eng.config_cache_stats(), ConfigCacheStats { hits: 4, misses: 1 });
+        // A different shape is a fresh miss...
+        eng.plan_config(GemmDims::new(60, 60, 24));
+        assert_eq!(eng.config_cache_stats(), ConfigCacheStats { hits: 4, misses: 2 });
+        // ...and so is the same shape under a different mode (stale-mode
+        // entries must never be served).
+        eng.mode = ConfigMode::BlisStatic;
+        let blis = eng.plan_config(dims);
+        assert_eq!(eng.config_cache_stats(), ConfigCacheStats { hits: 4, misses: 3 });
+        assert_ne!(blis, first);
+        eng.clear_config_cache();
+        assert_eq!(eng.config_cache_stats(), ConfigCacheStats::default());
+    }
+
+    #[test]
+    fn config_cache_is_bounded() {
+        // A server engine fed ever-changing shapes must not grow without
+        // bound: the map flushes at the cap, stats keep counting.
+        let eng =
+            GemmEngine::new(host_xeon(), ConfigMode::RefinedWithKernel(MicroKernel::new(8, 6)));
+        let n = GemmEngine::CONFIG_CACHE_CAP + 100;
+        for i in 0..n {
+            eng.plan_config(GemmDims::new(8 + i, 8, 8));
+        }
+        assert!(eng.config_cache_len() <= GemmEngine::CONFIG_CACHE_CAP);
+        assert_eq!(eng.config_cache_stats().misses, n as u64);
     }
 
     #[test]

@@ -49,7 +49,11 @@ impl Workspace {
 }
 
 /// Scale `C *= beta` (handled once, before the accumulation passes).
-fn scale_c(beta: f64, c: &mut MatViewMut<'_>) {
+/// Shared by the sequential and pool-parallel drivers — the parallel path
+/// (`parallel::scale_c_parallel`) splits exactly this column loop over
+/// the worker pool for large C, keeping the arithmetic (and therefore
+/// bitwise results) identical.
+pub(crate) fn scale_c(beta: f64, c: &mut MatViewMut<'_>) {
     if beta == 1.0 {
         return;
     }
@@ -64,6 +68,10 @@ fn scale_c(beta: f64, c: &mut MatViewMut<'_>) {
         }
     }
 }
+
+/// Elements of the stack scratch used for fringe tiles in
+/// [`macro_kernel`]; bounds the largest registrable micro-tile (32x32).
+pub(crate) const FRINGE_SCRATCH_ELEMS: usize = 32 * 32;
 
 /// Run the macro-kernel: loops G4/G5 over one packed (Ac, Bc) pair,
 /// updating the `mc_eff x nc_eff` block of C whose (0,0) element is at
@@ -89,6 +97,14 @@ pub(crate) unsafe fn macro_kernel(
     jr_range: (usize, usize),
 ) {
     let (mr, nr) = (kernel.spec.mr, kernel.spec.nr);
+    // Hard guard (not debug-only): a fringe tile is computed into a
+    // fixed-size stack scratch below, and a future >32-wide kernel
+    // registration must fail loudly here instead of silently corrupting
+    // the stack in release builds.
+    assert!(
+        mr * nr <= FRINGE_SCRATCH_ELEMS,
+        "micro-kernel tile {mr}x{nr} overflows the {FRINGE_SCRATCH_ELEMS}-element fringe scratch"
+    );
     let (jr_lo, jr_hi) = jr_range;
     debug_assert_eq!(jr_lo % nr, 0, "jr partition must align to nr");
     let mut jr = jr_lo;
@@ -105,9 +121,9 @@ pub(crate) unsafe fn macro_kernel(
             } else {
                 // Fringe tile: compute into an mr x nr scratch (packed
                 // operands are zero-padded so the excess rows/cols are
-                // exact zeros), then accumulate the live region.
-                let mut scratch = [0.0f64; 32 * 32];
-                debug_assert!(mr * nr <= scratch.len());
+                // exact zeros), then accumulate the live region. Sized by
+                // the hard assert at function entry.
+                let mut scratch = [0.0f64; FRINGE_SCRATCH_ELEMS];
                 (kernel.func)(kc_eff, a_panel.as_ptr(), b_panel.as_ptr(), scratch.as_mut_ptr(), mr);
                 for j in 0..nr_eff {
                     for i in 0..mr_eff {
@@ -277,6 +293,22 @@ mod tests {
         ws.ensure(&cfg_small);
         assert!(big > small);
         assert_eq!(ws.bytes(), big, "workspace must not shrink");
+    }
+
+    #[test]
+    #[should_panic(expected = "fringe scratch")]
+    fn oversized_micro_tile_is_rejected_in_release_too() {
+        // A hypothetical >32-wide kernel must be refused by a hard assert
+        // (the seed only debug_assert-ed, silently corrupting the stack
+        // in release builds).
+        let base = for_shape(MicroKernel::new(8, 6)).unwrap();
+        let fake = MicroKernelImpl { spec: MicroKernel::new(33, 33), ..base };
+        let cfg = GemmConfig { mk: fake.spec, ccp: Ccp::new(33, 33, 8) };
+        let a = MatrixF64::zeros(4, 4);
+        let b = MatrixF64::zeros(4, 4);
+        let mut c = MatrixF64::zeros(4, 4);
+        let mut ws = Workspace::new();
+        gemm_blocked(&cfg, &fake, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut(), &mut ws);
     }
 
     #[test]

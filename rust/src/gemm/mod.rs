@@ -5,10 +5,12 @@
 //! - [`microkernel`] — a registry of micro-kernel implementations
 //!   (portable const-generic scalar code and AVX2+FMA intrinsics),
 //! - [`blocked`] — the five loops G1..G5 around packing + micro-kernel,
-//! - [`parallel`] — loop G3/G4 multithreading (paper §2.2),
+//! - [`parallel`] — loop G3/G4 multithreading (paper §2.2) broadcast on
+//!   the persistent worker pool of [`crate::runtime::pool`], with
+//!   cooperative packing (see the module docs for the barrier protocol),
 //! - [`api`] — the co-design entry point: per-call dynamic selection of
-//!   micro-kernel and CCPs (the paper's contribution), plus the static
-//!   BLIS-like baseline mode.
+//!   micro-kernel and CCPs (the paper's contribution) with memoization,
+//!   plus the static BLIS-like baseline mode.
 
 pub mod api;
 pub mod blocked;
@@ -16,10 +18,10 @@ pub mod microkernel;
 pub mod packing;
 pub mod parallel;
 
-pub use api::{ConfigMode, GemmEngine};
+pub use api::{ConfigCacheStats, ConfigMode, GemmEngine};
 pub use blocked::{gemm_blocked, Workspace};
 pub use microkernel::{registry, MicroKernelImpl};
-pub use parallel::{ParallelLoop, ThreadPlan};
+pub use parallel::{gemm_parallel, ParallelLoop, ThreadPlan};
 
 /// Reference (naive triple-loop) GEMM: `C = alpha * A * B + beta * C`.
 /// The correctness oracle for everything in this module.

@@ -1,26 +1,71 @@
-//! Multi-threaded GEMM: loop G3 / loop G4 parallelization (paper §2.2).
+//! Multi-threaded GEMM on the persistent worker pool: loop G3 / loop G4
+//! parallelization (paper §2.2) without per-block thread spawns.
 //!
-//! - **G4** ("when the L2 is shared"): all threads share one packed `Ac`
-//!   and `Bc`; the `jr` loop over `nc` is partitioned at `nr` granularity.
-//!   Distribution grain is small (`nr`), so 16 threads are easily fed —
-//!   the behaviour paper §4.3.2 observes on the bottom plot of Figure 12.
+//! # Architecture
+//!
+//! The seed implementation called `std::thread::scope` inside the
+//! innermost `ic` loop, spawning fresh OS threads for every macro-block —
+//! thousands of spawns for one large LU. This version broadcasts **one
+//! job per GEMM call** to a [`WorkerPool`] of parked workers
+//! (`runtime::pool`): every rank executes the same G1/G2(/G3) loop nest
+//! and synchronizes with the pool barrier, so after pool construction the
+//! steady state performs **zero thread spawns** (asserted by the
+//! `pool_runtime` regression tests).
+//!
+//! - **G4** ("when the L2 is shared"): all ranks share one packed `Ac`
+//!   and `Bc` (pinned in the pool's rank-0 workspace); the `jr` loop over
+//!   `nc` is partitioned at `nr` granularity. Distribution grain is small
+//!   (`nr`), so 16 threads are easily fed — the behaviour paper §4.3.2
+//!   observes on the bottom plot of Figure 12.
 //! - **G3** ("when L1 and L2 are private"): the `ic` loop over `m` is
-//!   partitioned at `mc` granularity; each thread packs its own `Ac` into
-//!   a private workspace. With the refined model's *large* `mc` there are
-//!   few iterations to hand out (`m/mc` chunks), reproducing the paper's
-//!   G3 load-imbalance analysis (`10,000/384/16 = 1.62 iterations per
-//!   thread`).
+//!   partitioned at `mc` granularity; each rank packs its own `Ac` into
+//!   its pinned pool workspace. With the refined model's *large* `mc`
+//!   there are few iterations to hand out (`m/mc` chunks), reproducing
+//!   the paper's G3 load-imbalance analysis (`10,000/384/16 = 1.62
+//!   iterations per thread`).
+//!
+//! # Cooperative packing & barrier protocol
+//!
+//! Packing is **cooperative**: instead of the leader packing serially
+//! while workers idle, every rank packs a disjoint micro-panel range of
+//! the shared buffer (`Bc` split over `nc` at `nr` granularity; for G4
+//! also `Ac` split over `mc` at `mr` granularity). Because micro-panels
+//! are the packed layout's unit, rank boundaries fall exactly on buffer
+//! offsets `(lo/grain) * grain * kc` and the cooperative result is
+//! byte-identical to a serial pack. The barrier discipline, which every
+//! rank must follow even when its own partition is empty:
+//!
+//! ```text
+//! G4, per (jc, pc):   barrier      // prior compute done: Bc may be overwritten
+//!                     pack Bc cooperatively
+//!     per ic:         barrier      // prior compute done: Ac may be overwritten
+//!                     pack Ac cooperatively
+//!                     barrier      // both packs complete: buffers readable
+//!                     compute own jr-range of the macro-kernel
+//!
+//! G3, per (jc, pc):   barrier      // prior compute done: Bc may be overwritten
+//!                     pack Bc cooperatively
+//!                     barrier      // Bc complete
+//!     per own ic:     pack private Ac; compute full jr-range
+//! ```
+//!
+//! Rank boundaries are `mc`/`nr`-aligned and each C tile is written by
+//! exactly one rank with exactly the sequential operation order, so the
+//! parallel paths are **bitwise identical** to [`gemm_blocked`] — the
+//! determinism tests assert `max_abs_diff == 0.0` exactly.
 //!
 //! The host sandbox exposes a single core, so these paths are validated
 //! for correctness here while parallel *performance* figures come from
 //! [`crate::perfmodel`] (see DESIGN.md substitutions).
 
 use crate::model::ccp::GemmConfig;
+use crate::model::GemmDims;
+use crate::runtime::pool::{PoolCtx, WorkerPool};
 use crate::util::matrix::{MatView, MatViewMut};
 
-use super::blocked::{macro_kernel, Workspace};
+use super::blocked::{gemm_blocked, macro_kernel, scale_c, Workspace};
 use super::microkernel::MicroKernelImpl;
-use super::packing::{pack_a, pack_b};
+use super::packing::{pack_a, pack_b, packed_a_len, packed_b_len};
 
 /// Which loop the threads split (paper §2.2 discussion).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -58,25 +103,137 @@ impl SendPtr {
     }
 }
 
-/// Split `total` items into `parts` contiguous chunks at `grain`
-/// alignment; returns (start, end) per part. Chunks may be empty.
-pub fn partition(total: usize, parts: usize, grain: usize) -> Vec<(usize, usize)> {
-    assert!(parts > 0 && grain > 0);
-    let blocks = total.div_ceil(grain);
-    let per = blocks.div_ceil(parts);
-    (0..parts)
-        .map(|t| {
-            let lo = (t * per * grain).min(total);
-            let hi = ((t + 1) * per * grain).min(total);
-            (lo, hi)
-        })
-        .collect()
+/// A packed buffer shared across ranks. Mutation is only ever through
+/// disjoint micro-panel ranges between barriers; reads only happen after
+/// the barrier that ends the pack phase.
+#[derive(Clone, Copy)]
+struct SharedBuf {
+    ptr: *mut f64,
+    len: usize,
+}
+unsafe impl Send for SharedBuf {}
+unsafe impl Sync for SharedBuf {}
+
+impl SharedBuf {
+    fn new(buf: &mut [f64]) -> Self {
+        Self { ptr: buf.as_mut_ptr(), len: buf.len() }
+    }
+
+    /// # Safety
+    /// The `[off, off + len)` range must be disjoint from every range any
+    /// other rank mutates before the next barrier.
+    #[allow(clippy::mut_from_ref)] // aliasing discipline documented above
+    unsafe fn range_mut(&self, off: usize, len: usize) -> &mut [f64] {
+        debug_assert!(off + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(off), len)
+    }
+
+    /// # Safety
+    /// No rank may mutate the buffer between the barrier that completed
+    /// the pack and the barrier that allows the next pack.
+    unsafe fn as_slice(&self) -> &[f64] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
 }
 
-/// Multi-threaded blocked GEMM: `C = alpha*A*B + beta*C`.
-///
-/// `workspaces` must provide one [`Workspace`] per thread for G3 (private
-/// `Ac`); for G4 only `workspaces[0]` is used.
+/// This rank's contiguous share of `total` items at `grain` alignment:
+/// whole blocks are dealt out as evenly as possible (remainder blocks go
+/// one-each to the lowest ranks), so chunk sizes differ by at most one
+/// block. Constant-time, allocation-free (called in inner loops).
+pub fn partition_rank(total: usize, parts: usize, rank: usize, grain: usize) -> (usize, usize) {
+    assert!(parts > 0 && grain > 0 && rank < parts);
+    let blocks = total.div_ceil(grain);
+    let base = blocks / parts;
+    let rem = blocks % parts;
+    let start = rank * base + rank.min(rem);
+    let count = base + usize::from(rank < rem);
+    let lo = (start * grain).min(total);
+    let hi = ((start + count) * grain).min(total);
+    (lo, hi)
+}
+
+/// Split `total` items into `parts` contiguous chunks at `grain`
+/// alignment; returns (start, end) per part. Chunks may be empty, and
+/// block counts differ by at most one (the seed's `div_ceil`-of-
+/// `div_ceil` scheme packed the whole remainder into the early chunks,
+/// e.g. 10 blocks / 4 threads → 3,3,3,1 with idle tails; this yields
+/// 3,3,2,2).
+pub fn partition(total: usize, parts: usize, grain: usize) -> Vec<(usize, usize)> {
+    (0..parts).map(|rank| partition_rank(total, parts, rank, grain)).collect()
+}
+
+/// Cooperatively pack the `kc_eff x nc_eff` block `b_block` into `buf`:
+/// this rank packs the `nr`-aligned column range assigned by
+/// [`partition_rank`]. Byte-identical to a serial [`pack_b`].
+fn coop_pack_b(rank: usize, threads: usize, b_block: MatView<'_>, buf: SharedBuf, nr: usize) {
+    let (kc_eff, nc_eff) = (b_block.rows, b_block.cols);
+    let (lo, hi) = partition_rank(nc_eff, threads, rank, nr);
+    if lo < hi {
+        let off = (lo / nr) * nr * kc_eff;
+        let len = packed_b_len(kc_eff, hi - lo, nr);
+        // SAFETY: ranges from partition_rank are disjoint across ranks.
+        let dst = unsafe { buf.range_mut(off, len) };
+        pack_b(b_block.sub(0, lo, kc_eff, hi - lo), dst, nr);
+    }
+}
+
+/// Cooperatively pack the `mc_eff x kc_eff` block `a_block` into `buf`:
+/// this rank packs the `mr`-aligned row range assigned by
+/// [`partition_rank`]. Byte-identical to a serial [`pack_a`].
+fn coop_pack_a(
+    rank: usize,
+    threads: usize,
+    a_block: MatView<'_>,
+    buf: SharedBuf,
+    mr: usize,
+    alpha: f64,
+) {
+    let (mc_eff, kc_eff) = (a_block.rows, a_block.cols);
+    let (lo, hi) = partition_rank(mc_eff, threads, rank, mr);
+    if lo < hi {
+        let off = (lo / mr) * mr * kc_eff;
+        let len = packed_a_len(hi - lo, kc_eff, mr);
+        // SAFETY: ranges from partition_rank are disjoint across ranks.
+        let dst = unsafe { buf.range_mut(off, len) };
+        pack_a(a_block.sub(lo, 0, hi - lo, kc_eff), dst, mr, alpha);
+    }
+}
+
+/// `C *= beta`, split over columns on the pool for large C (small C is
+/// scaled in place by the caller thread — forking costs more than it
+/// saves). Column-wise arithmetic is identical to the sequential
+/// [`scale_c`], preserving bitwise determinism.
+pub(crate) fn scale_c_parallel(beta: f64, c: &mut MatViewMut<'_>, pool: &WorkerPool) {
+    if beta == 1.0 {
+        return;
+    }
+    const PARALLEL_ELEMS: usize = 256 * 256;
+    if pool.threads() == 1 || c.rows * c.cols < PARALLEL_ELEMS {
+        scale_c(beta, c);
+        return;
+    }
+    let (rows, cols, ld) = (c.rows, c.cols, c.ld);
+    let base = SendPtr(c.data.as_mut_ptr());
+    pool.run(&|ctx: &PoolCtx<'_>| {
+        let (lo, hi) = partition_rank(cols, ctx.threads, ctx.rank, 1);
+        for j in lo..hi {
+            // SAFETY: ranks own disjoint column ranges of C.
+            let col = unsafe { std::slice::from_raw_parts_mut(base.ptr().add(j * ld), rows) };
+            if beta == 0.0 {
+                col.fill(0.0);
+            } else {
+                for v in col {
+                    *v *= beta;
+                }
+            }
+        }
+    });
+}
+
+/// Multi-threaded blocked GEMM: `C = alpha*A*B + beta*C`, broadcast as a
+/// single job on `pool` (see the module docs for the barrier protocol).
+/// With a single-thread pool this degenerates to [`gemm_blocked`] on the
+/// pool's rank-0 workspace.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_parallel(
     cfg: &GemmConfig,
@@ -86,42 +243,28 @@ pub fn gemm_parallel(
     b: MatView<'_>,
     beta: f64,
     c: &mut MatViewMut<'_>,
-    plan: ThreadPlan,
-    workspaces: &mut [Workspace],
+    target: ParallelLoop,
+    pool: &WorkerPool,
 ) {
-    assert!(workspaces.len() >= plan.threads.max(1), "one workspace per thread required");
-    if plan.threads <= 1 {
-        super::blocked::gemm_blocked(cfg, kernel, alpha, a, b, beta, c, &mut workspaces[0]);
+    assert_eq!(kernel.spec, cfg.mk, "kernel/config shape mismatch");
+    assert_eq!(a.cols, b.rows, "inner dimension mismatch");
+    assert_eq!(c.rows, a.rows, "C row mismatch");
+    assert_eq!(c.cols, b.cols, "C col mismatch");
+    if pool.threads() == 1 {
+        let mut ws = pool.workspace(0);
+        gemm_blocked(cfg, kernel, alpha, a, b, beta, c, &mut ws);
         return;
     }
-    assert_eq!(a.cols, b.rows);
-    assert_eq!(c.rows, a.rows);
-    assert_eq!(c.cols, b.cols);
     let (m, n, k) = (a.rows, b.cols, a.cols);
-    // beta scaling once, up front (single-threaded; O(mn)).
-    if beta != 1.0 {
-        for j in 0..c.cols {
-            let col = &mut c.data[j * c.ld..j * c.ld + c.rows];
-            if beta == 0.0 {
-                col.fill(0.0);
-            } else {
-                for v in col {
-                    *v *= beta;
-                }
-            }
-        }
-    }
+    scale_c_parallel(beta, c, pool);
     if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
         return;
     }
-    let ccp = cfg.ccp.clamp_to(crate::model::GemmDims::new(m, n, k));
+    let ccp = cfg.ccp.clamp_to(GemmDims::new(m, n, k));
     let eff = GemmConfig { mk: cfg.mk, ccp };
-    for ws in workspaces.iter_mut() {
-        ws.ensure(&eff);
-    }
-    match plan.target {
-        ParallelLoop::G4 => gemm_parallel_g4(&eff, kernel, alpha, a, b, c, plan.threads, &mut workspaces[0]),
-        ParallelLoop::G3 => gemm_parallel_g3(&eff, kernel, alpha, a, b, c, plan.threads, workspaces),
+    match target {
+        ParallelLoop::G4 => gemm_parallel_g4(&eff, kernel, alpha, a, b, c, pool),
+        ParallelLoop::G3 => gemm_parallel_g3(&eff, kernel, alpha, a, b, c, pool),
     }
 }
 
@@ -132,11 +275,168 @@ fn gemm_parallel_g4(
     a: MatView<'_>,
     b: MatView<'_>,
     c: &mut MatViewMut<'_>,
-    threads: usize,
-    ws: &mut Workspace,
+    pool: &WorkerPool,
 ) {
     let (m, n, k) = (a.rows, b.cols, a.cols);
     let (mc, nc, kc) = (cfg.ccp.mc, cfg.ccp.nc, cfg.ccp.kc);
+    let (mr, nr) = (cfg.mk.mr, cfg.mk.nr);
+    let ldc = c.ld;
+    // The team-shared Ac/Bc are pinned in the pool's rank-0 workspace;
+    // size them while we hold the lock, then share raw views. Keeping the
+    // guard for the whole job both pins the buffers and excludes any
+    // other (erroneous) borrower.
+    let mut ws0 = pool.workspace(0);
+    ws0.ensure(cfg);
+    let a_shared = SharedBuf::new(&mut ws0.a_buf);
+    let b_shared = SharedBuf::new(&mut ws0.b_buf);
+    let cbase = SendPtr(c.data.as_mut_ptr());
+    pool.run(&|ctx: &PoolCtx<'_>| {
+        let (rank, threads) = (ctx.rank, ctx.threads);
+        let mut jc = 0; // Loop G1
+        while jc < n {
+            let nc_eff = nc.min(n - jc);
+            let mut pc = 0; // Loop G2
+            while pc < k {
+                let kc_eff = kc.min(k - pc);
+                ctx.barrier(); // prior compute done: Bc may be overwritten
+                coop_pack_b(rank, threads, b.sub(pc, jc, kc_eff, nc_eff), b_shared, nr);
+                let mut ic = 0; // Loop G3
+                while ic < m {
+                    let mc_eff = mc.min(m - ic);
+                    ctx.barrier(); // prior compute done: Ac may be overwritten
+                    coop_pack_a(rank, threads, a.sub(ic, pc, mc_eff, kc_eff), a_shared, mr, alpha);
+                    ctx.barrier(); // packs complete: buffers readable
+                    let (lo, hi) = partition_rank(nc_eff, threads, rank, nr);
+                    if lo < hi {
+                        // SAFETY: pack phases are barrier-complete; each
+                        // rank updates a disjoint jr-range of C.
+                        unsafe {
+                            macro_kernel(
+                                kernel,
+                                kc_eff,
+                                mc_eff,
+                                nc_eff,
+                                a_shared.as_slice(),
+                                b_shared.as_slice(),
+                                cbase.ptr().add(jc * ldc + ic),
+                                ldc,
+                                (lo, hi),
+                            );
+                        }
+                    }
+                    ic += mc;
+                }
+                pc += kc;
+            }
+            jc += nc;
+        }
+    });
+    drop(ws0);
+}
+
+fn gemm_parallel_g3(
+    cfg: &GemmConfig,
+    kernel: &MicroKernelImpl,
+    alpha: f64,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    c: &mut MatViewMut<'_>,
+    pool: &WorkerPool,
+) {
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    let (mc, nc, kc) = (cfg.ccp.mc, cfg.ccp.nc, cfg.ccp.kc);
+    let (mr, nr) = (cfg.mk.mr, cfg.mk.nr);
+    let ldc = c.ld;
+    // The team-shared Bc (and rank 0's private Ac) live in the rank-0
+    // workspace, locked by the leader for the duration of the job; ranks
+    // 1.. pin their own workspaces inside the job. The G3 ic-partition is
+    // mc-aligned, so each rank's macro-blocks coincide exactly with the
+    // sequential schedule.
+    let mut ws0 = pool.workspace(0);
+    ws0.ensure(cfg);
+    let b_shared = SharedBuf::new(&mut ws0.b_buf);
+    let a0_buf = SharedBuf::new(&mut ws0.a_buf);
+    let cbase = SendPtr(c.data.as_mut_ptr());
+    pool.run(&|ctx: &PoolCtx<'_>| {
+        let (rank, threads) = (ctx.rank, ctx.threads);
+        // Rank 0's Ac is the leader-locked workspace buffer; other ranks
+        // use their own pinned pool workspace.
+        let mut ws_own = if rank == 0 { None } else { Some(ctx.workspace()) };
+        if let Some(ws) = ws_own.as_mut() {
+            ws.ensure(cfg);
+        }
+        let (lo, hi) = partition_rank(m, threads, rank, mc);
+        let mut jc = 0; // Loop G1
+        while jc < n {
+            let nc_eff = nc.min(n - jc);
+            let mut pc = 0; // Loop G2
+            while pc < k {
+                let kc_eff = kc.min(k - pc);
+                ctx.barrier(); // prior compute done: Bc may be overwritten
+                coop_pack_b(rank, threads, b.sub(pc, jc, kc_eff, nc_eff), b_shared, nr);
+                ctx.barrier(); // Bc complete
+                let mut ic = lo; // Loop G3 over this rank's chunk
+                while ic < hi {
+                    let mc_eff = mc.min(hi - ic);
+                    let a_buf: &mut [f64] = match ws_own.as_mut() {
+                        Some(ws) => &mut ws.a_buf,
+                        // SAFETY: only rank 0 touches the rank-0 buffer.
+                        None => unsafe { a0_buf.range_mut(0, a0_buf.len) },
+                    };
+                    pack_a(a.sub(ic, pc, mc_eff, kc_eff), a_buf, mr, alpha);
+                    // SAFETY: Bc is barrier-complete; each rank updates a
+                    // disjoint (mc-aligned) row-range of C.
+                    unsafe {
+                        macro_kernel(
+                            kernel,
+                            kc_eff,
+                            mc_eff,
+                            nc_eff,
+                            a_buf,
+                            b_shared.as_slice(),
+                            cbase.ptr().add(jc * ldc + ic),
+                            ldc,
+                            (0, nc_eff),
+                        );
+                    }
+                    ic += mc;
+                }
+                pc += kc;
+            }
+            jc += nc;
+        }
+    });
+    drop(ws0);
+}
+
+/// The seed's spawn-per-macro-block G4 driver, retained **only** as the
+/// ablation baseline (`exp_ablation` case "spawn-per-block" and the pool
+/// regression tests): it spawns fresh OS threads inside the `ic` loop,
+/// which is exactly the overhead the persistent pool removes.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_parallel_spawning(
+    cfg: &GemmConfig,
+    kernel: &MicroKernelImpl,
+    alpha: f64,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    beta: f64,
+    c: &mut MatViewMut<'_>,
+    threads: usize,
+    ws: &mut Workspace,
+) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    scale_c(beta, c);
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+    let ccp = cfg.ccp.clamp_to(GemmDims::new(m, n, k));
+    let eff = GemmConfig { mk: cfg.mk, ccp };
+    ws.ensure(&eff);
+    let (mc, nc, kc) = (ccp.mc, ccp.nc, ccp.kc);
     let ldc = c.ld;
     let mut jc = 0;
     while jc < n {
@@ -144,13 +444,13 @@ fn gemm_parallel_g4(
         let mut pc = 0;
         while pc < k {
             let kc_eff = kc.min(k - pc);
-            pack_b(b.sub(pc, jc, kc_eff, nc_eff), &mut ws.b_buf, cfg.mk.nr);
+            pack_b(b.sub(pc, jc, kc_eff, nc_eff), &mut ws.b_buf, eff.mk.nr);
             let mut ic = 0;
             while ic < m {
                 let mc_eff = mc.min(m - ic);
-                pack_a(a.sub(ic, pc, mc_eff, kc_eff), &mut ws.a_buf, cfg.mk.mr, alpha);
+                pack_a(a.sub(ic, pc, mc_eff, kc_eff), &mut ws.a_buf, eff.mk.mr, alpha);
                 let base = SendPtr(unsafe { c.data.as_mut_ptr().add(jc * ldc + ic) });
-                let parts = partition(nc_eff, threads, cfg.mk.nr);
+                let parts = partition(nc_eff, threads, eff.mk.nr);
                 let a_buf = &ws.a_buf;
                 let b_buf = &ws.b_buf;
                 std::thread::scope(|s| {
@@ -179,79 +479,6 @@ fn gemm_parallel_g4(
     }
 }
 
-fn gemm_parallel_g3(
-    cfg: &GemmConfig,
-    kernel: &MicroKernelImpl,
-    alpha: f64,
-    a: MatView<'_>,
-    b: MatView<'_>,
-    c: &mut MatViewMut<'_>,
-    threads: usize,
-    workspaces: &mut [Workspace],
-) {
-    let (m, n, k) = (a.rows, b.cols, a.cols);
-    let (mc, nc, kc) = (cfg.ccp.mc, cfg.ccp.nc, cfg.ccp.kc);
-    let ldc = c.ld;
-    // The shared Bc lives in workspace 0; split A workspaces off first so
-    // each worker gets a disjoint &mut Workspace.
-    let (ws0, rest) = workspaces.split_first_mut().unwrap();
-    let mut jc = 0;
-    while jc < n {
-        let nc_eff = nc.min(n - jc);
-        let mut pc = 0;
-        while pc < k {
-            let kc_eff = kc.min(k - pc);
-            pack_b(b.sub(pc, jc, kc_eff, nc_eff), &mut ws0.b_buf, cfg.mk.nr);
-            let b_buf = &ws0.b_buf;
-            // Partition the ic range at mc granularity (the paper's point:
-            // only ceil(m/mc) chunks exist to distribute).
-            let parts = partition(m, threads, mc);
-            let base = SendPtr(unsafe { c.data.as_mut_ptr().add(jc * ldc) });
-            std::thread::scope(|s| {
-                let mut rest_iter = rest.iter_mut();
-                for (t, &(lo, hi)) in parts.iter().enumerate().skip(1) {
-                    let ws_t = rest_iter.next().expect("workspace per thread");
-                    if lo >= hi {
-                        continue;
-                    }
-                    let base = base;
-                    s.spawn(move || {
-                        let mut ic = lo;
-                        while ic < hi {
-                            let mc_eff = mc.min(hi - ic);
-                            pack_a(a.sub(ic, pc, mc_eff, kc_eff), &mut ws_t.a_buf, cfg.mk.mr, alpha);
-                            unsafe {
-                                macro_kernel(
-                                    kernel, kc_eff, mc_eff, nc_eff, &ws_t.a_buf, b_buf,
-                                    base.ptr().add(ic), ldc, (0, nc_eff),
-                                );
-                            }
-                            ic += mc;
-                        }
-                        let _ = t;
-                    });
-                }
-                // Leader handles chunk 0 with ws0's a_buf.
-                let (lo, hi) = parts[0];
-                let mut ic = lo;
-                while ic < hi {
-                    let mc_eff = mc.min(hi - ic);
-                    pack_a(a.sub(ic, pc, mc_eff, kc_eff), &mut ws0.a_buf, cfg.mk.mr, alpha);
-                    unsafe {
-                        macro_kernel(
-                            kernel, kc_eff, mc_eff, nc_eff, &ws0.a_buf, b_buf,
-                            base.ptr().add(ic), ldc, (0, nc_eff),
-                        );
-                    }
-                    ic += mc;
-                }
-            });
-            pc += kc;
-        }
-        jc += nc;
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -268,16 +495,25 @@ mod tests {
         let a = MatrixF64::random(m, k, &mut rng);
         let b = MatrixF64::random(k, n, &mut rng);
         let mut c = MatrixF64::random(m, n, &mut rng);
+        // Reference for accuracy...
         let mut expect = c.clone();
         gemm_reference(1.0, a.view(), b.view(), 1.0, &mut expect.view_mut());
-        let mut wss: Vec<Workspace> = (0..threads).map(|_| Workspace::new()).collect();
+        // ...and the sequential blocked path for bitwise determinism.
+        let mut c_seq = c.clone();
+        let mut ws = Workspace::new();
+        gemm_blocked(&cfg, &kernel, 1.0, a.view(), b.view(), 1.0, &mut c_seq.view_mut(), &mut ws);
+        let pool = WorkerPool::new(threads);
         gemm_parallel(
-            &cfg, &kernel, 1.0, a.view(), b.view(), 1.0, &mut c.view_mut(),
-            ThreadPlan { threads, target }, &mut wss,
+            &cfg, &kernel, 1.0, a.view(), b.view(), 1.0, &mut c.view_mut(), target, &pool,
         );
         assert!(
             c.max_abs_diff(&expect) < 1e-12 * (k as f64),
-            "{target:?} x{threads} {m}x{n}x{k} diverges"
+            "{target:?} x{threads} {m}x{n}x{k} diverges from reference"
+        );
+        assert_eq!(
+            c.max_abs_diff(&c_seq),
+            0.0,
+            "{target:?} x{threads} {m}x{n}x{k} must be bitwise identical to gemm_blocked"
         );
     }
 
@@ -303,8 +539,75 @@ mod tests {
     }
 
     #[test]
-    fn single_thread_delegates_to_blocked() {
+    fn single_thread_pool_delegates_to_blocked() {
         run_parallel(ParallelLoop::G3, 1, 33, 21, 17, Ccp::new(16, 12, 8));
+    }
+
+    #[test]
+    fn pool_is_reusable_across_calls_and_targets() {
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp: Ccp::new(32, 24, 16) };
+        let pool = WorkerPool::new(3);
+        let mut rng = Pcg64::seed(99);
+        for (i, target) in [ParallelLoop::G4, ParallelLoop::G3, ParallelLoop::G4]
+            .into_iter()
+            .enumerate()
+        {
+            let (m, n, k) = (40 + 7 * i, 30 + 5 * i, 20 + 3 * i);
+            let a = MatrixF64::random(m, k, &mut rng);
+            let b = MatrixF64::random(k, n, &mut rng);
+            let mut c = MatrixF64::zeros(m, n);
+            let mut expect = MatrixF64::zeros(m, n);
+            gemm_reference(1.0, a.view(), b.view(), 0.0, &mut expect.view_mut());
+            gemm_parallel(
+                &cfg, &kernel, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut(), target, &pool,
+            );
+            assert!(c.max_abs_diff(&expect) < 1e-12 * k as f64, "call {i} ({target:?})");
+        }
+        assert_eq!(pool.spawned_workers(), 2, "reuse must not spawn more workers");
+    }
+
+    #[test]
+    fn parallel_beta_scaling_large_c_is_exact() {
+        // 300x300 crosses the parallel scale_c threshold.
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp: Ccp::new(64, 48, 16) };
+        let mut rng = Pcg64::seed(7);
+        let (m, n, k) = (300, 300, 9);
+        let a = MatrixF64::random(m, k, &mut rng);
+        let b = MatrixF64::random(k, n, &mut rng);
+        let mut c = MatrixF64::random(m, n, &mut rng);
+        let mut c_seq = c.clone();
+        let mut ws = Workspace::new();
+        gemm_blocked(&cfg, &kernel, 1.0, a.view(), b.view(), -0.5, &mut c_seq.view_mut(), &mut ws);
+        let pool = WorkerPool::new(3);
+        gemm_parallel(
+            &cfg, &kernel, 1.0, a.view(), b.view(), -0.5, &mut c.view_mut(),
+            ParallelLoop::G4, &pool,
+        );
+        assert_eq!(c.max_abs_diff(&c_seq), 0.0, "beta path must stay bitwise deterministic");
+    }
+
+    #[test]
+    fn spawning_baseline_matches_blocked() {
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp: Ccp::new(32, 24, 16) };
+        let mut rng = Pcg64::seed(31);
+        let (m, n, k) = (61, 53, 29);
+        let a = MatrixF64::random(m, k, &mut rng);
+        let b = MatrixF64::random(k, n, &mut rng);
+        let mut c = MatrixF64::random(m, n, &mut rng);
+        let mut c_seq = c.clone();
+        let mut ws = Workspace::new();
+        gemm_blocked(&cfg, &kernel, 1.0, a.view(), b.view(), 1.0, &mut c_seq.view_mut(), &mut ws);
+        let mut ws2 = Workspace::new();
+        gemm_parallel_spawning(
+            &cfg, &kernel, 1.0, a.view(), b.view(), 1.0, &mut c.view_mut(), 3, &mut ws2,
+        );
+        assert_eq!(c.max_abs_diff(&c_seq), 0.0);
     }
 
     #[test]
@@ -325,5 +628,23 @@ mod tests {
                 assert!(lo == total || lo % grain == 0);
             }
         }
+    }
+
+    #[test]
+    fn partition_is_balanced() {
+        // The seed's scheme gave 10 blocks / 4 threads -> 3,3,3,1 (and
+        // worse: trailing empty chunks). Block counts must now differ by
+        // at most one.
+        for (total, parts, grain) in [(100, 4, 10), (70, 4, 7), (33, 5, 1), (160, 16, 10)] {
+            let p = partition(total, parts, grain);
+            let counts: Vec<usize> = p.iter().map(|&(lo, hi)| (hi - lo).div_ceil(grain)).collect();
+            let max = *counts.iter().max().unwrap();
+            let min = *counts.iter().min().unwrap();
+            assert!(max - min <= 1, "unbalanced {counts:?} for total={total} grain={grain}");
+        }
+        // The motivating example: 10 blocks over 4 threads -> 3,3,2,2.
+        let p = partition(100, 4, 10);
+        let counts: Vec<usize> = p.iter().map(|&(lo, hi)| (hi - lo) / 10).collect();
+        assert_eq!(counts, vec![3, 3, 2, 2]);
     }
 }

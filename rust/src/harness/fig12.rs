@@ -4,7 +4,7 @@
 //! again).
 
 use crate::arch::{detect_host, epyc7282};
-use crate::gemm::{ConfigMode, GemmEngine, ParallelLoop};
+use crate::gemm::{ConfigMode, GemmEngine, ParallelLoop, ThreadPlan};
 use crate::lapack::lu::{lu_factor, lu_flops};
 use crate::model::{GemmDims, MicroKernel};
 use crate::perfmodel::{lu_perf, ModelParams};
@@ -46,9 +46,15 @@ pub fn modeled_epyc(s: usize, threads: usize, target: ParallelLoop) -> Vec<(Stri
         .collect()
 }
 
-/// Measured host LU (sequential; the host has one core).
+/// Measured host LU. Sequential by default (the sandbox host exposes one
+/// core); set `DLA_THREADS=<n>` to run the trailing updates on an
+/// `n`-thread persistent pool with loop G4. One engine is reused across
+/// the whole `b` sweep, so the pool is spawned once and the config memo
+/// cache turns repeated trailing shapes into lookups.
 pub fn measured_host(s: usize) -> Vec<(String, Vec<f64>)> {
     let arch = detect_host();
+    let threads: usize =
+        std::env::var("DLA_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1);
     let mut rng = Pcg64::seed(23);
     let a0 = MatrixF64::random_diag_dominant(s, &mut rng);
     [
@@ -57,10 +63,13 @@ pub fn measured_host(s: usize) -> Vec<(String, Vec<f64>)> {
     ]
     .into_iter()
     .map(|(label, mode)| {
+        let mut engine = GemmEngine::new(arch.clone(), mode.clone());
+        if threads > 1 {
+            engine = engine.with_plan(ThreadPlan { threads, target: ParallelLoop::G4 });
+        }
         let ys = PAPER_KS
             .iter()
             .map(|&b| {
-                let mut engine = GemmEngine::new(arch.clone(), mode.clone());
                 let mut best = f64::INFINITY;
                 for _ in 0..2 {
                     let sw = crate::util::Stopwatch::start();
@@ -70,7 +79,8 @@ pub fn measured_host(s: usize) -> Vec<(String, Vec<f64>)> {
                 lu_flops(s) / best / 1e9
             })
             .collect();
-        (format!("host {label}"), ys)
+        let tag = if threads > 1 { format!(" x{threads}/G4") } else { String::new() };
+        (format!("host {label}{tag}"), ys)
     })
     .collect()
 }

@@ -46,7 +46,8 @@ pub fn potf2(a: &mut MatViewMut<'_>) -> Result<(), usize> {
 
 /// Blocked lower Cholesky in place; only the lower triangle of `a` is
 /// referenced and overwritten with L. Trailing updates run through the
-/// engine so they follow the co-design policy.
+/// engine so they follow the co-design policy (and, like LU, reuse the
+/// engine's persistent worker pool and memoized per-shape selections).
 pub fn cholesky_blocked(a: &mut MatrixF64, block: usize, engine: &mut GemmEngine) -> Result<(), usize> {
     let s = a.rows();
     assert_eq!(a.cols(), s);

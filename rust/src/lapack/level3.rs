@@ -9,6 +9,10 @@
 //! - [`trsm_blocked_left_lower_unit`] — the LU TSOLVE at scale: the
 //!   triangular factor is processed in `nb x nb` diagonal blocks with the
 //!   bulk of the flops cast as GEMM (exactly how LAPACK casts TRSM).
+//!
+//! Every GEMM here flows through the caller's [`GemmEngine`], so these
+//! kernels inherit its persistent worker pool and memoized per-shape
+//! config selection — the per-block shapes recur across the whole sweep.
 
 use crate::gemm::GemmEngine;
 use crate::util::matrix::{MatrixF64, MatViewMut};

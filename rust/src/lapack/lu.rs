@@ -103,6 +103,12 @@ impl LuFactors {
 /// Blocked right-looking LU with partial pivoting, in place over `a`,
 /// trailing updates through the supplied [`GemmEngine`] (this is where
 /// the co-design policy — CCPs + micro-kernel per call — takes effect).
+///
+/// The engine amortizes two costs across the factorization sweep: its
+/// persistent worker pool (parallel plans spawn threads once, not per
+/// trailing update) and its config-selection memo cache (each distinct
+/// trailing shape `(s-k-b) x (s-k-b) x b` runs the scorer once; repeated
+/// factorizations of equal order are pure cache hits).
 pub fn lu_blocked(a: &mut MatrixF64, block: usize, engine: &mut GemmEngine) -> Result<Vec<usize>, usize> {
     let s = a.rows();
     assert_eq!(a.cols(), s, "LU requires a square matrix");

@@ -157,7 +157,9 @@ fn larft(v: &MatrixF64, tau: &[f64]) -> MatrixF64 {
 }
 
 /// Blocked QR: factor `a` (m x n, m >= n) in place with block size `b`;
-/// trailing updates go through the co-design engine.
+/// trailing updates go through the co-design engine. The three GEMMs per
+/// panel recur with per-step shapes, so the engine's config memo cache
+/// reduces selector work to one scoring pass per distinct shape.
 pub fn qr_blocked(a0: &MatrixF64, block: usize, engine: &mut GemmEngine) -> QrFactors {
     let (m, n) = (a0.rows(), a0.cols());
     assert!(m >= n, "qr_blocked expects m >= n");

@@ -24,10 +24,13 @@
 //!   they substitute for the paper's PMU hardware counters.
 //! - [`perfmodel`] — an analytical performance model (single-core and
 //!   multicore G3/G4) that turns simulated miss counts into GFLOPS curves.
-//! - [`runtime`] — a PJRT runtime that loads the AOT-compiled JAX/Pallas
-//!   artifacts (HLO text) and executes them from Rust.
-//! - [`coordinator`] — the serving layer: a request loop with a workspace
-//!   pool and per-call dynamic (model-driven) configuration.
+//! - [`runtime`] — the persistent fork-join worker pool behind the
+//!   parallel GEMM drivers, plus (behind the `pjrt` feature) a PJRT
+//!   runtime that loads the AOT-compiled JAX/Pallas artifacts (HLO text)
+//!   and executes them from Rust.
+//! - [`coordinator`] — the serving layer: a request loop with persistent
+//!   worker/workspace pools, memoized per-shape configuration selection
+//!   and per-call dynamic (model-driven) dispatch.
 //! - [`harness`] — regeneration code for every table and figure in the
 //!   paper's evaluation section.
 //!

@@ -1,26 +1,50 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
-//! by `python/compile/aot.py`) and executes them from Rust — the bridge
-//! between Layer 3 (this crate) and Layers 1/2 (JAX + Pallas).
+//! Runtime infrastructure for the serving stack.
 //!
-//! Python never runs at request time: the HLO text is parsed by XLA's
-//! text parser (`HloModuleProto::from_text_file`, which reassigns
-//! instruction ids — see /opt/xla-example/README.md for why text, not
-//! serialized protos), compiled once per artifact on the PJRT CPU
-//! client, and cached.
+//! Two halves live here:
+//!
+//! - [`pool`] — the **persistent fork-join worker pool** that backs the
+//!   multi-threaded GEMM drivers (`gemm::parallel`): parked workers, an
+//!   epoch/barrier task broadcast, and per-worker pinned packing
+//!   workspaces. This is the amortized worker team Catalán et al. and
+//!   Buttari et al. show multicore DLA needs (see PAPERS.md), replacing
+//!   the seed's spawn-per-macro-block threading.
+//! - **PJRT bridge** (`pjrt` feature): loads the AOT artifacts
+//!   (`artifacts/*.hlo.txt`, produced by `python/compile/aot.py`) and
+//!   executes them from Rust — the bridge between Layer 3 (this crate)
+//!   and Layers 1/2 (JAX + Pallas). Python never runs at request time:
+//!   the HLO text is parsed by XLA's text parser
+//!   (`HloModuleProto::from_text_file`, which reassigns instruction ids —
+//!   see /opt/xla-example/README.md for why text, not serialized protos),
+//!   compiled once per artifact on the PJRT CPU client, and cached.
+//!   Compile-gated because the `xla` crate is unavailable in the offline
+//!   build environment; enable the `pjrt` feature and supply the crate to
+//!   restore [`convert`], [`registry`], [`PjrtEngine`] and the artifact
+//!   LU driver.
 
+pub mod pool;
+
+#[cfg(feature = "pjrt")]
 pub mod convert;
+#[cfg(feature = "pjrt")]
 pub mod registry;
 
+#[cfg(feature = "pjrt")]
 pub use convert::{literal_to_matrix, matrix_to_literal};
+#[cfg(feature = "pjrt")]
 pub use registry::{Artifact, ArtifactKind, Registry};
 
+pub use pool::{PoolCtx, WorkerPool};
+
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
 
 /// A process-wide PJRT client handle.
+#[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     pub client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     /// Create the CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -48,6 +72,7 @@ impl PjrtEngine {
 /// Execute a compiled artifact on literals and un-tuple the result
 /// (aot.py lowers with `return_tuple=True`, so outputs are always a
 /// top-level tuple).
+#[cfg(feature = "pjrt")]
 pub fn execute_tupled(
     exe: &xla::PjRtLoadedExecutable,
     inputs: &[xla::Literal],
@@ -58,7 +83,7 @@ pub fn execute_tupled(
     result.to_tuple().context("untupling result")
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

@@ -1,0 +1,483 @@
+//! Persistent fork-join worker pool for the multi-threaded GEMM runtime.
+//!
+//! The seed implementation spawned fresh OS threads with
+//! `std::thread::scope` inside the innermost `ic` loop of the parallel
+//! drivers, so a 4096² LU at b = 256 paid thread-creation cost thousands
+//! of times per factorization. Catalán et al. and Buttari et al. (see
+//! PAPERS.md) both show that multicore DLA only scales when a persistent
+//! worker team is amortized across the whole factorization. This module
+//! provides that team:
+//!
+//! - **Parked workers.** [`WorkerPool::new`] spawns `threads - 1` workers
+//!   once; they park on a condvar between jobs. [`WorkerPool::spawned_workers`]
+//!   exposes the birth count so tests can assert that running GEMMs
+//!   creates zero additional threads.
+//! - **Epoch broadcast.** [`WorkerPool::run`] publishes one job (a
+//!   `Fn(&PoolCtx)` closure) under a mutex, bumps an epoch counter and
+//!   wakes every worker. The caller participates as rank 0, then blocks
+//!   until the active-worker count drains to zero. The closure's borrow
+//!   lifetime is erased (`transmute` to `'static`, the classic scoped-pool
+//!   trick); the completion handshake is what makes that sound — `run`
+//!   cannot return while any worker still holds the reference.
+//! - **Cooperative-phase barrier.** [`PoolCtx::barrier`] is a reusable
+//!   barrier sized to the team. The GEMM drivers use it to separate
+//!   *pack* phases (all ranks jointly fill a shared packed buffer) from
+//!   *compute* phases (all ranks read it) — the BLIS-style overlap the
+//!   paper's §2.2 parallel analysis assumes. Every rank must execute the
+//!   same barrier sequence; empty work partitions still hit each barrier.
+//! - **Per-worker pinned workspaces.** Each rank owns a
+//!   [`Workspace`] (packing buffers) that lives as long as the pool, so
+//!   the hot path never allocates and buffers stay warm in that worker's
+//!   cache across factorization steps. Rank-private access goes through
+//!   [`PoolCtx::workspace`]; the G4 driver instead borrows rank 0's
+//!   workspace up front for the team-shared `Ac`/`Bc`.
+//!
+//! Concurrent `run` calls from different owners of a shared pool (the
+//! coordinator server hands one pool to every worker engine) serialize on
+//! an internal leader lock, which also keeps the machine from being
+//! oversubscribed.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use crate::gemm::blocked::Workspace;
+
+/// The job signature: executed once per rank, in parallel. As a bare
+/// type alias the trait object's default lifetime is `'static`, which is
+/// exactly what the broadcast slot stores; `run` instead spells its
+/// parameter type out so the borrow-lifetime stays flexible.
+type Job = dyn Fn(&PoolCtx<'_>) + Sync;
+
+struct State {
+    /// Bumped once per broadcast; workers detect new work by comparing
+    /// against the last epoch they executed.
+    epoch: u64,
+    /// The current job. `'static` is a lie told by `run` (see module
+    /// docs); never retained past the completion handshake.
+    job: Option<&'static Job>,
+    /// Workers still executing the current job.
+    active: usize,
+    /// Set when a worker's job panicked; re-thrown by the leader.
+    panicked: bool,
+    /// Set by `Drop` to retire the team.
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    barrier: PoolBarrier,
+    births: AtomicUsize,
+    workspaces: Vec<Mutex<Workspace>>,
+}
+
+/// Lock, shrugging off poison: a panicked job is re-thrown by the leader,
+/// and the pool must stay usable afterwards (the protected state is a
+/// plain broadcast slot / packing buffer, always left consistent).
+fn lock_pool<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// A reusable barrier with **poisoning**: when any rank's job panics, the
+/// rank poisons the barrier before reporting done, which wakes every
+/// waiter and makes it panic too (instead of blocking forever for an
+/// arrival that can never come — `std::sync::Barrier` has no such
+/// escape). The cascading panics are caught per-rank, the completion
+/// handshake drains normally, and the leader re-throws once.
+struct PoolBarrier {
+    lock: Mutex<BarrierState>,
+    cv: Condvar,
+    count: usize,
+}
+
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    poisoned: bool,
+}
+
+impl PoolBarrier {
+    fn new(count: usize) -> Self {
+        Self {
+            lock: Mutex::new(BarrierState { arrived: 0, generation: 0, poisoned: false }),
+            cv: Condvar::new(),
+            count,
+        }
+    }
+
+    fn wait(&self) {
+        let mut st = lock_pool(&self.lock);
+        if st.poisoned {
+            panic!("pool barrier poisoned by a panicked rank");
+        }
+        let gen = st.generation;
+        st.arrived += 1;
+        if st.arrived == self.count {
+            st.arrived = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+            return;
+        }
+        while st.generation == gen && !st.poisoned {
+            st = self.cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        if st.poisoned {
+            panic!("pool barrier poisoned by a panicked rank");
+        }
+    }
+
+    /// Wake every waiter with a panic; idempotent.
+    fn poison(&self) {
+        let mut st = lock_pool(&self.lock);
+        st.poisoned = true;
+        self.cv.notify_all();
+    }
+
+    /// Reset after a poisoned job has fully drained (leader-only, called
+    /// once `active == 0`, so no rank can be inside `wait`).
+    fn clear_poison(&self) {
+        let mut st = lock_pool(&self.lock);
+        st.poisoned = false;
+        st.arrived = 0;
+        st.generation += 1;
+    }
+}
+
+/// Per-rank execution context handed to every job invocation.
+pub struct PoolCtx<'p> {
+    /// This participant's rank in `0..threads` (rank 0 is the caller).
+    pub rank: usize,
+    /// Team size (pool threads, including the caller).
+    pub threads: usize,
+    shared: &'p Shared,
+}
+
+impl<'p> PoolCtx<'p> {
+    /// Wait until every rank of the team reaches this point. Reusable;
+    /// all ranks must call it the same number of times per job.
+    pub fn barrier(&self) {
+        if self.threads > 1 {
+            self.shared.barrier.wait();
+        }
+    }
+
+    /// Lock this rank's pinned workspace (uncontended: each rank only
+    /// ever locks its own index).
+    pub fn workspace(&self) -> MutexGuard<'p, Workspace> {
+        lock_pool(&self.shared.workspaces[self.rank])
+    }
+}
+
+/// A persistent team of `threads - 1` parked workers plus the caller.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes `run` calls (a shared pool may have several owners).
+    run_lock: Mutex<()>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Spawn the team. `threads` counts the caller, so `new(1)` spawns
+    /// nothing and `run` executes jobs inline.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            barrier: PoolBarrier::new(threads),
+            births: AtomicUsize::new(0),
+            workspaces: (0..threads).map(|_| Mutex::new(Workspace::new())).collect(),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for rank in 1..threads {
+            let sh = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("gemm-pool-{rank}"))
+                .spawn(move || worker_loop(sh, rank))
+                .expect("spawning pool worker");
+            handles.push(h);
+        }
+        Self { shared, handles, run_lock: Mutex::new(()), threads }
+    }
+
+    /// Team size, including the caller.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Total worker threads ever spawned by this pool. Constant
+    /// (`threads - 1`) after the first completed job; the regression
+    /// tests assert it stays constant across arbitrarily many GEMMs.
+    pub fn spawned_workers(&self) -> usize {
+        self.shared.births.load(Ordering::SeqCst)
+    }
+
+    /// Lock a rank's pinned workspace from outside a job (the G4 driver
+    /// borrows rank 0's workspace for the team-shared packed buffers).
+    ///
+    /// Do not hold the rank-r guard while a job calls
+    /// `PoolCtx::workspace` on the same rank — that would self-deadlock.
+    pub fn workspace(&self, rank: usize) -> MutexGuard<'_, Workspace> {
+        lock_pool(&self.shared.workspaces[rank])
+    }
+
+    /// Execute `job` once per rank (the caller runs rank 0 in place) and
+    /// return when every rank has finished.
+    pub fn run(&self, job: &(dyn Fn(&PoolCtx<'_>) + Sync)) {
+        let _leader = lock_pool(&self.run_lock);
+        if self.threads == 1 {
+            let ctx = PoolCtx { rank: 0, threads: 1, shared: self.shared.as_ref() };
+            job(&ctx);
+            return;
+        }
+        // SAFETY: the 'static lifetime is erased only for the duration of
+        // this call; the done_cv handshake below guarantees every worker
+        // has returned from `job` (and the state lock round-trip makes
+        // that a happens-before edge) before `run` returns and the
+        // borrow expires.
+        let job_static: &'static Job =
+            unsafe { std::mem::transmute::<&(dyn Fn(&PoolCtx<'_>) + Sync), &'static Job>(job) };
+        {
+            let mut st = lock_pool(&self.shared.state);
+            st.job = Some(job_static);
+            st.active = self.threads - 1;
+            st.epoch += 1;
+            self.shared.work_cv.notify_all();
+        }
+        // Run rank 0 under catch_unwind: `run` must NEVER return (or
+        // unwind) before every worker has finished with `job_static` —
+        // that reference dies with this frame. On a leader panic the
+        // barrier is poisoned so no worker can block waiting for rank 0's
+        // arrival, the handshake drains, and the panic is re-thrown.
+        let leader_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let ctx = PoolCtx { rank: 0, threads: self.threads, shared: self.shared.as_ref() };
+            job(&ctx);
+        }));
+        if leader_result.is_err() {
+            self.shared.barrier.poison();
+        }
+        let mut st = lock_pool(&self.shared.state);
+        while st.active > 0 {
+            st = self
+                .shared
+                .done_cv
+                .wait(st)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        st.job = None;
+        let worker_panicked = st.panicked;
+        st.panicked = false;
+        drop(st);
+        if worker_panicked || leader_result.is_err() {
+            self.shared.barrier.clear_poison();
+        }
+        if let Err(payload) = leader_result {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("a pool worker panicked during a broadcast job");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock_pool(&self.shared.state);
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, rank: usize) {
+    shared.births.fetch_add(1, Ordering::SeqCst);
+    let threads = shared.workspaces.len();
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock_pool(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("epoch bumped without a job");
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        };
+        let panicked = {
+            let ctx = PoolCtx { rank, threads, shared: shared.as_ref() };
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&ctx))).is_err()
+        };
+        if panicked {
+            // Wake (and panic out) any rank blocked on a barrier arrival
+            // this rank will never make; the cascade drains the job.
+            shared.barrier.poison();
+        }
+        let mut st = lock_pool(&shared.state);
+        if panicked {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_one();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn broadcast_reaches_every_rank_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let mask = AtomicU64::new(0);
+        pool.run(&|ctx| {
+            mask.fetch_or(1 << ctx.rank, Ordering::SeqCst);
+            assert_eq!(ctx.threads, 4);
+        });
+        assert_eq!(mask.load(Ordering::SeqCst), 0b1111);
+    }
+
+    #[test]
+    fn workers_spawn_once_across_many_jobs() {
+        let pool = WorkerPool::new(3);
+        let hits = AtomicU64::new(0);
+        for _ in 0..10 {
+            pool.run(&|_ctx| {
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 30);
+        // Births are complete once a job has finished (every worker must
+        // have executed it), and never grow again.
+        assert_eq!(pool.spawned_workers(), 2);
+    }
+
+    #[test]
+    fn barrier_separates_phases() {
+        let pool = WorkerPool::new(4);
+        let phase1 = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+        let sums = Mutex::new(Vec::new());
+        pool.run(&|ctx| {
+            phase1[ctx.rank].store(ctx.rank as u64 + 1, Ordering::SeqCst);
+            ctx.barrier();
+            // After the barrier every rank must observe all writes.
+            let total: u64 = phase1.iter().map(|a| a.load(Ordering::SeqCst)).sum();
+            sums.lock().unwrap().push(total);
+        });
+        let sums = sums.into_inner().unwrap();
+        assert_eq!(sums.len(), 4);
+        assert!(sums.iter().all(|&s| s == 1 + 2 + 3 + 4), "{sums:?}");
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let hits = AtomicU64::new(0);
+        pool.run(&|ctx| {
+            assert_eq!((ctx.rank, ctx.threads), (0, 1));
+            ctx.barrier(); // no-op, must not block
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        assert_eq!(pool.spawned_workers(), 0);
+    }
+
+    #[test]
+    fn per_rank_workspaces_are_distinct_and_persistent() {
+        let pool = WorkerPool::new(3);
+        pool.run(&|ctx| {
+            let mut ws = ctx.workspace();
+            ws.a_buf.resize(ctx.rank + 1, 0.0);
+        });
+        pool.run(&|ctx| {
+            let ws = ctx.workspace();
+            assert_eq!(ws.a_buf.len(), ctx.rank + 1, "workspace must persist per rank");
+        });
+    }
+
+    #[test]
+    fn worker_panic_is_propagated_to_the_leader() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|ctx| {
+                if ctx.rank == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // The pool survives and runs subsequent jobs.
+        let ok = AtomicU64::new(0);
+        pool.run(&|_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn panic_in_a_barrier_job_poisons_instead_of_deadlocking() {
+        // Without barrier poisoning this test would hang forever: ranks
+        // 0 and 1 would wait for an arrival rank 2 can never make.
+        let pool = WorkerPool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|ctx| {
+                if ctx.rank == 2 {
+                    panic!("die before the barrier");
+                }
+                ctx.barrier();
+            });
+        }));
+        assert!(result.is_err());
+        // The barrier is clean again: a multi-barrier job completes.
+        let hits = AtomicU64::new(0);
+        pool.run(&|ctx| {
+            ctx.barrier();
+            hits.fetch_add(1, Ordering::SeqCst);
+            ctx.barrier();
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn leader_panic_waits_for_workers_and_rethrows() {
+        // `run` must not unwind past the completion handshake (workers
+        // still hold the job reference); on a leader panic it poisons,
+        // drains, then re-throws.
+        let pool = WorkerPool::new(3);
+        let worker_done = AtomicU64::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|ctx| {
+                if ctx.rank == 0 {
+                    panic!("leader dies");
+                }
+                worker_done.fetch_add(1, Ordering::SeqCst);
+            });
+        }));
+        assert!(result.is_err());
+        assert_eq!(worker_done.load(Ordering::SeqCst), 2, "workers drained before rethrow");
+        // Still usable afterwards.
+        pool.run(&|ctx| {
+            ctx.barrier();
+        });
+    }
+}

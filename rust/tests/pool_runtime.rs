@@ -1,0 +1,181 @@
+//! Regression tests for the persistent-pool GEMM runtime:
+//!
+//! - parallel-vs-sequential **bitwise** determinism across G3/G4 for every
+//!   registered kernel and awkward (non-multiple) dimensions,
+//! - pool reuse (zero thread spawns after construction) across
+//!   consecutive GEMMs and across whole LU factorizations,
+//! - config-selection memo-cache hit accounting,
+//! - the spawn-per-block ablation baseline staying numerically identical.
+
+use std::sync::Arc;
+
+use dla_codesign::arch::host_xeon;
+use dla_codesign::gemm::microkernel::registry;
+use dla_codesign::gemm::parallel::{gemm_parallel, gemm_parallel_spawning};
+use dla_codesign::gemm::{
+    gemm_blocked, ConfigMode, GemmEngine, ParallelLoop, ThreadPlan, Workspace,
+};
+use dla_codesign::lapack::lu_factor;
+use dla_codesign::model::ccp::GemmConfig;
+use dla_codesign::model::Ccp;
+use dla_codesign::runtime::pool::WorkerPool;
+use dla_codesign::util::{MatrixF64, Pcg64};
+
+/// Pooled G3/G4 must be bitwise identical to the sequential blocked path
+/// for every registered (non-prefetch) kernel and awkward shapes.
+#[test]
+fn pooled_gemm_is_bitwise_deterministic_for_all_kernels() {
+    let pool = Arc::new(WorkerPool::new(4));
+    for imp in registry() {
+        if imp.prefetch {
+            continue;
+        }
+        let (mr, nr) = (imp.spec.mr, imp.spec.nr);
+        // Awkward: dims not multiples of the tile, CCPs not multiples of
+        // the dims, plus a skinny-k paper shape.
+        let shapes =
+            [(2 * mr + 3, 2 * nr + 1, 33), (61, 53, 29), (3 * mr, 4 * nr, 16), (97, 89, 8)];
+        for (m, n, k) in shapes {
+            let ccp = Ccp::new((2 * mr).max(5), (3 * nr).max(7), 13);
+            let cfg = GemmConfig { mk: imp.spec, ccp };
+            let mut rng = Pcg64::seed((m * 131 + n * 17 + k) as u64);
+            let a = MatrixF64::random(m, k, &mut rng);
+            let b = MatrixF64::random(k, n, &mut rng);
+            let c0 = MatrixF64::random(m, n, &mut rng);
+
+            let mut c_seq = c0.clone();
+            let mut ws = Workspace::new();
+            gemm_blocked(&cfg, &imp, 1.0, a.view(), b.view(), 1.0, &mut c_seq.view_mut(), &mut ws);
+
+            for target in [ParallelLoop::G3, ParallelLoop::G4] {
+                let mut c_par = c0.clone();
+                gemm_parallel(
+                    &cfg, &imp, 1.0, a.view(), b.view(), 1.0, &mut c_par.view_mut(), target,
+                    &pool,
+                );
+                assert_eq!(
+                    c_par.max_abs_diff(&c_seq),
+                    0.0,
+                    "{} {target:?} {m}x{n}x{k} is not bitwise deterministic",
+                    imp.name
+                );
+            }
+        }
+    }
+    // The whole sweep above ran on three workers, spawned exactly once.
+    assert_eq!(pool.spawned_workers(), 3);
+}
+
+/// One pool serves >= 3 consecutive GEMMs of different shapes with zero
+/// additional thread spawns.
+#[test]
+fn pool_reuse_across_consecutive_gemms_spawns_nothing() {
+    let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined)
+        .with_plan(ThreadPlan { threads: 4, target: ParallelLoop::G4 });
+    let pool = Arc::clone(eng.pool().expect("pool provisioned"));
+    let mut rng = Pcg64::seed(42);
+    for (i, (m, n, k)) in [(80, 64, 24), (57, 91, 13), (120, 40, 33), (64, 64, 64)]
+        .into_iter()
+        .enumerate()
+    {
+        let a = MatrixF64::random(m, k, &mut rng);
+        let b = MatrixF64::random(k, n, &mut rng);
+        let mut c = MatrixF64::zeros(m, n);
+        let mut expect = MatrixF64::zeros(m, n);
+        dla_codesign::gemm::gemm_reference(1.0, a.view(), b.view(), 0.0, &mut expect.view_mut());
+        eng.gemm(1.0, a.view(), b.view(), 0.0, &mut c.view_mut());
+        assert!(c.max_abs_diff(&expect) < 1e-12 * k as f64, "gemm #{i}");
+        assert_eq!(pool.spawned_workers(), 3, "gemm #{i} must not spawn threads");
+    }
+}
+
+/// A whole LU factorization (many trailing updates) performs zero thread
+/// spawns after pool construction, and the pooled result is bitwise
+/// identical to the sequential engine's.
+#[test]
+fn lu_on_pooled_engine_is_deterministic_and_spawn_free() {
+    let mut rng = Pcg64::seed(7);
+    let a0 = MatrixF64::random_diag_dominant(96, &mut rng);
+
+    let mut seq_eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+    let f_seq = lu_factor(&a0, 16, &mut seq_eng).unwrap();
+
+    for target in [ParallelLoop::G3, ParallelLoop::G4] {
+        let mut par_eng = GemmEngine::new(host_xeon(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads: 4, target });
+        let pool = Arc::clone(par_eng.pool().unwrap());
+        let f_par = lu_factor(&a0, 16, &mut par_eng).unwrap();
+        assert_eq!(f_par.pivots, f_seq.pivots, "{target:?}: pivot sequences differ");
+        assert_eq!(
+            f_par.lu.max_abs_diff(&f_seq.lu),
+            0.0,
+            "{target:?}: LU factors are not bitwise identical"
+        );
+        assert_eq!(
+            pool.spawned_workers(),
+            3,
+            "{target:?}: LU must reuse the pool, not spawn per block"
+        );
+        // A second factorization on the same engine still spawns nothing.
+        let _ = lu_factor(&a0, 16, &mut par_eng).unwrap();
+        assert_eq!(pool.spawned_workers(), 3);
+    }
+}
+
+/// The config memo cache: an LU sweep scores each distinct trailing shape
+/// once; a repeated factorization is pure hits.
+#[test]
+fn config_cache_accounting_across_lu_factorizations() {
+    let mut rng = Pcg64::seed(9);
+    let a0 = MatrixF64::random_diag_dominant(64, &mut rng);
+    let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+    lu_factor(&a0, 16, &mut eng).unwrap();
+    let first = eng.config_cache_stats();
+    // s=64, b=16 -> trailing GEMMs of 48, 32, 16: three distinct shapes.
+    assert_eq!(first.misses, 3, "one selector run per distinct trailing shape");
+    lu_factor(&a0, 16, &mut eng).unwrap();
+    let second = eng.config_cache_stats();
+    assert_eq!(second.misses, first.misses, "repeat factorization must be all cache hits");
+    assert_eq!(second.hits, first.hits + 3);
+}
+
+/// Repeated identical GEMM requests hit the cache (the serving pattern).
+#[test]
+fn config_cache_hits_on_repeated_requests() {
+    let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+    let mut rng = Pcg64::seed(11);
+    let a = MatrixF64::random(48, 24, &mut rng);
+    let b = MatrixF64::random(24, 36, &mut rng);
+    for _ in 0..5 {
+        let mut c = MatrixF64::zeros(48, 36);
+        eng.gemm(1.0, a.view(), b.view(), 0.0, &mut c.view_mut());
+    }
+    let stats = eng.config_cache_stats();
+    assert_eq!((stats.misses, stats.hits), (1, 4));
+}
+
+/// The retained spawn-per-block baseline stays bitwise identical to the
+/// pooled path (same arithmetic, different threading architecture).
+#[test]
+fn spawning_baseline_matches_pooled_path() {
+    let imp = registry().into_iter().find(|k| !k.prefetch).unwrap();
+    let cfg = GemmConfig { mk: imp.spec, ccp: Ccp::new(24, 18, 11) };
+    let mut rng = Pcg64::seed(13);
+    let (m, n, k) = (59, 47, 23);
+    let a = MatrixF64::random(m, k, &mut rng);
+    let b = MatrixF64::random(k, n, &mut rng);
+    let c0 = MatrixF64::random(m, n, &mut rng);
+
+    let pool = WorkerPool::new(3);
+    let mut c_pool = c0.clone();
+    gemm_parallel(
+        &cfg, &imp, 1.0, a.view(), b.view(), 0.5, &mut c_pool.view_mut(), ParallelLoop::G4,
+        &pool,
+    );
+    let mut c_spawn = c0.clone();
+    let mut ws = Workspace::new();
+    gemm_parallel_spawning(
+        &cfg, &imp, 1.0, a.view(), b.view(), 0.5, &mut c_spawn.view_mut(), 3, &mut ws,
+    );
+    assert_eq!(c_pool.max_abs_diff(&c_spawn), 0.0);
+}

@@ -227,8 +227,12 @@ fn prop_cachesim_conservation() {
 
 #[test]
 fn prop_parallel_gemm_any_plan_matches_reference() {
-    use dla_codesign::gemm::{parallel::gemm_parallel, ParallelLoop, ThreadPlan};
+    use dla_codesign::gemm::{parallel::gemm_parallel, ParallelLoop};
+    use dla_codesign::runtime::pool::WorkerPool;
     let kernels = registry();
+    // One persistent pool per width, shared by every generated case — the
+    // production shape (and itself a reuse stress test).
+    let pools: Vec<WorkerPool> = (1..=4).map(WorkerPool::new).collect();
     forall(
         "parallel_gemm==reference",
         cfgn(15),
@@ -256,10 +260,9 @@ fn prop_parallel_gemm_any_plan_matches_reference() {
                 mk: imp.spec,
                 ccp: Ccp::new(4 * imp.spec.mr, 3 * imp.spec.nr, 16),
             };
-            let mut wss: Vec<Workspace> = (0..threads).map(|_| Workspace::new()).collect();
             gemm_parallel(
                 &cfg, &imp, 1.0, a.view(), b.view(), 1.0, &mut c.view_mut(),
-                ThreadPlan { threads, target }, &mut wss,
+                target, &pools[threads - 1],
             );
             let err = c.max_abs_diff(&expect);
             if err > 1e-12 * k.max(1) as f64 {

@@ -1,0 +1,208 @@
+//! Vendored, std-only subset of the `anyhow` error-handling API.
+//!
+//! The build environment for this repository has no network access to
+//! crates.io, so the small slice of `anyhow` the crate actually uses is
+//! re-implemented here: [`Error`], [`Result`], the [`Context`] extension
+//! trait (for `Result` and `Option`), and the `anyhow!` / `bail!` /
+//! `ensure!` macros. The API shapes follow the real crate so that
+//! swapping in upstream `anyhow` is a one-line Cargo change.
+//!
+//! Like upstream, [`Error`] intentionally does **not** implement
+//! `std::error::Error`; that is what lets the blanket
+//! `impl<E: std::error::Error> From<E> for Error` coexist with the
+//! identity `From<Error>` used by `?`.
+
+use std::error::Error as StdError;
+use std::fmt::{self, Debug, Display};
+
+/// A dynamic error with a human-readable message and an optional source
+/// chain (a drop-in for `anyhow::Error` within this workspace).
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from a plain message.
+    pub fn msg<M: Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Prepend a context message (what `.context(...)` does).
+    fn wrap<C: Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The root cause, if a concrete source error was captured.
+    pub fn source(&self) -> Option<&(dyn StdError + Send + Sync + 'static)> {
+        self.source.as_deref()
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Display::fmt(&self.msg, f)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause: Option<&dyn StdError> =
+            self.source.as_deref().and_then(|e| e.source());
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(c) = cause {
+            write!(f, "\n    {c}")?;
+            cause = c.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    use super::*;
+
+    /// Sealed helper that lets [`Context`] accept both concrete
+    /// `std::error::Error` types and [`Error`] itself (the same trick
+    /// upstream anyhow uses: `Error` is local and does not implement
+    /// `std::error::Error`, so the two impls cannot overlap).
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tok:tt)*) => {
+        return Err($crate::anyhow!($($tok)*))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($tok:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($tok)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<u32> {
+        let n: u32 = "not-a-number".parse().context("parsing the knob")?;
+        Ok(n)
+    }
+
+    #[test]
+    fn context_wraps_and_chains() {
+        let err = io_fail().unwrap_err();
+        let text = format!("{err}");
+        assert!(text.starts_with("parsing the knob:"), "got {text:?}");
+        assert!(err.source().is_some());
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let missing: Option<u32> = None;
+        let err = missing.with_context(|| format!("slot {}", 7)).unwrap_err();
+        assert_eq!(format!("{err}"), "slot 7");
+
+        fn f(flag: bool) -> Result<()> {
+            ensure!(flag, "flag was {}", flag);
+            bail!("unreachable for true? no: always bails");
+        }
+        assert!(f(false).is_err());
+        assert!(f(true).is_err());
+        let e = anyhow!("code {code}", code = 3);
+        assert_eq!(format!("{e}"), "code 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn g() -> Result<String> {
+            let s = std::str::from_utf8(&[0xff, 0xfe])?;
+            Ok(s.to_string())
+        }
+        assert!(g().is_err());
+    }
+}
