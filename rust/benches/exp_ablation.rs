@@ -12,11 +12,19 @@
 //!    (LU-style trailing updates: m = n shrinking, k = b) on the
 //!    persistent worker pool vs the seed's spawn-per-macro-block driver,
 //!    with the trajectory written to `BENCH_gemm.json` for future PRs.
+//! 5. **Lookahead on/off blocked LU** — the fused split-team pipeline vs
+//!    the serialized panel/update path, per matrix order, with the
+//!    pool's leader-wait and between-job idle counters showing where the
+//!    recovered time comes from. Appended to the same `BENCH_gemm.json`
+//!    (per ROADMAP: extend the entries, don't replace them).
 use dla_codesign::arch::detect_host;
 use dla_codesign::bench::{BenchGroup, JsonBench};
 use dla_codesign::gemm::microkernel::for_shape;
 use dla_codesign::gemm::parallel::{gemm_parallel, gemm_parallel_spawning};
-use dla_codesign::gemm::{gemm_blocked, ConfigMode, GemmEngine, ParallelLoop, Workspace};
+use dla_codesign::gemm::{
+    gemm_blocked, ConfigMode, GemmEngine, Lookahead, ParallelLoop, ThreadPlan, Workspace,
+};
+use dla_codesign::lapack::{getf2, lu_blocked, lu_flops};
 use dla_codesign::model::ccp::GemmConfig;
 use dla_codesign::model::{refined_ccp, Ccp, GemmDims, MicroKernel};
 use dla_codesign::runtime::pool::WorkerPool;
@@ -193,9 +201,85 @@ fn main() {
         "config_cache",
         &[("hits", stats.hits as f64), ("misses", stats.misses as f64)],
     );
+
+    // --- 5. lookahead on/off blocked LU --------------------------------
+    // The fused pipeline vs the serialized panel/update path, per matrix
+    // order, with the pool idle counters (leader drain-wait + between-job
+    // parked time) that the lookahead exists to shrink. DLA_LU_SIZES
+    // overrides the sweep (comma-separated orders), DLA_LU_BLOCK the
+    // algorithmic block size.
+    let lu_sizes: Vec<usize> = std::env::var("DLA_LU_SIZES")
+        .ok()
+        .map(|v| v.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![512, 1024, 2048]);
+    let lu_block: usize =
+        std::env::var("DLA_LU_BLOCK").ok().and_then(|v| v.parse().ok()).unwrap_or(128);
+    println!("=== ablation 5: lookahead on/off blocked LU (x{threads}, b={lu_block}) ===");
+    let mut g5 = BenchGroup::new("lookahead on/off blocked LU");
+    for &s in &lu_sizes {
+        let mut rng_lu = Pcg64::seed(s as u64);
+        let a0 = MatrixF64::random_diag_dominant(s, &mut rng_lu);
+        // Per-iteration component profile for context: the panel getf2
+        // cost the serialized path pays between pooled jobs (measured on
+        // the shrinking panel sequence of the first factorization).
+        let panel_estimate = {
+            let sw = Stopwatch::start();
+            let mut a = a0.clone();
+            let mut k = 0;
+            while k < s {
+                let b = lu_block.min(s - k);
+                let mut panel = a.sub_mut(k, k, s - k, b);
+                let mut piv = vec![0usize; b];
+                let _ = getf2(&mut panel, &mut piv);
+                k += b;
+            }
+            sw.elapsed_secs()
+        };
+        for la_on in [false, true] {
+            let label = if la_on { "lookahead" } else { "serialized" };
+            let la = if la_on {
+                Lookahead { depth: 1, panel_workers: (threads / 8).max(1) }
+            } else {
+                Lookahead::disabled()
+            };
+            let mut eng = GemmEngine::new(arch.clone(), ConfigMode::Refined)
+                .with_plan(ThreadPlan { threads, target: ParallelLoop::G4 })
+                .with_lookahead(la);
+            let pool_stats_before = eng.pool().map(|p| p.stats()).unwrap_or_default();
+            let case = g5
+                .case(&format!("lu {s} b={lu_block} {label} x{threads}"), lu_flops(s), || {
+                    let mut a = a0.clone();
+                    lu_blocked(&mut a, lu_block, &mut eng).expect("diag-dominant LU");
+                })
+                .clone();
+            let pool_stats = eng.pool().map(|p| p.stats()).unwrap_or_default();
+            let d_wait = pool_stats.leader_wait_ns.saturating_sub(pool_stats_before.leader_wait_ns);
+            let d_idle = pool_stats.idle_ns.saturating_sub(pool_stats_before.idle_ns);
+            let d_jobs = pool_stats.jobs.saturating_sub(pool_stats_before.jobs);
+            j.entry(
+                &format!("lu_lookahead_n{s}_{}", if la_on { "on" } else { "off" }),
+                &[
+                    ("threads", threads as f64),
+                    ("block", lu_block as f64),
+                    ("lookahead", if la_on { 1.0 } else { 0.0 }),
+                    ("mean_seconds", case.measurement.mean_s),
+                    ("min_seconds", case.measurement.min_s),
+                    ("gflops", case.gflops()),
+                    ("panel_getf2_estimate_seconds", panel_estimate),
+                    ("pool_jobs", d_jobs as f64),
+                    ("pool_leader_wait_ms", d_wait as f64 / 1e6),
+                    ("pool_idle_ms", d_idle as f64 / 1e6),
+                ],
+            );
+        }
+    }
+    g5.finish("bench_ablation_lookahead");
+
     match j.write("BENCH_gemm.json") {
         Ok(()) => println!(
-            "-> BENCH_gemm.json written: pooled {:.2}x vs spawn-per-block at x{threads}",
+            "-> BENCH_gemm.json written: pooled {:.2}x vs spawn-per-block at x{threads}, \
+             + lookahead on/off LU sweep for n in {lu_sizes:?}",
             spawning.measurement.mean_s / pooled.measurement.mean_s
         ),
         Err(e) => eprintln!("warning: could not write BENCH_gemm.json: {e}"),

@@ -1,7 +1,11 @@
-//! Per-kind request metrics: latency histograms and flop throughput.
+//! Per-kind request metrics: latency histograms and flop throughput,
+//! plus the shared GEMM pool's idle accounting (leader drain-wait and
+//! between-job parked time) so lookahead gains are observable in the
+//! server, not just in offline benches.
 
 use std::collections::BTreeMap;
 
+use crate::runtime::pool::PoolStats;
 use crate::util::stats::{Accumulator, LatencyHistogram};
 
 /// Metrics for one request kind.
@@ -15,6 +19,10 @@ pub struct KindMetrics {
 #[derive(Default)]
 pub struct Metrics {
     kinds: BTreeMap<String, KindMetrics>,
+    /// Latest snapshot of the engine's worker-pool idle accounting
+    /// (cumulative since pool construction). `None` for sequential
+    /// engines.
+    pool: Option<PoolStats>,
 }
 
 impl Metrics {
@@ -51,7 +59,30 @@ impl Metrics {
         }
     }
 
+    /// Record the latest pool idle snapshot (counters are cumulative, so
+    /// each call simply replaces the previous snapshot).
+    pub fn set_pool_stats(&mut self, stats: PoolStats) {
+        self.pool = Some(stats);
+    }
+
+    /// The most recent worker-pool idle snapshot, if a pool is attached.
+    pub fn pool_stats(&self) -> Option<PoolStats> {
+        self.pool
+    }
+
     pub fn merge(&mut self, other: Metrics) {
+        // Workers of one server share a single pool, so every snapshot
+        // observes the same monotone counters: keep the latest (largest
+        // job count).
+        if let Some(op) = other.pool {
+            let keep = match self.pool {
+                None => true,
+                Some(p) => p.jobs <= op.jobs,
+            };
+            if keep {
+                self.pool = Some(op);
+            }
+        }
         for (kind, km) in other.kinds {
             let mine = self.kinds.entry(kind).or_default();
             mine.flops.merge(&km.flops);
@@ -82,7 +113,16 @@ impl Metrics {
                 format!("{:.2}", self.mean_gflops(kind)),
             ]);
         }
-        t.render()
+        let mut out = t.render();
+        if let Some(p) = self.pool {
+            out.push_str(&format!(
+                "gemm pool: {} jobs, leader-wait {:.3} ms, idle {:.3} ms\n",
+                p.jobs,
+                p.leader_wait_ns as f64 / 1e6,
+                p.idle_ns as f64 / 1e6,
+            ));
+        }
+        out
     }
 }
 
@@ -122,5 +162,24 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.count("nope"), 0);
         assert_eq!(m.mean_gflops("nope"), 0.0);
+    }
+
+    #[test]
+    fn pool_stats_surface_and_merge_latest() {
+        use crate::runtime::pool::PoolStats;
+        let mut a = Metrics::new();
+        assert!(a.pool_stats().is_none());
+        a.set_pool_stats(PoolStats { jobs: 3, leader_wait_ns: 1_000_000, idle_ns: 2_000_000 });
+        let mut b = Metrics::new();
+        b.set_pool_stats(PoolStats { jobs: 7, leader_wait_ns: 4_000_000, idle_ns: 9_000_000 });
+        a.merge(b);
+        assert_eq!(a.pool_stats().unwrap().jobs, 7, "merge keeps the latest snapshot");
+        // An older snapshot must not regress the kept one.
+        let mut c = Metrics::new();
+        c.set_pool_stats(PoolStats { jobs: 2, leader_wait_ns: 1, idle_ns: 1 });
+        a.merge(c);
+        assert_eq!(a.pool_stats().unwrap().jobs, 7);
+        let s = a.summary();
+        assert!(s.contains("gemm pool: 7 jobs"), "{s}");
     }
 }

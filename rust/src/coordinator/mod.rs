@@ -52,6 +52,22 @@ impl Coordinator {
         self
     }
 
+    /// Pin the engine's lookahead policy (see [`crate::gemm::Lookahead`])
+    /// for the blocked factorizations this coordinator serves.
+    pub fn with_lookahead(mut self, la: crate::gemm::Lookahead) -> Self {
+        self.engine.set_lookahead(la);
+        self
+    }
+
+    /// Refresh the metrics' snapshot of the engine pool's idle accounting
+    /// (no-op for sequential engines). Called after every request so the
+    /// summary always reflects the latest counters.
+    fn snapshot_pool_stats(&mut self) {
+        if let Some(pool) = self.engine.pool() {
+            self.metrics.set_pool_stats(pool.stats());
+        }
+    }
+
     /// Hit/miss accounting of the engine's config-selection memo cache
     /// (one selector run per distinct request shape, lookups thereafter).
     pub fn config_cache_stats(&self) -> crate::gemm::ConfigCacheStats {
@@ -92,6 +108,7 @@ impl Coordinator {
                 DlaResponse::Matrix { result: m, config: None, seconds: dt }
             }
         };
+        self.snapshot_pool_stats();
         Ok(resp)
     }
 

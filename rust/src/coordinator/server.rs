@@ -16,7 +16,7 @@ use std::sync::Arc;
 use std::thread;
 
 use crate::arch::Arch;
-use crate::gemm::ConfigMode;
+use crate::gemm::{ConfigMode, Lookahead};
 use crate::runtime::pool::WorkerPool;
 
 use super::metrics::Metrics;
@@ -33,11 +33,14 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// Width of the shared intra-request GEMM pool (1 = sequential GEMMs).
     pub gemm_threads: usize,
+    /// Lookahead policy for blocked factorization requests; `None` keeps
+    /// the engine heuristic (and the `DLA_LOOKAHEAD` env override).
+    pub lookahead: Option<Lookahead>,
 }
 
 impl ServerConfig {
     pub fn new(arch: Arch, mode: ConfigMode) -> Self {
-        Self { workers: 1, arch, mode, queue_depth: 64, gemm_threads: 1 }
+        Self { workers: 1, arch, mode, queue_depth: 64, gemm_threads: 1, lookahead: None }
     }
 
     pub fn with_workers(mut self, n: usize) -> Self {
@@ -48,6 +51,12 @@ impl ServerConfig {
     /// Share one persistent `n`-thread GEMM pool across all workers.
     pub fn with_gemm_threads(mut self, n: usize) -> Self {
         self.gemm_threads = n.max(1);
+        self
+    }
+
+    /// Pin the lookahead policy every worker engine serves with.
+    pub fn with_lookahead(mut self, la: Lookahead) -> Self {
+        self.lookahead = Some(la);
         self
     }
 }
@@ -74,10 +83,14 @@ impl CoordinatorServer {
             let arch = cfg.arch.clone();
             let mode = cfg.mode.clone();
             let pool = gemm_pool.clone();
+            let lookahead = cfg.lookahead;
             handles.push(thread::spawn(move || {
                 let mut co = Coordinator::new(arch, mode);
                 if let Some(pool) = pool {
                     co = co.with_pool(pool);
+                }
+                if let Some(la) = lookahead {
+                    co = co.with_lookahead(la);
                 }
                 loop {
                     // Hold the lock only while receiving.
@@ -184,6 +197,24 @@ mod tests {
         }
         let metrics = server.shutdown();
         assert_eq!(metrics.count("gemm"), 6);
+    }
+
+    #[test]
+    fn server_reports_pool_idle_stats_and_serves_lookahead_lu() {
+        let server = CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined)
+                .with_gemm_threads(3)
+                .with_lookahead(Lookahead { depth: 1, panel_workers: 1 }),
+        );
+        let mut rng = Pcg64::seed(12);
+        let a = MatrixF64::random_diag_dominant(64, &mut rng);
+        let resp = server.call(DlaRequest::LuFactor { a: a.clone(), block: 16 }).unwrap();
+        let DlaResponse::Lu { factors, .. } = resp else { panic!() };
+        assert!(factors.reconstruction_error(&a) < 1e-10);
+        let metrics = server.shutdown();
+        let pool = metrics.pool_stats().expect("pooled server must surface pool stats");
+        assert!(pool.jobs > 0, "LU trailing updates must have run pooled jobs: {pool:?}");
+        assert!(metrics.summary().contains("gemm pool:"));
     }
 
     #[test]

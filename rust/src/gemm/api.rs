@@ -42,12 +42,78 @@ use crate::arch::Arch;
 use crate::model::ccp::GemmConfig;
 use crate::model::selector::{select_from, AnalyticScorer};
 use crate::model::{blis_static, original_ccp, refined_ccp, GemmDims, MicroKernel};
-use crate::runtime::pool::WorkerPool;
+use crate::runtime::pool::{SubTeam, WorkerPool};
 use crate::util::matrix::{MatView, MatViewMut};
 
 use super::blocked::{gemm_blocked, Workspace};
 use super::microkernel::{for_shape, registry, MicroKernelImpl};
-use super::parallel::{gemm_parallel, ThreadPlan};
+use super::parallel::{gemm_fused_trailing, gemm_fused_trailing_seq, gemm_parallel, ThreadPlan};
+
+/// Static-lookahead policy for the blocked factorization drivers: while
+/// the update sub-team finishes a trailing update, `panel_workers` ranks
+/// factor the next panel inside the freshly-updated columns
+/// ([`GemmEngine::gemm_fused_trailing`]).
+///
+/// `depth == 0` disables lookahead; only depth 1 is implemented (the
+/// next-panel pipeline — deeper/dynamic lookahead is a ROADMAP item, and
+/// larger depths behave as 1). The heuristic default dedicates an eighth
+/// of the team to the panel (`t_p = max(1, threads / 8)`): the panel is a
+/// thin, mostly-sequential kernel, so a small team keeps the wide
+/// trailing sweep fed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Lookahead {
+    /// Panels factored ahead of the trailing sweep (0 = off).
+    pub depth: usize,
+    /// Sub-team size `t_p` dedicated to the panel factorization.
+    pub panel_workers: usize,
+}
+
+impl Lookahead {
+    /// Lookahead off: the factorizations serialize panel and update.
+    pub fn disabled() -> Self {
+        Self { depth: 0, panel_workers: 0 }
+    }
+
+    /// The default policy for a `threads`-wide team.
+    pub fn heuristic(threads: usize) -> Self {
+        if threads < 2 {
+            Self::disabled()
+        } else {
+            Self { depth: 1, panel_workers: (threads / 8).max(1) }
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.depth > 0
+    }
+
+    /// Environment override for the ablation harness: `DLA_LOOKAHEAD`
+    /// (`0`/`off`/`false` disable, a number sets the depth, anything else
+    /// enables depth 1) and `DLA_PANEL_WORKERS` (sets `t_p`). Returns
+    /// `None` when neither variable is set.
+    pub fn from_env(threads: usize) -> Option<Self> {
+        let depth_var = std::env::var("DLA_LOOKAHEAD").ok();
+        let tp = std::env::var("DLA_PANEL_WORKERS").ok().and_then(|v| v.parse::<usize>().ok());
+        let base = match depth_var.as_deref().map(str::trim) {
+            Some("0") | Some("off") | Some("false") => Some(Self::disabled()),
+            Some(v) => {
+                let depth = v.parse::<usize>().unwrap_or(1).max(1);
+                let h = Self::heuristic(threads.max(2));
+                Some(Self { depth, panel_workers: h.panel_workers })
+            }
+            None => None,
+        };
+        match (base, tp) {
+            (Some(la), Some(t)) if la.enabled() => Some(Self { panel_workers: t.max(1), ..la }),
+            (Some(la), _) => Some(la),
+            (None, Some(t)) => {
+                let h = Self::heuristic(threads);
+                h.enabled().then_some(Self { panel_workers: t.max(1), ..h })
+            }
+            (None, None) => None,
+        }
+    }
+}
 
 /// Configuration policy for the engine.
 #[derive(Clone, Debug)]
@@ -104,6 +170,10 @@ pub struct GemmEngine {
     workspace: Workspace,
     /// Persistent worker team; `None` until a parallel plan is set.
     pool: Option<Arc<WorkerPool>>,
+    /// Explicitly pinned lookahead policy (always wins); `None` = the
+    /// environment override, else the heuristic for the plan width
+    /// (resolved by [`Self::lookahead`]).
+    lookahead: Option<Lookahead>,
     /// Memoized `(mode, dims) -> config` selections.
     config_cache: RefCell<HashMap<(ModeKey, GemmDims), GemmConfig>>,
     cache_stats: Cell<ConfigCacheStats>,
@@ -127,6 +197,7 @@ impl GemmEngine {
             kernels,
             workspace: Workspace::new(),
             pool: None,
+            lookahead: None,
             config_cache: RefCell::new(HashMap::new()),
             cache_stats: Cell::new(ConfigCacheStats::default()),
             last_config: None,
@@ -160,6 +231,34 @@ impl GemmEngine {
     /// The persistent pool, if a parallel plan was provisioned.
     pub fn pool(&self) -> Option<&Arc<WorkerPool>> {
         self.pool.as_ref()
+    }
+
+    /// Pin a lookahead policy (see [`Lookahead`]); builder form.
+    pub fn with_lookahead(mut self, la: Lookahead) -> Self {
+        self.lookahead = Some(la);
+        self
+    }
+
+    /// Pin a lookahead policy in place.
+    pub fn set_lookahead(&mut self, la: Lookahead) {
+        self.lookahead = Some(la);
+    }
+
+    /// Resolve the effective lookahead policy: an explicitly pinned
+    /// policy always wins (so an ablation arm that pins
+    /// `Lookahead::disabled()` stays disabled regardless of stray
+    /// environment), then the environment override (`DLA_LOOKAHEAD` /
+    /// `DLA_PANEL_WORKERS`, for flipping un-pinned engines from the
+    /// harness), then the heuristic for the current plan width.
+    pub fn lookahead(&self) -> Lookahead {
+        if let Some(la) = self.lookahead {
+            return la;
+        }
+        let threads = self.plan.threads;
+        if let Some(env) = Lookahead::from_env(threads) {
+            return env;
+        }
+        Lookahead::heuristic(threads)
     }
 
     /// The micro-kernel shapes eligible for *dynamic selection*: prefetch
@@ -295,6 +394,44 @@ impl GemmEngine {
         let kernel = self.implementation_for(cfg.mk);
         self.last_config = Some(cfg);
         self.dispatch(&cfg, &kernel, alpha, a, b, beta, c);
+    }
+
+    /// Lookahead-fused trailing update `C += alpha * A * B`: the first
+    /// `split_col` columns of C are updated first, then `panel_workers`
+    /// pool ranks run `panel_task` on them (factor the next panel) while
+    /// the rest of the team finishes the remaining columns; one team
+    /// barrier rejoins. The configuration is planned **once on the full
+    /// trailing dimensions**, so the column-split arithmetic is bitwise
+    /// identical to a plain [`Self::gemm`] of the whole update (the
+    /// k-blocking is what determines each element's accumulation order).
+    /// Without a multi-thread pool the same schedule runs inline.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_fused_trailing(
+        &mut self,
+        alpha: f64,
+        a: MatView<'_>,
+        b: MatView<'_>,
+        c: &mut MatViewMut<'_>,
+        split_col: usize,
+        panel_workers: usize,
+        panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
+    ) {
+        let dims = GemmDims::new(a.rows, b.cols, a.cols);
+        let cfg = self.plan_config(dims);
+        let kernel = self.implementation_for(cfg.mk);
+        self.last_config = Some(cfg);
+        match &self.pool {
+            Some(pool) => {
+                gemm_fused_trailing(
+                    &cfg, &kernel, alpha, a, b, c, split_col, panel_workers, panel_task, pool,
+                );
+            }
+            None => {
+                gemm_fused_trailing_seq(
+                    &cfg, &kernel, alpha, a, b, c, split_col, panel_task, &mut self.workspace,
+                );
+            }
+        }
     }
 
     /// Run with an explicit configuration, bypassing the policy (used by
@@ -441,6 +578,60 @@ mod tests {
         }
         assert!(eng.config_cache_len() <= GemmEngine::CONFIG_CACHE_CAP);
         assert_eq!(eng.config_cache_stats().misses, n as u64);
+    }
+
+    #[test]
+    fn lookahead_heuristic_scales_with_team_width() {
+        assert!(!Lookahead::heuristic(1).enabled());
+        assert_eq!(Lookahead::heuristic(4), Lookahead { depth: 1, panel_workers: 1 });
+        assert_eq!(Lookahead::heuristic(16), Lookahead { depth: 1, panel_workers: 2 });
+        assert_eq!(Lookahead::heuristic(64), Lookahead { depth: 1, panel_workers: 8 });
+        assert!(!Lookahead::disabled().enabled());
+    }
+
+    #[test]
+    fn engine_lookahead_defaults_and_pinning() {
+        // No env override is set under `cargo test` (the harness only
+        // sets DLA_* for the ablation benches), so resolution exercises
+        // the heuristic/pinned branches.
+        let seq = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+        assert!(!seq.lookahead().enabled(), "sequential engine: lookahead off by default");
+        let par = GemmEngine::new(host_xeon(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads: 4, target: crate::gemm::ParallelLoop::G4 });
+        assert_eq!(par.lookahead(), Lookahead { depth: 1, panel_workers: 1 });
+        let pinned = par.with_lookahead(Lookahead { depth: 1, panel_workers: 2 });
+        assert_eq!(pinned.lookahead().panel_workers, 2);
+    }
+
+    #[test]
+    fn engine_fused_trailing_matches_plain_gemm() {
+        let mut rng = Pcg64::seed(99);
+        let (m, n, k, split) = (50, 41, 9, 11);
+        let a = MatrixF64::random(m, k, &mut rng);
+        let b = MatrixF64::random(k, n, &mut rng);
+        let c0 = MatrixF64::random(m, n, &mut rng);
+        // Reference: one whole-update gemm on an identically-configured
+        // engine (same mode => same planned config).
+        let mut c_ref = c0.clone();
+        let mut ref_eng = GemmEngine::new(host_xeon(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads: 3, target: crate::gemm::ParallelLoop::G4 });
+        ref_eng.gemm(-1.0, a.view(), b.view(), 1.0, &mut c_ref.view_mut());
+        for threads in [1, 3] {
+            let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined)
+                .with_plan(ThreadPlan { threads, target: crate::gemm::ParallelLoop::G4 });
+            let mut c = c0.clone();
+            eng.gemm_fused_trailing(-1.0, a.view(), b.view(), &mut c.view_mut(), split, 1, &|_| {});
+            assert_eq!(
+                c.max_abs_diff(&c_ref),
+                0.0,
+                "fused trailing (x{threads}) must be bitwise identical to plain gemm"
+            );
+        }
+        // And a pool-less engine takes the inline path with the same result.
+        let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+        let mut c = c0.clone();
+        eng.gemm_fused_trailing(-1.0, a.view(), b.view(), &mut c.view_mut(), split, 1, &|_| {});
+        assert_eq!(c.max_abs_diff(&c_ref), 0.0);
     }
 
     #[test]

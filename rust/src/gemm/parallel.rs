@@ -60,7 +60,7 @@
 
 use crate::model::ccp::GemmConfig;
 use crate::model::GemmDims;
-use crate::runtime::pool::{PoolCtx, WorkerPool};
+use crate::runtime::pool::{PoolCtx, SubTeam, WorkerPool};
 use crate::util::matrix::{MatView, MatViewMut};
 
 use super::blocked::{gemm_blocked, macro_kernel, scale_c, Workspace};
@@ -91,14 +91,14 @@ impl ThreadPlan {
 
 /// Send-able raw pointer to C (threads write disjoint tiles).
 #[derive(Clone, Copy)]
-struct SendPtr(*mut f64);
+pub(crate) struct SendPtr(pub(crate) *mut f64);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
 impl SendPtr {
     /// Accessor (not a field read) so closures capture the whole wrapper
     /// instead of the raw pointer under edition-2021 disjoint capture.
-    fn ptr(&self) -> *mut f64 {
+    pub(crate) fn ptr(&self) -> *mut f64 {
         self.0
     }
 }
@@ -117,6 +117,15 @@ unsafe impl Sync for SharedBuf {}
 impl SharedBuf {
     fn new(buf: &mut [f64]) -> Self {
         Self { ptr: buf.as_mut_ptr(), len: buf.len() }
+    }
+
+    /// A window `[off, off + len)` of this buffer (used to address one
+    /// packed-`Ac` slot of the fused driver's per-iteration big buffer).
+    fn window(&self, off: usize, len: usize) -> Self {
+        assert!(off + len <= self.len);
+        // SAFETY: in-bounds by the assert; aliasing discipline is the
+        // caller's (same contract as `range_mut`).
+        Self { ptr: unsafe { self.ptr.add(off) }, len }
     }
 
     /// # Safety
@@ -409,6 +418,254 @@ fn gemm_parallel_g3(
     drop(ws0);
 }
 
+/// Packed-`Ac` layout for the fused trailing driver: one write-once slot
+/// per `(pc, ic)` macro-block of A, laid out pc-major. Slots are packed
+/// exactly once per call and read by both column phases, so the
+/// factorization's k-panel is packed once per iteration instead of once
+/// per phase. Offsets are closed-form because every ic block before the
+/// last is a full `mc` (and every pc block before the last a full `kc`).
+#[derive(Clone, Copy)]
+struct PackedALayout {
+    m: usize,
+    k: usize,
+    mc: usize,
+    kc: usize,
+    mr: usize,
+}
+
+impl PackedALayout {
+    /// Packed rows summed over the ic blocks: each block zero-pads its
+    /// own `mc_eff` up to whole `mr` micro-panels, so when `mr` does not
+    /// divide `mc` this is strictly more than `ceil(m/mr)*mr` — the pc
+    /// stride must use this per-block sum, not a ceil over the whole `m`
+    /// (that under-sizes the buffer and aliases neighbouring slots).
+    fn padded_rows(&self) -> usize {
+        let full = self.m / self.mc;
+        let rem = self.m % self.mc;
+        full * self.mc.div_ceil(self.mr) * self.mr
+            + if rem > 0 { rem.div_ceil(self.mr) * self.mr } else { 0 }
+    }
+
+    fn total_len(&self) -> usize {
+        // Every pc block stores `padded_rows` rows for each of its
+        // kc_eff k-values, and the kc_eff sum over all pc blocks is k.
+        self.padded_rows() * self.k
+    }
+
+    fn offset(&self, pc: usize, ic: usize) -> usize {
+        let kc_eff = self.kc.min(self.k - pc);
+        (pc / self.kc) * self.padded_rows() * self.kc
+            + (ic / self.mc) * self.mc.div_ceil(self.mr) * self.mr * kc_eff
+    }
+
+    fn block_len(&self, pc: usize, ic: usize) -> usize {
+        let kc_eff = self.kc.min(self.k - pc);
+        let mc_eff = self.mc.min(self.m - ic);
+        packed_a_len(mc_eff, kc_eff, self.mr)
+    }
+}
+
+/// One column-phase sweep of the fused driver: the executing (sub-)team
+/// updates C columns `[cols.0, cols.1)` from the shared packed-A slots,
+/// packing them cooperatively on the first pass when `pack_a_slots`.
+/// `sync` must be the barrier of exactly the ranks executing this call
+/// (full-team barrier in phase 1, update sub-team barrier in phase 2),
+/// and every one of those ranks must make this call with identical
+/// arguments.
+#[allow(clippy::too_many_arguments)]
+fn fused_col_sweep(
+    cfg: &GemmConfig,
+    kernel: &MicroKernelImpl,
+    alpha: f64,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    cbase: SendPtr,
+    ldc: usize,
+    cols: (usize, usize),
+    pack_a_slots: bool,
+    layout: PackedALayout,
+    a_shared: SharedBuf,
+    b_shared: SharedBuf,
+    rank: usize,
+    threads: usize,
+    sync: &dyn Fn(),
+) {
+    let (m, k) = (a.rows, a.cols);
+    let (mc, nc, kc) = (cfg.ccp.mc, cfg.ccp.nc, cfg.ccp.kc);
+    let (mr, nr) = (cfg.mk.mr, cfg.mk.nr);
+    let (col_lo, col_hi) = cols;
+    let mut first_pass = pack_a_slots;
+    let mut jc = col_lo; // Loop G1 over this phase's column range
+    while jc < col_hi {
+        let nc_eff = nc.min(col_hi - jc);
+        let mut pc = 0; // Loop G2
+        while pc < k {
+            let kc_eff = kc.min(k - pc);
+            sync(); // prior compute done: Bc may be overwritten
+            coop_pack_b(rank, threads, b.sub(pc, jc, kc_eff, nc_eff), b_shared, nr);
+            if first_pass {
+                // Pack every Ac slot of this pc block. Slots are
+                // write-once and mutually disjoint, so no barrier is
+                // needed between them — only the one pack-complete
+                // barrier below.
+                let mut ic = 0;
+                while ic < m {
+                    let mc_eff = mc.min(m - ic);
+                    let slot = a_shared.window(layout.offset(pc, ic), layout.block_len(pc, ic));
+                    coop_pack_a(rank, threads, a.sub(ic, pc, mc_eff, kc_eff), slot, mr, alpha);
+                    ic += mc;
+                }
+            }
+            sync(); // packs complete: buffers readable
+            let (lo, hi) = partition_rank(nc_eff, threads, rank, nr);
+            if lo < hi {
+                let mut ic = 0; // Loop G3
+                while ic < m {
+                    let mc_eff = mc.min(m - ic);
+                    let off = layout.offset(pc, ic);
+                    let len = layout.block_len(pc, ic);
+                    // SAFETY: packs are barrier-complete; each rank
+                    // updates a disjoint jr-range of C.
+                    unsafe {
+                        macro_kernel(
+                            kernel,
+                            kc_eff,
+                            mc_eff,
+                            nc_eff,
+                            &a_shared.as_slice()[off..off + len],
+                            b_shared.as_slice(),
+                            cbase.ptr().add(jc * ldc + ic),
+                            ldc,
+                            (lo, hi),
+                        );
+                    }
+                    ic += mc;
+                }
+            }
+            pc += kc;
+        }
+        first_pass = false;
+        jc += nc;
+    }
+}
+
+/// Lookahead-fused trailing update (`C += alpha * A * B`, beta fixed at
+/// 1): the first `split_col` columns of C are updated **first** by the
+/// whole team; the team then splits — `panel_workers` ranks run
+/// `panel_task` (e.g. factoring the next panel inside those
+/// freshly-updated columns) while the remaining ranks sweep the other
+/// columns — and everyone rejoins at a single team barrier. This is the
+/// paper-stack co-design move the LAPACK layer needs to overlap PFACT
+/// with the trailing GEMM (static lookahead): the pool never goes idle
+/// between the update and the next panel factorization.
+///
+/// Per-element arithmetic is bitwise identical to [`gemm_parallel`] /
+/// [`gemm_blocked`] with the same (clamped) configuration: the column
+/// split never changes an element's k-accumulation — every micro-kernel
+/// accumulates its tile from zero and adds into C once per `pc` block, in
+/// ascending `pc` order, regardless of tile geometry.
+///
+/// `panel_task` runs exactly once per panel-team rank (once total on a
+/// single-thread pool), only after the first `split_col` columns of C are
+/// complete; it must touch only memory disjoint from C's remaining
+/// columns and from A and B.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_fused_trailing(
+    cfg: &GemmConfig,
+    kernel: &MicroKernelImpl,
+    alpha: f64,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    c: &mut MatViewMut<'_>,
+    split_col: usize,
+    panel_workers: usize,
+    panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
+    pool: &WorkerPool,
+) {
+    assert_eq!(kernel.spec, cfg.mk, "kernel/config shape mismatch");
+    assert_eq!(a.cols, b.rows, "inner dimension mismatch");
+    assert_eq!(c.rows, a.rows, "C row mismatch");
+    assert_eq!(c.cols, b.cols, "C col mismatch");
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    assert!(split_col <= n, "split_col out of range");
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        // Nothing to update, but callers rely on the panel task running.
+        panel_task(&SubTeam::solo_panel());
+        return;
+    }
+    let ccp = cfg.ccp.clamp_to(GemmDims::new(m, n, k));
+    let eff = GemmConfig { mk: cfg.mk, ccp };
+    if pool.threads() == 1 {
+        let mut ws = pool.workspace(0);
+        gemm_fused_trailing_seq(&eff, kernel, alpha, a, b, c, split_col, panel_task, &mut ws);
+        return;
+    }
+    let layout = PackedALayout { m, k, mc: ccp.mc, kc: ccp.kc, mr: eff.mk.mr };
+    let ldc = c.ld;
+    let mut ws0 = pool.workspace(0);
+    ws0.ensure(&eff);
+    let abig = layout.total_len();
+    if ws0.a_buf.len() < abig {
+        ws0.a_buf.resize(abig, 0.0);
+    }
+    let a_shared = SharedBuf::new(&mut ws0.a_buf);
+    let b_shared = SharedBuf::new(&mut ws0.b_buf);
+    let cbase = SendPtr(c.data.as_mut_ptr());
+    pool.run(&|ctx: &PoolCtx<'_>| {
+        // Phase 1: the full team updates the next panel's columns (and
+        // packs every Ac slot, write-once).
+        fused_col_sweep(
+            &eff, kernel, alpha, a, b, cbase, ldc, (0, split_col), true, layout, a_shared,
+            b_shared, ctx.rank, ctx.threads, &|| ctx.barrier(),
+        );
+        ctx.barrier(); // panel columns final; Bc free for the update team
+        let sub = ctx.split(panel_workers);
+        if sub.panel {
+            panel_task(&sub);
+        } else {
+            // Phase 2: the update sub-team finishes the remaining
+            // columns, reusing the packed Ac slots (packing them here
+            // only if there was no phase 1 at all).
+            fused_col_sweep(
+                &eff, kernel, alpha, a, b, cbase, ldc, (split_col, n), split_col == 0, layout,
+                a_shared, b_shared, sub.rank, sub.threads, &|| sub.barrier(),
+            );
+        }
+        ctx.barrier(); // rejoin: panel results and trailing columns published
+    });
+    drop(ws0);
+}
+
+/// The fused schedule executed inline (no pool, or a single-thread pool):
+/// update the panel columns, run the panel task solo, update the rest.
+/// Identical operation order — and therefore identical results — to the
+/// split-team driver.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_fused_trailing_seq(
+    cfg: &GemmConfig,
+    kernel: &MicroKernelImpl,
+    alpha: f64,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    c: &mut MatViewMut<'_>,
+    split_col: usize,
+    panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
+    ws: &mut Workspace,
+) {
+    let n = b.cols;
+    if split_col > 0 {
+        let b1 = b.sub(0, 0, b.rows, split_col);
+        let mut c1 = c.sub_mut(0, 0, c.rows, split_col);
+        gemm_blocked(cfg, kernel, alpha, a, b1, 1.0, &mut c1, ws);
+    }
+    panel_task(&SubTeam::solo_panel());
+    if split_col < n {
+        let b2 = b.sub(0, split_col, b.rows, n - split_col);
+        let mut c2 = c.sub_mut(0, split_col, c.rows, n - split_col);
+        gemm_blocked(cfg, kernel, alpha, a, b2, 1.0, &mut c2, ws);
+    }
+}
+
 /// The seed's spawn-per-macro-block G4 driver, retained **only** as the
 /// ablation baseline (`exp_ablation` case "spawn-per-block" and the pool
 /// regression tests): it spawns fresh OS threads inside the `ic` loop,
@@ -486,6 +743,8 @@ mod tests {
     use crate::gemm::microkernel::for_shape;
     use crate::model::{Ccp, MicroKernel};
     use crate::util::{MatrixF64, Pcg64};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
 
     fn run_parallel(target: ParallelLoop, threads: usize, m: usize, n: usize, k: usize, ccp: Ccp) {
         let mk = MicroKernel::new(8, 6);
@@ -608,6 +867,126 @@ mod tests {
             &cfg, &kernel, 1.0, a.view(), b.view(), 1.0, &mut c.view_mut(), 3, &mut ws2,
         );
         assert_eq!(c.max_abs_diff(&c_seq), 0.0);
+    }
+
+    #[test]
+    fn fused_trailing_bitwise_matches_blocked_and_runs_panel_task() {
+        // The fused driver must produce C bitwise identical to one full
+        // gemm_blocked with the same config, for any column split —
+        // including splits that do not align to nr (the non-divisible
+        // block sizes of a real LU).
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp: Ccp::new(32, 24, 16) };
+        let mut rng = Pcg64::seed(123);
+        let (m, n, k) = (61, 53, 13);
+        let a = MatrixF64::random(m, k, &mut rng);
+        let b = MatrixF64::random(k, n, &mut rng);
+        let c0 = MatrixF64::random(m, n, &mut rng);
+        let mut c_ref = c0.clone();
+        let mut ws = Workspace::new();
+        gemm_blocked(&cfg, &kernel, -1.0, a.view(), b.view(), 1.0, &mut c_ref.view_mut(), &mut ws);
+        for threads in [1, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            for t_p in [1, 2] {
+                for split in [0, 5, 24, n] {
+                    let mut c = c0.clone();
+                    let ran = AtomicU64::new(0);
+                    gemm_fused_trailing(
+                        &cfg, &kernel, -1.0, a.view(), b.view(), &mut c.view_mut(), split, t_p,
+                        &|sub| {
+                            assert!(sub.panel);
+                            ran.fetch_add(1, Ordering::SeqCst);
+                            sub.barrier();
+                        },
+                        &pool,
+                    );
+                    assert_eq!(
+                        c.max_abs_diff(&c_ref),
+                        0.0,
+                        "fused x{threads} t_p={t_p} split={split} diverges from blocked"
+                    );
+                    let expect_ranks = if threads == 1 { 1 } else { t_p.min(threads - 1) as u64 };
+                    assert_eq!(ran.load(Ordering::SeqCst), expect_ranks, "panel task rank count");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_trailing_packed_slots_survive_mr_not_dividing_mc() {
+        // Regression: the packed-A slot layout must size pc-block strides
+        // as the SUM of per-ic-block padding. With mc=16, mr=12 each full
+        // ic block pads 16 -> 24 rows, so three blocks of m=40 need
+        // 24+24+12=60 packed rows — more than ceil(40/12)*12=48. The old
+        // ceil-over-m stride aliased the last slot of one pc block onto
+        // the next block's first slot. Two pc blocks (k=20 > kc=10) make
+        // the aliasing observable as corrupted results.
+        let mk = MicroKernel::new(12, 4);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp: Ccp::new(16, 12, 10) };
+        let mut rng = Pcg64::seed(456);
+        let (m, n, k) = (40, 36, 20);
+        let a = MatrixF64::random(m, k, &mut rng);
+        let b = MatrixF64::random(k, n, &mut rng);
+        let c0 = MatrixF64::random(m, n, &mut rng);
+        let mut c_ref = c0.clone();
+        let mut ws = Workspace::new();
+        gemm_blocked(&cfg, &kernel, 1.0, a.view(), b.view(), 1.0, &mut c_ref.view_mut(), &mut ws);
+        for threads in [1, 3] {
+            let pool = WorkerPool::new(threads);
+            let mut c = c0.clone();
+            gemm_fused_trailing(
+                &cfg, &kernel, 1.0, a.view(), b.view(), &mut c.view_mut(), 8, 1, &|_| {}, &pool,
+            );
+            assert_eq!(
+                c.max_abs_diff(&c_ref),
+                0.0,
+                "x{threads}: packed-A slots must not alias when mr does not divide mc"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_trailing_panel_task_sees_updated_panel_columns() {
+        // The panel task must observe the phase-1 update already applied
+        // to the first split columns (that is the whole point of the
+        // pipeline ordering).
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp: Ccp::new(16, 12, 8) };
+        let mut rng = Pcg64::seed(321);
+        let (m, n, k, split) = (40, 30, 8, 7);
+        let a = MatrixF64::random(m, k, &mut rng);
+        let b = MatrixF64::random(k, n, &mut rng);
+        let mut c = MatrixF64::zeros(m, n);
+        let mut expect_panel = MatrixF64::zeros(m, split);
+        gemm_reference(1.0, a.view(), b.sub(0, 0, k, split), 0.0, &mut expect_panel.view_mut());
+        let cptr = SendPtr(c.view_mut().data.as_mut_ptr());
+        let ldc = c.ld();
+        let seen_err = Mutex::new(-1.0f64);
+        let pool = WorkerPool::new(3);
+        gemm_fused_trailing(
+            &cfg, &kernel, 1.0, a.view(), b.view(), &mut c.view_mut(), split, 1,
+            &|sub| {
+                if sub.rank == 0 {
+                    let mut err: f64 = 0.0;
+                    for j in 0..split {
+                        for i in 0..m {
+                            // SAFETY: phase 1 is complete and the update
+                            // team only touches columns >= split.
+                            let v = unsafe { *cptr.ptr().add(j * ldc + i) };
+                            err = err.max((v - expect_panel[(i, j)]).abs());
+                        }
+                    }
+                    *seen_err.lock().unwrap() = err;
+                }
+            },
+            &pool,
+        );
+        let err = *seen_err.lock().unwrap();
+        assert!(err >= 0.0, "panel task did not run");
+        assert!(err < 1e-12 * k as f64, "panel columns not updated before the task: {err}");
     }
 
     #[test]

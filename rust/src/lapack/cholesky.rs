@@ -9,10 +9,20 @@
 //! A21 := A21 L11^{-T}      (trsm, right upper)
 //! A22 := A22 - A21 A21^T   (syrk, cast as the skinny-k GEMM)
 //! ```
+//!
+//! With the engine's [`crate::gemm::Lookahead`] enabled, the SYRK sweep
+//! runs as the fused split-team update: the team first updates the next
+//! panel's `b` columns of A22, then the panel sub-team leader runs the
+//! next `potf2` + panel TRSM on them while the update sub-team finishes
+//! the remaining columns — the same pipeline as the lookahead LU, minus
+//! pivoting. Factors are bitwise identical to the serialized path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::gemm::GemmEngine;
 use crate::util::matrix::{MatrixF64, MatViewMut};
 
+use super::pfact::{SharedPanel, NO_ERR};
 use super::trsm::trsm_right_upper;
 
 /// Unblocked lower Cholesky of a small `q x q` block (in place; upper
@@ -48,7 +58,21 @@ pub fn potf2(a: &mut MatViewMut<'_>) -> Result<(), usize> {
 /// referenced and overwritten with L. Trailing updates run through the
 /// engine so they follow the co-design policy (and, like LU, reuse the
 /// engine's persistent worker pool and memoized per-shape selections).
+/// With the engine's lookahead enabled the SYRK sweep overlaps the next
+/// panel's `potf2` + TRSM (module docs); results are bitwise identical.
 pub fn cholesky_blocked(a: &mut MatrixF64, block: usize, engine: &mut GemmEngine) -> Result<(), usize> {
+    if engine.lookahead().enabled() {
+        cholesky_blocked_lookahead(a, block, engine)
+    } else {
+        cholesky_blocked_baseline(a, block, engine)
+    }
+}
+
+fn cholesky_blocked_baseline(
+    a: &mut MatrixF64,
+    block: usize,
+    engine: &mut GemmEngine,
+) -> Result<(), usize> {
     let s = a.rows();
     assert_eq!(a.cols(), s);
     let mut k = 0;
@@ -73,6 +97,82 @@ pub fn cholesky_blocked(a: &mut MatrixF64, block: usize, engine: &mut GemmEngine
                 let a21t = a21.transposed();
                 let mut a22 = a.sub_mut(k + b, k + b, rest, rest);
                 engine.gemm(-1.0, a21.view(), a21t.view(), 1.0, &mut a22);
+            }
+        }
+        k += b;
+    }
+    Ok(())
+}
+
+/// Factor one panel in place: `potf2` on the `b x b` diagonal block, then
+/// the panel TRSM on the rows below it. Runs on the panel sub-team leader
+/// inside the fused trailing update (and up front for panel 0).
+fn factor_panel(pv: &mut MatViewMut<'_>, b: usize) -> Result<(), usize> {
+    let rows = pv.rows;
+    {
+        let mut a11 = pv.sub_mut(0, 0, b, b);
+        potf2(&mut a11)?;
+    }
+    if b < rows {
+        let l11t = pv.as_view().sub(0, 0, b, b).to_owned_matrix().transposed();
+        let mut a21 = pv.sub_mut(b, 0, rows - b, b);
+        trsm_right_upper(l11t.view(), &mut a21);
+    }
+    Ok(())
+}
+
+/// The fused pipeline: every iteration enters with its panel (diagonal
+/// block and sub-diagonal TRSM) already factored, so only the SYRK-shaped
+/// trailing update remains — and the next panel factors *inside* it on
+/// the panel sub-team.
+fn cholesky_blocked_lookahead(
+    a: &mut MatrixF64,
+    block: usize,
+    engine: &mut GemmEngine,
+) -> Result<(), usize> {
+    let s = a.rows();
+    assert_eq!(a.cols(), s);
+    // Panel 0 up front.
+    {
+        let b0 = block.min(s);
+        let mut pv = a.sub_mut(0, 0, s, b0);
+        factor_panel(&mut pv, b0)?;
+    }
+    let mut k = 0;
+    while k < s {
+        let b = block.min(s - k);
+        if k + b < s {
+            let rest = s - k - b;
+            let next_b = block.min(rest);
+            let a21 = a.sub(k + b, k, rest, b).to_owned_matrix();
+            let a21t = a21.transposed();
+            let mut a22 = a.sub_mut(k + b, k + b, rest, rest);
+            let panel_shared = SharedPanel::new(&mut a22.sub_mut(0, 0, rest, next_b));
+            let err = AtomicUsize::new(NO_ERR);
+            // potf2 + the panel TRSM are leader-sequential (unlike LU's
+            // cooperative getf2_team), so a 1-rank panel team keeps the
+            // other `t_p - 1` ranks in the update sweep instead of idle.
+            engine.gemm_fused_trailing(
+                -1.0,
+                a21.view(),
+                a21t.view(),
+                &mut a22,
+                next_b,
+                1,
+                &|sub| {
+                    if sub.rank == 0 {
+                        // SAFETY: phase 1 is complete and the update team
+                        // only touches columns >= next_b of A22.
+                        let mut pv = unsafe { panel_shared.view_mut() };
+                        if let Err(j) = factor_panel(&mut pv, next_b) {
+                            err.store(j, Ordering::Release);
+                        }
+                    }
+                },
+            );
+            let failed = err.load(Ordering::Acquire);
+            if failed != NO_ERR {
+                return Err(k + b + failed);
             }
         }
         k += b;

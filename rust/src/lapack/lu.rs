@@ -11,11 +11,37 @@
 //!
 //! The trailing GEMM has `m = n = s - k - b` (shrinking) and constant
 //! `k = b` — the skinny-k shape whose cache behaviour the paper studies.
+//!
+//! # Static lookahead (the fused pipeline)
+//!
+//! With a [`crate::gemm::Lookahead`] policy enabled on the engine,
+//! [`lu_blocked`] runs the fused pipeline instead: each iteration starts
+//! with its panel **already factored** (pivots recorded, swaps *not yet
+//! applied*), applies the deferred swaps to the columns left and right of
+//! the panel ([`laswp_parallel`] on the pool), solves A12, and then issues
+//! one fused pool job ([`GemmEngine::gemm_fused_trailing`]) that
+//!
+//! 1. updates the next panel's `b` columns of A22 with the whole team,
+//! 2. splits: a `t_p`-rank panel sub-team factors that freshly-updated
+//!    panel ([`getf2_team`]) while the update sub-team finishes the
+//!    remaining `n - b` columns,
+//! 3. rejoins at a single team barrier.
+//!
+//! Deferring the next panel's swaps past the concurrent remainder update
+//! is exact: the trailing GEMM updates each row independently, so
+//! permuting rows after the update equals permuting before. Pivots and
+//! factors are **bitwise identical** to the non-lookahead pooled path
+//! (asserted by `tests/lookahead.rs`): the fused driver plans one config
+//! for the full trailing shape, which fixes every element's
+//! k-accumulation order, and `getf2_team` replays `getf2`'s exact
+//! comparison and update sequence.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::gemm::GemmEngine;
 use crate::util::matrix::MatrixF64;
 
-use super::pfact::{getf2, laswp};
+use super::pfact::{getf2, getf2_team, laswp, laswp_parallel, SharedPanel, NO_ERR};
 use super::trsm::trsm_left_lower_unit;
 
 /// Result of a blocked LU factorization.
@@ -100,9 +126,39 @@ impl LuFactors {
     }
 }
 
+/// Apply the panel's row interchanges to the columns left and right of
+/// it, on the worker pool when the engine has one (the `laswp` satellite:
+/// the seed swapped rows with a sequential per-row loop over the full
+/// width while the whole team idled).
+fn apply_panel_swaps(
+    a: &mut MatrixF64,
+    k: usize,
+    b: usize,
+    piv_local: &[usize],
+    engine: &GemmEngine,
+) {
+    let s = a.rows();
+    let pool = engine.pool().cloned();
+    let mut swap = |view: &mut crate::util::matrix::MatViewMut<'_>| match &pool {
+        Some(p) => laswp_parallel(view, k, piv_local, p),
+        None => laswp(view, k, piv_local),
+    };
+    if k > 0 {
+        let mut left = a.sub_mut(0, 0, s, k);
+        swap(&mut left);
+    }
+    if k + b < s {
+        let mut right = a.sub_mut(0, k + b, s, s - k - b);
+        swap(&mut right);
+    }
+}
+
 /// Blocked right-looking LU with partial pivoting, in place over `a`,
 /// trailing updates through the supplied [`GemmEngine`] (this is where
 /// the co-design policy — CCPs + micro-kernel per call — takes effect).
+/// With the engine's [`crate::gemm::Lookahead`] policy enabled this runs
+/// the fused lookahead pipeline (see the module docs); results are
+/// bitwise identical either way.
 ///
 /// The engine amortizes two costs across the factorization sweep: its
 /// persistent worker pool (parallel plans spawn threads once, not per
@@ -110,6 +166,20 @@ impl LuFactors {
 /// trailing shape `(s-k-b) x (s-k-b) x b` runs the scorer once; repeated
 /// factorizations of equal order are pure cache hits).
 pub fn lu_blocked(a: &mut MatrixF64, block: usize, engine: &mut GemmEngine) -> Result<Vec<usize>, usize> {
+    if engine.lookahead().enabled() {
+        lu_blocked_lookahead(a, block, engine)
+    } else {
+        lu_blocked_baseline(a, block, engine)
+    }
+}
+
+/// The non-lookahead pipeline: factor panel, swap, solve, update —
+/// strictly serialized per iteration.
+fn lu_blocked_baseline(
+    a: &mut MatrixF64,
+    block: usize,
+    engine: &mut GemmEngine,
+) -> Result<Vec<usize>, usize> {
     let s = a.rows();
     assert_eq!(a.cols(), s, "LU requires a square matrix");
     assert!(block >= 1);
@@ -129,14 +199,7 @@ pub fn lu_blocked(a: &mut MatrixF64, block: usize, engine: &mut GemmEngine) -> R
         // --- Row interchanges on the left and right of the panel --------
         {
             let piv_local: Vec<usize> = (0..b).map(|j| pivots[k + j] - k).collect();
-            if k > 0 {
-                let mut left = a.sub_mut(0, 0, s, k);
-                laswp(&mut left, k, &piv_local);
-            }
-            if k + b < s {
-                let mut right = a.sub_mut(0, k + b, s, s - k - b);
-                laswp(&mut right, k, &piv_local);
-            }
+            apply_panel_swaps(a, k, b, &piv_local, engine);
         }
         if k + b < s {
             let rest = s - k - b;
@@ -152,6 +215,75 @@ pub fn lu_blocked(a: &mut MatrixF64, block: usize, engine: &mut GemmEngine) -> R
                 let a12 = a.sub(k, k + b, b, rest).to_owned_matrix();
                 let mut a22 = a.sub_mut(k + b, k + b, rest, rest);
                 engine.gemm(-1.0, a21.view(), a12.view(), 1.0, &mut a22);
+            }
+        }
+        k += b;
+    }
+    Ok(pivots)
+}
+
+/// The fused lookahead pipeline (module docs): every iteration enters
+/// with its panel already factored — by the up-front `getf2` for panel 0,
+/// then by the panel sub-team of the previous iteration's fused job — so
+/// the worker pool never sits parked behind a panel factorization.
+fn lu_blocked_lookahead(
+    a: &mut MatrixF64,
+    block: usize,
+    engine: &mut GemmEngine,
+) -> Result<Vec<usize>, usize> {
+    let s = a.rows();
+    assert_eq!(a.cols(), s, "LU requires a square matrix");
+    assert!(block >= 1);
+    let la = engine.lookahead();
+    let mut pivots = vec![0usize; s];
+    // Factor panel 0 up front (nothing to overlap it with yet).
+    {
+        let b0 = block.min(s);
+        let mut panel = a.sub_mut(0, 0, s, b0);
+        let mut piv_local = vec![0usize; b0];
+        getf2(&mut panel, &mut piv_local)?;
+        pivots[..b0].copy_from_slice(&piv_local);
+    }
+    let mut k = 0;
+    while k < s {
+        let b = block.min(s - k);
+        // Invariant: panel [k.., k..k+b] is factored, pivots[k..k+b] are
+        // recorded (absolute), and its swaps are still deferred.
+        let piv_local: Vec<usize> = (0..b).map(|j| pivots[k + j] - k).collect();
+        apply_panel_swaps(a, k, b, &piv_local, engine);
+        if k + b < s {
+            let rest = s - k - b;
+            // --- TSOLVE: A12 := L11^{-1} A12 ----------------------------
+            {
+                let l11 = a.sub(k, k, b, b).to_owned_matrix();
+                let mut a12 = a.sub_mut(k, k + b, b, rest);
+                trsm_left_lower_unit(l11.view(), &mut a12);
+            }
+            // --- Fused GEMM + PFACT(k+1): the whole team updates the
+            // next panel's columns of A22, then the panel sub-team
+            // factors them while the update sub-team finishes the rest.
+            let next_b = block.min(rest);
+            let a21 = a.sub(k + b, k, rest, b).to_owned_matrix();
+            let a12 = a.sub(k, k + b, b, rest).to_owned_matrix();
+            let mut a22 = a.sub_mut(k + b, k + b, rest, rest);
+            let panel_shared = SharedPanel::new(&mut a22.sub_mut(0, 0, rest, next_b));
+            let piv_next: Vec<AtomicUsize> = (0..next_b).map(|_| AtomicUsize::new(0)).collect();
+            let err = AtomicUsize::new(NO_ERR);
+            engine.gemm_fused_trailing(
+                -1.0,
+                a21.view(),
+                a12.view(),
+                &mut a22,
+                next_b,
+                la.panel_workers,
+                &|sub| getf2_team(&panel_shared, &piv_next, &err, sub),
+            );
+            let failed = err.load(Ordering::Acquire);
+            if failed != NO_ERR {
+                return Err(k + b + failed);
+            }
+            for (j, pj) in piv_next.iter().enumerate() {
+                pivots[k + b + j] = k + b + pj.load(Ordering::Acquire);
             }
         }
         k += b;

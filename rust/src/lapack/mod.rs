@@ -11,6 +11,15 @@
 //!   whole paper is about.
 //! - [`cholesky`] — blocked Cholesky (extension; a second consumer of the
 //!   co-design GEMM showing the approach generalizes beyond LU).
+//! - [`qr`] — blocked Householder QR (compact-WY), a third consumer.
+//!
+//! All three factorizations run a **static-lookahead fused pipeline**
+//! when the engine's [`crate::gemm::Lookahead`] policy is enabled (the
+//! default for multi-thread plans): the next panel factors on a pool
+//! sub-team *inside* the trailing update job, with results bitwise
+//! identical to the serialized path. See `README.md` in this directory
+//! for the pipeline write-up (team split, deferred swaps, rejoin
+//! barrier, `t_p` heuristic).
 
 pub mod cholesky;
 pub mod level3;
@@ -20,7 +29,7 @@ pub mod qr;
 pub mod trsm;
 
 pub use level3::{syrk_lower, trsm_blocked_left_lower_unit};
-pub use lu::{lu_blocked, lu_factor, LuFactors};
+pub use lu::{lu_blocked, lu_factor, lu_flops, LuFactors};
 pub use qr::{qr_blocked, QrFactors};
-pub use pfact::{getf2, laswp};
+pub use pfact::{getf2, getf2_team, laswp, laswp_parallel, SharedPanel, NO_ERR};
 pub use trsm::{trsm_left_lower_unit, trsm_right_upper};

@@ -3,9 +3,73 @@
 //!
 //! PFACT is the mostly-sequential kernel on the critical path of the
 //! blocked LU (paper §2.1): right-looking rank-1 updates on a tall-skinny
-//! `p x b` panel.
+//! `p x b` panel. Two cooperative variants break the strict
+//! LAPACK-on-top-of-BLAS layering the paper argues against:
+//!
+//! - [`getf2_team`] runs the panel factorization on a lookahead *panel
+//!   sub-team* ([`crate::runtime::pool::SubTeam`]): the sub-team leader
+//!   does the (inherently sequential) pivot search and column scaling,
+//!   while row interchanges and the trailing rank-1 update are split over
+//!   the sub-team by column. Bitwise identical to [`getf2`].
+//! - [`laswp_parallel`] applies a pivot sequence with the column range
+//!   split across the whole worker pool; each rank applies the full pivot
+//!   order to its own columns, so the permutation is exact.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::runtime::pool::{SubTeam, WorkerPool};
 use crate::util::matrix::MatViewMut;
+
+/// A raw shared view of a panel handed to a cooperating sub-team. Every
+/// rank of the team receives the same copy and coordinates its disjoint
+/// writes through the sub-team barrier.
+#[derive(Clone, Copy)]
+pub struct SharedPanel {
+    ptr: *mut f64,
+    pub rows: usize,
+    pub cols: usize,
+    pub ld: usize,
+}
+
+// SAFETY: shared mutation is coordinated by the sub-team barrier
+// discipline of the functions below (disjoint column ranges between
+// barriers); the wrapper itself only carries the pointer across threads.
+unsafe impl Send for SharedPanel {}
+unsafe impl Sync for SharedPanel {}
+
+impl SharedPanel {
+    pub fn new(v: &mut MatViewMut<'_>) -> Self {
+        Self { ptr: v.data.as_mut_ptr(), rows: v.rows, cols: v.cols, ld: v.ld }
+    }
+
+    /// Rebuild a mutable view.
+    ///
+    /// # Safety
+    /// The caller must guarantee exclusive access to the panel region for
+    /// the lifetime of the returned view (e.g. only sub-team rank 0 calls
+    /// this, or calls are separated by sub-team barriers).
+    pub unsafe fn view_mut<'a>(&self) -> MatViewMut<'a> {
+        let len = if self.cols == 0 { 0 } else { (self.cols - 1) * self.ld + self.rows };
+        MatViewMut {
+            rows: self.rows,
+            cols: self.cols,
+            ld: self.ld,
+            data: std::slice::from_raw_parts_mut(self.ptr, len),
+        }
+    }
+
+    #[inline]
+    fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        unsafe { *self.ptr.add(j * self.ld + i) }
+    }
+
+    #[inline]
+    fn set(&self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        unsafe { *self.ptr.add(j * self.ld + i) = v }
+    }
+}
 
 /// Unblocked LU with partial pivoting of a `p x q` panel (in place).
 ///
@@ -85,6 +149,131 @@ pub fn laswp(a: &mut MatViewMut<'_>, offset: usize, pivots: &[usize]) {
             a.set(r1, c, v);
             a.set(r2, c, t);
         }
+    }
+}
+
+/// Sentinel for "no failure" in the shared error slots of the team
+/// routines below.
+pub const NO_ERR: usize = usize::MAX;
+
+/// Row-interchange work below which forking the pool costs more than the
+/// swaps themselves (elements touched = 2 * pivots * cols).
+const LASWP_PARALLEL_MIN_ELEMS: usize = 16 * 1024;
+
+/// [`laswp`] on the worker pool: the column range is split across ranks
+/// and each rank applies the **full pivot sequence, in order,** to its
+/// own columns. Row swaps never cross columns, so per-column order is all
+/// that matters and the result is identical to the sequential `laswp`
+/// (the regression tests assert equality element-for-element). Columns
+/// are walked outermost so each column's cache lines are touched once per
+/// sweep instead of once per pivot.
+pub fn laswp_parallel(a: &mut MatViewMut<'_>, offset: usize, pivots: &[usize], pool: &WorkerPool) {
+    if pool.threads() == 1 || 2 * pivots.len() * a.cols < LASWP_PARALLEL_MIN_ELEMS {
+        laswp(a, offset, pivots);
+        return;
+    }
+    let cols = a.cols;
+    let ld = a.ld;
+    let base = SharedPanel::new(a);
+    pool.run(&|ctx| {
+        let (lo, hi) = crate::gemm::parallel::partition_rank(cols, ctx.threads, ctx.rank, 1);
+        for c in lo..hi {
+            // SAFETY: ranks own disjoint column ranges.
+            let col = unsafe { std::slice::from_raw_parts_mut(base.ptr.add(c * ld), base.rows) };
+            for (j, &pj) in pivots.iter().enumerate() {
+                if j != pj {
+                    col.swap(offset + j, offset + pj);
+                }
+            }
+        }
+    });
+}
+
+/// [`getf2`] run cooperatively by a lookahead panel sub-team, bitwise
+/// identical to the sequential routine. Sub-team rank 0 performs the
+/// pivot search and the multiplier scaling (both inherently sequential);
+/// the full-panel row interchange and the trailing rank-1 update are
+/// split over the sub-team by column, synchronized on the sub-team
+/// barrier. With a one-rank team every barrier is a no-op and this *is*
+/// `getf2`.
+///
+/// `pivots_out[j]` receives the step-j pivot row; on an exact zero pivot
+/// at column j, `err` is set to j (from [`NO_ERR`]) and every rank
+/// returns with the panel in the same state sequential `getf2` leaves on
+/// `Err(j)`.
+///
+/// Every rank of `team` must call this with identical arguments, and no
+/// rank outside the team may touch the panel or the output slots until
+/// the team rejoins the full job.
+pub fn getf2_team(
+    panel: &SharedPanel,
+    pivots_out: &[AtomicUsize],
+    err: &AtomicUsize,
+    team: &SubTeam<'_>,
+) {
+    let p = panel.rows;
+    let q = panel.cols;
+    let steps = p.min(q);
+    assert!(pivots_out.len() >= steps, "pivot buffer too small");
+    for j in 0..steps {
+        if team.rank == 0 {
+            // Pivot search: argmax |A(i, j)| over i >= j — the exact
+            // comparison sequence of `getf2`, so ties break identically.
+            let mut imax = j;
+            let mut vmax = panel.at(j, j).abs();
+            for i in j + 1..p {
+                let v = panel.at(i, j).abs();
+                if v > vmax {
+                    vmax = v;
+                    imax = i;
+                }
+            }
+            pivots_out[j].store(imax, Ordering::Release);
+            if vmax == 0.0 {
+                err.store(j, Ordering::Release);
+            }
+        }
+        team.barrier(); // pivot (and a possible error) published
+        if err.load(Ordering::Acquire) != NO_ERR {
+            return;
+        }
+        let imax = pivots_out[j].load(Ordering::Acquire);
+        // Swap rows j and imax across the whole panel, split by column.
+        if imax != j {
+            let (lo, hi) = crate::gemm::parallel::partition_rank(q, team.threads, team.rank, 1);
+            for c in lo..hi {
+                let t = panel.at(j, c);
+                let v = panel.at(imax, c);
+                panel.set(j, c, v);
+                panel.set(imax, c, t);
+            }
+            team.barrier(); // swap complete before anyone reads row j
+        }
+        if team.rank == 0 {
+            // Scale the sub-column into multipliers.
+            let pivot = panel.at(j, j);
+            let inv = 1.0 / pivot;
+            for i in j + 1..p {
+                let l = panel.at(i, j) * inv;
+                panel.set(i, j, l);
+            }
+        }
+        team.barrier(); // multipliers published
+        // Rank-1 update of the trailing sub-panel, split by column; each
+        // column's arithmetic is exactly the sequential AXPY.
+        let rem = q - j - 1;
+        let (lo, hi) = crate::gemm::parallel::partition_rank(rem, team.threads, team.rank, 1);
+        for c in j + 1 + lo..j + 1 + hi {
+            let ujc = panel.at(j, c);
+            if ujc == 0.0 {
+                continue;
+            }
+            for i in j + 1..p {
+                let v = panel.at(i, c) - panel.at(i, j) * ujc;
+                panel.set(i, c, v);
+            }
+        }
+        team.barrier(); // update complete before the next pivot search
     }
 }
 
@@ -192,5 +381,107 @@ mod tests {
         laswp(&mut a.view_mut(), 2, &[1]); // swap rows 2 and 3
         assert_eq!(a[(2, 0)], 3.0);
         assert_eq!(a[(3, 0)], 2.0);
+    }
+
+    #[test]
+    fn laswp_parallel_matches_sequential() {
+        let mut rng = Pcg64::seed(200);
+        // Big enough to clear the parallel threshold, plus a small case
+        // that takes the sequential fallback.
+        for (rows, cols, b, threads) in [(96, 200, 24, 3), (96, 300, 17, 4), (12, 6, 3, 2)] {
+            let a0 = MatrixF64::random(rows, cols, &mut rng);
+            // A realistic pivot sequence: from factoring a random panel.
+            let mut panel = MatrixF64::random(rows, b, &mut rng);
+            let mut piv = vec![0usize; b];
+            getf2(&mut panel.view_mut(), &mut piv).unwrap();
+            let mut seq = a0.clone();
+            laswp(&mut seq.view_mut(), 0, &piv);
+            let mut par = a0.clone();
+            let pool = WorkerPool::new(threads);
+            laswp_parallel(&mut par.view_mut(), 0, &piv, &pool);
+            assert_eq!(par.max_abs_diff(&seq), 0.0, "{rows}x{cols} b={b} x{threads}");
+            // With an offset too (pivots drawn from a shorter panel so
+            // offset + pivot stays in range, as in a real factorization).
+            let mut panel2 = MatrixF64::random(rows - 3, b, &mut rng);
+            let mut piv2 = vec![0usize; b];
+            getf2(&mut panel2.view_mut(), &mut piv2).unwrap();
+            let mut seq2 = a0.clone();
+            laswp(&mut seq2.view_mut(), 3, &piv2);
+            let mut par2 = a0.clone();
+            laswp_parallel(&mut par2.view_mut(), 3, &piv2, &pool);
+            assert_eq!(par2.max_abs_diff(&seq2), 0.0);
+        }
+    }
+
+    #[test]
+    fn getf2_team_solo_matches_sequential() {
+        let mut rng = Pcg64::seed(201);
+        for (p, q) in [(24, 8), (16, 16), (40, 7)] {
+            let a0 = MatrixF64::random(p, q, &mut rng);
+            let mut seq = a0.clone();
+            let mut piv_seq = vec![0usize; q];
+            getf2(&mut seq.view_mut(), &mut piv_seq).unwrap();
+            let mut team_m = a0.clone();
+            let pivots: Vec<AtomicUsize> = (0..q).map(|_| AtomicUsize::new(0)).collect();
+            let err = AtomicUsize::new(NO_ERR);
+            {
+                let mut v = team_m.view_mut();
+                let shared = SharedPanel::new(&mut v);
+                getf2_team(&shared, &pivots, &err, &crate::runtime::pool::SubTeam::solo_panel());
+            }
+            assert_eq!(err.load(Ordering::SeqCst), NO_ERR);
+            let piv_team: Vec<usize> =
+                pivots.iter().map(|x| x.load(Ordering::SeqCst)).collect();
+            assert_eq!(piv_team, piv_seq);
+            assert_eq!(team_m.max_abs_diff(&seq), 0.0, "p={p} q={q}");
+        }
+    }
+
+    #[test]
+    fn getf2_team_split_matches_sequential() {
+        let mut rng = Pcg64::seed(202);
+        let (p, q) = (48, 11);
+        let a0 = MatrixF64::random(p, q, &mut rng);
+        let mut seq = a0.clone();
+        let mut piv_seq = vec![0usize; q];
+        getf2(&mut seq.view_mut(), &mut piv_seq).unwrap();
+        for (threads, t_p) in [(3, 2), (4, 3), (2, 1)] {
+            let pool = WorkerPool::new(threads);
+            let mut team_m = a0.clone();
+            let pivots: Vec<AtomicUsize> = (0..q).map(|_| AtomicUsize::new(0)).collect();
+            let err = AtomicUsize::new(NO_ERR);
+            {
+                let mut v = team_m.view_mut();
+                let shared = SharedPanel::new(&mut v);
+                pool.run(&|ctx| {
+                    let sub = ctx.split(t_p);
+                    if sub.panel {
+                        getf2_team(&shared, &pivots, &err, &sub);
+                    }
+                    ctx.barrier(); // rejoin
+                });
+            }
+            assert_eq!(err.load(Ordering::SeqCst), NO_ERR);
+            let piv_team: Vec<usize> = pivots.iter().map(|x| x.load(Ordering::SeqCst)).collect();
+            assert_eq!(piv_team, piv_seq, "x{threads} t_p={t_p}");
+            assert_eq!(team_m.max_abs_diff(&seq), 0.0, "x{threads} t_p={t_p}");
+        }
+    }
+
+    #[test]
+    fn getf2_team_detects_singularity_like_sequential() {
+        let mut a = MatrixF64::zeros(4, 4);
+        a[(0, 0)] = 1.0;
+        a[(0, 1)] = 2.0;
+        a[(0, 2)] = 3.0;
+        let mut seq = a.clone();
+        let mut piv = vec![0usize; 4];
+        assert_eq!(getf2(&mut seq.view_mut(), &mut piv), Err(1));
+        let pivots: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        let err = AtomicUsize::new(NO_ERR);
+        let mut v = a.view_mut();
+        let shared = SharedPanel::new(&mut v);
+        getf2_team(&shared, &pivots, &err, &crate::runtime::pool::SubTeam::solo_panel());
+        assert_eq!(err.load(Ordering::SeqCst), 1);
     }
 }

@@ -6,9 +6,21 @@
 //! triangular factor `T` (`larft`), and apply `(I - V T V^T)^T` to the
 //! trailing columns with two GEMM-rich steps (`larfb`) — the trailing
 //! update again has inner dimension `b`, the paper's skinny-k shape.
+//!
+//! With the engine's [`crate::gemm::Lookahead`] enabled, the final (and
+//! dominant) `A2 -= V * (T^T V^T A2)` GEMM runs as the fused split-team
+//! update: the team applies it to the next panel's `b` columns first, the
+//! panel sub-team leader then runs `geqr2` on that freshly-updated panel
+//! while the update sub-team finishes the remaining columns. The packed V
+//! is shared by both column phases. Factors and tau are bitwise identical
+//! to the serialized path.
+
+use std::sync::Mutex;
 
 use crate::gemm::GemmEngine;
 use crate::util::matrix::{MatrixF64, MatViewMut};
+
+use super::pfact::SharedPanel;
 
 /// Result of a blocked QR factorization.
 pub struct QrFactors {
@@ -159,19 +171,30 @@ fn larft(v: &MatrixF64, tau: &[f64]) -> MatrixF64 {
 /// Blocked QR: factor `a` (m x n, m >= n) in place with block size `b`;
 /// trailing updates go through the co-design engine. The three GEMMs per
 /// panel recur with per-step shapes, so the engine's config memo cache
-/// reduces selector work to one scoring pass per distinct shape.
+/// reduces selector work to one scoring pass per distinct shape. With the
+/// engine's lookahead enabled the final GEMM overlaps the next panel's
+/// `geqr2` (module docs); results are bitwise identical.
 pub fn qr_blocked(a0: &MatrixF64, block: usize, engine: &mut GemmEngine) -> QrFactors {
     let (m, n) = (a0.rows(), a0.cols());
     assert!(m >= n, "qr_blocked expects m >= n");
     let mut a = a0.clone();
     let mut tau = vec![0.0; n];
     let b = block.max(1);
+    let la = engine.lookahead();
+    if la.enabled() {
+        // Panel 0 up front; each iteration then enters with its panel
+        // factored and overlaps the next `geqr2` with the trailing GEMM.
+        let b0 = b.min(n);
+        let mut panel = a.sub_mut(0, 0, m, b0);
+        geqr2(&mut panel, &mut tau[..b0]);
+    }
     let mut k = 0;
     while k < n {
         let bb = b.min(n - k);
         let rows = m - k;
-        // Panel factorization.
-        {
+        // Panel factorization (already done by the previous iteration's
+        // fused job — or the warm-up above — on the lookahead path).
+        if !la.enabled() {
             let mut panel = a.sub_mut(k, k, rows, bb);
             geqr2(&mut panel, &mut tau[k..k + bb]);
         }
@@ -200,7 +223,39 @@ pub fn qr_blocked(a0: &MatrixF64, block: usize, engine: &mut GemmEngine) -> QrFa
             engine.gemm(1.0, tt.view(), w.view(), 0.0, &mut tw.view_mut());
             // A2 := A2 - V W: the paper's skinny-k trailing update.
             let mut a2m = a.sub_mut(k, k + bb, rows, cols);
-            engine.gemm(-1.0, v.view(), tw.view(), 1.0, &mut a2m);
+            if la.enabled() {
+                // Fused: the next panel lives in rows [bb..] of A2's
+                // first next_b columns; factor it on the panel sub-team
+                // once phase 1 has finished those columns.
+                let next_b = b.min(cols);
+                let panel_shared = SharedPanel::new(&mut a2m.sub_mut(bb, 0, rows - bb, next_b));
+                let tau_next = Mutex::new(vec![0.0f64; next_b]);
+                // geqr2 is leader-sequential (Householder norms are
+                // reductions; no team variant yet), so a 1-rank panel
+                // team keeps the remaining ranks in the update sweep.
+                engine.gemm_fused_trailing(
+                    -1.0,
+                    v.view(),
+                    tw.view(),
+                    &mut a2m,
+                    next_b,
+                    1,
+                    &|sub| {
+                        if sub.rank == 0 {
+                            // SAFETY: phase 1 is complete; the update team
+                            // only touches columns >= next_b, and rows
+                            // [0, bb) of the panel columns are final.
+                            let mut pv = unsafe { panel_shared.view_mut() };
+                            let mut t = tau_next.lock().unwrap();
+                            geqr2(&mut pv, &mut t);
+                        }
+                    },
+                );
+                let tau_next = tau_next.into_inner().unwrap();
+                tau[k + bb..k + bb + next_b].copy_from_slice(&tau_next);
+            } else {
+                engine.gemm(-1.0, v.view(), tw.view(), 1.0, &mut a2m);
+            }
         }
         k += bb;
     }

@@ -36,10 +36,35 @@
 //! coordinator server hands one pool to every worker engine) serialize on
 //! an internal leader lock, which also keeps the machine from being
 //! oversubscribed.
+//!
+//! # Sub-teams (lookahead)
+//!
+//! The lookahead-fused LAPACK drivers split one broadcast job into two
+//! cooperating halves: a small *panel* team factors the next panel while
+//! the *update* team finishes the trailing GEMM columns. [`PoolCtx::split`]
+//! partitions the ranks into those two sub-teams, each with its **own
+//! reusable barrier** ([`SubTeam::barrier`]) so the teams synchronize
+//! internally without ever blocking on each other; the job rejoins at a
+//! single full-team [`PoolCtx::barrier`]. The split is per-job state only
+//! — nothing persists on the pool, and consecutive jobs may split at
+//! different widths (or not at all).
+//!
+//! # Idle accounting
+//!
+//! [`WorkerPool::stats`] exposes two pool-idle counters the coordinator
+//! metrics surface: `leader_wait_ns` (time the caller spent blocked in
+//! `run` after finishing its own rank-0 share, i.e. waiting for the
+//! slowest worker) and `idle_ns` (wall time between the end of one job
+//! and the start of the next, when every worker is parked). The second is
+//! the blind spot lookahead attacks: a factorization that runs `getf2` /
+//! `laswp` / TSOLVE between pooled trailing updates leaves the whole team
+//! parked for that long, and the fused drivers move that work inside the
+//! job.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::gemm::blocked::Workspace;
 
@@ -69,7 +94,21 @@ struct Shared {
     work_cv: Condvar,
     done_cv: Condvar,
     barrier: PoolBarrier,
+    /// Independent barriers for the two sub-teams of a split job
+    /// (index 0: panel team, index 1: update team). Sized at wait time
+    /// (`wait_n`) because the split width is chosen per job.
+    sub_barriers: [PoolBarrier; 2],
     births: AtomicUsize,
+    /// Completed broadcast jobs.
+    jobs: AtomicU64,
+    /// Nanoseconds the leader spent in `run`'s completion handshake after
+    /// finishing its own rank-0 work (waiting for the slowest worker).
+    leader_wait_ns: AtomicU64,
+    /// Nanoseconds between the end of one job and the start of the next
+    /// (the whole team parked; the classic factorization serial section).
+    idle_ns: AtomicU64,
+    /// End of the most recent job, for the idle-gap accounting.
+    last_job_end: Mutex<Option<Instant>>,
     workspaces: Vec<Mutex<Workspace>>,
 }
 
@@ -108,13 +147,21 @@ impl PoolBarrier {
     }
 
     fn wait(&self) {
+        self.wait_n(self.count);
+    }
+
+    /// Wait for `count` arrivals instead of the constructed team size —
+    /// the sub-team barriers are sized per job (the split width is a job
+    /// parameter), so every participant passes the (identical) sub-team
+    /// size at wait time.
+    fn wait_n(&self, count: usize) {
         let mut st = lock_pool(&self.lock);
         if st.poisoned {
             panic!("pool barrier poisoned by a panicked rank");
         }
         let gen = st.generation;
         st.arrived += 1;
-        if st.arrived == self.count {
+        if st.arrived == count {
             st.arrived = 0;
             st.generation += 1;
             self.cv.notify_all();
@@ -168,6 +215,76 @@ impl<'p> PoolCtx<'p> {
     pub fn workspace(&self) -> MutexGuard<'p, Workspace> {
         lock_pool(&self.shared.workspaces[self.rank])
     }
+
+    /// Split the team into a *panel* sub-team (ranks `< panel_workers`,
+    /// leader included) and an *update* sub-team (the rest), each with an
+    /// independent reusable barrier. Every rank of the job must call this
+    /// with the same `panel_workers`, and the two halves must not
+    /// `PoolCtx::barrier` until both have finished their sub-team work
+    /// (the rejoin). `panel_workers` is clamped to `[1, threads - 1]` so
+    /// both sub-teams are non-empty whenever `threads > 1`.
+    pub fn split(&self, panel_workers: usize) -> SubTeam<'p> {
+        let t_p = panel_workers.clamp(1, self.threads.saturating_sub(1).max(1));
+        if self.rank < t_p {
+            SubTeam {
+                panel: true,
+                rank: self.rank,
+                threads: t_p.min(self.threads),
+                barrier: Some(&self.shared.sub_barriers[0]),
+            }
+        } else {
+            SubTeam {
+                panel: false,
+                rank: self.rank - t_p,
+                threads: self.threads - t_p,
+                barrier: Some(&self.shared.sub_barriers[1]),
+            }
+        }
+    }
+}
+
+/// One half of a split team (see [`PoolCtx::split`]): sub-team-local rank
+/// and size plus a barrier private to this half.
+pub struct SubTeam<'p> {
+    /// True for the panel sub-team, false for the update sub-team.
+    pub panel: bool,
+    /// Rank within the sub-team, `0..threads`.
+    pub rank: usize,
+    /// Sub-team size.
+    pub threads: usize,
+    barrier: Option<&'p PoolBarrier>,
+}
+
+impl SubTeam<'_> {
+    /// A degenerate one-rank panel team, used by the sequential fallback
+    /// paths (no pool, or a single-thread pool) so panel tasks run
+    /// identically with zero synchronization.
+    pub fn solo_panel() -> SubTeam<'static> {
+        SubTeam { panel: true, rank: 0, threads: 1, barrier: None }
+    }
+
+    /// Wait until every rank of **this sub-team** reaches this point.
+    /// Independent of the other sub-team and of the full-team barrier.
+    pub fn barrier(&self) {
+        if self.threads > 1 {
+            if let Some(b) = self.barrier {
+                b.wait_n(self.threads);
+            }
+        }
+    }
+}
+
+/// Pool idle-time accounting (see the module docs): cumulative since pool
+/// construction, taken with [`WorkerPool::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Completed broadcast jobs.
+    pub jobs: u64,
+    /// Leader time blocked in the completion handshake (its own work done,
+    /// waiting for the slowest worker), in nanoseconds.
+    pub leader_wait_ns: u64,
+    /// Wall time between jobs — the whole team parked — in nanoseconds.
+    pub idle_ns: u64,
 }
 
 /// A persistent team of `threads - 1` parked workers plus the caller.
@@ -195,7 +312,12 @@ impl WorkerPool {
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
             barrier: PoolBarrier::new(threads),
+            sub_barriers: [PoolBarrier::new(threads), PoolBarrier::new(threads)],
             births: AtomicUsize::new(0),
+            jobs: AtomicU64::new(0),
+            leader_wait_ns: AtomicU64::new(0),
+            idle_ns: AtomicU64::new(0),
+            last_job_end: Mutex::new(None),
             workspaces: (0..threads).map(|_| Mutex::new(Workspace::new())).collect(),
         });
         let mut handles = Vec::with_capacity(threads - 1);
@@ -231,13 +353,41 @@ impl WorkerPool {
         lock_pool(&self.shared.workspaces[rank])
     }
 
+    /// Cumulative pool idle accounting (jobs run, leader drain-wait,
+    /// between-job parked time). Atomic snapshot-free reads: counters are
+    /// monotone and only advanced by completed jobs.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            jobs: self.shared.jobs.load(Ordering::Relaxed),
+            leader_wait_ns: self.shared.leader_wait_ns.load(Ordering::Relaxed),
+            idle_ns: self.shared.idle_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Record the idle gap since the previous job ended and stamp the new
+    /// job start; called with the leader lock held.
+    fn note_job_start(&self, now: Instant) {
+        let last = lock_pool(&self.shared.last_job_end);
+        if let Some(end) = *last {
+            let gap = now.saturating_duration_since(end).as_nanos() as u64;
+            self.shared.idle_ns.fetch_add(gap, Ordering::Relaxed);
+        }
+    }
+
+    fn note_job_end(&self) {
+        *lock_pool(&self.shared.last_job_end) = Some(Instant::now());
+        self.shared.jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Execute `job` once per rank (the caller runs rank 0 in place) and
     /// return when every rank has finished.
     pub fn run(&self, job: &(dyn Fn(&PoolCtx<'_>) + Sync)) {
         let _leader = lock_pool(&self.run_lock);
+        self.note_job_start(Instant::now());
         if self.threads == 1 {
             let ctx = PoolCtx { rank: 0, threads: 1, shared: self.shared.as_ref() };
             job(&ctx);
+            self.note_job_end();
             return;
         }
         // SAFETY: the 'static lifetime is erased only for the duration of
@@ -265,7 +415,11 @@ impl WorkerPool {
         }));
         if leader_result.is_err() {
             self.shared.barrier.poison();
+            for b in &self.shared.sub_barriers {
+                b.poison();
+            }
         }
+        let wait_t0 = Instant::now();
         let mut st = lock_pool(&self.shared.state);
         while st.active > 0 {
             st = self
@@ -278,8 +432,15 @@ impl WorkerPool {
         let worker_panicked = st.panicked;
         st.panicked = false;
         drop(st);
+        self.shared
+            .leader_wait_ns
+            .fetch_add(wait_t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.note_job_end();
         if worker_panicked || leader_result.is_err() {
             self.shared.barrier.clear_poison();
+            for b in &self.shared.sub_barriers {
+                b.clear_poison();
+            }
         }
         if let Err(payload) = leader_result {
             std::panic::resume_unwind(payload);
@@ -327,8 +488,13 @@ fn worker_loop(shared: Arc<Shared>, rank: usize) {
         };
         if panicked {
             // Wake (and panic out) any rank blocked on a barrier arrival
-            // this rank will never make; the cascade drains the job.
+            // this rank will never make; the cascade drains the job. The
+            // sub-team barriers are poisoned too — a split job may have
+            // ranks parked on either half.
             shared.barrier.poison();
+            for b in &shared.sub_barriers {
+                b.poison();
+            }
         }
         let mut st = lock_pool(&shared.state);
         if panicked {
@@ -452,6 +618,120 @@ mod tests {
         let hits = AtomicU64::new(0);
         pool.run(&|ctx| {
             ctx.barrier();
+            hits.fetch_add(1, Ordering::SeqCst);
+            ctx.barrier();
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn split_teams_have_local_ranks_and_independent_barriers() {
+        let pool = WorkerPool::new(4);
+        let panel_mask = AtomicU64::new(0);
+        let update_mask = AtomicU64::new(0);
+        let panel_sum = AtomicU64::new(0);
+        pool.run(&|ctx| {
+            let sub = ctx.split(2);
+            if sub.panel {
+                assert_eq!(sub.threads, 2);
+                panel_mask.fetch_or(1 << sub.rank, Ordering::SeqCst);
+                // Sub-team barrier must release with only the panel
+                // ranks arriving (the update team never touches it).
+                panel_sum.fetch_add(sub.rank as u64 + 1, Ordering::SeqCst);
+                sub.barrier();
+                assert_eq!(panel_sum.load(Ordering::SeqCst), 3);
+                sub.barrier();
+            } else {
+                assert_eq!(sub.threads, 2);
+                update_mask.fetch_or(1 << sub.rank, Ordering::SeqCst);
+                sub.barrier();
+                sub.barrier();
+            }
+            ctx.barrier(); // rejoin
+        });
+        assert_eq!(panel_mask.load(Ordering::SeqCst), 0b11);
+        assert_eq!(update_mask.load(Ordering::SeqCst), 0b11);
+    }
+
+    #[test]
+    fn split_clamps_panel_width() {
+        let pool = WorkerPool::new(3);
+        let panel_count = AtomicU64::new(0);
+        pool.run(&|ctx| {
+            // Asking for more panel workers than threads-1 must still
+            // leave a non-empty update team.
+            let sub = ctx.split(16);
+            if sub.panel {
+                panel_count.fetch_add(1, Ordering::SeqCst);
+            }
+            sub.barrier();
+            ctx.barrier();
+        });
+        assert_eq!(panel_count.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn solo_panel_subteam_is_inert() {
+        let sub = SubTeam::solo_panel();
+        assert!(sub.panel);
+        assert_eq!((sub.rank, sub.threads), (0, 1));
+        sub.barrier(); // must not block
+    }
+
+    #[test]
+    fn stats_count_jobs_and_idle_gaps() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.stats(), PoolStats::default());
+        pool.run(&|_| {});
+        let s1 = pool.stats();
+        assert_eq!(s1.jobs, 1);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        pool.run(&|_| {});
+        let s2 = pool.stats();
+        assert_eq!(s2.jobs, 2);
+        // The 5ms gap between the jobs is pool idle time.
+        assert!(s2.idle_ns >= 4_000_000, "idle gap not accounted: {s2:?}");
+        assert!(s2.leader_wait_ns >= s1.leader_wait_ns);
+    }
+
+    #[test]
+    fn stats_count_leader_wait_when_workers_lag() {
+        let pool = WorkerPool::new(2);
+        pool.run(&|ctx| {
+            if ctx.rank == 1 {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        });
+        let s = pool.stats();
+        assert!(
+            s.leader_wait_ns >= 5_000_000,
+            "leader must account the drain wait: {s:?}"
+        );
+    }
+
+    #[test]
+    fn panic_in_a_split_job_poisons_sub_barriers_too() {
+        let pool = WorkerPool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|ctx| {
+                let sub = ctx.split(1);
+                if sub.panel {
+                    panic!("panel dies");
+                }
+                // Update ranks park on their sub-barrier and must be
+                // woken by the poison cascade instead of hanging: their
+                // own sub-team is complete, so give them an arrival that
+                // cannot complete without the panel's rejoin.
+                sub.barrier();
+                ctx.barrier();
+            });
+        }));
+        assert!(result.is_err());
+        // Pool (and both sub-barriers) usable again afterwards.
+        let hits = AtomicU64::new(0);
+        pool.run(&|ctx| {
+            let sub = ctx.split(1);
+            sub.barrier();
             hits.fetch_add(1, Ordering::SeqCst);
             ctx.barrier();
         });

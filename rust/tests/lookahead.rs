@@ -1,0 +1,200 @@
+//! Lookahead-vs-baseline equivalence suite (ISSUE 2 acceptance): the
+//! fused split-team pipeline must be a pure *scheduling* change — for LU,
+//! pivot vectors and factors bitwise identical to the non-lookahead
+//! pooled path; for QR and Cholesky, identical factors — across thread
+//! counts, panel-team widths and non-divisible block sizes, with the
+//! pool's no-spawn invariant intact.
+//!
+//! The `DLA_THREADS` environment variable (set by the CI matrix to 1 and
+//! 4) adds that team width to the sweep, so both pool shapes are
+//! exercised by the tier-1 job.
+
+use std::sync::Arc;
+
+use dla_codesign::arch::host_xeon;
+use dla_codesign::gemm::{ConfigMode, GemmEngine, Lookahead, ParallelLoop, ThreadPlan};
+use dla_codesign::lapack::{self, cholesky::cholesky_blocked, lu_factor, qr_blocked};
+use dla_codesign::util::{MatrixF64, Pcg64};
+
+fn engine(threads: usize, la: Lookahead) -> GemmEngine {
+    GemmEngine::new(host_xeon(), ConfigMode::Refined)
+        .with_plan(ThreadPlan { threads, target: ParallelLoop::G4 })
+        .with_lookahead(la)
+}
+
+/// Thread widths under test: the fixed {1, 2, 4} of the acceptance
+/// criteria plus the CI matrix width from `DLA_THREADS`.
+fn thread_sweep() -> Vec<usize> {
+    let mut t = vec![1, 2, 4];
+    if let Some(extra) = std::env::var("DLA_THREADS").ok().and_then(|v| v.parse().ok()) {
+        if !t.contains(&extra) {
+            t.push(extra);
+        }
+    }
+    t
+}
+
+#[test]
+fn lu_lookahead_bitwise_identical_to_baseline() {
+    let mut rng = Pcg64::seed(1001);
+    // Non-divisible block sizes on purpose: 37/5, 50/8, 96/32 leave
+    // short trailing panels and nr-misaligned column splits.
+    for (s, b) in [(37, 5), (50, 8), (96, 32), (64, 16)] {
+        let a0 = MatrixF64::random(s, s, &mut rng);
+        for threads in thread_sweep() {
+            let base = lu_factor(&a0, b, &mut engine(threads, Lookahead::disabled())).unwrap();
+            for t_p in [1, 2] {
+                let la = Lookahead { depth: 1, panel_workers: t_p };
+                let fused = lu_factor(&a0, b, &mut engine(threads, la)).unwrap();
+                assert_eq!(
+                    fused.pivots, base.pivots,
+                    "s={s} b={b} x{threads} t_p={t_p}: pivot vectors differ"
+                );
+                assert_eq!(
+                    fused.lu.max_abs_diff(&base.lu),
+                    0.0,
+                    "s={s} b={b} x{threads} t_p={t_p}: factors not bitwise identical"
+                );
+                let err = fused.reconstruction_error(&a0);
+                assert!(err < 1e-10, "s={s} b={b} x{threads} t_p={t_p}: |PA-LU| = {err}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lu_lookahead_detects_singularity_like_baseline() {
+    // Column 3 duplicates column 2: both paths must fail at the same
+    // column.
+    let mut a = MatrixF64::identity(12);
+    for i in 0..12 {
+        let v = a[(i, 2)];
+        a[(i, 3)] = v;
+    }
+    let base = lu_factor(&a, 4, &mut engine(2, Lookahead::disabled()));
+    let fused = lu_factor(&a, 4, &mut engine(2, Lookahead { depth: 1, panel_workers: 1 }));
+    let (Err(jb), Err(jf)) = (base.map(|_| ()), fused.map(|_| ())) else {
+        panic!("rank-deficient matrix must be detected on both paths");
+    };
+    assert_eq!(jb, jf, "failing column must agree");
+}
+
+#[test]
+fn cholesky_lookahead_matches_baseline() {
+    let mut rng = Pcg64::seed(1002);
+    for (s, b) in [(45, 8), (33, 7), (64, 16)] {
+        // SPD input: M M^T + s I.
+        let m = MatrixF64::random(s, s, &mut rng);
+        let mt = m.transposed();
+        let mut a0 = MatrixF64::zeros(s, s);
+        dla_codesign::gemm::gemm_reference(1.0, m.view(), mt.view(), 0.0, &mut a0.view_mut());
+        for i in 0..s {
+            a0[(i, i)] += s as f64;
+        }
+        for threads in thread_sweep() {
+            let mut base = a0.clone();
+            cholesky_blocked(&mut base, b, &mut engine(threads, Lookahead::disabled())).unwrap();
+            for t_p in [1, 2] {
+                let la = Lookahead { depth: 1, panel_workers: t_p };
+                let mut fused = a0.clone();
+                cholesky_blocked(&mut fused, b, &mut engine(threads, la)).unwrap();
+                // Compare the lower triangles (the upper is workspace).
+                for j in 0..s {
+                    for i in j..s {
+                        assert_eq!(
+                            fused[(i, j)].to_bits(),
+                            base[(i, j)].to_bits(),
+                            "s={s} b={b} x{threads} t_p={t_p}: L({i},{j}) differs"
+                        );
+                    }
+                }
+                let res = lapack::cholesky::cholesky_residual(&a0, &fused);
+                assert!(res < 1e-11, "s={s} b={b} x{threads} t_p={t_p}: residual {res}");
+            }
+        }
+    }
+}
+
+#[test]
+fn qr_lookahead_matches_baseline() {
+    let mut rng = Pcg64::seed(1003);
+    for (m, n, b) in [(40, 24, 8), (33, 17, 5), (48, 48, 16)] {
+        let a0 = MatrixF64::random(m, n, &mut rng);
+        for threads in thread_sweep() {
+            let base = qr_blocked(&a0, b, &mut engine(threads, Lookahead::disabled()));
+            for t_p in [1, 2] {
+                let la = Lookahead { depth: 1, panel_workers: t_p };
+                let fused = qr_blocked(&a0, b, &mut engine(threads, la));
+                assert_eq!(
+                    fused.qr.max_abs_diff(&base.qr),
+                    0.0,
+                    "m={m} n={n} b={b} x{threads} t_p={t_p}: packed factors differ"
+                );
+                for (j, (tf, tb)) in fused.tau.iter().zip(&base.tau).enumerate() {
+                    assert_eq!(
+                        tf.to_bits(),
+                        tb.to_bits(),
+                        "m={m} n={n} b={b} x{threads} t_p={t_p}: tau[{j}] differs"
+                    );
+                }
+                let err = fused.reconstruction_error(&a0);
+                assert!(err < 1e-10, "m={m} n={n} b={b} x{threads} t_p={t_p}: |A-QR| = {err}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lookahead_factorizations_never_spawn_threads() {
+    // The no-spawn invariant under lookahead: the fused jobs, the
+    // sub-team panel factorization and the pooled laswp all run on the
+    // same parked team.
+    let mut rng = Pcg64::seed(1004);
+    let a0 = MatrixF64::random(96, 96, &mut rng);
+    let mut eng = engine(4, Lookahead { depth: 1, panel_workers: 2 });
+    let pool = Arc::clone(eng.pool().expect("parallel plan provisions a pool"));
+    assert_eq!(pool.spawned_workers(), 3);
+    for _ in 0..3 {
+        lu_factor(&a0, 32, &mut eng).unwrap();
+    }
+    let spd = {
+        let m = MatrixF64::random(64, 64, &mut rng);
+        let mt = m.transposed();
+        let mut a = MatrixF64::zeros(64, 64);
+        dla_codesign::gemm::gemm_reference(1.0, m.view(), mt.view(), 0.0, &mut a.view_mut());
+        for i in 0..64 {
+            a[(i, i)] += 64.0;
+        }
+        a
+    };
+    let mut chol = spd.clone();
+    cholesky_blocked(&mut chol, 16, &mut eng).unwrap();
+    qr_blocked(&a0, 16, &mut eng);
+    assert_eq!(
+        pool.spawned_workers(),
+        3,
+        "lookahead factorizations must reuse the pool, never spawn"
+    );
+    // And the fused jobs actually ran on the pool.
+    assert!(pool.stats().jobs > 0);
+}
+
+#[test]
+fn lookahead_reduces_or_preserves_pool_jobs_shape() {
+    // Sanity on the pipeline structure rather than wall-clock (the host
+    // may be single-core): with lookahead the panel factorization rides
+    // inside the fused trailing-update job, so the per-iteration job
+    // count does not grow even though more work moved onto the pool.
+    let mut rng = Pcg64::seed(1005);
+    let a0 = MatrixF64::random(96, 96, &mut rng);
+    let mut on = engine(4, Lookahead { depth: 1, panel_workers: 1 });
+    lu_factor(&a0, 16, &mut on).unwrap();
+    let jobs_on = on.pool().unwrap().stats().jobs;
+    let mut off = engine(4, Lookahead::disabled());
+    lu_factor(&a0, 16, &mut off).unwrap();
+    let jobs_off = off.pool().unwrap().stats().jobs;
+    assert!(
+        jobs_on <= jobs_off,
+        "fused pipeline must not add pool jobs: on={jobs_on} off={jobs_off}"
+    );
+}
