@@ -17,12 +17,19 @@
 //!    pool's leader-wait and between-job idle counters showing where the
 //!    recovered time comes from. Appended to the same `BENCH_gemm.json`
 //!    (per ROADMAP: extend the entries, don't replace them).
+//! 6. **Static vs dynamic deep lookahead** — PR 2's static depth-1 fixed
+//!    `t_p` vs the work-queue pipeline at depth {2, 3} vs depth-2 with
+//!    model-driven malleable `t_p`, on the same blocked-LU sweep, with
+//!    the per-phase pool idle deltas (panel idle / update idle /
+//!    queue-empty stalls) and the team-size selector cache hit-rate.
+//!    Appended to `BENCH_gemm.json` alongside the earlier ablations.
 use dla_codesign::arch::detect_host;
 use dla_codesign::bench::{BenchGroup, JsonBench};
 use dla_codesign::gemm::microkernel::for_shape;
 use dla_codesign::gemm::parallel::{gemm_parallel, gemm_parallel_spawning};
 use dla_codesign::gemm::{
     gemm_blocked, ConfigMode, GemmEngine, Lookahead, ParallelLoop, ThreadPlan, Workspace,
+    AUTO_PANEL_WORKERS,
 };
 use dla_codesign::lapack::{getf2, lu_blocked, lu_flops};
 use dla_codesign::model::ccp::GemmConfig;
@@ -275,6 +282,75 @@ fn main() {
         }
     }
     g5.finish("bench_ablation_lookahead");
+
+    // --- 6. static depth-1 vs dynamic deep vs malleable t_p ------------
+    // The work-queue pipeline against PR 2's static arm on the same
+    // blocked-LU sweep. Idle deltas are split per phase: total pool idle
+    // (leader-wait + between-job) plus the split-job rejoin buckets
+    // (panel idle / update idle / queue-empty stalls, in rank-ms).
+    println!("=== ablation 6: static vs dynamic deep lookahead (x{threads}, b={lu_block}) ===");
+    let static_tp = (threads / 8).max(1);
+    let arms: [(&str, Lookahead); 4] = [
+        ("static_d1", Lookahead { depth: 1, panel_workers: static_tp }),
+        ("dynamic_d2", Lookahead { depth: 2, panel_workers: static_tp }),
+        ("dynamic_d3", Lookahead { depth: 3, panel_workers: static_tp }),
+        ("dynamic_d2_malleable", Lookahead { depth: 2, panel_workers: AUTO_PANEL_WORKERS }),
+    ];
+    let mut g6 = BenchGroup::new("static vs dynamic deep lookahead blocked LU");
+    for &s in &lu_sizes {
+        let mut rng_lu = Pcg64::seed(s as u64);
+        let a0 = MatrixF64::random_diag_dominant(s, &mut rng_lu);
+        let mut arm_idle_ms: Vec<(String, f64)> = Vec::new();
+        for (label, la) in arms {
+            let mut eng = GemmEngine::new(arch.clone(), ConfigMode::Refined)
+                .with_plan(ThreadPlan { threads, target: ParallelLoop::G4 })
+                .with_lookahead(la);
+            let before = eng.pool().map(|p| p.stats()).unwrap_or_default();
+            let case = g6
+                .case(&format!("lu {s} b={lu_block} {label} x{threads}"), lu_flops(s), || {
+                    let mut a = a0.clone();
+                    lu_blocked(&mut a, lu_block, &mut eng).expect("diag-dominant LU");
+                })
+                .clone();
+            let after = eng.pool().map(|p| p.stats()).unwrap_or_default();
+            let tstats = eng.team_size_cache_stats();
+            let d = |x: u64, y: u64| x.saturating_sub(y) as f64 / 1e6;
+            let total_idle_ms =
+                d(after.leader_wait_ns, before.leader_wait_ns) + d(after.idle_ns, before.idle_ns);
+            arm_idle_ms.push((label.to_string(), total_idle_ms));
+            j.entry(
+                &format!("lu_deep_lookahead_n{s}_{label}"),
+                &[
+                    ("threads", threads as f64),
+                    ("block", lu_block as f64),
+                    ("depth", la.depth as f64),
+                    ("malleable_tp", if la.panel_workers == AUTO_PANEL_WORKERS { 1.0 } else { 0.0 }),
+                    ("mean_seconds", case.measurement.mean_s),
+                    ("min_seconds", case.measurement.min_s),
+                    ("gflops", case.gflops()),
+                    ("pool_jobs", after.jobs.saturating_sub(before.jobs) as f64),
+                    ("pool_total_idle_ms", total_idle_ms),
+                    ("pool_leader_wait_ms", d(after.leader_wait_ns, before.leader_wait_ns)),
+                    ("pool_between_job_idle_ms", d(after.idle_ns, before.idle_ns)),
+                    ("panel_idle_rank_ms", d(after.panel_idle_ns, before.panel_idle_ns)),
+                    ("update_idle_rank_ms", d(after.update_idle_ns, before.update_idle_ns)),
+                    ("queue_stall_rank_ms", d(after.queue_stall_ns, before.queue_stall_ns)),
+                    ("teamsize_cache_hits", tstats.hits as f64),
+                    ("teamsize_cache_misses", tstats.misses as f64),
+                ],
+            );
+        }
+        let base_idle = arm_idle_ms[0].1;
+        for (label, idle) in &arm_idle_ms[1..] {
+            println!(
+                "  n={s}: {label} total idle {idle:.3} ms vs static_d1 {base_idle:.3} ms \
+                 ({}{:.3} ms)",
+                if *idle <= base_idle { "-" } else { "+" },
+                (idle - base_idle).abs()
+            );
+        }
+    }
+    g6.finish("bench_ablation_deep_lookahead");
 
     match j.write("BENCH_gemm.json") {
         Ok(()) => println!(

@@ -1,7 +1,9 @@
 //! Per-kind request metrics: latency histograms and flop throughput,
-//! plus the shared GEMM pool's idle accounting (leader drain-wait and
-//! between-job parked time) so lookahead gains are observable in the
-//! server, not just in offline benches.
+//! plus the shared GEMM pool's idle accounting (leader drain-wait,
+//! between-job parked time, and the lookahead pipeline's per-phase split
+//! — panel-team idle vs update-team idle vs queue-empty stalls) so
+//! lookahead gains are observable in the server, not just in offline
+//! benches.
 
 use std::collections::BTreeMap;
 
@@ -121,6 +123,13 @@ impl Metrics {
                 p.leader_wait_ns as f64 / 1e6,
                 p.idle_ns as f64 / 1e6,
             ));
+            out.push_str(&format!(
+                "lookahead phases: panel-idle {:.3} ms, update-idle {:.3} ms, \
+                 queue-stall {:.3} ms (rank-ms)\n",
+                p.panel_idle_ns as f64 / 1e6,
+                p.update_idle_ns as f64 / 1e6,
+                p.queue_stall_ns as f64 / 1e6,
+            ));
         }
         out
     }
@@ -169,17 +178,33 @@ mod tests {
         use crate::runtime::pool::PoolStats;
         let mut a = Metrics::new();
         assert!(a.pool_stats().is_none());
-        a.set_pool_stats(PoolStats { jobs: 3, leader_wait_ns: 1_000_000, idle_ns: 2_000_000 });
+        a.set_pool_stats(PoolStats {
+            jobs: 3,
+            leader_wait_ns: 1_000_000,
+            idle_ns: 2_000_000,
+            ..PoolStats::default()
+        });
         let mut b = Metrics::new();
-        b.set_pool_stats(PoolStats { jobs: 7, leader_wait_ns: 4_000_000, idle_ns: 9_000_000 });
+        b.set_pool_stats(PoolStats {
+            jobs: 7,
+            leader_wait_ns: 4_000_000,
+            idle_ns: 9_000_000,
+            panel_idle_ns: 500_000,
+            update_idle_ns: 250_000,
+            queue_stall_ns: 125_000,
+        });
         a.merge(b);
         assert_eq!(a.pool_stats().unwrap().jobs, 7, "merge keeps the latest snapshot");
         // An older snapshot must not regress the kept one.
         let mut c = Metrics::new();
-        c.set_pool_stats(PoolStats { jobs: 2, leader_wait_ns: 1, idle_ns: 1 });
+        c.set_pool_stats(PoolStats { jobs: 2, leader_wait_ns: 1, idle_ns: 1, ..PoolStats::default() });
         a.merge(c);
         assert_eq!(a.pool_stats().unwrap().jobs, 7);
         let s = a.summary();
         assert!(s.contains("gemm pool: 7 jobs"), "{s}");
+        // The per-phase lookahead idle split is part of the summary.
+        assert!(s.contains("panel-idle 0.500 ms"), "{s}");
+        assert!(s.contains("update-idle 0.250 ms"), "{s}");
+        assert!(s.contains("queue-stall 0.125 ms"), "{s}");
     }
 }

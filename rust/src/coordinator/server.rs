@@ -72,7 +72,17 @@ pub struct CoordinatorServer {
 impl CoordinatorServer {
     /// Start `cfg.workers` worker threads (plus, when `gemm_threads > 1`,
     /// one shared persistent GEMM pool spawned here, once).
+    ///
+    /// Panics **on the caller's thread** when the pinned lookahead
+    /// policy is invalid for `gemm_threads` — otherwise the engine-level
+    /// validation would fire inside every detached worker and the
+    /// misconfiguration would only surface as dead request channels.
     pub fn start(cfg: ServerConfig) -> Self {
+        if let Some(la) = cfg.lookahead {
+            if let Err(e) = la.validate(cfg.gemm_threads.max(1)) {
+                panic!("invalid lookahead policy for this server config: {e}");
+            }
+        }
         let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
         let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
         let gemm_pool =
@@ -215,6 +225,18 @@ mod tests {
         let pool = metrics.pool_stats().expect("pooled server must surface pool stats");
         assert!(pool.jobs > 0, "LU trailing updates must have run pooled jobs: {pool:?}");
         assert!(metrics.summary().contains("gemm pool:"));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid lookahead policy for this server config")]
+    fn server_rejects_invalid_lookahead_up_front() {
+        // The panic must fire on the caller's thread at start(), not
+        // inside detached workers.
+        let _ = CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined)
+                .with_gemm_threads(3)
+                .with_lookahead(Lookahead { depth: 1, panel_workers: 3 }),
+        );
     }
 
     #[test]

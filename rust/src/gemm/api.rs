@@ -41,45 +41,60 @@ use std::sync::Arc;
 use crate::arch::Arch;
 use crate::model::ccp::GemmConfig;
 use crate::model::selector::{select_from, AnalyticScorer};
+use crate::model::teamsize::{PanelShape, TeamSizeSelector, TeamSizeStats};
 use crate::model::{blis_static, original_ccp, refined_ccp, GemmDims, MicroKernel};
 use crate::runtime::pool::{SubTeam, WorkerPool};
 use crate::util::matrix::{MatView, MatViewMut};
 
 use super::blocked::{gemm_blocked, Workspace};
 use super::microkernel::{for_shape, registry, MicroKernelImpl};
-use super::parallel::{gemm_fused_trailing, gemm_fused_trailing_seq, gemm_parallel, ThreadPlan};
+use super::parallel::{
+    gemm_fused_trailing_ranges, gemm_fused_trailing_ranges_seq, gemm_parallel, ThreadPlan,
+};
 
-/// Static-lookahead policy for the blocked factorization drivers: while
-/// the update sub-team finishes a trailing update, `panel_workers` ranks
-/// factor the next panel inside the freshly-updated columns
-/// ([`GemmEngine::gemm_fused_trailing`]).
+/// Lookahead policy for the blocked factorization drivers: while the
+/// update sub-team finishes a trailing update, a panel sub-team factors
+/// the next panel(s) inside the freshly-updated columns
+/// ([`GemmEngine::gemm_fused_trailing_ranges`]).
 ///
-/// `depth == 0` disables lookahead; only depth 1 is implemented (the
-/// next-panel pipeline — deeper/dynamic lookahead is a ROADMAP item, and
-/// larger depths behave as 1). The heuristic default dedicates an eighth
-/// of the team to the panel (`t_p = max(1, threads / 8)`): the panel is a
-/// thin, mostly-sequential kernel, so a small team keeps the wide
-/// trailing sweep fed.
+/// `depth == 0` disables lookahead (construct via [`Lookahead::disabled`]).
+/// `depth >= 1` is honored by all three drivers: the work-queue pipeline
+/// keeps up to `depth` panels factored ahead of the trailing sweep.
+///
+/// `panel_workers == 0` (the [`AUTO_PANEL_WORKERS`] sentinel, and the
+/// default) means **model-driven malleable** `t_p`: each iteration the
+/// engine's [`crate::model::teamsize::TeamSizeSelector`] balances the
+/// panel critical path against the trailing sweep and resizes the panel
+/// sub-team. A non-zero value pins `t_p` for every iteration
+/// (`DLA_PANEL_WORKERS` also accepts a comma-separated per-iteration
+/// schedule, resolved by [`GemmEngine::panel_team_size`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Lookahead {
     /// Panels factored ahead of the trailing sweep (0 = off).
     pub depth: usize,
-    /// Sub-team size `t_p` dedicated to the panel factorization.
+    /// Sub-team size `t_p` dedicated to the panel factorization;
+    /// [`AUTO_PANEL_WORKERS`] (0) selects it per iteration from the
+    /// team-size model.
     pub panel_workers: usize,
 }
+
+/// Sentinel for [`Lookahead::panel_workers`]: let the team-size model
+/// choose `t_p` per iteration.
+pub const AUTO_PANEL_WORKERS: usize = 0;
 
 impl Lookahead {
     /// Lookahead off: the factorizations serialize panel and update.
     pub fn disabled() -> Self {
-        Self { depth: 0, panel_workers: 0 }
+        Self { depth: 0, panel_workers: AUTO_PANEL_WORKERS }
     }
 
-    /// The default policy for a `threads`-wide team.
+    /// The default policy for a `threads`-wide team: depth-1 lookahead
+    /// with model-driven malleable `t_p`.
     pub fn heuristic(threads: usize) -> Self {
         if threads < 2 {
             Self::disabled()
         } else {
-            Self { depth: 1, panel_workers: (threads / 8).max(1) }
+            Self { depth: 1, panel_workers: AUTO_PANEL_WORKERS }
         }
     }
 
@@ -87,28 +102,55 @@ impl Lookahead {
         self.depth > 0
     }
 
+    /// Validate against a team width, with a clear error instead of a
+    /// silent clamp: an enabled policy on a multi-thread plan must leave
+    /// the update sub-team non-empty, and a disabled policy must not
+    /// carry a panel team.
+    pub fn validate(&self, threads: usize) -> Result<(), String> {
+        if self.depth == 0 && self.panel_workers != AUTO_PANEL_WORKERS {
+            return Err(format!(
+                "Lookahead depth 0 (disabled) cannot have panel_workers = {} (use \
+                 Lookahead::disabled())",
+                self.panel_workers
+            ));
+        }
+        if self.enabled() && threads > 1 && self.panel_workers >= threads {
+            return Err(format!(
+                "Lookahead panel_workers = {} would leave no update ranks on a {}-thread \
+                 plan (need panel_workers < threads, or 0 for model-driven sizing)",
+                self.panel_workers, threads
+            ));
+        }
+        Ok(())
+    }
+
     /// Environment override for the ablation harness: `DLA_LOOKAHEAD`
     /// (`0`/`off`/`false` disable, a number sets the depth, anything else
-    /// enables depth 1) and `DLA_PANEL_WORKERS` (sets `t_p`). Returns
-    /// `None` when neither variable is set.
+    /// enables depth 1; unset or empty is ignored) and
+    /// `DLA_PANEL_WORKERS` (a single number pins `t_p`; a comma-separated
+    /// schedule is handled by [`GemmEngine::panel_team_size`] and leaves
+    /// the policy on model-driven sizing here). Returns `None` when
+    /// neither variable is set.
     pub fn from_env(threads: usize) -> Option<Self> {
         let depth_var = std::env::var("DLA_LOOKAHEAD").ok();
-        let tp = std::env::var("DLA_PANEL_WORKERS").ok().and_then(|v| v.parse::<usize>().ok());
+        let tp = std::env::var("DLA_PANEL_WORKERS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&t| t > 0);
         let base = match depth_var.as_deref().map(str::trim) {
+            None | Some("") => None,
             Some("0") | Some("off") | Some("false") => Some(Self::disabled()),
             Some(v) => {
                 let depth = v.parse::<usize>().unwrap_or(1).max(1);
-                let h = Self::heuristic(threads.max(2));
-                Some(Self { depth, panel_workers: h.panel_workers })
+                Some(Self { depth, panel_workers: AUTO_PANEL_WORKERS })
             }
-            None => None,
         };
         match (base, tp) {
-            (Some(la), Some(t)) if la.enabled() => Some(Self { panel_workers: t.max(1), ..la }),
+            (Some(la), Some(t)) if la.enabled() => Some(Self { panel_workers: t, ..la }),
             (Some(la), _) => Some(la),
             (None, Some(t)) => {
                 let h = Self::heuristic(threads);
-                h.enabled().then_some(Self { panel_workers: t.max(1), ..h })
+                h.enabled().then_some(Self { panel_workers: t, ..h })
             }
             (None, None) => None,
         }
@@ -177,6 +219,11 @@ pub struct GemmEngine {
     /// Memoized `(mode, dims) -> config` selections.
     config_cache: RefCell<HashMap<(ModeKey, GemmDims), GemmConfig>>,
     cache_stats: Cell<ConfigCacheStats>,
+    /// Memoized panel-team-size selections (the malleable `t_p` model).
+    team_sizer: TeamSizeSelector,
+    /// Per-iteration `t_p` schedule from a comma-separated
+    /// `DLA_PANEL_WORKERS` (test/ablation hook); the last entry repeats.
+    panel_schedule: Option<Vec<usize>>,
     /// Last configuration chosen (introspection for tests/harness).
     pub last_config: Option<GemmConfig>,
 }
@@ -190,6 +237,19 @@ impl GemmEngine {
     /// Engine restricted to an explicit kernel set.
     pub fn with_kernels(arch: Arch, mode: ConfigMode, kernels: Vec<MicroKernelImpl>) -> Self {
         assert!(!kernels.is_empty(), "no micro-kernels available");
+        // A comma-separated DLA_PANEL_WORKERS is a per-iteration t_p
+        // schedule (the malleability test hook); a single number is a
+        // pinned t_p handled by Lookahead::from_env.
+        let panel_schedule = std::env::var("DLA_PANEL_WORKERS")
+            .ok()
+            .filter(|v| v.contains(','))
+            .map(|v| {
+                v.split(',')
+                    .filter_map(|t| t.trim().parse::<usize>().ok())
+                    .map(|t| t.max(1))
+                    .collect::<Vec<usize>>()
+            })
+            .filter(|v| !v.is_empty());
         Self {
             arch,
             mode,
@@ -200,6 +260,8 @@ impl GemmEngine {
             lookahead: None,
             config_cache: RefCell::new(HashMap::new()),
             cache_stats: Cell::new(ConfigCacheStats::default()),
+            team_sizer: TeamSizeSelector::new(),
+            panel_schedule,
             last_config: None,
         }
     }
@@ -208,6 +270,14 @@ impl GemmEngine {
     /// once (and re-provisioned only if the thread count changes); every
     /// subsequent GEMM reuses it with zero thread spawns.
     pub fn with_plan(mut self, plan: ThreadPlan) -> Self {
+        // A pinned lookahead policy must stay valid for the new width
+        // (validation would otherwise be order-dependent: pinning before
+        // the plan would dodge the panel_workers < threads check).
+        if let Some(la) = self.lookahead {
+            if let Err(e) = la.validate(plan.threads) {
+                panic!("invalid lookahead policy for the new plan: {e}");
+            }
+        }
         let need_new = plan.threads > 1
             && match &self.pool {
                 Some(p) => p.threads() != plan.threads,
@@ -224,6 +294,11 @@ impl GemmEngine {
     /// worker of the coordinator server). The plan's thread count is
     /// aligned with the pool's.
     pub fn set_shared_pool(&mut self, pool: Arc<WorkerPool>) {
+        if let Some(la) = self.lookahead {
+            if let Err(e) = la.validate(pool.threads()) {
+                panic!("invalid lookahead policy for the shared pool: {e}");
+            }
+        }
         self.plan = ThreadPlan { threads: pool.threads(), target: self.plan.target };
         self.pool = Some(pool);
     }
@@ -233,14 +308,21 @@ impl GemmEngine {
         self.pool.as_ref()
     }
 
-    /// Pin a lookahead policy (see [`Lookahead`]); builder form.
+    /// Pin a lookahead policy (see [`Lookahead`]); builder form. Panics
+    /// on a policy that is invalid for the current plan width (depth-0
+    /// with a panel team, or `panel_workers >= threads`) — the silent
+    /// clamps these used to get hid real misconfigurations.
     pub fn with_lookahead(mut self, la: Lookahead) -> Self {
-        self.lookahead = Some(la);
+        self.set_lookahead(la);
         self
     }
 
-    /// Pin a lookahead policy in place.
+    /// Pin a lookahead policy in place (validated; see
+    /// [`Self::with_lookahead`]).
     pub fn set_lookahead(&mut self, la: Lookahead) {
+        if let Err(e) = la.validate(self.plan.threads) {
+            panic!("invalid lookahead policy: {e}");
+        }
         self.lookahead = Some(la);
     }
 
@@ -353,10 +435,60 @@ impl GemmEngine {
         self.config_cache.borrow().len()
     }
 
-    /// Drop all memoized selections and reset the accounting.
+    /// Drop all memoized selections — GEMM configs *and* team sizes —
+    /// and reset both accountings.
     pub fn clear_config_cache(&mut self) {
         self.config_cache.borrow_mut().clear();
         self.cache_stats.set(ConfigCacheStats::default());
+        self.team_sizer.clear();
+    }
+
+    /// Memoized configuration **and** its runnable kernel implementation
+    /// for `dims` — what the deep-lookahead chains need to replay a
+    /// future iteration's trailing update bitwise-identically from
+    /// inside a pool job.
+    pub fn plan_kernel(&self, dims: GemmDims) -> (GemmConfig, MicroKernelImpl) {
+        let cfg = self.plan_config(dims);
+        (cfg, self.implementation_for(cfg.mk))
+    }
+
+    /// The panel sub-team width `t_p` for one fused iteration
+    /// (`iteration` counts factorization steps from 0). `la` is the
+    /// policy the caller resolved **once** per factorization with
+    /// [`Self::lookahead`] — passing it in keeps this per-iteration call
+    /// free of environment lookups and allocation (the acceptance
+    /// criterion for the hot path). Resolution order: a non-zero
+    /// `panel_workers` pinned on the policy, then a comma-separated
+    /// `DLA_PANEL_WORKERS` schedule (entry per iteration, last repeats),
+    /// then the memoized team-size model balancing the panel critical
+    /// path against the trailing sweep under the configuration selected
+    /// for `update`.
+    pub fn panel_team_size(
+        &self,
+        la: Lookahead,
+        iteration: usize,
+        panel: PanelShape,
+        update: GemmDims,
+    ) -> usize {
+        let threads = self.plan.threads;
+        if threads <= 2 {
+            return 1;
+        }
+        if la.panel_workers != AUTO_PANEL_WORKERS {
+            return la.panel_workers.min(threads - 1);
+        }
+        if let Some(schedule) = &self.panel_schedule {
+            let idx = iteration.min(schedule.len() - 1);
+            return schedule[idx].min(threads - 1);
+        }
+        let cfg = self.plan_config(update);
+        self.team_sizer.select(&self.arch, cfg, panel, update, threads)
+    }
+
+    /// Hit/miss accounting of the team-size memo cache (the malleable
+    /// `t_p` selector), alongside [`Self::config_cache_stats`].
+    pub fn team_size_cache_stats(&self) -> TeamSizeStats {
+        self.team_sizer.stats()
     }
 
     /// Dispatch one configured GEMM to the pool-parallel or sequential
@@ -400,11 +532,8 @@ impl GemmEngine {
     /// `split_col` columns of C are updated first, then `panel_workers`
     /// pool ranks run `panel_task` on them (factor the next panel) while
     /// the rest of the team finishes the remaining columns; one team
-    /// barrier rejoins. The configuration is planned **once on the full
-    /// trailing dimensions**, so the column-split arithmetic is bitwise
-    /// identical to a plain [`Self::gemm`] of the whole update (the
-    /// k-blocking is what determines each element's accumulation order).
-    /// Without a multi-thread pool the same schedule runs inline.
+    /// barrier rejoins. The depth-1 special case of
+    /// [`Self::gemm_fused_trailing_ranges`].
     #[allow(clippy::too_many_arguments)]
     pub fn gemm_fused_trailing(
         &mut self,
@@ -416,19 +545,68 @@ impl GemmEngine {
         panel_workers: usize,
         panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
     ) {
+        let n = b.cols;
+        assert!(split_col <= n, "split_col out of range");
+        self.gemm_fused_trailing_ranges(
+            alpha,
+            a,
+            b,
+            c,
+            &[(0, split_col)],
+            (split_col, n),
+            panel_workers,
+            false,
+            panel_task,
+        );
+    }
+
+    /// The general fused trailing update of the deep-lookahead pipeline
+    /// (see [`crate::gemm::parallel::gemm_fused_trailing_ranges`]): the
+    /// full team updates the pending-panel `head` ranges first, then the
+    /// panel sub-team runs `panel_task` while the update sub-team sweeps
+    /// `tail`; columns outside `head ∪ tail` are untouched. The
+    /// configuration is planned **once on the full trailing dimensions**,
+    /// so the column decomposition is bitwise identical to a plain
+    /// [`Self::gemm`] of the whole update (the k-blocking is what
+    /// determines each element's accumulation order). Without a
+    /// multi-thread pool the same schedule runs inline.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_fused_trailing_ranges(
+        &mut self,
+        alpha: f64,
+        a: MatView<'_>,
+        b: MatView<'_>,
+        c: &mut MatViewMut<'_>,
+        head: &[(usize, usize)],
+        tail: (usize, usize),
+        panel_workers: usize,
+        panel_queue_empty: bool,
+        panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
+    ) {
         let dims = GemmDims::new(a.rows, b.cols, a.cols);
         let cfg = self.plan_config(dims);
         let kernel = self.implementation_for(cfg.mk);
         self.last_config = Some(cfg);
         match &self.pool {
             Some(pool) => {
-                gemm_fused_trailing(
-                    &cfg, &kernel, alpha, a, b, c, split_col, panel_workers, panel_task, pool,
+                gemm_fused_trailing_ranges(
+                    &cfg,
+                    &kernel,
+                    alpha,
+                    a,
+                    b,
+                    c,
+                    head,
+                    tail,
+                    panel_workers,
+                    panel_queue_empty,
+                    panel_task,
+                    pool,
                 );
             }
             None => {
-                gemm_fused_trailing_seq(
-                    &cfg, &kernel, alpha, a, b, c, split_col, panel_task, &mut self.workspace,
+                gemm_fused_trailing_ranges_seq(
+                    &cfg, &kernel, alpha, a, b, c, head, tail, panel_task, &mut self.workspace,
                 );
             }
         }
@@ -583,24 +761,96 @@ mod tests {
     #[test]
     fn lookahead_heuristic_scales_with_team_width() {
         assert!(!Lookahead::heuristic(1).enabled());
-        assert_eq!(Lookahead::heuristic(4), Lookahead { depth: 1, panel_workers: 1 });
-        assert_eq!(Lookahead::heuristic(16), Lookahead { depth: 1, panel_workers: 2 });
-        assert_eq!(Lookahead::heuristic(64), Lookahead { depth: 1, panel_workers: 8 });
+        // Multi-thread teams default to depth-1 with model-driven t_p.
+        for t in [2, 4, 16, 64] {
+            assert_eq!(
+                Lookahead::heuristic(t),
+                Lookahead { depth: 1, panel_workers: AUTO_PANEL_WORKERS }
+            );
+        }
         assert!(!Lookahead::disabled().enabled());
     }
 
     #[test]
+    fn lookahead_validation_rejects_malformed_policies() {
+        // depth 0 with a panel team is malformed at any width.
+        let bad = Lookahead { depth: 0, panel_workers: 2 };
+        assert!(bad.validate(1).is_err());
+        assert!(bad.validate(8).is_err());
+        // panel_workers must leave the update team non-empty.
+        let greedy = Lookahead { depth: 1, panel_workers: 4 };
+        assert!(greedy.validate(4).is_err());
+        assert!(greedy.validate(3).is_err());
+        assert!(greedy.validate(5).is_ok());
+        // A single-thread plan runs the inline path; any t_p is fine.
+        assert!(greedy.validate(1).is_ok());
+        // Auto sizing and disabled() are always valid.
+        assert!(Lookahead::heuristic(4).validate(4).is_ok());
+        assert!(Lookahead::disabled().validate(4).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid lookahead policy")]
+    fn engine_rejects_panel_team_swallowing_the_pool() {
+        let _ = GemmEngine::new(host_xeon(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads: 2, target: crate::gemm::ParallelLoop::G4 })
+            .with_lookahead(Lookahead { depth: 1, panel_workers: 2 });
+    }
+
+    #[test]
     fn engine_lookahead_defaults_and_pinning() {
-        // No env override is set under `cargo test` (the harness only
-        // sets DLA_* for the ablation benches), so resolution exercises
-        // the heuristic/pinned branches.
-        let seq = GemmEngine::new(host_xeon(), ConfigMode::Refined);
-        assert!(!seq.lookahead().enabled(), "sequential engine: lookahead off by default");
+        // The default-resolution asserts only hold when the CI matrix is
+        // not overriding DLA_LOOKAHEAD (the depth-2 leg flips un-pinned
+        // engines on purpose); a pinned policy must win regardless.
+        let env_clear =
+            std::env::var("DLA_LOOKAHEAD").map(|v| v.trim().is_empty()).unwrap_or(true);
+        if env_clear {
+            let seq = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+            assert!(!seq.lookahead().enabled(), "sequential engine: lookahead off by default");
+        }
         let par = GemmEngine::new(host_xeon(), ConfigMode::Refined)
             .with_plan(ThreadPlan { threads: 4, target: crate::gemm::ParallelLoop::G4 });
-        assert_eq!(par.lookahead(), Lookahead { depth: 1, panel_workers: 1 });
-        let pinned = par.with_lookahead(Lookahead { depth: 1, panel_workers: 2 });
-        assert_eq!(pinned.lookahead().panel_workers, 2);
+        if env_clear {
+            assert_eq!(par.lookahead().depth, 1);
+        }
+        let pinned = par.with_lookahead(Lookahead { depth: 2, panel_workers: 2 });
+        assert_eq!(pinned.lookahead(), Lookahead { depth: 2, panel_workers: 2 });
+    }
+
+    #[test]
+    fn panel_team_size_resolution_order() {
+        // Pinned t_p wins over the model; narrow teams always get 1.
+        let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads: 4, target: crate::gemm::ParallelLoop::G4 });
+        eng.set_lookahead(Lookahead { depth: 2, panel_workers: 3 });
+        let update = GemmDims::new(256, 256, 32);
+        let panel = crate::model::PanelShape::new(256, 32);
+        assert_eq!(eng.panel_team_size(eng.lookahead(), 0, panel, update), 3);
+        // Model-driven: in-bounds and memoized.
+        eng.set_lookahead(Lookahead { depth: 2, panel_workers: AUTO_PANEL_WORKERS });
+        let auto = eng.lookahead();
+        let t0 = eng.panel_team_size(auto, 0, panel, update);
+        assert!((1..4).contains(&t0));
+        let before = eng.team_size_cache_stats();
+        assert_eq!(eng.panel_team_size(auto, 5, panel, update), t0);
+        let after = eng.team_size_cache_stats();
+        assert_eq!(after.hits, before.hits + 1, "repeat lookup must be a cache hit");
+        // clear_config_cache drops the team-size memo too.
+        eng.clear_config_cache();
+        assert_eq!(eng.team_size_cache_stats(), crate::model::TeamSizeStats::default());
+        // Two-thread plans never split below a 1-rank update team.
+        let eng2 = GemmEngine::new(host_xeon(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads: 2, target: crate::gemm::ParallelLoop::G4 });
+        assert_eq!(eng2.panel_team_size(eng2.lookahead(), 0, panel, update), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid lookahead policy for the new plan")]
+    fn with_plan_revalidates_a_pinned_policy() {
+        // Pin-then-plan must not dodge the panel_workers < threads check.
+        let _ = GemmEngine::new(host_xeon(), ConfigMode::Refined)
+            .with_lookahead(Lookahead { depth: 1, panel_workers: 4 })
+            .with_plan(ThreadPlan { threads: 4, target: crate::gemm::ParallelLoop::G4 });
     }
 
     #[test]

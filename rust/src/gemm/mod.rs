@@ -18,10 +18,12 @@ pub mod microkernel;
 pub mod packing;
 pub mod parallel;
 
-pub use api::{ConfigCacheStats, ConfigMode, GemmEngine, Lookahead};
+pub use api::{ConfigCacheStats, ConfigMode, GemmEngine, Lookahead, AUTO_PANEL_WORKERS};
 pub use blocked::{gemm_blocked, Workspace};
 pub use microkernel::{registry, MicroKernelImpl};
-pub use parallel::{gemm_fused_trailing, gemm_parallel, ParallelLoop, ThreadPlan};
+pub use parallel::{
+    gemm_fused_trailing, gemm_fused_trailing_ranges, gemm_parallel, ParallelLoop, ThreadPlan,
+};
 
 /// Reference (naive triple-loop) GEMM: `C = alpha * A * B + beta * C`.
 /// The correctness oracle for everything in this module.

@@ -554,21 +554,11 @@ fn fused_col_sweep(
 /// whole team; the team then splits — `panel_workers` ranks run
 /// `panel_task` (e.g. factoring the next panel inside those
 /// freshly-updated columns) while the remaining ranks sweep the other
-/// columns — and everyone rejoins at a single team barrier. This is the
-/// paper-stack co-design move the LAPACK layer needs to overlap PFACT
-/// with the trailing GEMM (static lookahead): the pool never goes idle
-/// between the update and the next panel factorization.
+/// columns — and everyone rejoins at a single team barrier.
 ///
-/// Per-element arithmetic is bitwise identical to [`gemm_parallel`] /
-/// [`gemm_blocked`] with the same (clamped) configuration: the column
-/// split never changes an element's k-accumulation — every micro-kernel
-/// accumulates its tile from zero and adds into C once per `pc` block, in
-/// ascending `pc` order, regardless of tile geometry.
-///
-/// `panel_task` runs exactly once per panel-team rank (once total on a
-/// single-thread pool), only after the first `split_col` columns of C are
-/// complete; it must touch only memory disjoint from C's remaining
-/// columns and from A and B.
+/// This is the depth-1 special case of [`gemm_fused_trailing_ranges`]
+/// (head = the panel columns, tail = everything after them); see there
+/// for the full contract and the bitwise-identity argument.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_fused_trailing(
     cfg: &GemmConfig,
@@ -582,12 +572,81 @@ pub fn gemm_fused_trailing(
     panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
     pool: &WorkerPool,
 ) {
+    let n = b.cols;
+    assert!(split_col <= n, "split_col out of range");
+    gemm_fused_trailing_ranges(
+        cfg,
+        kernel,
+        alpha,
+        a,
+        b,
+        c,
+        &[(0, split_col)],
+        (split_col, n),
+        panel_workers,
+        false,
+        panel_task,
+        pool,
+    );
+}
+
+/// The general lookahead-fused trailing update the deep-lookahead
+/// pipeline drives (`C += alpha * A * B`, beta fixed at 1):
+///
+/// 1. **Head** — the full team updates each column range of `head`, in
+///    order (the pending panels entering the lookahead window).
+/// 2. **Split** — `panel_workers` ranks run `panel_task` on the head
+///    columns (factor-ahead work-queue) while the update sub-team sweeps
+///    the `tail` range (the remainder of the trailing matrix).
+/// 3. **Rejoin** — one timed full-team barrier
+///    ([`crate::runtime::pool::PoolCtx::rejoin_timed`]) that attributes
+///    each rank's wait to panel idle, update idle, or — when
+///    `panel_queue_empty` — queue-empty stall.
+///
+/// Columns outside `head ∪ tail` are **not touched**: the deep pipeline
+/// excludes in-window columns that earlier fused jobs already updated.
+/// `head` ranges must be ascending and disjoint and end at or before
+/// `tail.0`; the k-panel of A is packed once (write-once slots shared by
+/// every phase).
+///
+/// Per-element arithmetic is bitwise identical to [`gemm_parallel`] /
+/// [`gemm_blocked`] with the same (clamped) configuration over any
+/// column decomposition: the split never changes an element's
+/// k-accumulation — every micro-kernel accumulates its tile from zero
+/// and adds into C once per `pc` block, in ascending `pc` order,
+/// regardless of tile geometry.
+///
+/// `panel_task` runs exactly once per panel-team rank (once total on a
+/// single-thread pool), only after every head range is complete; it must
+/// touch only memory disjoint from the tail columns and from A and B.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_fused_trailing_ranges(
+    cfg: &GemmConfig,
+    kernel: &MicroKernelImpl,
+    alpha: f64,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    c: &mut MatViewMut<'_>,
+    head: &[(usize, usize)],
+    tail: (usize, usize),
+    panel_workers: usize,
+    panel_queue_empty: bool,
+    panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
+    pool: &WorkerPool,
+) {
     assert_eq!(kernel.spec, cfg.mk, "kernel/config shape mismatch");
     assert_eq!(a.cols, b.rows, "inner dimension mismatch");
     assert_eq!(c.rows, a.rows, "C row mismatch");
     assert_eq!(c.cols, b.cols, "C col mismatch");
     let (m, n, k) = (a.rows, b.cols, a.cols);
-    assert!(split_col <= n, "split_col out of range");
+    let mut prev_hi = 0;
+    for &(lo, hi) in head {
+        assert!(lo <= hi && hi <= n, "head range out of bounds");
+        assert!(lo >= prev_hi, "head ranges must be ascending and disjoint");
+        prev_hi = hi;
+    }
+    assert!(tail.0 <= tail.1 && tail.1 <= n, "tail range out of bounds");
+    assert!(prev_hi <= tail.0, "head must end at or before the tail");
     if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
         // Nothing to update, but callers rely on the panel task running.
         panel_task(&SubTeam::solo_panel());
@@ -597,7 +656,7 @@ pub fn gemm_fused_trailing(
     let eff = GemmConfig { mk: cfg.mk, ccp };
     if pool.threads() == 1 {
         let mut ws = pool.workspace(0);
-        gemm_fused_trailing_seq(&eff, kernel, alpha, a, b, c, split_col, panel_task, &mut ws);
+        gemm_fused_trailing_ranges_seq(&eff, kernel, alpha, a, b, c, head, tail, panel_task, &mut ws);
         return;
     }
     let layout = PackedALayout { m, k, mc: ccp.mc, kc: ccp.kc, mr: eff.mk.mr };
@@ -611,57 +670,70 @@ pub fn gemm_fused_trailing(
     let a_shared = SharedBuf::new(&mut ws0.a_buf);
     let b_shared = SharedBuf::new(&mut ws0.b_buf);
     let cbase = SendPtr(c.data.as_mut_ptr());
+    // The Ac slots are packed cooperatively by whichever phase first
+    // sweeps a non-empty range; every rank derives the same answer from
+    // the (identical) range arguments.
+    let any_head = head.iter().any(|&(lo, hi)| hi > lo);
     pool.run(&|ctx: &PoolCtx<'_>| {
-        // Phase 1: the full team updates the next panel's columns (and
-        // packs every Ac slot, write-once).
-        fused_col_sweep(
-            &eff, kernel, alpha, a, b, cbase, ldc, (0, split_col), true, layout, a_shared,
-            b_shared, ctx.rank, ctx.threads, &|| ctx.barrier(),
-        );
-        ctx.barrier(); // panel columns final; Bc free for the update team
+        // Phase 1: the full team updates the pending-panel ranges in
+        // order (and packs every Ac slot, write-once, on the first
+        // non-empty range).
+        let mut packed = false;
+        for &(lo, hi) in head {
+            fused_col_sweep(
+                &eff, kernel, alpha, a, b, cbase, ldc, (lo, hi), !packed, layout, a_shared,
+                b_shared, ctx.rank, ctx.threads, &|| ctx.barrier(),
+            );
+            packed = packed || hi > lo;
+        }
+        ctx.barrier(); // head columns final; Bc free for the update team
         let sub = ctx.split(panel_workers);
         if sub.panel {
             panel_task(&sub);
         } else {
-            // Phase 2: the update sub-team finishes the remaining
-            // columns, reusing the packed Ac slots (packing them here
-            // only if there was no phase 1 at all).
+            // Phase 2: the update sub-team sweeps the tail, reusing the
+            // packed Ac slots (packing them here only if no head range
+            // packed them).
             fused_col_sweep(
-                &eff, kernel, alpha, a, b, cbase, ldc, (split_col, n), split_col == 0, layout,
-                a_shared, b_shared, sub.rank, sub.threads, &|| sub.barrier(),
+                &eff, kernel, alpha, a, b, cbase, ldc, tail, !any_head, layout, a_shared,
+                b_shared, sub.rank, sub.threads, &|| sub.barrier(),
             );
         }
-        ctx.barrier(); // rejoin: panel results and trailing columns published
+        // Rejoin: panel results and tail columns published; waits are
+        // attributed per phase.
+        ctx.rejoin_timed(&sub, panel_queue_empty);
     });
     drop(ws0);
 }
 
 /// The fused schedule executed inline (no pool, or a single-thread pool):
-/// update the panel columns, run the panel task solo, update the rest.
+/// update the head ranges, run the panel task solo, update the tail.
 /// Identical operation order — and therefore identical results — to the
 /// split-team driver.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn gemm_fused_trailing_seq(
+pub(crate) fn gemm_fused_trailing_ranges_seq(
     cfg: &GemmConfig,
     kernel: &MicroKernelImpl,
     alpha: f64,
     a: MatView<'_>,
     b: MatView<'_>,
     c: &mut MatViewMut<'_>,
-    split_col: usize,
+    head: &[(usize, usize)],
+    tail: (usize, usize),
     panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
     ws: &mut Workspace,
 ) {
-    let n = b.cols;
-    if split_col > 0 {
-        let b1 = b.sub(0, 0, b.rows, split_col);
-        let mut c1 = c.sub_mut(0, 0, c.rows, split_col);
-        gemm_blocked(cfg, kernel, alpha, a, b1, 1.0, &mut c1, ws);
+    for &(lo, hi) in head {
+        if hi > lo {
+            let b1 = b.sub(0, lo, b.rows, hi - lo);
+            let mut c1 = c.sub_mut(0, lo, c.rows, hi - lo);
+            gemm_blocked(cfg, kernel, alpha, a, b1, 1.0, &mut c1, ws);
+        }
     }
     panel_task(&SubTeam::solo_panel());
-    if split_col < n {
-        let b2 = b.sub(0, split_col, b.rows, n - split_col);
-        let mut c2 = c.sub_mut(0, split_col, c.rows, n - split_col);
+    if tail.1 > tail.0 {
+        let b2 = b.sub(0, tail.0, b.rows, tail.1 - tail.0);
+        let mut c2 = c.sub_mut(0, tail.0, c.rows, tail.1 - tail.0);
         gemm_blocked(cfg, kernel, alpha, a, b2, 1.0, &mut c2, ws);
     }
 }
@@ -945,6 +1017,83 @@ mod tests {
                 "x{threads}: packed-A slots must not alias when mr does not divide mc"
             );
         }
+    }
+
+    #[test]
+    fn fused_ranges_cover_and_exclude_exactly() {
+        // The multi-range driver must (a) produce bitwise-identical
+        // results to one full gemm_blocked on every covered column, and
+        // (b) leave excluded columns untouched — the deep-lookahead
+        // pipeline relies on both.
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp: Ccp::new(32, 24, 16) };
+        let mut rng = Pcg64::seed(789);
+        let (m, n, k) = (61, 53, 13);
+        let a = MatrixF64::random(m, k, &mut rng);
+        let b = MatrixF64::random(k, n, &mut rng);
+        let c0 = MatrixF64::random(m, n, &mut rng);
+        let mut c_ref = c0.clone();
+        let mut ws = Workspace::new();
+        gemm_blocked(&cfg, &kernel, -1.0, a.view(), b.view(), 1.0, &mut c_ref.view_mut(), &mut ws);
+        // Covered: [5,12) ∪ [20,26) ∪ [26,53). Excluded: [0,5) ∪ [12,20).
+        let head = [(5usize, 12usize), (20, 26)];
+        let tail = (26usize, n);
+        let covered =
+            |j: usize| head.iter().any(|&(lo, hi)| (lo..hi).contains(&j)) || (tail.0..tail.1).contains(&j);
+        for threads in [1, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            for t_p in [1, 2] {
+                let mut c = c0.clone();
+                let ran = AtomicU64::new(0);
+                gemm_fused_trailing_ranges(
+                    &cfg, &kernel, -1.0, a.view(), b.view(), &mut c.view_mut(), &head, tail,
+                    t_p, false,
+                    &|sub| {
+                        ran.fetch_add(1, Ordering::SeqCst);
+                        sub.barrier();
+                    },
+                    &pool,
+                );
+                for j in 0..n {
+                    for i in 0..m {
+                        let expect = if covered(j) { c_ref[(i, j)] } else { c0[(i, j)] };
+                        assert_eq!(
+                            c[(i, j)].to_bits(),
+                            expect.to_bits(),
+                            "x{threads} t_p={t_p} C({i},{j}) wrong (covered={})",
+                            covered(j)
+                        );
+                    }
+                }
+                let expect_ranks = if threads == 1 { 1 } else { t_p.min(threads - 1) as u64 };
+                assert_eq!(ran.load(Ordering::SeqCst), expect_ranks);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_ranges_empty_head_packs_in_the_tail() {
+        // All head ranges empty: the tail sweep must still see packed Ac
+        // slots (regression for the pack-on-first-nonempty logic).
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp: Ccp::new(16, 12, 8) };
+        let mut rng = Pcg64::seed(790);
+        let (m, n, k) = (40, 30, 20);
+        let a = MatrixF64::random(m, k, &mut rng);
+        let b = MatrixF64::random(k, n, &mut rng);
+        let c0 = MatrixF64::random(m, n, &mut rng);
+        let mut c_ref = c0.clone();
+        let mut ws = Workspace::new();
+        gemm_blocked(&cfg, &kernel, 1.0, a.view(), b.view(), 1.0, &mut c_ref.view_mut(), &mut ws);
+        let pool = WorkerPool::new(3);
+        let mut c = c0.clone();
+        gemm_fused_trailing_ranges(
+            &cfg, &kernel, 1.0, a.view(), b.view(), &mut c.view_mut(), &[(0, 0)],
+            (0, n), 1, true, &|_| {}, &pool,
+        );
+        assert_eq!(c.max_abs_diff(&c_ref), 0.0, "tail-only sweep must still be exact");
     }
 
     #[test]

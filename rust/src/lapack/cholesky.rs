@@ -11,15 +11,20 @@
 //! ```
 //!
 //! With the engine's [`crate::gemm::Lookahead`] enabled, the SYRK sweep
-//! runs as the fused split-team update: the team first updates the next
-//! panel's `b` columns of A22, then the panel sub-team leader runs the
-//! next `potf2` + panel TRSM on them while the update sub-team finishes
-//! the remaining columns — the same pipeline as the lookahead LU, minus
-//! pivoting. Factors are bitwise identical to the serialized path.
+//! runs as the queue-based deep pipeline: up to `depth` panels stay
+//! factored ahead of the trailing sweep — the fused job updates the
+//! columns entering the lookahead window, the panel task replays the
+//! in-window SYRK slices on them and runs `potf2` + panel TRSM, and the
+//! update sub-team sweeps the remainder — the same work queue as the
+//! lookahead LU, minus pivoting. Factors are bitwise identical to the
+//! serialized path at every depth.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
-use crate::gemm::GemmEngine;
+use crate::gemm::{gemm_blocked, GemmEngine, Workspace};
+use crate::model::GemmDims;
+use crate::runtime::pool::SubTeam;
 use crate::util::matrix::{MatrixF64, MatViewMut};
 
 use super::pfact::{SharedPanel, NO_ERR};
@@ -121,10 +126,16 @@ fn factor_panel(pv: &mut MatViewMut<'_>, b: usize) -> Result<(), usize> {
     Ok(())
 }
 
-/// The fused pipeline: every iteration enters with its panel (diagonal
-/// block and sub-diagonal TRSM) already factored, so only the SYRK-shaped
-/// trailing update remains — and the next panel factors *inside* it on
-/// the panel sub-team.
+/// The queue-based deep pipeline (same skeleton as the LU work queue,
+/// minus pivoting): every iteration enters with up to `depth` panels
+/// factored ahead. The fused job's full team updates the columns
+/// entering the lookahead window with this iteration's SYRK slice, then
+/// the panel task replays the in-window iterations' SYRK slices on them
+/// and factors them (`potf2` + panel TRSM, leader-sequential — unlike
+/// LU's cooperative `getf2_team`, so the panel team is always one rank
+/// and every other rank stays in the update sweep), while the update
+/// sub-team sweeps the remainder. Per-column op order matches the
+/// serialized baseline exactly, so the factor is bitwise identical.
 fn cholesky_blocked_lookahead(
     a: &mut MatrixF64,
     block: usize,
@@ -132,50 +143,105 @@ fn cholesky_blocked_lookahead(
 ) -> Result<(), usize> {
     let s = a.rows();
     assert_eq!(a.cols(), s);
+    let depth = engine.lookahead().depth.max(1);
+    let panels = s.div_ceil(block);
+    let col_of = |t: usize| (t * block).min(s);
+    let width_of = |t: usize| col_of(t + 1) - col_of(t);
+    let chain_ws = Mutex::new(Workspace::new());
     // Panel 0 up front.
     {
-        let b0 = block.min(s);
+        let b0 = width_of(0);
         let mut pv = a.sub_mut(0, 0, s, b0);
         factor_panel(&mut pv, b0)?;
     }
-    let mut k = 0;
-    while k < s {
-        let b = block.min(s - k);
-        if k + b < s {
-            let rest = s - k - b;
-            let next_b = block.min(rest);
-            let a21 = a.sub(k + b, k, rest, b).to_owned_matrix();
-            let a21t = a21.transposed();
-            let mut a22 = a.sub_mut(k + b, k + b, rest, rest);
-            let panel_shared = SharedPanel::new(&mut a22.sub_mut(0, 0, rest, next_b));
-            let err = AtomicUsize::new(NO_ERR);
-            // potf2 + the panel TRSM are leader-sequential (unlike LU's
-            // cooperative getf2_team), so a 1-rank panel team keeps the
-            // other `t_p - 1` ranks in the update sweep instead of idle.
-            engine.gemm_fused_trailing(
-                -1.0,
-                a21.view(),
-                a21t.view(),
-                &mut a22,
-                next_b,
-                1,
-                &|sub| {
-                    if sub.rank == 0 {
-                        // SAFETY: phase 1 is complete and the update team
-                        // only touches columns >= next_b of A22.
-                        let mut pv = unsafe { panel_shared.view_mut() };
-                        if let Err(j) = factor_panel(&mut pv, next_b) {
-                            err.store(j, Ordering::Release);
-                        }
+    let mut nf = 1usize;
+    for t in 0..panels {
+        let k = col_of(t);
+        let b = width_of(t);
+        if k + b >= s {
+            continue;
+        }
+        let rest = s - k - b;
+        let wend = col_of(nf);
+        let nf_new = (t + 1 + depth).min(panels);
+        if nf_new == nf {
+            // Queue exhausted ⇒ the window covers the whole trailing
+            // matrix; skip the would-be queue-empty job (no tail left).
+            debug_assert!(wend >= s);
+            continue;
+        }
+        let o = k + b;
+        let head = [(wend - o, col_of(nf_new) - o)];
+        let tail = (col_of(nf_new) - o, rest);
+        // Configs to replay iterations (t, nf_new - 1) on the entering
+        // columns, planned on each iteration's full trailing dims.
+        let chain_plans: Vec<(crate::model::ccp::GemmConfig, crate::gemm::MicroKernelImpl)> =
+            ((t + 1)..nf_new.saturating_sub(1))
+                .map(|i| {
+                    let mi = s - col_of(i) - width_of(i);
+                    engine.plan_kernel(GemmDims::new(mi, mi, width_of(i)))
+                })
+                .collect();
+        let errs: Vec<AtomicUsize> = (nf..nf_new).map(|_| AtomicUsize::new(NO_ERR)).collect();
+        let a21 = a.sub(o, k, rest, b).to_owned_matrix();
+        let a21t = a21.transposed();
+        let mut a22 = a.sub_mut(o, o, rest, rest);
+        let shared = SharedPanel::new(&mut a22);
+        let chain = |sub: &SubTeam<'_>| {
+            if sub.rank != 0 {
+                return;
+            }
+            let mut wsg = chain_ws.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            for (wi, w) in (nf..nf_new).enumerate() {
+                let (cw, bw) = (col_of(w), width_of(w));
+                let wc = cw - o;
+                for i in (t + 1)..w {
+                    let (ci, bi) = (col_of(i), width_of(i));
+                    // SAFETY: the update team only touches tail columns;
+                    // this task is the sole writer of the entering
+                    // columns and sole reader of the stable in-window
+                    // panels it replays from.
+                    unsafe {
+                        let a21i =
+                            shared.sub(ci - o + bi, ci - o, s - ci - bi, bi).to_owned_matrix();
+                        // B = (A21_i)^T restricted to panel w's columns
+                        // = transpose of A21_i's rows [cw - ci - bi, +bw).
+                        let bslice =
+                            shared.sub(cw - o, ci - o, bw, bi).to_owned_matrix().transposed();
+                        let (cfg_i, kern_i) = &chain_plans[i - (t + 1)];
+                        let mut c_s = shared.sub(ci - o + bi, wc, s - ci - bi, bw).view_mut();
+                        gemm_blocked(
+                            cfg_i, kern_i, -1.0, a21i.view(), bslice.view(), 1.0, &mut c_s,
+                            &mut wsg,
+                        );
                     }
-                },
-            );
-            let failed = err.load(Ordering::Acquire);
+                }
+                // SAFETY: as above; panel w's columns are fully updated.
+                let mut pv = unsafe { shared.sub(wc, wc, s - cw, bw).view_mut() };
+                if let Err(j) = factor_panel(&mut pv, bw) {
+                    errs[wi].store(j, Ordering::Release);
+                    return;
+                }
+            }
+        };
+        engine.gemm_fused_trailing_ranges(
+            -1.0,
+            a21.view(),
+            a21t.view(),
+            &mut a22,
+            &head,
+            tail,
+            1,
+            false, // never queue-empty: empty jobs are skipped above
+            &chain,
+        );
+        for (wi, w) in (nf..nf_new).enumerate() {
+            let failed = errs[wi].load(Ordering::Acquire);
             if failed != NO_ERR {
-                return Err(k + b + failed);
+                return Err(col_of(w) + failed);
             }
         }
-        k += b;
+        nf = nf_new;
     }
     Ok(())
 }

@@ -12,33 +12,43 @@
 //! The trailing GEMM has `m = n = s - k - b` (shrinking) and constant
 //! `k = b` — the skinny-k shape whose cache behaviour the paper studies.
 //!
-//! # Static lookahead (the fused pipeline)
+//! # Dynamic deep lookahead (the work-queue pipeline)
 //!
 //! With a [`crate::gemm::Lookahead`] policy enabled on the engine,
-//! [`lu_blocked`] runs the fused pipeline instead: each iteration starts
-//! with its panel **already factored** (pivots recorded, swaps *not yet
-//! applied*), applies the deferred swaps to the columns left and right of
-//! the panel ([`laswp_parallel`] on the pool), solves A12, and then issues
-//! one fused pool job ([`GemmEngine::gemm_fused_trailing`]) that
+//! [`lu_blocked`] runs a queue-based pipeline that keeps up to
+//! `Lookahead::depth` panels factored ahead of the trailing sweep. Each
+//! iteration starts with its panel **already factored** (pivots
+//! recorded, swaps *not yet applied*), applies the deferred swaps left
+//! of the panel and right of the in-flight window ([`laswp_parallel`] on
+//! the pool), TSOLVEs A12 right of the window, and issues one fused pool
+//! job ([`GemmEngine::gemm_fused_trailing_ranges`]) that
 //!
-//! 1. updates the next panel's `b` columns of A22 with the whole team,
-//! 2. splits: a `t_p`-rank panel sub-team factors that freshly-updated
-//!    panel ([`getf2_team`]) while the update sub-team finishes the
-//!    remaining `n - b` columns,
-//! 3. rejoins at a single team barrier.
+//! 1. updates the columns *entering* the window with the whole team
+//!    (in-window columns were already updated by earlier jobs and are
+//!    excluded),
+//! 2. splits: a `t_p`-rank panel sub-team — sized per iteration by the
+//!    malleable team-size model ([`crate::model::teamsize`]) — replays
+//!    the in-window iterations on the entering columns (restricted
+//!    swaps, TSOLVE slice, trailing-update slice) and factors them
+//!    ([`getf2_team`]), while the update sub-team sweeps the remainder,
+//! 3. rejoins at a single timed team barrier (per-phase idle counters).
 //!
-//! Deferring the next panel's swaps past the concurrent remainder update
-//! is exact: the trailing GEMM updates each row independently, so
-//! permuting rows after the update equals permuting before. Pivots and
-//! factors are **bitwise identical** to the non-lookahead pooled path
-//! (asserted by `tests/lookahead.rs`): the fused driver plans one config
-//! for the full trailing shape, which fixes every element's
-//! k-accumulation order, and `getf2_team` replays `getf2`'s exact
-//! comparison and update sequence.
+//! Deferring swaps past concurrent updates is exact: the trailing GEMM
+//! updates each row independently, so permuting rows after the update
+//! equals permuting before; the chain replays ops per column in exactly
+//! the baseline's order. Pivots and factors are **bitwise identical** to
+//! the non-lookahead pooled path for every depth (asserted by
+//! `tests/lookahead.rs`): all paths plan one config per iteration on the
+//! full trailing shape, which fixes every element's k-accumulation
+//! order, and `getf2_team` replays `getf2`'s exact comparison and update
+//! sequence.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
-use crate::gemm::GemmEngine;
+use crate::gemm::{gemm_blocked, GemmEngine, Workspace};
+use crate::model::{GemmDims, PanelShape};
+use crate::runtime::pool::SubTeam;
 use crate::util::matrix::MatrixF64;
 
 use super::pfact::{getf2, getf2_team, laswp, laswp_parallel, SharedPanel, NO_ERR};
@@ -126,14 +136,18 @@ impl LuFactors {
     }
 }
 
-/// Apply the panel's row interchanges to the columns left and right of
-/// it, on the worker pool when the engine has one (the `laswp` satellite:
-/// the seed swapped rows with a sequential per-row loop over the full
-/// width while the whole team idled).
+/// Apply the panel's row interchanges to the columns left of it and to
+/// the columns from `right_from` rightward, on the worker pool when the
+/// engine has one (the `laswp` satellite: the seed swapped rows with a
+/// sequential per-row loop over the full width while the whole team
+/// idled). The gap `[k + b, right_from)` is the deep-lookahead window:
+/// those in-flight panels received this panel's swaps inside the fused
+/// chains that readied them (the baseline passes `right_from = k + b`,
+/// i.e. no gap).
 fn apply_panel_swaps(
     a: &mut MatrixF64,
     k: usize,
-    b: usize,
+    right_from: usize,
     piv_local: &[usize],
     engine: &GemmEngine,
 ) {
@@ -147,8 +161,8 @@ fn apply_panel_swaps(
         let mut left = a.sub_mut(0, 0, s, k);
         swap(&mut left);
     }
-    if k + b < s {
-        let mut right = a.sub_mut(0, k + b, s, s - k - b);
+    if right_from < s {
+        let mut right = a.sub_mut(0, right_from, s, s - right_from);
         swap(&mut right);
     }
 }
@@ -199,7 +213,7 @@ fn lu_blocked_baseline(
         // --- Row interchanges on the left and right of the panel --------
         {
             let piv_local: Vec<usize> = (0..b).map(|j| pivots[k + j] - k).collect();
-            apply_panel_swaps(a, k, b, &piv_local, engine);
+            apply_panel_swaps(a, k, k + b, &piv_local, engine);
         }
         if k + b < s {
             let rest = s - k - b;
@@ -222,10 +236,29 @@ fn lu_blocked_baseline(
     Ok(pivots)
 }
 
-/// The fused lookahead pipeline (module docs): every iteration enters
-/// with its panel already factored — by the up-front `getf2` for panel 0,
-/// then by the panel sub-team of the previous iteration's fused job — so
-/// the worker pool never sits parked behind a panel factorization.
+/// The dynamic deep-lookahead pipeline (module docs): a work-queue of
+/// pending panels keeps up to `Lookahead::depth` panels factored ahead
+/// of the trailing sweep.
+///
+/// Invariant at the top of iteration `t` (with `nf` = first unfactored
+/// panel, clamped to `min(t + depth, panels)` by the previous job):
+///
+/// - panels `0..nf` are factored, their pivots recorded;
+/// - the in-flight **window** columns `[col(t+1), col(nf))` have
+///   received *every* op (swaps / TSOLVE / GEMM) of iterations
+///   `0..their own panel index` — applied by the fused chains that
+///   readied them;
+/// - columns `>= col(nf)` have received the ops of iterations `0..t`
+///   exactly.
+///
+/// Iteration `t` then (1) applies panel `t`'s deferred swaps left of the
+/// panel and right of the window, (2) TSOLVEs row-block `t` right of the
+/// window, and (3) issues one fused job whose full team first updates
+/// the columns *entering* the window, whose panel sub-team (sized by the
+/// malleable team-size model) replays the in-window iterations on those
+/// columns and factors them (`getf2_team`), and whose update sub-team
+/// sweeps the remainder. Per-column op order — and therefore every bit
+/// of the result — is identical to the serialized baseline.
 fn lu_blocked_lookahead(
     a: &mut MatrixF64,
     block: usize,
@@ -234,59 +267,157 @@ fn lu_blocked_lookahead(
     let s = a.rows();
     assert_eq!(a.cols(), s, "LU requires a square matrix");
     assert!(block >= 1);
-    let la = engine.lookahead();
+    let la = engine.lookahead(); // resolved once; per-iteration calls reuse it
+    let depth = la.depth.max(1);
+    let panels = s.div_ceil(block);
+    let col_of = |t: usize| (t * block).min(s);
+    let width_of = |t: usize| col_of(t + 1) - col_of(t);
     let mut pivots = vec![0usize; s];
+    // Scratch for the chain's restricted mini-updates; one allocation
+    // per factorization, locked only by the panel sub-team leader.
+    let chain_ws = Mutex::new(Workspace::new());
     // Factor panel 0 up front (nothing to overlap it with yet).
     {
-        let b0 = block.min(s);
+        let b0 = width_of(0);
         let mut panel = a.sub_mut(0, 0, s, b0);
         let mut piv_local = vec![0usize; b0];
         getf2(&mut panel, &mut piv_local)?;
         pivots[..b0].copy_from_slice(&piv_local);
     }
-    let mut k = 0;
-    while k < s {
-        let b = block.min(s - k);
-        // Invariant: panel [k.., k..k+b] is factored, pivots[k..k+b] are
-        // recorded (absolute), and its swaps are still deferred.
-        let piv_local: Vec<usize> = (0..b).map(|j| pivots[k + j] - k).collect();
-        apply_panel_swaps(a, k, b, &piv_local, engine);
-        if k + b < s {
-            let rest = s - k - b;
-            // --- TSOLVE: A12 := L11^{-1} A12 ----------------------------
-            {
-                let l11 = a.sub(k, k, b, b).to_owned_matrix();
-                let mut a12 = a.sub_mut(k, k + b, b, rest);
-                trsm_left_lower_unit(l11.view(), &mut a12);
+    let mut nf = 1usize; // work-queue head: first unfactored panel
+    for t in 0..panels {
+        let k = col_of(t);
+        let b = width_of(t);
+        debug_assert!(nf > t, "panel {t} must be factored before its iteration");
+        let wend = col_of(nf);
+        // --- Deferred swaps of panel t: left of the panel and right of
+        // the window (in-window columns got them inside the chains).
+        {
+            let piv_local: Vec<usize> = (0..b).map(|j| pivots[k + j] - k).collect();
+            apply_panel_swaps(a, k, wend, &piv_local, engine);
+        }
+        if k + b >= s {
+            continue; // last panel: nothing trailing
+        }
+        let rest = s - k - b;
+        // --- TSOLVE row-block t right of the window (the window slice
+        // of A12 was solved when those panels were readied).
+        if wend < s {
+            let l11 = a.sub(k, k, b, b).to_owned_matrix();
+            let mut a12r = a.sub_mut(k, wend, b, s - wend);
+            trsm_left_lower_unit(l11.view(), &mut a12r);
+        }
+        let nf_new = (t + 1 + depth).min(panels);
+        if nf_new == nf {
+            // The queue can only fail to advance once every panel is
+            // factored (nf == panels), and then the window covers the
+            // whole trailing matrix — the drivers *skip* would-be
+            // queue-empty jobs instead of stalling a panel team on them
+            // (wend == s here, so there is no tail to sweep either).
+            debug_assert!(wend >= s);
+            continue;
+        }
+        // --- One fused job: head = columns entering the window, tail =
+        // the remainder; the in-window prefix [0, wend - o) is excluded
+        // (already updated past iteration t).
+        let o = k + b; // a22 origin (absolute row/col)
+        let head = [(wend - o, col_of(nf_new) - o)];
+        let tail = (col_of(nf_new) - o, rest);
+        let t_p = engine.panel_team_size(
+            la,
+            t,
+            PanelShape::new(s - wend, width_of(nf)),
+            GemmDims::new(rest, rest, b),
+        );
+        // Configs the chain needs to replay iterations (t, nf_new - 1)
+        // restricted to entering columns — planned on each iteration's
+        // *full* trailing dims, exactly as its own fused job will plan.
+        let chain_plans: Vec<(crate::model::ccp::GemmConfig, crate::gemm::MicroKernelImpl)> =
+            ((t + 1)..nf_new.saturating_sub(1))
+                .map(|i| {
+                    let mi = s - col_of(i) - width_of(i);
+                    engine.plan_kernel(GemmDims::new(mi, mi, width_of(i)))
+                })
+                .collect();
+        // Pivot slots and error flags, one set per entering panel.
+        let piv_next: Vec<Vec<AtomicUsize>> = (nf..nf_new)
+            .map(|w| (0..width_of(w)).map(|_| AtomicUsize::new(0)).collect())
+            .collect();
+        let errs: Vec<AtomicUsize> = (nf..nf_new).map(|_| AtomicUsize::new(NO_ERR)).collect();
+        let a21 = a.sub(o, k, rest, b).to_owned_matrix();
+        let a12 = a.sub(k, o, b, rest).to_owned_matrix();
+        let mut a22 = a.sub_mut(o, o, rest, rest);
+        let shared = SharedPanel::new(&mut a22);
+        let pivots_ref = &pivots;
+        let chain = |sub: &SubTeam<'_>| {
+            for (wi, w) in (nf..nf_new).enumerate() {
+                let (cw, bw) = (col_of(w), width_of(w));
+                let wc = cw - o; // panel w's columns, a22-relative
+                if sub.rank == 0 {
+                    // Replay iterations (t, w) on panel w's columns:
+                    // swaps, TSOLVE slice, trailing-update slice — the
+                    // exact per-column op order of the baseline.
+                    let mut wsg =
+                        chain_ws.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                    for i in (t + 1)..w {
+                        let (ci, bi) = (col_of(i), width_of(i));
+                        let piv_i: Vec<usize> = if i < nf {
+                            (0..bi).map(|j| pivots_ref[ci + j] - ci).collect()
+                        } else {
+                            piv_next[i - nf].iter().map(|p| p.load(Ordering::Acquire)).collect()
+                        };
+                        // SAFETY (all shared accesses below): the update
+                        // team only touches tail columns; within the
+                        // panel team, rank 0 is the sole writer here and
+                        // the getf2_team barriers order the hand-offs.
+                        unsafe {
+                            let mut wcols = shared.sub(0, wc, rest, bw).view_mut();
+                            laswp(&mut wcols, ci - o, &piv_i);
+                            let l11 = shared.sub(ci - o, ci - o, bi, bi).to_owned_matrix();
+                            let mut a12s = shared.sub(ci - o, wc, bi, bw).view_mut();
+                            trsm_left_lower_unit(l11.view(), &mut a12s);
+                            let a21i = shared.sub(ci - o + bi, ci - o, s - ci - bi, bi)
+                                .to_owned_matrix();
+                            let b12 = shared.sub(ci - o, wc, bi, bw).to_owned_matrix();
+                            let (cfg_i, kern_i) = &chain_plans[i - (t + 1)];
+                            let mut c_s = shared.sub(ci - o + bi, wc, s - ci - bi, bw).view_mut();
+                            gemm_blocked(
+                                cfg_i, kern_i, -1.0, a21i.view(), b12.view(), 1.0, &mut c_s,
+                                &mut wsg,
+                            );
+                        }
+                    }
+                }
+                // Panel w is ready: the whole panel sub-team factors it.
+                let panel_sh = shared.sub(wc, wc, s - cw, bw);
+                getf2_team(&panel_sh, &piv_next[wi], &errs[wi], sub);
+                if errs[wi].load(Ordering::Acquire) != NO_ERR {
+                    return; // uniform: every rank observes the error
+                }
             }
-            // --- Fused GEMM + PFACT(k+1): the whole team updates the
-            // next panel's columns of A22, then the panel sub-team
-            // factors them while the update sub-team finishes the rest.
-            let next_b = block.min(rest);
-            let a21 = a.sub(k + b, k, rest, b).to_owned_matrix();
-            let a12 = a.sub(k, k + b, b, rest).to_owned_matrix();
-            let mut a22 = a.sub_mut(k + b, k + b, rest, rest);
-            let panel_shared = SharedPanel::new(&mut a22.sub_mut(0, 0, rest, next_b));
-            let piv_next: Vec<AtomicUsize> = (0..next_b).map(|_| AtomicUsize::new(0)).collect();
-            let err = AtomicUsize::new(NO_ERR);
-            engine.gemm_fused_trailing(
-                -1.0,
-                a21.view(),
-                a12.view(),
-                &mut a22,
-                next_b,
-                la.panel_workers,
-                &|sub| getf2_team(&panel_shared, &piv_next, &err, sub),
-            );
-            let failed = err.load(Ordering::Acquire);
+        };
+        engine.gemm_fused_trailing_ranges(
+            -1.0,
+            a21.view(),
+            a12.view(),
+            &mut a22,
+            &head,
+            tail,
+            t_p,
+            false, // never queue-empty: empty jobs are skipped above
+            &chain,
+        );
+        for (wi, w) in (nf..nf_new).enumerate() {
+            let failed = errs[wi].load(Ordering::Acquire);
             if failed != NO_ERR {
-                return Err(k + b + failed);
+                return Err(col_of(w) + failed);
             }
-            for (j, pj) in piv_next.iter().enumerate() {
-                pivots[k + b + j] = k + b + pj.load(Ordering::Acquire);
+            let cw = col_of(w);
+            for (j, pj) in piv_next[wi].iter().enumerate() {
+                pivots[cw + j] = cw + pj.load(Ordering::Acquire);
             }
         }
-        k += b;
+        nf = nf_new;
     }
     Ok(pivots)
 }

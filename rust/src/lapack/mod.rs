@@ -13,13 +13,16 @@
 //!   co-design GEMM showing the approach generalizes beyond LU).
 //! - [`qr`] — blocked Householder QR (compact-WY), a third consumer.
 //!
-//! All three factorizations run a **static-lookahead fused pipeline**
+//! All three factorizations run a **dynamic deep-lookahead work queue**
 //! when the engine's [`crate::gemm::Lookahead`] policy is enabled (the
-//! default for multi-thread plans): the next panel factors on a pool
-//! sub-team *inside* the trailing update job, with results bitwise
-//! identical to the serialized path. See `README.md` in this directory
-//! for the pipeline write-up (team split, deferred swaps, rejoin
-//! barrier, `t_p` heuristic).
+//! default for multi-thread plans): up to `depth` panels stay factored
+//! ahead of the trailing sweep, readied by a malleable panel sub-team
+//! (sized per iteration by the team-size model) *inside* the fused
+//! trailing-update jobs, with results bitwise identical to the
+//! serialized path at every depth. See `README.md` in this directory
+//! for the pipeline write-up (queue states, malleability rule,
+//! deferred-swap windows, `DLA_LOOKAHEAD`/`DLA_PANEL_WORKERS`/`DLA_PIN`
+//! semantics).
 
 pub mod cholesky;
 pub mod level3;

@@ -42,6 +42,31 @@ impl SharedPanel {
         Self { ptr: v.data.as_mut_ptr(), rows: v.rows, cols: v.cols, ld: v.ld }
     }
 
+    /// A sub-region of this shared view (same aliasing discipline): the
+    /// deep-lookahead chains address individual panels, `L11`/`A21`
+    /// blocks and column slices of one big shared trailing-matrix view
+    /// through this.
+    pub fn sub(&self, i: usize, j: usize, rows: usize, cols: usize) -> SharedPanel {
+        assert!(i + rows <= self.rows && j + cols <= self.cols, "SharedPanel::sub out of range");
+        SharedPanel {
+            // SAFETY: in-bounds by the assert; the pointer stays within
+            // the parent allocation.
+            ptr: unsafe { self.ptr.add(j * self.ld + i) },
+            rows,
+            cols,
+            ld: self.ld,
+        }
+    }
+
+    /// Copy this region into an owned matrix.
+    ///
+    /// # Safety
+    /// No other rank may be mutating the region (same contract as
+    /// [`Self::view_mut`]).
+    pub unsafe fn to_owned_matrix(&self) -> crate::util::matrix::MatrixF64 {
+        crate::util::matrix::MatrixF64::from_fn(self.rows, self.cols, |i, j| self.at(i, j))
+    }
+
     /// Rebuild a mutable view.
     ///
     /// # Safety
@@ -58,8 +83,10 @@ impl SharedPanel {
         }
     }
 
+    /// Read one element. The caller must respect the sub-team discipline
+    /// (no concurrent writer of this element between barriers).
     #[inline]
-    fn at(&self, i: usize, j: usize) -> f64 {
+    pub fn at(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.rows && j < self.cols);
         unsafe { *self.ptr.add(j * self.ld + i) }
     }

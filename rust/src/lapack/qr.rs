@@ -8,16 +8,19 @@
 //! update again has inner dimension `b`, the paper's skinny-k shape.
 //!
 //! With the engine's [`crate::gemm::Lookahead`] enabled, the final (and
-//! dominant) `A2 -= V * (T^T V^T A2)` GEMM runs as the fused split-team
-//! update: the team applies it to the next panel's `b` columns first, the
-//! panel sub-team leader then runs `geqr2` on that freshly-updated panel
-//! while the update sub-team finishes the remaining columns. The packed V
-//! is shared by both column phases. Factors and tau are bitwise identical
-//! to the serialized path.
+//! dominant) `A2 -= V * (T^T V^T A2)` GEMM runs on the queue-based deep
+//! pipeline: up to `depth` panels stay factored ahead — the fused job's
+//! full team applies the compact-WY update to the columns entering the
+//! lookahead window, the panel task replays the in-window iterations'
+//! update slices on them and runs `geqr2`, and the update sub-team
+//! sweeps the remainder, reusing the packed V. Factors and tau are
+//! bitwise identical to the serialized path at every depth.
 
 use std::sync::Mutex;
 
-use crate::gemm::GemmEngine;
+use crate::gemm::{gemm_blocked, GemmEngine, Workspace};
+use crate::model::GemmDims;
+use crate::runtime::pool::SubTeam;
 use crate::util::matrix::{MatrixF64, MatViewMut};
 
 use super::pfact::SharedPanel;
@@ -171,30 +174,33 @@ fn larft(v: &MatrixF64, tau: &[f64]) -> MatrixF64 {
 /// Blocked QR: factor `a` (m x n, m >= n) in place with block size `b`;
 /// trailing updates go through the co-design engine. The three GEMMs per
 /// panel recur with per-step shapes, so the engine's config memo cache
-/// reduces selector work to one scoring pass per distinct shape. With the
-/// engine's lookahead enabled the final GEMM overlaps the next panel's
-/// `geqr2` (module docs); results are bitwise identical.
+/// reduces selector work to one scoring pass per distinct shape. With
+/// the engine's lookahead enabled the queue-based deep pipeline keeps up
+/// to `depth` panels factored ahead of the trailing sweep (module docs);
+/// results are bitwise identical at every depth.
 pub fn qr_blocked(a0: &MatrixF64, block: usize, engine: &mut GemmEngine) -> QrFactors {
     let (m, n) = (a0.rows(), a0.cols());
     assert!(m >= n, "qr_blocked expects m >= n");
     let mut a = a0.clone();
     let mut tau = vec![0.0; n];
     let b = block.max(1);
-    let la = engine.lookahead();
-    if la.enabled() {
-        // Panel 0 up front; each iteration then enters with its panel
-        // factored and overlaps the next `geqr2` with the trailing GEMM.
-        let b0 = b.min(n);
-        let mut panel = a.sub_mut(0, 0, m, b0);
-        geqr2(&mut panel, &mut tau[..b0]);
+    if engine.lookahead().enabled() {
+        qr_lookahead(&mut a, &mut tau, b, engine);
+    } else {
+        qr_baseline(&mut a, &mut tau, b, engine);
     }
+    QrFactors { qr: a, tau, block: b }
+}
+
+/// The serialized path: factor the panel, then apply the compact-WY
+/// update to the whole trailing matrix, per iteration.
+fn qr_baseline(a: &mut MatrixF64, tau: &mut [f64], b: usize, engine: &mut GemmEngine) {
+    let (m, n) = (a.rows(), a.cols());
     let mut k = 0;
     while k < n {
         let bb = b.min(n - k);
         let rows = m - k;
-        // Panel factorization (already done by the previous iteration's
-        // fused job — or the warm-up above — on the lookahead path).
-        if !la.enabled() {
+        {
             let mut panel = a.sub_mut(k, k, rows, bb);
             geqr2(&mut panel, &mut tau[k..k + bb]);
         }
@@ -223,43 +229,193 @@ pub fn qr_blocked(a0: &MatrixF64, block: usize, engine: &mut GemmEngine) -> QrFa
             engine.gemm(1.0, tt.view(), w.view(), 0.0, &mut tw.view_mut());
             // A2 := A2 - V W: the paper's skinny-k trailing update.
             let mut a2m = a.sub_mut(k, k + bb, rows, cols);
-            if la.enabled() {
-                // Fused: the next panel lives in rows [bb..] of A2's
-                // first next_b columns; factor it on the panel sub-team
-                // once phase 1 has finished those columns.
-                let next_b = b.min(cols);
-                let panel_shared = SharedPanel::new(&mut a2m.sub_mut(bb, 0, rows - bb, next_b));
-                let tau_next = Mutex::new(vec![0.0f64; next_b]);
-                // geqr2 is leader-sequential (Householder norms are
-                // reductions; no team variant yet), so a 1-rank panel
-                // team keeps the remaining ranks in the update sweep.
-                engine.gemm_fused_trailing(
-                    -1.0,
-                    v.view(),
-                    tw.view(),
-                    &mut a2m,
-                    next_b,
-                    1,
-                    &|sub| {
-                        if sub.rank == 0 {
-                            // SAFETY: phase 1 is complete; the update team
-                            // only touches columns >= next_b, and rows
-                            // [0, bb) of the panel columns are final.
-                            let mut pv = unsafe { panel_shared.view_mut() };
-                            let mut t = tau_next.lock().unwrap();
-                            geqr2(&mut pv, &mut t);
-                        }
-                    },
-                );
-                let tau_next = tau_next.into_inner().unwrap();
-                tau[k + bb..k + bb + next_b].copy_from_slice(&tau_next);
-            } else {
-                engine.gemm(-1.0, v.view(), tw.view(), 1.0, &mut a2m);
-            }
+            engine.gemm(-1.0, v.view(), tw.view(), 1.0, &mut a2m);
         }
         k += bb;
     }
-    QrFactors { qr: a, tau, block: b }
+}
+
+/// The queue-based deep-lookahead path (same work-queue skeleton as the
+/// LU pipeline): iteration `t` computes `W`/`TW` only for the columns
+/// right of the in-flight window (the window slices were consumed when
+/// those panels were readied), the fused job's full team applies the
+/// compact-WY update to the columns entering the window, and the panel
+/// task replays the in-window iterations' update slices on them and runs
+/// `geqr2` (leader-sequential, so the panel team is one rank) while the
+/// update sub-team sweeps the remainder. Every GEMM — full-width,
+/// entering-slice or chain-slice — runs under the configuration planned
+/// for that iteration's *full* trailing dims, so factors and tau are
+/// bitwise identical to the baseline at every depth.
+fn qr_lookahead(a: &mut MatrixF64, tau: &mut [f64], b: usize, engine: &mut GemmEngine) {
+    let (m, n) = (a.rows(), a.cols());
+    let depth = engine.lookahead().depth.max(1);
+    let panels = n.div_ceil(b);
+    let col_of = |t: usize| (t * b).min(n);
+    let width_of = |t: usize| col_of(t + 1) - col_of(t);
+    let chain_ws = Mutex::new(Workspace::new());
+    // Panel 0 up front (nothing to overlap it with yet).
+    {
+        let b0 = width_of(0);
+        let mut panel = a.sub_mut(0, 0, m, b0);
+        geqr2(&mut panel, &mut tau[..b0]);
+    }
+    let mut nf = 1usize;
+    for t in 0..panels {
+        let k = col_of(t);
+        let bb = width_of(t);
+        if k + bb >= n {
+            continue;
+        }
+        let rows = m - k;
+        let cols = n - k - bb;
+        let wend = col_of(nf);
+        let nf_new = (t + 1 + depth).min(panels);
+        if nf_new == nf {
+            // Queue exhausted ⇒ the window covers every trailing column;
+            // skip the would-be queue-empty job (no tail left).
+            debug_assert!(wend >= n);
+            continue;
+        }
+        // V_t / T_t from the factored panel (stable: nothing right of
+        // iteration t writes panel t's columns again).
+        let v = MatrixF64::from_fn(rows, bb, |i, j| {
+            if i == j {
+                1.0
+            } else if i > j {
+                a[(k + i, k + j)]
+            } else {
+                0.0
+            }
+        });
+        let tmat = larft(&v, &tau[k..k + bb]);
+        // W/TW for the columns right of the window only, under configs
+        // planned on the FULL trailing dims (bitwise identical to the
+        // baseline's full-width GEMMs restricted to these columns; the
+        // window slices were computed by the chains that readied those
+        // panels). TW is laid into a full-width, zero-padded B so the
+        // fused driver's column ranges index it directly.
+        let (cfg_w, _) = engine.plan_kernel(GemmDims::new(bb, cols, rows));
+        let (cfg_tw, _) = engine.plan_kernel(GemmDims::new(bb, cols, bb));
+        let mut tw_full = MatrixF64::zeros(bb, cols);
+        if wend < n {
+            let right = n - wend;
+            let a2r = a.sub(k, wend, rows, right).to_owned_matrix();
+            let vt = v.transposed();
+            let mut w_r = MatrixF64::zeros(bb, right);
+            engine.gemm_with_config(&cfg_w, 1.0, vt.view(), a2r.view(), 0.0, &mut w_r.view_mut());
+            // TW lands directly in the column-offset window of the
+            // full-width B buffer the fused driver will index.
+            let tt = tmat.transposed();
+            let off = wend - k - bb;
+            let mut tw_view = tw_full.sub_mut(0, off, bb, right);
+            engine.gemm_with_config(&cfg_tw, 1.0, tt.view(), w_r.view(), 0.0, &mut tw_view);
+        }
+        let head = [(wend - k - bb, col_of(nf_new) - k - bb)];
+        let tail = (col_of(nf_new) - k - bb, cols);
+        // Per-iteration (W, TW, update) configs for the chain's replay of
+        // iterations (t, nf_new - 1) on the entering columns.
+        type Plan = (crate::model::ccp::GemmConfig, crate::gemm::MicroKernelImpl);
+        let chain_plans: Vec<(Plan, Plan, Plan)> = ((t + 1)..nf_new.saturating_sub(1))
+            .map(|i| {
+                let (ci, bi) = (col_of(i), width_of(i));
+                let (ri, ni) = (m - ci, n - ci - bi);
+                (
+                    engine.plan_kernel(GemmDims::new(bi, ni, ri)),
+                    engine.plan_kernel(GemmDims::new(bi, ni, bi)),
+                    engine.plan_kernel(GemmDims::new(ri, ni, bi)),
+                )
+            })
+            .collect();
+        let tau_next: Mutex<Vec<Vec<f64>>> = Mutex::new(vec![Vec::new(); nf_new - nf]);
+        let tau_ro: &[f64] = tau;
+        let mut a2m = a.sub_mut(k, k + bb, rows, cols);
+        let shared = SharedPanel::new(&mut a2m);
+        let chain = |sub: &SubTeam<'_>| {
+            if sub.rank != 0 {
+                return;
+            }
+            let mut wsg = chain_ws.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            let mut taus = tau_next.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            for (wi, w) in (nf..nf_new).enumerate() {
+                let (cw, bw) = (col_of(w), width_of(w));
+                let wc = cw - k - bb; // panel w's columns, a2m-relative
+                for i in (t + 1)..w {
+                    let (ci, bi) = (col_of(i), width_of(i));
+                    let ri = m - ci;
+                    // SAFETY (all shared accesses): the update team only
+                    // touches tail columns; this task is the sole writer
+                    // of the entering columns and reads only stable
+                    // in-window panels besides them.
+                    unsafe {
+                        // V_i / T_i rebuilt from the in-window panel.
+                        let pcol = ci - k - bb;
+                        let pview = shared.sub(ci - k, pcol, ri, bi);
+                        let vi = MatrixF64::from_fn(ri, bi, |r, c| {
+                            if r == c {
+                                1.0
+                            } else if r > c {
+                                pview.at(r, c)
+                            } else {
+                                0.0
+                            }
+                        });
+                        let tau_i: Vec<f64> = if i < nf {
+                            tau_ro[ci..ci + bi].to_vec()
+                        } else {
+                            taus[i - nf].clone()
+                        };
+                        let ti = larft(&vi, &tau_i);
+                        // W_s = V_i^T A2_slice, TW_s = T_i^T W_s,
+                        // slice -= V_i TW_s — each under iteration i's
+                        // full-dims config.
+                        let a2s = shared.sub(ci - k, wc, ri, bw).to_owned_matrix();
+                        let ((cfg_w_i, kern_w_i), (cfg_t_i, kern_t_i), (cfg_u_i, kern_u_i)) =
+                            &chain_plans[i - (t + 1)];
+                        let vit = vi.transposed();
+                        let mut w_s = MatrixF64::zeros(bi, bw);
+                        gemm_blocked(
+                            cfg_w_i, kern_w_i, 1.0, vit.view(), a2s.view(), 0.0,
+                            &mut w_s.view_mut(), &mut wsg,
+                        );
+                        let tit = ti.transposed();
+                        let mut tw_s = MatrixF64::zeros(bi, bw);
+                        gemm_blocked(
+                            cfg_t_i, kern_t_i, 1.0, tit.view(), w_s.view(), 0.0,
+                            &mut tw_s.view_mut(), &mut wsg,
+                        );
+                        let mut c_s = shared.sub(ci - k, wc, ri, bw).view_mut();
+                        gemm_blocked(
+                            cfg_u_i, kern_u_i, -1.0, vi.view(), tw_s.view(), 1.0, &mut c_s,
+                            &mut wsg,
+                        );
+                    }
+                }
+                // Panel w is ready: factor it and record its tau.
+                // SAFETY: as above.
+                let mut pv = unsafe { shared.sub(cw - k, wc, m - cw, bw).view_mut() };
+                let mut tw_tau = vec![0.0f64; bw];
+                geqr2(&mut pv, &mut tw_tau);
+                taus[wi] = tw_tau;
+            }
+        };
+        engine.gemm_fused_trailing_ranges(
+            -1.0,
+            v.view(),
+            tw_full.view(),
+            &mut a2m,
+            &head,
+            tail,
+            1,
+            false, // never queue-empty: empty jobs are skipped above
+            &chain,
+        );
+        let taus = tau_next.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+        for (wi, w) in (nf..nf_new).enumerate() {
+            let cw = col_of(w);
+            tau[cw..cw + taus[wi].len()].copy_from_slice(&taus[wi]);
+        }
+        nf = nf_new;
+    }
 }
 
 #[cfg(test)]

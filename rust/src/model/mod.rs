@@ -12,6 +12,10 @@
 //!   Figure 6 (left).
 //! - [`selector`] — the runtime co-design selection of (micro-kernel,
 //!   CCPs) per GEMM call (§5's "no longer monolithic" message).
+//! - [`teamsize`] — the panel/update thread-split selector for the
+//!   lookahead pipeline: the same cost model that picks the CCPs also
+//!   picks `t_p` per factorization iteration, memoized like the config
+//!   cache.
 
 pub mod analytical;
 pub mod autotune;
@@ -20,6 +24,7 @@ pub mod microkernel;
 pub mod occupancy;
 pub mod refined;
 pub mod selector;
+pub mod teamsize;
 
 pub use analytical::{l1_allocation, l2_allocation, l3_allocation, original_ccp, WayAlloc};
 pub use ccp::{blis_static, Ccp, GemmDims};
@@ -27,3 +32,4 @@ pub use microkernel::MicroKernel;
 pub use occupancy::{occupancy_row, OccupancyRow};
 pub use refined::refined_ccp;
 pub use selector::{select, AnalyticScorer, Scorer, Selection};
+pub use teamsize::{PanelShape, TeamSizeSelector, TeamSizeStats};

@@ -1,0 +1,273 @@
+//! Model-driven panel-team sizing for the lookahead pipeline: the same
+//! analytical machinery that picks `mc`/`kc`/`nc` also picks the thread
+//! split `t_p` (panel sub-team) vs `threads - t_p` (update sub-team).
+//!
+//! The balance the paper calls "delicate" (multi-threaded parallelism vs
+//! cache usage) shows up in the fused factorization job as a min-max
+//! problem: the job ends when *both* halves finish, so the best split
+//! minimizes `max(T_panel(t_p), T_update(threads - t_p))`.
+//!
+//! - `T_update` comes from the existing [`AnalyticScorer`] — the per-call
+//!   cache-cost estimate of the trailing sweep under the *selected*
+//!   configuration, divided by the update-team width (the G4 `jr`
+//!   partition scales near-linearly at `nr` grain).
+//! - `T_panel` is a critical-path model of the unblocked panel kernel
+//!   (`getf2`-shaped): per column, the pivot search and multiplier
+//!   scaling are leader-sequential, the trailing rank-1 update splits
+//!   over the sub-team by column, and every step pays a sub-team barrier
+//!   round that grows with the team width. A wider panel team shortens
+//!   the parallel term but buys nothing on the serial or sync terms, so
+//!   the right `t_p` moves with the panel/update balance every iteration
+//!   — Catalán et al.'s malleable thread-level parallelism, driven here
+//!   by the same model that picks the CCPs.
+//!
+//! Selections are memoized on the full problem key, mirroring the
+//! engine's config-selection cache: a factorization sweep re-sees the
+//! same shrinking shapes across repeated calls, and the hot path must
+//! not allocate (a hit is one hash lookup returning a `usize`).
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+use crate::arch::Arch;
+use crate::model::ccp::GemmConfig;
+use crate::model::selector::{AnalyticScorer, Scorer};
+use crate::model::GemmDims;
+
+/// Shape of the panel the sub-team factors (`rows x cols`, rows counted
+/// from the panel's diagonal block down to the matrix edge).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PanelShape {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl PanelShape {
+    pub const fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols }
+    }
+}
+
+/// Hit/miss accounting of the team-size memo cache (exposed alongside
+/// the engine's config-cache stats).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TeamSizeStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct Key {
+    threads: usize,
+    panel: PanelShape,
+    update: GemmDims,
+    cfg: GemmConfig,
+}
+
+/// Efficiency of the scalar panel kernel relative to one core's peak
+/// (latency-bound AXPYs over a tall panel; no SIMD, no blocking).
+const PANEL_EFF: f64 = 0.08;
+/// Cost of one sub-team barrier round, in seconds (condvar wake +
+/// cacheline ping). Only paid when the panel team is wider than one.
+const BARRIER_S: f64 = 3.0e-7;
+/// Barrier rounds per `getf2` column step (pivot publish, swap, scale,
+/// update — see `getf2_team`).
+const BARRIERS_PER_STEP: f64 = 4.0;
+
+/// Memoizing `t_p` selector. Interior-mutable like the engine's config
+/// cache so `&self` lookups work from the drivers' hot loop.
+#[derive(Default)]
+pub struct TeamSizeSelector {
+    cache: RefCell<HashMap<Key, usize>>,
+    stats: Cell<TeamSizeStats>,
+}
+
+impl TeamSizeSelector {
+    /// Bound mirroring `GemmEngine::CONFIG_CACHE_CAP`: flush-on-overflow
+    /// keeps a long-lived server engine from growing without bound.
+    const CACHE_CAP: usize = 4096;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Estimated seconds for the panel critical path on a `t_p`-wide
+    /// sub-team.
+    fn panel_time(arch: &Arch, panel: PanelShape, t_p: usize) -> f64 {
+        let steps = panel.rows.min(panel.cols);
+        let (mut serial_flops, mut par_flops) = (0.0f64, 0.0f64);
+        for j in 0..steps {
+            let below = (panel.rows - j) as f64;
+            let right = panel.cols.saturating_sub(j + 1) as f64;
+            // Pivot search + multiplier scaling: leader-only.
+            serial_flops += 2.0 * below;
+            // Rank-1 update of the trailing sub-panel: column-split.
+            par_flops += 2.0 * below * right;
+        }
+        let rate = arch.peak_gflops_core() * 1e9 * PANEL_EFF;
+        // Barrier rounds cost more the wider the team (one wake + one
+        // cacheline ping per extra rank), so the panel time has a real
+        // minimum in t_p and oversizing the panel team is penalized.
+        let sync = steps as f64 * BARRIERS_PER_STEP * BARRIER_S * (t_p - 1) as f64;
+        serial_flops / rate + par_flops / (rate * t_p as f64) + sync
+    }
+
+    /// Run the min-max balance (uncached).
+    fn compute(arch: &Arch, key: &Key) -> usize {
+        let t = key.threads;
+        if t <= 2 {
+            return 1;
+        }
+        // Single-core trailing-sweep estimate from the cache model, under
+        // the configuration the engine actually selected for this shape.
+        let update_1 = AnalyticScorer.score(arch, key.update, key.cfg.mk, key.cfg.ccp);
+        // More ranks than panel columns cannot help the column-split
+        // kernel.
+        let t_max = (t - 1).min(key.panel.cols.max(1));
+        let mut best = (1usize, f64::INFINITY);
+        for t_p in 1..=t_max {
+            let t_u = (t - t_p) as f64;
+            let cost = Self::panel_time(arch, key.panel, t_p).max(update_1 / t_u);
+            // Strict improvement keeps the smallest t_p on ties: spare
+            // ranks help the wide sweep more than the thin panel.
+            if cost < best.1 {
+                best = (t_p, cost);
+            }
+        }
+        best.0
+    }
+
+    /// The model's `t_p` for one fused iteration: panel shape, trailing
+    /// sweep dims (the columns the update team will cover), the selected
+    /// GEMM configuration and the team width. Memoized; a hit is
+    /// allocation-free.
+    pub fn select(
+        &self,
+        arch: &Arch,
+        cfg: GemmConfig,
+        panel: PanelShape,
+        update: GemmDims,
+        threads: usize,
+    ) -> usize {
+        let key = Key { threads, panel, update, cfg };
+        if let Some(&t_p) = self.cache.borrow().get(&key) {
+            let mut s = self.stats.get();
+            s.hits += 1;
+            self.stats.set(s);
+            return t_p;
+        }
+        let t_p = Self::compute(arch, &key);
+        {
+            let mut cache = self.cache.borrow_mut();
+            if cache.len() >= Self::CACHE_CAP {
+                cache.clear();
+            }
+            cache.insert(key, t_p);
+        }
+        let mut s = self.stats.get();
+        s.misses += 1;
+        self.stats.set(s);
+        t_p
+    }
+
+    pub fn stats(&self) -> TeamSizeStats {
+        self.stats.get()
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.borrow().is_empty()
+    }
+
+    pub fn clear(&self) {
+        self.cache.borrow_mut().clear();
+        self.stats.set(TeamSizeStats::default());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::host_xeon;
+    use crate::model::{refined_ccp, MicroKernel};
+
+    fn cfg_for(arch: &Arch, dims: GemmDims) -> GemmConfig {
+        let mk = MicroKernel::new(8, 6);
+        GemmConfig { mk, ccp: refined_ccp(arch, mk, dims).clamp_to(dims) }
+    }
+
+    #[test]
+    fn narrow_teams_get_one_panel_rank() {
+        let arch = host_xeon();
+        let sel = TeamSizeSelector::new();
+        let dims = GemmDims::new(512, 512, 64);
+        let cfg = cfg_for(&arch, dims);
+        assert_eq!(sel.select(&arch, cfg, PanelShape::new(512, 64), dims, 1), 1);
+        assert_eq!(sel.select(&arch, cfg, PanelShape::new(512, 64), dims, 2), 1);
+    }
+
+    #[test]
+    fn split_always_leaves_a_nonempty_update_team() {
+        let arch = host_xeon();
+        let sel = TeamSizeSelector::new();
+        for threads in [3, 4, 8, 16] {
+            for s in [64usize, 256, 1024, 4096] {
+                let dims = GemmDims::new(s, s, 64);
+                let cfg = cfg_for(&arch, dims);
+                let t_p = sel.select(&arch, cfg, PanelShape::new(s, 64), dims, threads);
+                assert!(t_p >= 1 && t_p < threads, "t_p={t_p} threads={threads} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn team_size_tracks_the_update_panel_balance() {
+        // Malleability: with the panel shape held fixed, a *larger*
+        // trailing sweep must never get a larger panel team — the update
+        // needs those ranks more. (The min-max of a decreasing panel
+        // curve against an increasing update curve moves its crossing
+        // left as the update grows.)
+        let arch = host_xeon();
+        let sel = TeamSizeSelector::new();
+        let threads = 16;
+        let b = 128;
+        let panel = PanelShape::new(2048, b);
+        let cfg = cfg_for(&arch, GemmDims::new(2048, 2048, b));
+        let picks: Vec<usize> = [256usize, 1024, 4096, 16384, 65536]
+            .into_iter()
+            .map(|n| sel.select(&arch, cfg, panel, GemmDims::new(2048, n, b), threads))
+            .collect();
+        for w in picks.windows(2) {
+            assert!(w[1] <= w[0], "t_p grew with the trailing sweep: {picks:?}");
+        }
+        assert!(picks.iter().all(|&t| (1..threads).contains(&t)), "{picks:?}");
+        // And a panel team never exceeds the panel's column count.
+        let thin = PanelShape::new(4096, 2);
+        let t_p = sel.select(&arch, cfg, thin, GemmDims::new(64, 64, 2), threads);
+        assert!(t_p <= 2, "2-column panel cannot use {t_p} ranks");
+    }
+
+    #[test]
+    fn selections_are_memoized_with_stats() {
+        let arch = host_xeon();
+        let sel = TeamSizeSelector::new();
+        let dims = GemmDims::new(1024, 1024, 128);
+        let cfg = cfg_for(&arch, dims);
+        let first = sel.select(&arch, cfg, PanelShape::new(1024, 128), dims, 8);
+        assert_eq!(sel.stats(), TeamSizeStats { hits: 0, misses: 1 });
+        for _ in 0..3 {
+            assert_eq!(sel.select(&arch, cfg, PanelShape::new(1024, 128), dims, 8), first);
+        }
+        assert_eq!(sel.stats(), TeamSizeStats { hits: 3, misses: 1 });
+        assert_eq!(sel.len(), 1);
+        // A different team width is a different key.
+        sel.select(&arch, cfg, PanelShape::new(1024, 128), dims, 4);
+        assert_eq!(sel.stats().misses, 2);
+        sel.clear();
+        assert_eq!(sel.stats(), TeamSizeStats::default());
+        assert!(sel.is_empty());
+    }
+}

@@ -33,7 +33,7 @@ pub use convert::{literal_to_matrix, matrix_to_literal};
 #[cfg(feature = "pjrt")]
 pub use registry::{Artifact, ArtifactKind, Registry};
 
-pub use pool::{PoolCtx, PoolStats, SubTeam, WorkerPool};
+pub use pool::{PinPolicy, PoolCtx, PoolStats, SubTeam, WorkerPool};
 
 #[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};

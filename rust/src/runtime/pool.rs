@@ -68,6 +68,81 @@ use std::time::Instant;
 
 use crate::gemm::blocked::Workspace;
 
+/// Core-affinity placement for the pool workers (the first step of the
+/// ROADMAP NUMA item): pinning each worker at spawn means the pinned
+/// [`Workspace`] buffers it grows inside jobs are first-touched on its
+/// own core. `DLA_PIN=compact|scatter|none` selects the policy for pools
+/// built with [`WorkerPool::new`]; the default is `None` (no pinning —
+/// the sandbox and CI hosts often expose a single core).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PinPolicy {
+    /// No affinity calls at all.
+    #[default]
+    None,
+    /// Worker rank `r` pins to core `r % cores` (ranks packed onto
+    /// adjacent cores; best when the team shares an L2/L3 slice).
+    Compact,
+    /// Worker rank `r` pins to core `(r * stride) % cores` with
+    /// `stride = max(1, cores / team)` (ranks spread across the chip;
+    /// best when each wants private cache and memory bandwidth).
+    Scatter,
+}
+
+impl PinPolicy {
+    /// Parse `DLA_PIN`; unset, empty or unknown values mean [`Self::None`].
+    pub fn from_env() -> Self {
+        match std::env::var("DLA_PIN").ok().as_deref().map(str::trim) {
+            Some("compact") => Self::Compact,
+            Some("scatter") => Self::Scatter,
+            _ => Self::None,
+        }
+    }
+
+    /// The core a worker of `rank` (in a `threads`-wide team) pins to,
+    /// or `None` when the policy disables pinning.
+    fn core_for(self, rank: usize, threads: usize, cores: usize) -> Option<usize> {
+        if cores == 0 {
+            return None;
+        }
+        match self {
+            Self::None => None,
+            Self::Compact => Some(rank % cores),
+            Self::Scatter => {
+                let stride = (cores / threads.max(1)).max(1);
+                Some((rank * stride) % cores)
+            }
+        }
+    }
+}
+
+/// Pin the calling thread to `core` (Linux only; a no-op elsewhere).
+/// Uses the glibc symbol std already links, so no extra dependency.
+#[cfg(target_os = "linux")]
+fn pin_current_thread(core: usize) {
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    const MASK_WORDS: usize = 16; // 1024 CPUs
+    let mut mask = [0u64; MASK_WORDS];
+    let word = (core / 64) % MASK_WORDS;
+    mask[word] |= 1u64 << (core % 64);
+    // Best effort: a failure (e.g. a cgroup that excludes the core) just
+    // leaves the thread unpinned.
+    unsafe {
+        sched_setaffinity(0, MASK_WORDS * 8, mask.as_ptr());
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_current_thread(_core: usize) {}
+
+fn apply_pin(policy: PinPolicy, rank: usize, threads: usize) {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if let Some(core) = policy.core_for(rank, threads, cores) {
+        pin_current_thread(core);
+    }
+}
+
 /// The job signature: executed once per rank, in parallel. As a bare
 /// type alias the trait object's default lifetime is `'static`, which is
 /// exactly what the broadcast slot stores; `run` instead spells its
@@ -107,6 +182,17 @@ struct Shared {
     /// Nanoseconds between the end of one job and the start of the next
     /// (the whole team parked; the classic factorization serial section).
     idle_ns: AtomicU64,
+    /// Rank-nanoseconds the *panel* sub-team of split jobs spent blocked
+    /// at the rejoin barrier (its panel work finished before the trailing
+    /// sweep did). See [`PoolCtx::rejoin_timed`].
+    panel_idle_ns: AtomicU64,
+    /// Rank-nanoseconds the *update* sub-team spent blocked at the rejoin
+    /// barrier (the trailing sweep finished before the panel work).
+    update_idle_ns: AtomicU64,
+    /// Rank-nanoseconds panel-team ranks spent at the rejoin barrier of
+    /// jobs whose panel queue was **empty** (nothing left to factor ahead
+    /// — the lookahead pipeline's ramp-down stall).
+    queue_stall_ns: AtomicU64,
     /// End of the most recent job, for the idle-gap accounting.
     last_job_end: Mutex<Option<Instant>>,
     workspaces: Vec<Mutex<Workspace>>,
@@ -216,6 +302,33 @@ impl<'p> PoolCtx<'p> {
         lock_pool(&self.shared.workspaces[self.rank])
     }
 
+    /// The rejoin barrier of a split job, with per-phase idle accounting:
+    /// this rank's wait time is attributed to its sub-team — panel-team
+    /// waits count as `panel_idle_ns` (or `queue_stall_ns` when the
+    /// caller flags that the panel queue was empty, i.e. the panel team
+    /// had nothing to factor ahead), update-team waits as
+    /// `update_idle_ns`. All counters are **rank-nanoseconds** (summed
+    /// over ranks). Synchronization-equivalent to [`PoolCtx::barrier`];
+    /// every rank of the job must call it the same way.
+    pub fn rejoin_timed(&self, sub: &SubTeam<'_>, queue_empty: bool) {
+        if self.threads <= 1 {
+            return;
+        }
+        let t0 = Instant::now();
+        self.shared.barrier.wait();
+        let waited = t0.elapsed().as_nanos() as u64;
+        let slot = if sub.panel {
+            if queue_empty {
+                &self.shared.queue_stall_ns
+            } else {
+                &self.shared.panel_idle_ns
+            }
+        } else {
+            &self.shared.update_idle_ns
+        };
+        slot.fetch_add(waited, Ordering::Relaxed);
+    }
+
     /// Split the team into a *panel* sub-team (ranks `< panel_workers`,
     /// leader included) and an *update* sub-team (the rest), each with an
     /// independent reusable barrier. Every rank of the job must call this
@@ -285,6 +398,15 @@ pub struct PoolStats {
     pub leader_wait_ns: u64,
     /// Wall time between jobs — the whole team parked — in nanoseconds.
     pub idle_ns: u64,
+    /// Rank-nanoseconds panel-team ranks waited at split-job rejoins with
+    /// panel work done (the update sweep was the long pole).
+    pub panel_idle_ns: u64,
+    /// Rank-nanoseconds update-team ranks waited at split-job rejoins
+    /// (the panel critical path was the long pole).
+    pub update_idle_ns: u64,
+    /// Rank-nanoseconds panel-team ranks waited at rejoins of jobs whose
+    /// panel queue was empty (lookahead ramp-down: nothing to factor).
+    pub queue_stall_ns: u64,
 }
 
 /// A persistent team of `threads - 1` parked workers plus the caller.
@@ -297,9 +419,19 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Spawn the team. `threads` counts the caller, so `new(1)` spawns
-    /// nothing and `run` executes jobs inline.
+    /// Spawn the team with the affinity policy from the `DLA_PIN`
+    /// environment variable (default: no pinning). `threads` counts the
+    /// caller, so `new(1)` spawns nothing and `run` executes jobs inline.
     pub fn new(threads: usize) -> Self {
+        Self::with_pinning(threads, PinPolicy::from_env())
+    }
+
+    /// Spawn the team with an explicit [`PinPolicy`]. Each worker pins
+    /// itself as the very first thing it does, before touching its
+    /// workspace, so buffer growth inside jobs is first-touched on the
+    /// pinned core. The caller (rank 0) is never pinned — it is the
+    /// application's thread.
+    pub fn with_pinning(threads: usize, pin: PinPolicy) -> Self {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
@@ -317,6 +449,9 @@ impl WorkerPool {
             jobs: AtomicU64::new(0),
             leader_wait_ns: AtomicU64::new(0),
             idle_ns: AtomicU64::new(0),
+            panel_idle_ns: AtomicU64::new(0),
+            update_idle_ns: AtomicU64::new(0),
+            queue_stall_ns: AtomicU64::new(0),
             last_job_end: Mutex::new(None),
             workspaces: (0..threads).map(|_| Mutex::new(Workspace::new())).collect(),
         });
@@ -325,7 +460,7 @@ impl WorkerPool {
             let sh = Arc::clone(&shared);
             let h = std::thread::Builder::new()
                 .name(format!("gemm-pool-{rank}"))
-                .spawn(move || worker_loop(sh, rank))
+                .spawn(move || worker_loop(sh, rank, pin))
                 .expect("spawning pool worker");
             handles.push(h);
         }
@@ -361,6 +496,9 @@ impl WorkerPool {
             jobs: self.shared.jobs.load(Ordering::Relaxed),
             leader_wait_ns: self.shared.leader_wait_ns.load(Ordering::Relaxed),
             idle_ns: self.shared.idle_ns.load(Ordering::Relaxed),
+            panel_idle_ns: self.shared.panel_idle_ns.load(Ordering::Relaxed),
+            update_idle_ns: self.shared.update_idle_ns.load(Ordering::Relaxed),
+            queue_stall_ns: self.shared.queue_stall_ns.load(Ordering::Relaxed),
         }
     }
 
@@ -464,9 +602,10 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>, rank: usize) {
-    shared.births.fetch_add(1, Ordering::SeqCst);
+fn worker_loop(shared: Arc<Shared>, rank: usize, pin: PinPolicy) {
     let threads = shared.workspaces.len();
+    apply_pin(pin, rank, threads);
+    shared.births.fetch_add(1, Ordering::SeqCst);
     let mut seen = 0u64;
     loop {
         let job = {
@@ -736,6 +875,62 @@ mod tests {
             ctx.barrier();
         });
         assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn pin_policy_core_assignment() {
+        assert_eq!(PinPolicy::None.core_for(0, 4, 8), None);
+        assert_eq!(PinPolicy::Compact.core_for(3, 4, 8), Some(3));
+        assert_eq!(PinPolicy::Compact.core_for(9, 4, 8), Some(1));
+        // Scatter spreads a 4-wide team over 8 cores at stride 2.
+        assert_eq!(PinPolicy::Scatter.core_for(1, 4, 8), Some(2));
+        assert_eq!(PinPolicy::Scatter.core_for(3, 4, 8), Some(6));
+        // More ranks than cores wraps; zero cores disables.
+        assert_eq!(PinPolicy::Scatter.core_for(5, 8, 2), Some(1));
+        assert_eq!(PinPolicy::Compact.core_for(0, 4, 0), None);
+    }
+
+    #[test]
+    fn pinned_pool_still_broadcasts() {
+        // Pinning is best-effort; on any host the pool must stay correct.
+        for pin in [PinPolicy::Compact, PinPolicy::Scatter] {
+            let pool = WorkerPool::with_pinning(3, pin);
+            let hits = AtomicU64::new(0);
+            pool.run(&|ctx| {
+                ctx.barrier();
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(hits.load(Ordering::SeqCst), 3, "{pin:?}");
+        }
+    }
+
+    #[test]
+    fn rejoin_timed_attributes_phase_idle() {
+        let pool = WorkerPool::new(3);
+        // Panel team finishes instantly; update team sleeps: the panel
+        // ranks' rejoin wait must land in panel_idle_ns.
+        pool.run(&|ctx| {
+            let sub = ctx.split(1);
+            if !sub.panel {
+                std::thread::sleep(std::time::Duration::from_millis(8));
+            }
+            ctx.rejoin_timed(&sub, false);
+        });
+        let s = pool.stats();
+        assert!(s.panel_idle_ns >= 4_000_000, "panel idle not accounted: {s:?}");
+        // Update team waits on a slow panel with an empty queue: the
+        // panel wait is a queue stall, the update wait is update idle.
+        pool.run(&|ctx| {
+            let sub = ctx.split(1);
+            if sub.panel {
+                std::thread::sleep(std::time::Duration::from_millis(8));
+            }
+            ctx.rejoin_timed(&sub, true);
+        });
+        let s2 = pool.stats();
+        assert!(s2.update_idle_ns >= 4_000_000, "update idle not accounted: {s2:?}");
+        // The empty-queue flag only classifies *panel* waits.
+        assert_eq!(s2.panel_idle_ns, s.panel_idle_ns);
     }
 
     #[test]

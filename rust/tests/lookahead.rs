@@ -1,18 +1,23 @@
-//! Lookahead-vs-baseline equivalence suite (ISSUE 2 acceptance): the
-//! fused split-team pipeline must be a pure *scheduling* change — for LU,
+//! Lookahead-vs-baseline equivalence suite (ISSUE 2 + ISSUE 3
+//! acceptance): the fused pipeline — static depth-1 and the dynamic
+//! deep work-queue alike — must be a pure *scheduling* change. For LU,
 //! pivot vectors and factors bitwise identical to the non-lookahead
-//! pooled path; for QR and Cholesky, identical factors — across thread
-//! counts, panel-team widths and non-divisible block sizes, with the
-//! pool's no-spawn invariant intact.
+//! pooled path; for QR and Cholesky, identical factors — across
+//! depth ∈ {1, 2, 3}, thread counts {1, 2, 4}, panel-team policies
+//! (model-driven, pinned, per-iteration schedule) and non-divisible
+//! block sizes, with the pool's no-spawn invariant intact.
 //!
 //! The `DLA_THREADS` environment variable (set by the CI matrix to 1 and
 //! 4) adds that team width to the sweep, so both pool shapes are
-//! exercised by the tier-1 job.
+//! exercised by the tier-1 job; `DLA_LOOKAHEAD=2` in the CI matrix flips
+//! every un-pinned engine in the whole test suite onto the depth-2 queue.
 
 use std::sync::Arc;
 
+use dla_codesign::gemm::{
+    ConfigMode, GemmEngine, Lookahead, ParallelLoop, ThreadPlan, AUTO_PANEL_WORKERS,
+};
 use dla_codesign::arch::host_xeon;
-use dla_codesign::gemm::{ConfigMode, GemmEngine, Lookahead, ParallelLoop, ThreadPlan};
 use dla_codesign::lapack::{self, cholesky::cholesky_blocked, lu_factor, qr_blocked};
 use dla_codesign::util::{MatrixF64, Pcg64};
 
@@ -34,68 +39,130 @@ fn thread_sweep() -> Vec<usize> {
     t
 }
 
+/// Depths under test; panel-team policies per depth (model-driven AUTO
+/// and a pinned 1-rank team — t_p must never change results).
+const DEPTHS: [usize; 3] = [1, 2, 3];
+
+fn spd(s: usize, rng: &mut Pcg64) -> MatrixF64 {
+    let m = MatrixF64::random(s, s, rng);
+    let mt = m.transposed();
+    let mut a = MatrixF64::zeros(s, s);
+    dla_codesign::gemm::gemm_reference(1.0, m.view(), mt.view(), 0.0, &mut a.view_mut());
+    for i in 0..s {
+        a[(i, i)] += s as f64;
+    }
+    a
+}
+
 #[test]
 fn lu_lookahead_bitwise_identical_to_baseline() {
     let mut rng = Pcg64::seed(1001);
     // Non-divisible block sizes on purpose: 37/5, 50/8, 96/32 leave
-    // short trailing panels and nr-misaligned column splits.
+    // short trailing panels and nr-misaligned column splits; 37/5 runs
+    // 8 panels, deep enough for the depth-3 window to ramp up and down.
     for (s, b) in [(37, 5), (50, 8), (96, 32), (64, 16)] {
         let a0 = MatrixF64::random(s, s, &mut rng);
         for threads in thread_sweep() {
             let base = lu_factor(&a0, b, &mut engine(threads, Lookahead::disabled())).unwrap();
-            for t_p in [1, 2] {
-                let la = Lookahead { depth: 1, panel_workers: t_p };
-                let fused = lu_factor(&a0, b, &mut engine(threads, la)).unwrap();
-                assert_eq!(
-                    fused.pivots, base.pivots,
-                    "s={s} b={b} x{threads} t_p={t_p}: pivot vectors differ"
-                );
-                assert_eq!(
-                    fused.lu.max_abs_diff(&base.lu),
-                    0.0,
-                    "s={s} b={b} x{threads} t_p={t_p}: factors not bitwise identical"
-                );
-                let err = fused.reconstruction_error(&a0);
-                assert!(err < 1e-10, "s={s} b={b} x{threads} t_p={t_p}: |PA-LU| = {err}");
+            for depth in DEPTHS {
+                for t_p in [AUTO_PANEL_WORKERS, 1] {
+                    let la = Lookahead { depth, panel_workers: t_p };
+                    let fused = lu_factor(&a0, b, &mut engine(threads, la)).unwrap();
+                    assert_eq!(
+                        fused.pivots, base.pivots,
+                        "s={s} b={b} x{threads} d={depth} t_p={t_p}: pivot vectors differ"
+                    );
+                    assert_eq!(
+                        fused.lu.max_abs_diff(&base.lu),
+                        0.0,
+                        "s={s} b={b} x{threads} d={depth} t_p={t_p}: factors not bitwise identical"
+                    );
+                    let err = fused.reconstruction_error(&a0);
+                    assert!(err < 1e-10, "s={s} b={b} x{threads} d={depth} t_p={t_p}: {err}");
+                }
             }
         }
     }
 }
 
 #[test]
+fn lu_deep_lookahead_with_wide_panel_team() {
+    // Cooperative getf2_team inside the deep chain with t_p = 2: the
+    // factored-ahead panels are factored by a multi-rank sub-team.
+    let mut rng = Pcg64::seed(1006);
+    let a0 = MatrixF64::random(60, 60, &mut rng);
+    let base = lu_factor(&a0, 8, &mut engine(4, Lookahead::disabled())).unwrap();
+    for depth in [2, 3] {
+        let fused =
+            lu_factor(&a0, 8, &mut engine(4, Lookahead { depth, panel_workers: 2 })).unwrap();
+        assert_eq!(fused.pivots, base.pivots, "d={depth}");
+        assert_eq!(fused.lu.max_abs_diff(&base.lu), 0.0, "d={depth}");
+    }
+}
+
+#[test]
+fn lu_shrinking_panel_schedule_is_bitwise_exact() {
+    // A forced per-iteration t_p schedule (the malleability hook): the
+    // panel team shrinks 2 -> 2 -> 1 across iterations and results must
+    // not move a bit. The env var only affects engines with AUTO t_p,
+    // and t_p never changes arithmetic, so this is safe under parallel
+    // test threads.
+    let mut rng = Pcg64::seed(1007);
+    let a0 = MatrixF64::random(96, 96, &mut rng);
+    let base = lu_factor(&a0, 16, &mut engine(4, Lookahead::disabled())).unwrap();
+    std::env::set_var("DLA_PANEL_WORKERS", "2,2,1");
+    let result = std::panic::catch_unwind(|| {
+        let mut fused_engines: Vec<_> = DEPTHS
+            .iter()
+            .map(|&depth| engine(4, Lookahead { depth, panel_workers: AUTO_PANEL_WORKERS }))
+            .collect();
+        fused_engines
+            .iter_mut()
+            .map(|eng| lu_factor(&a0, 16, eng).unwrap())
+            .collect::<Vec<_>>()
+    });
+    std::env::remove_var("DLA_PANEL_WORKERS");
+    let factors = result.unwrap_or_else(|e| std::panic::resume_unwind(e));
+    for (d, fused) in DEPTHS.iter().zip(factors) {
+        assert_eq!(fused.pivots, base.pivots, "depth {d}: schedule changed pivots");
+        assert_eq!(fused.lu.max_abs_diff(&base.lu), 0.0, "depth {d}: schedule changed factors");
+    }
+}
+
+#[test]
 fn lu_lookahead_detects_singularity_like_baseline() {
-    // Column 3 duplicates column 2: both paths must fail at the same
-    // column.
+    // Column 3 duplicates column 2: every path must fail at the same
+    // column, including when the failure is discovered early by a
+    // factored-ahead panel.
     let mut a = MatrixF64::identity(12);
     for i in 0..12 {
         let v = a[(i, 2)];
         a[(i, 3)] = v;
     }
     let base = lu_factor(&a, 4, &mut engine(2, Lookahead::disabled()));
-    let fused = lu_factor(&a, 4, &mut engine(2, Lookahead { depth: 1, panel_workers: 1 }));
-    let (Err(jb), Err(jf)) = (base.map(|_| ()), fused.map(|_| ())) else {
-        panic!("rank-deficient matrix must be detected on both paths");
+    let Err(jb) = base.map(|_| ()) else {
+        panic!("rank-deficient matrix must be detected on the baseline");
     };
-    assert_eq!(jb, jf, "failing column must agree");
+    for depth in DEPTHS {
+        let la = Lookahead { depth, panel_workers: 1 };
+        let fused = lu_factor(&a, 4, &mut engine(2, la));
+        let Err(jf) = fused.map(|_| ()) else {
+            panic!("rank-deficient matrix must be detected at depth {depth}");
+        };
+        assert_eq!(jb, jf, "failing column must agree at depth {depth}");
+    }
 }
 
 #[test]
 fn cholesky_lookahead_matches_baseline() {
     let mut rng = Pcg64::seed(1002);
     for (s, b) in [(45, 8), (33, 7), (64, 16)] {
-        // SPD input: M M^T + s I.
-        let m = MatrixF64::random(s, s, &mut rng);
-        let mt = m.transposed();
-        let mut a0 = MatrixF64::zeros(s, s);
-        dla_codesign::gemm::gemm_reference(1.0, m.view(), mt.view(), 0.0, &mut a0.view_mut());
-        for i in 0..s {
-            a0[(i, i)] += s as f64;
-        }
+        let a0 = spd(s, &mut rng);
         for threads in thread_sweep() {
             let mut base = a0.clone();
             cholesky_blocked(&mut base, b, &mut engine(threads, Lookahead::disabled())).unwrap();
-            for t_p in [1, 2] {
-                let la = Lookahead { depth: 1, panel_workers: t_p };
+            for depth in DEPTHS {
+                let la = Lookahead { depth, panel_workers: AUTO_PANEL_WORKERS };
                 let mut fused = a0.clone();
                 cholesky_blocked(&mut fused, b, &mut engine(threads, la)).unwrap();
                 // Compare the lower triangles (the upper is workspace).
@@ -104,14 +171,30 @@ fn cholesky_lookahead_matches_baseline() {
                         assert_eq!(
                             fused[(i, j)].to_bits(),
                             base[(i, j)].to_bits(),
-                            "s={s} b={b} x{threads} t_p={t_p}: L({i},{j}) differs"
+                            "s={s} b={b} x{threads} d={depth}: L({i},{j}) differs"
                         );
                     }
                 }
                 let res = lapack::cholesky::cholesky_residual(&a0, &fused);
-                assert!(res < 1e-11, "s={s} b={b} x{threads} t_p={t_p}: residual {res}");
+                assert!(res < 1e-11, "s={s} b={b} x{threads} d={depth}: residual {res}");
             }
         }
+    }
+}
+
+#[test]
+fn cholesky_deep_lookahead_detects_non_spd_like_baseline() {
+    let mut a0 = MatrixF64::identity(24);
+    a0[(17, 17)] = -1.0;
+    let mut base = a0.clone();
+    let be = cholesky_blocked(&mut base, 4, &mut engine(2, Lookahead::disabled()));
+    let Err(jb) = be else { panic!("non-SPD must be detected") };
+    for depth in DEPTHS {
+        let mut m = a0.clone();
+        let la = Lookahead { depth, panel_workers: AUTO_PANEL_WORKERS };
+        let fe = cholesky_blocked(&mut m, 4, &mut engine(2, la));
+        let Err(jf) = fe else { panic!("non-SPD must be detected at depth {depth}") };
+        assert_eq!(jb, jf, "failing column must agree at depth {depth}");
     }
 }
 
@@ -122,23 +205,23 @@ fn qr_lookahead_matches_baseline() {
         let a0 = MatrixF64::random(m, n, &mut rng);
         for threads in thread_sweep() {
             let base = qr_blocked(&a0, b, &mut engine(threads, Lookahead::disabled()));
-            for t_p in [1, 2] {
-                let la = Lookahead { depth: 1, panel_workers: t_p };
+            for depth in DEPTHS {
+                let la = Lookahead { depth, panel_workers: AUTO_PANEL_WORKERS };
                 let fused = qr_blocked(&a0, b, &mut engine(threads, la));
                 assert_eq!(
                     fused.qr.max_abs_diff(&base.qr),
                     0.0,
-                    "m={m} n={n} b={b} x{threads} t_p={t_p}: packed factors differ"
+                    "m={m} n={n} b={b} x{threads} d={depth}: packed factors differ"
                 );
                 for (j, (tf, tb)) in fused.tau.iter().zip(&base.tau).enumerate() {
                     assert_eq!(
                         tf.to_bits(),
                         tb.to_bits(),
-                        "m={m} n={n} b={b} x{threads} t_p={t_p}: tau[{j}] differs"
+                        "m={m} n={n} b={b} x{threads} d={depth}: tau[{j}] differs"
                     );
                 }
                 let err = fused.reconstruction_error(&a0);
-                assert!(err < 1e-10, "m={m} n={n} b={b} x{threads} t_p={t_p}: |A-QR| = {err}");
+                assert!(err < 1e-10, "m={m} n={n} b={b} x{threads} d={depth}: |A-QR| = {err}");
             }
         }
     }
@@ -146,28 +229,19 @@ fn qr_lookahead_matches_baseline() {
 
 #[test]
 fn lookahead_factorizations_never_spawn_threads() {
-    // The no-spawn invariant under lookahead: the fused jobs, the
-    // sub-team panel factorization and the pooled laswp all run on the
-    // same parked team.
+    // The no-spawn invariant under deep lookahead: the fused jobs, the
+    // chain's factor-ahead work, the sub-team panel factorization and
+    // the pooled laswp all run on the same parked team.
     let mut rng = Pcg64::seed(1004);
     let a0 = MatrixF64::random(96, 96, &mut rng);
-    let mut eng = engine(4, Lookahead { depth: 1, panel_workers: 2 });
+    let mut eng = engine(4, Lookahead { depth: 2, panel_workers: 2 });
     let pool = Arc::clone(eng.pool().expect("parallel plan provisions a pool"));
     assert_eq!(pool.spawned_workers(), 3);
     for _ in 0..3 {
         lu_factor(&a0, 32, &mut eng).unwrap();
     }
-    let spd = {
-        let m = MatrixF64::random(64, 64, &mut rng);
-        let mt = m.transposed();
-        let mut a = MatrixF64::zeros(64, 64);
-        dla_codesign::gemm::gemm_reference(1.0, m.view(), mt.view(), 0.0, &mut a.view_mut());
-        for i in 0..64 {
-            a[(i, i)] += 64.0;
-        }
-        a
-    };
-    let mut chol = spd.clone();
+    let spd_m = spd(64, &mut rng);
+    let mut chol = spd_m.clone();
     cholesky_blocked(&mut chol, 16, &mut eng).unwrap();
     qr_blocked(&a0, 16, &mut eng);
     assert_eq!(
@@ -184,17 +258,42 @@ fn lookahead_reduces_or_preserves_pool_jobs_shape() {
     // Sanity on the pipeline structure rather than wall-clock (the host
     // may be single-core): with lookahead the panel factorization rides
     // inside the fused trailing-update job, so the per-iteration job
-    // count does not grow even though more work moved onto the pool.
+    // count does not grow even though more work moved onto the pool —
+    // and the deep queue skips whole jobs in the ramp-down.
     let mut rng = Pcg64::seed(1005);
     let a0 = MatrixF64::random(96, 96, &mut rng);
-    let mut on = engine(4, Lookahead { depth: 1, panel_workers: 1 });
-    lu_factor(&a0, 16, &mut on).unwrap();
-    let jobs_on = on.pool().unwrap().stats().jobs;
     let mut off = engine(4, Lookahead::disabled());
     lu_factor(&a0, 16, &mut off).unwrap();
     let jobs_off = off.pool().unwrap().stats().jobs;
+    let mut last_jobs = u64::MAX;
+    for depth in DEPTHS {
+        let mut on = engine(4, Lookahead { depth, panel_workers: 1 });
+        lu_factor(&a0, 16, &mut on).unwrap();
+        let jobs_on = on.pool().unwrap().stats().jobs;
+        assert!(
+            jobs_on <= jobs_off,
+            "fused pipeline must not add pool jobs: d={depth} on={jobs_on} off={jobs_off}"
+        );
+        assert!(
+            jobs_on <= last_jobs,
+            "deeper queues must not add pool jobs: d={depth} {jobs_on} > {last_jobs}"
+        );
+        last_jobs = jobs_on;
+    }
+}
+
+#[test]
+fn deep_lookahead_surfaces_phase_idle_counters() {
+    // The per-phase idle split must be populated by the fused rejoins
+    // (which bucket is biggest is host-dependent; the accounting just
+    // has to be wired through).
+    let mut rng = Pcg64::seed(1008);
+    let a0 = MatrixF64::random(96, 96, &mut rng);
+    let mut eng = engine(4, Lookahead { depth: 2, panel_workers: 1 });
+    lu_factor(&a0, 16, &mut eng).unwrap();
+    let s = eng.pool().unwrap().stats();
     assert!(
-        jobs_on <= jobs_off,
-        "fused pipeline must not add pool jobs: on={jobs_on} off={jobs_off}"
+        s.panel_idle_ns + s.update_idle_ns + s.queue_stall_ns > 0,
+        "fused rejoins must record per-phase waits: {s:?}"
     );
 }
