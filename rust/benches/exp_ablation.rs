@@ -23,7 +23,13 @@
 //!    the per-phase pool idle deltas (panel idle / update idle /
 //!    queue-empty stalls) and the team-size selector cache hit-rate.
 //!    Appended to `BENCH_gemm.json` alongside the earlier ablations.
+//! 7. **Batched vs serialized server** — a small-GEMM request mix
+//!    through the coordinator server with the batch scheduler on vs
+//!    pinned off: requests/s, plus the new batch metrics (fused
+//!    dispatch count, mean batch size, per-request queue wait).
+//!    Appended to the same `BENCH_gemm.json`.
 use dla_codesign::arch::detect_host;
+use dla_codesign::coordinator::{BatchPolicy, CoordinatorServer, DlaRequest, ServerConfig};
 use dla_codesign::bench::{BenchGroup, JsonBench};
 use dla_codesign::gemm::microkernel::for_shape;
 use dla_codesign::gemm::parallel::{gemm_parallel, gemm_parallel_spawning};
@@ -351,6 +357,90 @@ fn main() {
         }
     }
     g6.finish("bench_ablation_deep_lookahead");
+
+    // --- 7. batched vs serialized server throughput --------------------
+    // A small-GEMM request mix through the coordinator server: the batch
+    // scheduler coalesces shape-bucketed requests into fused pool epochs
+    // vs the serialized baseline where every request runs one whole pool
+    // dispatch under the leader lock. DLA_BATCH_REQS overrides the mix
+    // size.
+    let nreq: usize =
+        std::env::var("DLA_BATCH_REQS").ok().and_then(|v| v.parse().ok()).unwrap_or(240);
+    println!("=== ablation 7: batched vs serialized server ({nreq} small GEMMs, x{threads}) ===");
+    let shapes: [(usize, usize, usize); 3] = [(48, 48, 32), (32, 64, 16), (64, 32, 24)];
+    let mix_flops: f64 = (0..nreq)
+        .map(|i| {
+            let (m, n, kk) = shapes[i % shapes.len()];
+            2.0 * (m * n * kk) as f64
+        })
+        .sum();
+    let mut g7 = BenchGroup::new("batched vs serialized server (small-GEMM mix)");
+    for batched in [false, true] {
+        let label = if batched { "batched" } else { "serialized" };
+        let policy = if batched {
+            BatchPolicy::default().admit_all()
+        } else {
+            BatchPolicy::disabled()
+        };
+        let server = CoordinatorServer::start(
+            ServerConfig::new(arch.clone(), ConfigMode::Refined)
+                .with_workers(2)
+                .with_gemm_threads(threads)
+                .with_batching(policy),
+        );
+        // One timed pass (no bench reps): the batch counters come from
+        // the server's whole lifetime, so timing exactly one pass keeps
+        // requests/dispatch counts/queue waits mutually consistent.
+        let sw = Stopwatch::start();
+        {
+            let mut rng7 = Pcg64::seed(7);
+            let mut pending = Vec::with_capacity(nreq);
+            for i in 0..nreq {
+                let (m, n, kk) = shapes[i % shapes.len()];
+                pending.push(server.submit(DlaRequest::Gemm {
+                    alpha: 1.0,
+                    a: MatrixF64::random(m, kk, &mut rng7),
+                    b: MatrixF64::random(kk, n, &mut rng7),
+                    beta: 0.0,
+                    c: MatrixF64::zeros(m, n),
+                }));
+            }
+            for rx in pending {
+                rx.recv().unwrap().unwrap();
+            }
+        }
+        let secs = sw.elapsed_secs();
+        g7.record(&format!("{label} x{threads} ({nreq} reqs)"), secs, mix_flops);
+        let metrics = server.shutdown();
+        let bm = metrics.batch_stats().clone();
+        println!(
+            "  {label}: {:.0} req/s, {} fused dispatches (mean size {:.2}), {} solo, \
+             queue-wait mean {:.1} us",
+            nreq as f64 / secs,
+            bm.batches,
+            bm.mean_batch_size(),
+            bm.solo,
+            bm.queue_wait_ns.mean() / 1e3,
+        );
+        j.entry(
+            &format!("server_batching_{}", if batched { "on" } else { "off" }),
+            &[
+                ("threads", threads as f64),
+                ("workers", 2.0),
+                ("requests", nreq as f64),
+                ("mean_seconds", secs),
+                ("req_per_s", nreq as f64 / secs),
+                ("gflops", mix_flops / secs / 1e9),
+                ("fused_dispatches", bm.batches as f64),
+                ("coalesced_requests", bm.coalesced_requests as f64),
+                ("solo_dispatches", bm.solo as f64),
+                ("mean_batch_size", bm.mean_batch_size()),
+                ("queue_wait_mean_us", bm.queue_wait_ns.mean() / 1e3),
+                ("queue_wait_max_us", bm.queue_wait_ns.max.max(0.0) / 1e3),
+            ],
+        );
+    }
+    g7.finish("bench_ablation_server_batching");
 
     match j.write("BENCH_gemm.json") {
         Ok(()) => println!(

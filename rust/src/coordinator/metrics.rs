@@ -3,12 +3,97 @@
 //! between-job parked time, and the lookahead pipeline's per-phase split
 //! — panel-team idle vs update-team idle vs queue-empty stalls) so
 //! lookahead gains are observable in the server, not just in offline
-//! benches.
+//! benches — and the batch scheduler's coalescing counters
+//! ([`BatchMetrics`]: batch-size histogram, coalesced-vs-solo dispatch
+//! counts, per-request admission-queue wait).
 
 use std::collections::BTreeMap;
 
 use crate::runtime::pool::PoolStats;
 use crate::util::stats::{Accumulator, LatencyHistogram};
+
+/// Counters of the server's batched-GEMM admission queue (see
+/// `coordinator::server`): how often small requests actually coalesced,
+/// how big the fused dispatches were, and how long requests waited in
+/// the queue for companions.
+#[derive(Clone, Debug)]
+pub struct BatchMetrics {
+    /// Fused dispatches holding two or more requests.
+    pub batches: u64,
+    /// Requests served inside those fused dispatches.
+    pub coalesced_requests: u64,
+    /// Single-request dispatches (a bucket's wait expired alone).
+    pub solo: u64,
+    /// Dispatch-size histogram: bucket `i` counts dispatches of size
+    /// `i + 1`; the last bucket absorbs everything larger.
+    pub size_hist: [u64; Self::HIST_BUCKETS],
+    /// Per-request admission-queue wait (enqueue → dispatch) in
+    /// nanoseconds.
+    pub queue_wait_ns: Accumulator,
+}
+
+impl Default for BatchMetrics {
+    /// `Accumulator::new()` (not the derived all-zero accumulator) so
+    /// `queue_wait_ns.min` carries the +inf sentinel until the first
+    /// real wait is recorded.
+    fn default() -> Self {
+        Self {
+            batches: 0,
+            coalesced_requests: 0,
+            solo: 0,
+            size_hist: [0; Self::HIST_BUCKETS],
+            queue_wait_ns: Accumulator::new(),
+        }
+    }
+}
+
+impl BatchMetrics {
+    pub const HIST_BUCKETS: usize = 16;
+
+    /// Record one dispatch of `size` requests with the given per-request
+    /// queue waits.
+    pub fn record_dispatch(&mut self, size: usize, waits_ns: &[u64]) {
+        debug_assert_eq!(size, waits_ns.len());
+        if size == 0 {
+            return;
+        }
+        if size >= 2 {
+            self.batches += 1;
+            self.coalesced_requests += size as u64;
+        } else {
+            self.solo += 1;
+        }
+        self.size_hist[(size - 1).min(Self::HIST_BUCKETS - 1)] += 1;
+        for &w in waits_ns {
+            self.queue_wait_ns.add(w as f64);
+        }
+    }
+
+    /// Requests that went through the batcher (coalesced or solo).
+    pub fn total_requests(&self) -> u64 {
+        self.coalesced_requests + self.solo
+    }
+
+    /// Mean requests per dispatch (0 when nothing was dispatched).
+    pub fn mean_batch_size(&self) -> f64 {
+        let dispatches = self.batches + self.solo;
+        if dispatches == 0 {
+            0.0
+        } else {
+            self.total_requests() as f64 / dispatches as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &BatchMetrics) {
+        self.batches += other.batches;
+        self.coalesced_requests += other.coalesced_requests;
+        self.solo += other.solo;
+        for (mine, theirs) in self.size_hist.iter_mut().zip(other.size_hist) {
+            *mine += theirs;
+        }
+        self.queue_wait_ns.merge(&other.queue_wait_ns);
+    }
+}
 
 /// Metrics for one request kind.
 #[derive(Default)]
@@ -25,6 +110,9 @@ pub struct Metrics {
     /// (cumulative since pool construction). `None` for sequential
     /// engines.
     pool: Option<PoolStats>,
+    /// Batched-dispatch accounting (all-zero on servers without
+    /// batching).
+    batch: BatchMetrics,
 }
 
 impl Metrics {
@@ -72,6 +160,16 @@ impl Metrics {
         self.pool
     }
 
+    /// Record one batched dispatch (see [`BatchMetrics::record_dispatch`]).
+    pub fn record_batch_dispatch(&mut self, size: usize, waits_ns: &[u64]) {
+        self.batch.record_dispatch(size, waits_ns);
+    }
+
+    /// The batch scheduler's coalescing counters.
+    pub fn batch_stats(&self) -> &BatchMetrics {
+        &self.batch
+    }
+
     pub fn merge(&mut self, other: Metrics) {
         // Workers of one server share a single pool, so every snapshot
         // observes the same monotone counters: keep the latest (largest
@@ -85,6 +183,7 @@ impl Metrics {
                 self.pool = Some(op);
             }
         }
+        self.batch.merge(&other.batch);
         for (kind, km) in other.kinds {
             let mine = self.kinds.entry(kind).or_default();
             mine.flops.merge(&km.flops);
@@ -131,6 +230,17 @@ impl Metrics {
                 p.queue_stall_ns as f64 / 1e6,
             ));
         }
+        if self.batch.total_requests() > 0 {
+            out.push_str(&format!(
+                "batching: {} fused dispatches ({} coalesced requests, mean size {:.2}), \
+                 {} solo, queue-wait mean {:.1} us\n",
+                self.batch.batches,
+                self.batch.coalesced_requests,
+                self.batch.mean_batch_size(),
+                self.batch.solo,
+                self.batch.queue_wait_ns.mean() / 1e3,
+            ));
+        }
         out
     }
 }
@@ -174,6 +284,35 @@ mod tests {
     }
 
     #[test]
+    fn batch_metrics_count_merge_and_summarize() {
+        let mut a = Metrics::new();
+        assert_eq!(a.batch_stats().total_requests(), 0);
+        assert!(!a.summary().contains("batching:"), "no line without batched traffic");
+        // One 3-wide fused dispatch and one solo.
+        a.record_batch_dispatch(3, &[1_000, 2_000, 3_000]);
+        a.record_batch_dispatch(1, &[10_000]);
+        let b = a.batch_stats();
+        assert_eq!((b.batches, b.coalesced_requests, b.solo), (1, 3, 1));
+        assert_eq!(b.total_requests(), 4);
+        assert_eq!(b.size_hist[2], 1);
+        assert_eq!(b.size_hist[0], 1);
+        assert!((b.mean_batch_size() - 2.0).abs() < 1e-12);
+        assert_eq!(b.queue_wait_ns.count, 4);
+        // Oversized dispatches land in the last histogram bucket.
+        let mut big = Metrics::new();
+        big.record_batch_dispatch(40, &[500; 40]);
+        assert_eq!(big.batch_stats().size_hist[BatchMetrics::HIST_BUCKETS - 1], 1);
+        // Merge accumulates every counter.
+        a.merge(big);
+        let b = a.batch_stats();
+        assert_eq!((b.batches, b.coalesced_requests, b.solo), (2, 43, 1));
+        assert_eq!(b.queue_wait_ns.count, 44);
+        let s = a.summary();
+        assert!(s.contains("batching: 2 fused dispatches"), "{s}");
+        assert!(s.contains("1 solo"), "{s}");
+    }
+
+    #[test]
     fn pool_stats_surface_and_merge_latest() {
         use crate::runtime::pool::PoolStats;
         let mut a = Metrics::new();
@@ -192,6 +331,7 @@ mod tests {
             panel_idle_ns: 500_000,
             update_idle_ns: 250_000,
             queue_stall_ns: 125_000,
+            ..PoolStats::default()
         });
         a.merge(b);
         assert_eq!(a.pool_stats().unwrap().jobs, 7, "merge keeps the latest snapshot");

@@ -13,6 +13,24 @@
 //! argues BLAS libraries should expose. [`server`] wraps it in a
 //! worker-thread request loop; [`lu_driver`] is the PJRT-backed blocked
 //! LU (the end-to-end example's hot path).
+//!
+//! # Two schedulers on one pool
+//!
+//! The server composes two request schedulers over one shared persistent
+//! worker pool:
+//!
+//! - **Small GEMMs** go through the *batch scheduler* (see [`server`]'s
+//!   module docs): an admission queue buckets them by shape, the
+//!   [`crate::model::batchplan`] cost model decides when a bucket is
+//!   worth dispatching and how to partition the team across its members,
+//!   and a fused multi-GEMM pool job executes the whole bucket in one
+//!   epoch — bitwise identical per request to a solo dispatch. Knobs:
+//!   [`ServerConfig::with_batching`] / [`BatchPolicy`], environment
+//!   `DLA_BATCH`, `DLA_BATCH_WAIT_US`; observability:
+//!   [`metrics::BatchMetrics`].
+//! - **Factorizations and large GEMMs** bypass the batcher and keep the
+//!   lookahead-fused path (`Lookahead` policy, `DLA_LOOKAHEAD`), which
+//!   already keeps the pool busy across panel/update phases.
 
 #[cfg(feature = "pjrt")]
 pub mod lu_driver;
@@ -22,7 +40,8 @@ pub mod server;
 
 #[cfg(feature = "pjrt")]
 pub use lu_driver::{lu_via_artifacts, LuArtifactResult};
-pub use metrics::Metrics;
+pub use crate::model::batchplan::BatchPolicy;
+pub use metrics::{BatchMetrics, Metrics};
 pub use requests::{DlaRequest, DlaResponse};
 pub use server::{CoordinatorServer, ServerConfig};
 

@@ -1,6 +1,7 @@
 //! Request/response types of the coordinator.
 
 use crate::lapack::LuFactors;
+use crate::model::GemmDims;
 use crate::util::MatrixF64;
 
 /// A DLA service request.
@@ -20,6 +21,28 @@ impl DlaRequest {
             DlaRequest::Gemm { .. } => "gemm",
             DlaRequest::LuFactor { .. } => "lu",
             DlaRequest::Cholesky { .. } => "cholesky",
+        }
+    }
+
+    /// The GEMM problem shape, for requests that are GEMMs — the batch
+    /// scheduler's bucketing/admission key. `None` for factorizations
+    /// (they bypass the batcher and keep the lookahead path).
+    pub fn gemm_dims(&self) -> Option<GemmDims> {
+        match self {
+            DlaRequest::Gemm { a, b, .. } => Some(GemmDims::new(a.rows(), b.cols(), a.cols())),
+            _ => None,
+        }
+    }
+
+    /// Are the operand shapes of a GEMM request mutually consistent?
+    /// (Inconsistent requests are never admitted to the batcher; the
+    /// solo path surfaces the mismatch exactly as before.)
+    pub fn gemm_shape_consistent(&self) -> bool {
+        match self {
+            DlaRequest::Gemm { a, b, c, .. } => {
+                a.cols() == b.rows() && c.rows() == a.rows() && c.cols() == b.cols()
+            }
+            _ => false,
         }
     }
 
@@ -65,8 +88,20 @@ mod tests {
         };
         assert_eq!(req.kind(), "gemm");
         assert_eq!(req.flops(), 2.0 * 10.0 * 30.0 * 20.0);
+        assert_eq!(req.gemm_dims(), Some(GemmDims::new(10, 30, 20)));
+        assert!(req.gemm_shape_consistent());
         let lu = DlaRequest::LuFactor { a: MatrixF64::zeros(30, 30), block: 8 };
         assert_eq!(lu.kind(), "lu");
         assert!(lu.flops() > 0.0);
+        assert_eq!(lu.gemm_dims(), None);
+        assert!(!lu.gemm_shape_consistent());
+        let bad = DlaRequest::Gemm {
+            alpha: 1.0,
+            a: MatrixF64::zeros(10, 21),
+            b: MatrixF64::zeros(20, 30),
+            beta: 0.0,
+            c: MatrixF64::zeros(10, 30),
+        };
+        assert!(!bad.gemm_shape_consistent());
     }
 }

@@ -10,13 +10,52 @@
 //! `run`s from different workers serialize on the pool's leader lock, so
 //! the machine is never oversubscribed), and no request ever pays thread
 //! creation cost.
+//!
+//! # The batched request scheduler
+//!
+//! With batching enabled ([`ServerConfig::with_batching`], or the
+//! `DLA_BATCH` / `DLA_BATCH_WAIT_US` environment knobs on un-pinned
+//! servers), small GEMM requests no longer each run one whole pool
+//! dispatch under the leader lock. Instead the request path becomes:
+//!
+//! 1. **Admission.** A worker pulls a request from the channel as usual,
+//!    but routes it into the admission queue when the
+//!    [`crate::model::batchplan`] cost model says a full-team dispatch
+//!    would waste the machine (estimated single-core time below the
+//!    policy threshold, or a G4 grain too small to feed the team). The
+//!    queue **buckets by problem shape**; factorizations and large GEMMs
+//!    bypass the batcher entirely and keep the existing (lookahead)
+//!    path — the two schedulers compose on one shared pool. Parked
+//!    entries are bounded by `queue_depth` (preserving the channel's
+//!    backpressure); at the bound, requests are served solo.
+//! 2. **Coalescing.** A dedicated batcher thread sleeps until a bucket
+//!    is dispatchable: it reached `max_batch` entries, its oldest entry
+//!    has waited `wait_us`, or the server is shutting down.
+//! 3. **Fused dispatch.** The bucket is executed as one (or, above the
+//!    team width, a few chunked) fused pool epoch(s) via
+//!    [`crate::gemm::GemmEngine::gemm_batch`]: the team is partitioned
+//!    across the batch members by the same cost model, every member
+//!    keeps its own memoized per-shape configuration, and each result is
+//!    **bitwise identical** to what a solo dispatch would have produced
+//!    (asserted by `tests/batching.rs`).
+//!
+//! Per-batch observability (dispatch-size histogram, coalesced-vs-solo
+//! counts, per-request queue wait) is recorded in
+//! [`super::metrics::BatchMetrics`] and merged into the server metrics
+//! at shutdown. A response served from a fused dispatch reports the
+//! epoch's wall time as its `seconds` (the latency that request
+//! actually observed).
 
+use std::collections::HashMap;
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+use std::time::{Duration, Instant};
 
 use crate::arch::Arch;
-use crate::gemm::{ConfigMode, Lookahead};
+use crate::gemm::{ConfigMode, GemmBatchItem, Lookahead};
+use crate::model::batchplan::{BatchPlanner, BatchPolicy};
+use crate::model::GemmDims;
 use crate::runtime::pool::WorkerPool;
 
 use super::metrics::Metrics;
@@ -36,11 +75,23 @@ pub struct ServerConfig {
     /// Lookahead policy for blocked factorization requests; `None` keeps
     /// the engine heuristic (and the `DLA_LOOKAHEAD` env override).
     pub lookahead: Option<Lookahead>,
+    /// Batching policy for small GEMM requests; `None` defers to the
+    /// `DLA_BATCH` environment override (pin
+    /// [`crate::model::BatchPolicy::disabled`] to force batching off).
+    pub batching: Option<BatchPolicy>,
 }
 
 impl ServerConfig {
     pub fn new(arch: Arch, mode: ConfigMode) -> Self {
-        Self { workers: 1, arch, mode, queue_depth: 64, gemm_threads: 1, lookahead: None }
+        Self {
+            workers: 1,
+            arch,
+            mode,
+            queue_depth: 64,
+            gemm_threads: 1,
+            lookahead: None,
+            batching: None,
+        }
     }
 
     pub fn with_workers(mut self, n: usize) -> Self {
@@ -59,19 +110,212 @@ impl ServerConfig {
         self.lookahead = Some(la);
         self
     }
+
+    /// Pin the batching policy (see the module docs). A pinned policy
+    /// always wins over the `DLA_BATCH` environment override.
+    pub fn with_batching(mut self, policy: BatchPolicy) -> Self {
+        self.batching = Some(policy);
+        self
+    }
 }
 
 type Job = (DlaRequest, mpsc::Sender<anyhow::Result<DlaResponse>>);
+
+/// One admitted request parked in the admission queue (always a
+/// `DlaRequest::Gemm` — admission guarantees it), with everything needed
+/// to execute and answer it.
+struct PendingGemm {
+    req: DlaRequest,
+    reply: mpsc::Sender<anyhow::Result<DlaResponse>>,
+    enqueued: Instant,
+}
+
+struct Bucket {
+    /// Enqueue time of the oldest entry (the dispatch deadline anchor).
+    first_at: Instant,
+    entries: Vec<PendingGemm>,
+}
+
+#[derive(Default)]
+struct QueueState {
+    buckets: HashMap<GemmDims, Bucket>,
+    /// Entries across all buckets (the backpressure bound).
+    pending: usize,
+    closed: bool,
+}
+
+/// The admission queue of the batch scheduler: workers push admitted
+/// small GEMMs in (bucketed by shape), the batcher thread pulls whole
+/// buckets out when they are worth dispatching. Total parked entries are
+/// bounded by `max_pending` so the admission queue cannot defeat the
+/// bounded request channel's backpressure — an over-limit request is
+/// handed back to the worker, which serves it solo.
+struct BatchQueue {
+    policy: BatchPolicy,
+    max_pending: usize,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl BatchQueue {
+    fn new(policy: BatchPolicy, max_pending: usize) -> Self {
+        Self {
+            policy,
+            max_pending: max_pending.max(policy.max_batch),
+            state: Mutex::new(QueueState::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Park an admitted request, or hand it back when the queue is at
+    /// its backpressure bound or already closed (`Err` = caller must
+    /// serve it solo). The closed check matters when the server is
+    /// dropped without `shutdown()`: the batcher may already be gone,
+    /// and a parked entry would never be answered.
+    fn try_enqueue(&self, dims: GemmDims, entry: PendingGemm) -> Result<(), PendingGemm> {
+        let wake = {
+            let mut st = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            if st.closed || st.pending >= self.max_pending {
+                return Err(entry);
+            }
+            st.pending += 1;
+            let first_at = entry.enqueued;
+            let created = !st.buckets.contains_key(&dims);
+            let bucket = st
+                .buckets
+                .entry(dims)
+                .or_insert_with(|| Bucket { first_at, entries: Vec::new() });
+            bucket.entries.push(entry);
+            // Only a new bucket (fresh deadline) or a full one changes
+            // what the batcher would do; appending to a non-full bucket
+            // needs no wakeup.
+            created || bucket.entries.len() >= self.policy.max_batch
+        };
+        if wake {
+            self.cv.notify_all();
+        }
+        Ok(())
+    }
+
+    /// No more enqueuers exist: wake the batcher so it flushes every
+    /// remaining bucket (ignoring the coalescing wait) and exits.
+    fn close(&self) {
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner).closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until a bucket is dispatchable — full (`>= max_batch`),
+    /// expired (oldest entry waited `wait_us`), or anything at all once
+    /// closed — and take the whole bucket. Oldest bucket first, so no
+    /// shape can be starved by a hot one. Returns `None` when closed and
+    /// fully drained.
+    fn next_batch(&self) -> Option<Vec<PendingGemm>> {
+        let mut st = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        loop {
+            let now = Instant::now();
+            let ready = st
+                .buckets
+                .iter()
+                .filter(|(_, b)| {
+                    st.closed
+                        || b.entries.len() >= self.policy.max_batch
+                        || now.duration_since(b.first_at) >= self.policy.wait()
+                })
+                .min_by_key(|(_, b)| b.first_at)
+                .map(|(&dims, _)| dims);
+            if let Some(dims) = ready {
+                let bucket = st.buckets.remove(&dims).expect("ready bucket vanished");
+                st.pending -= bucket.entries.len();
+                return Some(bucket.entries);
+            }
+            if st.closed {
+                return None; // closed and drained
+            }
+            // Sleep until the nearest deadline; with nothing parked,
+            // park outright (enqueue/close always notify).
+            let deadline = st
+                .buckets
+                .values()
+                .map(|b| (b.first_at + self.policy.wait()).saturating_duration_since(now))
+                .min();
+            st = match deadline {
+                Some(timeout) => {
+                    let (guard, _) = self
+                        .cv
+                        .wait_timeout(st, timeout.max(Duration::from_micros(1)))
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                    guard
+                }
+                None => self.cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner),
+            };
+        }
+    }
+}
+
+/// The batcher thread: owns its own coordinator (engine + metrics) on
+/// the shared pool, turns dispatchable buckets into fused
+/// [`crate::gemm::GemmEngine::gemm_batch`] epochs, and answers every
+/// member's reply channel. Returns its metrics at exit for the shutdown
+/// merge.
+fn batcher_loop(
+    queue: Arc<BatchQueue>,
+    arch: Arch,
+    mode: ConfigMode,
+    pool: Option<Arc<WorkerPool>>,
+) -> Metrics {
+    let mut co = Coordinator::new(arch, mode);
+    if let Some(pool) = pool {
+        co = co.with_pool(pool);
+    }
+    while let Some(mut entries) = queue.next_batch() {
+        let t0 = Instant::now();
+        let waits: Vec<u64> =
+            entries.iter().map(|e| t0.duration_since(e.enqueued).as_nanos() as u64).collect();
+        let mut items: Vec<GemmBatchItem<'_>> = entries
+            .iter_mut()
+            .map(|e| {
+                let DlaRequest::Gemm { alpha, a, b, beta, c } = &mut e.req else {
+                    unreachable!("only Gemm requests are admitted");
+                };
+                GemmBatchItem { alpha: *alpha, a: a.view(), b: b.view(), beta: *beta, c: c.view_mut() }
+            })
+            .collect();
+        let configs = co.engine.gemm_batch(&mut items);
+        drop(items);
+        let dt = t0.elapsed().as_secs_f64();
+        co.metrics.record_batch_dispatch(entries.len(), &waits);
+        for (e, cfg) in entries.into_iter().zip(configs) {
+            let flops = e.req.flops();
+            let DlaRequest::Gemm { c, .. } = e.req else {
+                unreachable!("only Gemm requests are admitted");
+            };
+            // Every member of the fused epoch observed the epoch's wall
+            // time as its service latency.
+            co.metrics.record("gemm", dt, flops);
+            let _ = e.reply.send(Ok(DlaResponse::Matrix {
+                result: c,
+                config: Some(cfg.to_string()),
+                seconds: dt,
+            }));
+        }
+        co.snapshot_pool_stats();
+    }
+    co.metrics
+}
 
 /// A running coordinator server.
 pub struct CoordinatorServer {
     tx: Option<mpsc::SyncSender<Job>>,
     handles: Vec<thread::JoinHandle<Metrics>>,
+    batch_queue: Option<Arc<BatchQueue>>,
+    batch_handle: Option<thread::JoinHandle<Metrics>>,
 }
 
 impl CoordinatorServer {
     /// Start `cfg.workers` worker threads (plus, when `gemm_threads > 1`,
-    /// one shared persistent GEMM pool spawned here, once).
+    /// one shared persistent GEMM pool spawned here, once; plus, with
+    /// batching enabled, one batcher thread draining the admission
+    /// queue).
     ///
     /// Panics **on the caller's thread** when the pinned lookahead
     /// policy is invalid for `gemm_threads` — otherwise the engine-level
@@ -83,40 +327,102 @@ impl CoordinatorServer {
                 panic!("invalid lookahead policy for this server config: {e}");
             }
         }
+        // A pinned batching policy always wins (so BatchPolicy::disabled()
+        // really disables); un-pinned servers take the env override. On a
+        // 1-thread pool admission can never succeed (is_batchable needs a
+        // team to waste), so no queue or batcher thread is created at all.
+        let batching = cfg
+            .batching
+            .or_else(BatchPolicy::from_env)
+            .filter(BatchPolicy::enabled)
+            .filter(|_| cfg.gemm_threads >= 2);
+        let batch_queue =
+            batching.map(|policy| Arc::new(BatchQueue::new(policy, cfg.queue_depth)));
         let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
         let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
         let gemm_pool =
             (cfg.gemm_threads > 1).then(|| Arc::new(WorkerPool::new(cfg.gemm_threads)));
+        let gemm_threads = cfg.gemm_threads.max(1);
         let mut handles = Vec::new();
-        for _ in 0..cfg.workers {
+        for i in 0..cfg.workers {
             let rx = rx.clone();
             let arch = cfg.arch.clone();
             let mode = cfg.mode.clone();
             let pool = gemm_pool.clone();
             let lookahead = cfg.lookahead;
-            handles.push(thread::spawn(move || {
-                let mut co = Coordinator::new(arch, mode);
-                if let Some(pool) = pool {
-                    co = co.with_pool(pool);
-                }
-                if let Some(la) = lookahead {
-                    co = co.with_lookahead(la);
-                }
-                loop {
-                    // Hold the lock only while receiving.
-                    let job = { rx.lock().unwrap().recv() };
-                    match job {
-                        Ok((req, reply)) => {
-                            let resp = co.handle(req);
-                            let _ = reply.send(resp);
+            let queue = batch_queue.clone();
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("dla-worker-{i}"))
+                    .spawn(move || {
+                        let mut co = Coordinator::new(arch, mode);
+                        if let Some(pool) = pool {
+                            co = co.with_pool(pool);
                         }
-                        Err(_) => break, // channel closed: drain done
-                    }
-                }
-                co.metrics
-            }));
+                        if let Some(la) = lookahead {
+                            co = co.with_lookahead(la);
+                        }
+                        // Per-worker admission memo (scorer runs once per
+                        // distinct shape, not once per request).
+                        let planner = BatchPlanner::new();
+                        loop {
+                            // Hold the lock only while receiving.
+                            let job = { rx.lock().unwrap().recv() };
+                            match job {
+                                Ok((req, reply)) => {
+                                    // Admission: route model-judged-small,
+                                    // well-formed GEMMs into the batcher;
+                                    // everything else (factorizations,
+                                    // large GEMMs) keeps the solo path.
+                                    if let Some(q) = &queue {
+                                        if let Some(dims) = req.gemm_dims() {
+                                            let admit = req.gemm_shape_consistent()
+                                                && planner.is_batchable(
+                                                    &co.engine.arch,
+                                                    co.engine.plan_config(dims),
+                                                    dims,
+                                                    gemm_threads,
+                                                    &q.policy,
+                                                );
+                                            if admit {
+                                                let entry = PendingGemm {
+                                                    req,
+                                                    reply,
+                                                    enqueued: Instant::now(),
+                                                };
+                                                if let Err(e) = q.try_enqueue(dims, entry) {
+                                                    // Queue at its backpressure
+                                                    // bound (or closed): serve
+                                                    // solo.
+                                                    let resp = co.handle(e.req);
+                                                    let _ = e.reply.send(resp);
+                                                }
+                                                continue;
+                                            }
+                                        }
+                                    }
+                                    let resp = co.handle(req);
+                                    let _ = reply.send(resp);
+                                }
+                                Err(_) => break, // channel closed: drain done
+                            }
+                        }
+                        co.metrics
+                    })
+                    .expect("spawning server worker"),
+            );
         }
-        Self { tx: Some(tx), handles }
+        let batch_handle = batch_queue.as_ref().map(|q| {
+            let queue = Arc::clone(q);
+            let arch = cfg.arch.clone();
+            let mode = cfg.mode.clone();
+            let pool = gemm_pool.clone();
+            thread::Builder::new()
+                .name("dla-batcher".to_string())
+                .spawn(move || batcher_loop(queue, arch, mode, pool))
+                .expect("spawning batcher")
+        });
+        Self { tx: Some(tx), handles, batch_queue, batch_handle }
     }
 
     /// Submit a request; returns a receiver for the response.
@@ -135,14 +441,55 @@ impl CoordinatorServer {
         self.submit(req).recv().expect("worker dropped reply channel")
     }
 
-    /// Shut down and merge worker metrics.
+    /// Shut down and merge worker (and batcher) metrics.
+    ///
+    /// # Drain semantics
+    ///
+    /// Every request accepted by [`Self::submit`] is served before any
+    /// thread is joined — nothing is dropped, in two stages:
+    ///
+    /// 1. **Channel drain.** Dropping the sender makes each worker's
+    ///    `recv` yield every already-queued request before reporting
+    ///    disconnect, so workers finish (or route into the batcher) all
+    ///    of them and only then exit; joining here cannot strand queued
+    ///    work.
+    /// 2. **Admission-queue drain.** Only after every worker has exited
+    ///    (i.e. no enqueuer remains) is the batch queue closed; `close`
+    ///    makes the batcher flush every pending bucket immediately —
+    ///    ignoring the coalescing wait — answer the replies, and exit.
+    ///
+    /// The returned metrics merge every worker's counters plus the
+    /// batcher's (batched GEMM latencies, [`super::metrics::BatchMetrics`],
+    /// and the latest shared-pool idle snapshot).
     pub fn shutdown(mut self) -> Metrics {
         drop(self.tx.take());
         let mut all = Metrics::new();
         for h in self.handles.drain(..) {
             all.merge(h.join().expect("worker panicked"));
         }
+        if let Some(q) = self.batch_queue.take() {
+            q.close();
+        }
+        if let Some(h) = self.batch_handle.take() {
+            all.merge(h.join().expect("batcher panicked"));
+        }
         all
+    }
+}
+
+impl Drop for CoordinatorServer {
+    /// Dropping without [`Self::shutdown`] must not leak threads: close
+    /// the channel and the admission queue so workers and the batcher
+    /// unblock and exit (releasing their `Arc` on the shared pool, whose
+    /// own `Drop` then retires the team). Metrics are lost and the
+    /// threads are detached, not joined — call `shutdown` for the
+    /// orderly two-stage drain. After `shutdown` every field is already
+    /// `None` and this is a no-op.
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(q) = self.batch_queue.take() {
+            q.close();
+        }
     }
 }
 
@@ -245,5 +592,101 @@ mod tests {
         let resp = server.call(DlaRequest::LuFactor { a: MatrixF64::zeros(6, 6), block: 2 });
         assert!(resp.is_err());
         server.shutdown();
+    }
+
+    #[test]
+    fn batching_server_coalesces_small_gemms() {
+        // A long wait + a small full-trigger: the only way requests get
+        // served promptly is the full-bucket dispatch, so coalescing is
+        // deterministic (the remainder flushes at shutdown).
+        let server = CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined)
+                .with_workers(2)
+                .with_gemm_threads(3)
+                .with_batching(BatchPolicy::default().with_max_batch(4).with_wait_us(5_000_000).admit_all()),
+        );
+        let mut rng = Pcg64::seed(21);
+        let mut pending = Vec::new();
+        for _ in 0..8 {
+            pending.push(server.submit(gemm_req(&mut rng, 24, 24, 12)));
+        }
+        // Shutdown drains everything (including a not-yet-full remainder
+        // bucket), so the replies are all available afterwards.
+        let metrics = server.shutdown();
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        assert_eq!(metrics.count("gemm"), 8);
+        let b = metrics.batch_stats();
+        assert_eq!(b.total_requests(), 8, "every small gemm goes through the batcher: {b:?}");
+        assert!(b.batches >= 1, "the full trigger must have fired: {b:?}");
+        // The first full-bucket dispatch alone coalesces max_batch
+        // requests.
+        assert!(b.coalesced_requests >= 4, "{b:?}");
+        assert_eq!(b.queue_wait_ns.count, 8);
+        assert!(metrics.summary().contains("batching:"));
+    }
+
+    #[test]
+    fn batch_queue_bounds_pending_entries() {
+        // The admission queue must preserve the server's backpressure: at
+        // the bound, try_enqueue hands the entry back (the worker serves
+        // it solo); draining a bucket frees capacity.
+        let q = BatchQueue::new(BatchPolicy::default().with_max_batch(2), 2);
+        let dims = GemmDims::new(8, 8, 8);
+        let entry = || PendingGemm {
+            req: DlaRequest::Gemm {
+                alpha: 1.0,
+                a: MatrixF64::zeros(8, 8),
+                b: MatrixF64::zeros(8, 8),
+                beta: 0.0,
+                c: MatrixF64::zeros(8, 8),
+            },
+            reply: mpsc::channel().0,
+            enqueued: Instant::now(),
+        };
+        assert!(q.try_enqueue(dims, entry()).is_ok());
+        assert!(q.try_enqueue(dims, entry()).is_ok());
+        assert!(q.try_enqueue(dims, entry()).is_err(), "bound must reject the third entry");
+        // The full bucket is dispatchable; draining frees capacity.
+        let batch = q.next_batch().expect("full bucket ready");
+        assert_eq!(batch.len(), 2);
+        assert!(q.try_enqueue(dims, entry()).is_ok());
+    }
+
+    #[test]
+    fn pinned_disabled_batching_beats_env() {
+        // BatchPolicy::disabled() must force the solo path even when the
+        // CI matrix exports DLA_BATCH=1.
+        let server = CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined)
+                .with_gemm_threads(3)
+                .with_batching(BatchPolicy::disabled()),
+        );
+        let mut rng = Pcg64::seed(22);
+        server.call(gemm_req(&mut rng, 24, 24, 12)).unwrap();
+        let metrics = server.shutdown();
+        assert_eq!(metrics.count("gemm"), 1);
+        assert_eq!(metrics.batch_stats().total_requests(), 0);
+    }
+
+    #[test]
+    fn factorizations_bypass_the_batcher() {
+        // With an hour-long coalescing window, a batched request would
+        // visibly hang — factorizations must come back via the solo path
+        // immediately, composing with lookahead on the shared pool.
+        let server = CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined)
+                .with_gemm_threads(3)
+                .with_batching(BatchPolicy::default().with_wait_us(3_600_000_000).admit_all()),
+        );
+        let mut rng = Pcg64::seed(23);
+        let a = MatrixF64::random_diag_dominant(48, &mut rng);
+        let resp = server.call(DlaRequest::LuFactor { a: a.clone(), block: 16 }).unwrap();
+        let DlaResponse::Lu { factors, .. } = resp else { panic!() };
+        assert!(factors.reconstruction_error(&a) < 1e-10);
+        let metrics = server.shutdown();
+        assert_eq!(metrics.count("lu"), 1);
+        assert_eq!(metrics.batch_stats().total_requests(), 0, "LU must not touch the batcher");
     }
 }

@@ -39,6 +39,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::arch::Arch;
+use crate::model::batchplan::BatchPlanner;
 use crate::model::ccp::GemmConfig;
 use crate::model::selector::{select_from, AnalyticScorer};
 use crate::model::teamsize::{PanelShape, TeamSizeSelector, TeamSizeStats};
@@ -49,7 +50,8 @@ use crate::util::matrix::{MatView, MatViewMut};
 use super::blocked::{gemm_blocked, Workspace};
 use super::microkernel::{for_shape, registry, MicroKernelImpl};
 use super::parallel::{
-    gemm_fused_trailing_ranges, gemm_fused_trailing_ranges_seq, gemm_parallel, ThreadPlan,
+    gemm_batch_parallel, gemm_fused_trailing_ranges, gemm_fused_trailing_ranges_seq,
+    gemm_parallel, BatchGemm, ThreadPlan,
 };
 
 /// Lookahead policy for the blocked factorization drivers: while the
@@ -157,6 +159,16 @@ impl Lookahead {
     }
 }
 
+/// One item of a batched GEMM call ([`GemmEngine::gemm_batch`]):
+/// `C = alpha * A * B + beta * C`, independent of every other item.
+pub struct GemmBatchItem<'a> {
+    pub alpha: f64,
+    pub a: MatView<'a>,
+    pub b: MatView<'a>,
+    pub beta: f64,
+    pub c: MatViewMut<'a>,
+}
+
 /// Configuration policy for the engine.
 #[derive(Clone, Debug)]
 pub enum ConfigMode {
@@ -221,6 +233,8 @@ pub struct GemmEngine {
     cache_stats: Cell<ConfigCacheStats>,
     /// Memoized panel-team-size selections (the malleable `t_p` model).
     team_sizer: TeamSizeSelector,
+    /// Memoized batch cost estimates (team shares for fused batches).
+    batch_planner: BatchPlanner,
     /// Per-iteration `t_p` schedule from a comma-separated
     /// `DLA_PANEL_WORKERS` (test/ablation hook); the last entry repeats.
     panel_schedule: Option<Vec<usize>>,
@@ -261,6 +275,7 @@ impl GemmEngine {
             config_cache: RefCell::new(HashMap::new()),
             cache_stats: Cell::new(ConfigCacheStats::default()),
             team_sizer: TeamSizeSelector::new(),
+            batch_planner: BatchPlanner::new(),
             panel_schedule,
             last_config: None,
         }
@@ -435,12 +450,13 @@ impl GemmEngine {
         self.config_cache.borrow().len()
     }
 
-    /// Drop all memoized selections — GEMM configs *and* team sizes —
-    /// and reset both accountings.
+    /// Drop all memoized selections — GEMM configs, team sizes *and*
+    /// batch cost estimates — and reset the accountings.
     pub fn clear_config_cache(&mut self) {
         self.config_cache.borrow_mut().clear();
         self.cache_stats.set(ConfigCacheStats::default());
         self.team_sizer.clear();
+        self.batch_planner.clear();
     }
 
     /// Memoized configuration **and** its runnable kernel implementation
@@ -526,6 +542,69 @@ impl GemmEngine {
         let kernel = self.implementation_for(cfg.mk);
         self.last_config = Some(cfg);
         self.dispatch(&cfg, &kernel, alpha, a, b, beta, c);
+    }
+
+    /// Execute a batch of **independent** GEMMs (`C = alpha*A*B + beta*C`
+    /// each) as fused pool epochs: every member keeps its own memoized
+    /// per-shape configuration (so a batched request selects exactly the
+    /// config a solo dispatch would), the team is partitioned across the
+    /// members by the [`crate::model::batchplan`] cost model, and batches
+    /// wider than the team are chunked — at most `threads` members per
+    /// epoch, every member owning at least one rank. Returns the config
+    /// chosen for each item, in order.
+    ///
+    /// Bitwise identical per member to serving the same requests one at
+    /// a time through [`Self::gemm`] (asserted by `tests/batching.rs`):
+    /// the per-group G4 schedule is the solo schedule at a smaller team
+    /// width, and the G4 schedule's results are width-independent.
+    /// Without a multi-thread pool the members run inline, in order.
+    pub fn gemm_batch(&mut self, items: &mut [GemmBatchItem<'_>]) -> Vec<GemmConfig> {
+        let configs: Vec<GemmConfig> = items
+            .iter()
+            .map(|it| self.plan_config(GemmDims::new(it.a.rows, it.b.cols, it.a.cols)))
+            .collect();
+        if let Some(cfg) = configs.last() {
+            self.last_config = Some(*cfg);
+        }
+        let pooled = self.plan.threads > 1 && self.pool.is_some();
+        if !pooled {
+            // Serialized fallback: identical to handling each request
+            // alone on this engine.
+            for (it, cfg) in items.iter_mut().zip(&configs) {
+                let kernel = self.implementation_for(cfg.mk);
+                self.dispatch(cfg, &kernel, it.alpha, it.a, it.b, it.beta, &mut it.c);
+            }
+            return configs;
+        }
+        let pool = Arc::clone(self.pool.as_ref().expect("pooled engine"));
+        let threads = pool.threads();
+        let mut idx = 0;
+        while idx < items.len() {
+            let len = (items.len() - idx).min(threads);
+            let chunk_cfgs = &configs[idx..idx + len];
+            let planned: Vec<(GemmConfig, GemmDims)> = items[idx..idx + len]
+                .iter()
+                .zip(chunk_cfgs)
+                .map(|(it, cfg)| (*cfg, GemmDims::new(it.a.rows, it.b.cols, it.a.cols)))
+                .collect();
+            let shares = self.batch_planner.partition_team(&self.arch, &planned, threads);
+            let mut members: Vec<BatchGemm<'_>> = items[idx..idx + len]
+                .iter_mut()
+                .zip(chunk_cfgs)
+                .map(|(it, cfg)| BatchGemm {
+                    cfg: *cfg,
+                    kernel: self.implementation_for(cfg.mk),
+                    alpha: it.alpha,
+                    a: it.a,
+                    b: it.b,
+                    beta: it.beta,
+                    c: it.c.sub_mut(0, 0, it.c.rows, it.c.cols),
+                })
+                .collect();
+            gemm_batch_parallel(&mut members, &shares, &pool);
+            idx += len;
+        }
+        configs
     }
 
     /// Lookahead-fused trailing update `C += alpha * A * B`: the first
@@ -882,6 +961,69 @@ mod tests {
         let mut c = c0.clone();
         eng.gemm_fused_trailing(-1.0, a.view(), b.view(), &mut c.view_mut(), split, 1, &|_| {});
         assert_eq!(c.max_abs_diff(&c_ref), 0.0);
+    }
+
+    #[test]
+    fn engine_batch_bitwise_matches_serial_engine_and_memoizes() {
+        // 5 members on a 4-thread pool exercises chunking (4 + 1); the
+        // repeated shape exercises the config memo across batch members.
+        let shapes = [(40usize, 24usize, 16usize), (24, 40, 8), (33, 17, 9), (40, 24, 16), (8, 8, 8)];
+        let coeffs = [(1.0, 0.0), (-1.0, 1.0), (0.5, -2.0), (2.0, 1.0), (1.0, 1.0)];
+        let mut rng = Pcg64::seed(4242);
+        let inputs: Vec<(MatrixF64, MatrixF64, MatrixF64)> = shapes
+            .iter()
+            .map(|&(m, n, k)| {
+                (
+                    MatrixF64::random(m, k, &mut rng),
+                    MatrixF64::random(k, n, &mut rng),
+                    MatrixF64::random(m, n, &mut rng),
+                )
+            })
+            .collect();
+        // Serial reference: one request at a time through engine.gemm.
+        let mut refs = Vec::new();
+        {
+            let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined)
+                .with_plan(ThreadPlan { threads: 4, target: crate::gemm::ParallelLoop::G4 });
+            for ((a, b, c0), (alpha, beta)) in inputs.iter().zip(coeffs) {
+                let mut c = c0.clone();
+                eng.gemm(alpha, a.view(), b.view(), beta, &mut c.view_mut());
+                refs.push(c);
+            }
+        }
+        for threads in [1usize, 4] {
+            let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined)
+                .with_plan(ThreadPlan { threads, target: crate::gemm::ParallelLoop::G4 });
+            let mut cs: Vec<MatrixF64> = inputs.iter().map(|(_, _, c0)| c0.clone()).collect();
+            let mut items: Vec<GemmBatchItem<'_>> = inputs
+                .iter()
+                .zip(cs.iter_mut())
+                .zip(coeffs)
+                .map(|(((a, b, _), c), (alpha, beta))| GemmBatchItem {
+                    alpha,
+                    a: a.view(),
+                    b: b.view(),
+                    beta,
+                    c: c.view_mut(),
+                })
+                .collect();
+            let configs = eng.gemm_batch(&mut items);
+            drop(items);
+            assert_eq!(configs.len(), 5);
+            // Repeated shape (items 0 and 3) must resolve to one memoized
+            // selection: 4 distinct shapes -> 4 misses, 1 hit.
+            let stats = eng.config_cache_stats();
+            assert_eq!(stats.misses, 4, "x{threads}: {stats:?}");
+            assert_eq!(stats.hits, 1, "x{threads}: {stats:?}");
+            assert_eq!(configs[0], configs[3]);
+            for (i, (c, expect)) in cs.iter().zip(&refs).enumerate() {
+                assert_eq!(
+                    c.max_abs_diff(expect),
+                    0.0,
+                    "batched member {i} (x{threads}) must be bitwise identical to serial"
+                );
+            }
+        }
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! - [`blocked`] — the five loops G1..G5 around packing + micro-kernel,
 //! - [`parallel`] — loop G3/G4 multithreading (paper §2.2) broadcast on
 //!   the persistent worker pool of [`crate::runtime::pool`], with
-//!   cooperative packing (see the module docs for the barrier protocol),
+//!   cooperative packing (see the module docs for the barrier protocol)
+//!   and the fused multi-GEMM batch driver (`gemm_batch_parallel`: N
+//!   independent small GEMMs in one pool epoch, one team group each),
 //! - [`api`] — the co-design entry point: per-call dynamic selection of
 //!   micro-kernel and CCPs (the paper's contribution) with memoization,
 //!   plus the static BLIS-like baseline mode.
@@ -18,11 +20,14 @@ pub mod microkernel;
 pub mod packing;
 pub mod parallel;
 
-pub use api::{ConfigCacheStats, ConfigMode, GemmEngine, Lookahead, AUTO_PANEL_WORKERS};
+pub use api::{
+    ConfigCacheStats, ConfigMode, GemmBatchItem, GemmEngine, Lookahead, AUTO_PANEL_WORKERS,
+};
 pub use blocked::{gemm_blocked, Workspace};
 pub use microkernel::{registry, MicroKernelImpl};
 pub use parallel::{
-    gemm_fused_trailing, gemm_fused_trailing_ranges, gemm_parallel, ParallelLoop, ThreadPlan,
+    gemm_batch_parallel, gemm_fused_trailing, gemm_fused_trailing_ranges, gemm_parallel,
+    BatchGemm, ParallelLoop, ThreadPlan,
 };
 
 /// Reference (naive triple-loop) GEMM: `C = alpha * A * B + beta * C`.

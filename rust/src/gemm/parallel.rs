@@ -277,6 +277,73 @@ pub fn gemm_parallel(
     }
 }
 
+/// One whole G4-schedule sweep of a single GEMM, executed by the `rank`
+/// of a `threads`-wide (sub-)team: the full G1/G2/G3 loop nest with
+/// cooperative packing into the given shared buffers. `sync` must be the
+/// barrier of exactly the ranks executing this call (the full team in
+/// [`gemm_parallel_g4`], one member group in [`gemm_batch_parallel`]),
+/// and every one of those ranks must make this call with identical
+/// arguments. Per-element arithmetic — and therefore every bit of C — is
+/// identical to [`gemm_blocked`] with the same (clamped) configuration,
+/// for **any** team width including 1.
+#[allow(clippy::too_many_arguments)]
+fn g4_sweep(
+    cfg: &GemmConfig,
+    kernel: &MicroKernelImpl,
+    alpha: f64,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    cbase: SendPtr,
+    ldc: usize,
+    a_shared: SharedBuf,
+    b_shared: SharedBuf,
+    rank: usize,
+    threads: usize,
+    sync: &dyn Fn(),
+) {
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    let (mc, nc, kc) = (cfg.ccp.mc, cfg.ccp.nc, cfg.ccp.kc);
+    let (mr, nr) = (cfg.mk.mr, cfg.mk.nr);
+    let mut jc = 0; // Loop G1
+    while jc < n {
+        let nc_eff = nc.min(n - jc);
+        let mut pc = 0; // Loop G2
+        while pc < k {
+            let kc_eff = kc.min(k - pc);
+            sync(); // prior compute done: Bc may be overwritten
+            coop_pack_b(rank, threads, b.sub(pc, jc, kc_eff, nc_eff), b_shared, nr);
+            let mut ic = 0; // Loop G3
+            while ic < m {
+                let mc_eff = mc.min(m - ic);
+                sync(); // prior compute done: Ac may be overwritten
+                coop_pack_a(rank, threads, a.sub(ic, pc, mc_eff, kc_eff), a_shared, mr, alpha);
+                sync(); // packs complete: buffers readable
+                let (lo, hi) = partition_rank(nc_eff, threads, rank, nr);
+                if lo < hi {
+                    // SAFETY: pack phases are barrier-complete; each
+                    // rank updates a disjoint jr-range of C.
+                    unsafe {
+                        macro_kernel(
+                            kernel,
+                            kc_eff,
+                            mc_eff,
+                            nc_eff,
+                            a_shared.as_slice(),
+                            b_shared.as_slice(),
+                            cbase.ptr().add(jc * ldc + ic),
+                            ldc,
+                            (lo, hi),
+                        );
+                    }
+                }
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
 fn gemm_parallel_g4(
     cfg: &GemmConfig,
     kernel: &MicroKernelImpl,
@@ -286,9 +353,6 @@ fn gemm_parallel_g4(
     c: &mut MatViewMut<'_>,
     pool: &WorkerPool,
 ) {
-    let (m, n, k) = (a.rows, b.cols, a.cols);
-    let (mc, nc, kc) = (cfg.ccp.mc, cfg.ccp.nc, cfg.ccp.kc);
-    let (mr, nr) = (cfg.mk.mr, cfg.mk.nr);
     let ldc = c.ld;
     // The team-shared Ac/Bc are pinned in the pool's rank-0 workspace;
     // size them while we hold the lock, then share raw views. Keeping the
@@ -300,45 +364,10 @@ fn gemm_parallel_g4(
     let b_shared = SharedBuf::new(&mut ws0.b_buf);
     let cbase = SendPtr(c.data.as_mut_ptr());
     pool.run(&|ctx: &PoolCtx<'_>| {
-        let (rank, threads) = (ctx.rank, ctx.threads);
-        let mut jc = 0; // Loop G1
-        while jc < n {
-            let nc_eff = nc.min(n - jc);
-            let mut pc = 0; // Loop G2
-            while pc < k {
-                let kc_eff = kc.min(k - pc);
-                ctx.barrier(); // prior compute done: Bc may be overwritten
-                coop_pack_b(rank, threads, b.sub(pc, jc, kc_eff, nc_eff), b_shared, nr);
-                let mut ic = 0; // Loop G3
-                while ic < m {
-                    let mc_eff = mc.min(m - ic);
-                    ctx.barrier(); // prior compute done: Ac may be overwritten
-                    coop_pack_a(rank, threads, a.sub(ic, pc, mc_eff, kc_eff), a_shared, mr, alpha);
-                    ctx.barrier(); // packs complete: buffers readable
-                    let (lo, hi) = partition_rank(nc_eff, threads, rank, nr);
-                    if lo < hi {
-                        // SAFETY: pack phases are barrier-complete; each
-                        // rank updates a disjoint jr-range of C.
-                        unsafe {
-                            macro_kernel(
-                                kernel,
-                                kc_eff,
-                                mc_eff,
-                                nc_eff,
-                                a_shared.as_slice(),
-                                b_shared.as_slice(),
-                                cbase.ptr().add(jc * ldc + ic),
-                                ldc,
-                                (lo, hi),
-                            );
-                        }
-                    }
-                    ic += mc;
-                }
-                pc += kc;
-            }
-            jc += nc;
-        }
+        g4_sweep(
+            cfg, kernel, alpha, a, b, cbase, ldc, a_shared, b_shared, ctx.rank, ctx.threads,
+            &|| ctx.barrier(),
+        );
     });
     drop(ws0);
 }
@@ -736,6 +765,153 @@ pub(crate) fn gemm_fused_trailing_ranges_seq(
         let mut c2 = c.sub_mut(0, tail.0, c.rows, tail.1 - tail.0);
         gemm_blocked(cfg, kernel, alpha, a, b2, 1.0, &mut c2, ws);
     }
+}
+
+/// One member of a fused multi-GEMM batch job: an independent
+/// `C = alpha * A * B + beta * C` with its **own** configuration and
+/// kernel (the per-call co-design selection the paper argues for is kept
+/// per request, batching or not).
+pub struct BatchGemm<'a> {
+    pub cfg: GemmConfig,
+    pub kernel: MicroKernelImpl,
+    pub alpha: f64,
+    pub a: MatView<'a>,
+    pub b: MatView<'a>,
+    pub beta: f64,
+    pub c: MatViewMut<'a>,
+}
+
+/// Per-member job descriptor shared with the pool closure (raw C base +
+/// clamped config; views of A/B are `Copy` and `Sync`).
+struct MemberDesc<'a> {
+    cfg: GemmConfig,
+    kernel: MicroKernelImpl,
+    alpha: f64,
+    beta: f64,
+    a: MatView<'a>,
+    b: MatView<'a>,
+    cbase: SendPtr,
+    rows: usize,
+    cols: usize,
+    ldc: usize,
+    /// Nothing to accumulate (`C = beta * C` only).
+    degenerate: bool,
+}
+
+/// `C *= beta` through a raw base pointer: reconstructs the view and
+/// delegates to the one true [`scale_c`], so batched members stay
+/// bitwise identical to the solo path by construction.
+///
+/// # Safety
+/// `base` must point to a valid `rows x cols` column-major block with
+/// stride `ldc >= rows` that no other rank touches until the caller's
+/// next group barrier.
+unsafe fn scale_c_raw(beta: f64, base: *mut f64, rows: usize, cols: usize, ldc: usize) {
+    if beta == 1.0 || rows == 0 || cols == 0 {
+        return;
+    }
+    let len = ldc * (cols - 1) + rows;
+    let data = std::slice::from_raw_parts_mut(base, len);
+    scale_c(beta, &mut MatViewMut { rows, cols, ld: ldc, data });
+}
+
+/// Execute N **independent** GEMMs as one fused pool epoch: the team is
+/// partitioned into one [`crate::runtime::pool::TeamGroup`] per member
+/// (contiguous rank ranges from `shares`, every entry `>= 1` and the sum
+/// exactly `pool.threads()`), and each group runs its member's full
+/// [`g4_sweep`] — cooperative packing into that group's own packed
+/// slots (pinned in the group leader's pool workspace), the member's own
+/// clamped configuration, and a group-private barrier, so groups never
+/// synchronize with each other. This is what turns "N small requests,
+/// each serialized on the pool leader lock" into "one broadcast that
+/// keeps every rank busy".
+///
+/// **Bitwise identity:** a group of width `w` executes exactly the
+/// schedule [`gemm_parallel`] (target G4) runs on a `w`-wide pool, which
+/// is bitwise identical to [`gemm_blocked`] for any `w` — so every
+/// member's C is bit-for-bit what a solo dispatch of that request would
+/// have produced, regardless of grouping (the batching tests assert
+/// exact equality).
+///
+/// With a single-thread pool the members run inline, in order, through
+/// [`gemm_blocked`] — the same degenerate path a solo dispatch takes.
+pub fn gemm_batch_parallel(members: &mut [BatchGemm<'_>], shares: &[usize], pool: &WorkerPool) {
+    assert_eq!(members.len(), shares.len(), "one share per batch member");
+    for m in members.iter() {
+        assert_eq!(m.kernel.spec, m.cfg.mk, "kernel/config shape mismatch");
+        assert_eq!(m.a.cols, m.b.rows, "inner dimension mismatch");
+        assert_eq!(m.c.rows, m.a.rows, "C row mismatch");
+        assert_eq!(m.c.cols, m.b.cols, "C col mismatch");
+    }
+    if pool.threads() == 1 {
+        // Inline fallback: exactly the solo dispatch path, member by
+        // member, on the pool's rank-0 workspace.
+        let mut ws = pool.workspace(0);
+        for m in members.iter_mut() {
+            gemm_blocked(&m.cfg, &m.kernel, m.alpha, m.a, m.b, m.beta, &mut m.c, &mut ws);
+        }
+        return;
+    }
+    assert_eq!(
+        shares.iter().sum::<usize>(),
+        pool.threads(),
+        "shares must cover the whole team"
+    );
+    // Each group's shared Ac/Bc are pinned in its leader's (= first
+    // global rank's) pool workspace. Lock order matters for deadlock
+    // freedom with concurrent drivers: rank 0 first (every pool driver
+    // takes workspace(0) before the run lock, making it the de-facto
+    // driver lock), then the remaining leaders in ascending rank order.
+    let mut descs: Vec<MemberDesc<'_>> = Vec::with_capacity(members.len());
+    let mut guards = Vec::with_capacity(members.len());
+    let mut bufs: Vec<(SharedBuf, SharedBuf)> = Vec::with_capacity(members.len());
+    let mut leader = 0usize;
+    for (m, &share) in members.iter_mut().zip(shares) {
+        assert!(share > 0, "every member needs at least one rank");
+        let (rows, cols, k) = (m.a.rows, m.b.cols, m.a.cols);
+        let ccp = m.cfg.ccp.clamp_to(GemmDims::new(rows, cols, k));
+        let eff = GemmConfig { mk: m.cfg.mk, ccp };
+        let mut ws = pool.workspace(leader);
+        ws.ensure(&eff);
+        bufs.push((SharedBuf::new(&mut ws.a_buf), SharedBuf::new(&mut ws.b_buf)));
+        guards.push(ws);
+        descs.push(MemberDesc {
+            cfg: eff,
+            kernel: m.kernel,
+            alpha: m.alpha,
+            beta: m.beta,
+            a: m.a,
+            b: m.b,
+            cbase: SendPtr(m.c.data.as_mut_ptr()),
+            rows,
+            cols,
+            ldc: m.c.ld,
+            degenerate: rows == 0 || cols == 0 || k == 0 || m.alpha == 0.0,
+        });
+        leader += share;
+    }
+    pool.run(&|ctx: &PoolCtx<'_>| {
+        let grp = ctx.group(shares);
+        let d = &descs[grp.index];
+        let (a_shared, b_shared) = bufs[grp.index];
+        // Beta scaling by the group's local rank 0; the sweep's first
+        // group barrier orders it before any rank's compute reads C.
+        if grp.rank == 0 {
+            // SAFETY: only local rank 0 writes, and only to this
+            // member's C.
+            unsafe { scale_c_raw(d.beta, d.cbase.ptr(), d.rows, d.cols, d.ldc) };
+        }
+        if d.degenerate {
+            // Every group rank derives the same answer from the same
+            // descriptor: no barrier imbalance.
+            return;
+        }
+        g4_sweep(
+            &d.cfg, &d.kernel, d.alpha, d.a, d.b, d.cbase, d.ldc, a_shared, b_shared, grp.rank,
+            grp.threads, &|| grp.barrier(),
+        );
+    });
+    drop(guards);
 }
 
 /// The seed's spawn-per-macro-block G4 driver, retained **only** as the
@@ -1136,6 +1312,106 @@ mod tests {
         let err = *seen_err.lock().unwrap();
         assert!(err >= 0.0, "panel task did not run");
         assert!(err < 1e-12 * k as f64, "panel columns not updated before the task: {err}");
+    }
+
+    #[test]
+    fn batch_members_bitwise_match_blocked_for_any_shares() {
+        // Each member of a fused batch must come out bit-for-bit equal to
+        // a solo gemm_blocked with the same config — for any team
+        // partition, including 1-rank groups and uneven shares.
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let mut rng = Pcg64::seed(2024);
+        let shapes = [(40usize, 24usize, 16usize), (17, 33, 9), (24, 40, 8)];
+        let coeffs = [(1.0, 0.0), (-1.0, 1.0), (0.5, -2.0)];
+        let mut inputs = Vec::new();
+        for (i, &(m, n, k)) in shapes.iter().enumerate() {
+            let a = MatrixF64::random(m, k, &mut rng);
+            let b = MatrixF64::random(k, n, &mut rng);
+            let c0 = MatrixF64::random(m, n, &mut rng);
+            let ccp = Ccp::new(16 + 8 * i, 12, 8);
+            inputs.push((a, b, c0, GemmConfig { mk, ccp }, coeffs[i]));
+        }
+        // Reference: solo gemm_blocked per member.
+        let mut refs = Vec::new();
+        let mut ws = Workspace::new();
+        for (a, b, c0, cfg, (alpha, beta)) in &inputs {
+            let mut c = c0.clone();
+            gemm_blocked(cfg, &kernel, *alpha, a.view(), b.view(), *beta, &mut c.view_mut(), &mut ws);
+            refs.push(c);
+        }
+        for (threads, shares) in
+            [(1usize, vec![1usize, 1, 1]), (3, vec![1, 1, 1]), (4, vec![2, 1, 1]), (6, vec![1, 3, 2])]
+        {
+            let pool = WorkerPool::new(threads);
+            let mut cs: Vec<MatrixF64> = inputs.iter().map(|(_, _, c0, _, _)| c0.clone()).collect();
+            let mut members: Vec<BatchGemm<'_>> = Vec::new();
+            for ((a, b, _, cfg, (alpha, beta)), c) in inputs.iter().zip(cs.iter_mut()) {
+                members.push(BatchGemm {
+                    cfg: *cfg,
+                    kernel,
+                    alpha: *alpha,
+                    a: a.view(),
+                    b: b.view(),
+                    beta: *beta,
+                    c: c.view_mut(),
+                });
+            }
+            gemm_batch_parallel(&mut members, &shares, &pool);
+            drop(members);
+            for (i, (c, expect)) in cs.iter().zip(&refs).enumerate() {
+                assert_eq!(
+                    c.max_abs_diff(expect),
+                    0.0,
+                    "member {i} diverges at x{threads} shares {shares:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_degenerate_members_only_scale() {
+        // alpha = 0 and k = 0 members must still apply beta, and empty
+        // members must not wedge their group's barriers.
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp: Ccp::new(16, 12, 8) };
+        let mut rng = Pcg64::seed(11);
+        let a = MatrixF64::random(12, 8, &mut rng);
+        let b = MatrixF64::random(8, 10, &mut rng);
+        let c0 = MatrixF64::random(12, 10, &mut rng);
+        let pool = WorkerPool::new(3);
+        let mut c_zero_alpha = c0.clone();
+        let mut c_live = c0.clone();
+        let mut members = vec![
+            BatchGemm {
+                cfg,
+                kernel,
+                alpha: 0.0,
+                a: a.view(),
+                b: b.view(),
+                beta: -0.5,
+                c: c_zero_alpha.view_mut(),
+            },
+            BatchGemm {
+                cfg,
+                kernel,
+                alpha: 1.0,
+                a: a.view(),
+                b: b.view(),
+                beta: 1.0,
+                c: c_live.view_mut(),
+            },
+        ];
+        gemm_batch_parallel(&mut members, &[2, 1], &pool);
+        drop(members);
+        let mut expect_scaled = c0.clone();
+        scale_c(-0.5, &mut expect_scaled.view_mut());
+        assert_eq!(c_zero_alpha.max_abs_diff(&expect_scaled), 0.0);
+        let mut expect_live = c0.clone();
+        let mut ws = Workspace::new();
+        gemm_blocked(&cfg, &kernel, 1.0, a.view(), b.view(), 1.0, &mut expect_live.view_mut(), &mut ws);
+        assert_eq!(c_live.max_abs_diff(&expect_live), 0.0);
     }
 
     #[test]

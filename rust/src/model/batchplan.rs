@@ -1,0 +1,352 @@
+//! Model-driven batch planning for the coordinator's request scheduler:
+//! the same analytical machinery that picks `mc`/`kc`/`nc` (and the
+//! lookahead `t_p`) also decides **which requests are worth coalescing**
+//! and **how to partition the worker team across a batch**.
+//!
+//! The paper's serving-layer consequence: many small requests are
+//! exactly the shapes where a full pool dispatch wastes the machine —
+//! the G4 `jr` partition hands out `nr`-wide column tiles, so a GEMM
+//! with fewer tiles than ranks leaves ranks idle, and even a fully-fed
+//! tiny GEMM pays one whole pool epoch (broadcast + barriers) for a few
+//! microseconds of math. Like the tiled-algorithm runtimes of Buttari
+//! et al. and the kernel-sequence analysis of Peise & Bientinesi (see
+//! PAPERS.md), throughput comes from scheduling *sequences* of small
+//! kernels onto the machine as one unit:
+//!
+//! - [`is_batchable`] — admission: a request is batchable when the
+//!   [`AnalyticScorer`] single-core estimate is below the policy's
+//!   `small_seconds` threshold, or when its G4 grain cannot feed the
+//!   team at all (`ceil(n / nr) < threads`).
+//! - [`partition_team`] — shares: LPT-style greedy that assigns each
+//!   spare rank to the member with the largest estimated per-rank time,
+//!   minimizing the fused epoch's makespan. Every member keeps at least
+//!   one rank, so every batch member makes progress in every epoch.
+//! - [`BatchPolicy`] — the latency/occupancy knobs (`max_batch` full
+//!   trigger, `wait_us` coalescing window, `small_seconds` admission
+//!   threshold), overridable from the environment (`DLA_BATCH`,
+//!   `DLA_BATCH_WAIT_US`) for un-pinned servers.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::arch::Arch;
+use crate::model::ccp::GemmConfig;
+use crate::model::selector::{AnalyticScorer, Scorer};
+use crate::model::GemmDims;
+
+/// Default full-bucket dispatch trigger.
+pub const DEFAULT_MAX_BATCH: usize = 8;
+/// Default coalescing window in microseconds.
+pub const DEFAULT_WAIT_US: u64 = 200;
+/// Default admission threshold: requests whose single-core estimate is
+/// below this are "small" (a full-team dispatch cannot amortize its
+/// epoch cost against so little math).
+pub const SMALL_GEMM_SECONDS: f64 = 2.0e-4;
+
+/// Latency/occupancy policy of the batched request scheduler.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchPolicy {
+    /// Dispatch a bucket as soon as it holds this many requests
+    /// (a bucket may exceed it transiently; the flusher drains whole
+    /// buckets and the engine re-chunks to the team width). `< 2`
+    /// disables batching entirely (see [`BatchPolicy::enabled`]).
+    pub max_batch: usize,
+    /// How long the oldest queued request may wait for companions before
+    /// its bucket is dispatched anyway, in microseconds.
+    pub wait_us: u64,
+    /// Admission threshold in estimated single-core seconds (see
+    /// [`is_batchable`]); tests pin `f64::INFINITY` to admit every GEMM.
+    pub small_seconds: f64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: DEFAULT_MAX_BATCH,
+            wait_us: DEFAULT_WAIT_US,
+            small_seconds: SMALL_GEMM_SECONDS,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// A policy that pins batching **off** (and, unlike leaving the
+    /// server config unset, also suppresses the `DLA_BATCH` environment
+    /// override — mirror of `Lookahead::disabled`).
+    pub fn disabled() -> Self {
+        Self { max_batch: 0, ..Self::default() }
+    }
+
+    /// Batching is active only when a bucket can actually coalesce.
+    pub fn enabled(&self) -> bool {
+        self.max_batch >= 2
+    }
+
+    pub fn with_max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    pub fn with_wait_us(mut self, us: u64) -> Self {
+        self.wait_us = us;
+        self
+    }
+
+    /// Admit every GEMM regardless of size (test/ablation hook).
+    pub fn admit_all(mut self) -> Self {
+        self.small_seconds = f64::INFINITY;
+        self
+    }
+
+    /// The coalescing window as a [`Duration`].
+    pub fn wait(&self) -> Duration {
+        Duration::from_micros(self.wait_us)
+    }
+
+    /// Environment override for un-pinned servers: `DLA_BATCH` unset /
+    /// empty / `0` / `off` / `false` means no batching; `1` / `on` /
+    /// `true` enable with the default trigger; a number `>= 2` sets
+    /// `max_batch`; anything unparseable is treated as **off** (a typo
+    /// must fail towards the plain solo path, not silently enable a
+    /// scheduler the operator did not ask for). `DLA_BATCH_WAIT_US`
+    /// overrides the window.
+    pub fn from_env() -> Option<Self> {
+        let v = std::env::var("DLA_BATCH").ok()?;
+        let base = match v.trim() {
+            "" | "0" | "off" | "false" => return None,
+            "1" | "on" | "true" => Self::default(),
+            other => match other.parse::<usize>() {
+                Ok(n) if n >= 2 => Self::default().with_max_batch(n),
+                _ => return None,
+            },
+        };
+        let wait = std::env::var("DLA_BATCH_WAIT_US")
+            .ok()
+            .and_then(|w| w.trim().parse::<u64>().ok());
+        Some(match wait {
+            Some(us) => base.with_wait_us(us),
+            None => base,
+        })
+    }
+}
+
+/// Single-core seconds estimate for one configured GEMM — the
+/// [`AnalyticScorer`] cache-cost model the selector already ranks
+/// configurations with, reused here as the batch cost model (uncached;
+/// the serving hot paths go through [`BatchPlanner`]).
+pub fn serial_estimate(arch: &Arch, cfg: GemmConfig, dims: GemmDims) -> f64 {
+    AnalyticScorer.score(arch, dims, cfg.mk, cfg.ccp)
+}
+
+/// Memoizing batch planner: admission checks run once per incoming GEMM
+/// and team partitioning once per fused dispatch, so — like the
+/// engine's config cache and the lookahead team-size memo — the scorer
+/// must not re-run for every recurrence of the same shape. Estimates
+/// are memoized on `(cfg, dims)`; a hit is one hash lookup. Interior
+/// mutability (`RefCell`) because callers hold `&self` on hot paths;
+/// each server worker / batcher owns its own planner (not shared across
+/// threads).
+#[derive(Default)]
+pub struct BatchPlanner {
+    estimates: RefCell<HashMap<(GemmConfig, GemmDims), f64>>,
+}
+
+impl BatchPlanner {
+    /// Bound mirroring `GemmEngine::CONFIG_CACHE_CAP`: flush-on-overflow
+    /// keeps a long-lived server from growing without bound.
+    const CACHE_CAP: usize = 4096;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop every memoized estimate.
+    pub fn clear(&self) {
+        self.estimates.borrow_mut().clear();
+    }
+
+    /// Memoized [`serial_estimate`].
+    pub fn estimate(&self, arch: &Arch, cfg: GemmConfig, dims: GemmDims) -> f64 {
+        let key = (cfg, dims);
+        if let Some(&t) = self.estimates.borrow().get(&key) {
+            return t;
+        }
+        let t = serial_estimate(arch, cfg, dims);
+        let mut cache = self.estimates.borrow_mut();
+        if cache.len() >= Self::CACHE_CAP {
+            cache.clear();
+        }
+        cache.insert(key, t);
+        t
+    }
+
+    /// Is a GEMM of `dims` (configured as `cfg`) worth coalescing
+    /// instead of dispatching alone on a `threads`-wide pool? True when
+    /// the model says the request is small (estimate below
+    /// `policy.small_seconds`) or the G4 column grain cannot feed the
+    /// team. Never true on teams that cannot parallelize at all
+    /// (`threads < 2`) — there a solo dispatch is already sequential and
+    /// batching would only add queueing latency.
+    pub fn is_batchable(
+        &self,
+        arch: &Arch,
+        cfg: GemmConfig,
+        dims: GemmDims,
+        threads: usize,
+        policy: &BatchPolicy,
+    ) -> bool {
+        if threads < 2 {
+            return false;
+        }
+        if dims.m == 0 || dims.n == 0 || dims.k == 0 {
+            return true; // degenerate: trivially small
+        }
+        let starved = dims.n.div_ceil(cfg.mk.nr) < threads;
+        starved || self.estimate(arch, cfg, dims) < policy.small_seconds
+    }
+
+    /// Partition a `threads`-wide team across the members of one fused
+    /// batch: every member gets at least one rank, and each spare rank
+    /// goes to the member with the largest estimated per-rank time
+    /// (greedy LPT), minimizing `max_i T_i / shares_i` — the fused epoch
+    /// ends when the slowest group does. Deterministic (first-max wins
+    /// ties). Returns one share per member, summing to exactly
+    /// `threads`.
+    ///
+    /// Requires `members.len() <= max(threads, 1)`; callers with larger
+    /// batches chunk first (`GemmEngine::gemm_batch` does).
+    pub fn partition_team(
+        &self,
+        arch: &Arch,
+        members: &[(GemmConfig, GemmDims)],
+        threads: usize,
+    ) -> Vec<usize> {
+        assert!(!members.is_empty(), "empty batch");
+        let threads = threads.max(1);
+        assert!(
+            members.len() <= threads,
+            "{} members cannot each get a rank on a {}-wide team",
+            members.len(),
+            threads
+        );
+        let est: Vec<f64> = members
+            .iter()
+            .map(|&(cfg, dims)| self.estimate(arch, cfg, dims).max(1e-12))
+            .collect();
+        let mut shares = vec![1usize; members.len()];
+        for _ in members.len()..threads {
+            let mut best = 0;
+            for i in 1..members.len() {
+                if est[i] / shares[i] as f64 > est[best] / shares[best] as f64 {
+                    best = i;
+                }
+            }
+            shares[best] += 1;
+        }
+        shares
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::host_xeon;
+    use crate::model::{refined_ccp, MicroKernel};
+
+    fn cfg_for(arch: &Arch, dims: GemmDims) -> GemmConfig {
+        let mk = MicroKernel::new(8, 6);
+        GemmConfig { mk, ccp: refined_ccp(arch, mk, dims).clamp_to(dims) }
+    }
+
+    #[test]
+    fn policy_defaults_and_enablement() {
+        let p = BatchPolicy::default();
+        assert!(p.enabled());
+        assert_eq!(p.max_batch, DEFAULT_MAX_BATCH);
+        assert_eq!(p.wait(), Duration::from_micros(DEFAULT_WAIT_US));
+        assert!(!BatchPolicy::disabled().enabled());
+        assert!(!BatchPolicy::default().with_max_batch(1).enabled());
+        assert!(BatchPolicy::default().admit_all().small_seconds.is_infinite());
+    }
+
+    #[test]
+    fn small_gemms_admitted_large_ones_not() {
+        let arch = host_xeon();
+        let planner = BatchPlanner::new();
+        let p = BatchPolicy::default();
+        let small = GemmDims::new(48, 48, 32);
+        assert!(planner.is_batchable(&arch, cfg_for(&arch, small), small, 4, &p));
+        // A fat GEMM is model-rejected: its serial estimate dwarfs the
+        // threshold and its grain feeds any reasonable team.
+        let big = GemmDims::new(1024, 1024, 256);
+        assert!(!planner.is_batchable(&arch, cfg_for(&arch, big), big, 4, &p));
+        // No team, no batching.
+        assert!(!planner.is_batchable(&arch, cfg_for(&arch, small), small, 1, &p));
+        // Degenerate shapes are trivially small.
+        let degen = GemmDims::new(8, 0, 8);
+        assert!(planner.is_batchable(&arch, cfg_for(&arch, small), degen, 4, &p));
+    }
+
+    #[test]
+    fn grain_starved_gemms_admitted_regardless_of_threshold() {
+        let arch = host_xeon();
+        let planner = BatchPlanner::new();
+        // Threshold zero: only the structural grain test can admit.
+        let p = BatchPolicy { small_seconds: 0.0, ..BatchPolicy::default() };
+        // n = 6 with nr = 6 is a single jr tile: starved on any team > 1.
+        let skinny = GemmDims::new(4096, 6, 64);
+        assert!(planner.is_batchable(&arch, cfg_for(&arch, skinny), skinny, 4, &p));
+        let wide = GemmDims::new(4096, 4096, 64);
+        assert!(!planner.is_batchable(&arch, cfg_for(&arch, wide), wide, 4, &p));
+    }
+
+    #[test]
+    fn estimates_are_memoized_and_match_the_uncached_model() {
+        let arch = host_xeon();
+        let planner = BatchPlanner::new();
+        let dims = GemmDims::new(48, 48, 32);
+        let cfg = cfg_for(&arch, dims);
+        let direct = serial_estimate(&arch, cfg, dims);
+        assert_eq!(planner.estimate(&arch, cfg, dims), direct);
+        // Cached lookups return the exact memoized value.
+        assert_eq!(planner.estimate(&arch, cfg, dims), direct);
+        assert_eq!(planner.estimates.borrow().len(), 1);
+    }
+
+    #[test]
+    fn shares_cover_the_team_and_favor_big_members() {
+        let arch = host_xeon();
+        let planner = BatchPlanner::new();
+        let small = GemmDims::new(24, 24, 8);
+        let big = GemmDims::new(96, 96, 64);
+        let members =
+            [(cfg_for(&arch, small), small), (cfg_for(&arch, big), big), (cfg_for(&arch, small), small)];
+        for threads in [3usize, 4, 8, 16] {
+            let shares = planner.partition_team(&arch, &members, threads);
+            assert_eq!(shares.len(), 3);
+            assert_eq!(shares.iter().sum::<usize>(), threads);
+            assert!(shares.iter().all(|&s| s >= 1), "{shares:?}");
+            // The big member must get at least as many ranks as either
+            // small one.
+            assert!(shares[1] >= shares[0] && shares[1] >= shares[2], "{shares:?}");
+        }
+        // Exactly one rank per member when the team is as wide as the
+        // batch; a singleton batch takes the whole team.
+        assert_eq!(planner.partition_team(&arch, &members, 3), vec![1, 1, 1]);
+        assert_eq!(
+            planner.partition_team(&arch, &members[..1], 4),
+            vec![4],
+            "singleton batch owns every rank"
+        );
+    }
+
+    #[test]
+    fn env_policy_parsing() {
+        // from_env reads the live environment, so only exercise it when
+        // the variable is unset (the CI matrix sets it on purpose).
+        if std::env::var("DLA_BATCH").is_err() {
+            assert_eq!(BatchPolicy::from_env(), None);
+        }
+    }
+}

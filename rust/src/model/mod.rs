@@ -16,9 +16,13 @@
 //!   lookahead pipeline: the same cost model that picks the CCPs also
 //!   picks `t_p` per factorization iteration, memoized like the config
 //!   cache.
+//! - [`batchplan`] — the serving-layer batch planner: the same scorer
+//!   decides which requests are too small for a full-team dispatch and
+//!   how to partition the team across the members of a fused batch.
 
 pub mod analytical;
 pub mod autotune;
+pub mod batchplan;
 pub mod ccp;
 pub mod microkernel;
 pub mod occupancy;
@@ -27,6 +31,7 @@ pub mod selector;
 pub mod teamsize;
 
 pub use analytical::{l1_allocation, l2_allocation, l3_allocation, original_ccp, WayAlloc};
+pub use batchplan::{BatchPlanner, BatchPolicy};
 pub use ccp::{blis_static, Ccp, GemmDims};
 pub use microkernel::MicroKernel;
 pub use occupancy::{occupancy_row, OccupancyRow};

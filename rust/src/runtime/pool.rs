@@ -49,6 +49,20 @@
 //! — nothing persists on the pool, and consecutive jobs may split at
 //! different widths (or not at all).
 //!
+//! # Team groups (batched multi-job epochs)
+//!
+//! The batched request scheduler goes further: one broadcast executes
+//! **N independent jobs** — e.g. N small GEMMs coalesced by the
+//! coordinator — by partitioning the ranks into N *groups*, one per
+//! batch member. [`PoolCtx::group`] maps this rank to its group
+//! (contiguous rank ranges from a shares table every rank passes
+//! identically), and each group gets its **own reusable barrier**
+//! ([`TeamGroup::barrier`]) so members never synchronize with each
+//! other: group `i` can be packing its member's `Bc` while group `j` is
+//! deep in its member's compute loop. Like the split, grouping is
+//! per-job state only; the pool pre-allocates `threads` group barriers
+//! (the maximum useful group count) at construction.
+//!
 //! # Idle accounting
 //!
 //! [`WorkerPool::stats`] exposes two pool-idle counters the coordinator
@@ -173,6 +187,10 @@ struct Shared {
     /// (index 0: panel team, index 1: update team). Sized at wait time
     /// (`wait_n`) because the split width is chosen per job.
     sub_barriers: [PoolBarrier; 2],
+    /// Independent barriers for the groups of a batched multi-job epoch
+    /// (one per possible group, i.e. `threads` of them). Sized at wait
+    /// time (`wait_n`) because the group widths are job parameters.
+    group_barriers: Vec<PoolBarrier>,
     births: AtomicUsize,
     /// Completed broadcast jobs.
     jobs: AtomicU64,
@@ -193,9 +211,34 @@ struct Shared {
     /// jobs whose panel queue was **empty** (nothing left to factor ahead
     /// — the lookahead pipeline's ramp-down stall).
     queue_stall_ns: AtomicU64,
+    /// Bytes zero-filled into the pinned per-worker [`Workspace`] buffers
+    /// at spawn (the NUMA first-touch; see [`prefault_workspace`]).
+    prefaulted_bytes: AtomicU64,
     /// End of the most recent job, for the idle-gap accounting.
     last_job_end: Mutex<Option<Instant>>,
     workspaces: Vec<Mutex<Workspace>>,
+}
+
+/// Elements zero-filled into each packing buffer of a pinned per-worker
+/// [`Workspace`] at spawn: 1 MiB per buffer, enough to cover a typical
+/// `Ac`/`Bc` footprint so steady-state jobs touch pre-faulted pages.
+const PREFAULT_ELEMS: usize = 1 << 17;
+
+/// First-touch a workspace's packing buffers **on the calling thread**
+/// (the zero-fill write is what places the pages on the toucher's NUMA
+/// node under first-touch placement). Workers call this right after
+/// pinning, before their first job, closing the ROADMAP remnant where
+/// the buffers were first-touched lazily inside the first job. Returns
+/// the bytes touched; [`Workspace::ensure`] never shrinks, so the
+/// placement persists for the pool's lifetime.
+fn prefault_workspace(ws: &mut Workspace) -> u64 {
+    if ws.a_buf.len() < PREFAULT_ELEMS {
+        ws.a_buf.resize(PREFAULT_ELEMS, 0.0);
+    }
+    if ws.b_buf.len() < PREFAULT_ELEMS {
+        ws.b_buf.resize(PREFAULT_ELEMS, 0.0);
+    }
+    (8 * (ws.a_buf.len() + ws.b_buf.len())) as u64
 }
 
 /// Lock, shrugging off poison: a panicked job is re-thrown by the leader,
@@ -329,6 +372,37 @@ impl<'p> PoolCtx<'p> {
         slot.fetch_add(waited, Ordering::Relaxed);
     }
 
+    /// Partition the team into contiguous *groups* — one per entry of
+    /// `shares`, entry `i` taking the next `shares[i]` ranks — and return
+    /// this rank's group. The batched multi-GEMM driver uses one group
+    /// per coalesced request; each group has an independent reusable
+    /// barrier so groups never block on each other.
+    ///
+    /// Every rank of the job must call this with the same `shares`;
+    /// entries must be positive and sum to exactly `threads`.
+    pub fn group(&self, shares: &[usize]) -> TeamGroup<'p> {
+        assert!(!shares.is_empty(), "empty shares table");
+        let mut lo = 0;
+        for (index, &share) in shares.iter().enumerate() {
+            assert!(share > 0, "group {index} has no ranks");
+            if self.rank < lo + share {
+                return TeamGroup {
+                    index,
+                    rank: self.rank - lo,
+                    threads: share,
+                    barrier: &self.shared.group_barriers[index],
+                };
+            }
+            lo += share;
+        }
+        panic!(
+            "shares {:?} sum to {} but the team is {} wide",
+            shares,
+            shares.iter().sum::<usize>(),
+            self.threads
+        );
+    }
+
     /// Split the team into a *panel* sub-team (ranks `< panel_workers`,
     /// leader included) and an *update* sub-team (the rest), each with an
     /// independent reusable barrier. Every rank of the job must call this
@@ -352,6 +426,29 @@ impl<'p> PoolCtx<'p> {
                 threads: self.threads - t_p,
                 barrier: Some(&self.shared.sub_barriers[1]),
             }
+        }
+    }
+}
+
+/// One group of a batched multi-job epoch (see [`PoolCtx::group`]):
+/// group index, group-local rank and size, plus a barrier private to this
+/// group.
+pub struct TeamGroup<'p> {
+    /// Which `shares` entry this group corresponds to.
+    pub index: usize,
+    /// Rank within the group, `0..threads`.
+    pub rank: usize,
+    /// Group size.
+    pub threads: usize,
+    barrier: &'p PoolBarrier,
+}
+
+impl TeamGroup<'_> {
+    /// Wait until every rank of **this group** reaches this point.
+    /// Independent of every other group and of the full-team barrier.
+    pub fn barrier(&self) {
+        if self.threads > 1 {
+            self.barrier.wait_n(self.threads);
         }
     }
 }
@@ -407,6 +504,10 @@ pub struct PoolStats {
     /// Rank-nanoseconds panel-team ranks waited at rejoins of jobs whose
     /// panel queue was empty (lookahead ramp-down: nothing to factor).
     pub queue_stall_ns: u64,
+    /// Bytes of pinned per-worker workspace zero-filled at spawn (the
+    /// NUMA first-touch; grows as each worker starts, constant after the
+    /// first completed job).
+    pub prefaulted_bytes: u64,
 }
 
 /// A persistent team of `threads - 1` parked workers plus the caller.
@@ -445,6 +546,7 @@ impl WorkerPool {
             done_cv: Condvar::new(),
             barrier: PoolBarrier::new(threads),
             sub_barriers: [PoolBarrier::new(threads), PoolBarrier::new(threads)],
+            group_barriers: (0..threads).map(|_| PoolBarrier::new(threads)).collect(),
             births: AtomicUsize::new(0),
             jobs: AtomicU64::new(0),
             leader_wait_ns: AtomicU64::new(0),
@@ -452,9 +554,17 @@ impl WorkerPool {
             panel_idle_ns: AtomicU64::new(0),
             update_idle_ns: AtomicU64::new(0),
             queue_stall_ns: AtomicU64::new(0),
+            prefaulted_bytes: AtomicU64::new(0),
             last_job_end: Mutex::new(None),
             workspaces: (0..threads).map(|_| Mutex::new(Workspace::new())).collect(),
         });
+        // Rank 0 is the caller's thread: first-touch its workspace here,
+        // synchronously. Workers touch their own right after pinning.
+        {
+            let mut ws0 = lock_pool(&shared.workspaces[0]);
+            let bytes = prefault_workspace(&mut ws0);
+            shared.prefaulted_bytes.fetch_add(bytes, Ordering::Relaxed);
+        }
         let mut handles = Vec::with_capacity(threads - 1);
         for rank in 1..threads {
             let sh = Arc::clone(&shared);
@@ -499,6 +609,7 @@ impl WorkerPool {
             panel_idle_ns: self.shared.panel_idle_ns.load(Ordering::Relaxed),
             update_idle_ns: self.shared.update_idle_ns.load(Ordering::Relaxed),
             queue_stall_ns: self.shared.queue_stall_ns.load(Ordering::Relaxed),
+            prefaulted_bytes: self.shared.prefaulted_bytes.load(Ordering::Relaxed),
         }
     }
 
@@ -556,6 +667,9 @@ impl WorkerPool {
             for b in &self.shared.sub_barriers {
                 b.poison();
             }
+            for b in &self.shared.group_barriers {
+                b.poison();
+            }
         }
         let wait_t0 = Instant::now();
         let mut st = lock_pool(&self.shared.state);
@@ -577,6 +691,9 @@ impl WorkerPool {
         if worker_panicked || leader_result.is_err() {
             self.shared.barrier.clear_poison();
             for b in &self.shared.sub_barriers {
+                b.clear_poison();
+            }
+            for b in &self.shared.group_barriers {
                 b.clear_poison();
             }
         }
@@ -605,6 +722,13 @@ impl Drop for WorkerPool {
 fn worker_loop(shared: Arc<Shared>, rank: usize, pin: PinPolicy) {
     let threads = shared.workspaces.len();
     apply_pin(pin, rank, threads);
+    // First-touch the pinned workspace *after* pinning and *before* the
+    // first job, so the pages land on this worker's core/node.
+    {
+        let mut ws = lock_pool(&shared.workspaces[rank]);
+        let bytes = prefault_workspace(&mut ws);
+        shared.prefaulted_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
     shared.births.fetch_add(1, Ordering::SeqCst);
     let mut seen = 0u64;
     loop {
@@ -628,10 +752,13 @@ fn worker_loop(shared: Arc<Shared>, rank: usize, pin: PinPolicy) {
         if panicked {
             // Wake (and panic out) any rank blocked on a barrier arrival
             // this rank will never make; the cascade drains the job. The
-            // sub-team barriers are poisoned too — a split job may have
-            // ranks parked on either half.
+            // sub-team and group barriers are poisoned too — a split or
+            // grouped job may have ranks parked on any of them.
             shared.barrier.poison();
             for b in &shared.sub_barriers {
+                b.poison();
+            }
+            for b in &shared.group_barriers {
                 b.poison();
             }
         }
@@ -820,7 +947,10 @@ mod tests {
     #[test]
     fn stats_count_jobs_and_idle_gaps() {
         let pool = WorkerPool::new(2);
-        assert_eq!(pool.stats(), PoolStats::default());
+        let s0 = pool.stats();
+        // No jobs yet; only the spawn-time workspace prefault shows up.
+        assert_eq!((s0.jobs, s0.leader_wait_ns, s0.idle_ns), (0, 0, 0));
+        assert!(s0.prefaulted_bytes > 0, "rank 0 prefault is synchronous: {s0:?}");
         pool.run(&|_| {});
         let s1 = pool.stats();
         assert_eq!(s1.jobs, 1);
@@ -873,6 +1003,86 @@ mod tests {
             sub.barrier();
             hits.fetch_add(1, Ordering::SeqCst);
             ctx.barrier();
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn workspaces_prefaulted_at_spawn() {
+        let pool = WorkerPool::new(3);
+        // After one completed job every worker has started (and each
+        // prefaults before its first job), so the touch accounting is
+        // complete and stable.
+        pool.run(&|ctx| {
+            let ws = ctx.workspace();
+            assert!(ws.a_buf.len() >= PREFAULT_ELEMS, "rank {} Ac not prefaulted", ctx.rank);
+            assert!(ws.b_buf.len() >= PREFAULT_ELEMS, "rank {} Bc not prefaulted", ctx.rank);
+        });
+        let expect = (3 * 2 * PREFAULT_ELEMS * 8) as u64;
+        assert_eq!(pool.stats().prefaulted_bytes, expect);
+        // The counter is a spawn-time record, not per-job.
+        pool.run(&|_| {});
+        assert_eq!(pool.stats().prefaulted_bytes, expect);
+    }
+
+    #[test]
+    fn groups_partition_contiguously_with_local_ranks() {
+        let pool = WorkerPool::new(4);
+        let masks = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+        let sums = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+        pool.run(&|ctx| {
+            let grp = ctx.group(&[2, 1, 1]);
+            masks[grp.index].fetch_or(1 << grp.rank, Ordering::SeqCst);
+            // Group barriers must release with only that group's ranks
+            // arriving (other groups never touch them).
+            sums[grp.index].fetch_add(grp.rank as u64 + 1, Ordering::SeqCst);
+            grp.barrier();
+            let expect = (grp.threads * (grp.threads + 1) / 2) as u64;
+            assert_eq!(sums[grp.index].load(Ordering::SeqCst), expect);
+            grp.barrier();
+        });
+        assert_eq!(masks[0].load(Ordering::SeqCst), 0b11, "group 0 = global ranks 0,1");
+        assert_eq!(masks[1].load(Ordering::SeqCst), 0b1);
+        assert_eq!(masks[2].load(Ordering::SeqCst), 0b1);
+    }
+
+    #[test]
+    fn single_rank_groups_have_inert_barriers() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicU64::new(0);
+        pool.run(&|ctx| {
+            let grp = ctx.group(&[1, 1]);
+            assert_eq!((grp.rank, grp.threads), (0, 1));
+            grp.barrier(); // width-1 group: must not block
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn panic_in_a_grouped_job_poisons_group_barriers_too() {
+        let pool = WorkerPool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|ctx| {
+                let grp = ctx.group(&[2, 1]);
+                if grp.index == 1 {
+                    panic!("group 1 dies");
+                }
+                // Group 0's ranks park on their group barrier; the poison
+                // cascade must wake them instead of hanging. Their own
+                // group is complete, so add an arrival that cannot
+                // complete: the full-team barrier needs group 1 too.
+                grp.barrier();
+                ctx.barrier();
+            });
+        }));
+        assert!(result.is_err());
+        // Pool (and the group barriers) usable again afterwards.
+        let hits = AtomicU64::new(0);
+        pool.run(&|ctx| {
+            let grp = ctx.group(&[2, 1]);
+            grp.barrier();
+            hits.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(hits.load(Ordering::SeqCst), 3);
     }
