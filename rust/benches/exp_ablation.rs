@@ -28,6 +28,11 @@
 //!    pinned off: requests/s, plus the new batch metrics (fused
 //!    dispatch count, mean batch size, per-request queue wait).
 //!    Appended to the same `BENCH_gemm.json`.
+//! 8. **Element width** — the same GEMM in f32 vs f64 through the same
+//!    engine (f32 gets twice the SIMD lanes and the model's doubled
+//!    cache params), and the mixed-precision LU solve (factor f32 +
+//!    iteratively refine to f64 residual accuracy) vs the plain f64
+//!    factor+solve. Appended to the same `BENCH_gemm.json`.
 use dla_codesign::arch::detect_host;
 use dla_codesign::coordinator::{BatchPolicy, CoordinatorServer, DlaRequest, ServerConfig};
 use dla_codesign::bench::{BenchGroup, JsonBench};
@@ -37,12 +42,13 @@ use dla_codesign::gemm::{
     gemm_blocked, ConfigMode, GemmEngine, Lookahead, ParallelLoop, ThreadPlan, Workspace,
     AUTO_PANEL_WORKERS,
 };
+use dla_codesign::lapack::refine::{lu_solve_f64, lu_solve_mixed, RefineOptions};
 use dla_codesign::lapack::{getf2, lu_blocked, lu_flops};
 use dla_codesign::model::ccp::GemmConfig;
 use dla_codesign::model::{refined_ccp, Ccp, GemmDims, MicroKernel};
 use dla_codesign::runtime::pool::WorkerPool;
 use dla_codesign::util::timer::measure;
-use dla_codesign::util::{MatrixF64, Pcg64, Stopwatch};
+use dla_codesign::util::{MatrixF32, MatrixF64, Pcg64, Stopwatch};
 
 fn main() {
     let arch = detect_host();
@@ -441,6 +447,91 @@ fn main() {
         );
     }
     g7.finish("bench_ablation_server_batching");
+
+    // --- 8. element width: f32 vs f64 GEMM, mixed vs plain-f64 solve ----
+    // The dtype-generic stack's payoff, measured: (a) the same GEMM in
+    // f32 vs f64 through the same engine (f32 gets 2x SIMD lanes and the
+    // model's doubled cache params), and (b) the mixed-precision LU
+    // solve (factor f32 + refine to f64 residual accuracy) vs the plain
+    // f64 factor+solve, per matrix order. Appended to BENCH_gemm.json
+    // alongside ablations 4-7.
+    println!("=== ablation 8: f32 vs f64 GEMM + mixed-precision LU solve (x{threads}) ===");
+    let mut g8 = BenchGroup::new("element width: f32 vs f64");
+    {
+        let mut eng = GemmEngine::new(arch.clone(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads, target: ParallelLoop::G4 });
+        let a32 = MatrixF32::convert_from(&a);
+        let b32 = MatrixF32::convert_from(&b);
+        let mut c32 = MatrixF32::zeros(mn, mn);
+        let f64_case = g8
+            .case(&format!("gemm f64 {mn}x{mn}x{k} x{threads}"), dims.flops(), || {
+                eng.gemm(1.0, a.view(), b.view(), 0.0, &mut c.view_mut());
+            })
+            .clone();
+        let f32_case = g8
+            .case(&format!("gemm f32 {mn}x{mn}x{k} x{threads}"), dims.flops(), || {
+                eng.gemm_f32(1.0, a32.view(), b32.view(), 0.0, &mut c32.view_mut());
+            })
+            .clone();
+        let ratio = f64_case.measurement.mean_s / f32_case.measurement.mean_s;
+        println!(
+            "  f32 {:.2} GFLOPS vs f64 {:.2} GFLOPS ({ratio:.2}x)",
+            f32_case.gflops(),
+            f64_case.gflops()
+        );
+        j.entry(
+            "dtype_gemm_f32_vs_f64",
+            &[
+                ("threads", threads as f64),
+                ("mn", mn as f64),
+                ("k", k as f64),
+                ("f64_gflops", f64_case.gflops()),
+                ("f32_gflops", f32_case.gflops()),
+                ("f32_speedup", ratio),
+            ],
+        );
+    }
+    for &s in &lu_sizes {
+        let mut rng8 = Pcg64::seed(s as u64 ^ 0x5eed);
+        let a0 = MatrixF64::random_diag_dominant(s, &mut rng8);
+        let rhs = MatrixF64::random(s, 1, &mut rng8);
+        let mut eng = GemmEngine::new(arch.clone(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads, target: ParallelLoop::G4 });
+        let sw = Stopwatch::start();
+        let x64 = lu_solve_f64(&a0, &rhs, lu_block, &mut eng).expect("diag-dominant solve");
+        let t_f64 = sw.elapsed_secs();
+        let opts = RefineOptions { block: lu_block, ..Default::default() };
+        let sw = Stopwatch::start();
+        let res = lu_solve_mixed(&a0, &rhs, &opts, &mut eng).expect("diag-dominant mixed solve");
+        let t_mixed = sw.elapsed_secs();
+        assert!(res.x.max_abs_diff(&x64) < 1e-6, "mixed and f64 answers must agree");
+        println!(
+            "  n={s}: mixed {:.4}s ({} iters, fallback={}) vs f64 {:.4}s ({:.2}x)",
+            t_mixed,
+            res.iterations,
+            res.fell_back,
+            t_f64,
+            t_f64 / t_mixed
+        );
+        g8.record(&format!("lu solve f64 n={s} b={lu_block} x{threads}"), t_f64, lu_flops(s));
+        g8.record(&format!("lu solve mixed n={s} b={lu_block} x{threads}"), t_mixed, lu_flops(s));
+        j.entry(
+            &format!("mixed_lu_solve_n{s}"),
+            &[
+                ("threads", threads as f64),
+                ("block", lu_block as f64),
+                ("f64_solve_seconds", t_f64),
+                ("mixed_solve_seconds", t_mixed),
+                ("mixed_speedup", t_f64 / t_mixed),
+                ("refine_iters", res.iterations as f64),
+                ("fell_back", if res.fell_back { 1.0 } else { 0.0 }),
+                ("f32_factor_seconds", res.f32_factor_seconds),
+                ("refine_seconds", res.refine_seconds),
+                ("residual", res.residual),
+            ],
+        );
+    }
+    g8.finish("bench_ablation_dtype");
 
     match j.write("BENCH_gemm.json") {
         Ok(()) => println!(

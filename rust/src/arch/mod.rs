@@ -58,6 +58,12 @@ impl RegisterFile {
     pub fn f64_lanes(&self) -> usize {
         self.vector_bits / 64
     }
+
+    /// Lanes per vector register for an element of `elem_bytes` bytes
+    /// (e.g. 4 for f32: twice the FP64 lane count on every SIMD ISA).
+    pub fn lanes_for(&self, elem_bytes: usize) -> usize {
+        self.vector_bits / (8 * elem_bytes)
+    }
 }
 
 /// A target architecture: cache hierarchy (L1 first) + compute resources.
@@ -97,6 +103,12 @@ impl Arch {
         self.freq_ghz * self.fma_per_cycle * self.regs.f64_lanes() as f64 * 2.0
     }
 
+    /// Peak GFLOPS of one core at a given element width in bytes (f32
+    /// doubles the lane count and therefore the peak).
+    pub fn peak_gflops_core_for(&self, elem_bytes: usize) -> f64 {
+        self.freq_ghz * self.fma_per_cycle * self.regs.lanes_for(elem_bytes) as f64 * 2.0
+    }
+
     /// Peak FP64 GFLOPS of the full socket.
     pub fn peak_gflops_socket(&self) -> f64 {
         self.peak_gflops_core() * self.cores as f64
@@ -105,6 +117,11 @@ impl Arch {
     /// FP64 elements per cache line (all models count in elements).
     pub fn line_elems(&self) -> usize {
         self.levels[0].line_bytes / 8
+    }
+
+    /// Elements per cache line at a given element width in bytes.
+    pub fn line_elems_for(&self, elem_bytes: usize) -> usize {
+        self.levels[0].line_bytes / elem_bytes
     }
 }
 
@@ -159,6 +176,18 @@ mod tests {
         // 2.3 GHz * 2 FMA/cyc * 4 lanes * 2 flops = 36.8 GFLOPS/core.
         assert!((e.peak_gflops_core() - 36.8).abs() < 1e-9);
         assert!((e.peak_gflops_socket() - 16.0 * 36.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn element_width_scaling() {
+        let e = epyc7282();
+        // f32 doubles lanes, elements-per-line and peak GFLOPS.
+        assert_eq!(e.regs.lanes_for(8), e.regs.f64_lanes());
+        assert_eq!(e.regs.lanes_for(4), 2 * e.regs.f64_lanes());
+        assert_eq!(e.line_elems_for(8), e.line_elems());
+        assert_eq!(e.line_elems_for(4), 2 * e.line_elems());
+        assert!((e.peak_gflops_core_for(8) - e.peak_gflops_core()).abs() < 1e-12);
+        assert!((e.peak_gflops_core_for(4) - 2.0 * e.peak_gflops_core()).abs() < 1e-9);
     }
 
     #[test]

@@ -3,14 +3,70 @@
 //! between-job parked time, and the lookahead pipeline's per-phase split
 //! — panel-team idle vs update-team idle vs queue-empty stalls) so
 //! lookahead gains are observable in the server, not just in offline
-//! benches — and the batch scheduler's coalescing counters
+//! benches — the batch scheduler's coalescing counters
 //! ([`BatchMetrics`]: batch-size histogram, coalesced-vs-solo dispatch
-//! counts, per-request admission-queue wait).
+//! counts, per-request admission-queue wait) — and the mixed-precision
+//! path's per-precision telemetry ([`RefineMetrics`]: refinement
+//! iteration counts, f32-factor vs f64-refine seconds, fallbacks).
 
 use std::collections::BTreeMap;
 
 use crate::runtime::pool::PoolStats;
 use crate::util::stats::{Accumulator, LatencyHistogram};
+
+/// Counters of the mixed-precision solve path (`MixedSolve` requests):
+/// how many solves ran, how hard the f64 refinement had to work, how the
+/// time split between the f32 factorization and the f64 refinement, and
+/// how often the clean f64 fallback fired.
+#[derive(Clone, Debug)]
+pub struct RefineMetrics {
+    /// Mixed-precision solves served.
+    pub solves: u64,
+    /// Solves that fell back to the plain f64 path (ill-conditioned or
+    /// f32-singular systems).
+    pub fallbacks: u64,
+    /// Refinement iterations per solve.
+    pub iterations: Accumulator,
+    /// Seconds spent factoring in f32, per solve.
+    pub f32_factor_s: Accumulator,
+    /// Seconds spent in the f64 residual/correction loop, per solve.
+    pub refine_s: Accumulator,
+}
+
+impl Default for RefineMetrics {
+    /// `Accumulator::new()` (not an all-zero accumulator) so `min`
+    /// carries the +inf sentinel until the first solve is recorded.
+    fn default() -> Self {
+        Self {
+            solves: 0,
+            fallbacks: 0,
+            iterations: Accumulator::new(),
+            f32_factor_s: Accumulator::new(),
+            refine_s: Accumulator::new(),
+        }
+    }
+}
+
+impl RefineMetrics {
+    /// Record one mixed-precision solve.
+    pub fn record(&mut self, iterations: usize, fell_back: bool, f32_factor_s: f64, refine_s: f64) {
+        self.solves += 1;
+        if fell_back {
+            self.fallbacks += 1;
+        }
+        self.iterations.add(iterations as f64);
+        self.f32_factor_s.add(f32_factor_s);
+        self.refine_s.add(refine_s);
+    }
+
+    pub fn merge(&mut self, other: &RefineMetrics) {
+        self.solves += other.solves;
+        self.fallbacks += other.fallbacks;
+        self.iterations.merge(&other.iterations);
+        self.f32_factor_s.merge(&other.f32_factor_s);
+        self.refine_s.merge(&other.refine_s);
+    }
+}
 
 /// Counters of the server's batched-GEMM admission queue (see
 /// `coordinator::server`): how often small requests actually coalesced,
@@ -113,6 +169,9 @@ pub struct Metrics {
     /// Batched-dispatch accounting (all-zero on servers without
     /// batching).
     batch: BatchMetrics,
+    /// Mixed-precision solve accounting (all-zero until a `MixedSolve`
+    /// request is served).
+    refine: RefineMetrics,
 }
 
 impl Metrics {
@@ -170,6 +229,16 @@ impl Metrics {
         &self.batch
     }
 
+    /// Record one mixed-precision solve (see [`RefineMetrics::record`]).
+    pub fn record_refine(&mut self, iterations: usize, fell_back: bool, f32_s: f64, refine_s: f64) {
+        self.refine.record(iterations, fell_back, f32_s, refine_s);
+    }
+
+    /// The mixed-precision path's per-precision counters.
+    pub fn refine_stats(&self) -> &RefineMetrics {
+        &self.refine
+    }
+
     pub fn merge(&mut self, other: Metrics) {
         // Workers of one server share a single pool, so every snapshot
         // observes the same monotone counters: keep the latest (largest
@@ -184,6 +253,7 @@ impl Metrics {
             }
         }
         self.batch.merge(&other.batch);
+        self.refine.merge(&other.refine);
         for (kind, km) in other.kinds {
             let mine = self.kinds.entry(kind).or_default();
             mine.flops.merge(&km.flops);
@@ -239,6 +309,17 @@ impl Metrics {
                 self.batch.mean_batch_size(),
                 self.batch.solo,
                 self.batch.queue_wait_ns.mean() / 1e3,
+            ));
+        }
+        if self.refine.solves > 0 {
+            out.push_str(&format!(
+                "mixed precision: {} solves, mean {:.1} refine iters, {} fallbacks, \
+                 f32-factor mean {:.3} ms, refine mean {:.3} ms\n",
+                self.refine.solves,
+                self.refine.iterations.mean(),
+                self.refine.fallbacks,
+                self.refine.f32_factor_s.mean() * 1e3,
+                self.refine.refine_s.mean() * 1e3,
             ));
         }
         out
@@ -310,6 +391,28 @@ mod tests {
         let s = a.summary();
         assert!(s.contains("batching: 2 fused dispatches"), "{s}");
         assert!(s.contains("1 solo"), "{s}");
+    }
+
+    #[test]
+    fn refine_metrics_record_merge_and_summarize() {
+        let mut a = Metrics::new();
+        assert_eq!(a.refine_stats().solves, 0);
+        assert!(!a.summary().contains("mixed precision:"), "no line without mixed traffic");
+        a.record_refine(2, false, 0.010, 0.004);
+        a.record_refine(5, true, 0.012, 0.020);
+        let r = a.refine_stats();
+        assert_eq!((r.solves, r.fallbacks), (2, 1));
+        assert!((r.iterations.mean() - 3.5).abs() < 1e-12);
+        assert_eq!(r.iterations.count, 2);
+        let mut b = Metrics::new();
+        b.record_refine(1, false, 0.001, 0.001);
+        a.merge(b);
+        let r = a.refine_stats();
+        assert_eq!((r.solves, r.fallbacks), (3, 1));
+        assert_eq!(r.iterations.count, 3);
+        let s = a.summary();
+        assert!(s.contains("mixed precision: 3 solves"), "{s}");
+        assert!(s.contains("1 fallbacks"), "{s}");
     }
 
     #[test]

@@ -41,13 +41,14 @@ pub mod server;
 #[cfg(feature = "pjrt")]
 pub use lu_driver::{lu_via_artifacts, LuArtifactResult};
 pub use crate::model::batchplan::BatchPolicy;
-pub use metrics::{BatchMetrics, Metrics};
+pub use metrics::{BatchMetrics, Metrics, RefineMetrics};
 pub use requests::{DlaRequest, DlaResponse};
 pub use server::{CoordinatorServer, ServerConfig};
 
 use crate::arch::Arch;
 use crate::gemm::{ConfigMode, GemmEngine};
 use crate::lapack;
+use crate::lapack::refine::RefineOptions;
 use crate::util::{MatrixF64, Stopwatch};
 use anyhow::Result;
 
@@ -108,6 +109,17 @@ impl Coordinator {
                     seconds: dt,
                 }
             }
+            DlaRequest::GemmF32 { alpha, a, b, beta, mut c } => {
+                let flops = 2.0 * a.rows() as f64 * b.cols() as f64 * a.cols() as f64;
+                self.engine.gemm_f32(alpha, a.view(), b.view(), beta, &mut c.view_mut());
+                let dt = sw.elapsed_secs();
+                self.metrics.record("gemm_f32", dt, flops);
+                DlaResponse::MatrixF32 {
+                    result: c,
+                    config: self.engine.last_config.map(|c| c.to_string()),
+                    seconds: dt,
+                }
+            }
             DlaRequest::LuFactor { a, block } => {
                 let flops = lapack::lu::lu_flops(a.rows());
                 let factors = lapack::lu_factor(&a, block, &mut self.engine)
@@ -115,6 +127,27 @@ impl Coordinator {
                 let dt = sw.elapsed_secs();
                 self.metrics.record("lu", dt, flops);
                 DlaResponse::Lu { factors, seconds: dt }
+            }
+            DlaRequest::MixedSolve { a, rhs, block } => {
+                let flops = lapack::lu::lu_flops(a.rows());
+                let opts = RefineOptions { block, ..Default::default() };
+                let res = lapack::lu_solve_mixed(&a, &rhs, &opts, &mut self.engine)
+                    .map_err(|col| anyhow::anyhow!("singular at column {col}"))?;
+                let dt = sw.elapsed_secs();
+                self.metrics.record("mixed_lu", dt, flops);
+                self.metrics.record_refine(
+                    res.iterations,
+                    res.fell_back,
+                    res.f32_factor_seconds,
+                    res.refine_seconds,
+                );
+                DlaResponse::MixedSolve {
+                    x: res.x,
+                    iterations: res.iterations,
+                    fell_back: res.fell_back,
+                    residual: res.residual,
+                    seconds: dt,
+                }
             }
             DlaRequest::Cholesky { a, block } => {
                 let s = a.rows();
@@ -184,6 +217,42 @@ mod tests {
         let a = MatrixF64::zeros(8, 8);
         let err = co.handle(DlaRequest::LuFactor { a, block: 4 });
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn coordinator_mixed_solve_and_f32_gemm() {
+        use crate::util::MatrixF32;
+        let mut co = Coordinator::new(host_xeon(), ConfigMode::Refined);
+        let mut rng = Pcg64::seed(5);
+        // Mixed-precision solve: f64-level residual, refine metrics.
+        let a = MatrixF64::random_diag_dominant(48, &mut rng);
+        let x_true = MatrixF64::random(48, 1, &mut rng);
+        let mut rhs = MatrixF64::zeros(48, 1);
+        crate::gemm::gemm_reference(1.0, a.view(), x_true.view(), 0.0, &mut rhs.view_mut());
+        let resp = co.handle(DlaRequest::MixedSolve { a, rhs, block: 16 }).unwrap();
+        let DlaResponse::MixedSolve { x, iterations, fell_back, residual, .. } = resp else {
+            panic!()
+        };
+        assert!(!fell_back);
+        assert!(iterations >= 1);
+        assert!(residual <= 1e-10, "{residual}");
+        assert!(x.max_abs_diff(&x_true) < 1e-8);
+        assert_eq!(co.metrics.count("mixed_lu"), 1);
+        assert_eq!(co.metrics.refine_stats().solves, 1);
+        assert!(co.metrics.summary().contains("mixed precision:"));
+        // f32 GEMM request on the same coordinator.
+        let a = MatrixF32::random(20, 12, &mut rng);
+        let b = MatrixF32::random(12, 16, &mut rng);
+        let c = MatrixF32::zeros(20, 16);
+        let resp = co
+            .handle(DlaRequest::GemmF32 { alpha: 1.0, a: a.clone(), b: b.clone(), beta: 0.0, c })
+            .unwrap();
+        let DlaResponse::MatrixF32 { result, config, .. } = resp else { panic!() };
+        let mut expect = MatrixF32::zeros(20, 16);
+        crate::gemm::gemm_reference(1.0f32, a.view(), b.view(), 0.0f32, &mut expect.view_mut());
+        assert!(result.max_abs_diff(&expect) < 1e-4);
+        assert!(config.is_some());
+        assert_eq!(co.metrics.count("gemm_f32"), 1);
     }
 
     #[test]

@@ -2,14 +2,22 @@
 
 use crate::lapack::LuFactors;
 use crate::model::GemmDims;
-use crate::util::MatrixF64;
+use crate::util::{MatrixF32, MatrixF64};
 
 /// A DLA service request.
 pub enum DlaRequest {
-    /// `C = alpha * A * B + beta * C`.
+    /// `C = alpha * A * B + beta * C` (FP64).
     Gemm { alpha: f64, a: MatrixF64, b: MatrixF64, beta: f64, c: MatrixF64 },
+    /// `C = alpha * A * B + beta * C` in f32: same pooled drivers, the
+    /// model's f32-width (larger) cache configs and double-lane kernels.
+    GemmF32 { alpha: f32, a: MatrixF32, b: MatrixF32, beta: f32, c: MatrixF32 },
     /// Blocked LU with partial pivoting.
     LuFactor { a: MatrixF64, block: usize },
+    /// Mixed-precision solve of `A x = rhs`: factor in f32 on the pooled
+    /// lookahead pipeline, iteratively refine the solution to f64
+    /// residual accuracy (with a clean f64 fallback) — see
+    /// [`crate::lapack::refine`].
+    MixedSolve { a: MatrixF64, rhs: MatrixF64, block: usize },
     /// Blocked lower Cholesky (SPD input).
     Cholesky { a: MatrixF64, block: usize },
 }
@@ -19,14 +27,18 @@ impl DlaRequest {
     pub fn kind(&self) -> &'static str {
         match self {
             DlaRequest::Gemm { .. } => "gemm",
+            DlaRequest::GemmF32 { .. } => "gemm_f32",
             DlaRequest::LuFactor { .. } => "lu",
+            DlaRequest::MixedSolve { .. } => "mixed_lu",
             DlaRequest::Cholesky { .. } => "cholesky",
         }
     }
 
-    /// The GEMM problem shape, for requests that are GEMMs — the batch
-    /// scheduler's bucketing/admission key. `None` for factorizations
-    /// (they bypass the batcher and keep the lookahead path).
+    /// The GEMM problem shape, for requests that are **f64** GEMMs — the
+    /// batch scheduler's bucketing/admission key. `None` for
+    /// factorizations and for f32 GEMMs (the admission queue buckets one
+    /// dtype; f32 requests keep the solo path on the shared pool —
+    /// dtype-aware buckets are a ROADMAP follow-on).
     pub fn gemm_dims(&self) -> Option<GemmDims> {
         match self {
             DlaRequest::Gemm { a, b, .. } => Some(GemmDims::new(a.rows(), b.cols(), a.cols())),
@@ -34,12 +46,16 @@ impl DlaRequest {
         }
     }
 
-    /// Are the operand shapes of a GEMM request mutually consistent?
-    /// (Inconsistent requests are never admitted to the batcher; the
-    /// solo path surfaces the mismatch exactly as before.)
+    /// Are the operand shapes of a GEMM request (either precision)
+    /// mutually consistent? `false` for non-GEMM kinds. (Inconsistent
+    /// requests are never admitted to the batcher; the solo path
+    /// surfaces the mismatch exactly as before.)
     pub fn gemm_shape_consistent(&self) -> bool {
         match self {
             DlaRequest::Gemm { a, b, c, .. } => {
+                a.cols() == b.rows() && c.rows() == a.rows() && c.cols() == b.cols()
+            }
+            DlaRequest::GemmF32 { a, b, c, .. } => {
                 a.cols() == b.rows() && c.rows() == a.rows() && c.cols() == b.cols()
             }
             _ => false,
@@ -50,7 +66,13 @@ impl DlaRequest {
     pub fn flops(&self) -> f64 {
         match self {
             DlaRequest::Gemm { a, b, .. } => 2.0 * a.rows() as f64 * b.cols() as f64 * a.cols() as f64,
+            DlaRequest::GemmF32 { a, b, .. } => {
+                2.0 * a.rows() as f64 * b.cols() as f64 * a.cols() as f64
+            }
             DlaRequest::LuFactor { a, .. } => crate::lapack::lu::lu_flops(a.rows()),
+            // The O(n³) factorization dominates; refinement is O(n²) per
+            // iteration.
+            DlaRequest::MixedSolve { a, .. } => crate::lapack::lu::lu_flops(a.rows()),
             DlaRequest::Cholesky { a, .. } => (a.rows() as f64).powi(3) / 3.0,
         }
     }
@@ -61,14 +83,28 @@ pub enum DlaResponse {
     /// Result matrix (GEMM / Cholesky), optionally with the configuration
     /// string the co-design selector chose.
     Matrix { result: MatrixF64, config: Option<String>, seconds: f64 },
+    /// f32 result matrix (the `GemmF32` request kind).
+    MatrixF32 { result: MatrixF32, config: Option<String>, seconds: f64 },
     /// LU factors.
     Lu { factors: LuFactors, seconds: f64 },
+    /// Mixed-precision solve: the f64 solution plus the refinement
+    /// telemetry (iterations, fallback, final scaled residual).
+    MixedSolve {
+        x: MatrixF64,
+        iterations: usize,
+        fell_back: bool,
+        residual: f64,
+        seconds: f64,
+    },
 }
 
 impl DlaResponse {
     pub fn seconds(&self) -> f64 {
         match self {
-            DlaResponse::Matrix { seconds, .. } | DlaResponse::Lu { seconds, .. } => *seconds,
+            DlaResponse::Matrix { seconds, .. }
+            | DlaResponse::MatrixF32 { seconds, .. }
+            | DlaResponse::Lu { seconds, .. }
+            | DlaResponse::MixedSolve { seconds, .. } => *seconds,
         }
     }
 }
@@ -103,5 +139,37 @@ mod tests {
             c: MatrixF64::zeros(10, 30),
         };
         assert!(!bad.gemm_shape_consistent());
+    }
+
+    #[test]
+    fn f32_and_mixed_kinds_bypass_the_batcher() {
+        let g32 = DlaRequest::GemmF32 {
+            alpha: 1.0,
+            a: MatrixF32::zeros(10, 20),
+            b: MatrixF32::zeros(20, 30),
+            beta: 0.0,
+            c: MatrixF32::zeros(10, 30),
+        };
+        assert_eq!(g32.kind(), "gemm_f32");
+        assert_eq!(g32.flops(), 2.0 * 10.0 * 30.0 * 20.0);
+        assert_eq!(g32.gemm_dims(), None, "f32 GEMMs keep the solo path");
+        assert!(g32.gemm_shape_consistent(), "well-formed f32 shapes are consistent");
+        let bad32 = DlaRequest::GemmF32 {
+            alpha: 1.0,
+            a: MatrixF32::zeros(10, 21),
+            b: MatrixF32::zeros(20, 30),
+            beta: 0.0,
+            c: MatrixF32::zeros(10, 30),
+        };
+        assert!(!bad32.gemm_shape_consistent());
+        let mx = DlaRequest::MixedSolve {
+            a: MatrixF64::zeros(30, 30),
+            rhs: MatrixF64::zeros(30, 2),
+            block: 8,
+        };
+        assert_eq!(mx.kind(), "mixed_lu");
+        assert_eq!(mx.gemm_dims(), None, "factorization-class: bypasses the batcher");
+        assert!(!mx.gemm_shape_consistent());
+        assert!(mx.flops() > 0.0);
     }
 }

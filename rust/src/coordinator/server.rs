@@ -587,6 +587,57 @@ mod tests {
     }
 
     #[test]
+    fn server_serves_both_dtypes_on_one_shared_pool() {
+        use crate::util::MatrixF32;
+        // One 3-thread pool; f64 GEMM + f32 GEMM + mixed-precision solve
+        // all flow through it (the mixed solve factors in f32 on the
+        // pooled pipeline and refines with f64 pooled GEMMs).
+        let server = CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined)
+                .with_workers(2)
+                .with_gemm_threads(3),
+        );
+        let mut rng = Pcg64::seed(31);
+        let g64 = server.submit(gemm_req(&mut rng, 64, 48, 16));
+        let a32 = MatrixF32::random(64, 24, &mut rng);
+        let b32 = MatrixF32::random(24, 48, &mut rng);
+        let g32 = server.submit(DlaRequest::GemmF32 {
+            alpha: 1.0,
+            a: a32.clone(),
+            b: b32.clone(),
+            beta: 0.0,
+            c: MatrixF32::zeros(64, 48),
+        });
+        let a = crate::util::MatrixF64::random_diag_dominant(96, &mut rng);
+        let x_true = crate::util::MatrixF64::random(96, 1, &mut rng);
+        let mut rhs = crate::util::MatrixF64::zeros(96, 1);
+        crate::gemm::gemm_reference(1.0, a.view(), x_true.view(), 0.0, &mut rhs.view_mut());
+        let mx = server.submit(DlaRequest::MixedSolve { a, rhs, block: 24 });
+        g64.recv().unwrap().unwrap();
+        let DlaResponse::MatrixF32 { result, .. } = g32.recv().unwrap().unwrap() else {
+            panic!()
+        };
+        let mut expect = MatrixF32::zeros(64, 48);
+        crate::gemm::gemm_reference(1.0f32, a32.view(), b32.view(), 0.0f32, &mut expect.view_mut());
+        assert!(result.max_abs_diff(&expect) < 1e-3);
+        let DlaResponse::MixedSolve { x, fell_back, residual, .. } = mx.recv().unwrap().unwrap()
+        else {
+            panic!()
+        };
+        assert!(!fell_back);
+        assert!(residual <= 1e-10, "{residual}");
+        assert!(x.max_abs_diff(&x_true) < 1e-8);
+        let metrics = server.shutdown();
+        assert_eq!(metrics.count("gemm"), 1);
+        assert_eq!(metrics.count("gemm_f32"), 1);
+        assert_eq!(metrics.count("mixed_lu"), 1);
+        assert_eq!(metrics.refine_stats().solves, 1);
+        let pool = metrics.pool_stats().expect("pooled server must surface pool stats");
+        assert!(pool.jobs > 0, "both dtypes must have dispatched pooled jobs: {pool:?}");
+        assert!(metrics.summary().contains("mixed precision:"));
+    }
+
+    #[test]
     fn server_propagates_errors() {
         let server = CoordinatorServer::start(ServerConfig::new(host_xeon(), ConfigMode::Refined));
         let resp = server.call(DlaRequest::LuFactor { a: MatrixF64::zeros(6, 6), block: 2 });

@@ -41,18 +41,53 @@ use std::sync::Arc;
 use crate::arch::Arch;
 use crate::model::batchplan::BatchPlanner;
 use crate::model::ccp::GemmConfig;
-use crate::model::selector::{select_from, AnalyticScorer};
+use crate::model::selector::{select_from_elem, AnalyticScorer};
 use crate::model::teamsize::{PanelShape, TeamSizeSelector, TeamSizeStats};
-use crate::model::{blis_static, original_ccp, refined_ccp, GemmDims, MicroKernel};
+use crate::model::{blis_static_dt, original_ccp_elem, refined_ccp_elem, GemmDims, MicroKernel};
 use crate::runtime::pool::{SubTeam, WorkerPool};
+use crate::util::elem::{DType, Elem};
 use crate::util::matrix::{MatView, MatViewMut};
 
 use super::blocked::{gemm_blocked, Workspace};
-use super::microkernel::{for_shape, registry, MicroKernelImpl};
+use super::microkernel::{for_shape, for_shape_f32, registry, registry_f32, MicroKernelImpl};
 use super::parallel::{
     gemm_batch_parallel, gemm_fused_trailing_ranges, gemm_fused_trailing_ranges_seq,
     gemm_parallel, BatchGemm, ThreadPlan,
 };
+
+/// An element type the [`GemmEngine`] can drive end to end: ties an
+/// [`Elem`] to its host micro-kernel registry and to the engine's
+/// per-dtype kernel set. The engine's generic entry points
+/// ([`GemmEngine::gemm_t`], [`GemmEngine::gemm_fused_trailing_ranges_t`],
+/// [`GemmEngine::gemm_batch_t`], …) are bounded by this; `f64` and `f32`
+/// are the provided instantiations.
+pub trait GemmElem: Elem {
+    /// The host registry of runnable kernels for this element type
+    /// (memoized; see [`crate::gemm::microkernel`]).
+    fn host_kernel(spec: MicroKernel) -> Option<MicroKernelImpl<Self>>;
+    /// The engine's registered kernel set for this element type.
+    fn engine_kernels(engine: &GemmEngine) -> &[MicroKernelImpl<Self>];
+}
+
+impl GemmElem for f64 {
+    fn host_kernel(spec: MicroKernel) -> Option<MicroKernelImpl<f64>> {
+        for_shape(spec)
+    }
+
+    fn engine_kernels(engine: &GemmEngine) -> &[MicroKernelImpl<f64>] {
+        &engine.kernels
+    }
+}
+
+impl GemmElem for f32 {
+    fn host_kernel(spec: MicroKernel) -> Option<MicroKernelImpl<f32>> {
+        for_shape_f32(spec)
+    }
+
+    fn engine_kernels(engine: &GemmEngine) -> &[MicroKernelImpl<f32>] {
+        &engine.kernels_f32
+    }
+}
 
 /// Lookahead policy for the blocked factorization drivers: while the
 /// update sub-team finishes a trailing update, a panel sub-team factors
@@ -159,14 +194,15 @@ impl Lookahead {
     }
 }
 
-/// One item of a batched GEMM call ([`GemmEngine::gemm_batch`]):
+/// One item of a batched GEMM call ([`GemmEngine::gemm_batch`] /
+/// [`GemmEngine::gemm_batch_t`]):
 /// `C = alpha * A * B + beta * C`, independent of every other item.
-pub struct GemmBatchItem<'a> {
-    pub alpha: f64,
-    pub a: MatView<'a>,
-    pub b: MatView<'a>,
-    pub beta: f64,
-    pub c: MatViewMut<'a>,
+pub struct GemmBatchItem<'a, E = f64> {
+    pub alpha: E,
+    pub a: MatView<'a, E>,
+    pub b: MatView<'a, E>,
+    pub beta: E,
+    pub c: MatViewMut<'a, E>,
 }
 
 /// Configuration policy for the engine.
@@ -228,8 +264,12 @@ pub struct GemmEngine {
     /// environment override, else the heuristic for the plan width
     /// (resolved by [`Self::lookahead`]).
     lookahead: Option<Lookahead>,
-    /// Memoized `(mode, dims) -> config` selections.
-    config_cache: RefCell<HashMap<(ModeKey, GemmDims), GemmConfig>>,
+    /// Host kernel set for the f32 path (never restricted by
+    /// [`Self::with_kernels`], which pins the f64 family for the
+    /// experiment harness).
+    kernels_f32: Vec<MicroKernelImpl<f32>>,
+    /// Memoized `(mode, dtype, dims) -> config` selections.
+    config_cache: RefCell<HashMap<(ModeKey, DType, GemmDims), GemmConfig>>,
     cache_stats: Cell<ConfigCacheStats>,
     /// Memoized panel-team-size selections (the malleable `t_p` model).
     team_sizer: TeamSizeSelector,
@@ -269,6 +309,7 @@ impl GemmEngine {
             mode,
             plan: ThreadPlan::sequential(),
             kernels,
+            kernels_f32: registry_f32(),
             workspace: Workspace::new(),
             pool: None,
             lookahead: None,
@@ -365,9 +406,16 @@ impl GemmEngine {
     /// compares like-for-like implementations (a scalar 8x8 would rank
     /// well on paper and run an order of magnitude slower).
     pub fn family(&self) -> Vec<MicroKernel> {
-        let any_simd = self.kernels.iter().any(|k| k.simd);
-        let mut f: Vec<MicroKernel> = self
-            .kernels
+        self.family_t::<f64>()
+    }
+
+    /// The selection family for an element type (`f64` respects a
+    /// [`Self::with_kernels`] restriction; `f32` always uses the host
+    /// registry).
+    pub fn family_t<E: GemmElem>(&self) -> Vec<MicroKernel> {
+        let kernels = E::engine_kernels(self);
+        let any_simd = kernels.iter().any(|k| k.simd);
+        let mut f: Vec<MicroKernel> = kernels
             .iter()
             .filter(|k| !k.prefetch && (!any_simd || k.simd))
             .map(|k| k.spec)
@@ -378,34 +426,74 @@ impl GemmEngine {
     }
 
     fn implementation_for(&self, spec: MicroKernel) -> MicroKernelImpl {
-        self.kernels
+        self.implementation_for_t::<f64>(spec)
+    }
+
+    fn implementation_for_t<E: GemmElem>(&self, spec: MicroKernel) -> MicroKernelImpl<E> {
+        E::engine_kernels(self)
             .iter()
             .find(|k| k.spec == spec && !k.prefetch)
             .copied()
-            .or_else(|| for_shape(spec))
-            .unwrap_or_else(|| panic!("no implementation for {spec}"))
+            .or_else(|| E::host_kernel(spec))
+            .unwrap_or_else(|| panic!("no {} implementation for {spec}", E::DTYPE))
     }
 
-    /// Run the configured selection policy for `dims` (uncached).
-    fn compute_config(&self, dims: GemmDims) -> GemmConfig {
+    /// Run the configured selection policy for `dims` (uncached), per
+    /// element type: the CCP model and scorer count elements of
+    /// `E::DTYPE.size_bytes()` bytes, so the f32 instantiation picks
+    /// larger `mc`/`kc`/`nc` and double-height tiles, while the f64
+    /// instantiation reproduces the historical selection exactly.
+    fn compute_config<E: GemmElem>(&self, dims: GemmDims) -> GemmConfig {
+        let esize = E::DTYPE.size_bytes();
         match &self.mode {
             ConfigMode::BlisStatic => {
-                let cfg = blis_static(&self.arch.name)
+                let cfg = blis_static_dt(&self.arch.name, E::DTYPE)
                     .expect("no BLIS static preset for this architecture");
                 GemmConfig { mk: cfg.mk, ccp: cfg.ccp.clamp_to(dims) }
             }
             ConfigMode::OriginalModel => {
-                let mk = blis_static(&self.arch.name).map(|c| c.mk).unwrap_or(MicroKernel::new(8, 6));
-                GemmConfig { mk, ccp: original_ccp(&self.arch, mk).clamp_to(dims) }
+                let mk = blis_static_dt(&self.arch.name, E::DTYPE)
+                    .map(|c| c.mk)
+                    .unwrap_or(MicroKernel::new(8, 6));
+                GemmConfig { mk, ccp: original_ccp_elem(&self.arch, mk, esize).clamp_to(dims) }
             }
             ConfigMode::Refined => {
-                select_from(&self.arch, dims, &AnalyticScorer, &self.family()).config
+                select_from_elem(&self.arch, dims, &AnalyticScorer, &self.family_t::<E>(), esize)
+                    .config
             }
+            // The pinned modes pin an *f64 harness* shape; a dtype whose
+            // registry cannot run that shape (e.g. MK12x4 has no f32
+            // twin) falls back to the width-aware dynamic selection
+            // instead of panicking in implementation_for_t. The f64 path
+            // always honors the pin — unknown f64 shapes keep failing
+            // loudly there, exactly as before.
             ConfigMode::RefinedWithKernel(mk) => {
-                GemmConfig { mk: *mk, ccp: refined_ccp(&self.arch, *mk, dims).clamp_to(dims) }
+                if E::DTYPE == DType::F64 || self.has_impl_t::<E>(*mk) {
+                    GemmConfig {
+                        mk: *mk,
+                        ccp: refined_ccp_elem(&self.arch, *mk, dims, esize).clamp_to(dims),
+                    }
+                } else {
+                    select_from_elem(&self.arch, dims, &AnalyticScorer, &self.family_t::<E>(), esize)
+                        .config
+                }
             }
-            ConfigMode::Fixed(cfg) => GemmConfig { mk: cfg.mk, ccp: cfg.ccp.clamp_to(dims) },
+            ConfigMode::Fixed(cfg) => {
+                if E::DTYPE == DType::F64 || self.has_impl_t::<E>(cfg.mk) {
+                    GemmConfig { mk: cfg.mk, ccp: cfg.ccp.clamp_to(dims) }
+                } else {
+                    select_from_elem(&self.arch, dims, &AnalyticScorer, &self.family_t::<E>(), esize)
+                        .config
+                }
+            }
         }
+    }
+
+    /// Does this engine have a runnable `E` implementation for `spec`
+    /// (registered or host-registry)?
+    fn has_impl_t<E: GemmElem>(&self, spec: MicroKernel) -> bool {
+        E::engine_kernels(self).iter().any(|k| k.spec == spec && !k.prefetch)
+            || E::host_kernel(spec).is_some()
     }
 
     /// Upper bound on memoized selections: a long-lived server engine fed
@@ -415,18 +503,26 @@ impl GemmEngine {
     /// misses); stats keep accumulating across flushes.
     const CONFIG_CACHE_CAP: usize = 4096;
 
-    /// Resolve the configuration this engine would use for `dims`,
-    /// memoized on `(mode, dims)` — repeated shapes (an LU trailing-update
-    /// sweep, a steady request mix) skip the scorer entirely.
+    /// Resolve the configuration this engine would use for `dims` at
+    /// FP64, memoized on `(mode, dtype, dims)` — repeated shapes (an LU
+    /// trailing-update sweep, a steady request mix) skip the scorer
+    /// entirely.
     pub fn plan_config(&self, dims: GemmDims) -> GemmConfig {
-        let key = (mode_key(&self.mode), dims);
+        self.plan_config_t::<f64>(dims)
+    }
+
+    /// [`Self::plan_config`] per element type. The memo key carries the
+    /// dtype, so an f32 and an f64 request of equal shape each get (and
+    /// cache) their own width-aware selection.
+    pub fn plan_config_t<E: GemmElem>(&self, dims: GemmDims) -> GemmConfig {
+        let key = (mode_key(&self.mode), E::DTYPE, dims);
         if let Some(cfg) = self.config_cache.borrow().get(&key) {
             let mut s = self.cache_stats.get();
             s.hits += 1;
             self.cache_stats.set(s);
             return *cfg;
         }
-        let cfg = self.compute_config(dims);
+        let cfg = self.compute_config::<E>(dims);
         {
             let mut cache = self.config_cache.borrow_mut();
             if cache.len() >= Self::CONFIG_CACHE_CAP {
@@ -464,8 +560,13 @@ impl GemmEngine {
     /// future iteration's trailing update bitwise-identically from
     /// inside a pool job.
     pub fn plan_kernel(&self, dims: GemmDims) -> (GemmConfig, MicroKernelImpl) {
-        let cfg = self.plan_config(dims);
-        (cfg, self.implementation_for(cfg.mk))
+        self.plan_kernel_t::<f64>(dims)
+    }
+
+    /// [`Self::plan_kernel`] per element type.
+    pub fn plan_kernel_t<E: GemmElem>(&self, dims: GemmDims) -> (GemmConfig, MicroKernelImpl<E>) {
+        let cfg = self.plan_config_t::<E>(dims);
+        (cfg, self.implementation_for_t::<E>(cfg.mk))
     }
 
     /// The panel sub-team width `t_p` for one fused iteration
@@ -486,6 +587,20 @@ impl GemmEngine {
         panel: PanelShape,
         update: GemmDims,
     ) -> usize {
+        self.panel_team_size_t::<f64>(la, iteration, panel, update)
+    }
+
+    /// [`Self::panel_team_size`] per element type: the team-size model
+    /// keys its memo by dtype and scores with the width-scaled peak (an
+    /// f32 panel runs at twice the scalar rate, so the balance point
+    /// moves).
+    pub fn panel_team_size_t<E: GemmElem>(
+        &self,
+        la: Lookahead,
+        iteration: usize,
+        panel: PanelShape,
+        update: GemmDims,
+    ) -> usize {
         let threads = self.plan.threads;
         if threads <= 2 {
             return 1;
@@ -497,8 +612,15 @@ impl GemmEngine {
             let idx = iteration.min(schedule.len() - 1);
             return schedule[idx].min(threads - 1);
         }
-        let cfg = self.plan_config(update);
-        self.team_sizer.select(&self.arch, cfg, panel, update, threads)
+        let cfg = self.plan_config_t::<E>(update);
+        self.team_sizer.select_elem(
+            &self.arch,
+            cfg,
+            panel,
+            update,
+            threads,
+            E::DTYPE.size_bytes(),
+        )
     }
 
     /// Hit/miss accounting of the team-size memo cache (the malleable
@@ -510,15 +632,15 @@ impl GemmEngine {
     /// Dispatch one configured GEMM to the pool-parallel or sequential
     /// blocked driver.
     #[allow(clippy::too_many_arguments)]
-    fn dispatch(
+    fn dispatch<E: GemmElem>(
         &mut self,
         cfg: &GemmConfig,
-        kernel: &MicroKernelImpl,
-        alpha: f64,
-        a: MatView<'_>,
-        b: MatView<'_>,
-        beta: f64,
-        c: &mut MatViewMut<'_>,
+        kernel: &MicroKernelImpl<E>,
+        alpha: E,
+        a: MatView<'_, E>,
+        b: MatView<'_, E>,
+        beta: E,
+        c: &mut MatViewMut<'_, E>,
     ) {
         match &self.pool {
             Some(pool) if self.plan.threads > 1 => {
@@ -528,7 +650,7 @@ impl GemmEngine {
         }
     }
 
-    /// `C = alpha * A * B + beta * C`.
+    /// `C = alpha * A * B + beta * C` (FP64).
     pub fn gemm(
         &mut self,
         alpha: f64,
@@ -537,9 +659,36 @@ impl GemmEngine {
         beta: f64,
         c: &mut MatViewMut<'_>,
     ) {
+        self.gemm_t(alpha, a, b, beta, c);
+    }
+
+    /// `C = alpha * A * B + beta * C` in f32: same pooled G3/G4 drivers,
+    /// same memoized selection — with the width-aware (larger) CCPs and
+    /// the double-lane kernel family.
+    pub fn gemm_f32(
+        &mut self,
+        alpha: f32,
+        a: MatView<'_, f32>,
+        b: MatView<'_, f32>,
+        beta: f32,
+        c: &mut MatViewMut<'_, f32>,
+    ) {
+        self.gemm_t(alpha, a, b, beta, c);
+    }
+
+    /// The dtype-generic GEMM entry point behind [`Self::gemm`] /
+    /// [`Self::gemm_f32`].
+    pub fn gemm_t<E: GemmElem>(
+        &mut self,
+        alpha: E,
+        a: MatView<'_, E>,
+        b: MatView<'_, E>,
+        beta: E,
+        c: &mut MatViewMut<'_, E>,
+    ) {
         let dims = GemmDims::new(a.rows, b.cols, a.cols);
-        let cfg = self.plan_config(dims);
-        let kernel = self.implementation_for(cfg.mk);
+        let cfg = self.plan_config_t::<E>(dims);
+        let kernel = self.implementation_for_t::<E>(cfg.mk);
         self.last_config = Some(cfg);
         self.dispatch(&cfg, &kernel, alpha, a, b, beta, c);
     }
@@ -559,9 +708,16 @@ impl GemmEngine {
     /// width, and the G4 schedule's results are width-independent.
     /// Without a multi-thread pool the members run inline, in order.
     pub fn gemm_batch(&mut self, items: &mut [GemmBatchItem<'_>]) -> Vec<GemmConfig> {
+        self.gemm_batch_t::<f64>(items)
+    }
+
+    /// The dtype-generic fused batch behind [`Self::gemm_batch`]: f32
+    /// batches run the same one-group-per-member pool epochs with their
+    /// own width-aware per-member configs.
+    pub fn gemm_batch_t<E: GemmElem>(&mut self, items: &mut [GemmBatchItem<'_, E>]) -> Vec<GemmConfig> {
         let configs: Vec<GemmConfig> = items
             .iter()
-            .map(|it| self.plan_config(GemmDims::new(it.a.rows, it.b.cols, it.a.cols)))
+            .map(|it| self.plan_config_t::<E>(GemmDims::new(it.a.rows, it.b.cols, it.a.cols)))
             .collect();
         if let Some(cfg) = configs.last() {
             self.last_config = Some(*cfg);
@@ -571,7 +727,7 @@ impl GemmEngine {
             // Serialized fallback: identical to handling each request
             // alone on this engine.
             for (it, cfg) in items.iter_mut().zip(&configs) {
-                let kernel = self.implementation_for(cfg.mk);
+                let kernel = self.implementation_for_t::<E>(cfg.mk);
                 self.dispatch(cfg, &kernel, it.alpha, it.a, it.b, it.beta, &mut it.c);
             }
             return configs;
@@ -587,13 +743,18 @@ impl GemmEngine {
                 .zip(chunk_cfgs)
                 .map(|(it, cfg)| (*cfg, GemmDims::new(it.a.rows, it.b.cols, it.a.cols)))
                 .collect();
-            let shares = self.batch_planner.partition_team(&self.arch, &planned, threads);
-            let mut members: Vec<BatchGemm<'_>> = items[idx..idx + len]
+            let shares = self.batch_planner.partition_team_elem(
+                &self.arch,
+                &planned,
+                threads,
+                E::DTYPE.size_bytes(),
+            );
+            let mut members: Vec<BatchGemm<'_, E>> = items[idx..idx + len]
                 .iter_mut()
                 .zip(chunk_cfgs)
                 .map(|(it, cfg)| BatchGemm {
                     cfg: *cfg,
-                    kernel: self.implementation_for(cfg.mk),
+                    kernel: self.implementation_for_t::<E>(cfg.mk),
                     alpha: it.alpha,
                     a: it.a,
                     b: it.b,
@@ -626,7 +787,7 @@ impl GemmEngine {
     ) {
         let n = b.cols;
         assert!(split_col <= n, "split_col out of range");
-        self.gemm_fused_trailing_ranges(
+        self.gemm_fused_trailing_ranges_t::<f64>(
             alpha,
             a,
             b,
@@ -662,9 +823,38 @@ impl GemmEngine {
         panel_queue_empty: bool,
         panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
     ) {
+        self.gemm_fused_trailing_ranges_t::<f64>(
+            alpha,
+            a,
+            b,
+            c,
+            head,
+            tail,
+            panel_workers,
+            panel_queue_empty,
+            panel_task,
+        );
+    }
+
+    /// The dtype-generic fused trailing update behind
+    /// [`Self::gemm_fused_trailing_ranges`] — what the generic (f64/f32)
+    /// lookahead LU pipeline drives.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_fused_trailing_ranges_t<E: GemmElem>(
+        &mut self,
+        alpha: E,
+        a: MatView<'_, E>,
+        b: MatView<'_, E>,
+        c: &mut MatViewMut<'_, E>,
+        head: &[(usize, usize)],
+        tail: (usize, usize),
+        panel_workers: usize,
+        panel_queue_empty: bool,
+        panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
+    ) {
         let dims = GemmDims::new(a.rows, b.cols, a.cols);
-        let cfg = self.plan_config(dims);
-        let kernel = self.implementation_for(cfg.mk);
+        let cfg = self.plan_config_t::<E>(dims);
+        let kernel = self.implementation_for_t::<E>(cfg.mk);
         self.last_config = Some(cfg);
         match &self.pool {
             Some(pool) => {

@@ -1,5 +1,5 @@
 //! The blocked GEMM algorithm: five loops around packing and the
-//! micro-kernel (paper Figure 3, left).
+//! micro-kernel (paper Figure 3, left), generic over the element type.
 //!
 //! Loop structure and cache intent (paper §2.2, Figure 4):
 //!
@@ -12,6 +12,7 @@
 //! ```
 
 use crate::model::ccp::GemmConfig;
+use crate::util::elem::Elem;
 use crate::util::matrix::{MatView, MatViewMut};
 
 use super::microkernel::MicroKernelImpl;
@@ -20,6 +21,13 @@ use super::packing::{pack_a, pack_b, packed_a_len, packed_b_len};
 /// Reusable packing workspace (`Ac` + `Bc`). The paper stresses providing
 /// "sufficiently-large workspace buffers to GEMM"; the coordinator pools
 /// these so the hot path never allocates.
+///
+/// Storage is kept as `f64` words (8-byte aligned — the strictest
+/// alignment any [`Elem`] needs) and reinterpreted per element type by
+/// [`Workspace::bufs_mut`]: one pinned per-worker workspace serves both
+/// the f64 and the f32 GEMM paths on a shared pool without doubling the
+/// footprint. Packing always writes a slot before any kernel reads it,
+/// so the stale bit patterns left by the other dtype are never observed.
 #[derive(Default)]
 pub struct Workspace {
     pub a_buf: Vec<f64>,
@@ -31,15 +39,44 @@ impl Workspace {
         Self::default()
     }
 
-    /// Grow (never shrink) to fit a configuration.
+    /// Grow (never shrink) to fit an f64 configuration.
     pub fn ensure(&mut self, cfg: &GemmConfig) {
         let a_need = packed_a_len(cfg.ccp.mc, cfg.ccp.kc, cfg.mk.mr);
         let b_need = packed_b_len(cfg.ccp.kc, cfg.ccp.nc, cfg.mk.nr);
-        if self.a_buf.len() < a_need {
-            self.a_buf.resize(a_need, 0.0);
+        self.ensure_elems::<f64>(a_need, b_need);
+    }
+
+    /// f64 words needed to back `elems` elements of `E`.
+    fn words_for<E: Elem>(elems: usize) -> usize {
+        (elems * std::mem::size_of::<E>()).div_ceil(std::mem::size_of::<f64>())
+    }
+
+    /// Grow (never shrink) the backing storage to hold `a_elems` /
+    /// `b_elems` elements of `E`.
+    pub fn ensure_elems<E: Elem>(&mut self, a_elems: usize, b_elems: usize) {
+        let aw = Self::words_for::<E>(a_elems);
+        if self.a_buf.len() < aw {
+            self.a_buf.resize(aw, 0.0);
         }
-        if self.b_buf.len() < b_need {
-            self.b_buf.resize(b_need, 0.0);
+        let bw = Self::words_for::<E>(b_elems);
+        if self.b_buf.len() < bw {
+            self.b_buf.resize(bw, 0.0);
+        }
+    }
+
+    /// Typed views of the packing buffers, grown to hold exactly
+    /// `a_elems` / `b_elems` elements of `E`.
+    pub fn bufs_mut<E: Elem>(&mut self, a_elems: usize, b_elems: usize) -> (&mut [E], &mut [E]) {
+        self.ensure_elems::<E>(a_elems, b_elems);
+        // SAFETY: the f64 backing store is 8-byte aligned (>= align of
+        // every Elem), `ensure_elems` sized each Vec to cover the
+        // requested element count, and the two fields are disjoint
+        // allocations, so the reborrows cannot alias.
+        unsafe {
+            (
+                std::slice::from_raw_parts_mut(self.a_buf.as_mut_ptr() as *mut E, a_elems),
+                std::slice::from_raw_parts_mut(self.b_buf.as_mut_ptr() as *mut E, b_elems),
+            )
         }
     }
 
@@ -53,14 +90,14 @@ impl Workspace {
 /// (`parallel::scale_c_parallel`) splits exactly this column loop over
 /// the worker pool for large C, keeping the arithmetic (and therefore
 /// bitwise results) identical.
-pub(crate) fn scale_c(beta: f64, c: &mut MatViewMut<'_>) {
-    if beta == 1.0 {
+pub(crate) fn scale_c<E: Elem>(beta: E, c: &mut MatViewMut<'_, E>) {
+    if beta == E::ONE {
         return;
     }
     for j in 0..c.cols {
         let col = &mut c.data[j * c.ld..j * c.ld + c.rows];
-        if beta == 0.0 {
-            col.fill(0.0);
+        if beta == E::ZERO {
+            col.fill(E::ZERO);
         } else {
             for v in col {
                 *v *= beta;
@@ -85,14 +122,14 @@ pub(crate) const FRINGE_SCRATCH_ELEMS: usize = 32 * 32;
 /// `mc_eff x nc_eff` elements with stride `ldc >= mc_eff`, and no other
 /// thread may concurrently touch the `(ir, jr)` tiles in `jr_range`.
 #[allow(clippy::too_many_arguments)]
-pub(crate) unsafe fn macro_kernel(
-    kernel: &MicroKernelImpl,
+pub(crate) unsafe fn macro_kernel<E: Elem>(
+    kernel: &MicroKernelImpl<E>,
     kc_eff: usize,
     mc_eff: usize,
     nc_eff: usize,
-    a_buf: &[f64],
-    b_buf: &[f64],
-    c_ptr: *mut f64,
+    a_buf: &[E],
+    b_buf: &[E],
+    c_ptr: *mut E,
     ldc: usize,
     jr_range: (usize, usize),
 ) {
@@ -123,7 +160,7 @@ pub(crate) unsafe fn macro_kernel(
                 // operands are zero-padded so the excess rows/cols are
                 // exact zeros), then accumulate the live region. Sized by
                 // the hard assert at function entry.
-                let mut scratch = [0.0f64; FRINGE_SCRATCH_ELEMS];
+                let mut scratch = [E::ZERO; FRINGE_SCRATCH_ELEMS];
                 (kernel.func)(kc_eff, a_panel.as_ptr(), b_panel.as_ptr(), scratch.as_mut_ptr(), mr);
                 for j in 0..nr_eff {
                     for i in 0..mr_eff {
@@ -138,15 +175,16 @@ pub(crate) unsafe fn macro_kernel(
 }
 
 /// Sequential blocked GEMM: `C = alpha * A * B + beta * C` with explicit
-/// configuration (micro-kernel + CCPs). This is loop G1..G5 verbatim.
-pub fn gemm_blocked(
+/// configuration (micro-kernel + CCPs). This is loop G1..G5 verbatim,
+/// for any element type.
+pub fn gemm_blocked<E: Elem>(
     cfg: &GemmConfig,
-    kernel: &MicroKernelImpl,
-    alpha: f64,
-    a: MatView<'_>,
-    b: MatView<'_>,
-    beta: f64,
-    c: &mut MatViewMut<'_>,
+    kernel: &MicroKernelImpl<E>,
+    alpha: E,
+    a: MatView<'_, E>,
+    b: MatView<'_, E>,
+    beta: E,
+    c: &mut MatViewMut<'_, E>,
     ws: &mut Workspace,
 ) {
     assert_eq!(kernel.spec, cfg.mk, "kernel/config shape mismatch");
@@ -155,13 +193,14 @@ pub fn gemm_blocked(
     assert_eq!(c.cols, b.cols, "C col mismatch");
     let (m, n, k) = (a.rows, b.cols, a.cols);
     scale_c(beta, c);
-    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+    if m == 0 || n == 0 || k == 0 || alpha == E::ZERO {
         return;
     }
     let ccp = cfg.ccp.clamp_to(crate::model::GemmDims::new(m, n, k));
-    let eff_cfg = GemmConfig { mk: cfg.mk, ccp };
-    ws.ensure(&eff_cfg);
     let (mc, nc, kc) = (ccp.mc, ccp.nc, ccp.kc);
+    let a_need = packed_a_len(mc, kc, cfg.mk.mr);
+    let b_need = packed_b_len(kc, nc, cfg.mk.nr);
+    let (a_buf, b_buf) = ws.bufs_mut::<E>(a_need, b_need);
 
     let mut jc = 0; // Loop G1
     while jc < n {
@@ -169,11 +208,11 @@ pub fn gemm_blocked(
         let mut pc = 0; // Loop G2
         while pc < k {
             let kc_eff = kc.min(k - pc);
-            pack_b(b.sub(pc, jc, kc_eff, nc_eff), &mut ws.b_buf, cfg.mk.nr);
+            pack_b(b.sub(pc, jc, kc_eff, nc_eff), b_buf, cfg.mk.nr);
             let mut ic = 0; // Loop G3
             while ic < m {
                 let mc_eff = mc.min(m - ic);
-                pack_a(a.sub(ic, pc, mc_eff, kc_eff), &mut ws.a_buf, cfg.mk.mr, alpha);
+                pack_a(a.sub(ic, pc, mc_eff, kc_eff), a_buf, cfg.mk.mr, alpha);
                 let c_ptr = unsafe { c.data.as_mut_ptr().add(jc * c.ld + ic) };
                 unsafe {
                     macro_kernel(
@@ -181,8 +220,8 @@ pub fn gemm_blocked(
                         kc_eff,
                         mc_eff,
                         nc_eff,
-                        &ws.a_buf,
-                        &ws.b_buf,
+                        a_buf,
+                        b_buf,
                         c_ptr,
                         c.ld,
                         (0, nc_eff),
@@ -200,9 +239,9 @@ pub fn gemm_blocked(
 mod tests {
     use super::*;
     use crate::gemm::gemm_reference;
-    use crate::gemm::microkernel::{for_shape, registry};
+    use crate::gemm::microkernel::{for_shape, for_shape_f32, registry};
     use crate::model::{Ccp, MicroKernel};
-    use crate::util::{MatrixF64, Pcg64};
+    use crate::util::{MatrixF32, MatrixF64, Pcg64};
 
     fn run_case(mk: MicroKernel, ccp: Ccp, m: usize, n: usize, k: usize, alpha: f64, beta: f64) {
         let kernel = for_shape(mk).expect("kernel registered");
@@ -282,6 +321,42 @@ mod tests {
     }
 
     #[test]
+    fn f32_blocked_matches_f32_reference_in_one_workspace() {
+        // One Workspace serves an f64 call and then an f32 call (the
+        // shared-pool reuse pattern): the f32 results must match the f32
+        // reference regardless of the stale f64 bits in the buffers.
+        let mut ws = Workspace::new();
+        run_case_in_ws(&mut ws);
+        let mk = MicroKernel::new(16, 6);
+        let kernel = for_shape_f32(mk).expect("f32 kernel registered");
+        let cfg = GemmConfig { mk, ccp: Ccp::new(48, 36, 16) };
+        let mut rng = Pcg64::seed(77);
+        let (m, n, k) = (61, 53, 29);
+        let a = MatrixF32::random(m, k, &mut rng);
+        let b = MatrixF32::random(k, n, &mut rng);
+        let mut c = MatrixF32::random(m, n, &mut rng);
+        let mut expect = c.clone();
+        gemm_reference(1.0f32, a.view(), b.view(), 1.0f32, &mut expect.view_mut());
+        gemm_blocked(&cfg, &kernel, 1.0f32, a.view(), b.view(), 1.0f32, &mut c.view_mut(), &mut ws);
+        assert!(
+            c.max_abs_diff(&expect) < 1e-4,
+            "f32 blocked GEMM diverges: {}",
+            c.max_abs_diff(&expect)
+        );
+    }
+
+    fn run_case_in_ws(ws: &mut Workspace) {
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp: Ccp::new(32, 24, 16) };
+        let mut rng = Pcg64::seed(5);
+        let a = MatrixF64::random(40, 20, &mut rng);
+        let b = MatrixF64::random(20, 30, &mut rng);
+        let mut c = MatrixF64::zeros(40, 30);
+        gemm_blocked(&cfg, &kernel, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut(), ws);
+    }
+
+    #[test]
     fn workspace_reuse_grows_monotonically() {
         let mut ws = Workspace::new();
         let cfg_small = GemmConfig { mk: MicroKernel::new(8, 6), ccp: Ccp::new(16, 12, 8) };
@@ -293,6 +368,24 @@ mod tests {
         ws.ensure(&cfg_small);
         assert!(big > small);
         assert_eq!(ws.bytes(), big, "workspace must not shrink");
+    }
+
+    #[test]
+    fn workspace_typed_views_pack_halved_words_for_f32() {
+        // 10 f32 elements fit in 5 f64 words (rounded up); the same
+        // request in f64 takes 10 words.
+        let mut ws = Workspace::new();
+        ws.ensure_elems::<f32>(10, 3);
+        assert_eq!(ws.a_buf.len(), 5);
+        assert_eq!(ws.b_buf.len(), 2);
+        let (a32, b32) = ws.bufs_mut::<f32>(10, 3);
+        assert_eq!((a32.len(), b32.len()), (10, 3));
+        a32.fill(1.5f32);
+        b32.fill(-2.0f32);
+        assert!(a32.iter().all(|&v| v == 1.5));
+        let mut ws2 = Workspace::new();
+        ws2.ensure_elems::<f64>(10, 3);
+        assert_eq!(ws2.a_buf.len(), 10);
     }
 
     #[test]

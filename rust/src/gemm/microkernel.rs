@@ -5,37 +5,51 @@
 //! (row-contiguous), `Cr` is an `mr x nr` tile of the column-major output
 //! with leading dimension `ldc`. Alpha is folded into `Ar` by packing.
 //!
-//! Two families are provided, mirroring the paper's intrinsics-vs-assembly
-//! discussion:
+//! Kernels are generic over the element type ([`MicroKernelImpl<E>`]);
+//! three families are provided:
 //!
-//! - **AVX2+FMA kernels** (`avx2_*`): the broadcast coding style of paper
-//!   Figure 7 translated to x86 — `MR/4` ymm loads of the `Ar` column, one
-//!   `broadcast_sd` per `Br` element, FMA into an `MR/4 x NR` accumulator
-//!   file. Register budget (16 ymm) checks: 8x6 = 12+2+1 = 15,
-//!   12x4 = 12+3+1 = 16, 4x12 = 12+1+1 = 14.
-//! - **Portable scalar kernels** (`scalar_*`): const-generic Rust that the
-//!   compiler auto-vectorizes; these cover shapes whose `mr` is not a
-//!   multiple of the AVX2 lane count (e.g. the paper's ARM `MK6x8`) and
-//!   any host without AVX2.
+//! - **AVX2+FMA f64 kernels** (`avx2_*`): the broadcast coding style of
+//!   paper Figure 7 translated to x86 — `MR/4` ymm loads of the `Ar`
+//!   column, one `broadcast_sd` per `Br` element, FMA into an
+//!   `MR/4 x NR` accumulator file. Register budget (16 ymm) checks:
+//!   8x6 = 12+2+1 = 15, 12x4 = 12+3+1 = 16, 4x12 = 12+1+1 = 14.
+//! - **AVX2+FMA f32 kernels** (`avx2s_*`): the same coding style at 8
+//!   lanes per ymm, so the natural tiles double in `mr`:
+//!   16x6 = 12+2+1 = 15, 8x8 = 8+1+1 = 10, 16x4 = 8+2+1 = 11,
+//!   8x12 = 12+1+2 = 15.
+//! - **Portable scalar kernels** (`scalar_*` / `scalar32_*`):
+//!   const-generic Rust that the compiler auto-vectorizes; these cover
+//!   shapes whose `mr` is not a multiple of the AVX2 lane count (e.g.
+//!   the paper's ARM `MK6x8`) and any host without AVX2.
 //!
 //! Prefetch variants mirror the paper's BLIS-with-prefetching comparison
 //! on the AMD platform (§4.1): identical arithmetic plus software
 //! prefetches of the next `Ar`/`Br` lines and the `Cr` tile.
+//!
+//! The host registries are built **once** per element type (feature
+//! detection runs once, memoized in a `OnceLock`); `registry()` /
+//! `for_shape()` / `by_name()` are lookups against the memoized table.
+
+use std::sync::OnceLock;
 
 use crate::model::MicroKernel;
+use crate::util::elem::Elem;
 
-/// Signature of a micro-kernel over packed operands.
+/// Signature of a micro-kernel over packed operands of element type `E`.
 ///
 /// # Safety
 /// `a` must point to `mr*kc` packed elements, `b` to `kc*nr`, and `c` to a
 /// column-major `mr x nr` tile with leading dimension `ldc >= mr`.
-pub type MicroKernelFn = unsafe fn(kc: usize, a: *const f64, b: *const f64, c: *mut f64, ldc: usize);
+pub type MicroKernelFnOf<E> = unsafe fn(kc: usize, a: *const E, b: *const E, c: *mut E, ldc: usize);
 
-/// A registered micro-kernel implementation.
-#[derive(Clone, Copy)]
-pub struct MicroKernelImpl {
+/// The f64 kernel signature (the historical name).
+pub type MicroKernelFn = MicroKernelFnOf<f64>;
+
+/// A registered micro-kernel implementation for element type `E`
+/// (default `f64`, so pre-generic code keeps compiling unchanged).
+pub struct MicroKernelImpl<E = f64> {
     pub spec: MicroKernel,
-    pub func: MicroKernelFn,
+    pub func: MicroKernelFnOf<E>,
     pub name: &'static str,
     /// True for the intrinsics (SIMD) family, false for portable scalar.
     pub simd: bool,
@@ -43,41 +57,50 @@ pub struct MicroKernelImpl {
     pub prefetch: bool,
 }
 
-impl std::fmt::Debug for MicroKernelImpl {
+// Manual Clone/Copy: the derive would bound them on `E: Copy` even
+// though only a fn pointer over E is stored.
+impl<E> Clone for MicroKernelImpl<E> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<E> Copy for MicroKernelImpl<E> {}
+
+impl<E> std::fmt::Debug for MicroKernelImpl<E> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "MicroKernelImpl({})", self.name)
     }
 }
 
 // ---------------------------------------------------------------------------
-// Portable const-generic scalar kernels
+// Portable const-generic scalar kernels (any Elem)
 // ---------------------------------------------------------------------------
 
 /// Portable kernel: full unroll over an `MR x NR` accumulator tile.
 ///
 /// # Safety
-/// See [`MicroKernelFn`].
-unsafe fn scalar_kernel<const MR: usize, const NR: usize>(
+/// See [`MicroKernelFnOf`].
+unsafe fn scalar_kernel<E: Elem, const MR: usize, const NR: usize>(
     kc: usize,
-    a: *const f64,
-    b: *const f64,
-    c: *mut f64,
+    a: *const E,
+    b: *const E,
+    c: *mut E,
     ldc: usize,
 ) {
-    let mut acc = [[0.0f64; MR]; NR];
+    let mut acc = [[E::ZERO; MR]; NR];
     let mut ap = a;
     let mut bp = b;
     for _ in 0..kc {
         // One column of Ar and one row of Br per iteration (Figure 3,
         // top-right): a sequence of rank-1 updates.
-        let mut av = [0.0f64; MR];
+        let mut av = [E::ZERO; MR];
         for (i, v) in av.iter_mut().enumerate() {
             *v = *ap.add(i);
         }
         for j in 0..NR {
             let bv = *bp.add(j);
             for i in 0..MR {
-                // Plain mul+add, NOT f64::mul_add: without +fma in the
+                // Plain mul+add, NOT mul_add: without +fma in the
                 // target features, mul_add lowers to a libm call (measured
                 // 70x slower); mul+add auto-vectorizes cleanly.
                 acc[j][i] += av[i] * bv;
@@ -95,7 +118,7 @@ unsafe fn scalar_kernel<const MR: usize, const NR: usize>(
 }
 
 // ---------------------------------------------------------------------------
-// AVX2 + FMA kernels
+// AVX2 + FMA kernels, f64
 // ---------------------------------------------------------------------------
 
 #[cfg(target_arch = "x86_64")]
@@ -103,12 +126,12 @@ mod avx2 {
     #[cfg(target_arch = "x86_64")]
     use std::arch::x86_64::*;
 
-    /// AVX2 kernel over an `(4*MRV) x NR` tile; `PF` enables software
+    /// AVX2 f64 kernel over an `(4*MRV) x NR` tile; `PF` enables software
     /// prefetching of upcoming packed data and the C tile.
     ///
     /// # Safety
     /// Caller must ensure `avx2` and `fma` are available and the pointer
-    /// contracts of [`super::MicroKernelFn`] hold with `mr = 4 * MRV`.
+    /// contracts of [`super::MicroKernelFnOf`] hold with `mr = 4 * MRV`.
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn kernel<const MRV: usize, const NR: usize, const PF: bool>(
         kc: usize,
@@ -158,12 +181,73 @@ mod avx2 {
     }
 }
 
+// ---------------------------------------------------------------------------
+// AVX2 + FMA kernels, f32 (8 lanes per ymm: twice the f64 tile height)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2s {
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    /// AVX2 f32 kernel over an `(8*MRV) x NR` tile; `PF` enables software
+    /// prefetching. Identical structure to the f64 kernel, one `ps`
+    /// vector per 8 rows.
+    ///
+    /// # Safety
+    /// Caller must ensure `avx2` and `fma` are available and the pointer
+    /// contracts of [`super::MicroKernelFnOf`] hold with `mr = 8 * MRV`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn kernel<const MRV: usize, const NR: usize, const PF: bool>(
+        kc: usize,
+        a: *const f32,
+        b: *const f32,
+        c: *mut f32,
+        ldc: usize,
+    ) {
+        let mr = 8 * MRV;
+        let mut acc = [[_mm256_setzero_ps(); MRV]; NR];
+        if PF {
+            for j in 0..NR {
+                _mm_prefetch::<_MM_HINT_T0>(c.add(j * ldc) as *const i8);
+            }
+        }
+        let mut ap = a;
+        let mut bp = b;
+        for p in 0..kc {
+            if PF && p + 8 < kc {
+                _mm_prefetch::<_MM_HINT_T0>(ap.add(8 * mr) as *const i8);
+                _mm_prefetch::<_MM_HINT_T0>(bp.add(8 * NR) as *const i8);
+            }
+            let mut av = [_mm256_setzero_ps(); MRV];
+            for (i, v) in av.iter_mut().enumerate() {
+                *v = _mm256_loadu_ps(ap.add(8 * i));
+            }
+            for j in 0..NR {
+                let bv = _mm256_broadcast_ss(&*bp.add(j));
+                for i in 0..MRV {
+                    acc[j][i] = _mm256_fmadd_ps(av[i], bv, acc[j][i]);
+                }
+            }
+            ap = ap.add(mr);
+            bp = bp.add(NR);
+        }
+        for j in 0..NR {
+            let cj = c.add(j * ldc);
+            for i in 0..MRV {
+                let cur = _mm256_loadu_ps(cj.add(8 * i));
+                _mm256_storeu_ps(cj.add(8 * i), _mm256_add_ps(cur, acc[j][i]));
+            }
+        }
+    }
+}
+
 /// Wrap an AVX2 const-generic instantiation in a plain `unsafe fn` so it
 /// can live in the registry (feature detection happens at registration).
 macro_rules! avx2_entry {
     ($name:ident, $mrv:literal, $nr:literal, $pf:literal) => {
         /// # Safety
-        /// AVX2+FMA must be available; pointer contracts per [`MicroKernelFn`].
+        /// AVX2+FMA must be available; pointer contracts per [`MicroKernelFnOf`].
         #[cfg(target_arch = "x86_64")]
         unsafe fn $name(kc: usize, a: *const f64, b: *const f64, c: *mut f64, ldc: usize) {
             avx2::kernel::<$mrv, $nr, $pf>(kc, a, b, c, ldc)
@@ -182,12 +266,32 @@ avx2_entry!(avx2_4x10, 1, 10, false);
 avx2_entry!(avx2_8x2, 2, 2, false);
 avx2_entry!(avx2_4x4, 1, 4, false);
 
+/// As [`avx2_entry`] but for the f32 family (`mr = 8 * MRV`).
+macro_rules! avx2s_entry {
+    ($name:ident, $mrv:literal, $nr:literal, $pf:literal) => {
+        /// # Safety
+        /// AVX2+FMA must be available; pointer contracts per [`MicroKernelFnOf`].
+        #[cfg(target_arch = "x86_64")]
+        unsafe fn $name(kc: usize, a: *const f32, b: *const f32, c: *mut f32, ldc: usize) {
+            avx2s::kernel::<$mrv, $nr, $pf>(kc, a, b, c, ldc)
+        }
+    };
+}
+
+avx2s_entry!(avx2s_16x6, 2, 6, false);
+avx2s_entry!(avx2s_16x6_pf, 2, 6, true);
+avx2s_entry!(avx2s_8x8, 1, 8, false);
+avx2s_entry!(avx2s_16x4, 2, 4, false);
+avx2s_entry!(avx2s_8x12, 1, 12, false);
+avx2s_entry!(avx2s_8x6, 1, 6, false);
+avx2s_entry!(avx2s_8x4, 1, 4, false);
+
 macro_rules! scalar_entry {
     ($name:ident, $mr:literal, $nr:literal) => {
         /// # Safety
-        /// Pointer contracts per [`MicroKernelFn`].
+        /// Pointer contracts per [`MicroKernelFnOf`].
         unsafe fn $name(kc: usize, a: *const f64, b: *const f64, c: *mut f64, ldc: usize) {
-            scalar_kernel::<$mr, $nr>(kc, a, b, c, ldc)
+            scalar_kernel::<f64, $mr, $nr>(kc, a, b, c, ldc)
         }
     };
 }
@@ -203,6 +307,28 @@ scalar_entry!(scalar_4x4, 4, 4);
 scalar_entry!(scalar_2x2, 2, 2);
 scalar_entry!(scalar_1x1, 1, 1);
 
+/// As [`scalar_entry`] but instantiated at f32.
+macro_rules! scalar32_entry {
+    ($name:ident, $mr:literal, $nr:literal) => {
+        /// # Safety
+        /// Pointer contracts per [`MicroKernelFnOf`].
+        unsafe fn $name(kc: usize, a: *const f32, b: *const f32, c: *mut f32, ldc: usize) {
+            scalar_kernel::<f32, $mr, $nr>(kc, a, b, c, ldc)
+        }
+    };
+}
+
+scalar32_entry!(scalar32_16x6, 16, 6);
+scalar32_entry!(scalar32_8x12, 8, 12);
+scalar32_entry!(scalar32_12x8, 12, 8);
+scalar32_entry!(scalar32_8x8, 8, 8);
+scalar32_entry!(scalar32_8x6, 8, 6);
+scalar32_entry!(scalar32_6x8, 6, 8);
+scalar32_entry!(scalar32_16x4, 16, 4);
+scalar32_entry!(scalar32_4x4, 4, 4);
+scalar32_entry!(scalar32_2x2, 2, 2);
+scalar32_entry!(scalar32_1x1, 1, 1);
+
 /// True when the host can run the AVX2+FMA family.
 pub fn avx2_available() -> bool {
     #[cfg(target_arch = "x86_64")]
@@ -215,10 +341,8 @@ pub fn avx2_available() -> bool {
     }
 }
 
-/// Build the registry of micro-kernels runnable on this host.
-/// SIMD kernels are listed first so name-free lookups prefer them.
-pub fn registry() -> Vec<MicroKernelImpl> {
-    let mut v: Vec<MicroKernelImpl> = Vec::new();
+fn build_registry_f64() -> Vec<MicroKernelImpl<f64>> {
+    let mut v: Vec<MicroKernelImpl<f64>> = Vec::new();
     let mk = MicroKernel::new;
     #[cfg(target_arch = "x86_64")]
     if avx2_available() {
@@ -248,45 +372,118 @@ pub fn registry() -> Vec<MicroKernelImpl> {
     v
 }
 
-/// Find a kernel by name.
-pub fn by_name(name: &str) -> Option<MicroKernelImpl> {
-    registry().into_iter().find(|k| k.name == name)
+fn build_registry_f32() -> Vec<MicroKernelImpl<f32>> {
+    let mut v: Vec<MicroKernelImpl<f32>> = Vec::new();
+    let mk = MicroKernel::new;
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        let simd = |spec, func, name| MicroKernelImpl { spec, func, name, simd: true, prefetch: false };
+        v.push(simd(mk(16, 6), avx2s_16x6 as MicroKernelFnOf<f32>, "avx2s_16x6"));
+        v.push(MicroKernelImpl {
+            spec: mk(16, 6),
+            func: avx2s_16x6_pf,
+            name: "avx2s_16x6_pf",
+            simd: true,
+            prefetch: true,
+        });
+        v.push(simd(mk(8, 8), avx2s_8x8, "avx2s_8x8"));
+        v.push(simd(mk(16, 4), avx2s_16x4, "avx2s_16x4"));
+        v.push(simd(mk(8, 12), avx2s_8x12, "avx2s_8x12"));
+        v.push(simd(mk(8, 6), avx2s_8x6, "avx2s_8x6"));
+        v.push(simd(mk(8, 4), avx2s_8x4, "avx2s_8x4"));
+    }
+    let scalar = |spec, func, name| MicroKernelImpl { spec, func, name, simd: false, prefetch: false };
+    v.push(scalar(mk(16, 6), scalar32_16x6 as MicroKernelFnOf<f32>, "scalar32_16x6"));
+    v.push(scalar(mk(8, 12), scalar32_8x12, "scalar32_8x12"));
+    v.push(scalar(mk(12, 8), scalar32_12x8, "scalar32_12x8"));
+    v.push(scalar(mk(8, 8), scalar32_8x8, "scalar32_8x8"));
+    v.push(scalar(mk(8, 6), scalar32_8x6, "scalar32_8x6"));
+    v.push(scalar(mk(6, 8), scalar32_6x8, "scalar32_6x8"));
+    v.push(scalar(mk(16, 4), scalar32_16x4, "scalar32_16x4"));
+    v.push(scalar(mk(4, 4), scalar32_4x4, "scalar32_4x4"));
+    v.push(scalar(mk(2, 2), scalar32_2x2, "scalar32_2x2"));
+    v.push(scalar(mk(1, 1), scalar32_1x1, "scalar32_1x1"));
+    v
 }
 
-/// Find the preferred (first-registered) kernel for a shape.
+/// The memoized f64 host registry (built — and feature-detected — once).
+/// SIMD kernels are listed first so name-free lookups prefer them.
+pub fn host_registry() -> &'static [MicroKernelImpl<f64>] {
+    static REG: OnceLock<Vec<MicroKernelImpl<f64>>> = OnceLock::new();
+    REG.get_or_init(build_registry_f64)
+}
+
+/// The memoized f32 host registry (built — and feature-detected — once).
+pub fn host_registry_f32() -> &'static [MicroKernelImpl<f32>] {
+    static REG: OnceLock<Vec<MicroKernelImpl<f32>>> = OnceLock::new();
+    REG.get_or_init(build_registry_f32)
+}
+
+/// The registry of f64 micro-kernels runnable on this host (an owned
+/// copy of the memoized table; entries are `Copy`, so this is a cheap
+/// clone — feature detection is **not** re-run).
+pub fn registry() -> Vec<MicroKernelImpl> {
+    host_registry().to_vec()
+}
+
+/// The registry of f32 micro-kernels runnable on this host.
+pub fn registry_f32() -> Vec<MicroKernelImpl<f32>> {
+    host_registry_f32().to_vec()
+}
+
+/// Find an f64 kernel by name (memoized table lookup).
+pub fn by_name(name: &str) -> Option<MicroKernelImpl> {
+    host_registry().iter().find(|k| k.name == name).copied()
+}
+
+/// Find an f32 kernel by name (memoized table lookup).
+pub fn by_name_f32(name: &str) -> Option<MicroKernelImpl<f32>> {
+    host_registry_f32().iter().find(|k| k.name == name).copied()
+}
+
+/// Find the preferred (first-registered) f64 kernel for a shape.
 pub fn for_shape(spec: MicroKernel) -> Option<MicroKernelImpl> {
-    registry().into_iter().find(|k| k.spec == spec && !k.prefetch)
+    host_registry().iter().find(|k| k.spec == spec && !k.prefetch).copied()
+}
+
+/// Find the preferred (first-registered) f32 kernel for a shape.
+pub fn for_shape_f32(spec: MicroKernel) -> Option<MicroKernelImpl<f32>> {
+    host_registry_f32().iter().find(|k| k.spec == spec && !k.prefetch).copied()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::gemm::packing::{pack_a, pack_b, packed_a_len, packed_b_len};
-    use crate::util::{MatrixF64, Pcg64};
+    use crate::util::{Matrix, MatrixF64, Pcg64};
 
     /// Drive one micro-kernel over a random full-tile problem and compare
-    /// with the naive product.
-    fn check_kernel(imp: &MicroKernelImpl, kc: usize) {
+    /// with the naive product (generic over the element type).
+    fn check_kernel_t<E: Elem>(imp: &MicroKernelImpl<E>, kc: usize, tol: f64) {
         let (mr, nr) = (imp.spec.mr, imp.spec.nr);
         let mut rng = Pcg64::seed(kc as u64 * 31 + mr as u64 * 7 + nr as u64);
-        let a = MatrixF64::random(mr, kc, &mut rng);
-        let b = MatrixF64::random(kc, nr, &mut rng);
-        let mut c = MatrixF64::random(mr, nr, &mut rng);
+        let a = Matrix::<E>::random(mr, kc, &mut rng);
+        let b = Matrix::<E>::random(kc, nr, &mut rng);
+        let mut c = Matrix::<E>::random(mr, nr, &mut rng);
         let mut expect = c.clone();
-        crate::gemm::gemm_reference(1.0, a.view(), b.view(), 1.0, &mut expect.view_mut());
+        crate::gemm::gemm_reference(E::ONE, a.view(), b.view(), E::ONE, &mut expect.view_mut());
 
-        let mut abuf = vec![0.0; packed_a_len(mr, kc, mr)];
-        let mut bbuf = vec![0.0; packed_b_len(kc, nr, nr)];
-        pack_a(a.view(), &mut abuf, mr, 1.0);
+        let mut abuf = vec![E::ZERO; packed_a_len(mr, kc, mr)];
+        let mut bbuf = vec![E::ZERO; packed_b_len(kc, nr, nr)];
+        pack_a(a.view(), &mut abuf, mr, E::ONE);
         pack_b(b.view(), &mut bbuf, nr);
         let ldc = c.ld();
         unsafe { (imp.func)(kc, abuf.as_ptr(), bbuf.as_ptr(), c.as_mut_ptr(), ldc) };
         assert!(
-            c.max_abs_diff(&expect) < 1e-11,
+            c.max_abs_diff(&expect) < tol,
             "kernel {} kc={} diverges from reference",
             imp.name,
             kc
         );
+    }
+
+    fn check_kernel(imp: &MicroKernelImpl, kc: usize) {
+        check_kernel_t::<f64>(imp, kc, 1e-11);
     }
 
     #[test]
@@ -294,6 +491,16 @@ mod tests {
         for imp in registry() {
             for kc in [1, 2, 7, 64, 129] {
                 check_kernel(&imp, kc);
+            }
+        }
+    }
+
+    #[test]
+    fn every_registered_f32_kernel_matches_reference() {
+        for imp in registry_f32() {
+            for kc in [1, 2, 7, 64, 129] {
+                // f32: eps ~1.2e-7, |entries| < 1, error grows ~kc * eps.
+                check_kernel_t::<f32>(&imp, kc, 1e-4);
             }
         }
     }
@@ -321,6 +528,21 @@ mod tests {
     }
 
     #[test]
+    fn f32_registry_contains_wide_lane_shapes() {
+        // The f32 family doubles the SIMD-natural mr: 16x6 and 8x8 are
+        // the flagship shapes the ISSUE calls for.
+        let shapes: Vec<(usize, usize)> =
+            registry_f32().iter().map(|k| (k.spec.mr, k.spec.nr)).collect();
+        for s in [(16, 6), (8, 8), (8, 12)] {
+            assert!(shapes.contains(&s), "missing f32 MK{}x{}", s.0, s.1);
+        }
+        if avx2_available() {
+            let k = for_shape_f32(MicroKernel::new(16, 6)).unwrap();
+            assert!(k.simd, "SIMD kernel must be preferred for f32 16x6");
+        }
+    }
+
+    #[test]
     fn lookup_by_name_and_shape() {
         assert!(by_name("scalar_6x8").is_some());
         assert!(by_name("does_not_exist").is_none());
@@ -329,6 +551,19 @@ mod tests {
         if avx2_available() {
             assert!(k.simd, "SIMD kernel must be preferred for 8x6");
         }
+        assert!(by_name_f32("scalar32_16x6").is_some());
+    }
+
+    #[test]
+    fn registries_are_memoized() {
+        // OnceLock memoization: repeated lookups must serve the same
+        // static table (pointer-identical backing storage).
+        let a = host_registry();
+        let b = host_registry();
+        assert!(std::ptr::eq(a.as_ptr(), b.as_ptr()), "f64 registry must be built once");
+        let a32 = host_registry_f32();
+        let b32 = host_registry_f32();
+        assert!(std::ptr::eq(a32.as_ptr(), b32.as_ptr()), "f32 registry must be built once");
     }
 
     #[test]
@@ -341,6 +576,12 @@ mod tests {
         for kc in [3, 64] {
             check_kernel(&plain, kc);
             check_kernel(&pf, kc);
+        }
+        let plain32 = by_name_f32("avx2s_16x6").unwrap();
+        let pf32 = by_name_f32("avx2s_16x6_pf").unwrap();
+        for kc in [3, 64] {
+            check_kernel_t::<f32>(&plain32, kc, 1e-4);
+            check_kernel_t::<f32>(&pf32, kc, 1e-4);
         }
     }
 }

@@ -21,23 +21,26 @@ pub mod packing;
 pub mod parallel;
 
 pub use api::{
-    ConfigCacheStats, ConfigMode, GemmBatchItem, GemmEngine, Lookahead, AUTO_PANEL_WORKERS,
+    ConfigCacheStats, ConfigMode, GemmBatchItem, GemmElem, GemmEngine, Lookahead,
+    AUTO_PANEL_WORKERS,
 };
 pub use blocked::{gemm_blocked, Workspace};
-pub use microkernel::{registry, MicroKernelImpl};
+pub use microkernel::{registry, registry_f32, MicroKernelImpl};
 pub use parallel::{
     gemm_batch_parallel, gemm_fused_trailing, gemm_fused_trailing_ranges, gemm_parallel,
     BatchGemm, ParallelLoop, ThreadPlan,
 };
 
-/// Reference (naive triple-loop) GEMM: `C = alpha * A * B + beta * C`.
-/// The correctness oracle for everything in this module.
-pub fn gemm_reference(
-    alpha: f64,
-    a: crate::util::matrix::MatView<'_>,
-    b: crate::util::matrix::MatView<'_>,
-    beta: f64,
-    c: &mut crate::util::matrix::MatViewMut<'_>,
+/// Reference (naive triple-loop) GEMM: `C = alpha * A * B + beta * C`,
+/// generic over the element type (accumulation happens in `E`, so the
+/// f32 instantiation is a true f32 oracle). The correctness oracle for
+/// everything in this module.
+pub fn gemm_reference<E: crate::util::Elem>(
+    alpha: E,
+    a: crate::util::matrix::MatView<'_, E>,
+    b: crate::util::matrix::MatView<'_, E>,
+    beta: E,
+    c: &mut crate::util::matrix::MatViewMut<'_, E>,
 ) {
     assert_eq!(a.cols, b.rows, "inner dimension mismatch");
     assert_eq!(c.rows, a.rows, "C row mismatch");
@@ -45,7 +48,7 @@ pub fn gemm_reference(
     let (m, n, k) = (a.rows, b.cols, a.cols);
     for j in 0..n {
         for i in 0..m {
-            let mut acc = 0.0;
+            let mut acc = E::ZERO;
             for p in 0..k {
                 acc += a.at(i, p) * b.at(p, j);
             }

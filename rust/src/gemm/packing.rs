@@ -14,14 +14,15 @@
 //! micro-kernel never needs edge cases on the packed side; the extra
 //! zeros contribute nothing to the rank-1 updates.
 
+use crate::util::elem::Elem;
 use crate::util::matrix::MatView;
 
-/// Number of f64 elements `pack_a` writes for an `mc x kc` block.
+/// Number of elements `pack_a` writes for an `mc x kc` block.
 pub fn packed_a_len(mc: usize, kc: usize, mr: usize) -> usize {
     mc.div_ceil(mr) * mr * kc
 }
 
-/// Number of f64 elements `pack_b` writes for a `kc x nc` block.
+/// Number of elements `pack_b` writes for a `kc x nc` block.
 pub fn packed_b_len(kc: usize, nc: usize, nr: usize) -> usize {
     nc.div_ceil(nr) * nr * kc
 }
@@ -29,7 +30,7 @@ pub fn packed_b_len(kc: usize, nc: usize, nr: usize) -> usize {
 /// Pack `a` (an `mc x kc` view) into `buf` as `mr`-row micro-panels,
 /// scaling every element by `alpha` (folding the GEMM alpha into the
 /// packed operand keeps the micro-kernels pure accumulate).
-pub fn pack_a(a: MatView<'_>, buf: &mut [f64], mr: usize, alpha: f64) {
+pub fn pack_a<E: Elem>(a: MatView<'_, E>, buf: &mut [E], mr: usize, alpha: E) {
     let (mc, kc) = (a.rows, a.cols);
     let n_panels = mc.div_ceil(mr);
     assert!(buf.len() >= n_panels * mr * kc, "pack_a buffer too small");
@@ -41,7 +42,7 @@ pub fn pack_a(a: MatView<'_>, buf: &mut [f64], mr: usize, alpha: f64) {
             // Full panel: tight copy loop (the hot path). alpha == 1.0 is
             // the common case (LU folds its -1 into alpha only once per
             // call) and turns into a straight memcpy per column.
-            if alpha == 1.0 {
+            if alpha == E::ONE {
                 for p in 0..kc {
                     let col = &a.data[p * a.ld + i0..p * a.ld + i0 + mr];
                     buf[off..off + mr].copy_from_slice(col);
@@ -64,7 +65,7 @@ pub fn pack_a(a: MatView<'_>, buf: &mut [f64], mr: usize, alpha: f64) {
                     buf[off + r] = alpha * a.at(i0 + r, p);
                 }
                 for r in rows..mr {
-                    buf[off + r] = 0.0;
+                    buf[off + r] = E::ZERO;
                 }
                 off += mr;
             }
@@ -73,7 +74,7 @@ pub fn pack_a(a: MatView<'_>, buf: &mut [f64], mr: usize, alpha: f64) {
 }
 
 /// Pack `b` (a `kc x nc` view) into `buf` as `nr`-column micro-panels.
-pub fn pack_b(b: MatView<'_>, buf: &mut [f64], nr: usize) {
+pub fn pack_b<E: Elem>(b: MatView<'_, E>, buf: &mut [E], nr: usize) {
     let (kc, nc) = (b.rows, b.cols);
     let n_panels = nc.div_ceil(nr);
     assert!(buf.len() >= n_panels * nr * kc, "pack_b buffer too small");
@@ -86,7 +87,7 @@ pub fn pack_b(b: MatView<'_>, buf: &mut [f64], nr: usize) {
                 buf[off + c] = b.at(p, j0 + c);
             }
             for c in cols..nr {
-                buf[off + c] = 0.0;
+                buf[off + c] = E::ZERO;
             }
             off += nr;
         }

@@ -61,6 +61,7 @@
 use crate::model::ccp::GemmConfig;
 use crate::model::GemmDims;
 use crate::runtime::pool::{PoolCtx, SubTeam, WorkerPool};
+use crate::util::elem::Elem;
 use crate::util::matrix::{MatView, MatViewMut};
 
 use super::blocked::{gemm_blocked, macro_kernel, scale_c, Workspace};
@@ -89,16 +90,24 @@ impl ThreadPlan {
     }
 }
 
-/// Send-able raw pointer to C (threads write disjoint tiles).
-#[derive(Clone, Copy)]
-pub(crate) struct SendPtr(pub(crate) *mut f64);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
+/// Send-able raw pointer to C (threads write disjoint tiles). Generic
+/// over the element type; defaults to `f64` so pre-generic code keeps
+/// compiling unchanged.
+pub(crate) struct SendPtr<E = f64>(pub(crate) *mut E);
+unsafe impl<E> Send for SendPtr<E> {}
+unsafe impl<E> Sync for SendPtr<E> {}
 
-impl SendPtr {
+impl<E> Clone for SendPtr<E> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<E> Copy for SendPtr<E> {}
+
+impl<E> SendPtr<E> {
     /// Accessor (not a field read) so closures capture the whole wrapper
     /// instead of the raw pointer under edition-2021 disjoint capture.
-    pub(crate) fn ptr(&self) -> *mut f64 {
+    pub(crate) fn ptr(&self) -> *mut E {
         self.0
     }
 }
@@ -106,16 +115,22 @@ impl SendPtr {
 /// A packed buffer shared across ranks. Mutation is only ever through
 /// disjoint micro-panel ranges between barriers; reads only happen after
 /// the barrier that ends the pack phase.
-#[derive(Clone, Copy)]
-struct SharedBuf {
-    ptr: *mut f64,
+struct SharedBuf<E = f64> {
+    ptr: *mut E,
     len: usize,
 }
-unsafe impl Send for SharedBuf {}
-unsafe impl Sync for SharedBuf {}
+unsafe impl<E> Send for SharedBuf<E> {}
+unsafe impl<E> Sync for SharedBuf<E> {}
 
-impl SharedBuf {
-    fn new(buf: &mut [f64]) -> Self {
+impl<E> Clone for SharedBuf<E> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<E> Copy for SharedBuf<E> {}
+
+impl<E: Elem> SharedBuf<E> {
+    fn new(buf: &mut [E]) -> Self {
         Self { ptr: buf.as_mut_ptr(), len: buf.len() }
     }
 
@@ -132,7 +147,7 @@ impl SharedBuf {
     /// The `[off, off + len)` range must be disjoint from every range any
     /// other rank mutates before the next barrier.
     #[allow(clippy::mut_from_ref)] // aliasing discipline documented above
-    unsafe fn range_mut(&self, off: usize, len: usize) -> &mut [f64] {
+    unsafe fn range_mut(&self, off: usize, len: usize) -> &mut [E] {
         debug_assert!(off + len <= self.len);
         std::slice::from_raw_parts_mut(self.ptr.add(off), len)
     }
@@ -140,7 +155,7 @@ impl SharedBuf {
     /// # Safety
     /// No rank may mutate the buffer between the barrier that completed
     /// the pack and the barrier that allows the next pack.
-    unsafe fn as_slice(&self) -> &[f64] {
+    unsafe fn as_slice(&self) -> &[E] {
         std::slice::from_raw_parts(self.ptr, self.len)
     }
 }
@@ -174,7 +189,13 @@ pub fn partition(total: usize, parts: usize, grain: usize) -> Vec<(usize, usize)
 /// Cooperatively pack the `kc_eff x nc_eff` block `b_block` into `buf`:
 /// this rank packs the `nr`-aligned column range assigned by
 /// [`partition_rank`]. Byte-identical to a serial [`pack_b`].
-fn coop_pack_b(rank: usize, threads: usize, b_block: MatView<'_>, buf: SharedBuf, nr: usize) {
+fn coop_pack_b<E: Elem>(
+    rank: usize,
+    threads: usize,
+    b_block: MatView<'_, E>,
+    buf: SharedBuf<E>,
+    nr: usize,
+) {
     let (kc_eff, nc_eff) = (b_block.rows, b_block.cols);
     let (lo, hi) = partition_rank(nc_eff, threads, rank, nr);
     if lo < hi {
@@ -189,13 +210,13 @@ fn coop_pack_b(rank: usize, threads: usize, b_block: MatView<'_>, buf: SharedBuf
 /// Cooperatively pack the `mc_eff x kc_eff` block `a_block` into `buf`:
 /// this rank packs the `mr`-aligned row range assigned by
 /// [`partition_rank`]. Byte-identical to a serial [`pack_a`].
-fn coop_pack_a(
+fn coop_pack_a<E: Elem>(
     rank: usize,
     threads: usize,
-    a_block: MatView<'_>,
-    buf: SharedBuf,
+    a_block: MatView<'_, E>,
+    buf: SharedBuf<E>,
     mr: usize,
-    alpha: f64,
+    alpha: E,
 ) {
     let (mc_eff, kc_eff) = (a_block.rows, a_block.cols);
     let (lo, hi) = partition_rank(mc_eff, threads, rank, mr);
@@ -212,8 +233,8 @@ fn coop_pack_a(
 /// scaled in place by the caller thread — forking costs more than it
 /// saves). Column-wise arithmetic is identical to the sequential
 /// [`scale_c`], preserving bitwise determinism.
-pub(crate) fn scale_c_parallel(beta: f64, c: &mut MatViewMut<'_>, pool: &WorkerPool) {
-    if beta == 1.0 {
+pub(crate) fn scale_c_parallel<E: Elem>(beta: E, c: &mut MatViewMut<'_, E>, pool: &WorkerPool) {
+    if beta == E::ONE {
         return;
     }
     const PARALLEL_ELEMS: usize = 256 * 256;
@@ -228,8 +249,8 @@ pub(crate) fn scale_c_parallel(beta: f64, c: &mut MatViewMut<'_>, pool: &WorkerP
         for j in lo..hi {
             // SAFETY: ranks own disjoint column ranges of C.
             let col = unsafe { std::slice::from_raw_parts_mut(base.ptr().add(j * ld), rows) };
-            if beta == 0.0 {
-                col.fill(0.0);
+            if beta == E::ZERO {
+                col.fill(E::ZERO);
             } else {
                 for v in col {
                     *v *= beta;
@@ -244,14 +265,14 @@ pub(crate) fn scale_c_parallel(beta: f64, c: &mut MatViewMut<'_>, pool: &WorkerP
 /// With a single-thread pool this degenerates to [`gemm_blocked`] on the
 /// pool's rank-0 workspace.
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_parallel(
+pub fn gemm_parallel<E: Elem>(
     cfg: &GemmConfig,
-    kernel: &MicroKernelImpl,
-    alpha: f64,
-    a: MatView<'_>,
-    b: MatView<'_>,
-    beta: f64,
-    c: &mut MatViewMut<'_>,
+    kernel: &MicroKernelImpl<E>,
+    alpha: E,
+    a: MatView<'_, E>,
+    b: MatView<'_, E>,
+    beta: E,
+    c: &mut MatViewMut<'_, E>,
     target: ParallelLoop,
     pool: &WorkerPool,
 ) {
@@ -266,7 +287,7 @@ pub fn gemm_parallel(
     }
     let (m, n, k) = (a.rows, b.cols, a.cols);
     scale_c_parallel(beta, c, pool);
-    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+    if m == 0 || n == 0 || k == 0 || alpha == E::ZERO {
         return;
     }
     let ccp = cfg.ccp.clamp_to(GemmDims::new(m, n, k));
@@ -287,16 +308,16 @@ pub fn gemm_parallel(
 /// identical to [`gemm_blocked`] with the same (clamped) configuration,
 /// for **any** team width including 1.
 #[allow(clippy::too_many_arguments)]
-fn g4_sweep(
+fn g4_sweep<E: Elem>(
     cfg: &GemmConfig,
-    kernel: &MicroKernelImpl,
-    alpha: f64,
-    a: MatView<'_>,
-    b: MatView<'_>,
-    cbase: SendPtr,
+    kernel: &MicroKernelImpl<E>,
+    alpha: E,
+    a: MatView<'_, E>,
+    b: MatView<'_, E>,
+    cbase: SendPtr<E>,
     ldc: usize,
-    a_shared: SharedBuf,
-    b_shared: SharedBuf,
+    a_shared: SharedBuf<E>,
+    b_shared: SharedBuf<E>,
     rank: usize,
     threads: usize,
     sync: &dyn Fn(),
@@ -344,13 +365,13 @@ fn g4_sweep(
     }
 }
 
-fn gemm_parallel_g4(
+fn gemm_parallel_g4<E: Elem>(
     cfg: &GemmConfig,
-    kernel: &MicroKernelImpl,
-    alpha: f64,
-    a: MatView<'_>,
-    b: MatView<'_>,
-    c: &mut MatViewMut<'_>,
+    kernel: &MicroKernelImpl<E>,
+    alpha: E,
+    a: MatView<'_, E>,
+    b: MatView<'_, E>,
+    c: &mut MatViewMut<'_, E>,
     pool: &WorkerPool,
 ) {
     let ldc = c.ld;
@@ -359,9 +380,11 @@ fn gemm_parallel_g4(
     // guard for the whole job both pins the buffers and excludes any
     // other (erroneous) borrower.
     let mut ws0 = pool.workspace(0);
-    ws0.ensure(cfg);
-    let a_shared = SharedBuf::new(&mut ws0.a_buf);
-    let b_shared = SharedBuf::new(&mut ws0.b_buf);
+    let a_need = packed_a_len(cfg.ccp.mc, cfg.ccp.kc, cfg.mk.mr);
+    let b_need = packed_b_len(cfg.ccp.kc, cfg.ccp.nc, cfg.mk.nr);
+    let (a_buf, b_buf) = ws0.bufs_mut::<E>(a_need, b_need);
+    let a_shared = SharedBuf::new(a_buf);
+    let b_shared = SharedBuf::new(b_buf);
     let cbase = SendPtr(c.data.as_mut_ptr());
     pool.run(&|ctx: &PoolCtx<'_>| {
         g4_sweep(
@@ -372,18 +395,20 @@ fn gemm_parallel_g4(
     drop(ws0);
 }
 
-fn gemm_parallel_g3(
+fn gemm_parallel_g3<E: Elem>(
     cfg: &GemmConfig,
-    kernel: &MicroKernelImpl,
-    alpha: f64,
-    a: MatView<'_>,
-    b: MatView<'_>,
-    c: &mut MatViewMut<'_>,
+    kernel: &MicroKernelImpl<E>,
+    alpha: E,
+    a: MatView<'_, E>,
+    b: MatView<'_, E>,
+    c: &mut MatViewMut<'_, E>,
     pool: &WorkerPool,
 ) {
     let (m, n, k) = (a.rows, b.cols, a.cols);
     let (mc, nc, kc) = (cfg.ccp.mc, cfg.ccp.nc, cfg.ccp.kc);
     let (mr, nr) = (cfg.mk.mr, cfg.mk.nr);
+    let a_need = packed_a_len(mc, kc, mr);
+    let b_need = packed_b_len(kc, nc, nr);
     let ldc = c.ld;
     // The team-shared Bc (and rank 0's private Ac) live in the rank-0
     // workspace, locked by the leader for the duration of the job; ranks
@@ -391,9 +416,9 @@ fn gemm_parallel_g3(
     // mc-aligned, so each rank's macro-blocks coincide exactly with the
     // sequential schedule.
     let mut ws0 = pool.workspace(0);
-    ws0.ensure(cfg);
-    let b_shared = SharedBuf::new(&mut ws0.b_buf);
-    let a0_buf = SharedBuf::new(&mut ws0.a_buf);
+    let (a0_elems, b0_elems) = ws0.bufs_mut::<E>(a_need, b_need);
+    let a0_buf = SharedBuf::new(a0_elems);
+    let b_shared = SharedBuf::new(b0_elems);
     let cbase = SendPtr(c.data.as_mut_ptr());
     pool.run(&|ctx: &PoolCtx<'_>| {
         let (rank, threads) = (ctx.rank, ctx.threads);
@@ -401,7 +426,7 @@ fn gemm_parallel_g3(
         // use their own pinned pool workspace.
         let mut ws_own = if rank == 0 { None } else { Some(ctx.workspace()) };
         if let Some(ws) = ws_own.as_mut() {
-            ws.ensure(cfg);
+            ws.ensure_elems::<E>(a_need, b_need);
         }
         let (lo, hi) = partition_rank(m, threads, rank, mc);
         let mut jc = 0; // Loop G1
@@ -416,8 +441,8 @@ fn gemm_parallel_g3(
                 let mut ic = lo; // Loop G3 over this rank's chunk
                 while ic < hi {
                     let mc_eff = mc.min(hi - ic);
-                    let a_buf: &mut [f64] = match ws_own.as_mut() {
-                        Some(ws) => &mut ws.a_buf,
+                    let a_buf: &mut [E] = match ws_own.as_mut() {
+                        Some(ws) => ws.bufs_mut::<E>(a_need, 0).0,
                         // SAFETY: only rank 0 touches the rank-0 buffer.
                         None => unsafe { a0_buf.range_mut(0, a0_buf.len) },
                     };
@@ -502,19 +527,19 @@ impl PackedALayout {
 /// and every one of those ranks must make this call with identical
 /// arguments.
 #[allow(clippy::too_many_arguments)]
-fn fused_col_sweep(
+fn fused_col_sweep<E: Elem>(
     cfg: &GemmConfig,
-    kernel: &MicroKernelImpl,
-    alpha: f64,
-    a: MatView<'_>,
-    b: MatView<'_>,
-    cbase: SendPtr,
+    kernel: &MicroKernelImpl<E>,
+    alpha: E,
+    a: MatView<'_, E>,
+    b: MatView<'_, E>,
+    cbase: SendPtr<E>,
     ldc: usize,
     cols: (usize, usize),
     pack_a_slots: bool,
     layout: PackedALayout,
-    a_shared: SharedBuf,
-    b_shared: SharedBuf,
+    a_shared: SharedBuf<E>,
+    b_shared: SharedBuf<E>,
     rank: usize,
     threads: usize,
     sync: &dyn Fn(),
@@ -589,13 +614,13 @@ fn fused_col_sweep(
 /// (head = the panel columns, tail = everything after them); see there
 /// for the full contract and the bitwise-identity argument.
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_fused_trailing(
+pub fn gemm_fused_trailing<E: Elem>(
     cfg: &GemmConfig,
-    kernel: &MicroKernelImpl,
-    alpha: f64,
-    a: MatView<'_>,
-    b: MatView<'_>,
-    c: &mut MatViewMut<'_>,
+    kernel: &MicroKernelImpl<E>,
+    alpha: E,
+    a: MatView<'_, E>,
+    b: MatView<'_, E>,
+    c: &mut MatViewMut<'_, E>,
     split_col: usize,
     panel_workers: usize,
     panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
@@ -649,13 +674,13 @@ pub fn gemm_fused_trailing(
 /// single-thread pool), only after every head range is complete; it must
 /// touch only memory disjoint from the tail columns and from A and B.
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_fused_trailing_ranges(
+pub fn gemm_fused_trailing_ranges<E: Elem>(
     cfg: &GemmConfig,
-    kernel: &MicroKernelImpl,
-    alpha: f64,
-    a: MatView<'_>,
-    b: MatView<'_>,
-    c: &mut MatViewMut<'_>,
+    kernel: &MicroKernelImpl<E>,
+    alpha: E,
+    a: MatView<'_, E>,
+    b: MatView<'_, E>,
+    c: &mut MatViewMut<'_, E>,
     head: &[(usize, usize)],
     tail: (usize, usize),
     panel_workers: usize,
@@ -676,7 +701,7 @@ pub fn gemm_fused_trailing_ranges(
     }
     assert!(tail.0 <= tail.1 && tail.1 <= n, "tail range out of bounds");
     assert!(prev_hi <= tail.0, "head must end at or before the tail");
-    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+    if m == 0 || n == 0 || k == 0 || alpha == E::ZERO {
         // Nothing to update, but callers rely on the panel task running.
         panel_task(&SubTeam::solo_panel());
         return;
@@ -691,13 +716,13 @@ pub fn gemm_fused_trailing_ranges(
     let layout = PackedALayout { m, k, mc: ccp.mc, kc: ccp.kc, mr: eff.mk.mr };
     let ldc = c.ld;
     let mut ws0 = pool.workspace(0);
-    ws0.ensure(&eff);
-    let abig = layout.total_len();
-    if ws0.a_buf.len() < abig {
-        ws0.a_buf.resize(abig, 0.0);
-    }
-    let a_shared = SharedBuf::new(&mut ws0.a_buf);
-    let b_shared = SharedBuf::new(&mut ws0.b_buf);
+    // The big packed-A buffer holds one write-once slot per (pc, ic)
+    // macro-block; always at least one block's worth.
+    let abig = layout.total_len().max(packed_a_len(ccp.mc, ccp.kc, eff.mk.mr));
+    let b_need = packed_b_len(ccp.kc, ccp.nc, eff.mk.nr);
+    let (a_buf, b_buf) = ws0.bufs_mut::<E>(abig, b_need);
+    let a_shared = SharedBuf::new(a_buf);
+    let b_shared = SharedBuf::new(b_buf);
     let cbase = SendPtr(c.data.as_mut_ptr());
     // The Ac slots are packed cooperatively by whichever phase first
     // sweeps a non-empty range; every rank derives the same answer from
@@ -740,13 +765,13 @@ pub fn gemm_fused_trailing_ranges(
 /// Identical operation order — and therefore identical results — to the
 /// split-team driver.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn gemm_fused_trailing_ranges_seq(
+pub(crate) fn gemm_fused_trailing_ranges_seq<E: Elem>(
     cfg: &GemmConfig,
-    kernel: &MicroKernelImpl,
-    alpha: f64,
-    a: MatView<'_>,
-    b: MatView<'_>,
-    c: &mut MatViewMut<'_>,
+    kernel: &MicroKernelImpl<E>,
+    alpha: E,
+    a: MatView<'_, E>,
+    b: MatView<'_, E>,
+    c: &mut MatViewMut<'_, E>,
     head: &[(usize, usize)],
     tail: (usize, usize),
     panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
@@ -756,14 +781,14 @@ pub(crate) fn gemm_fused_trailing_ranges_seq(
         if hi > lo {
             let b1 = b.sub(0, lo, b.rows, hi - lo);
             let mut c1 = c.sub_mut(0, lo, c.rows, hi - lo);
-            gemm_blocked(cfg, kernel, alpha, a, b1, 1.0, &mut c1, ws);
+            gemm_blocked(cfg, kernel, alpha, a, b1, E::ONE, &mut c1, ws);
         }
     }
     panel_task(&SubTeam::solo_panel());
     if tail.1 > tail.0 {
         let b2 = b.sub(0, tail.0, b.rows, tail.1 - tail.0);
         let mut c2 = c.sub_mut(0, tail.0, c.rows, tail.1 - tail.0);
-        gemm_blocked(cfg, kernel, alpha, a, b2, 1.0, &mut c2, ws);
+        gemm_blocked(cfg, kernel, alpha, a, b2, E::ONE, &mut c2, ws);
     }
 }
 
@@ -771,26 +796,26 @@ pub(crate) fn gemm_fused_trailing_ranges_seq(
 /// `C = alpha * A * B + beta * C` with its **own** configuration and
 /// kernel (the per-call co-design selection the paper argues for is kept
 /// per request, batching or not).
-pub struct BatchGemm<'a> {
+pub struct BatchGemm<'a, E = f64> {
     pub cfg: GemmConfig,
-    pub kernel: MicroKernelImpl,
-    pub alpha: f64,
-    pub a: MatView<'a>,
-    pub b: MatView<'a>,
-    pub beta: f64,
-    pub c: MatViewMut<'a>,
+    pub kernel: MicroKernelImpl<E>,
+    pub alpha: E,
+    pub a: MatView<'a, E>,
+    pub b: MatView<'a, E>,
+    pub beta: E,
+    pub c: MatViewMut<'a, E>,
 }
 
 /// Per-member job descriptor shared with the pool closure (raw C base +
 /// clamped config; views of A/B are `Copy` and `Sync`).
-struct MemberDesc<'a> {
+struct MemberDesc<'a, E> {
     cfg: GemmConfig,
-    kernel: MicroKernelImpl,
-    alpha: f64,
-    beta: f64,
-    a: MatView<'a>,
-    b: MatView<'a>,
-    cbase: SendPtr,
+    kernel: MicroKernelImpl<E>,
+    alpha: E,
+    beta: E,
+    a: MatView<'a, E>,
+    b: MatView<'a, E>,
+    cbase: SendPtr<E>,
     rows: usize,
     cols: usize,
     ldc: usize,
@@ -806,8 +831,8 @@ struct MemberDesc<'a> {
 /// `base` must point to a valid `rows x cols` column-major block with
 /// stride `ldc >= rows` that no other rank touches until the caller's
 /// next group barrier.
-unsafe fn scale_c_raw(beta: f64, base: *mut f64, rows: usize, cols: usize, ldc: usize) {
-    if beta == 1.0 || rows == 0 || cols == 0 {
+unsafe fn scale_c_raw<E: Elem>(beta: E, base: *mut E, rows: usize, cols: usize, ldc: usize) {
+    if beta == E::ONE || rows == 0 || cols == 0 {
         return;
     }
     let len = ldc * (cols - 1) + rows;
@@ -835,7 +860,11 @@ unsafe fn scale_c_raw(beta: f64, base: *mut f64, rows: usize, cols: usize, ldc: 
 ///
 /// With a single-thread pool the members run inline, in order, through
 /// [`gemm_blocked`] — the same degenerate path a solo dispatch takes.
-pub fn gemm_batch_parallel(members: &mut [BatchGemm<'_>], shares: &[usize], pool: &WorkerPool) {
+pub fn gemm_batch_parallel<E: Elem>(
+    members: &mut [BatchGemm<'_, E>],
+    shares: &[usize],
+    pool: &WorkerPool,
+) {
     assert_eq!(members.len(), shares.len(), "one share per batch member");
     for m in members.iter() {
         assert_eq!(m.kernel.spec, m.cfg.mk, "kernel/config shape mismatch");
@@ -862,9 +891,9 @@ pub fn gemm_batch_parallel(members: &mut [BatchGemm<'_>], shares: &[usize], pool
     // freedom with concurrent drivers: rank 0 first (every pool driver
     // takes workspace(0) before the run lock, making it the de-facto
     // driver lock), then the remaining leaders in ascending rank order.
-    let mut descs: Vec<MemberDesc<'_>> = Vec::with_capacity(members.len());
+    let mut descs: Vec<MemberDesc<'_, E>> = Vec::with_capacity(members.len());
     let mut guards = Vec::with_capacity(members.len());
-    let mut bufs: Vec<(SharedBuf, SharedBuf)> = Vec::with_capacity(members.len());
+    let mut bufs: Vec<(SharedBuf<E>, SharedBuf<E>)> = Vec::with_capacity(members.len());
     let mut leader = 0usize;
     for (m, &share) in members.iter_mut().zip(shares) {
         assert!(share > 0, "every member needs at least one rank");
@@ -872,8 +901,10 @@ pub fn gemm_batch_parallel(members: &mut [BatchGemm<'_>], shares: &[usize], pool
         let ccp = m.cfg.ccp.clamp_to(GemmDims::new(rows, cols, k));
         let eff = GemmConfig { mk: m.cfg.mk, ccp };
         let mut ws = pool.workspace(leader);
-        ws.ensure(&eff);
-        bufs.push((SharedBuf::new(&mut ws.a_buf), SharedBuf::new(&mut ws.b_buf)));
+        let a_need = packed_a_len(ccp.mc, ccp.kc, eff.mk.mr);
+        let b_need = packed_b_len(ccp.kc, ccp.nc, eff.mk.nr);
+        let (a_buf, b_buf) = ws.bufs_mut::<E>(a_need, b_need);
+        bufs.push((SharedBuf::new(a_buf), SharedBuf::new(b_buf)));
         guards.push(ws);
         descs.push(MemberDesc {
             cfg: eff,
@@ -886,7 +917,7 @@ pub fn gemm_batch_parallel(members: &mut [BatchGemm<'_>], shares: &[usize], pool
             rows,
             cols,
             ldc: m.c.ld,
-            degenerate: rows == 0 || cols == 0 || k == 0 || m.alpha == 0.0,
+            degenerate: rows == 0 || cols == 0 || k == 0 || m.alpha == E::ZERO,
         });
         leader += share;
     }

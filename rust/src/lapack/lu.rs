@@ -12,6 +12,13 @@
 //! The trailing GEMM has `m = n = s - k - b` (shrinking) and constant
 //! `k = b` — the skinny-k shape whose cache behaviour the paper studies.
 //!
+//! The whole driver is **generic over the element type**
+//! ([`lu_blocked_t`] / [`lu_factor_t`]): the f64 instantiation is the
+//! historical code path bit for bit, and the f32 instantiation runs the
+//! same pooled lookahead pipeline with the width-aware configs — it is
+//! the factorization stage of the mixed-precision solver in
+//! [`crate::lapack::refine`].
+//!
 //! # Dynamic deep lookahead (the work-queue pipeline)
 //!
 //! With a [`crate::gemm::Lookahead`] policy enabled on the engine,
@@ -46,18 +53,20 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::gemm::{gemm_blocked, GemmEngine, Workspace};
+use crate::gemm::{gemm_blocked, GemmElem, GemmEngine, MicroKernelImpl, Workspace};
 use crate::model::{GemmDims, PanelShape};
 use crate::runtime::pool::SubTeam;
-use crate::util::matrix::MatrixF64;
+use crate::util::elem::Elem;
+use crate::util::matrix::{Matrix, MatrixF64, MatViewMut};
 
 use super::pfact::{getf2, getf2_team, laswp, laswp_parallel, SharedPanel, NO_ERR};
 use super::trsm::trsm_left_lower_unit;
 
-/// Result of a blocked LU factorization.
-pub struct LuFactors {
+/// Result of a blocked LU factorization (generic over the element type;
+/// default `f64`, so pre-generic code keeps compiling unchanged).
+pub struct LuFactors<E = f64> {
     /// Factored matrix: strictly-lower = L (unit diag), upper = U.
-    pub lu: MatrixF64,
+    pub lu: Matrix<E>,
     /// Pivot rows per step, LAPACK ipiv convention (0-based, relative to
     /// the whole matrix): at step j, rows j and pivots[j] were swapped.
     pub pivots: Vec<usize>,
@@ -65,10 +74,10 @@ pub struct LuFactors {
     pub block: usize,
 }
 
-impl LuFactors {
+impl<E: Elem> LuFactors<E> {
     /// Apply the recorded permutation to a fresh copy of `x` (compute
     /// `P * x` where `P A = L U`).
-    pub fn permute(&self, x: &MatrixF64) -> MatrixF64 {
+    pub fn permute(&self, x: &Matrix<E>) -> Matrix<E> {
         let mut px = x.clone();
         for (j, &pj) in self.pivots.iter().enumerate() {
             if j != pj {
@@ -83,28 +92,28 @@ impl LuFactors {
     }
 
     /// Explicit L factor (s x s, unit lower).
-    pub fn l_matrix(&self) -> MatrixF64 {
+    pub fn l_matrix(&self) -> Matrix<E> {
         let s = self.lu.rows();
-        MatrixF64::from_fn(s, s, |i, j| {
+        Matrix::from_fn(s, s, |i, j| {
             if i == j {
-                1.0
+                E::ONE
             } else if i > j {
                 self.lu[(i, j)]
             } else {
-                0.0
+                E::ZERO
             }
         })
     }
 
     /// Explicit U factor (s x s, upper).
-    pub fn u_matrix(&self) -> MatrixF64 {
+    pub fn u_matrix(&self) -> Matrix<E> {
         let s = self.lu.rows();
-        MatrixF64::from_fn(s, s, |i, j| if i <= j { self.lu[(i, j)] } else { 0.0 })
+        Matrix::from_fn(s, s, |i, j| if i <= j { self.lu[(i, j)] } else { E::ZERO })
     }
 
     /// Solve `A x = rhs` using the factorization (forward + backward
-    /// substitution on the permuted right-hand side).
-    pub fn solve(&self, rhs: &MatrixF64) -> MatrixF64 {
+    /// substitution on the permuted right-hand side, in `E` precision).
+    pub fn solve(&self, rhs: &Matrix<E>) -> Matrix<E> {
         let s = self.lu.rows();
         assert_eq!(rhs.rows(), s);
         let mut x = self.permute(rhs);
@@ -115,7 +124,8 @@ impl LuFactors {
             for jj in (0..s).rev() {
                 let mut acc = x[(jj, c)];
                 for t in jj + 1..s {
-                    acc -= self.lu[(jj, t)] * x[(t, c)];
+                    let delta = self.lu[(jj, t)] * x[(t, c)];
+                    acc -= delta;
                 }
                 x[(jj, c)] = acc / self.lu[(jj, jj)];
             }
@@ -126,12 +136,12 @@ impl LuFactors {
     /// Residual `max|P A - L U|` against the original matrix, normalized
     /// by `max|A|` (cheap full-reconstruction check used by tests and the
     /// end-to-end example).
-    pub fn reconstruction_error(&self, a0: &MatrixF64) -> f64 {
+    pub fn reconstruction_error(&self, a0: &Matrix<E>) -> f64 {
         let pa = self.permute(a0);
         let l = self.l_matrix();
         let u = self.u_matrix();
-        let mut lu = MatrixF64::zeros(pa.rows(), pa.cols());
-        crate::gemm::gemm_reference(1.0, l.view(), u.view(), 0.0, &mut lu.view_mut());
+        let mut lu = Matrix::<E>::zeros(pa.rows(), pa.cols());
+        crate::gemm::gemm_reference(E::ONE, l.view(), u.view(), E::ZERO, &mut lu.view_mut());
         pa.max_abs_diff(&lu) / a0.max_abs().max(1e-300)
     }
 }
@@ -144,8 +154,8 @@ impl LuFactors {
 /// those in-flight panels received this panel's swaps inside the fused
 /// chains that readied them (the baseline passes `right_from = k + b`,
 /// i.e. no gap).
-fn apply_panel_swaps(
-    a: &mut MatrixF64,
+fn apply_panel_swaps<E: Elem>(
+    a: &mut Matrix<E>,
     k: usize,
     right_from: usize,
     piv_local: &[usize],
@@ -153,7 +163,7 @@ fn apply_panel_swaps(
 ) {
     let s = a.rows();
     let pool = engine.pool().cloned();
-    let mut swap = |view: &mut crate::util::matrix::MatViewMut<'_>| match &pool {
+    let mut swap = |view: &mut MatViewMut<'_, E>| match &pool {
         Some(p) => laswp_parallel(view, k, piv_local, p),
         None => laswp(view, k, piv_local),
     };
@@ -180,6 +190,17 @@ fn apply_panel_swaps(
 /// trailing shape `(s-k-b) x (s-k-b) x b` runs the scorer once; repeated
 /// factorizations of equal order are pure cache hits).
 pub fn lu_blocked(a: &mut MatrixF64, block: usize, engine: &mut GemmEngine) -> Result<Vec<usize>, usize> {
+    lu_blocked_t::<f64>(a, block, engine)
+}
+
+/// The dtype-generic blocked LU behind [`lu_blocked`]: an f32
+/// factorization runs the identical (baseline or lookahead) pipeline on
+/// the same shared pool, under the f32-width model configs.
+pub fn lu_blocked_t<E: GemmElem>(
+    a: &mut Matrix<E>,
+    block: usize,
+    engine: &mut GemmEngine,
+) -> Result<Vec<usize>, usize> {
     if engine.lookahead().enabled() {
         lu_blocked_lookahead(a, block, engine)
     } else {
@@ -189,8 +210,8 @@ pub fn lu_blocked(a: &mut MatrixF64, block: usize, engine: &mut GemmEngine) -> R
 
 /// The non-lookahead pipeline: factor panel, swap, solve, update —
 /// strictly serialized per iteration.
-fn lu_blocked_baseline(
-    a: &mut MatrixF64,
+fn lu_blocked_baseline<E: GemmElem>(
+    a: &mut Matrix<E>,
     block: usize,
     engine: &mut GemmEngine,
 ) -> Result<Vec<usize>, usize> {
@@ -228,7 +249,7 @@ fn lu_blocked_baseline(
                 let a21 = a.sub(k + b, k, rest, b).to_owned_matrix();
                 let a12 = a.sub(k, k + b, b, rest).to_owned_matrix();
                 let mut a22 = a.sub_mut(k + b, k + b, rest, rest);
-                engine.gemm(-1.0, a21.view(), a12.view(), 1.0, &mut a22);
+                engine.gemm_t(E::from_f64(-1.0), a21.view(), a12.view(), E::ONE, &mut a22);
             }
         }
         k += b;
@@ -259,8 +280,8 @@ fn lu_blocked_baseline(
 /// columns and factors them (`getf2_team`), and whose update sub-team
 /// sweeps the remainder. Per-column op order — and therefore every bit
 /// of the result — is identical to the serialized baseline.
-fn lu_blocked_lookahead(
-    a: &mut MatrixF64,
+fn lu_blocked_lookahead<E: GemmElem>(
+    a: &mut Matrix<E>,
     block: usize,
     engine: &mut GemmEngine,
 ) -> Result<Vec<usize>, usize> {
@@ -323,7 +344,7 @@ fn lu_blocked_lookahead(
         let o = k + b; // a22 origin (absolute row/col)
         let head = [(wend - o, col_of(nf_new) - o)];
         let tail = (col_of(nf_new) - o, rest);
-        let t_p = engine.panel_team_size(
+        let t_p = engine.panel_team_size_t::<E>(
             la,
             t,
             PanelShape::new(s - wend, width_of(nf)),
@@ -332,11 +353,11 @@ fn lu_blocked_lookahead(
         // Configs the chain needs to replay iterations (t, nf_new - 1)
         // restricted to entering columns — planned on each iteration's
         // *full* trailing dims, exactly as its own fused job will plan.
-        let chain_plans: Vec<(crate::model::ccp::GemmConfig, crate::gemm::MicroKernelImpl)> =
+        let chain_plans: Vec<(crate::model::ccp::GemmConfig, MicroKernelImpl<E>)> =
             ((t + 1)..nf_new.saturating_sub(1))
                 .map(|i| {
                     let mi = s - col_of(i) - width_of(i);
-                    engine.plan_kernel(GemmDims::new(mi, mi, width_of(i)))
+                    engine.plan_kernel_t::<E>(GemmDims::new(mi, mi, width_of(i)))
                 })
                 .collect();
         // Pivot slots and error flags, one set per entering panel.
@@ -382,7 +403,13 @@ fn lu_blocked_lookahead(
                             let (cfg_i, kern_i) = &chain_plans[i - (t + 1)];
                             let mut c_s = shared.sub(ci - o + bi, wc, s - ci - bi, bw).view_mut();
                             gemm_blocked(
-                                cfg_i, kern_i, -1.0, a21i.view(), b12.view(), 1.0, &mut c_s,
+                                cfg_i,
+                                kern_i,
+                                E::from_f64(-1.0),
+                                a21i.view(),
+                                b12.view(),
+                                E::ONE,
+                                &mut c_s,
                                 &mut wsg,
                             );
                         }
@@ -396,8 +423,8 @@ fn lu_blocked_lookahead(
                 }
             }
         };
-        engine.gemm_fused_trailing_ranges(
-            -1.0,
+        engine.gemm_fused_trailing_ranges_t::<E>(
+            E::from_f64(-1.0),
             a21.view(),
             a12.view(),
             &mut a22,
@@ -422,10 +449,19 @@ fn lu_blocked_lookahead(
     Ok(pivots)
 }
 
-/// Convenience wrapper returning [`LuFactors`].
+/// Convenience wrapper returning [`LuFactors`] (FP64).
 pub fn lu_factor(a0: &MatrixF64, block: usize, engine: &mut GemmEngine) -> Result<LuFactors, usize> {
+    lu_factor_t::<f64>(a0, block, engine)
+}
+
+/// [`lu_factor`] per element type.
+pub fn lu_factor_t<E: GemmElem>(
+    a0: &Matrix<E>,
+    block: usize,
+    engine: &mut GemmEngine,
+) -> Result<LuFactors<E>, usize> {
     let mut a = a0.clone();
-    let pivots = lu_blocked(&mut a, block, engine)?;
+    let pivots = lu_blocked_t::<E>(&mut a, block, engine)?;
     Ok(LuFactors { lu: a, pivots, block })
 }
 
@@ -442,7 +478,7 @@ mod tests {
     use super::*;
     use crate::arch::host_xeon;
     use crate::gemm::ConfigMode;
-    use crate::util::{MatrixF64, Pcg64};
+    use crate::util::{MatrixF32, MatrixF64, Pcg64};
 
     fn engine() -> GemmEngine {
         GemmEngine::new(host_xeon(), ConfigMode::Refined)
@@ -533,6 +569,30 @@ mod tests {
                 assert!(f.lu[(i, j)].abs() <= 1.0 + 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn f32_lu_reconstructs_pa_and_single_panel_equals_getf2() {
+        // The generic driver at E = f32: same pipeline, f32 tolerances.
+        let mut rng = Pcg64::seed(48);
+        let a0 = MatrixF32::random(48, 48, &mut rng);
+        let f = lu_factor_t::<f32>(&a0, 8, &mut engine()).unwrap();
+        assert!(f.reconstruction_error(&a0) < 1e-4, "{}", f.reconstruction_error(&a0));
+        // With block >= s the blocked driver degenerates to one getf2
+        // call: bitwise identical to the unblocked f32 reference.
+        let f1 = lu_factor_t::<f32>(&a0, 48, &mut engine()).unwrap();
+        let mut ref_a = a0.clone();
+        let mut ref_piv = vec![0usize; 48];
+        getf2(&mut ref_a.view_mut(), &mut ref_piv).unwrap();
+        assert_eq!(f1.pivots, ref_piv, "single-panel f32 pivots differ from f32 getf2");
+        assert_eq!(f1.lu.max_abs_diff(&ref_a), 0.0, "single-panel path must equal f32 getf2");
+        // And an f32 solve on a well-conditioned system is f32-accurate.
+        let a0 = MatrixF32::random_diag_dominant(40, &mut rng);
+        let x_true = MatrixF32::random(40, 2, &mut rng);
+        let mut rhs = MatrixF32::zeros(40, 2);
+        crate::gemm::gemm_reference(1.0f32, a0.view(), x_true.view(), 0.0f32, &mut rhs.view_mut());
+        let f = lu_factor_t::<f32>(&a0, 8, &mut engine()).unwrap();
+        assert!(f.solve(&rhs).max_abs_diff(&x_true) < 1e-3);
     }
 
     #[test]

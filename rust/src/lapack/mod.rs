@@ -12,6 +12,10 @@
 //! - [`cholesky`] — blocked Cholesky (extension; a second consumer of the
 //!   co-design GEMM showing the approach generalizes beyond LU).
 //! - [`qr`] — blocked Householder QR (compact-WY), a third consumer.
+//! - [`refine`] — the mixed-precision LU solve: factor in f32 on the
+//!   pooled lookahead pipeline (the dtype-generic [`lu::lu_factor_t`]),
+//!   iteratively refine the solution to f64 residual accuracy, fall
+//!   back cleanly to the plain f64 path when f32 cannot converge.
 //!
 //! All three factorizations run a **dynamic deep-lookahead work queue**
 //! when the engine's [`crate::gemm::Lookahead`] policy is enabled (the
@@ -29,10 +33,12 @@ pub mod level3;
 pub mod lu;
 pub mod pfact;
 pub mod qr;
+pub mod refine;
 pub mod trsm;
 
 pub use level3::{syrk_lower, trsm_blocked_left_lower_unit};
-pub use lu::{lu_blocked, lu_factor, lu_flops, LuFactors};
+pub use lu::{lu_blocked, lu_blocked_t, lu_factor, lu_factor_t, lu_flops, LuFactors};
 pub use qr::{qr_blocked, QrFactors};
 pub use pfact::{getf2, getf2_team, laswp, laswp_parallel, SharedPanel, NO_ERR};
+pub use refine::{lu_solve_f64, lu_solve_mixed, RefineOptions, RefineResult};
 pub use trsm::{trsm_left_lower_unit, trsm_right_upper};

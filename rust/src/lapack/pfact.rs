@@ -18,14 +18,15 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::runtime::pool::{SubTeam, WorkerPool};
-use crate::util::matrix::MatViewMut;
+use crate::util::elem::Elem;
+use crate::util::matrix::{Matrix, MatViewMut};
 
 /// A raw shared view of a panel handed to a cooperating sub-team. Every
 /// rank of the team receives the same copy and coordinates its disjoint
-/// writes through the sub-team barrier.
-#[derive(Clone, Copy)]
-pub struct SharedPanel {
-    ptr: *mut f64,
+/// writes through the sub-team barrier. Generic over the element type
+/// (default `f64`), like the rest of the stack.
+pub struct SharedPanel<E = f64> {
+    ptr: *mut E,
     pub rows: usize,
     pub cols: usize,
     pub ld: usize,
@@ -34,11 +35,18 @@ pub struct SharedPanel {
 // SAFETY: shared mutation is coordinated by the sub-team barrier
 // discipline of the functions below (disjoint column ranges between
 // barriers); the wrapper itself only carries the pointer across threads.
-unsafe impl Send for SharedPanel {}
-unsafe impl Sync for SharedPanel {}
+unsafe impl<E> Send for SharedPanel<E> {}
+unsafe impl<E> Sync for SharedPanel<E> {}
 
-impl SharedPanel {
-    pub fn new(v: &mut MatViewMut<'_>) -> Self {
+impl<E> Clone for SharedPanel<E> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<E> Copy for SharedPanel<E> {}
+
+impl<E: Elem> SharedPanel<E> {
+    pub fn new(v: &mut MatViewMut<'_, E>) -> Self {
         Self { ptr: v.data.as_mut_ptr(), rows: v.rows, cols: v.cols, ld: v.ld }
     }
 
@@ -46,7 +54,7 @@ impl SharedPanel {
     /// deep-lookahead chains address individual panels, `L11`/`A21`
     /// blocks and column slices of one big shared trailing-matrix view
     /// through this.
-    pub fn sub(&self, i: usize, j: usize, rows: usize, cols: usize) -> SharedPanel {
+    pub fn sub(&self, i: usize, j: usize, rows: usize, cols: usize) -> SharedPanel<E> {
         assert!(i + rows <= self.rows && j + cols <= self.cols, "SharedPanel::sub out of range");
         SharedPanel {
             // SAFETY: in-bounds by the assert; the pointer stays within
@@ -63,8 +71,8 @@ impl SharedPanel {
     /// # Safety
     /// No other rank may be mutating the region (same contract as
     /// [`Self::view_mut`]).
-    pub unsafe fn to_owned_matrix(&self) -> crate::util::matrix::MatrixF64 {
-        crate::util::matrix::MatrixF64::from_fn(self.rows, self.cols, |i, j| self.at(i, j))
+    pub unsafe fn to_owned_matrix(&self) -> Matrix<E> {
+        Matrix::from_fn(self.rows, self.cols, |i, j| self.at(i, j))
     }
 
     /// Rebuild a mutable view.
@@ -73,7 +81,7 @@ impl SharedPanel {
     /// The caller must guarantee exclusive access to the panel region for
     /// the lifetime of the returned view (e.g. only sub-team rank 0 calls
     /// this, or calls are separated by sub-team barriers).
-    pub unsafe fn view_mut<'a>(&self) -> MatViewMut<'a> {
+    pub unsafe fn view_mut<'a>(&self) -> MatViewMut<'a, E> {
         let len = if self.cols == 0 { 0 } else { (self.cols - 1) * self.ld + self.rows };
         MatViewMut {
             rows: self.rows,
@@ -86,13 +94,13 @@ impl SharedPanel {
     /// Read one element. The caller must respect the sub-team discipline
     /// (no concurrent writer of this element between barriers).
     #[inline]
-    pub fn at(&self, i: usize, j: usize) -> f64 {
+    pub fn at(&self, i: usize, j: usize) -> E {
         debug_assert!(i < self.rows && j < self.cols);
         unsafe { *self.ptr.add(j * self.ld + i) }
     }
 
     #[inline]
-    fn set(&self, i: usize, j: usize, v: f64) {
+    fn set(&self, i: usize, j: usize, v: E) {
         debug_assert!(i < self.rows && j < self.cols);
         unsafe { *self.ptr.add(j * self.ld + i) = v }
     }
@@ -107,7 +115,7 @@ impl SharedPanel {
 ///
 /// Returns `Err(j)` if an exact zero pivot is met at column j (matrix
 /// singular to working precision).
-pub fn getf2(a: &mut MatViewMut<'_>, pivots: &mut [usize]) -> Result<(), usize> {
+pub fn getf2<E: Elem>(a: &mut MatViewMut<'_, E>, pivots: &mut [usize]) -> Result<(), usize> {
     let p = a.rows;
     let q = a.cols;
     let steps = p.min(q);
@@ -124,7 +132,7 @@ pub fn getf2(a: &mut MatViewMut<'_>, pivots: &mut [usize]) -> Result<(), usize> 
             }
         }
         pivots[j] = imax;
-        if vmax == 0.0 {
+        if vmax == E::ZERO {
             return Err(j);
         }
         // Swap rows j and imax across the whole panel.
@@ -139,21 +147,22 @@ pub fn getf2(a: &mut MatViewMut<'_>, pivots: &mut [usize]) -> Result<(), usize> 
         // Scale the sub-column and apply the rank-1 update to the
         // trailing sub-panel.
         let pivot = a.at(j, j);
-        let inv = 1.0 / pivot;
+        let inv = E::ONE / pivot;
         for i in j + 1..p {
             let l = a.at(i, j) * inv;
             a.set(i, j, l);
         }
         for c in j + 1..q {
             let ujc = a.at(j, c);
-            if ujc == 0.0 {
+            if ujc == E::ZERO {
                 continue;
             }
             // Column-major AXPY down column c.
             let col_off = c * a.ld;
             let lcol_off = j * a.ld;
             for i in j + 1..p {
-                a.data[col_off + i] -= a.data[lcol_off + i] * ujc;
+                let delta = a.data[lcol_off + i] * ujc;
+                a.data[col_off + i] -= delta;
             }
         }
     }
@@ -163,7 +172,7 @@ pub fn getf2(a: &mut MatViewMut<'_>, pivots: &mut [usize]) -> Result<(), usize> 
 /// Apply the row interchanges recorded by [`getf2`] to another block of
 /// the same matrix rows (LAPACK `laswp`): for each step j, swap rows
 /// `offset + j` and `offset + pivots[j]`.
-pub fn laswp(a: &mut MatViewMut<'_>, offset: usize, pivots: &[usize]) {
+pub fn laswp<E: Elem>(a: &mut MatViewMut<'_, E>, offset: usize, pivots: &[usize]) {
     for (j, &pj) in pivots.iter().enumerate() {
         let r1 = offset + j;
         let r2 = offset + pj;
@@ -194,7 +203,12 @@ const LASWP_PARALLEL_MIN_ELEMS: usize = 16 * 1024;
 /// (the regression tests assert equality element-for-element). Columns
 /// are walked outermost so each column's cache lines are touched once per
 /// sweep instead of once per pivot.
-pub fn laswp_parallel(a: &mut MatViewMut<'_>, offset: usize, pivots: &[usize], pool: &WorkerPool) {
+pub fn laswp_parallel<E: Elem>(
+    a: &mut MatViewMut<'_, E>,
+    offset: usize,
+    pivots: &[usize],
+    pool: &WorkerPool,
+) {
     if pool.threads() == 1 || 2 * pivots.len() * a.cols < LASWP_PARALLEL_MIN_ELEMS {
         laswp(a, offset, pivots);
         return;
@@ -232,8 +246,8 @@ pub fn laswp_parallel(a: &mut MatViewMut<'_>, offset: usize, pivots: &[usize], p
 /// Every rank of `team` must call this with identical arguments, and no
 /// rank outside the team may touch the panel or the output slots until
 /// the team rejoins the full job.
-pub fn getf2_team(
-    panel: &SharedPanel,
+pub fn getf2_team<E: Elem>(
+    panel: &SharedPanel<E>,
     pivots_out: &[AtomicUsize],
     err: &AtomicUsize,
     team: &SubTeam<'_>,
@@ -256,7 +270,7 @@ pub fn getf2_team(
                 }
             }
             pivots_out[j].store(imax, Ordering::Release);
-            if vmax == 0.0 {
+            if vmax == E::ZERO {
                 err.store(j, Ordering::Release);
             }
         }
@@ -279,7 +293,7 @@ pub fn getf2_team(
         if team.rank == 0 {
             // Scale the sub-column into multipliers.
             let pivot = panel.at(j, j);
-            let inv = 1.0 / pivot;
+            let inv = E::ONE / pivot;
             for i in j + 1..p {
                 let l = panel.at(i, j) * inv;
                 panel.set(i, j, l);
@@ -292,7 +306,7 @@ pub fn getf2_team(
         let (lo, hi) = crate::gemm::parallel::partition_rank(rem, team.threads, team.rank, 1);
         for c in j + 1 + lo..j + 1 + hi {
             let ujc = panel.at(j, c);
-            if ujc == 0.0 {
+            if ujc == E::ZERO {
                 continue;
             }
             for i in j + 1..p {

@@ -1,0 +1,248 @@
+//! Mixed-precision LU solve with iterative refinement — the classic
+//! workload the dtype-generic stack opens (Langou et al., "Exploiting
+//! the performance of 32 bit floating point arithmetic in obtaining 64
+//! bit accuracy"; see PAPERS.md):
+//!
+//! 1. **Factor in f32** on the pooled lookahead pipeline
+//!    ([`crate::lapack::lu::lu_factor_t`] at `E = f32`): half the memory
+//!    traffic, twice the SIMD lanes, and the model's f32-width CCPs —
+//!    the O(n³) work at roughly twice the rate.
+//! 2. **Refine to f64**: iterate `r = b - A x` (f64 GEMM on the same
+//!    pool), solve the correction `A d = r` with the retained f32
+//!    factors (O(n²) per iteration), and update `x += d` in f64, until
+//!    the scaled residual reaches f64 accuracy.
+//! 3. **Fall back cleanly**: if the f32 factorization hits a zero pivot,
+//!    or the refinement stagnates or diverges (the matrix is too
+//!    ill-conditioned for f32 factors to contract the error), re-solve
+//!    entirely in f64 — the answer is then exactly the plain-f64 path's.
+//!
+//! Both precisions run on one engine and one shared worker pool; the
+//! coordinator exposes this as the `MixedSolve` request kind and reports
+//! the per-precision split (f32 factor seconds vs f64 refine seconds,
+//! iteration counts, fallbacks) in its metrics.
+
+use crate::gemm::GemmEngine;
+use crate::util::matrix::{MatrixF32, MatrixF64};
+use crate::util::Stopwatch;
+
+use super::lu::{lu_factor_t, LuFactors};
+
+/// Knobs of the mixed-precision solver.
+#[derive(Clone, Copy, Debug)]
+pub struct RefineOptions {
+    /// Algorithmic block size of both the f32 and the (fallback) f64
+    /// factorization.
+    pub block: usize,
+    /// Refinement iteration cap; hitting it without convergence
+    /// triggers the f64 fallback.
+    pub max_iters: usize,
+    /// Convergence target for the scaled residual
+    /// `|b - Ax|_max / (|A|_max |x|_max + |b|_max)`.
+    pub tol: f64,
+}
+
+impl Default for RefineOptions {
+    fn default() -> Self {
+        Self { block: 64, max_iters: 12, tol: 1e-12 }
+    }
+}
+
+/// Result of a mixed-precision solve, with the per-precision breakdown
+/// the serving metrics report.
+pub struct RefineResult {
+    /// The solution (f64).
+    pub x: MatrixF64,
+    /// Refinement iterations executed (0 when the f32 factorization
+    /// already failed and the solve went straight to f64).
+    pub iterations: usize,
+    /// The f32 path could not reach f64 accuracy (or hit a zero pivot)
+    /// and the solve was redone in f64.
+    pub fell_back: bool,
+    /// Final scaled residual of the returned `x`.
+    pub residual: f64,
+    /// Seconds spent in the f32 factorization (0 when it failed).
+    pub f32_factor_seconds: f64,
+    /// Seconds spent in the f64 residual/correction loop.
+    pub refine_seconds: f64,
+    /// Seconds spent in the f64 fallback factorization + solve (0 when
+    /// not taken).
+    pub fallback_seconds: f64,
+}
+
+/// Scaled residual `|b - Ax|_max / (|A|_max |x|_max + |b|_max)`,
+/// computing `r = b - A x` through the engine (pooled when parallel).
+/// Returns `(residual, r)` so the caller can reuse `r` as the
+/// correction right-hand side.
+fn scaled_residual(
+    engine: &mut GemmEngine,
+    a: &MatrixF64,
+    b: &MatrixF64,
+    x: &MatrixF64,
+    anorm: f64,
+    bnorm: f64,
+) -> (f64, MatrixF64) {
+    let mut r = b.clone();
+    engine.gemm(-1.0, a.view(), x.view(), 1.0, &mut r.view_mut());
+    let denom = (anorm * x.max_abs() + bnorm).max(f64::MIN_POSITIVE);
+    (r.max_abs() / denom, r)
+}
+
+/// Solve `A x = b` by f32 LU factorization + f64 iterative refinement
+/// (see the module docs). `A` must be square; `b` may have any number of
+/// right-hand-side columns. Returns `Err(col)` only when **both** the
+/// f32 and the fallback f64 factorization report singularity at `col`.
+pub fn lu_solve_mixed(
+    a: &MatrixF64,
+    b: &MatrixF64,
+    opts: &RefineOptions,
+    engine: &mut GemmEngine,
+) -> Result<RefineResult, usize> {
+    let s = a.rows();
+    assert_eq!(a.cols(), s, "mixed solve requires a square matrix");
+    assert_eq!(b.rows(), s, "rhs row mismatch");
+    let anorm = a.max_abs();
+    let bnorm = b.max_abs();
+
+    // --- Stage 1: factor in f32 on the pooled pipeline ------------------
+    let sw = Stopwatch::start();
+    let a32 = MatrixF32::convert_from(a);
+    let f32_factors = lu_factor_t::<f32>(&a32, opts.block, engine);
+    // Only time *retained* f32 factorizations: the metric reports the
+    // per-precision split of work that contributed to the answer.
+    let f32_factor_seconds = if f32_factors.is_ok() { sw.elapsed_secs() } else { 0.0 };
+
+    let mut iterations = 0usize;
+    let mut refine_seconds = 0.0;
+    if let Ok(factors32) = f32_factors {
+        // --- Stage 2: f64 residual / f32 correction loop ----------------
+        let sw = Stopwatch::start();
+        let mut x = MatrixF64::convert_from(&factors32.solve(&MatrixF32::convert_from(b)));
+        let (mut rel, mut r) = scaled_residual(engine, a, b, &x, anorm, bnorm);
+        let mut stalled = false;
+        while rel > opts.tol && iterations < opts.max_iters && !stalled {
+            let d32 = factors32.solve(&MatrixF32::convert_from(&r));
+            for c in 0..x.cols() {
+                for i in 0..s {
+                    x[(i, c)] += d32[(i, c)] as f64;
+                }
+            }
+            iterations += 1;
+            let prev = rel;
+            let (next, next_r) = scaled_residual(engine, a, b, &x, anorm, bnorm);
+            // A healthy refinement contracts the residual by
+            // ~cond(A) * eps_f32 per pass; anything above half the
+            // previous residual means the f32 factors cannot drive the
+            // error down and the loop would just burn GEMMs.
+            stalled = next > 0.5 * prev;
+            rel = next;
+            r = next_r;
+        }
+        refine_seconds = sw.elapsed_secs();
+        if rel <= opts.tol {
+            return Ok(RefineResult {
+                x,
+                iterations,
+                fell_back: false,
+                residual: rel,
+                f32_factor_seconds,
+                refine_seconds,
+                fallback_seconds: 0.0,
+            });
+        }
+    }
+
+    // --- Stage 3: clean f64 fallback ------------------------------------
+    // Either the f32 factorization failed outright or the refinement
+    // could not reach tol: redo the solve entirely in f64. The result is
+    // exactly what the plain-f64 path produces on this engine.
+    let sw = Stopwatch::start();
+    let factors = super::lu::lu_factor(a, opts.block, engine)?;
+    let x = factors.solve(b);
+    let fallback_seconds = sw.elapsed_secs();
+    let (rel, _) = scaled_residual(engine, a, b, &x, anorm, bnorm);
+    Ok(RefineResult {
+        x,
+        iterations,
+        fell_back: true,
+        residual: rel,
+        f32_factor_seconds,
+        refine_seconds,
+        fallback_seconds,
+    })
+}
+
+/// Plain f64 factor + solve through the same engine — the baseline the
+/// ablation harness compares [`lu_solve_mixed`] against.
+pub fn lu_solve_f64(
+    a: &MatrixF64,
+    b: &MatrixF64,
+    block: usize,
+    engine: &mut GemmEngine,
+) -> Result<MatrixF64, usize> {
+    let factors: LuFactors = super::lu::lu_factor(a, block, engine)?;
+    Ok(factors.solve(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::host_xeon;
+    use crate::gemm::ConfigMode;
+    use crate::util::Pcg64;
+
+    fn engine() -> GemmEngine {
+        GemmEngine::new(host_xeon(), ConfigMode::Refined)
+    }
+
+    #[test]
+    fn well_conditioned_system_converges_to_f64_accuracy() {
+        let mut rng = Pcg64::seed(314);
+        let a = MatrixF64::random_diag_dominant(96, &mut rng);
+        let x_true = MatrixF64::random(96, 2, &mut rng);
+        let mut b = MatrixF64::zeros(96, 2);
+        crate::gemm::gemm_reference(1.0, a.view(), x_true.view(), 0.0, &mut b.view_mut());
+        let res = lu_solve_mixed(&a, &b, &RefineOptions { block: 24, ..Default::default() },
+                                 &mut engine())
+            .unwrap();
+        assert!(!res.fell_back, "well-conditioned system must not fall back");
+        assert!(res.residual <= 1e-10, "residual {}", res.residual);
+        assert!(res.iterations >= 1, "f32 start cannot already be at f64 accuracy");
+        assert!(res.x.max_abs_diff(&x_true) < 1e-9);
+    }
+
+    #[test]
+    fn singular_matrix_errors_through_both_paths() {
+        let a = MatrixF64::zeros(8, 8);
+        let b = MatrixF64::zeros(8, 1);
+        assert!(lu_solve_mixed(&a, &b, &RefineOptions::default(), &mut engine()).is_err());
+    }
+
+    #[test]
+    fn ill_conditioned_system_falls_back_to_f64() {
+        // Hilbert matrix of order 12: cond ~ 1e16, far beyond what f32
+        // factors can refine. The solver must detect the stall and hand
+        // back exactly the plain-f64 answer.
+        let n = 12;
+        let a = MatrixF64::from_fn(n, n, |i, j| 1.0 / ((i + j + 1) as f64));
+        let mut rng = Pcg64::seed(7);
+        let b = MatrixF64::random(n, 1, &mut rng);
+        let opts = RefineOptions { block: 4, max_iters: 6, ..Default::default() };
+        let res = lu_solve_mixed(&a, &b, &opts, &mut engine()).unwrap();
+        assert!(res.fell_back, "cond ~1e16 must trigger the f64 fallback");
+        let x64 = lu_solve_f64(&a, &b, opts.block, &mut engine()).unwrap();
+        assert_eq!(res.x.max_abs_diff(&x64), 0.0, "fallback must equal the plain f64 solve");
+    }
+
+    #[test]
+    fn per_precision_timings_are_reported() {
+        let mut rng = Pcg64::seed(99);
+        let a = MatrixF64::random_diag_dominant(64, &mut rng);
+        let b = MatrixF64::random(64, 1, &mut rng);
+        let res = lu_solve_mixed(&a, &b, &RefineOptions { block: 16, ..Default::default() },
+                                 &mut engine())
+            .unwrap();
+        assert!(res.f32_factor_seconds > 0.0);
+        assert!(res.refine_seconds > 0.0);
+        assert_eq!(res.fallback_seconds, 0.0);
+    }
+}

@@ -10,11 +10,12 @@
 //! the flop volume is `O(b^2 n)`, a lower-order term next to the GEMM, so
 //! a cache-friendly loop order (column-major AXPY) is sufficient here.
 
+use crate::util::elem::Elem;
 use crate::util::matrix::{MatView, MatViewMut};
 
 /// `B := Lower_unit(L)^{-1} * B`, where `l` is `q x q` (only its strictly
 /// lower part is referenced; unit diagonal assumed) and `b` is `q x n`.
-pub fn trsm_left_lower_unit(l: MatView<'_>, b: &mut MatViewMut<'_>) {
+pub fn trsm_left_lower_unit<E: Elem>(l: MatView<'_, E>, b: &mut MatViewMut<'_, E>) {
     let q = l.rows;
     assert_eq!(l.cols, q, "L must be square");
     assert_eq!(b.rows, q, "B row mismatch");
@@ -25,12 +26,13 @@ pub fn trsm_left_lower_unit(l: MatView<'_>, b: &mut MatViewMut<'_>) {
         let bcol = c * b.ld;
         for j in 0..q {
             let xj = b.data[bcol + j];
-            if xj == 0.0 {
+            if xj == E::ZERO {
                 continue;
             }
             let lcol = j * l.ld;
             for i in j + 1..q {
-                b.data[bcol + i] -= l.data[lcol + i] * xj;
+                let delta = l.data[lcol + i] * xj;
+                b.data[bcol + i] -= delta;
             }
         }
     }
@@ -38,7 +40,7 @@ pub fn trsm_left_lower_unit(l: MatView<'_>, b: &mut MatViewMut<'_>) {
 
 /// `B := B * Upper(U)^{-1}`, where `u` is `q x q` (upper triangle
 /// referenced, non-unit diagonal) and `b` is `m x q`.
-pub fn trsm_right_upper(u: MatView<'_>, b: &mut MatViewMut<'_>) {
+pub fn trsm_right_upper<E: Elem>(u: MatView<'_, E>, b: &mut MatViewMut<'_, E>) {
     let q = u.rows;
     assert_eq!(u.cols, q, "U must be square");
     assert_eq!(b.cols, q, "B col mismatch");
@@ -48,17 +50,18 @@ pub fn trsm_right_upper(u: MatView<'_>, b: &mut MatViewMut<'_>) {
         let ucol = j * u.ld;
         for t in 0..j {
             let utj = u.data[ucol + t];
-            if utj == 0.0 {
+            if utj == E::ZERO {
                 continue;
             }
             let (bt, bj) = (t * b.ld, j * b.ld);
             for i in 0..m {
-                b.data[bj + i] -= b.data[bt + i] * utj;
+                let delta = b.data[bt + i] * utj;
+                b.data[bj + i] -= delta;
             }
         }
         let ujj = u.data[ucol + j];
-        assert!(ujj != 0.0, "singular U in trsm_right_upper");
-        let inv = 1.0 / ujj;
+        assert!(ujj != E::ZERO, "singular U in trsm_right_upper");
+        let inv = E::ONE / ujj;
         let bj = j * b.ld;
         for i in 0..m {
             b.data[bj + i] *= inv;

@@ -15,10 +15,14 @@
 //!   paper's co-design selection per GEMM call.
 //! - [`gemm`] — a native blocked GEMM engine (GotoBLAS 5-loop structure,
 //!   packing, a family of micro-kernels — portable const-generic and
-//!   AVX2+FMA — and G3/G4 multithreading).
+//!   AVX2+FMA, in f64 *and* f32 — and G3/G4 multithreading), generic
+//!   over the element type ([`util::elem::Elem`]) with dtype-keyed
+//!   config selection.
 //! - [`lapack`] — blocked LU with partial pivoting (plus TRSM, unblocked
 //!   panel factorization, row swaps and a blocked Cholesky extension) built
-//!   on top of [`gemm`], exactly as the paper's Figure 2 algorithm.
+//!   on top of [`gemm`], exactly as the paper's Figure 2 algorithm; the
+//!   [`lapack::refine`] module adds the mixed-precision solve (factor in
+//!   f32, iteratively refine to f64 accuracy).
 //! - [`cachesim`] + [`trace`] — a trace-driven set-associative cache
 //!   hierarchy simulator and a GEMM/LU memory-trace generator; together
 //!   they substitute for the paper's PMU hardware counters.

@@ -70,12 +70,21 @@ pub fn l1_allocation(l1: &CacheLevel, mk: MicroKernel) -> WayAlloc {
 }
 
 /// Optimal `kc*`: largest kc such that the `mr x kc` A micro-panel fits
-/// its L1 ways AND the `kc x nr` B micro-panel fits its L1 ways.
+/// its L1 ways AND the `kc x nr` B micro-panel fits its L1 ways (FP64
+/// elements; see [`kc_star_elem`] for other widths).
 pub fn kc_star(l1: &CacheLevel, mk: MicroKernel) -> usize {
+    kc_star_elem(l1, mk, 8)
+}
+
+/// [`kc_star`] at an explicit element width in bytes: the cache holds
+/// `line_bytes / esize` elements per line, so halving the width doubles
+/// the cache-optimal `kc` (the f32 payoff the element-generic stack
+/// exploits).
+pub fn kc_star_elem(l1: &CacheLevel, mk: MicroKernel, esize: usize) -> usize {
     let alloc = l1_allocation(l1, mk);
     let per_way_bytes = l1.sets() * l1.line_bytes;
-    let kc_a = alloc.a * per_way_bytes / (mk.mr * 8);
-    let kc_b = alloc.b * per_way_bytes / (mk.nr * 8);
+    let kc_a = alloc.a * per_way_bytes / (mk.mr * esize);
+    let kc_b = alloc.b * per_way_bytes / (mk.nr * esize);
     kc_a.min(kc_b).max(1)
 }
 
@@ -85,10 +94,16 @@ pub fn l2_allocation(l2: &CacheLevel, mk: MicroKernel, kc: usize) -> WayAlloc {
     split_ways_ceil_b(l2.ways, kc as f64, mk.nr as f64)
 }
 
-/// Optimal `mc` for a given `kc` (exact, before granule rounding).
+/// Optimal `mc` for a given `kc` (exact, before granule rounding; FP64
+/// elements — see [`mc_exact_elem`]).
 pub fn mc_exact(l2: &CacheLevel, mk: MicroKernel, kc: usize) -> f64 {
+    mc_exact_elem(l2, mk, kc, 8)
+}
+
+/// [`mc_exact`] at an explicit element width in bytes.
+pub fn mc_exact_elem(l2: &CacheLevel, mk: MicroKernel, kc: usize, esize: usize) -> f64 {
     let alloc = l2_allocation(l2, mk, kc);
-    (alloc.a * l2.sets() * l2.line_bytes) as f64 / (kc * 8) as f64
+    (alloc.a * l2.sets() * l2.line_bytes) as f64 / (kc * esize) as f64
 }
 
 /// L3 way allocation given effective `kc` and (exact) `mc`: split by
@@ -98,22 +113,36 @@ pub fn l3_allocation(l3: &CacheLevel, kc: usize, mc_exact: f64) -> WayAlloc {
     split_ways_round_b(l3.ways, mc_exact, kc as f64)
 }
 
-/// Optimal `nc` for given `kc`/`mc` (exact, before granule rounding).
+/// Optimal `nc` for given `kc`/`mc` (exact, before granule rounding;
+/// FP64 elements — see [`nc_exact_elem`]).
 pub fn nc_exact(l3: &CacheLevel, kc: usize, mc: f64) -> f64 {
+    nc_exact_elem(l3, kc, mc, 8)
+}
+
+/// [`nc_exact`] at an explicit element width in bytes.
+pub fn nc_exact_elem(l3: &CacheLevel, kc: usize, mc: f64, esize: usize) -> f64 {
     let alloc = l3_allocation(l3, kc, mc);
-    (alloc.b * l3.sets() * l3.line_bytes) as f64 / (kc * 8) as f64
+    (alloc.b * l3.sets() * l3.line_bytes) as f64 / (kc * esize) as f64
 }
 
 /// The **original** (shape-independent) model: compute `(mc*, nc*, kc*)`
-/// from the architecture alone, with `kc` fixed at its L1 optimum.
+/// from the architecture alone, with `kc` fixed at its L1 optimum (FP64
+/// elements).
 ///
 /// Paper §3.3 check (Carmel, MK6x8): `(672, 480, 341)`.
 pub fn original_ccp(arch: &Arch, mk: MicroKernel) -> Ccp {
-    let kc = kc_star(arch.l1(), mk);
-    let mc_x = mc_exact(arch.l2(), mk, kc);
+    original_ccp_elem(arch, mk, 8)
+}
+
+/// [`original_ccp`] at an explicit element width in bytes: every level's
+/// fill parameter counts elements of that width, so f32 doubles
+/// `kc*`/`mc*`/`nc*` (up to granule rounding).
+pub fn original_ccp_elem(arch: &Arch, mk: MicroKernel, esize: usize) -> Ccp {
+    let kc = kc_star_elem(arch.l1(), mk, esize);
+    let mc_x = mc_exact_elem(arch.l2(), mk, kc, esize);
     let mc = round_down(mc_x as usize, CCP_GRANULE).max(mk.mr);
     let nc = match arch.l3() {
-        Some(l3) => round_down(nc_exact(l3, kc, mc_x) as usize, CCP_GRANULE).max(mk.nr),
+        Some(l3) => round_down(nc_exact_elem(l3, kc, mc_x, esize) as usize, CCP_GRANULE).max(mk.nr),
         // No L3: stage B panels straight from memory; pick a large nc.
         None => round_down(8192, CCP_GRANULE),
     };
@@ -175,6 +204,25 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn f32_width_doubles_kc_star() {
+        // Halving the element width doubles how many elements the same
+        // L1 ways hold: kc*(f32) = 2 * kc*(f64) exactly (both divisions
+        // are exact for power-of-two way capacities).
+        for arch in [carmel(), epyc7282()] {
+            for mk in [MicroKernel::new(8, 6), MicroKernel::new(6, 8)] {
+                let k64 = kc_star_elem(arch.l1(), mk, 8);
+                let k32 = kc_star_elem(arch.l1(), mk, 4);
+                assert_eq!(k32, 2 * k64, "{mk} on {}", arch.name);
+                assert_eq!(kc_star(arch.l1(), mk), k64, "wrapper must stay f64");
+            }
+        }
+        // And the full original model picks a strictly larger mc too.
+        let c64 = original_ccp_elem(&epyc7282(), MicroKernel::new(8, 6), 8);
+        let c32 = original_ccp_elem(&epyc7282(), MicroKernel::new(8, 6), 4);
+        assert!(c32.kc > c64.kc && c32.mc >= c64.mc, "{c32} vs {c64}");
     }
 
     #[test]

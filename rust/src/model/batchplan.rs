@@ -134,9 +134,17 @@ impl BatchPolicy {
 /// Single-core seconds estimate for one configured GEMM — the
 /// [`AnalyticScorer`] cache-cost model the selector already ranks
 /// configurations with, reused here as the batch cost model (uncached;
-/// the serving hot paths go through [`BatchPlanner`]).
+/// the serving hot paths go through [`BatchPlanner`]). FP64 width; see
+/// [`serial_estimate_elem`].
 pub fn serial_estimate(arch: &Arch, cfg: GemmConfig, dims: GemmDims) -> f64 {
-    AnalyticScorer.score(arch, dims, cfg.mk, cfg.ccp)
+    serial_estimate_elem(arch, cfg, dims, 8)
+}
+
+/// [`serial_estimate`] at an explicit element width in bytes (f32
+/// batches run at twice the lane rate, so their shares must come from
+/// f32-width estimates).
+pub fn serial_estimate_elem(arch: &Arch, cfg: GemmConfig, dims: GemmDims, esize: usize) -> f64 {
+    AnalyticScorer.score_elem(arch, dims, cfg.mk, cfg.ccp, esize)
 }
 
 /// Memoizing batch planner: admission checks run once per incoming GEMM
@@ -146,10 +154,11 @@ pub fn serial_estimate(arch: &Arch, cfg: GemmConfig, dims: GemmDims) -> f64 {
 /// are memoized on `(cfg, dims)`; a hit is one hash lookup. Interior
 /// mutability (`RefCell`) because callers hold `&self` on hot paths;
 /// each server worker / batcher owns its own planner (not shared across
-/// threads).
+/// threads). Keys carry the element width, so an f64 and an f32 batch
+/// of equal shape never share a (rate-dependent) estimate.
 #[derive(Default)]
 pub struct BatchPlanner {
-    estimates: RefCell<HashMap<(GemmConfig, GemmDims), f64>>,
+    estimates: RefCell<HashMap<(GemmConfig, GemmDims, usize), f64>>,
 }
 
 impl BatchPlanner {
@@ -166,13 +175,19 @@ impl BatchPlanner {
         self.estimates.borrow_mut().clear();
     }
 
-    /// Memoized [`serial_estimate`].
+    /// Memoized [`serial_estimate`] (FP64 width).
     pub fn estimate(&self, arch: &Arch, cfg: GemmConfig, dims: GemmDims) -> f64 {
-        let key = (cfg, dims);
+        self.estimate_elem(arch, cfg, dims, 8)
+    }
+
+    /// Memoized [`serial_estimate_elem`]; the element width is part of
+    /// the memo key.
+    pub fn estimate_elem(&self, arch: &Arch, cfg: GemmConfig, dims: GemmDims, esize: usize) -> f64 {
+        let key = (cfg, dims, esize);
         if let Some(&t) = self.estimates.borrow().get(&key) {
             return t;
         }
-        let t = serial_estimate(arch, cfg, dims);
+        let t = serial_estimate_elem(arch, cfg, dims, esize);
         let mut cache = self.estimates.borrow_mut();
         if cache.len() >= Self::CACHE_CAP {
             cache.clear();
@@ -215,12 +230,26 @@ impl BatchPlanner {
     /// `threads`.
     ///
     /// Requires `members.len() <= max(threads, 1)`; callers with larger
-    /// batches chunk first (`GemmEngine::gemm_batch` does).
+    /// batches chunk first (`GemmEngine::gemm_batch` does). FP64 width;
+    /// see [`Self::partition_team_elem`].
     pub fn partition_team(
         &self,
         arch: &Arch,
         members: &[(GemmConfig, GemmDims)],
         threads: usize,
+    ) -> Vec<usize> {
+        self.partition_team_elem(arch, members, threads, 8)
+    }
+
+    /// [`Self::partition_team`] at an explicit element width in bytes
+    /// (what `GemmEngine::gemm_batch_t::<E>` passes, so f32 batches are
+    /// partitioned from f32-rate estimates).
+    pub fn partition_team_elem(
+        &self,
+        arch: &Arch,
+        members: &[(GemmConfig, GemmDims)],
+        threads: usize,
+        esize: usize,
     ) -> Vec<usize> {
         assert!(!members.is_empty(), "empty batch");
         let threads = threads.max(1);
@@ -232,7 +261,7 @@ impl BatchPlanner {
         );
         let est: Vec<f64> = members
             .iter()
-            .map(|&(cfg, dims)| self.estimate(arch, cfg, dims).max(1e-12))
+            .map(|&(cfg, dims)| self.estimate_elem(arch, cfg, dims, esize).max(1e-12))
             .collect();
         let mut shares = vec![1usize; members.len()];
         for _ in members.len()..threads {
@@ -312,6 +341,11 @@ mod tests {
         // Cached lookups return the exact memoized value.
         assert_eq!(planner.estimate(&arch, cfg, dims), direct);
         assert_eq!(planner.estimates.borrow().len(), 1);
+        // The element width is part of the key: an f32-width estimate of
+        // the same (cfg, dims) is a separate (and faster) entry.
+        let e32 = planner.estimate_elem(&arch, cfg, dims, 4);
+        assert_eq!(planner.estimates.borrow().len(), 2, "dtype must not share estimates");
+        assert!(e32 < direct, "f32-width estimate must beat f64 at equal shape");
     }
 
     #[test]

@@ -81,19 +81,42 @@ impl fmt::Display for GemmConfig {
 }
 
 /// The static CCPs + stock micro-kernel that BLIS hard-codes for each of
-/// the paper's platforms (§3.1 and §4.1). These are the baseline ("R1").
+/// the paper's platforms (§3.1 and §4.1). These are the baseline ("R1"),
+/// in the historical FP64 flavour.
 pub fn blis_static(arch_name: &str) -> Option<GemmConfig> {
+    blis_static_dt(arch_name, crate::util::DType::F64)
+}
+
+/// [`blis_static`] per element type: BLIS pins a *separate* static
+/// kernel + CCP set per precision (`dgemm` vs `sgemm`), so the f32
+/// baseline uses the stock single-precision shapes — double-height
+/// micro-tiles and doubled `mc`/`kc` element counts on x86, the NEON
+/// 8x12 sgemm shape on ARM.
+pub fn blis_static_dt(arch_name: &str, dt: crate::util::DType) -> Option<GemmConfig> {
+    use crate::util::DType;
     let lower = arch_name.to_ascii_lowercase();
     if lower.contains("carmel") || lower.contains("arm") {
-        // §3.1: MK6x8, (mc, nc, kc) = (120, 3072, 240).
-        Some(GemmConfig { mk: MicroKernel::new(6, 8), ccp: Ccp::new(120, 3072, 240) })
+        Some(match dt {
+            // §3.1: MK6x8, (mc, nc, kc) = (120, 3072, 240).
+            DType::F64 => GemmConfig { mk: MicroKernel::new(6, 8), ccp: Ccp::new(120, 3072, 240) },
+            // BLIS armv8a sgemm: MK8x12 with doubled element counts.
+            DType::F32 => GemmConfig { mk: MicroKernel::new(8, 12), ccp: Ccp::new(120, 3072, 640) },
+        })
     } else if lower.contains("epyc") || lower.contains("amd") {
-        // §4.1: MK8x6 (column-major view of BLIS's 6x8), (72, 2040, 512).
-        Some(GemmConfig { mk: MicroKernel::new(8, 6), ccp: Ccp::new(72, 2040, 512) })
+        Some(match dt {
+            // §4.1: MK8x6 (column-major view of BLIS's 6x8), (72, 2040, 512).
+            DType::F64 => GemmConfig { mk: MicroKernel::new(8, 6), ccp: Ccp::new(72, 2040, 512) },
+            // BLIS zen sgemm: MK16x6, (144, 4080, 512).
+            DType::F32 => GemmConfig { mk: MicroKernel::new(16, 6), ccp: Ccp::new(144, 4080, 512) },
+        })
     } else if lower.contains("xeon") || lower.contains("intel") || lower.contains("host") {
-        // BLIS haswell defaults (same generation as the host AVX2 Xeon):
-        // MK8x6 with (mc, nc, kc) = (72, 4080, 256).
-        Some(GemmConfig { mk: MicroKernel::new(8, 6), ccp: Ccp::new(72, 4080, 256) })
+        Some(match dt {
+            // BLIS haswell defaults (same generation as the host AVX2
+            // Xeon): MK8x6 with (mc, nc, kc) = (72, 4080, 256).
+            DType::F64 => GemmConfig { mk: MicroKernel::new(8, 6), ccp: Ccp::new(72, 4080, 256) },
+            // BLIS haswell sgemm: MK16x6, (144, 4080, 256).
+            DType::F32 => GemmConfig { mk: MicroKernel::new(16, 6), ccp: Ccp::new(144, 4080, 256) },
+        })
     } else {
         None
     }
@@ -119,6 +142,21 @@ mod tests {
         assert_eq!(blis_static("NVIDIA Carmel (ARMv8.2)").unwrap().ccp, Ccp::new(120, 3072, 240));
         assert_eq!(blis_static("AMD EPYC 7282").unwrap().ccp, Ccp::new(72, 2040, 512));
         assert!(blis_static("Unknown Arch").is_none());
+    }
+
+    #[test]
+    fn f32_presets_double_the_tile_height() {
+        use crate::util::DType;
+        let d = blis_static_dt("AMD EPYC 7282", DType::F64).unwrap();
+        let s = blis_static_dt("AMD EPYC 7282", DType::F32).unwrap();
+        assert_eq!(s.mk, MicroKernel::new(16, 6), "sgemm doubles the dgemm mr");
+        assert_eq!(s.ccp.mc, 2 * d.ccp.mc);
+        assert_eq!(blis_static_dt("host", DType::F32).unwrap().mk, MicroKernel::new(16, 6));
+        assert_eq!(
+            blis_static_dt("NVIDIA Carmel", DType::F32).unwrap().mk,
+            MicroKernel::new(8, 12)
+        );
+        assert!(blis_static_dt("Unknown Arch", DType::F32).is_none());
     }
 
     #[test]

@@ -27,7 +27,13 @@ impl MicroKernel {
     /// `ceil(mr/lanes)` registers and one row of Br takes
     /// `ceil(nr/lanes)` registers.
     ///
-    /// Paper §3.4 check (NEON, lanes = 2): MK6x8 = 24 + 3 + 4 = 31,
+    /// `lanes` is **element-width dependent**: a 256-bit register holds 4
+    /// f64 lanes but 8 f32 lanes, so the same register file admits twice
+    /// the `mr` for f32 (e.g. AVX2 MK8x6 in f64 vs MK16x6 in f32, both
+    /// 15 registers). Pass [`crate::arch::RegisterFile::lanes_for`] of
+    /// the element width, not a hardcoded f64 lane count.
+    ///
+    /// Paper §3.4 check (NEON f64, lanes = 2): MK6x8 = 24 + 3 + 4 = 31,
     /// MK12x4 = 24 + 6 + 2 = 32.
     pub fn vector_regs_needed(&self, lanes: usize) -> usize {
         let cm = self.mr.div_ceil(lanes);
@@ -35,9 +41,18 @@ impl MicroKernel {
         cm * self.nr + cm + cn
     }
 
-    /// True when the kernel fits the register file without spilling C.
+    /// True when the kernel fits the register file without spilling C,
+    /// at the FP64 lane count (see [`Self::fits_lanes`] for other
+    /// element widths).
     pub fn fits(&self, regs: &RegisterFile) -> bool {
-        self.vector_regs_needed(regs.f64_lanes()) <= regs.vector_regs
+        self.fits_lanes(regs, regs.f64_lanes())
+    }
+
+    /// True when the kernel fits the register file without spilling C at
+    /// an explicit lane count (element-width aware; see
+    /// [`Self::vector_regs_needed`]).
+    pub fn fits_lanes(&self, regs: &RegisterFile, lanes: usize) -> bool {
+        self.vector_regs_needed(lanes) <= regs.vector_regs
     }
 
     /// True when at least one dimension is a multiple of the SIMD lane
@@ -76,10 +91,18 @@ impl fmt::Display for MicroKernel {
     }
 }
 
-/// The candidate micro-kernel family studied by the paper (§3.4, §4):
-/// shapes with at least one SIMD-aligned dimension that avoid spilling.
+/// The candidate micro-kernel family studied by the paper (§3.4, §4) at
+/// the FP64 lane count: shapes with at least one SIMD-aligned dimension
+/// that avoid spilling. See [`candidate_family_lanes`] for other element
+/// widths.
 pub fn candidate_family(regs: &RegisterFile) -> Vec<MicroKernel> {
-    let lanes = regs.f64_lanes();
+    candidate_family_lanes(regs, regs.f64_lanes())
+}
+
+/// The candidate micro-kernel family at an explicit SIMD lane count
+/// (element-width dependent: f32 doubles the lanes of the same register
+/// file, admitting taller tiles like AVX2 MK16x6).
+pub fn candidate_family_lanes(regs: &RegisterFile, lanes: usize) -> Vec<MicroKernel> {
     let mut out = Vec::new();
     for mr in 1..=16 {
         for nr in 1..=16 {
@@ -90,7 +113,7 @@ pub fn candidate_family(regs: &RegisterFile) -> Vec<MicroKernel> {
             if mr * nr < 16 {
                 continue;
             }
-            if mk.simd_aligned(lanes) && mk.fits(regs) {
+            if mk.simd_aligned(lanes) && mk.fits_lanes(regs, lanes) {
                 out.push(mk);
             }
         }
@@ -163,5 +186,25 @@ mod tests {
     fn squareness_bounds() {
         assert_eq!(MicroKernel::new(8, 8).squareness(), 1.0);
         assert!(MicroKernel::new(12, 4).squareness() < MicroKernel::new(6, 8).squareness());
+    }
+
+    #[test]
+    fn f32_lanes_admit_taller_tiles() {
+        // AVX2 (16 regs, 256-bit): f64 MK8x6 fits (15 regs) but MK16x6
+        // does not (4*6 + 4 + 2 = 30); at f32's 8 lanes MK16x6 fits
+        // (2*6 + 2 + 1 = 15) — the element-width dependence the lane
+        // parameter exists for.
+        let avx2 = epyc7282().regs;
+        assert!(MicroKernel::new(8, 6).fits_lanes(&avx2, 4));
+        assert!(!MicroKernel::new(16, 6).fits_lanes(&avx2, 4));
+        assert!(MicroKernel::new(16, 6).fits_lanes(&avx2, 8));
+        assert_eq!(MicroKernel::new(16, 6).vector_regs_needed(8), 15);
+        assert_eq!(MicroKernel::new(8, 8).vector_regs_needed(8), 10);
+        let fam32 = candidate_family_lanes(&avx2, 8);
+        assert!(fam32.contains(&MicroKernel::new(16, 6)));
+        assert!(fam32.contains(&MicroKernel::new(8, 8)));
+        // The f64 family at the same register file must not contain the
+        // 16-row tile.
+        assert!(!candidate_family(&avx2).contains(&MicroKernel::new(16, 6)));
     }
 }

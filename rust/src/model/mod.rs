@@ -30,11 +30,14 @@ pub mod refined;
 pub mod selector;
 pub mod teamsize;
 
-pub use analytical::{l1_allocation, l2_allocation, l3_allocation, original_ccp, WayAlloc};
+pub use analytical::{
+    kc_star_elem, l1_allocation, l2_allocation, l3_allocation, original_ccp, original_ccp_elem,
+    WayAlloc,
+};
 pub use batchplan::{BatchPlanner, BatchPolicy};
-pub use ccp::{blis_static, Ccp, GemmDims};
-pub use microkernel::MicroKernel;
+pub use ccp::{blis_static, blis_static_dt, Ccp, GemmDims};
+pub use microkernel::{candidate_family_lanes, MicroKernel};
 pub use occupancy::{occupancy_row, OccupancyRow};
-pub use refined::refined_ccp;
-pub use selector::{select, AnalyticScorer, Scorer, Selection};
+pub use refined::{refined_ccp, refined_ccp_elem};
+pub use selector::{select, select_from_elem, AnalyticScorer, Scorer, Selection};
 pub use teamsize::{PanelShape, TeamSizeSelector, TeamSizeStats};

@@ -15,26 +15,38 @@
 //! `(1024, 432, 224)` — an L2 occupancy of 87.5% instead of 10.3%.
 
 use crate::arch::Arch;
-use crate::model::analytical::{kc_star, mc_exact, nc_exact, CCP_GRANULE};
+#[cfg(test)]
+use crate::model::analytical::kc_star;
+use crate::model::analytical::{kc_star_elem, mc_exact_elem, nc_exact_elem, CCP_GRANULE};
 use crate::model::{Ccp, GemmDims, MicroKernel};
 use crate::util::round_down;
 
 /// Compute the refined, shape-aware CCPs for `dims` on `arch` with
-/// micro-kernel `mk`.
+/// micro-kernel `mk` (FP64 elements; see [`refined_ccp_elem`]).
 pub fn refined_ccp(arch: &Arch, mk: MicroKernel, dims: GemmDims) -> Ccp {
+    refined_ccp_elem(arch, mk, dims, 8)
+}
+
+/// [`refined_ccp`] at an explicit element width in bytes: the same
+/// three-step propagation, with every cache fill level counted in
+/// elements of that width — an f32 GEMM gets roughly twice the
+/// `kc`/`mc`/`nc` of its f64 twin (cache-resident panels hold twice the
+/// elements), which is exactly the payoff the dtype-generic stack
+/// exposes to the model.
+pub fn refined_ccp_elem(arch: &Arch, mk: MicroKernel, dims: GemmDims, esize: usize) -> Ccp {
     // Step 1: effective kc bounded by the problem's k.
-    let kc = kc_star(arch.l1(), mk).min(dims.k).max(1);
+    let kc = kc_star_elem(arch.l1(), mk, esize).min(dims.k).max(1);
 
     // Step 2: mc sized for the effective kc. The granule-rounded value is
     // what the blocked algorithm uses; the exact value feeds the L3 split.
-    let mc_x = mc_exact(arch.l2(), mk, kc);
+    let mc_x = mc_exact_elem(arch.l2(), mk, kc, esize);
     let mc = round_down(mc_x as usize, CCP_GRANULE)
         .max(mk.mr)
         .min(dims.m.max(mk.mr));
 
     // Step 3: nc sized for the effective kc/mc.
     let nc = match arch.l3() {
-        Some(l3) => round_down(nc_exact(l3, kc, mc_x) as usize, CCP_GRANULE)
+        Some(l3) => round_down(nc_exact_elem(l3, kc, mc_x, esize) as usize, CCP_GRANULE)
             .max(mk.nr)
             .min(dims.n.max(mk.nr)),
         None => round_down(8192, CCP_GRANULE).min(dims.n.max(mk.nr)),
@@ -128,6 +140,30 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn f32_width_grows_the_refined_ccps() {
+        // The element-width propagation: for a fixed skinny-k problem the
+        // f32 CCPs hold at least as many elements per level, and for a
+        // deep-k problem the f32 kc doubles outright.
+        let e = epyc7282();
+        let mk86 = MicroKernel::new(8, 6);
+        let deep = GemmDims::new(2000, 2000, 2000);
+        let c64 = refined_ccp_elem(&e, mk86, deep, 8);
+        let c32 = refined_ccp_elem(&e, mk86, deep, 4);
+        assert_eq!(c32.kc, 2 * c64.kc, "{c32} vs {c64}");
+        assert!(c32.mc >= c64.mc);
+        // Skinny k: kc is clamped by k for both widths, so the extra L2
+        // room goes to mc instead.
+        let skinny = GemmDims::new(4000, 4000, 64);
+        let s64 = refined_ccp_elem(&e, mk86, skinny, 8);
+        let s32 = refined_ccp_elem(&e, mk86, skinny, 4);
+        assert_eq!(s64.kc, 64);
+        assert_eq!(s32.kc, 64);
+        assert!(s32.mc >= 2 * s64.mc - CCP_GRANULE, "{s32} vs {s64}");
+        // The f64 wrapper is unchanged.
+        assert_eq!(refined_ccp(&e, mk86, skinny), s64);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::arch::Arch;
 use crate::model::analytical::{l1_allocation, l2_allocation};
 use crate::model::ccp::GemmConfig;
 use crate::model::microkernel::candidate_family;
-use crate::model::{refined_ccp, Ccp, GemmDims, MicroKernel};
+use crate::model::{Ccp, GemmDims, MicroKernel};
 
 /// A scored configuration choice.
 #[derive(Clone, Debug)]
@@ -28,6 +28,16 @@ pub struct Selection {
 /// Scores a candidate configuration; returns estimated seconds.
 pub trait Scorer {
     fn score(&self, arch: &Arch, dims: GemmDims, mk: MicroKernel, ccp: Ccp) -> f64;
+
+    /// Element-width-aware scoring: `esize` is the element size in bytes
+    /// (8 = f64, 4 = f32 — twice the lanes and twice the elements per
+    /// line). The default ignores the width and delegates to
+    /// [`Self::score`]; width-aware scorers (the [`AnalyticScorer`])
+    /// override this and implement `score` as `score_elem(.., 8)`.
+    fn score_elem(&self, arch: &Arch, dims: GemmDims, mk: MicroKernel, ccp: Ccp, esize: usize) -> f64 {
+        let _ = esize;
+        self.score(arch, dims, mk, ccp)
+    }
 }
 
 /// Closed-form cost estimate (no simulation):
@@ -43,6 +53,10 @@ pub struct AnalyticScorer;
 
 impl Scorer for AnalyticScorer {
     fn score(&self, arch: &Arch, dims: GemmDims, mk: MicroKernel, ccp: Ccp) -> f64 {
+        self.score_elem(arch, dims, mk, ccp, 8)
+    }
+
+    fn score_elem(&self, arch: &Arch, dims: GemmDims, mk: MicroKernel, ccp: Ccp, esize: usize) -> f64 {
         let GemmDims { m, n, k } = dims;
         let (mf, nf, kf) = (m as f64, n as f64, k as f64);
         let flops = 2.0 * mf * nf * kf;
@@ -53,10 +67,11 @@ impl Scorer for AnalyticScorer {
         let n_pad = (n.div_ceil(mk.nr) * mk.nr) as f64 / nf.max(1.0);
         // Per-iteration loop overhead shrinks with tile area; model as a
         // fixed issue cost amortized over mr*nr FMA lanes.
-        let lanes = arch.regs.f64_lanes() as f64;
+        let lanes = arch.regs.lanes_for(esize) as f64;
         let fma_per_iter = (mk.mr as f64 / lanes).ceil() * mk.nr as f64;
         let issue_overhead = 1.0 + 2.0 / fma_per_iter;
-        let compute_s = flops / (arch.peak_gflops_core() * 1e9) * m_pad * n_pad * issue_overhead;
+        let compute_s =
+            flops / (arch.peak_gflops_core_for(esize) * 1e9) * m_pad * n_pad * issue_overhead;
 
         // --- Memory term --------------------------------------------------
         let l1 = arch.l1();
@@ -65,20 +80,20 @@ impl Scorer for AnalyticScorer {
         // Does Ac fit its allocated L2 ways? Fraction resident determines
         // the blended latency of streaming A in the micro-kernel.
         let a2 = l2_allocation(l2, mk, ccp.kc);
-        let ac_bytes = (ccp.mc * ccp.kc * 8) as f64;
+        let ac_bytes = (ccp.mc * ccp.kc * esize) as f64;
         let ac_cap = (a2.a * l2.way_bytes()) as f64;
         let ac_resident = (ac_cap / ac_bytes).min(1.0);
         let l3_lat = arch.l3().map(|l| l.latency_cycles).unwrap_or(arch.mem_latency_cycles);
         // Elements of A are touched once per (n / nc) pass of loop G1.
         let a_passes = (nf / ccp.nc as f64).max(1.0);
         let a_lat = ac_resident * l2.latency_cycles + (1.0 - ac_resident) * l3_lat;
-        let line = arch.line_elems() as f64;
+        let line = arch.line_elems_for(esize) as f64;
         let a_cost = mf * kf * a_passes * cyc(a_lat) / line
             // packing cost: one read from memory + one write, amortized
             + mf * kf * cyc(l3_lat) / line;
         // B micro-panels live in L1 if they fit their ways.
         let a1 = l1_allocation(l1, mk);
-        let br_bytes = (ccp.kc * mk.nr * 8) as f64;
+        let br_bytes = (ccp.kc * mk.nr * esize) as f64;
         let br_resident = ((a1.b * l1.way_bytes()) as f64 / br_bytes).min(1.0);
         let b_lat = br_resident * l1.latency_cycles + (1.0 - br_resident) * l2.latency_cycles;
         // Each Bc element is re-read once per mc block of loop G3.
@@ -95,7 +110,7 @@ impl Scorer for AnalyticScorer {
     }
 }
 
-/// Run the co-design selection for one GEMM call.
+/// Run the co-design selection for one GEMM call (FP64 elements).
 pub fn select(arch: &Arch, dims: GemmDims, scorer: &dyn Scorer) -> Selection {
     select_from(arch, dims, scorer, &candidate_family(&arch.regs))
 }
@@ -108,12 +123,26 @@ pub fn select_from(
     scorer: &dyn Scorer,
     family: &[MicroKernel],
 ) -> Selection {
+    select_from_elem(arch, dims, scorer, family, 8)
+}
+
+/// The element-width-aware selection: refined CCPs are derived at
+/// `esize` bytes per element (larger `mc`/`kc`/`nc` for f32) and the
+/// scorer ranks with the width-scaled peak/lane/line arithmetic. The
+/// `esize = 8` instantiation is exactly [`select_from`].
+pub fn select_from_elem(
+    arch: &Arch,
+    dims: GemmDims,
+    scorer: &dyn Scorer,
+    family: &[MicroKernel],
+    esize: usize,
+) -> Selection {
     assert!(!family.is_empty(), "empty micro-kernel family");
     let mut ranked: Vec<(GemmConfig, f64)> = family
         .iter()
         .map(|&mk| {
-            let ccp = refined_ccp(arch, mk, dims).clamp_to(dims);
-            let t = scorer.score(arch, dims, mk, ccp);
+            let ccp = crate::model::refined::refined_ccp_elem(arch, mk, dims, esize).clamp_to(dims);
+            let t = scorer.score_elem(arch, dims, mk, ccp, esize);
             (GemmConfig { mk, ccp }, t)
         })
         .collect();
@@ -171,5 +200,22 @@ mod tests {
     #[should_panic(expected = "empty micro-kernel family")]
     fn empty_family_panics() {
         select_from(&carmel(), GemmDims::new(8, 8, 8), &AnalyticScorer, &[]);
+    }
+
+    #[test]
+    fn f32_selection_gets_larger_ccps_and_faster_estimates() {
+        // Same family, same shape: the f32 selection must see the doubled
+        // lanes (lower estimated time) and the larger refined CCPs.
+        let arch = epyc7282();
+        let fam = [MicroKernel::new(8, 6)];
+        let dims = GemmDims::new(2000, 2000, 2000);
+        let s64 = select_from_elem(&arch, dims, &AnalyticScorer, &fam, 8);
+        let s32 = select_from_elem(&arch, dims, &AnalyticScorer, &fam, 4);
+        assert!(s32.config.ccp.kc > s64.config.ccp.kc, "{} vs {}", s32.config, s64.config);
+        assert!(s32.est_time_s < s64.est_time_s, "f32 estimate must beat f64 at equal dims");
+        // And the f64 wrapper is bit-identical to the esize = 8 call.
+        let w = select_from(&arch, dims, &AnalyticScorer, &fam);
+        assert_eq!(w.config, s64.config);
+        assert_eq!(w.est_time_s, s64.est_time_s);
     }
 }

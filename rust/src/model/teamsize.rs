@@ -62,6 +62,9 @@ struct Key {
     panel: PanelShape,
     update: GemmDims,
     cfg: GemmConfig,
+    /// Element width in bytes: the f32 pipeline sees double peak and
+    /// different cache costs, so selections are memoized per dtype.
+    esize: usize,
 }
 
 /// Efficiency of the scalar panel kernel relative to one core's peak
@@ -92,8 +95,9 @@ impl TeamSizeSelector {
     }
 
     /// Estimated seconds for the panel critical path on a `t_p`-wide
-    /// sub-team.
-    fn panel_time(arch: &Arch, panel: PanelShape, t_p: usize) -> f64 {
+    /// sub-team, at `esize` bytes per element (f32 panels run at twice
+    /// the scalar peak).
+    fn panel_time(arch: &Arch, panel: PanelShape, t_p: usize, esize: usize) -> f64 {
         let steps = panel.rows.min(panel.cols);
         let (mut serial_flops, mut par_flops) = (0.0f64, 0.0f64);
         for j in 0..steps {
@@ -104,7 +108,7 @@ impl TeamSizeSelector {
             // Rank-1 update of the trailing sub-panel: column-split.
             par_flops += 2.0 * below * right;
         }
-        let rate = arch.peak_gflops_core() * 1e9 * PANEL_EFF;
+        let rate = arch.peak_gflops_core_for(esize) * 1e9 * PANEL_EFF;
         // Barrier rounds cost more the wider the team (one wake + one
         // cacheline ping per extra rank), so the panel time has a real
         // minimum in t_p and oversizing the panel team is penalized.
@@ -120,14 +124,15 @@ impl TeamSizeSelector {
         }
         // Single-core trailing-sweep estimate from the cache model, under
         // the configuration the engine actually selected for this shape.
-        let update_1 = AnalyticScorer.score(arch, key.update, key.cfg.mk, key.cfg.ccp);
+        let update_1 =
+            AnalyticScorer.score_elem(arch, key.update, key.cfg.mk, key.cfg.ccp, key.esize);
         // More ranks than panel columns cannot help the column-split
         // kernel.
         let t_max = (t - 1).min(key.panel.cols.max(1));
         let mut best = (1usize, f64::INFINITY);
         for t_p in 1..=t_max {
             let t_u = (t - t_p) as f64;
-            let cost = Self::panel_time(arch, key.panel, t_p).max(update_1 / t_u);
+            let cost = Self::panel_time(arch, key.panel, t_p, key.esize).max(update_1 / t_u);
             // Strict improvement keeps the smallest t_p on ties: spare
             // ranks help the wide sweep more than the thin panel.
             if cost < best.1 {
@@ -139,8 +144,8 @@ impl TeamSizeSelector {
 
     /// The model's `t_p` for one fused iteration: panel shape, trailing
     /// sweep dims (the columns the update team will cover), the selected
-    /// GEMM configuration and the team width. Memoized; a hit is
-    /// allocation-free.
+    /// GEMM configuration and the team width, at FP64 width. Memoized; a
+    /// hit is allocation-free.
     pub fn select(
         &self,
         arch: &Arch,
@@ -149,7 +154,22 @@ impl TeamSizeSelector {
         update: GemmDims,
         threads: usize,
     ) -> usize {
-        let key = Key { threads, panel, update, cfg };
+        self.select_elem(arch, cfg, panel, update, threads, 8)
+    }
+
+    /// [`Self::select`] at an explicit element width in bytes; the memo
+    /// key includes the width, so f32 and f64 factorizations of equal
+    /// shape never share a (precision-dependent) selection.
+    pub fn select_elem(
+        &self,
+        arch: &Arch,
+        cfg: GemmConfig,
+        panel: PanelShape,
+        update: GemmDims,
+        threads: usize,
+        esize: usize,
+    ) -> usize {
+        let key = Key { threads, panel, update, cfg, esize };
         if let Some(&t_p) = self.cache.borrow().get(&key) {
             let mut s = self.stats.get();
             s.hits += 1;

@@ -1,0 +1,146 @@
+//! Element types of the DLA stack.
+//!
+//! The paper's analytical model counts cache capacity, SIMD lanes and
+//! peak flops in *elements*, not bytes — so the whole stack (matrices,
+//! packing, micro-kernels, CCP model, factorizations) is generic over an
+//! [`Elem`] and every model entry point takes the element width as a
+//! parameter. Two instantiations are provided: `f64` (the historical
+//! default — every `f64` code path is the exact pre-generic code after
+//! monomorphization, so results stay bitwise identical) and `f32`
+//! (double the SIMD lanes, double the cache-resident panel footprint,
+//! and the storage type of the mixed-precision solvers in
+//! `lapack::refine`).
+
+use std::fmt;
+
+/// Runtime tag for an [`Elem`] instantiation: the dtype key of the
+/// engine's memoized config/team-size caches and of the per-precision
+/// serving metrics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    F64,
+    F32,
+}
+
+impl DType {
+    /// Element width in bytes (what the cache/CCP arithmetic divides by).
+    pub const fn size_bytes(self) -> usize {
+        match self {
+            DType::F64 => 8,
+            DType::F32 => 4,
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            DType::F64 => "f64",
+            DType::F32 => "f32",
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A matrix element type. The arithmetic surface is exactly what the
+/// blocked algorithms use (ring ops, compare, abs); conversions to/from
+/// `f64` serve the mixed-precision demote/promote paths and the
+/// f64-valued norm helpers.
+pub trait Elem:
+    Copy
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + 'static
+    + fmt::Debug
+    + fmt::Display
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// The runtime dtype tag of this instantiation.
+    const DTYPE: DType;
+
+    /// Truncating conversion from f64 (exact for `f64`).
+    fn from_f64(v: f64) -> Self;
+    /// Widening conversion to f64 (exact for both instantiations).
+    fn to_f64(self) -> f64;
+    fn abs(self) -> Self;
+}
+
+impl Elem for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const DTYPE: DType = DType::F64;
+
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    #[inline]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+}
+
+impl Elem for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const DTYPE: DType = DType::F32;
+
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_widths_and_names() {
+        assert_eq!(DType::F64.size_bytes(), 8);
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::F64.name(), "f64");
+        assert_eq!(format!("{}", DType::F32), "f32");
+        assert_eq!(<f64 as Elem>::DTYPE, DType::F64);
+        assert_eq!(<f32 as Elem>::DTYPE, DType::F32);
+    }
+
+    #[test]
+    fn conversions_roundtrip() {
+        assert_eq!(f64::from_f64(1.5), 1.5);
+        assert_eq!(f32::from_f64(1.5), 1.5f32);
+        assert_eq!(Elem::to_f64(0.25f32), 0.25);
+        assert_eq!(<f32 as Elem>::ONE + <f32 as Elem>::ONE, 2.0f32);
+        assert!(Elem::abs(-2.0f32) == 2.0f32);
+    }
+}

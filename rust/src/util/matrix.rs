@@ -1,44 +1,62 @@
-//! Column-major `f64` matrices.
+//! Column-major matrices, generic over the element type.
 //!
 //! The whole DLA stack in this crate (packing, micro-kernels, LU) follows
 //! the BLAS/LAPACK convention: matrices are stored column-major with an
 //! explicit leading dimension, so sub-matrix views ("panels" in the paper's
 //! terminology) are cheap and map 1:1 onto the algorithm descriptions.
+//!
+//! [`Matrix<E>`] (and the borrowed [`MatView`]/[`MatViewMut`]) are generic
+//! over an [`Elem`]; the type parameter defaults to `f64`, and
+//! [`MatrixF64`] is an alias for `Matrix<f64>`, so every pre-generic call
+//! site keeps compiling unchanged — and the monomorphized `f64` code is
+//! the exact pre-generic code, preserving bitwise results. [`MatrixF32`]
+//! is the single-precision instantiation used by the f32 GEMM path and
+//! the mixed-precision solvers.
 
+use crate::util::elem::Elem;
 use crate::util::rng::Pcg64;
 use std::fmt;
 
-/// An owned column-major `f64` matrix.
+/// An owned column-major matrix of `E` elements.
 #[derive(Clone, PartialEq)]
-pub struct MatrixF64 {
+pub struct Matrix<E = f64> {
     rows: usize,
     cols: usize,
     /// Leading dimension (stride between columns). `ld >= rows`.
     ld: usize,
-    data: Vec<f64>,
+    data: Vec<E>,
 }
 
-impl MatrixF64 {
+/// The double-precision matrix the stack historically used everywhere.
+pub type MatrixF64 = Matrix<f64>;
+/// The single-precision matrix of the f32 SIMD path and the
+/// mixed-precision solvers.
+pub type MatrixF32 = Matrix<f32>;
+
+impl<E: Elem> Matrix<E> {
     /// Zero-filled `rows x cols` matrix with a tight leading dimension.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Self { rows, cols, ld: rows.max(1), data: vec![0.0; rows.max(1) * cols] }
+        Self { rows, cols, ld: rows.max(1), data: vec![E::ZERO; rows.max(1) * cols] }
     }
 
     /// Identity matrix of order `n`.
     pub fn identity(n: usize) -> Self {
         let mut m = Self::zeros(n, n);
         for i in 0..n {
-            m[(i, i)] = 1.0;
+            m[(i, i)] = E::ONE;
         }
         m
     }
 
-    /// Matrix with entries drawn uniformly from `[-1, 1)`.
+    /// Matrix with entries drawn uniformly from `[-1, 1)`. The stream of
+    /// f64 draws is identical for every `E` (each draw is rounded to `E`
+    /// after the fact), so an f32 matrix from a given seed is the
+    /// element-wise rounding of the f64 matrix from that seed.
     pub fn random(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
         let mut m = Self::zeros(rows, cols);
         for j in 0..cols {
             for i in 0..rows {
-                m[(i, j)] = rng.next_f64() * 2.0 - 1.0;
+                m[(i, j)] = E::from_f64(rng.next_f64() * 2.0 - 1.0);
             }
         }
         m
@@ -49,14 +67,17 @@ impl MatrixF64 {
     pub fn random_diag_dominant(n: usize, rng: &mut Pcg64) -> Self {
         let mut m = Self::random(n, n, rng);
         for i in 0..n {
-            let row_sum: f64 = (0..n).map(|j| m[(i, j)].abs()).sum();
-            m[(i, i)] = row_sum + 1.0;
+            let mut row_sum = E::ZERO;
+            for j in 0..n {
+                row_sum += m[(i, j)].abs();
+            }
+            m[(i, i)] = row_sum + E::ONE;
         }
         m
     }
 
     /// Build from a closure `f(i, j)`.
-    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> E) -> Self {
         let mut m = Self::zeros(rows, cols);
         for j in 0..cols {
             for i in 0..rows {
@@ -67,9 +88,15 @@ impl MatrixF64 {
     }
 
     /// Build from a row-major slice (convenience for tests).
-    pub fn from_row_major(rows: usize, cols: usize, v: &[f64]) -> Self {
+    pub fn from_row_major(rows: usize, cols: usize, v: &[E]) -> Self {
         assert_eq!(v.len(), rows * cols);
         Self::from_fn(rows, cols, |i, j| v[i * cols + j])
+    }
+
+    /// Element-wise conversion from another element type (the
+    /// demote/promote step of the mixed-precision solvers).
+    pub fn convert_from<F: Elem>(src: &Matrix<F>) -> Self {
+        Self::from_fn(src.rows(), src.cols(), |i, j| E::from_f64(src[(i, j)].to_f64()))
     }
 
     #[inline]
@@ -89,97 +116,97 @@ impl MatrixF64 {
 
     /// Raw column-major storage.
     #[inline]
-    pub fn as_slice(&self) -> &[f64] {
+    pub fn as_slice(&self) -> &[E] {
         &self.data
     }
 
     #[inline]
-    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+    pub fn as_mut_slice(&mut self) -> &mut [E] {
         &mut self.data
     }
 
     #[inline]
-    pub fn as_ptr(&self) -> *const f64 {
+    pub fn as_ptr(&self) -> *const E {
         self.data.as_ptr()
     }
 
     #[inline]
-    pub fn as_mut_ptr(&mut self) -> *mut f64 {
+    pub fn as_mut_ptr(&mut self) -> *mut E {
         self.data.as_mut_ptr()
     }
 
     /// Immutable view of the whole matrix.
-    pub fn view(&self) -> MatView<'_> {
+    pub fn view(&self) -> MatView<'_, E> {
         MatView { rows: self.rows, cols: self.cols, ld: self.ld, data: &self.data }
     }
 
     /// Immutable view of the sub-matrix starting at `(i, j)` of size
     /// `r x c`.
-    pub fn sub(&self, i: usize, j: usize, r: usize, c: usize) -> MatView<'_> {
+    pub fn sub(&self, i: usize, j: usize, r: usize, c: usize) -> MatView<'_, E> {
         assert!(i + r <= self.rows && j + c <= self.cols, "sub out of bounds");
         MatView { rows: r, cols: c, ld: self.ld, data: &self.data[j * self.ld + i..] }
     }
 
     /// Mutable view of the whole matrix.
-    pub fn view_mut(&mut self) -> MatViewMut<'_> {
+    pub fn view_mut(&mut self) -> MatViewMut<'_, E> {
         MatViewMut { rows: self.rows, cols: self.cols, ld: self.ld, data: &mut self.data }
     }
 
     /// Mutable view of the sub-matrix starting at `(i, j)` of size `r x c`.
-    pub fn sub_mut(&mut self, i: usize, j: usize, r: usize, c: usize) -> MatViewMut<'_> {
+    pub fn sub_mut(&mut self, i: usize, j: usize, r: usize, c: usize) -> MatViewMut<'_, E> {
         assert!(i + r <= self.rows && j + c <= self.cols, "sub_mut out of bounds");
         let ld = self.ld;
         MatViewMut { rows: r, cols: c, ld, data: &mut self.data[j * ld + i..] }
     }
 
-    /// Frobenius norm.
+    /// Frobenius norm (accumulated in f64 for every element type).
     pub fn fro_norm(&self) -> f64 {
         self.view().fro_norm()
     }
 
-    /// Max-abs (entrywise infinity) norm.
+    /// Max-abs (entrywise infinity) norm, as f64.
     pub fn max_abs(&self) -> f64 {
         self.view().max_abs()
     }
 
-    /// `max |self - other|` over all entries.
-    pub fn max_abs_diff(&self, other: &MatrixF64) -> f64 {
+    /// `max |self - other|` over all entries, as f64.
+    pub fn max_abs_diff(&self, other: &Matrix<E>) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         let mut d: f64 = 0.0;
         for j in 0..self.cols {
             for i in 0..self.rows {
-                d = d.max((self[(i, j)] - other[(i, j)]).abs());
+                d = d.max((self[(i, j)].to_f64() - other[(i, j)].to_f64()).abs());
             }
         }
         d
     }
 
     /// Transposed copy.
-    pub fn transposed(&self) -> MatrixF64 {
-        MatrixF64::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    pub fn transposed(&self) -> Matrix<E> {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
     }
 }
 
-impl std::ops::Index<(usize, usize)> for MatrixF64 {
-    type Output = f64;
+impl<E: Elem> std::ops::Index<(usize, usize)> for Matrix<E> {
+    type Output = E;
     #[inline]
-    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+    fn index(&self, (i, j): (usize, usize)) -> &E {
         debug_assert!(i < self.rows && j < self.cols);
         &self.data[j * self.ld + i]
     }
 }
 
-impl std::ops::IndexMut<(usize, usize)> for MatrixF64 {
+impl<E: Elem> std::ops::IndexMut<(usize, usize)> for Matrix<E> {
     #[inline]
-    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut E {
         debug_assert!(i < self.rows && j < self.cols);
         &mut self.data[j * self.ld + i]
     }
 }
 
-impl fmt::Debug for MatrixF64 {
+impl<E: Elem> fmt::Debug for Matrix<E> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        writeln!(f, "MatrixF64 {}x{} (ld={})", self.rows, self.cols, self.ld)?;
+        writeln!(f, "Matrix<{}> {}x{} (ld={})", E::DTYPE, self.rows, self.cols, self.ld)?;
         let rmax = self.rows.min(8);
         let cmax = self.cols.min(8);
         for i in 0..rmax {
@@ -196,37 +223,45 @@ impl fmt::Debug for MatrixF64 {
 }
 
 /// Borrowed column-major view (`rows x cols`, stride `ld`).
-#[derive(Clone, Copy)]
-pub struct MatView<'a> {
+pub struct MatView<'a, E = f64> {
     pub rows: usize,
     pub cols: usize,
     pub ld: usize,
     /// Backing slice; element `(i, j)` lives at `data[j * ld + i]`.
-    pub data: &'a [f64],
+    pub data: &'a [E],
 }
 
-impl<'a> MatView<'a> {
+// Manual Clone/Copy: the derive would bound them on `E: Clone`/`E: Copy`
+// through the reference field even though a shared borrow is always Copy.
+impl<E> Clone for MatView<'_, E> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<E> Copy for MatView<'_, E> {}
+
+impl<'a, E: Elem> MatView<'a, E> {
     #[inline]
-    pub fn at(&self, i: usize, j: usize) -> f64 {
+    pub fn at(&self, i: usize, j: usize) -> E {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[j * self.ld + i]
     }
 
     /// Sub-view at `(i, j)` of size `r x c`.
-    pub fn sub(&self, i: usize, j: usize, r: usize, c: usize) -> MatView<'a> {
+    pub fn sub(&self, i: usize, j: usize, r: usize, c: usize) -> MatView<'a, E> {
         assert!(i + r <= self.rows && j + c <= self.cols, "sub out of bounds");
         MatView { rows: r, cols: c, ld: self.ld, data: &self.data[j * self.ld + i..] }
     }
 
-    pub fn to_owned_matrix(&self) -> MatrixF64 {
-        MatrixF64::from_fn(self.rows, self.cols, |i, j| self.at(i, j))
+    pub fn to_owned_matrix(&self) -> Matrix<E> {
+        Matrix::from_fn(self.rows, self.cols, |i, j| self.at(i, j))
     }
 
     pub fn fro_norm(&self) -> f64 {
         let mut s = 0.0;
         for j in 0..self.cols {
             for i in 0..self.rows {
-                let v = self.at(i, j);
+                let v = self.at(i, j).to_f64();
                 s += v * v;
             }
         }
@@ -237,7 +272,7 @@ impl<'a> MatView<'a> {
         let mut d: f64 = 0.0;
         for j in 0..self.cols {
             for i in 0..self.rows {
-                d = d.max(self.at(i, j).abs());
+                d = d.max(self.at(i, j).to_f64().abs());
             }
         }
         d
@@ -245,39 +280,39 @@ impl<'a> MatView<'a> {
 }
 
 /// Mutable column-major view.
-pub struct MatViewMut<'a> {
+pub struct MatViewMut<'a, E = f64> {
     pub rows: usize,
     pub cols: usize,
     pub ld: usize,
-    pub data: &'a mut [f64],
+    pub data: &'a mut [E],
 }
 
-impl<'a> MatViewMut<'a> {
+impl<'a, E: Elem> MatViewMut<'a, E> {
     #[inline]
-    pub fn at(&self, i: usize, j: usize) -> f64 {
+    pub fn at(&self, i: usize, j: usize) -> E {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[j * self.ld + i]
     }
 
     #[inline]
-    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+    pub fn set(&mut self, i: usize, j: usize, v: E) {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[j * self.ld + i] = v;
     }
 
     #[inline]
-    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut E {
         debug_assert!(i < self.rows && j < self.cols);
         &mut self.data[j * self.ld + i]
     }
 
     /// Reborrow as an immutable view.
-    pub fn as_view(&self) -> MatView<'_> {
+    pub fn as_view(&self) -> MatView<'_, E> {
         MatView { rows: self.rows, cols: self.cols, ld: self.ld, data: self.data }
     }
 
     /// Reborrow a mutable sub-view at `(i, j)` of size `r x c`.
-    pub fn sub_mut(&mut self, i: usize, j: usize, r: usize, c: usize) -> MatViewMut<'_> {
+    pub fn sub_mut(&mut self, i: usize, j: usize, r: usize, c: usize) -> MatViewMut<'_, E> {
         assert!(i + r <= self.rows && j + c <= self.cols, "sub_mut out of bounds");
         let ld = self.ld;
         MatViewMut { rows: r, cols: c, ld, data: &mut self.data[j * ld + i..] }
@@ -285,7 +320,7 @@ impl<'a> MatViewMut<'a> {
 
     /// Split into two disjoint mutable column-block views:
     /// `[0, jsplit)` and `[jsplit, cols)`.
-    pub fn split_cols_mut(&mut self, jsplit: usize) -> (MatViewMut<'_>, MatViewMut<'_>) {
+    pub fn split_cols_mut(&mut self, jsplit: usize) -> (MatViewMut<'_, E>, MatViewMut<'_, E>) {
         assert!(jsplit <= self.cols);
         let ld = self.ld;
         let (left, right) = self.data.split_at_mut(jsplit * ld);
@@ -355,5 +390,46 @@ mod tests {
         let mut rng = Pcg64::seed(1);
         let m = MatrixF64::random(5, 7, &mut rng);
         assert_eq!(m.transposed().transposed(), m);
+    }
+
+    #[test]
+    fn f32_matrix_basics() {
+        let mut m = MatrixF32::zeros(3, 2);
+        m[(1, 0)] = 2.5f32;
+        assert_eq!(m.view().at(1, 0), 2.5f32);
+        assert_eq!(m.max_abs(), 2.5);
+        let id = MatrixF32::identity(3);
+        assert_eq!(id[(2, 2)], 1.0f32);
+        assert_eq!(id[(0, 2)], 0.0f32);
+    }
+
+    #[test]
+    fn f32_random_is_rounded_f64_stream() {
+        // Same seed: the f32 matrix is the element-wise rounding of the
+        // f64 matrix (the draw stream itself is precision-independent).
+        let mut r64 = Pcg64::seed(7);
+        let mut r32 = Pcg64::seed(7);
+        let a = MatrixF64::random(4, 5, &mut r64);
+        let b = MatrixF32::random(4, 5, &mut r32);
+        for j in 0..5 {
+            for i in 0..4 {
+                assert_eq!(b[(i, j)], a[(i, j)] as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn convert_roundtrip_and_demotion() {
+        let mut rng = Pcg64::seed(9);
+        let a = MatrixF64::random(6, 4, &mut rng);
+        let a32 = MatrixF32::convert_from(&a);
+        let back = MatrixF64::convert_from(&a32);
+        // Demotion rounds to f32 grid; promoting back is exact.
+        assert!(a.max_abs_diff(&back) <= f32::EPSILON as f64);
+        for j in 0..4 {
+            for i in 0..6 {
+                assert_eq!(a32[(i, j)] as f64, back[(i, j)]);
+            }
+        }
     }
 }

@@ -2,13 +2,15 @@
 //! CLI parsing and small statistics helpers.
 
 pub mod cli;
+pub mod elem;
 pub mod matrix;
 pub mod rng;
 pub mod stats;
 pub mod table;
 pub mod timer;
 
-pub use matrix::MatrixF64;
+pub use elem::{DType, Elem};
+pub use matrix::{Matrix, MatrixF32, MatrixF64};
 pub use rng::Pcg64;
 pub use timer::Stopwatch;
 

@@ -1,0 +1,274 @@
+//! Dtype-parity and mixed-precision suite: the f32 instantiation of the
+//! element-generic stack must (a) match an f32 reference within f32
+//! tolerance through every driver — sequential blocked, pooled G3, pooled
+//! G4, fused batch, lookahead LU — while staying **bitwise deterministic**
+//! across team widths (the same determinism contract the f64 suite
+//! asserts), and (b) the mixed-precision LU (factor f32, refine f64) must
+//! reach f64-level residuals on well-conditioned systems and fall back
+//! cleanly on ill-conditioned ones.
+//!
+//! `DLA_THREADS` widens the pooled legs (the CI matrix runs 1 and 4).
+
+use dla_codesign::arch::host_xeon;
+use dla_codesign::gemm::{
+    gemm_reference, ConfigMode, GemmBatchItem, GemmEngine, Lookahead, ParallelLoop, ThreadPlan,
+    AUTO_PANEL_WORKERS,
+};
+use dla_codesign::lapack::refine::{lu_solve_f64, lu_solve_mixed, RefineOptions};
+use dla_codesign::lapack::{lu_factor_t, LuFactors};
+use dla_codesign::model::GemmDims;
+use dla_codesign::util::{DType, MatrixF32, MatrixF64, Pcg64};
+
+fn threads_from_env() -> usize {
+    std::env::var("DLA_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(4).max(1)
+}
+
+fn engine(threads: usize, target: ParallelLoop) -> GemmEngine {
+    let eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+    if threads > 1 {
+        eng.with_plan(ThreadPlan { threads, target })
+    } else {
+        eng
+    }
+}
+
+/// f32 GEMM through the engine: reference accuracy on every driver, and
+/// bitwise equality between the sequential and every pooled width (the
+/// drivers' determinism contract, now at f32).
+#[test]
+fn f32_gemm_parity_across_g3_g4_widths() {
+    let threads = threads_from_env();
+    let shapes = [(61usize, 53usize, 29usize), (96, 80, 40), (33, 17, 9)];
+    for &(m, n, k) in &shapes {
+        let mut rng = Pcg64::seed((m * 13 + n * 5 + k) as u64);
+        let a = MatrixF32::random(m, k, &mut rng);
+        let b = MatrixF32::random(k, n, &mut rng);
+        let c0 = MatrixF32::random(m, n, &mut rng);
+        let mut expect = c0.clone();
+        gemm_reference(1.5f32, a.view(), b.view(), -0.5f32, &mut expect.view_mut());
+        // Sequential engine result: the accuracy baseline and the
+        // bitwise oracle for the pooled paths.
+        let mut c_seq = c0.clone();
+        let mut seq = engine(1, ParallelLoop::G4);
+        seq.gemm_f32(1.5, a.view(), b.view(), -0.5, &mut c_seq.view_mut());
+        assert!(
+            c_seq.max_abs_diff(&expect) < 1e-4 * k as f64,
+            "{m}x{n}x{k}: f32 blocked diverges from f32 reference"
+        );
+        for target in [ParallelLoop::G4, ParallelLoop::G3] {
+            for t in [2usize, threads.max(2)] {
+                let mut eng = engine(t, target);
+                let mut c = c0.clone();
+                eng.gemm_f32(1.5, a.view(), b.view(), -0.5, &mut c.view_mut());
+                assert_eq!(
+                    c.max_abs_diff(&c_seq),
+                    0.0,
+                    "{m}x{n}x{k} {target:?} x{t}: pooled f32 must be bitwise identical"
+                );
+            }
+        }
+    }
+}
+
+/// The model hands the f32 path larger cache params than the f64 path
+/// for the same problem, and the config cache keys by dtype (two misses,
+/// not one).
+#[test]
+fn f32_configs_are_larger_and_dtype_keyed() {
+    use dla_codesign::model::MicroKernel;
+    // Pinned kernel: the element-width effect isolated from kernel
+    // choice — kc doubles outright at deep k (same L1, half the bytes
+    // per element).
+    let eng = GemmEngine::new(
+        host_xeon(),
+        ConfigMode::RefinedWithKernel(MicroKernel::new(8, 6)),
+    );
+    let dims = GemmDims::new(2000, 2000, 2000);
+    let c64 = eng.plan_config(dims);
+    let c32 = eng.plan_config_t::<f32>(dims);
+    assert_eq!(
+        c32.ccp.kc,
+        2 * c64.ccp.kc,
+        "f32 kc must double f64 kc at equal (deep-k) dims: {c32} vs {c64}"
+    );
+    assert!(c32.ccp.mc >= c64.ccp.mc);
+    let stats = eng.config_cache_stats();
+    assert_eq!(stats.misses, 2, "same dims, two dtypes -> two cache entries: {stats:?}");
+    assert_eq!(stats.hits, 0);
+    // Repeat lookups hit per dtype.
+    eng.plan_config(dims);
+    eng.plan_config_t::<f32>(dims);
+    assert_eq!(eng.config_cache_stats().hits, 2);
+    assert_eq!(DType::F32.size_bytes(), 4);
+    // Dynamic selection also picks a runnable, wider-lane family member.
+    let dyn_eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+    let c32dyn = dyn_eng.plan_config_t::<f32>(dims);
+    assert!(c32dyn.ccp.kc >= c64.ccp.kc, "{c32dyn} vs {c64}");
+}
+
+/// A kernel pinned for the f64 harness that has no f32 registry twin
+/// (MK12x4) must not panic the f32 path: the engine falls back to the
+/// width-aware dynamic selection, while f64 keeps the pin.
+#[test]
+fn f32_falls_back_when_pinned_kernel_has_no_f32_twin() {
+    use dla_codesign::model::MicroKernel;
+    let pinned = MicroKernel::new(12, 4);
+    let mut eng = GemmEngine::new(host_xeon(), ConfigMode::RefinedWithKernel(pinned));
+    let dims = GemmDims::new(40, 30, 20);
+    assert_eq!(eng.plan_config(dims).mk, pinned, "f64 must honor the pin");
+    let c32 = eng.plan_config_t::<f32>(dims);
+    assert_ne!(c32.mk, pinned, "f32 must fall back off the f64-only shape");
+    // And the full GEMM runs (no 'no f32 implementation' panic) and is
+    // accurate.
+    let mut rng = Pcg64::seed(12);
+    let a = MatrixF32::random(40, 20, &mut rng);
+    let b = MatrixF32::random(20, 30, &mut rng);
+    let mut c = MatrixF32::zeros(40, 30);
+    let mut expect = MatrixF32::zeros(40, 30);
+    gemm_reference(1.0f32, a.view(), b.view(), 0.0f32, &mut expect.view_mut());
+    eng.gemm_f32(1.0, a.view(), b.view(), 0.0, &mut c.view_mut());
+    assert!(c.max_abs_diff(&expect) < 1e-4);
+}
+
+/// Batched f32 GEMMs: fused pool epochs must be bitwise identical to the
+/// serial engine path per member (the f64 batching contract at f32).
+#[test]
+fn f32_batched_gemm_bitwise_matches_serial() {
+    let threads = threads_from_env().max(2);
+    let shapes = [(40usize, 24usize, 16usize), (24, 40, 8), (33, 17, 9), (40, 24, 16)];
+    let coeffs = [(1.0f32, 0.0f32), (-1.0, 1.0), (0.5, -2.0), (2.0, 1.0)];
+    let mut rng = Pcg64::seed(4242);
+    let inputs: Vec<(MatrixF32, MatrixF32, MatrixF32)> = shapes
+        .iter()
+        .map(|&(m, n, k)| {
+            (
+                MatrixF32::random(m, k, &mut rng),
+                MatrixF32::random(k, n, &mut rng),
+                MatrixF32::random(m, n, &mut rng),
+            )
+        })
+        .collect();
+    // Serial reference: one request at a time.
+    let mut refs = Vec::new();
+    {
+        let mut eng = engine(threads, ParallelLoop::G4);
+        for ((a, b, c0), (alpha, beta)) in inputs.iter().zip(coeffs) {
+            let mut c = c0.clone();
+            eng.gemm_f32(alpha, a.view(), b.view(), beta, &mut c.view_mut());
+            refs.push(c);
+        }
+    }
+    for t in [1usize, threads] {
+        let mut eng = engine(t, ParallelLoop::G4);
+        let mut cs: Vec<MatrixF32> = inputs.iter().map(|(_, _, c0)| c0.clone()).collect();
+        let mut items: Vec<GemmBatchItem<'_, f32>> = inputs
+            .iter()
+            .zip(cs.iter_mut())
+            .zip(coeffs)
+            .map(|(((a, b, _), c), (alpha, beta))| GemmBatchItem {
+                alpha,
+                a: a.view(),
+                b: b.view(),
+                beta,
+                c: c.view_mut(),
+            })
+            .collect();
+        let configs = eng.gemm_batch_t::<f32>(&mut items);
+        drop(items);
+        assert_eq!(configs.len(), 4);
+        assert_eq!(configs[0], configs[3], "repeated shape must memoize per dtype");
+        for (i, (c, expect)) in cs.iter().zip(&refs).enumerate() {
+            assert_eq!(
+                c.max_abs_diff(expect),
+                0.0,
+                "f32 batch member {i} (x{t}) must be bitwise identical to serial"
+            );
+        }
+    }
+}
+
+/// f32 LU through the lookahead pipeline: every depth and width must be
+/// bitwise identical to the serialized f32 baseline, and accurate to f32
+/// tolerance.
+#[test]
+fn f32_lookahead_lu_bitwise_matches_baseline() {
+    let threads = threads_from_env().max(2);
+    let (s, b) = (96usize, 16usize);
+    let mut rng = Pcg64::seed(s as u64);
+    let a0 = MatrixF32::random_diag_dominant(s, &mut rng);
+    // Serialized baseline (lookahead off, sequential engine).
+    let mut base_eng =
+        GemmEngine::new(host_xeon(), ConfigMode::Refined).with_lookahead(Lookahead::disabled());
+    let base: LuFactors<f32> = lu_factor_t::<f32>(&a0, b, &mut base_eng).unwrap();
+    assert!(base.reconstruction_error(&a0) < 1e-4);
+    for depth in [1usize, 2] {
+        let mut eng = engine(threads, ParallelLoop::G4)
+            .with_lookahead(Lookahead { depth, panel_workers: AUTO_PANEL_WORKERS });
+        let f = lu_factor_t::<f32>(&a0, b, &mut eng).unwrap();
+        assert_eq!(f.pivots, base.pivots, "depth {depth}: f32 pivots must match baseline");
+        assert_eq!(
+            f.lu.max_abs_diff(&base.lu),
+            0.0,
+            "depth {depth} x{threads}: f32 lookahead LU must be bitwise identical"
+        );
+    }
+}
+
+/// Mixed-precision solve: f64-level residual on a well-conditioned
+/// system (on a pooled engine), within a small iteration budget.
+#[test]
+fn mixed_precision_converges_on_pooled_engine() {
+    let threads = threads_from_env();
+    let mut rng = Pcg64::seed(2718);
+    let n = 160;
+    let a = MatrixF64::random_diag_dominant(n, &mut rng);
+    let x_true = MatrixF64::random(n, 3, &mut rng);
+    let mut b = MatrixF64::zeros(n, 3);
+    gemm_reference(1.0, a.view(), x_true.view(), 0.0, &mut b.view_mut());
+    let mut eng = engine(threads, ParallelLoop::G4);
+    let opts = RefineOptions { block: 32, ..Default::default() };
+    let res = lu_solve_mixed(&a, &b, &opts, &mut eng).unwrap();
+    assert!(!res.fell_back);
+    assert!(res.residual <= 1e-10, "relative residual {}", res.residual);
+    assert!(res.iterations >= 1 && res.iterations <= opts.max_iters);
+    assert!(res.x.max_abs_diff(&x_true) < 1e-8);
+}
+
+/// Ill-conditioned input: the refinement cannot contract the error in
+/// f32, so the solver must fall back and return exactly the plain-f64
+/// answer.
+#[test]
+fn mixed_precision_falls_back_cleanly() {
+    let n = 12;
+    let a = MatrixF64::from_fn(n, n, |i, j| 1.0 / ((i + j + 1) as f64));
+    let mut rng = Pcg64::seed(11);
+    let b = MatrixF64::random(n, 1, &mut rng);
+    let opts = RefineOptions { block: 4, max_iters: 8, ..Default::default() };
+    let res = lu_solve_mixed(&a, &b, &opts, &mut engine(1, ParallelLoop::G4)).unwrap();
+    assert!(res.fell_back, "Hilbert(12) must trigger the f64 fallback");
+    let x64 = lu_solve_f64(&a, &b, opts.block, &mut engine(1, ParallelLoop::G4)).unwrap();
+    assert_eq!(res.x.max_abs_diff(&x64), 0.0, "fallback must equal the plain f64 solve");
+}
+
+/// The f64 paths must be unperturbed by the generic refactor: the
+/// dtype-keyed cache serves the same f64 configs, and an f64 GEMM on a
+/// pool is still bitwise equal to the sequential engine (the historical
+/// determinism contract, re-asserted here beside the f32 twin).
+#[test]
+fn f64_determinism_is_unperturbed() {
+    let threads = threads_from_env().max(2);
+    let (m, n, k) = (77usize, 65usize, 31usize);
+    let mut rng = Pcg64::seed(8);
+    let a = MatrixF64::random(m, k, &mut rng);
+    let b = MatrixF64::random(k, n, &mut rng);
+    let c0 = MatrixF64::random(m, n, &mut rng);
+    let mut c_seq = c0.clone();
+    let mut seq = engine(1, ParallelLoop::G4);
+    seq.gemm(1.0, a.view(), b.view(), 1.0, &mut c_seq.view_mut());
+    let mut c_par = c0.clone();
+    let mut par = engine(threads, ParallelLoop::G4);
+    par.gemm(1.0, a.view(), b.view(), 1.0, &mut c_par.view_mut());
+    assert_eq!(c_par.max_abs_diff(&c_seq), 0.0);
+    // Same dims in both precisions never collide in the cache.
+    assert_eq!(seq.plan_config(GemmDims::new(m, n, k)), seq.plan_config(GemmDims::new(m, n, k)));
+}
