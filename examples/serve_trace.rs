@@ -49,13 +49,14 @@ fn main() {
         ("BLIS static policy", ConfigMode::BlisStatic),
         ("co-design (refined dynamic)", ConfigMode::Refined),
     ] {
-        let server = CoordinatorServer::start(ServerConfig::new(arch.clone(), mode));
+        let server = CoordinatorServer::start(ServerConfig::new(arch.clone(), mode))
+            .expect("server start");
         let trace = synth_trace(n, 11);
         let total_flops: f64 = trace.iter().map(|r| r.flops()).sum();
         let sw = Stopwatch::start();
         let mut pending = Vec::new();
         for req in trace {
-            pending.push(server.submit(req));
+            pending.push(server.submit(req).expect("admission rejected"));
         }
         for rx in pending {
             rx.recv().unwrap().expect("request failed");

@@ -393,7 +393,8 @@ fn main() {
                 .with_workers(2)
                 .with_gemm_threads(threads)
                 .with_batching(policy),
-        );
+        )
+        .expect("server start");
         // One timed pass (no bench reps): the batch counters come from
         // the server's whole lifetime, so timing exactly one pass keeps
         // requests/dispatch counts/queue waits mutually consistent.
@@ -403,13 +404,17 @@ fn main() {
             let mut pending = Vec::with_capacity(nreq);
             for i in 0..nreq {
                 let (m, n, kk) = shapes[i % shapes.len()];
-                pending.push(server.submit(DlaRequest::Gemm {
-                    alpha: 1.0,
-                    a: MatrixF64::random(m, kk, &mut rng7),
-                    b: MatrixF64::random(kk, n, &mut rng7),
-                    beta: 0.0,
-                    c: MatrixF64::zeros(m, n),
-                }));
+                pending.push(
+                    server
+                        .submit(DlaRequest::Gemm {
+                            alpha: 1.0,
+                            a: MatrixF64::random(m, kk, &mut rng7),
+                            b: MatrixF64::random(kk, n, &mut rng7),
+                            beta: 0.0,
+                            c: MatrixF64::zeros(m, n),
+                        })
+                        .expect("submit"),
+                );
             }
             for rx in pending {
                 rx.recv().unwrap().unwrap();

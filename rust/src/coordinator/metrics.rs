@@ -5,9 +5,14 @@
 //! lookahead gains are observable in the server, not just in offline
 //! benches — the batch scheduler's coalescing counters
 //! ([`BatchMetrics`]: batch-size histogram, coalesced-vs-solo dispatch
-//! counts, per-request admission-queue wait) — and the mixed-precision
+//! counts, per-request admission-queue wait) — the mixed-precision
 //! path's per-precision telemetry ([`RefineMetrics`]: refinement
-//! iteration counts, f32-factor vs f64-refine seconds, fallbacks).
+//! iteration counts, f32-factor vs f64-refine seconds, fallbacks) — and
+//! the failure-path accounting ([`FaultMetrics`]: rejected inputs,
+//! expired deadlines, admission retries/rejections, worker panics and
+//! the degraded-mode request count), so an operator can see a server
+//! absorbing faults instead of silently retrying.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::collections::BTreeMap;
 
@@ -151,6 +156,58 @@ impl BatchMetrics {
     }
 }
 
+/// Counters of the server's failure paths: how many requests were
+/// rejected, retried, expired, or served degraded, and how many worker
+/// threads panicked or were lost. All-zero on a healthy server — the
+/// summary omits the `resilience:` line entirely in that case, so the
+/// happy-path output is unchanged.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultMetrics {
+    /// Requests rejected at admission by [`DlaRequest::validate`]
+    /// (NaN/Inf operands, shape mismatches, bad block sizes).
+    ///
+    /// [`DlaRequest::validate`]: crate::coordinator::requests::DlaRequest::validate
+    pub invalid_inputs: u64,
+    /// Requests that expired — at the caller (reply not ready in time)
+    /// or in the queue (deadline already past at dequeue).
+    pub timeouts: u64,
+    /// Submissions rejected with `QueueFull` after exhausting retries.
+    pub queue_full_rejections: u64,
+    /// Individual backoff-retry attempts spent at admission (counts
+    /// every re-`try_send`, including ones that eventually succeeded).
+    pub retries: u64,
+    /// Requests whose handling panicked in a server worker (isolated by
+    /// `catch_unwind`, answered with `DlaError::Internal`).
+    pub worker_panics: u64,
+    /// Requests served by the degraded serial fallback path after a
+    /// pool poisoning (bitwise identical results, reduced throughput).
+    pub degraded_requests: u64,
+    /// Worker threads that terminated abnormally (observed at shutdown
+    /// or via a disconnected channel).
+    pub workers_lost: u64,
+    /// Requests dropped in the admission queue because their deadline
+    /// had already expired when a worker dequeued them.
+    pub expired_in_queue: u64,
+}
+
+impl FaultMetrics {
+    /// True when every counter is zero (healthy server).
+    pub fn is_clean(&self) -> bool {
+        *self == FaultMetrics::default()
+    }
+
+    pub fn merge(&mut self, other: &FaultMetrics) {
+        self.invalid_inputs += other.invalid_inputs;
+        self.timeouts += other.timeouts;
+        self.queue_full_rejections += other.queue_full_rejections;
+        self.retries += other.retries;
+        self.worker_panics += other.worker_panics;
+        self.degraded_requests += other.degraded_requests;
+        self.workers_lost += other.workers_lost;
+        self.expired_in_queue += other.expired_in_queue;
+    }
+}
+
 /// Metrics for one request kind.
 #[derive(Default)]
 pub struct KindMetrics {
@@ -172,6 +229,8 @@ pub struct Metrics {
     /// Mixed-precision solve accounting (all-zero until a `MixedSolve`
     /// request is served).
     refine: RefineMetrics,
+    /// Failure-path accounting (all-zero on a healthy server).
+    faults: FaultMetrics,
 }
 
 impl Metrics {
@@ -239,6 +298,17 @@ impl Metrics {
         &self.refine
     }
 
+    /// Mutable access to the failure-path counters (the server bumps
+    /// these at the fault sites; there is no single `record` shape).
+    pub fn faults_mut(&mut self) -> &mut FaultMetrics {
+        &mut self.faults
+    }
+
+    /// The failure-path counters.
+    pub fn fault_stats(&self) -> &FaultMetrics {
+        &self.faults
+    }
+
     pub fn merge(&mut self, other: Metrics) {
         // Workers of one server share a single pool, so every snapshot
         // observes the same monotone counters: keep the latest (largest
@@ -254,6 +324,7 @@ impl Metrics {
         }
         self.batch.merge(&other.batch);
         self.refine.merge(&other.refine);
+        self.faults.merge(&other.faults);
         for (kind, km) in other.kinds {
             let mine = self.kinds.entry(kind).or_default();
             mine.flops.merge(&km.flops);
@@ -286,11 +357,22 @@ impl Metrics {
         }
         let mut out = t.render();
         if let Some(p) = self.pool {
+            // Poison accounting only shows up once an epoch actually
+            // panicked, so healthy-server output is byte-identical.
+            let poison = if p.epochs_poisoned > 0 {
+                format!(
+                    ", {} epochs poisoned ({} recovered)",
+                    p.epochs_poisoned, p.recoveries
+                )
+            } else {
+                String::new()
+            };
             out.push_str(&format!(
-                "gemm pool: {} jobs, leader-wait {:.3} ms, idle {:.3} ms\n",
+                "gemm pool: {} jobs, leader-wait {:.3} ms, idle {:.3} ms{}\n",
                 p.jobs,
                 p.leader_wait_ns as f64 / 1e6,
                 p.idle_ns as f64 / 1e6,
+                poison,
             ));
             out.push_str(&format!(
                 "lookahead phases: panel-idle {:.3} ms, update-idle {:.3} ms, \
@@ -322,13 +404,72 @@ impl Metrics {
                 self.refine.refine_s.mean() * 1e3,
             ));
         }
+        if !self.faults.is_clean() {
+            let f = &self.faults;
+            out.push_str(&format!(
+                "resilience: {} invalid inputs, {} timeouts ({} expired in queue), \
+                 {} queue-full rejections ({} retries), {} worker panics, \
+                 {} degraded requests, {} workers lost\n",
+                f.invalid_inputs,
+                f.timeouts,
+                f.expired_in_queue,
+                f.queue_full_rejections,
+                f.retries,
+                f.worker_panics,
+                f.degraded_requests,
+                f.workers_lost,
+            ));
+        }
         out
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fault_metrics_merge_and_summarize() {
+        let mut a = Metrics::new();
+        assert!(a.fault_stats().is_clean());
+        assert!(!a.summary().contains("resilience:"), "no line on a healthy server");
+        a.faults_mut().invalid_inputs += 2;
+        a.faults_mut().timeouts += 1;
+        a.faults_mut().retries += 5;
+        let mut b = Metrics::new();
+        b.faults_mut().timeouts += 3;
+        b.faults_mut().worker_panics += 1;
+        b.faults_mut().degraded_requests += 4;
+        a.merge(b);
+        let f = a.fault_stats();
+        assert_eq!(f.invalid_inputs, 2);
+        assert_eq!(f.timeouts, 4);
+        assert_eq!(f.retries, 5);
+        assert_eq!(f.worker_panics, 1);
+        assert_eq!(f.degraded_requests, 4);
+        assert!(!f.is_clean());
+        let s = a.summary();
+        assert!(s.contains("resilience: 2 invalid inputs"), "{s}");
+        assert!(s.contains("4 timeouts"), "{s}");
+        assert!(s.contains("4 degraded requests"), "{s}");
+    }
+
+    #[test]
+    fn pool_poison_counters_surface_only_when_nonzero() {
+        use crate::runtime::pool::PoolStats;
+        let mut m = Metrics::new();
+        m.set_pool_stats(PoolStats { jobs: 5, ..PoolStats::default() });
+        assert!(!m.summary().contains("poisoned"), "healthy pool line is unchanged");
+        m.set_pool_stats(PoolStats {
+            jobs: 6,
+            epochs_poisoned: 2,
+            recoveries: 2,
+            ..PoolStats::default()
+        });
+        let s = m.summary();
+        assert!(s.contains("2 epochs poisoned (2 recovered)"), "{s}");
+    }
 
     #[test]
     fn record_and_query() {

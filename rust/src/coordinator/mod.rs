@@ -31,6 +31,21 @@
 //! - **Factorizations and large GEMMs** bypass the batcher and keep the
 //!   lookahead-fused path (`Lookahead` policy, `DLA_LOOKAHEAD`), which
 //!   already keeps the pool busy across panel/update phases.
+//!
+//! # Failure model
+//!
+//! The request path speaks typed errors end to end: [`Coordinator::handle`]
+//! and the server reply with `Result<DlaResponse, DlaError>` —
+//! admission-validated inputs ([`DlaRequest::validate`]), factorization
+//! breakdown as [`DlaError::Singular`], caught panics as
+//! [`DlaError::Internal`], deadlines/backpressure as
+//! [`DlaError::Timeout`] / [`DlaError::QueueFull`]. See the "Failure
+//! model" section of `lapack/README.md` for the full taxonomy and the
+//! degradation ladder.
+
+// The serving path must stay panic-free: every unwrap/expect below is
+// either allow-listed with a justification or lives in test code.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 #[cfg(feature = "pjrt")]
 pub mod lu_driver;
@@ -41,7 +56,8 @@ pub mod server;
 #[cfg(feature = "pjrt")]
 pub use lu_driver::{lu_via_artifacts, LuArtifactResult};
 pub use crate::model::batchplan::BatchPolicy;
-pub use metrics::{BatchMetrics, Metrics, RefineMetrics};
+pub use crate::util::DlaError;
+pub use metrics::{BatchMetrics, FaultMetrics, Metrics, RefineMetrics};
 pub use requests::{DlaRequest, DlaResponse};
 pub use server::{CoordinatorServer, ServerConfig};
 
@@ -49,8 +65,7 @@ use crate::arch::Arch;
 use crate::gemm::{ConfigMode, GemmEngine};
 use crate::lapack;
 use crate::lapack::refine::RefineOptions;
-use crate::util::{MatrixF64, Stopwatch};
-use anyhow::Result;
+use crate::util::{DlaError, MatrixF64, Stopwatch};
 
 /// The coordinator: policy + engine + metrics.
 pub struct Coordinator {
@@ -94,8 +109,11 @@ impl Coordinator {
         self.engine.config_cache_stats()
     }
 
-    /// Handle one request synchronously.
-    pub fn handle(&mut self, req: DlaRequest) -> Result<DlaResponse> {
+    /// Handle one request synchronously. Malformed operands are rejected
+    /// up front with [`DlaError::InvalidInput`]; factorization breakdown
+    /// comes back as [`DlaError::Singular`] — never a panic.
+    pub fn handle(&mut self, req: DlaRequest) -> Result<DlaResponse, DlaError> {
+        req.validate()?;
         let sw = Stopwatch::start();
         let resp = match req {
             DlaRequest::Gemm { alpha, a, b, beta, mut c } => {
@@ -123,7 +141,7 @@ impl Coordinator {
             DlaRequest::LuFactor { a, block } => {
                 let flops = lapack::lu::lu_flops(a.rows());
                 let factors = lapack::lu_factor(&a, block, &mut self.engine)
-                    .map_err(|col| anyhow::anyhow!("singular at column {col}"))?;
+                    .map_err(|col| DlaError::Singular { pivot: col })?;
                 let dt = sw.elapsed_secs();
                 self.metrics.record("lu", dt, flops);
                 DlaResponse::Lu { factors, seconds: dt }
@@ -132,7 +150,7 @@ impl Coordinator {
                 let flops = lapack::lu::lu_flops(a.rows());
                 let opts = RefineOptions { block, ..Default::default() };
                 let res = lapack::lu_solve_mixed(&a, &rhs, &opts, &mut self.engine)
-                    .map_err(|col| anyhow::anyhow!("singular at column {col}"))?;
+                    .map_err(|col| DlaError::Singular { pivot: col })?;
                 let dt = sw.elapsed_secs();
                 self.metrics.record("mixed_lu", dt, flops);
                 self.metrics.record_refine(
@@ -153,8 +171,10 @@ impl Coordinator {
                 let s = a.rows();
                 let flops = (s * s * s) as f64 / 3.0;
                 let mut m = a;
+                // Not-SPD is the Cholesky flavor of factorization
+                // breakdown: same typed variant, pivot = failing column.
                 lapack::cholesky::cholesky_blocked(&mut m, block, &mut self.engine)
-                    .map_err(|col| anyhow::anyhow!("not SPD at column {col}"))?;
+                    .map_err(|col| DlaError::Singular { pivot: col })?;
                 let dt = sw.elapsed_secs();
                 self.metrics.record("cholesky", dt, flops);
                 DlaResponse::Matrix { result: m, config: None, seconds: dt }
@@ -166,15 +186,23 @@ impl Coordinator {
 
     /// Convenience: factor + solve in one call (the "real small workload"
     /// of the end-to-end example).
-    pub fn solve(&mut self, a: &MatrixF64, rhs: &MatrixF64, block: usize) -> Result<MatrixF64> {
+    pub fn solve(
+        &mut self,
+        a: &MatrixF64,
+        rhs: &MatrixF64,
+        block: usize,
+    ) -> Result<MatrixF64, DlaError> {
         match self.handle(DlaRequest::LuFactor { a: a.clone(), block })? {
             DlaResponse::Lu { factors, .. } => Ok(factors.solve(rhs)),
-            _ => unreachable!(),
+            _ => Err(DlaError::Internal {
+                reason: "LuFactor request answered with a non-Lu response".to_string(),
+            }),
         }
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::arch::host_xeon;
@@ -215,8 +243,18 @@ mod tests {
     fn coordinator_rejects_singular() {
         let mut co = Coordinator::new(host_xeon(), ConfigMode::Refined);
         let a = MatrixF64::zeros(8, 8);
-        let err = co.handle(DlaRequest::LuFactor { a, block: 4 });
-        assert!(err.is_err());
+        let err = co.handle(DlaRequest::LuFactor { a, block: 4 }).unwrap_err();
+        assert_eq!(err, DlaError::Singular { pivot: 0 }, "typed singularity, not a string");
+    }
+
+    #[test]
+    fn coordinator_rejects_invalid_input_before_any_work() {
+        let mut co = Coordinator::new(host_xeon(), ConfigMode::Refined);
+        let mut a = MatrixF64::identity(8);
+        a[(1, 1)] = f64::NAN;
+        let err = co.handle(DlaRequest::LuFactor { a, block: 4 }).unwrap_err();
+        assert!(matches!(err, DlaError::InvalidInput { .. }), "{err:?}");
+        assert_eq!(co.metrics.count("lu"), 0, "rejected requests must not be recorded");
     }
 
     #[test]

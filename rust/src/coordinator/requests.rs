@@ -1,8 +1,12 @@
 //! Request/response types of the coordinator.
 
+// The serving path must stay panic-free: every unwrap/expect below is
+// either allow-listed with a justification or lives in test code.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use crate::lapack::LuFactors;
 use crate::model::GemmDims;
-use crate::util::{MatrixF32, MatrixF64};
+use crate::util::{DlaError, MatrixF32, MatrixF64};
 
 /// A DLA service request.
 pub enum DlaRequest {
@@ -62,6 +66,69 @@ impl DlaRequest {
         }
     }
 
+    /// Admission validation: reject malformed operands with a typed
+    /// [`DlaError::InvalidInput`] *before* any pool work is enqueued —
+    /// mismatched dimensions, degenerate blocking, and non-finite
+    /// entries (NaN/Inf) that would otherwise propagate garbage or blow
+    /// up deep inside a kernel. The finite scan is O(elements), noise
+    /// next to the O(n³) work a request buys.
+    pub fn validate(&self) -> Result<(), DlaError> {
+        let invalid = |reason: String| Err(DlaError::InvalidInput { reason });
+        match self {
+            DlaRequest::Gemm { alpha, a, b, beta, c } => {
+                if !self.gemm_shape_consistent() {
+                    return invalid(format!(
+                        "gemm shape mismatch: a {}x{}, b {}x{}, c {}x{}",
+                        a.rows(), a.cols(), b.rows(), b.cols(), c.rows(), c.cols()
+                    ));
+                }
+                if !alpha.is_finite() || !beta.is_finite() {
+                    return invalid("non-finite gemm scalar (alpha/beta)".to_string());
+                }
+                for (name, m) in [("a", a), ("b", b), ("c", c)] {
+                    if !m.all_finite() {
+                        return invalid(format!("non-finite entries in gemm operand {name}"));
+                    }
+                }
+            }
+            DlaRequest::GemmF32 { alpha, a, b, beta, c } => {
+                if !self.gemm_shape_consistent() {
+                    return invalid(format!(
+                        "gemm_f32 shape mismatch: a {}x{}, b {}x{}, c {}x{}",
+                        a.rows(), a.cols(), b.rows(), b.cols(), c.rows(), c.cols()
+                    ));
+                }
+                if !alpha.is_finite() || !beta.is_finite() {
+                    return invalid("non-finite gemm_f32 scalar (alpha/beta)".to_string());
+                }
+                for (name, m) in [("a", a), ("b", b), ("c", c)] {
+                    if !m.all_finite() {
+                        return invalid(format!("non-finite entries in gemm_f32 operand {name}"));
+                    }
+                }
+            }
+            DlaRequest::LuFactor { a, block } => {
+                validate_factor("lu", a, *block)?;
+            }
+            DlaRequest::MixedSolve { a, rhs, block } => {
+                validate_factor("mixed_lu", a, *block)?;
+                if rhs.rows() != a.rows() {
+                    return invalid(format!(
+                        "mixed_lu rhs has {} rows but the matrix is {}x{}",
+                        rhs.rows(), a.rows(), a.cols()
+                    ));
+                }
+                if !rhs.all_finite() {
+                    return invalid("non-finite entries in mixed_lu rhs".to_string());
+                }
+            }
+            DlaRequest::Cholesky { a, block } => {
+                validate_factor("cholesky", a, *block)?;
+            }
+        }
+        Ok(())
+    }
+
     /// Nominal flop count (for throughput accounting).
     pub fn flops(&self) -> f64 {
         match self {
@@ -76,6 +143,24 @@ impl DlaRequest {
             DlaRequest::Cholesky { a, .. } => (a.rows() as f64).powi(3) / 3.0,
         }
     }
+}
+
+/// Shared validation of the square-factorization request kinds.
+fn validate_factor(kind: &str, a: &MatrixF64, block: usize) -> Result<(), DlaError> {
+    let invalid = |reason: String| Err(DlaError::InvalidInput { reason });
+    if a.rows() != a.cols() {
+        return invalid(format!("{kind} needs a square matrix, got {}x{}", a.rows(), a.cols()));
+    }
+    if a.rows() == 0 {
+        return invalid(format!("{kind} on an empty matrix"));
+    }
+    if block == 0 {
+        return invalid(format!("{kind} block size must be >= 1"));
+    }
+    if !a.all_finite() {
+        return invalid(format!("non-finite entries in {kind} matrix"));
+    }
+    Ok(())
 }
 
 /// A DLA service response.
@@ -110,8 +195,94 @@ impl DlaResponse {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
+
+    fn reason(req: &DlaRequest) -> String {
+        match req.validate() {
+            Err(DlaError::InvalidInput { reason }) => reason,
+            other => panic!("expected InvalidInput, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validation_accepts_well_formed_requests() {
+        let ok = DlaRequest::Gemm {
+            alpha: 1.0,
+            a: MatrixF64::zeros(10, 20),
+            b: MatrixF64::zeros(20, 30),
+            beta: 0.5,
+            c: MatrixF64::zeros(10, 30),
+        };
+        assert!(ok.validate().is_ok());
+        assert!(DlaRequest::LuFactor { a: MatrixF64::identity(8), block: 4 }.validate().is_ok());
+        assert!(DlaRequest::MixedSolve {
+            a: MatrixF64::identity(8),
+            rhs: MatrixF64::zeros(8, 2),
+            block: 4,
+        }
+        .validate()
+        .is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_shape_mismatch_and_nan() {
+        let bad_shape = DlaRequest::Gemm {
+            alpha: 1.0,
+            a: MatrixF64::zeros(10, 21),
+            b: MatrixF64::zeros(20, 30),
+            beta: 0.0,
+            c: MatrixF64::zeros(10, 30),
+        };
+        assert!(reason(&bad_shape).contains("shape mismatch"));
+        let mut a = MatrixF64::identity(6);
+        a[(2, 3)] = f64::NAN;
+        let nan_lu = DlaRequest::LuFactor { a, block: 2 };
+        assert!(reason(&nan_lu).contains("non-finite"));
+        let mut b = MatrixF64::zeros(4, 4);
+        b[(0, 0)] = f64::INFINITY;
+        let inf_gemm = DlaRequest::Gemm {
+            alpha: 1.0,
+            a: MatrixF64::zeros(4, 4),
+            b,
+            beta: 0.0,
+            c: MatrixF64::zeros(4, 4),
+        };
+        assert!(reason(&inf_gemm).contains("non-finite"));
+        let bad_scalar = DlaRequest::Gemm {
+            alpha: f64::NAN,
+            a: MatrixF64::zeros(4, 4),
+            b: MatrixF64::zeros(4, 4),
+            beta: 0.0,
+            c: MatrixF64::zeros(4, 4),
+        };
+        assert!(reason(&bad_scalar).contains("scalar"));
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_factorizations() {
+        let rect = DlaRequest::LuFactor { a: MatrixF64::zeros(8, 6), block: 2 };
+        assert!(reason(&rect).contains("square"));
+        let no_block = DlaRequest::Cholesky { a: MatrixF64::identity(8), block: 0 };
+        assert!(reason(&no_block).contains("block"));
+        let short_rhs = DlaRequest::MixedSolve {
+            a: MatrixF64::identity(8),
+            rhs: MatrixF64::zeros(6, 1),
+            block: 4,
+        };
+        assert!(reason(&short_rhs).contains("rhs"));
+        let mut f32_c = MatrixF32::zeros(4, 4);
+        f32_c[(1, 1)] = f32::NAN;
+        let nan_f32 = DlaRequest::GemmF32 {
+            alpha: 1.0,
+            a: MatrixF32::zeros(4, 4),
+            b: MatrixF32::zeros(4, 4),
+            beta: 0.0,
+            c: f32_c,
+        };
+        assert!(reason(&nan_f32).contains("non-finite"));
+    }
 
     #[test]
     fn kinds_and_flops() {

@@ -27,7 +27,10 @@
 //!    bypass the batcher entirely and keep the existing (lookahead)
 //!    path — the two schedulers compose on one shared pool. Parked
 //!    entries are bounded by `queue_depth` (preserving the channel's
-//!    backpressure); at the bound, requests are served solo.
+//!    backpressure); at the bound, requests are served solo. Requests
+//!    whose deadline is tighter than the coalescing window also bypass
+//!    the batcher ([`BatchPolicy::fits_deadline`]) — coalescing trades
+//!    latency for throughput, and a deadline caps that trade.
 //! 2. **Coalescing.** A dedicated batcher thread sleeps until a bucket
 //!    is dispatchable: it reached `max_batch` entries, its oldest entry
 //!    has waited `wait_us`, or the server is shutting down.
@@ -45,8 +48,43 @@
 //! at shutdown. A response served from a fused dispatch reports the
 //! epoch's wall time as its `seconds` (the latency that request
 //! actually observed).
+//!
+//! # Fault tolerance
+//!
+//! The serving path degrades instead of dying (see the failure-model
+//! section of `lapack/README.md` for the full ladder):
+//!
+//! - **Admission validation.** [`Self::submit`] rejects malformed
+//!   requests (NaN/Inf operands, shape mismatches) with
+//!   [`DlaError::InvalidInput`] *before* they consume queue capacity.
+//! - **Deadlines.** [`ServerConfig::with_deadline`] (or
+//!   `DLA_DEADLINE_MS`) bounds every request end to end: expired
+//!   requests are dropped at dequeue (and in the batcher) with
+//!   [`DlaError::Timeout`], and [`Self::call`] stops waiting at the
+//!   deadline instead of blocking forever on a stalled worker.
+//! - **Backpressure retries.** A full channel is transient:
+//!   [`Self::submit`] retries with bounded, jittered exponential backoff
+//!   before giving up with [`DlaError::QueueFull`].
+//! - **Panic isolation + degraded mode.** A request whose handler
+//!   panics is answered with [`DlaError::Internal`] (the worker thread
+//!   survives via `catch_unwind`; the shared pool has already recovered
+//!   its epoch — see `runtime::pool`). The next
+//!   [`DEGRADED_WINDOW`] requests are then served by a pool-less serial
+//!   coordinator — bitwise identical results at reduced throughput —
+//!   before the worker resumes trusting the pooled path.
+//! - **Poison-tolerant shutdown.** [`Self::shutdown`] never unwraps a
+//!   `join`: a dead worker is counted as `workers_lost` and the
+//!   surviving workers' metrics are still merged.
+//!
+//! Every fault is counted in [`super::metrics::FaultMetrics`] (the
+//! `resilience:` summary line). Fault *injection* for drills and the
+//! chaos suite is armed with [`ServerConfig::with_faults`] or the
+//! `DLA_FAULTS` environment knob (see `runtime::faults`).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -56,11 +94,24 @@ use crate::arch::Arch;
 use crate::gemm::{ConfigMode, GemmBatchItem, Lookahead};
 use crate::model::batchplan::{BatchPlanner, BatchPolicy};
 use crate::model::GemmDims;
+use crate::runtime::faults::{FaultPlan, FaultState};
 use crate::runtime::pool::WorkerPool;
+use crate::util::error::{panic_reason, DlaError};
 
 use super::metrics::Metrics;
 use super::requests::{DlaRequest, DlaResponse};
 use super::Coordinator;
+
+/// How many requests a worker serves on the pool-less serial fallback
+/// path after isolating a handler panic, before trusting the pooled
+/// path again. The serial blocked path is bitwise identical to the
+/// pooled one (asserted by `tests/chaos.rs`), so correctness is never
+/// degraded — only throughput.
+pub const DEGRADED_WINDOW: u64 = 8;
+
+/// Admission attempts before a persistently full queue turns into
+/// [`DlaError::QueueFull`] (initial try + retries with backoff).
+const MAX_ADMISSION_ATTEMPTS: u32 = 8;
 
 /// Server configuration.
 #[derive(Clone)]
@@ -79,6 +130,13 @@ pub struct ServerConfig {
     /// `DLA_BATCH` environment override (pin
     /// [`crate::model::BatchPolicy::disabled`] to force batching off).
     pub batching: Option<BatchPolicy>,
+    /// End-to-end deadline applied to every request; `None` defers to
+    /// the `DLA_DEADLINE_MS` environment override (unset = no deadline).
+    pub deadline: Option<Duration>,
+    /// Fault-injection plan for drills and the chaos suite; `None`
+    /// defers to the `DLA_FAULTS` environment override (unset = hooks
+    /// un-armed, zero cost).
+    pub faults: Option<FaultPlan>,
 }
 
 impl ServerConfig {
@@ -91,6 +149,8 @@ impl ServerConfig {
             gemm_threads: 1,
             lookahead: None,
             batching: None,
+            deadline: None,
+            faults: None,
         }
     }
 
@@ -117,17 +177,53 @@ impl ServerConfig {
         self.batching = Some(policy);
         self
     }
+
+    /// Bound every request end to end: expired requests are answered
+    /// with [`DlaError::Timeout`] instead of being served late, and
+    /// [`CoordinatorServer::call`] stops waiting at the deadline. A
+    /// pinned deadline wins over the `DLA_DEADLINE_MS` override.
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Arm a fault-injection plan (chaos drills; see `runtime::faults`).
+    /// A pinned plan wins over the `DLA_FAULTS` override.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
 }
 
-type Job = (DlaRequest, mpsc::Sender<anyhow::Result<DlaResponse>>);
+/// The `DLA_DEADLINE_MS` override: a positive integer arms a per-request
+/// deadline on servers that did not pin one; unset / unparseable / `0`
+/// means no deadline (a typo must fail toward "no new failure mode").
+fn deadline_from_env() -> Option<Duration> {
+    std::env::var("DLA_DEADLINE_MS")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .map(Duration::from_millis)
+}
+
+/// One request in flight between `submit` and a worker.
+struct Job {
+    req: DlaRequest,
+    /// When `submit` accepted the request (the latency/timeout anchor).
+    submitted: Instant,
+    /// Absolute expiry, if the server has a deadline.
+    deadline: Option<Instant>,
+    reply: mpsc::Sender<Result<DlaResponse, DlaError>>,
+}
 
 /// One admitted request parked in the admission queue (always a
 /// `DlaRequest::Gemm` — admission guarantees it), with everything needed
 /// to execute and answer it.
 struct PendingGemm {
     req: DlaRequest,
-    reply: mpsc::Sender<anyhow::Result<DlaResponse>>,
+    reply: mpsc::Sender<Result<DlaResponse, DlaError>>,
     enqueued: Instant,
+    deadline: Option<Instant>,
 }
 
 struct Bucket {
@@ -224,9 +320,15 @@ impl BatchQueue {
                 .min_by_key(|(_, b)| b.first_at)
                 .map(|(&dims, _)| dims);
             if let Some(dims) = ready {
-                let bucket = st.buckets.remove(&dims).expect("ready bucket vanished");
-                st.pending -= bucket.entries.len();
-                return Some(bucket.entries);
+                match st.buckets.remove(&dims) {
+                    Some(bucket) => {
+                        st.pending -= bucket.entries.len();
+                        return Some(bucket.entries);
+                    }
+                    // Impossible (`ready` came from this map under the
+                    // same lock), but re-evaluate rather than panic.
+                    None => continue,
+                }
             }
             if st.closed {
                 return None; // closed and drained
@@ -255,8 +357,11 @@ impl BatchQueue {
 /// The batcher thread: owns its own coordinator (engine + metrics) on
 /// the shared pool, turns dispatchable buckets into fused
 /// [`crate::gemm::GemmEngine::gemm_batch`] epochs, and answers every
-/// member's reply channel. Returns its metrics at exit for the shutdown
-/// merge.
+/// member's reply channel. Entries whose deadline expired while parked
+/// are dropped with [`DlaError::Timeout`]; a panicking fused dispatch is
+/// isolated with `catch_unwind` and every member answered with
+/// [`DlaError::Internal`] (the batcher thread survives). Returns its
+/// metrics at exit for the shutdown merge.
 fn batcher_loop(
     queue: Arc<BatchQueue>,
     arch: Arch,
@@ -267,21 +372,57 @@ fn batcher_loop(
     if let Some(pool) = pool {
         co = co.with_pool(pool);
     }
-    while let Some(mut entries) = queue.next_batch() {
+    while let Some(batch) = queue.next_batch() {
+        // Deadline-expired entries get a Timeout, not a late answer.
+        let now = Instant::now();
+        let (mut entries, expired): (Vec<_>, Vec<_>) =
+            batch.into_iter().partition(|e| e.deadline.is_none_or(|d| now < d));
+        for e in expired {
+            let fm = co.metrics.faults_mut();
+            fm.timeouts += 1;
+            fm.expired_in_queue += 1;
+            let _ = e.reply.send(Err(DlaError::Timeout {
+                waited_ms: e.enqueued.elapsed().as_millis() as u64,
+            }));
+        }
+        if entries.is_empty() {
+            continue;
+        }
         let t0 = Instant::now();
         let waits: Vec<u64> =
             entries.iter().map(|e| t0.duration_since(e.enqueued).as_nanos() as u64).collect();
-        let mut items: Vec<GemmBatchItem<'_>> = entries
-            .iter_mut()
-            .map(|e| {
-                let DlaRequest::Gemm { alpha, a, b, beta, c } = &mut e.req else {
-                    unreachable!("only Gemm requests are admitted");
+        let dispatch = catch_unwind(AssertUnwindSafe(|| {
+            let mut items: Vec<GemmBatchItem<'_>> = entries
+                .iter_mut()
+                .map(|e| {
+                    let DlaRequest::Gemm { alpha, a, b, beta, c } = &mut e.req else {
+                        unreachable!("only Gemm requests are admitted");
+                    };
+                    GemmBatchItem {
+                        alpha: *alpha,
+                        a: a.view(),
+                        b: b.view(),
+                        beta: *beta,
+                        c: c.view_mut(),
+                    }
+                })
+                .collect();
+            co.engine.gemm_batch(&mut items)
+        }));
+        let configs = match dispatch {
+            Ok(configs) => configs,
+            Err(payload) => {
+                // Isolate the panic: answer every member, keep serving.
+                co.metrics.faults_mut().worker_panics += 1;
+                let err = DlaError::Internal {
+                    reason: format!("fused dispatch panicked: {}", panic_reason(&*payload)),
                 };
-                GemmBatchItem { alpha: *alpha, a: a.view(), b: b.view(), beta: *beta, c: c.view_mut() }
-            })
-            .collect();
-        let configs = co.engine.gemm_batch(&mut items);
-        drop(items);
+                for e in entries {
+                    let _ = e.reply.send(Err(err.clone()));
+                }
+                continue;
+            }
+        };
         let dt = t0.elapsed().as_secs_f64();
         co.metrics.record_batch_dispatch(entries.len(), &waits);
         for (e, cfg) in entries.into_iter().zip(configs) {
@@ -303,12 +444,76 @@ fn batcher_loop(
     co.metrics
 }
 
+/// Serve one request on a worker thread with panic isolation and the
+/// degraded-mode ladder: while the shared degraded budget is armed, the
+/// request runs on a lazily created pool-less serial coordinator
+/// (bitwise identical, reduced throughput); a handler panic is caught,
+/// answered with [`DlaError::Internal`], and arms the budget.
+fn serve_one(
+    co: &mut Coordinator,
+    serial: &mut Option<Coordinator>,
+    degraded: &AtomicU64,
+    arch: &Arch,
+    mode: &ConfigMode,
+    req: DlaRequest,
+    reply: &mpsc::Sender<Result<DlaResponse, DlaError>>,
+) {
+    let use_degraded = degraded.load(Ordering::Relaxed) > 0
+        && degraded
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| n.checked_sub(1))
+            .is_ok();
+    let outcome = {
+        let target: &mut Coordinator = if use_degraded {
+            serial.get_or_insert_with(|| Coordinator::new(arch.clone(), mode.clone()))
+        } else {
+            co
+        };
+        catch_unwind(AssertUnwindSafe(|| target.handle(req)))
+    };
+    match outcome {
+        Ok(resp) => {
+            if use_degraded {
+                co.metrics.faults_mut().degraded_requests += 1;
+            }
+            let _ = reply.send(resp);
+        }
+        Err(payload) => {
+            // By the time the panic reached us the pool already ran its
+            // epoch recovery (poison cleared, workspaces reset) — see
+            // runtime::pool. Isolate, arm the degraded window, answer.
+            co.metrics.faults_mut().worker_panics += 1;
+            degraded.fetch_max(DEGRADED_WINDOW, Ordering::AcqRel);
+            let _ = reply.send(Err(DlaError::Internal {
+                reason: format!("request handler panicked: {}", panic_reason(&*payload)),
+            }));
+        }
+    }
+}
+
+/// Submit-side fault counters (bumped on the caller's thread, where no
+/// worker metrics object exists), merged into [`Metrics`] at shutdown.
+#[derive(Default)]
+struct SubmitCounters {
+    invalid_inputs: AtomicU64,
+    retries: AtomicU64,
+    queue_full_rejections: AtomicU64,
+    timeouts: AtomicU64,
+    workers_lost: AtomicU64,
+}
+
 /// A running coordinator server.
 pub struct CoordinatorServer {
     tx: Option<mpsc::SyncSender<Job>>,
     handles: Vec<thread::JoinHandle<Metrics>>,
     batch_queue: Option<Arc<BatchQueue>>,
     batch_handle: Option<thread::JoinHandle<Metrics>>,
+    deadline: Option<Duration>,
+    faults: Option<Arc<FaultState>>,
+    counters: Arc<SubmitCounters>,
+    /// splitmix64 state for backoff jitter (no RNG dependency; the
+    /// constant seed is fine — jitter decorrelates concurrent
+    /// submitters, it does not need to be unpredictable).
+    jitter_seed: AtomicU64,
 }
 
 impl CoordinatorServer {
@@ -317,16 +522,27 @@ impl CoordinatorServer {
     /// batching enabled, one batcher thread draining the admission
     /// queue).
     ///
-    /// Panics **on the caller's thread** when the pinned lookahead
-    /// policy is invalid for `gemm_threads` — otherwise the engine-level
-    /// validation would fire inside every detached worker and the
-    /// misconfiguration would only surface as dead request channels.
-    pub fn start(cfg: ServerConfig) -> Self {
+    /// Fails **on the caller's thread** with [`DlaError::InvalidInput`]
+    /// when the pinned lookahead policy is invalid for `gemm_threads` —
+    /// otherwise the engine-level validation would fire inside every
+    /// detached worker and the misconfiguration would only surface as
+    /// dead request channels.
+    pub fn start(cfg: ServerConfig) -> Result<Self, DlaError> {
         if let Some(la) = cfg.lookahead {
             if let Err(e) = la.validate(cfg.gemm_threads.max(1)) {
-                panic!("invalid lookahead policy for this server config: {e}");
+                return Err(DlaError::InvalidInput {
+                    reason: format!("invalid lookahead policy for this server config: {e}"),
+                });
             }
         }
+        // Pinned plan/deadline win; un-pinned servers take the env
+        // overrides (DLA_FAULTS / DLA_DEADLINE_MS).
+        let faults = cfg
+            .faults
+            .clone()
+            .map(|p| Arc::new(FaultState::new(p)))
+            .or_else(FaultState::from_env);
+        let deadline = cfg.deadline.or_else(deadline_from_env);
         // A pinned batching policy always wins (so BatchPolicy::disabled()
         // really disables); un-pinned servers take the env override. On a
         // 1-thread pool admission can never succeed (is_batchable needs a
@@ -339,10 +555,13 @@ impl CoordinatorServer {
         let batch_queue =
             batching.map(|policy| Arc::new(BatchQueue::new(policy, cfg.queue_depth)));
         let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
-        let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
-        let gemm_pool =
-            (cfg.gemm_threads > 1).then(|| Arc::new(WorkerPool::new(cfg.gemm_threads)));
+        let rx = Arc::new(Mutex::new(rx));
+        // The shared pool consults the same armed fault state as the
+        // server, so `panic@R:E` shots land inside real pooled epochs.
+        let gemm_pool = (cfg.gemm_threads > 1)
+            .then(|| Arc::new(WorkerPool::with_fault_state(cfg.gemm_threads, faults.clone())));
         let gemm_threads = cfg.gemm_threads.max(1);
+        let degraded = Arc::new(AtomicU64::new(0));
         let mut handles = Vec::new();
         for i in 0..cfg.workers {
             let rx = rx.clone();
@@ -351,94 +570,252 @@ impl CoordinatorServer {
             let pool = gemm_pool.clone();
             let lookahead = cfg.lookahead;
             let queue = batch_queue.clone();
-            handles.push(
-                thread::Builder::new()
-                    .name(format!("dla-worker-{i}"))
-                    .spawn(move || {
-                        let mut co = Coordinator::new(arch, mode);
-                        if let Some(pool) = pool {
-                            co = co.with_pool(pool);
+            let faults = faults.clone();
+            let degraded = degraded.clone();
+            let handle = thread::Builder::new()
+                .name(format!("dla-worker-{i}"))
+                .spawn(move || {
+                    let mut co = Coordinator::new(arch.clone(), mode.clone());
+                    if let Some(pool) = pool {
+                        co = co.with_pool(pool);
+                    }
+                    if let Some(la) = lookahead {
+                        co = co.with_lookahead(la);
+                    }
+                    // The degraded fallback coordinator: pool-less,
+                    // created lazily on the first degraded request.
+                    let mut serial: Option<Coordinator> = None;
+                    // Per-worker admission memo (scorer runs once per
+                    // distinct shape, not once per request).
+                    let planner = BatchPlanner::new();
+                    loop {
+                        // Hold the lock only while receiving; a
+                        // poisoned lock (a sibling died mid-recv) must
+                        // not take this worker down with it.
+                        let job = {
+                            rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner).recv()
+                        };
+                        let Job { req, submitted, deadline, reply } = match job {
+                            Ok(j) => j,
+                            Err(_) => break, // channel closed: drain done
+                        };
+                        if let Some(f) = &faults {
+                            f.stall_request();
                         }
-                        if let Some(la) = lookahead {
-                            co = co.with_lookahead(la);
+                        // Deadline already blown in the queue: drop the
+                        // request instead of serving it late.
+                        if deadline.is_some_and(|d| Instant::now() >= d) {
+                            let fm = co.metrics.faults_mut();
+                            fm.timeouts += 1;
+                            fm.expired_in_queue += 1;
+                            let _ = reply.send(Err(DlaError::Timeout {
+                                waited_ms: submitted.elapsed().as_millis() as u64,
+                            }));
+                            continue;
                         }
-                        // Per-worker admission memo (scorer runs once per
-                        // distinct shape, not once per request).
-                        let planner = BatchPlanner::new();
-                        loop {
-                            // Hold the lock only while receiving.
-                            let job = { rx.lock().unwrap().recv() };
-                            match job {
-                                Ok((req, reply)) => {
-                                    // Admission: route model-judged-small,
-                                    // well-formed GEMMs into the batcher;
-                                    // everything else (factorizations,
-                                    // large GEMMs) keeps the solo path.
-                                    if let Some(q) = &queue {
-                                        if let Some(dims) = req.gemm_dims() {
-                                            let admit = req.gemm_shape_consistent()
-                                                && planner.is_batchable(
-                                                    &co.engine.arch,
-                                                    co.engine.plan_config(dims),
-                                                    dims,
-                                                    gemm_threads,
-                                                    &q.policy,
-                                                );
-                                            if admit {
-                                                let entry = PendingGemm {
-                                                    req,
-                                                    reply,
-                                                    enqueued: Instant::now(),
-                                                };
-                                                if let Err(e) = q.try_enqueue(dims, entry) {
-                                                    // Queue at its backpressure
-                                                    // bound (or closed): serve
-                                                    // solo.
-                                                    let resp = co.handle(e.req);
-                                                    let _ = e.reply.send(resp);
-                                                }
-                                                continue;
-                                            }
-                                        }
+                        // Admission: route model-judged-small,
+                        // well-formed GEMMs into the batcher;
+                        // everything else (factorizations, large
+                        // GEMMs, deadline-tight requests) keeps the
+                        // solo path.
+                        if let Some(q) = &queue {
+                            if let Some(dims) = req.gemm_dims() {
+                                let remaining = deadline
+                                    .map(|d| d.saturating_duration_since(Instant::now()));
+                                let admit = req.gemm_shape_consistent()
+                                    && q.policy.fits_deadline(remaining)
+                                    && planner.is_batchable(
+                                        &co.engine.arch,
+                                        co.engine.plan_config(dims),
+                                        dims,
+                                        gemm_threads,
+                                        &q.policy,
+                                    );
+                                if admit {
+                                    let entry = PendingGemm {
+                                        req,
+                                        reply,
+                                        enqueued: Instant::now(),
+                                        deadline,
+                                    };
+                                    if let Err(e) = q.try_enqueue(dims, entry) {
+                                        // Queue at its backpressure
+                                        // bound (or closed): serve solo.
+                                        serve_one(
+                                            &mut co, &mut serial, &degraded, &arch, &mode,
+                                            e.req, &e.reply,
+                                        );
                                     }
-                                    let resp = co.handle(req);
-                                    let _ = reply.send(resp);
+                                    continue;
                                 }
-                                Err(_) => break, // channel closed: drain done
                             }
                         }
-                        co.metrics
-                    })
-                    .expect("spawning server worker"),
-            );
+                        serve_one(&mut co, &mut serial, &degraded, &arch, &mode, req, &reply);
+                    }
+                    co.snapshot_pool_stats();
+                    if let Some(s) = serial {
+                        co.metrics.merge(s.metrics);
+                    }
+                    co.metrics
+                })
+                .map_err(|e| DlaError::Internal {
+                    reason: format!("spawning server worker: {e}"),
+                })?;
+            handles.push(handle);
         }
-        let batch_handle = batch_queue.as_ref().map(|q| {
-            let queue = Arc::clone(q);
-            let arch = cfg.arch.clone();
-            let mode = cfg.mode.clone();
-            let pool = gemm_pool.clone();
-            thread::Builder::new()
-                .name("dla-batcher".to_string())
-                .spawn(move || batcher_loop(queue, arch, mode, pool))
-                .expect("spawning batcher")
-        });
-        Self { tx: Some(tx), handles, batch_queue, batch_handle }
+        let batch_handle = match batch_queue.as_ref() {
+            None => None,
+            Some(q) => {
+                let queue = Arc::clone(q);
+                let arch = cfg.arch.clone();
+                let mode = cfg.mode.clone();
+                let pool = gemm_pool.clone();
+                Some(
+                    thread::Builder::new()
+                        .name("dla-batcher".to_string())
+                        .spawn(move || batcher_loop(queue, arch, mode, pool))
+                        .map_err(|e| DlaError::Internal {
+                            reason: format!("spawning batcher: {e}"),
+                        })?,
+                )
+            }
+        };
+        Ok(Self {
+            tx: Some(tx),
+            handles,
+            batch_queue,
+            batch_handle,
+            deadline,
+            faults,
+            counters: Arc::new(SubmitCounters::default()),
+            jitter_seed: AtomicU64::new(0x243F_6A88_85A3_08D3),
+        })
+    }
+
+    /// The armed fault state, if any (chaos tests assert delivered-shot
+    /// counters through this).
+    pub fn fault_state(&self) -> Option<Arc<FaultState>> {
+        self.faults.clone()
+    }
+
+    /// splitmix64 step for backoff jitter.
+    fn jitter(&self) -> u64 {
+        let x = self
+            .jitter_seed
+            .fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed)
+            .wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = x;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Jittered exponential backoff for admission retries: attempt `n`
+    /// sleeps in `[base/2, base]` with `base = 100µs · 2ⁿ`, capped at
+    /// 10 ms. Jitter decorrelates submitters hammering a full queue.
+    fn backoff(&self, attempt: u32) -> Duration {
+        const BASE_US: u64 = 100;
+        const CAP_US: u64 = 10_000;
+        let base = BASE_US.saturating_mul(1u64 << attempt.min(16)).min(CAP_US);
+        Duration::from_micros(base / 2 + self.jitter() % (base / 2 + 1))
     }
 
     /// Submit a request; returns a receiver for the response.
-    pub fn submit(&self, req: DlaRequest) -> mpsc::Receiver<anyhow::Result<DlaResponse>> {
+    ///
+    /// Fails fast with [`DlaError::InvalidInput`] on malformed requests
+    /// (before consuming any queue capacity), retries a full queue with
+    /// bounded jittered backoff before giving up with
+    /// [`DlaError::QueueFull`], and reports a dead worker side as
+    /// [`DlaError::WorkerLost`] (not retried — the request cannot be
+    /// safely replayed once ownership moved). With a deadline armed,
+    /// backoff never sleeps past the deadline ([`DlaError::Timeout`]).
+    pub fn submit(
+        &self,
+        req: DlaRequest,
+    ) -> Result<mpsc::Receiver<Result<DlaResponse, DlaError>>, DlaError> {
+        if let Err(e) = req.validate() {
+            self.counters.invalid_inputs.fetch_add(1, Ordering::Relaxed);
+            return Err(e);
+        }
+        let tx = match &self.tx {
+            Some(tx) => tx,
+            None => {
+                return Err(DlaError::Internal { reason: "server already shut down".to_string() })
+            }
+        };
+        let submitted = Instant::now();
+        let deadline = self.deadline.map(|d| submitted + d);
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("server already shut down")
-            .send((req, reply_tx))
-            .expect("worker pool gone");
-        reply_rx
+        let mut job = Job { req, submitted, deadline, reply: reply_tx };
+        let mut attempt: u32 = 0;
+        loop {
+            // An injected queue-full (chaos drill) consumes an attempt
+            // exactly like a real full channel.
+            let forced = self.faults.as_deref().is_some_and(FaultState::admission_queue_full);
+            if !forced {
+                match tx.try_send(job) {
+                    Ok(()) => return Ok(reply_rx),
+                    Err(mpsc::TrySendError::Full(j)) => job = j,
+                    Err(mpsc::TrySendError::Disconnected(_)) => {
+                        self.counters.workers_lost.fetch_add(1, Ordering::Relaxed);
+                        return Err(DlaError::WorkerLost {
+                            reason: "request channel disconnected (no live workers)".to_string(),
+                        });
+                    }
+                }
+            }
+            attempt += 1;
+            self.counters.retries.fetch_add(1, Ordering::Relaxed);
+            if attempt >= MAX_ADMISSION_ATTEMPTS {
+                self.counters.queue_full_rejections.fetch_add(1, Ordering::Relaxed);
+                return Err(DlaError::QueueFull { retries: attempt });
+            }
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                self.counters.timeouts.fetch_add(1, Ordering::Relaxed);
+                return Err(DlaError::Timeout {
+                    waited_ms: submitted.elapsed().as_millis() as u64,
+                });
+            }
+            thread::sleep(self.backoff(attempt));
+        }
     }
 
-    /// Submit and wait.
-    pub fn call(&self, req: DlaRequest) -> anyhow::Result<DlaResponse> {
-        self.submit(req).recv().expect("worker dropped reply channel")
+    /// Submit and wait. With a deadline armed the wait is bounded: a
+    /// response that does not arrive in time yields
+    /// [`DlaError::Timeout`] instead of blocking forever on a stalled
+    /// or dead worker.
+    pub fn call(&self, req: DlaRequest) -> Result<DlaResponse, DlaError> {
+        let submitted = Instant::now();
+        let rx = self.submit(req)?;
+        match self.deadline {
+            None => match rx.recv() {
+                Ok(resp) => resp,
+                Err(_) => {
+                    self.counters.workers_lost.fetch_add(1, Ordering::Relaxed);
+                    Err(DlaError::WorkerLost {
+                        reason: "worker dropped the reply channel".to_string(),
+                    })
+                }
+            },
+            Some(d) => {
+                let remaining = (submitted + d).saturating_duration_since(Instant::now());
+                match rx.recv_timeout(remaining) {
+                    Ok(resp) => resp,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        self.counters.timeouts.fetch_add(1, Ordering::Relaxed);
+                        Err(DlaError::Timeout {
+                            waited_ms: submitted.elapsed().as_millis() as u64,
+                        })
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        self.counters.workers_lost.fetch_add(1, Ordering::Relaxed);
+                        Err(DlaError::WorkerLost {
+                            reason: "worker dropped the reply channel".to_string(),
+                        })
+                    }
+                }
+            }
+        }
     }
 
     /// Shut down and merge worker (and batcher) metrics.
@@ -458,21 +835,39 @@ impl CoordinatorServer {
     ///    makes the batcher flush every pending bucket immediately —
     ///    ignoring the coalescing wait — answer the replies, and exit.
     ///
+    /// Shutdown is poison-tolerant: a worker that died to an unhandled
+    /// panic is counted in `workers_lost` (the survivors' metrics still
+    /// merge) instead of propagating the panic to the caller.
+    ///
     /// The returned metrics merge every worker's counters plus the
     /// batcher's (batched GEMM latencies, [`super::metrics::BatchMetrics`],
-    /// and the latest shared-pool idle snapshot).
+    /// the latest shared-pool idle snapshot, and the submit-side fault
+    /// counters).
     pub fn shutdown(mut self) -> Metrics {
         drop(self.tx.take());
         let mut all = Metrics::new();
         for h in self.handles.drain(..) {
-            all.merge(h.join().expect("worker panicked"));
+            match h.join() {
+                Ok(m) => all.merge(m),
+                Err(_) => all.faults_mut().workers_lost += 1,
+            }
         }
         if let Some(q) = self.batch_queue.take() {
             q.close();
         }
         if let Some(h) = self.batch_handle.take() {
-            all.merge(h.join().expect("batcher panicked"));
+            match h.join() {
+                Ok(m) => all.merge(m),
+                Err(_) => all.faults_mut().workers_lost += 1,
+            }
         }
+        let c = &self.counters;
+        let f = all.faults_mut();
+        f.invalid_inputs += c.invalid_inputs.load(Ordering::Relaxed);
+        f.retries += c.retries.load(Ordering::Relaxed);
+        f.queue_full_rejections += c.queue_full_rejections.load(Ordering::Relaxed);
+        f.timeouts += c.timeouts.load(Ordering::Relaxed);
+        f.workers_lost += c.workers_lost.load(Ordering::Relaxed);
         all
     }
 }
@@ -494,6 +889,7 @@ impl Drop for CoordinatorServer {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::arch::host_xeon;
@@ -511,24 +907,27 @@ mod tests {
 
     #[test]
     fn server_round_trip() {
-        let server = CoordinatorServer::start(ServerConfig::new(host_xeon(), ConfigMode::Refined));
+        let server =
+            CoordinatorServer::start(ServerConfig::new(host_xeon(), ConfigMode::Refined)).unwrap();
         let mut rng = Pcg64::seed(9);
         let resp = server.call(gemm_req(&mut rng, 30, 20, 10)).unwrap();
         assert!(resp.seconds() >= 0.0);
         let metrics = server.shutdown();
         assert_eq!(metrics.count("gemm"), 1);
+        assert!(metrics.fault_stats().is_clean(), "healthy run must report no faults");
     }
 
     #[test]
     fn server_multiple_workers_process_all() {
         let server = CoordinatorServer::start(
             ServerConfig::new(host_xeon(), ConfigMode::Refined).with_workers(3),
-        );
+        )
+        .unwrap();
         let mut rng = Pcg64::seed(10);
         let mut pending = Vec::new();
         for i in 0..12 {
             let sz = 16 + (i % 4) * 8;
-            pending.push(server.submit(gemm_req(&mut rng, sz, sz, 8)));
+            pending.push(server.submit(gemm_req(&mut rng, sz, sz, 8)).unwrap());
         }
         for rx in pending {
             rx.recv().unwrap().unwrap();
@@ -543,11 +942,12 @@ mod tests {
             ServerConfig::new(host_xeon(), ConfigMode::Refined)
                 .with_workers(2)
                 .with_gemm_threads(3),
-        );
+        )
+        .unwrap();
         let mut rng = Pcg64::seed(11);
         let mut pending = Vec::new();
         for _ in 0..6 {
-            pending.push(server.submit(gemm_req(&mut rng, 48, 40, 16)));
+            pending.push(server.submit(gemm_req(&mut rng, 48, 40, 16)).unwrap());
         }
         for rx in pending {
             rx.recv().unwrap().unwrap();
@@ -562,7 +962,8 @@ mod tests {
             ServerConfig::new(host_xeon(), ConfigMode::Refined)
                 .with_gemm_threads(3)
                 .with_lookahead(Lookahead { depth: 1, panel_workers: 1 }),
-        );
+        )
+        .unwrap();
         let mut rng = Pcg64::seed(12);
         let a = MatrixF64::random_diag_dominant(64, &mut rng);
         let resp = server.call(DlaRequest::LuFactor { a: a.clone(), block: 16 }).unwrap();
@@ -575,15 +976,20 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "invalid lookahead policy for this server config")]
     fn server_rejects_invalid_lookahead_up_front() {
-        // The panic must fire on the caller's thread at start(), not
-        // inside detached workers.
-        let _ = CoordinatorServer::start(
+        // The typed error must come back on the caller's thread from
+        // start(), not surface inside detached workers.
+        let err = CoordinatorServer::start(
             ServerConfig::new(host_xeon(), ConfigMode::Refined)
                 .with_gemm_threads(3)
                 .with_lookahead(Lookahead { depth: 1, panel_workers: 3 }),
-        );
+        )
+        .err()
+        .expect("invalid lookahead must fail start()");
+        let DlaError::InvalidInput { reason } = err else {
+            panic!("expected InvalidInput, got {err:?}")
+        };
+        assert!(reason.contains("lookahead"), "{reason}");
     }
 
     #[test]
@@ -596,23 +1002,26 @@ mod tests {
             ServerConfig::new(host_xeon(), ConfigMode::Refined)
                 .with_workers(2)
                 .with_gemm_threads(3),
-        );
+        )
+        .unwrap();
         let mut rng = Pcg64::seed(31);
-        let g64 = server.submit(gemm_req(&mut rng, 64, 48, 16));
+        let g64 = server.submit(gemm_req(&mut rng, 64, 48, 16)).unwrap();
         let a32 = MatrixF32::random(64, 24, &mut rng);
         let b32 = MatrixF32::random(24, 48, &mut rng);
-        let g32 = server.submit(DlaRequest::GemmF32 {
-            alpha: 1.0,
-            a: a32.clone(),
-            b: b32.clone(),
-            beta: 0.0,
-            c: MatrixF32::zeros(64, 48),
-        });
+        let g32 = server
+            .submit(DlaRequest::GemmF32 {
+                alpha: 1.0,
+                a: a32.clone(),
+                b: b32.clone(),
+                beta: 0.0,
+                c: MatrixF32::zeros(64, 48),
+            })
+            .unwrap();
         let a = crate::util::MatrixF64::random_diag_dominant(96, &mut rng);
         let x_true = crate::util::MatrixF64::random(96, 1, &mut rng);
         let mut rhs = crate::util::MatrixF64::zeros(96, 1);
         crate::gemm::gemm_reference(1.0, a.view(), x_true.view(), 0.0, &mut rhs.view_mut());
-        let mx = server.submit(DlaRequest::MixedSolve { a, rhs, block: 24 });
+        let mx = server.submit(DlaRequest::MixedSolve { a, rhs, block: 24 }).unwrap();
         g64.recv().unwrap().unwrap();
         let DlaResponse::MatrixF32 { result, .. } = g32.recv().unwrap().unwrap() else {
             panic!()
@@ -639,9 +1048,78 @@ mod tests {
 
     #[test]
     fn server_propagates_errors() {
-        let server = CoordinatorServer::start(ServerConfig::new(host_xeon(), ConfigMode::Refined));
+        let server =
+            CoordinatorServer::start(ServerConfig::new(host_xeon(), ConfigMode::Refined)).unwrap();
         let resp = server.call(DlaRequest::LuFactor { a: MatrixF64::zeros(6, 6), block: 2 });
-        assert!(resp.is_err());
+        assert_eq!(resp.err(), Some(DlaError::Singular { pivot: 0 }));
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_rejects_invalid_input_before_queueing() {
+        let server =
+            CoordinatorServer::start(ServerConfig::new(host_xeon(), ConfigMode::Refined)).unwrap();
+        let mut a = MatrixF64::zeros(4, 4);
+        a.set(1, 1, f64::NAN);
+        let err = server
+            .submit(DlaRequest::LuFactor { a, block: 2 })
+            .expect_err("NaN operand must be rejected at admission");
+        assert!(matches!(err, DlaError::InvalidInput { .. }), "{err:?}");
+        assert!(!err.is_transient(), "invalid input is not retryable");
+        let metrics = server.shutdown();
+        assert_eq!(metrics.count("lu"), 0, "the request must never reach a worker");
+        assert_eq!(metrics.fault_stats().invalid_inputs, 1);
+    }
+
+    #[test]
+    fn deadline_expires_a_stalled_request() {
+        // Worker stalls 300 ms on every dequeued request; the caller's
+        // deadline is 40 ms. call() must give up at the deadline with a
+        // typed Timeout, not block on the stalled worker.
+        let server = CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined)
+                .with_deadline(Duration::from_millis(40))
+                .with_faults(FaultPlan::parse("stall:300").unwrap()),
+        )
+        .unwrap();
+        let mut rng = Pcg64::seed(41);
+        let t0 = Instant::now();
+        let err = server.call(gemm_req(&mut rng, 16, 16, 8)).err().expect("must time out");
+        assert!(matches!(err, DlaError::Timeout { .. }), "{err:?}");
+        assert!(err.is_transient());
+        assert!(t0.elapsed() < Duration::from_millis(250), "call must not wait out the stall");
+        let metrics = server.shutdown();
+        let f = metrics.fault_stats();
+        // Caller-side timeout always fires; the worker may additionally
+        // have dropped it as expired-in-queue after the stall.
+        assert!(f.timeouts >= 1, "{f:?}");
+    }
+
+    #[test]
+    fn forced_queue_full_retries_then_rejects() {
+        // A burst longer than the retry budget: submit must retry with
+        // backoff, then reject with QueueFull carrying the retry count.
+        let server = CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined)
+                .with_faults(FaultPlan::parse("queuefull:100").unwrap()),
+        )
+        .unwrap();
+        let mut rng = Pcg64::seed(42);
+        let err = server.submit(gemm_req(&mut rng, 16, 16, 8)).expect_err("must reject");
+        assert_eq!(err, DlaError::QueueFull { retries: MAX_ADMISSION_ATTEMPTS });
+        assert!(err.is_transient());
+        // A burst shorter than the budget is absorbed by the retries.
+        let short = CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined)
+                .with_faults(FaultPlan::parse("queuefull:3").unwrap()),
+        )
+        .unwrap();
+        let rx = short.submit(gemm_req(&mut rng, 16, 16, 8)).expect("retries must absorb burst");
+        rx.recv().unwrap().unwrap();
+        let metrics = short.shutdown();
+        let f = metrics.fault_stats();
+        assert_eq!(f.retries, 3, "{f:?}");
+        assert_eq!(f.queue_full_rejections, 0, "{f:?}");
         server.shutdown();
     }
 
@@ -654,12 +1132,15 @@ mod tests {
             ServerConfig::new(host_xeon(), ConfigMode::Refined)
                 .with_workers(2)
                 .with_gemm_threads(3)
-                .with_batching(BatchPolicy::default().with_max_batch(4).with_wait_us(5_000_000).admit_all()),
-        );
+                .with_batching(
+                    BatchPolicy::default().with_max_batch(4).with_wait_us(5_000_000).admit_all(),
+                ),
+        )
+        .unwrap();
         let mut rng = Pcg64::seed(21);
         let mut pending = Vec::new();
         for _ in 0..8 {
-            pending.push(server.submit(gemm_req(&mut rng, 24, 24, 12)));
+            pending.push(server.submit(gemm_req(&mut rng, 24, 24, 12)).unwrap());
         }
         // Shutdown drains everything (including a not-yet-full remainder
         // bucket), so the replies are all available afterwards.
@@ -695,6 +1176,7 @@ mod tests {
             },
             reply: mpsc::channel().0,
             enqueued: Instant::now(),
+            deadline: None,
         };
         assert!(q.try_enqueue(dims, entry()).is_ok());
         assert!(q.try_enqueue(dims, entry()).is_ok());
@@ -706,6 +1188,30 @@ mod tests {
     }
 
     #[test]
+    fn tight_deadlines_bypass_the_batcher() {
+        // An hour-long coalescing window with a 100 ms deadline: a
+        // batched request would park past its deadline, so the
+        // fits_deadline gate must route it to the solo path, where it
+        // is served promptly.
+        let server = CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined)
+                .with_gemm_threads(3)
+                .with_deadline(Duration::from_millis(30_000))
+                .with_batching(BatchPolicy::default().with_wait_us(3_600_000_000).admit_all()),
+        )
+        .unwrap();
+        let mut rng = Pcg64::seed(43);
+        server.call(gemm_req(&mut rng, 24, 24, 12)).unwrap();
+        let metrics = server.shutdown();
+        assert_eq!(metrics.count("gemm"), 1);
+        assert_eq!(
+            metrics.batch_stats().total_requests(),
+            0,
+            "deadline-tight gemm must not park in the batcher"
+        );
+    }
+
+    #[test]
     fn pinned_disabled_batching_beats_env() {
         // BatchPolicy::disabled() must force the solo path even when the
         // CI matrix exports DLA_BATCH=1.
@@ -713,7 +1219,8 @@ mod tests {
             ServerConfig::new(host_xeon(), ConfigMode::Refined)
                 .with_gemm_threads(3)
                 .with_batching(BatchPolicy::disabled()),
-        );
+        )
+        .unwrap();
         let mut rng = Pcg64::seed(22);
         server.call(gemm_req(&mut rng, 24, 24, 12)).unwrap();
         let metrics = server.shutdown();
@@ -730,7 +1237,8 @@ mod tests {
             ServerConfig::new(host_xeon(), ConfigMode::Refined)
                 .with_gemm_threads(3)
                 .with_batching(BatchPolicy::default().with_wait_us(3_600_000_000).admit_all()),
-        );
+        )
+        .unwrap();
         let mut rng = Pcg64::seed(23);
         let a = MatrixF64::random_diag_dominant(48, &mut rng);
         let resp = server.call(DlaRequest::LuFactor { a: a.clone(), block: 16 }).unwrap();

@@ -184,6 +184,12 @@ fn apply_panel_swaps<E: Elem>(
 /// the fused lookahead pipeline (see the module docs); results are
 /// bitwise identical either way.
 ///
+/// Returns `Err(col)` when the factorization breaks down at global
+/// column `col`: the pivot search found an exact zero **or a non-finite
+/// value** (NaN/Inf inputs poison the pivot column — see
+/// [`super::pfact::getf2`]). The coordinator surfaces this as
+/// `DlaError::Singular { pivot: col }`.
+///
 /// The engine amortizes two costs across the factorization sweep: its
 /// persistent worker pool (parallel plans spawn threads once, not per
 /// trailing update) and its config-selection memo cache (each distinct
@@ -449,7 +455,9 @@ fn lu_blocked_lookahead<E: GemmElem>(
     Ok(pivots)
 }
 
-/// Convenience wrapper returning [`LuFactors`] (FP64).
+/// Convenience wrapper returning [`LuFactors`] (FP64). Inherits the
+/// breakdown contract of [`lu_blocked`]: `Err(col)` on a zero or
+/// non-finite pivot at global column `col`.
 pub fn lu_factor(a0: &MatrixF64, block: usize, engine: &mut GemmEngine) -> Result<LuFactors, usize> {
     lu_factor_t::<f64>(a0, block, engine)
 }

@@ -114,7 +114,10 @@ impl<E: Elem> SharedPanel<E> {
 /// convention, 0-based).
 ///
 /// Returns `Err(j)` if an exact zero pivot is met at column j (matrix
-/// singular to working precision).
+/// singular to working precision), or if the selected pivot is
+/// non-finite (NaN/Inf contamination): a NaN pivot would otherwise
+/// poison every multiplier it scales and surface as a nonsense result
+/// instead of a typed breakdown.
 pub fn getf2<E: Elem>(a: &mut MatViewMut<'_, E>, pivots: &mut [usize]) -> Result<(), usize> {
     let p = a.rows;
     let q = a.cols;
@@ -132,7 +135,7 @@ pub fn getf2<E: Elem>(a: &mut MatViewMut<'_, E>, pivots: &mut [usize]) -> Result
             }
         }
         pivots[j] = imax;
-        if vmax == E::ZERO {
+        if vmax == E::ZERO || !vmax.to_f64().is_finite() {
             return Err(j);
         }
         // Swap rows j and imax across the whole panel.
@@ -270,7 +273,9 @@ pub fn getf2_team<E: Elem>(
                 }
             }
             pivots_out[j].store(imax, Ordering::Release);
-            if vmax == E::ZERO {
+            // Same breakdown condition as `getf2`: exact zero or a
+            // non-finite pivot both end the factorization at column j.
+            if vmax == E::ZERO || !vmax.to_f64().is_finite() {
                 err.store(j, Ordering::Release);
             }
         }
@@ -396,6 +401,24 @@ mod tests {
         a[(0, 2)] = 3.0;
         let mut piv = vec![0usize; 3];
         assert_eq!(getf2(&mut a.view_mut(), &mut piv), Err(1));
+    }
+
+    #[test]
+    fn getf2_treats_non_finite_pivot_as_breakdown() {
+        // A NaN on the diagonal wins no comparison, so it stays the
+        // selected pivot; the factorization must stop with a typed
+        // breakdown at that column rather than scale by NaN.
+        let mut rng = Pcg64::seed(103);
+        let mut a = MatrixF64::random(6, 6, &mut rng);
+        a[(2, 2)] = f64::NAN;
+        // Make column 2 otherwise tiny so the NaN slot is the argmax seed.
+        for i in 0..6 {
+            if i != 2 {
+                a[(i, 2)] = 0.0;
+            }
+        }
+        let mut piv = vec![0usize; 6];
+        assert_eq!(getf2(&mut a.view_mut(), &mut piv), Err(2));
     }
 
     #[test]

@@ -132,8 +132,12 @@ pub fn lu_solve_mixed(
             // A healthy refinement contracts the residual by
             // ~cond(A) * eps_f32 per pass; anything above half the
             // previous residual means the f32 factors cannot drive the
-            // error down and the loop would just burn GEMMs.
-            stalled = next > 0.5 * prev;
+            // error down and the loop would just burn GEMMs. A NaN/Inf
+            // residual (overflowed f32 corrections) stalls explicitly —
+            // NaN loses every `>` comparison, so without this guard the
+            // exit would hinge on the loop condition's NaN semantics
+            // instead of a deliberate bail to the clean f64 fallback.
+            stalled = !next.is_finite() || next > 0.5 * prev;
             rel = next;
             r = next_r;
         }

@@ -104,6 +104,21 @@ impl BatchPolicy {
         Duration::from_micros(self.wait_us)
     }
 
+    /// Deadline-aware admission: may a request with this much time left
+    /// afford to park in the admission queue? A batched request can wait
+    /// up to the full coalescing window before its fused dispatch even
+    /// starts, so anything with less than **twice** the window remaining
+    /// (window + dispatch slack) must bypass the batcher and be served
+    /// solo — coalescing trades latency for throughput, and a deadline
+    /// caps how much latency the caller is willing to trade.
+    /// `None` (no deadline) always fits.
+    pub fn fits_deadline(&self, remaining: Option<Duration>) -> bool {
+        match remaining {
+            None => true,
+            Some(r) => r > self.wait().saturating_mul(2),
+        }
+    }
+
     /// Environment override for un-pinned servers: `DLA_BATCH` unset /
     /// empty / `0` / `off` / `false` means no batching; `1` / `on` /
     /// `true` enable with the default trigger; a number `>= 2` sets
@@ -297,6 +312,16 @@ mod tests {
         assert!(!BatchPolicy::disabled().enabled());
         assert!(!BatchPolicy::default().with_max_batch(1).enabled());
         assert!(BatchPolicy::default().admit_all().small_seconds.is_infinite());
+    }
+
+    #[test]
+    fn deadline_gates_batched_admission() {
+        let p = BatchPolicy::default().with_wait_us(1_000); // 1 ms window
+        assert!(p.fits_deadline(None), "no deadline always fits");
+        assert!(p.fits_deadline(Some(Duration::from_millis(50))));
+        // Less than twice the window left: must bypass the batcher.
+        assert!(!p.fits_deadline(Some(Duration::from_millis(2))));
+        assert!(!p.fits_deadline(Some(Duration::ZERO)));
     }
 
     #[test]

@@ -1,0 +1,288 @@
+//! Fault injection for the chaos test suite and for staging drills.
+//!
+//! A [`FaultPlan`] describes *which* failures to inject — a one-shot
+//! panic at a given (rank, epoch), a per-job delay on one rank, a
+//! per-request stall in the server worker, a burst of forced queue-full
+//! rejections at admission — and a [`FaultState`] arms the plan with the
+//! one-shot/count-down bookkeeping. The pool and the coordinator server
+//! consult the armed state at three hook points:
+//!
+//! - [`FaultState::before_job`] — called by every rank **inside** the
+//!   pool's `catch_unwind` region, so an injected panic unwinds through
+//!   exactly the machinery a real job panic does (barrier poisoning,
+//!   drain, typed `EpochError`).
+//! - [`FaultState::stall_request`] — called by a server worker before
+//!   handling a dequeued request (exercises deadline expiry).
+//! - [`FaultState::admission_queue_full`] — consulted by `submit` before
+//!   the real `try_send` (exercises backpressure retries).
+//!
+//! The hooks are **free when no plan is armed**: the pool stores
+//! `Option<Arc<FaultState>>` and every hook site is a single `Option`
+//! check per *job* or per *request* — never per element — so release
+//! builds without `DLA_FAULTS` pay one branch on paths that are already
+//! dominated by locking. No cargo feature is needed.
+//!
+//! # `DLA_FAULTS` grammar
+//!
+//! Comma-separated tokens; unknown tokens are ignored (a typo must fail
+//! toward "no fault injected", never toward a surprise panic):
+//!
+//! - `panic@R:E` — one-shot panic on rank `R` at the `E`-th broadcast
+//!   epoch (1-based, counted since pool construction; fires on the first
+//!   epoch `>= E` so the shot cannot be missed).
+//! - `slow@R:MS` — rank `R` sleeps `MS` milliseconds at the start of
+//!   every job (the asymmetric "slow core" drill).
+//! - `stall:MS` — every served request stalls `MS` milliseconds in the
+//!   worker before being handled.
+//! - `queuefull:N` — the next `N` admission attempts see a full queue.
+//! - `1` / `on` / `arm` — arm an empty plan (hooks active, no faults).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A declarative description of the faults to inject (see module docs
+/// for the `DLA_FAULTS` grammar that builds one from the environment).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// One-shot panic: (rank, 1-based epoch). Fires once, on the first
+    /// epoch `>=` the target, only on the named rank.
+    pub panic_at: Option<(usize, u64)>,
+    /// Per-job delay: (rank, milliseconds slept at the start of every
+    /// job on that rank).
+    pub slow: Option<(usize, u64)>,
+    /// Per-request stall in the server worker, in milliseconds.
+    pub stall_ms: Option<u64>,
+    /// Number of admission attempts forced to observe a full queue.
+    pub queue_full: u64,
+}
+
+impl FaultPlan {
+    /// Parse the `DLA_FAULTS` environment variable; `None` when unset,
+    /// empty, `0` or `off` (the hooks stay un-armed).
+    pub fn from_env() -> Option<Self> {
+        Self::parse(std::env::var("DLA_FAULTS").ok()?.as_str())
+    }
+
+    /// Parse a fault spec (the `DLA_FAULTS` grammar). `None` disarms.
+    pub fn parse(spec: &str) -> Option<Self> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "0" || spec.eq_ignore_ascii_case("off") {
+            return None;
+        }
+        let mut plan = FaultPlan::default();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if let Some(rest) = tok.strip_prefix("panic@") {
+                if let Some((r, e)) = parse_pair(rest) {
+                    plan.panic_at = Some((r as usize, e));
+                }
+            } else if let Some(rest) = tok.strip_prefix("slow@") {
+                if let Some((r, ms)) = parse_pair(rest) {
+                    plan.slow = Some((r as usize, ms));
+                }
+            } else if let Some(rest) = tok.strip_prefix("stall:") {
+                if let Ok(ms) = rest.parse::<u64>() {
+                    plan.stall_ms = Some(ms);
+                }
+            } else if let Some(rest) = tok.strip_prefix("queuefull:") {
+                if let Ok(n) = rest.parse::<u64>() {
+                    plan.queue_full = n;
+                }
+            }
+            // "1" / "on" / "arm" / anything unrecognized: armed, no-op.
+        }
+        Some(plan)
+    }
+
+    /// True when the plan injects nothing (armed hooks, zero faults).
+    pub fn is_empty(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+}
+
+fn parse_pair(s: &str) -> Option<(u64, u64)> {
+    let (a, b) = s.split_once(':')?;
+    Some((a.trim().parse().ok()?, b.trim().parse().ok()?))
+}
+
+/// Counts of faults actually delivered (not merely planned), for test
+/// assertions and the metrics `resilience:` line.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// One-shot panics fired.
+    pub panics: u64,
+    /// Slow-rank delays and request stalls slept.
+    pub delays: u64,
+    /// Admission attempts forced to see a full queue.
+    pub queue_full: u64,
+}
+
+/// An armed [`FaultPlan`]: the plan plus the one-shot / count-down state
+/// the hooks mutate. Shared (`Arc`) between a pool and the server that
+/// owns it so both consult the same shot counters.
+#[derive(Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    panic_fired: AtomicBool,
+    queue_full_left: AtomicU64,
+    panics: AtomicU64,
+    delays: AtomicU64,
+    queue_fulls: AtomicU64,
+}
+
+impl FaultState {
+    /// Arm a plan.
+    pub fn new(plan: FaultPlan) -> Self {
+        let queue_full_left = AtomicU64::new(plan.queue_full);
+        Self {
+            plan,
+            panic_fired: AtomicBool::new(false),
+            queue_full_left,
+            panics: AtomicU64::new(0),
+            delays: AtomicU64::new(0),
+            queue_fulls: AtomicU64::new(0),
+        }
+    }
+
+    /// Arm the `DLA_FAULTS` plan, if any.
+    pub fn from_env() -> Option<Arc<Self>> {
+        FaultPlan::parse(std::env::var("DLA_FAULTS").ok()?.as_str()).map(|p| Arc::new(Self::new(p)))
+    }
+
+    /// The plan this state was armed with.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Faults delivered so far.
+    pub fn injected(&self) -> FaultCounters {
+        FaultCounters {
+            panics: self.panics.load(Ordering::Relaxed),
+            delays: self.delays.load(Ordering::Relaxed),
+            queue_full: self.queue_fulls.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Pool hook: called by every rank at the start of its job share,
+    /// inside the `catch_unwind` region, with the 1-based broadcast
+    /// epoch. May sleep (slow rank) and may panic (one-shot).
+    pub fn before_job(&self, rank: usize, epoch: u64) {
+        if let Some((r, ms)) = self.plan.slow {
+            if rank == r && ms > 0 {
+                self.delays.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
+        if let Some((r, e)) = self.plan.panic_at {
+            if rank == r
+                && epoch >= e
+                && self
+                    .panic_fired
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                self.panics.fetch_add(1, Ordering::Relaxed);
+                panic!("injected fault: panic at rank {rank} epoch {epoch}");
+            }
+        }
+    }
+
+    /// Server hook: stall the worker before handling a dequeued request
+    /// (drives requests past their deadline in the chaos tests).
+    pub fn stall_request(&self) {
+        if let Some(ms) = self.plan.stall_ms {
+            if ms > 0 {
+                self.delays.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
+    }
+
+    /// Admission hook: true when this attempt must behave as if the
+    /// queue were full (count-down of the planned burst).
+    pub fn admission_queue_full(&self) -> bool {
+        if self.queue_full_left.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        if self
+            .queue_full_left
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| n.checked_sub(1))
+            .is_ok()
+        {
+            self.queue_fulls.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_round_trip() {
+        let p = FaultPlan::parse("panic@1:3, slow@2:15, stall:40, queuefull:5").unwrap();
+        assert_eq!(p.panic_at, Some((1, 3)));
+        assert_eq!(p.slow, Some((2, 15)));
+        assert_eq!(p.stall_ms, Some(40));
+        assert_eq!(p.queue_full, 5);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn disarm_and_armed_empty() {
+        assert_eq!(FaultPlan::parse(""), None);
+        assert_eq!(FaultPlan::parse("0"), None);
+        assert_eq!(FaultPlan::parse("off"), None);
+        assert_eq!(FaultPlan::parse("OFF"), None);
+        let armed = FaultPlan::parse("1").unwrap();
+        assert!(armed.is_empty());
+        assert!(FaultPlan::parse("on").unwrap().is_empty());
+        assert!(FaultPlan::parse("arm").unwrap().is_empty());
+    }
+
+    #[test]
+    fn unknown_tokens_fail_toward_no_fault() {
+        let p = FaultPlan::parse("panik@1:3, slow@x:y, wat, slow@2:7").unwrap();
+        assert_eq!(p.panic_at, None);
+        assert_eq!(p.slow, Some((2, 7)));
+    }
+
+    #[test]
+    fn panic_shot_is_one_shot_and_epoch_gated() {
+        let st = FaultState::new(FaultPlan::parse("panic@1:3").unwrap());
+        // Wrong rank, early epoch: no fire.
+        st.before_job(0, 3);
+        st.before_job(1, 2);
+        assert_eq!(st.injected().panics, 0);
+        // Epoch past the target still fires (the shot cannot be missed).
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| st.before_job(1, 4)));
+        assert!(r.is_err());
+        assert_eq!(st.injected().panics, 1);
+        // One-shot: never again.
+        st.before_job(1, 5);
+        assert_eq!(st.injected().panics, 1);
+    }
+
+    #[test]
+    fn queue_full_burst_counts_down() {
+        let st = FaultState::new(FaultPlan::parse("queuefull:2").unwrap());
+        assert!(st.admission_queue_full());
+        assert!(st.admission_queue_full());
+        assert!(!st.admission_queue_full());
+        assert!(!st.admission_queue_full());
+        assert_eq!(st.injected().queue_full, 2);
+    }
+
+    #[test]
+    fn empty_plan_hooks_are_inert() {
+        let st = FaultState::new(FaultPlan::default());
+        st.before_job(0, 1);
+        st.stall_request();
+        assert!(!st.admission_queue_full());
+        assert_eq!(st.injected(), FaultCounters::default());
+    }
+}

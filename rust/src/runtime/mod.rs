@@ -7,7 +7,12 @@
 //!   epoch/barrier task broadcast, and per-worker pinned packing
 //!   workspaces. This is the amortized worker team Catalán et al. and
 //!   Buttari et al. show multicore DLA needs (see PAPERS.md), replacing
-//!   the seed's spawn-per-macro-block threading.
+//!   the seed's spawn-per-macro-block threading. A panicked job poisons
+//!   the epoch, drains, and is reported as a typed
+//!   [`pool::EpochError`] — the pool recovers instead of dying.
+//! - [`faults`] — the fault-injection harness behind the chaos suite
+//!   (`DLA_FAULTS`): one-shot rank panics, slow-rank delays, request
+//!   stalls and forced queue-full at admission, all free when un-armed.
 //! - **PJRT bridge** (`pjrt` feature): loads the AOT artifacts
 //!   (`artifacts/*.hlo.txt`, produced by `python/compile/aot.py`) and
 //!   executes them from Rust — the bridge between Layer 3 (this crate)
@@ -21,6 +26,7 @@
 //!   restore [`convert`], [`registry`], [`PjrtEngine`] and the artifact
 //!   LU driver.
 
+pub mod faults;
 pub mod pool;
 
 #[cfg(feature = "pjrt")]
@@ -33,7 +39,8 @@ pub use convert::{literal_to_matrix, matrix_to_literal};
 #[cfg(feature = "pjrt")]
 pub use registry::{Artifact, ArtifactKind, Registry};
 
-pub use pool::{PinPolicy, PoolCtx, PoolStats, SubTeam, WorkerPool};
+pub use faults::{FaultCounters, FaultPlan, FaultState};
+pub use pool::{EpochError, PinPolicy, PoolCtx, PoolStats, SubTeam, WorkerPool};
 
 #[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};

@@ -74,6 +74,25 @@
 //! `laswp` / TSOLVE between pooled trailing updates leaves the whole team
 //! parked for that long, and the fused drivers move that work inside the
 //! job.
+//!
+//! # Fault tolerance (epoch recovery)
+//!
+//! A panicked job used to be terminal for the caller: the panic was
+//! re-thrown out of [`WorkerPool::run`]. The pool now treats a poisoned
+//! epoch as *recoverable* — [`WorkerPool::try_run`] catches the unwound
+//! panic on every rank, poisons the barriers so no rank blocks forever,
+//! drains the completion handshake, `clear_poison`s every barrier,
+//! resets the per-worker workspaces (a panicked job may have left a
+//! packing buffer half-written), and returns a typed [`EpochError`]
+//! naming the first panicking rank and its payload. `run` keeps the old
+//! panicking contract for callers that treat a panic as a bug. The
+//! [`PoolStats`] counters `epochs_poisoned` / `recoveries` record how
+//! often the protocol ran; `runtime::faults` can inject panics and
+//! delays at the same hook points the real failures use (`DLA_FAULTS`).
+
+// The serving path must stay panic-free: every unwrap/expect below is
+// either allow-listed with a justification or lives in test code.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -81,6 +100,8 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::gemm::blocked::Workspace;
+use crate::runtime::faults::FaultState;
+use crate::util::error::DlaError;
 
 /// Core-affinity placement for the pool workers (the first step of the
 /// ROADMAP NUMA item): pinning each worker at spawn means the pinned
@@ -172,10 +193,51 @@ struct State {
     job: Option<&'static Job>,
     /// Workers still executing the current job.
     active: usize,
-    /// Set when a worker's job panicked; re-thrown by the leader.
+    /// Set when a worker's job panicked; reported by the leader.
     panicked: bool,
+    /// The first panicking worker's (rank, payload) for the typed
+    /// [`EpochError`]; cleared by the leader after each poisoned epoch.
+    panic_info: Option<(usize, String)>,
     /// Set by `Drop` to retire the team.
     shutdown: bool,
+}
+
+/// A broadcast epoch that ended in a caught panic, returned by
+/// [`WorkerPool::try_run`] after the pool has fully recovered (barriers
+/// drained and un-poisoned, workspaces reset): the *job* failed, the
+/// *pool* is ready for the next job. Operand state the job was mutating
+/// is unspecified — callers re-run from owned inputs or fail the request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EpochError {
+    /// A worker rank's job share panicked; `rank` is the first panicker.
+    WorkerPanic { rank: usize, message: String },
+    /// The caller's own rank-0 share panicked (reported instead of
+    /// re-thrown so one bad request cannot unwind a serving thread).
+    LeaderPanic { message: String },
+}
+
+impl std::fmt::Display for EpochError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EpochError::WorkerPanic { rank, message } => {
+                write!(f, "pool worker rank {rank} panicked: {message}")
+            }
+            EpochError::LeaderPanic { message } => {
+                write!(f, "pool leader (rank 0) panicked: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EpochError {}
+
+impl EpochError {
+    /// The panic payload rendered by [`DlaError::panic_reason`].
+    pub fn message(&self) -> &str {
+        match self {
+            EpochError::WorkerPanic { message, .. } | EpochError::LeaderPanic { message } => message,
+        }
+    }
 }
 
 struct Shared {
@@ -214,6 +276,15 @@ struct Shared {
     /// Bytes zero-filled into the pinned per-worker [`Workspace`] buffers
     /// at spawn (the NUMA first-touch; see [`prefault_workspace`]).
     prefaulted_bytes: AtomicU64,
+    /// Broadcast epochs that ended in a caught panic (injected or real).
+    epochs_poisoned: AtomicU64,
+    /// Poisoned epochs fully recovered from (barriers cleared, workspaces
+    /// reset, a typed error returned); equals `epochs_poisoned` unless a
+    /// recovery is in flight.
+    recoveries: AtomicU64,
+    /// Armed fault-injection plan (`DLA_FAULTS` or an explicit plan);
+    /// `None` costs one branch per job.
+    faults: Option<Arc<FaultState>>,
     /// End of the most recent job, for the idle-gap accounting.
     last_job_end: Mutex<Option<Instant>>,
     workspaces: Vec<Mutex<Workspace>>,
@@ -247,6 +318,11 @@ fn prefault_workspace(ws: &mut Workspace) -> u64 {
 fn lock_pool<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
+
+/// The panic message of ranks killed by a *poisoned barrier* (as opposed
+/// to the rank whose job actually failed): a symptom, not a root cause,
+/// so the epoch-error reporting prefers any other payload over it.
+const POISON_ECHO: &str = "pool barrier poisoned by a panicked rank";
 
 /// A reusable barrier with **poisoning**: when any rank's job panics, the
 /// rank poisons the barrier before reporting done, which wakes every
@@ -286,7 +362,7 @@ impl PoolBarrier {
     fn wait_n(&self, count: usize) {
         let mut st = lock_pool(&self.lock);
         if st.poisoned {
-            panic!("pool barrier poisoned by a panicked rank");
+            panic!("{}", POISON_ECHO);
         }
         let gen = st.generation;
         st.arrived += 1;
@@ -300,7 +376,7 @@ impl PoolBarrier {
             st = self.cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
         }
         if st.poisoned {
-            panic!("pool barrier poisoned by a panicked rank");
+            panic!("{}", POISON_ECHO);
         }
     }
 
@@ -508,6 +584,11 @@ pub struct PoolStats {
     /// NUMA first-touch; grows as each worker starts, constant after the
     /// first completed job).
     pub prefaulted_bytes: u64,
+    /// Broadcast epochs that ended in a caught panic.
+    pub epochs_poisoned: u64,
+    /// Poisoned epochs fully recovered from (drained, barriers cleared,
+    /// workspaces reset, typed error returned).
+    pub recoveries: u64,
 }
 
 /// A persistent team of `threads - 1` parked workers plus the caller.
@@ -521,10 +602,11 @@ pub struct WorkerPool {
 
 impl WorkerPool {
     /// Spawn the team with the affinity policy from the `DLA_PIN`
-    /// environment variable (default: no pinning). `threads` counts the
-    /// caller, so `new(1)` spawns nothing and `run` executes jobs inline.
+    /// environment variable (default: no pinning) and the fault plan
+    /// from `DLA_FAULTS` (default: none). `threads` counts the caller,
+    /// so `new(1)` spawns nothing and `run` executes jobs inline.
     pub fn new(threads: usize) -> Self {
-        Self::with_pinning(threads, PinPolicy::from_env())
+        Self::build(threads, PinPolicy::from_env(), FaultState::from_env())
     }
 
     /// Spawn the team with an explicit [`PinPolicy`]. Each worker pins
@@ -533,6 +615,19 @@ impl WorkerPool {
     /// pinned core. The caller (rank 0) is never pinned — it is the
     /// application's thread.
     pub fn with_pinning(threads: usize, pin: PinPolicy) -> Self {
+        Self::build(threads, pin, FaultState::from_env())
+    }
+
+    /// Spawn the team with an explicit (already armed) fault-injection
+    /// state, shared with the caller — the chaos tests and the server
+    /// inject faults programmatically this way, independent of the
+    /// environment. `None` disables injection even if `DLA_FAULTS` is
+    /// set.
+    pub fn with_fault_state(threads: usize, faults: Option<Arc<FaultState>>) -> Self {
+        Self::build(threads, PinPolicy::from_env(), faults)
+    }
+
+    fn build(threads: usize, pin: PinPolicy, faults: Option<Arc<FaultState>>) -> Self {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
@@ -540,6 +635,7 @@ impl WorkerPool {
                 job: None,
                 active: 0,
                 panicked: false,
+                panic_info: None,
                 shutdown: false,
             }),
             work_cv: Condvar::new(),
@@ -555,6 +651,9 @@ impl WorkerPool {
             update_idle_ns: AtomicU64::new(0),
             queue_stall_ns: AtomicU64::new(0),
             prefaulted_bytes: AtomicU64::new(0),
+            epochs_poisoned: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+            faults,
             last_job_end: Mutex::new(None),
             workspaces: (0..threads).map(|_| Mutex::new(Workspace::new())).collect(),
         });
@@ -568,6 +667,9 @@ impl WorkerPool {
         let mut handles = Vec::with_capacity(threads - 1);
         for rank in 1..threads {
             let sh = Arc::clone(&shared);
+            // Allow-listed: failing to spawn an OS thread at pool
+            // construction is unrecoverable setup, not a serving fault.
+            #[allow(clippy::expect_used)]
             let h = std::thread::Builder::new()
                 .name(format!("gemm-pool-{rank}"))
                 .spawn(move || worker_loop(sh, rank, pin))
@@ -610,7 +712,15 @@ impl WorkerPool {
             update_idle_ns: self.shared.update_idle_ns.load(Ordering::Relaxed),
             queue_stall_ns: self.shared.queue_stall_ns.load(Ordering::Relaxed),
             prefaulted_bytes: self.shared.prefaulted_bytes.load(Ordering::Relaxed),
+            epochs_poisoned: self.shared.epochs_poisoned.load(Ordering::Relaxed),
+            recoveries: self.shared.recoveries.load(Ordering::Relaxed),
         }
+    }
+
+    /// The armed fault-injection state, if any (shared with the server
+    /// that owns this pool so admission hooks see the same counters).
+    pub fn fault_state(&self) -> Option<Arc<FaultState>> {
+        self.shared.faults.clone()
     }
 
     /// Record the idle gap since the previous job ended and stamp the new
@@ -628,37 +738,110 @@ impl WorkerPool {
         self.shared.jobs.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Clear every barrier's poison after a drained epoch (leader-only,
+    /// `active == 0`: no rank can be inside a `wait`).
+    fn clear_all_poison(&self) {
+        self.shared.barrier.clear_poison();
+        for b in &self.shared.sub_barriers {
+            b.clear_poison();
+        }
+        for b in &self.shared.group_barriers {
+            b.clear_poison();
+        }
+    }
+
+    /// Reset every rank's pinned workspace after a poisoned epoch: a
+    /// panicked job may have left packing buffers half-written or
+    /// oversized, and the next job must start from the same state a
+    /// fresh pool would. The buffers are re-prefaulted on the leader
+    /// (placement is best-effort during recovery); the spawn-time
+    /// `prefaulted_bytes` accounting is deliberately not touched — it
+    /// records the first-touch, not resets.
+    fn reset_workspaces(&self) {
+        for slot in &self.shared.workspaces {
+            let mut ws = lock_pool(slot);
+            *ws = Workspace::new();
+            let _ = prefault_workspace(&mut ws);
+        }
+    }
+
     /// Execute `job` once per rank (the caller runs rank 0 in place) and
-    /// return when every rank has finished.
+    /// return when every rank has finished. A panic on any rank is
+    /// re-thrown here — callers that must survive a bad job use
+    /// [`Self::try_run`] instead; the pool itself recovers either way.
     pub fn run(&self, job: &(dyn Fn(&PoolCtx<'_>) + Sync)) {
+        if let Err(e) = self.try_run(job) {
+            match e {
+                // Re-throw with the original message as the payload so
+                // `#[should_panic(expected = ...)]` callers still match.
+                EpochError::LeaderPanic { message } => {
+                    std::panic::resume_unwind(Box::new(message))
+                }
+                EpochError::WorkerPanic { .. } => {
+                    panic!("a pool worker panicked during a broadcast job")
+                }
+            }
+        }
+    }
+
+    /// Execute `job` once per rank and return `Err` instead of
+    /// panicking when any rank's share panics. By the time this returns
+    /// the epoch has fully drained and the pool is recovered: barriers
+    /// un-poisoned, workspaces reset, counters advanced — the next
+    /// `run`/`try_run` behaves as on a fresh pool. Whatever operand
+    /// memory the job was mutating is left in an unspecified state.
+    pub fn try_run(&self, job: &(dyn Fn(&PoolCtx<'_>) + Sync)) -> Result<(), EpochError> {
         let _leader = lock_pool(&self.run_lock);
         self.note_job_start(Instant::now());
         if self.threads == 1 {
-            let ctx = PoolCtx { rank: 0, threads: 1, shared: self.shared.as_ref() };
-            job(&ctx);
+            // Inline path: still bump the epoch (fault shots key on it)
+            // and still isolate the panic.
+            let epoch = {
+                let mut st = lock_pool(&self.shared.state);
+                st.epoch += 1;
+                st.epoch
+            };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if let Some(f) = &self.shared.faults {
+                    f.before_job(0, epoch);
+                }
+                let ctx = PoolCtx { rank: 0, threads: 1, shared: self.shared.as_ref() };
+                job(&ctx);
+            }));
             self.note_job_end();
-            return;
+            return match result {
+                Ok(()) => Ok(()),
+                Err(payload) => {
+                    self.shared.epochs_poisoned.fetch_add(1, Ordering::Relaxed);
+                    self.reset_workspaces();
+                    self.shared.recoveries.fetch_add(1, Ordering::Relaxed);
+                    Err(EpochError::LeaderPanic { message: DlaError::panic_reason(payload.as_ref()) })
+                }
+            };
         }
         // SAFETY: the 'static lifetime is erased only for the duration of
         // this call; the done_cv handshake below guarantees every worker
         // has returned from `job` (and the state lock round-trip makes
-        // that a happens-before edge) before `run` returns and the
-        // borrow expires.
+        // that a happens-before edge) before `try_run` returns and the
+        // borrow expires. The leader's own share runs under catch_unwind
+        // for the same reason: this frame must never unwind while a
+        // worker still holds the reference.
         let job_static: &'static Job =
             unsafe { std::mem::transmute::<&(dyn Fn(&PoolCtx<'_>) + Sync), &'static Job>(job) };
-        {
+        let epoch = {
             let mut st = lock_pool(&self.shared.state);
             st.job = Some(job_static);
             st.active = self.threads - 1;
             st.epoch += 1;
             self.shared.work_cv.notify_all();
-        }
-        // Run rank 0 under catch_unwind: `run` must NEVER return (or
-        // unwind) before every worker has finished with `job_static` —
-        // that reference dies with this frame. On a leader panic the
-        // barrier is poisoned so no worker can block waiting for rank 0's
-        // arrival, the handshake drains, and the panic is re-thrown.
+            st.epoch
+        };
+        // On a leader panic the barriers are poisoned so no worker can
+        // block waiting for rank 0's arrival; the handshake then drains.
         let leader_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if let Some(f) = &self.shared.faults {
+                f.before_job(0, epoch);
+            }
             let ctx = PoolCtx { rank: 0, threads: self.threads, shared: self.shared.as_ref() };
             job(&ctx);
         }));
@@ -683,26 +866,40 @@ impl WorkerPool {
         st.job = None;
         let worker_panicked = st.panicked;
         st.panicked = false;
+        let worker_info = st.panic_info.take();
         drop(st);
         self.shared
             .leader_wait_ns
             .fetch_add(wait_t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.note_job_end();
-        if worker_panicked || leader_result.is_err() {
-            self.shared.barrier.clear_poison();
-            for b in &self.shared.sub_barriers {
-                b.clear_poison();
+        if !(worker_panicked || leader_result.is_err()) {
+            return Ok(());
+        }
+        // Recovery: every rank is out of the job (active == 0), so no
+        // one can be parked inside a barrier — clear the poison, reset
+        // the workspaces the dead job may have corrupted, and report.
+        self.shared.epochs_poisoned.fetch_add(1, Ordering::Relaxed);
+        self.clear_all_poison();
+        self.reset_workspaces();
+        self.shared.recoveries.fetch_add(1, Ordering::Relaxed);
+        Err(match leader_result {
+            Err(payload) => {
+                let message = DlaError::panic_reason(payload.as_ref());
+                match worker_info {
+                    // The leader died *because* a worker poisoned the
+                    // barrier it was parked on: report the root cause.
+                    Some((rank, root)) if message == POISON_ECHO => {
+                        EpochError::WorkerPanic { rank, message: root }
+                    }
+                    _ => EpochError::LeaderPanic { message },
+                }
             }
-            for b in &self.shared.group_barriers {
-                b.clear_poison();
+            Ok(()) => {
+                let (rank, message) = worker_info
+                    .unwrap_or_else(|| (usize::MAX, "panicked rank left no payload".to_string()));
+                EpochError::WorkerPanic { rank, message }
             }
-        }
-        if let Err(payload) = leader_result {
-            std::panic::resume_unwind(payload);
-        }
-        if worker_panicked {
-            panic!("a pool worker panicked during a broadcast job");
-        }
+        })
     }
 }
 
@@ -740,16 +937,27 @@ fn worker_loop(shared: Arc<Shared>, rank: usize, pin: PinPolicy) {
                 }
                 if st.epoch != seen {
                     seen = st.epoch;
+                    // Allow-listed: a bumped epoch without a published
+                    // job is a broken broadcast invariant (pool bug),
+                    // not a request-path failure.
+                    #[allow(clippy::expect_used)]
                     break st.job.expect("epoch bumped without a job");
                 }
                 st = shared.work_cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
             }
         };
-        let panicked = {
+        let result = {
             let ctx = PoolCtx { rank, threads, shared: shared.as_ref() };
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&ctx))).is_err()
+            // The fault hook runs inside catch_unwind so an injected
+            // panic unwinds through exactly the real-failure machinery.
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if let Some(f) = &shared.faults {
+                    f.before_job(rank, seen);
+                }
+                job(&ctx)
+            }))
         };
-        if panicked {
+        if result.is_err() {
             // Wake (and panic out) any rank blocked on a barrier arrival
             // this rank will never make; the cascade drains the job. The
             // sub-team and group barriers are poisoned too — a split or
@@ -763,8 +971,20 @@ fn worker_loop(shared: Arc<Shared>, rank: usize, pin: PinPolicy) {
             }
         }
         let mut st = lock_pool(&shared.state);
-        if panicked {
+        if let Err(payload) = result {
             st.panicked = true;
+            // Record the root cause: the first panicker wins, except
+            // that a barrier-poison echo never displaces (and is itself
+            // displaced by) a real payload — drain order between the
+            // root rank and the ranks its poison woke is a race.
+            let msg = DlaError::panic_reason(payload.as_ref());
+            let displace = match &st.panic_info {
+                None => true,
+                Some((_, existing)) => existing == POISON_ECHO && msg != POISON_ECHO,
+            };
+            if displace {
+                st.panic_info = Some((rank, msg));
+            }
         }
         st.active -= 1;
         if st.active == 0 {
@@ -774,6 +994,7 @@ fn worker_loop(shared: Arc<Shared>, rank: usize, pin: PinPolicy) {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
@@ -1141,6 +1362,137 @@ mod tests {
         assert!(s2.update_idle_ns >= 4_000_000, "update idle not accounted: {s2:?}");
         // The empty-queue flag only classifies *panel* waits.
         assert_eq!(s2.panel_idle_ns, s.panel_idle_ns);
+    }
+
+    #[test]
+    fn try_run_reports_worker_panic_as_typed_error() {
+        let pool = WorkerPool::new(3);
+        let err = pool
+            .try_run(&|ctx| {
+                if ctx.rank == 2 {
+                    panic!("rank 2 blew up");
+                }
+                ctx.barrier();
+            })
+            .unwrap_err();
+        assert_eq!(err, EpochError::WorkerPanic { rank: 2, message: "rank 2 blew up".into() });
+        let s = pool.stats();
+        assert_eq!((s.epochs_poisoned, s.recoveries), (1, 1));
+        // Recovered: a healthy multi-barrier job completes and counters
+        // do not advance further.
+        let hits = AtomicU64::new(0);
+        pool.try_run(&|ctx| {
+            ctx.barrier();
+            hits.fetch_add(1, Ordering::SeqCst);
+            ctx.barrier();
+        })
+        .unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        let s2 = pool.stats();
+        assert_eq!((s2.epochs_poisoned, s2.recoveries), (1, 1));
+    }
+
+    #[test]
+    fn try_run_reports_leader_panic_as_typed_error() {
+        let pool = WorkerPool::new(2);
+        let err = pool
+            .try_run(&|ctx| {
+                if ctx.rank == 0 {
+                    panic!("leader share failed");
+                }
+            })
+            .unwrap_err();
+        assert_eq!(err, EpochError::LeaderPanic { message: "leader share failed".into() });
+        pool.try_run(&|_| {}).unwrap();
+    }
+
+    #[test]
+    fn try_run_prefers_root_cause_over_poison_echo() {
+        // The leader parks on the full-team barrier and dies from the
+        // poison cascade; the error must still name the worker that
+        // actually panicked, with its payload.
+        let pool = WorkerPool::new(3);
+        let err = pool
+            .try_run(&|ctx| {
+                if ctx.rank == 1 {
+                    panic!("root cause on rank 1");
+                }
+                ctx.barrier();
+            })
+            .unwrap_err();
+        assert_eq!(
+            err,
+            EpochError::WorkerPanic { rank: 1, message: "root cause on rank 1".into() }
+        );
+    }
+
+    #[test]
+    fn try_run_isolates_inline_single_thread_panics() {
+        let pool = WorkerPool::new(1);
+        let err = pool.try_run(&|_| panic!("inline boom")).unwrap_err();
+        assert_eq!(err, EpochError::LeaderPanic { message: "inline boom".into() });
+        let s = pool.stats();
+        assert_eq!((s.epochs_poisoned, s.recoveries), (1, 1));
+        let ok = AtomicU64::new(0);
+        pool.try_run(&|_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn recovery_resets_workspaces_but_not_prefault_accounting() {
+        let pool = WorkerPool::new(2);
+        pool.run(&|_| {}); // both workers up, prefault accounting stable
+        let prefaulted = pool.stats().prefaulted_bytes;
+        // A job that corrupts its workspace and then dies.
+        let err = pool.try_run(&|ctx| {
+            let mut ws = ctx.workspace();
+            ws.a_buf.resize(3, 7.0);
+            drop(ws);
+            panic!("die after corrupting the workspace");
+        });
+        assert!(err.is_err());
+        // Workspaces are back to the prefaulted spawn state...
+        pool.try_run(&|ctx| {
+            let ws = ctx.workspace();
+            assert_eq!(ws.a_buf.len(), PREFAULT_ELEMS, "rank {} not reset", ctx.rank);
+            assert!(ws.a_buf.iter().all(|&v| v == 0.0));
+        })
+        .unwrap();
+        // ...and the first-touch accounting did not double-count.
+        assert_eq!(pool.stats().prefaulted_bytes, prefaulted);
+    }
+
+    #[test]
+    fn injected_fault_panics_like_a_real_one() {
+        use crate::runtime::faults::{FaultPlan, FaultState};
+        let faults =
+            Arc::new(FaultState::new(FaultPlan::parse("panic@1:2").expect("plan parses")));
+        let pool = WorkerPool::with_fault_state(3, Some(Arc::clone(&faults)));
+        // Epoch 1: before the shot.
+        pool.try_run(&|ctx| ctx.barrier()).unwrap();
+        // Epoch 2: rank 1's shot fires inside the job machinery.
+        let err = pool.try_run(&|ctx| ctx.barrier()).unwrap_err();
+        match err {
+            EpochError::WorkerPanic { rank, message } => {
+                assert_eq!(rank, 1);
+                assert!(message.contains("injected fault"), "{message}");
+            }
+            other => panic!("unexpected error {other:?}"),
+        }
+        assert_eq!(faults.injected().panics, 1);
+        // One-shot: the pool serves clean epochs afterwards.
+        let hits = AtomicU64::new(0);
+        pool.try_run(&|ctx| {
+            ctx.barrier();
+            hits.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        let s = pool.stats();
+        assert_eq!((s.epochs_poisoned, s.recoveries), (1, 1));
     }
 
     #[test]

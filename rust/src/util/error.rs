@@ -1,0 +1,134 @@
+//! Typed errors for the serving path.
+//!
+//! [`DlaError`] is the single error currency on the
+//! `DlaRequest → DlaResponse` route: admission validation, factorization
+//! breakdown, deadlines, backpressure and worker loss all surface as one
+//! of its variants instead of stringly-typed `anyhow` messages or panics.
+//! The taxonomy (and the recovery each variant admits) is documented in
+//! the "Failure model" section of `lapack/README.md`.
+//!
+//! The enum implements `std::error::Error`, so callers that still speak
+//! the vendored `anyhow` dialect (the PJRT examples, the benches) convert
+//! with `?` for free via the blanket `From<E: Error>` impl.
+
+use std::fmt;
+
+/// Every way a served request can fail, ordered roughly by where on the
+/// request path the failure is detected (admission → queue → worker →
+/// kernel).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DlaError {
+    /// The request was rejected at admission: non-finite operand entries
+    /// (NaN/Inf) or mismatched dimensions. Never retried — the request
+    /// can only fail again.
+    InvalidInput { reason: String },
+    /// A factorization broke down at the given pivot column: an exact
+    /// zero pivot in LU, or a non-positive-definite leading minor in
+    /// Cholesky. A property of the operand, not of the runtime.
+    Singular { pivot: usize },
+    /// The per-request deadline expired before a result was produced
+    /// (`ServerConfig::with_deadline` / `DLA_DEADLINE_MS`). `waited_ms`
+    /// is how long the caller actually waited.
+    Timeout { waited_ms: u64 },
+    /// The admission queue stayed full through the whole bounded,
+    /// jittered retry schedule. `retries` counts the re-attempts made
+    /// before giving up — transient by nature; callers may re-submit.
+    QueueFull { retries: u32 },
+    /// A worker or its reply channel disappeared (thread panicked and
+    /// unwound, or the server is shutting down underneath the caller).
+    WorkerLost { reason: String },
+    /// An unexpected panic was caught and contained on the serving path;
+    /// `reason` carries the panic payload. The request that triggered it
+    /// fails, the server keeps serving.
+    Internal { reason: String },
+}
+
+impl fmt::Display for DlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DlaError::InvalidInput { reason } => write!(f, "invalid input: {reason}"),
+            DlaError::Singular { pivot } => {
+                write!(f, "factorization breakdown at pivot column {pivot}")
+            }
+            DlaError::Timeout { waited_ms } => {
+                write!(f, "deadline expired after {waited_ms} ms")
+            }
+            DlaError::QueueFull { retries } => {
+                write!(f, "admission queue full after {retries} retries")
+            }
+            DlaError::WorkerLost { reason } => write!(f, "worker lost: {reason}"),
+            DlaError::Internal { reason } => write!(f, "internal fault: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for DlaError {}
+
+impl DlaError {
+    /// True for failures a caller may reasonably retry as-is: transient
+    /// runtime conditions rather than properties of the request.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            DlaError::Timeout { .. } | DlaError::QueueFull { .. } | DlaError::WorkerLost { .. }
+        )
+    }
+
+    /// Render a caught panic payload into a human-readable reason (the
+    /// payload of `catch_unwind` is `&str` or `String` in practice).
+    pub fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+        if let Some(s) = payload.downcast_ref::<&'static str>() {
+            (*s).to_string()
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "panic with a non-string payload".to_string()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_specific() {
+        let cases: Vec<(DlaError, &str)> = vec![
+            (DlaError::InvalidInput { reason: "NaN in a".into() }, "invalid input: NaN in a"),
+            (DlaError::Singular { pivot: 3 }, "factorization breakdown at pivot column 3"),
+            (DlaError::Timeout { waited_ms: 25 }, "deadline expired after 25 ms"),
+            (DlaError::QueueFull { retries: 8 }, "admission queue full after 8 retries"),
+        ];
+        for (e, text) in cases {
+            assert_eq!(format!("{e}"), text);
+        }
+    }
+
+    #[test]
+    fn transient_classification() {
+        assert!(DlaError::Timeout { waited_ms: 1 }.is_transient());
+        assert!(DlaError::QueueFull { retries: 0 }.is_transient());
+        assert!(DlaError::WorkerLost { reason: "x".into() }.is_transient());
+        assert!(!DlaError::InvalidInput { reason: "x".into() }.is_transient());
+        assert!(!DlaError::Singular { pivot: 0 }.is_transient());
+        assert!(!DlaError::Internal { reason: "x".into() }.is_transient());
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn f() -> anyhow::Result<()> {
+            Err(DlaError::Singular { pivot: 2 })?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert_eq!(format!("{e}"), "factorization breakdown at pivot column 2");
+    }
+
+    #[test]
+    fn panic_payload_rendering() {
+        let p = std::panic::catch_unwind(|| panic!("boom {}", 7)).unwrap_err();
+        assert_eq!(DlaError::panic_reason(p.as_ref()), "boom 7");
+        let q = std::panic::catch_unwind(|| panic!("static boom")).unwrap_err();
+        assert_eq!(DlaError::panic_reason(q.as_ref()), "static boom");
+    }
+}

@@ -125,6 +125,13 @@ impl<E: Elem> Matrix<E> {
         &mut self.data
     }
 
+    /// True when every entry is finite (no NaN or infinity) — the
+    /// admission-validation scan of the serving path. O(rows · cols),
+    /// negligible next to the O(n³) work a request buys.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|&v| v.to_f64().is_finite())
+    }
+
     #[inline]
     pub fn as_ptr(&self) -> *const E {
         self.data.as_ptr()

@@ -3,6 +3,7 @@
 
 pub mod cli;
 pub mod elem;
+pub mod error;
 pub mod matrix;
 pub mod rng;
 pub mod stats;
@@ -10,6 +11,7 @@ pub mod table;
 pub mod timer;
 
 pub use elem::{DType, Elem};
+pub use error::DlaError;
 pub use matrix::{Matrix, MatrixF32, MatrixF64};
 pub use rng::Pcg64;
 pub use timer::Stopwatch;

@@ -112,10 +112,11 @@ fn batched_server_is_bitwise_identical_to_serialized_server() {
                 .with_workers(2)
                 .with_gemm_threads(3)
                 .with_batching(batching),
-        );
+        )
+        .unwrap();
         let pending: Vec<_> = reqs
             .iter()
-            .map(|(alpha, a, b, beta, c0)| server.submit(gemm_req(*alpha, a, b, *beta, c0)))
+            .map(|(alpha, a, b, beta, c0)| server.submit(gemm_req(*alpha, a, b, *beta, c0)).unwrap())
             .collect();
         // Recv after shutdown: the drain guarantees every reply.
         server.shutdown();
@@ -148,7 +149,8 @@ fn concurrent_submitters_all_get_exact_results() {
             .with_workers(3)
             .with_gemm_threads(3)
             .with_batching(BatchPolicy::default().with_max_batch(4).with_wait_us(300).admit_all()),
-    );
+    )
+    .unwrap();
     let shapes = [(24usize, 24usize, 12usize), (16, 32, 8), (33, 9, 7)];
     const SUBMITTERS: usize = 6;
     const PER_THREAD: usize = 8;
@@ -196,7 +198,8 @@ fn factorizations_and_large_gemms_bypass_batching() {
         ServerConfig::new(host_xeon(), ConfigMode::Refined)
             .with_gemm_threads(3)
             .with_batching(BatchPolicy::default().with_wait_us(30_000_000)),
-    );
+    )
+    .unwrap();
     let mut rng = Pcg64::seed(77);
     // Large GEMM: solo path.
     let a = MatrixF64::random(256, 256, &mut rng);
@@ -239,7 +242,8 @@ fn shutdown_drains_queued_batches_without_waiting() {
             .with_batching(
                 BatchPolicy::default().with_max_batch(64).with_wait_us(3_600_000_000).admit_all(),
             ),
-    );
+    )
+    .unwrap();
     let mut rng = Pcg64::seed(1234);
     let inputs: Vec<(MatrixF64, MatrixF64, MatrixF64)> = (0..5)
         .map(|_| {
@@ -251,7 +255,7 @@ fn shutdown_drains_queued_batches_without_waiting() {
         })
         .collect();
     let pending: Vec<_> =
-        inputs.iter().map(|(a, b, c0)| server.submit(gemm_req(1.0, a, b, 1.0, c0))).collect();
+        inputs.iter().map(|(a, b, c0)| server.submit(gemm_req(1.0, a, b, 1.0, c0)).unwrap()).collect();
     let t0 = std::time::Instant::now();
     let metrics = server.shutdown();
     assert!(
@@ -284,7 +288,8 @@ fn dropping_without_shutdown_still_answers_and_exits() {
             .with_batching(
                 BatchPolicy::default().with_max_batch(64).with_wait_us(3_600_000_000).admit_all(),
             ),
-    );
+    )
+    .unwrap();
     let mut rng = Pcg64::seed(555);
     let inputs: Vec<(MatrixF64, MatrixF64, MatrixF64)> = (0..4)
         .map(|_| {
@@ -296,7 +301,7 @@ fn dropping_without_shutdown_still_answers_and_exits() {
         })
         .collect();
     let pending: Vec<_> =
-        inputs.iter().map(|(a, b, c0)| server.submit(gemm_req(1.0, a, b, 0.5, c0))).collect();
+        inputs.iter().map(|(a, b, c0)| server.submit(gemm_req(1.0, a, b, 0.5, c0)).unwrap()).collect();
     drop(server);
     for (rx, (a, b, c0)) in pending.into_iter().zip(&inputs) {
         let DlaResponse::Matrix { result, .. } = rx.recv().unwrap().unwrap() else { panic!() };
@@ -316,14 +321,15 @@ fn batch_metrics_are_sane_under_forced_coalescing() {
             .with_batching(
                 BatchPolicy::default().with_max_batch(4).with_wait_us(3_600_000_000).admit_all(),
             ),
-    );
+    )
+    .unwrap();
     let mut rng = Pcg64::seed(4321);
     let pending: Vec<_> = (0..4)
         .map(|_| {
             let a = MatrixF64::random(24, 16, &mut rng);
             let b = MatrixF64::random(16, 24, &mut rng);
             let c0 = MatrixF64::zeros(24, 24);
-            server.submit(gemm_req(1.0, &a, &b, 0.0, &c0))
+            server.submit(gemm_req(1.0, &a, &b, 0.0, &c0)).unwrap()
         })
         .collect();
     for rx in pending {

@@ -1,0 +1,310 @@
+//! Chaos suite: fault-injection drills through the public serving API.
+//!
+//! Every test pins a [`FaultPlan`] on its own server (no environment
+//! mutation, no cross-test interference; the `DLA_FAULTS` env override
+//! is exercised by the CI chaos leg instead) and asserts the three
+//! serving-resilience invariants end to end:
+//!
+//! 1. **Isolation** — an injected fault costs exactly the requests it
+//!    hits; every other request completes with the *same bits* a
+//!    fault-free server produces (the pooled G4 schedule is team-width
+//!    independent, so a serial engine is the oracle).
+//! 2. **Typed failure** — the victims observe a typed [`DlaError`]
+//!    (`Internal`, `Timeout`, `QueueFull`), never a hang, a poisoned
+//!    lock, or a torn result.
+//! 3. **Recovery** — the pool's poisoned epochs are recovered
+//!    (`recoveries == epochs_poisoned`), the degraded window drains, and
+//!    the shutdown metrics account for every fault delivered.
+
+use std::thread;
+use std::time::Duration;
+
+use dla_codesign::arch::host_xeon;
+use dla_codesign::coordinator::{
+    BatchPolicy, CoordinatorServer, DlaRequest, DlaResponse, DlaError, ServerConfig,
+};
+use dla_codesign::gemm::{ConfigMode, GemmEngine};
+use dla_codesign::runtime::FaultPlan;
+use dla_codesign::util::{MatrixF64, Pcg64};
+
+/// The serial oracle: what a solo, pool-less dispatch of this GEMM
+/// produces (bitwise — see `tests/batching.rs` for the invariant).
+fn serial_gemm(alpha: f64, a: &MatrixF64, b: &MatrixF64, beta: f64, c0: &MatrixF64) -> MatrixF64 {
+    let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+    let mut c = c0.clone();
+    eng.gemm(alpha, a.view(), b.view(), beta, &mut c.view_mut());
+    c
+}
+
+fn plan(spec: &str) -> FaultPlan {
+    FaultPlan::parse(spec).expect("test fault spec must parse")
+}
+
+/// A one-shot panic injected inside a pooled epoch costs exactly one
+/// request; the survivors (degraded window included) are bitwise equal
+/// to the serial oracle, the pool recovers its poisoned epoch, and the
+/// metrics account for the whole incident.
+#[test]
+fn injected_pool_panic_is_isolated_and_recovered() {
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_workers(1)
+            .with_gemm_threads(4)
+            .with_batching(BatchPolicy::disabled())
+            .with_faults(plan("panic@1:1")),
+    )
+    .expect("server start");
+    let faults = server.fault_state().expect("pinned plan must be armed");
+
+    let mut rng = Pcg64::seed(600);
+    let n = 10;
+    let inputs: Vec<_> = (0..n)
+        .map(|_| {
+            (
+                MatrixF64::random(96, 64, &mut rng),
+                MatrixF64::random(64, 80, &mut rng),
+                MatrixF64::random(96, 80, &mut rng),
+            )
+        })
+        .collect();
+    let pending: Vec<_> = inputs
+        .iter()
+        .map(|(a, b, c0)| {
+            server
+                .submit(DlaRequest::Gemm {
+                    alpha: 1.0,
+                    a: a.clone(),
+                    b: b.clone(),
+                    beta: 1.0,
+                    c: c0.clone(),
+                })
+                .expect("submit")
+        })
+        .collect();
+
+    // Request 0 triggers the first pooled epoch and takes the shot; with
+    // one worker the order is deterministic.
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv().expect("every request must be answered");
+        if i == 0 {
+            match resp {
+                Err(DlaError::Internal { reason }) => {
+                    assert!(reason.contains("panicked"), "untyped reason: {reason}")
+                }
+                Err(other) => panic!("victim must see Internal, got {other:?}"),
+                Ok(_) => panic!("victim request must fail"),
+            }
+        } else {
+            let (a, b, c0) = &inputs[i];
+            let DlaResponse::Matrix { result, .. } = resp.expect("survivor must succeed") else {
+                panic!("unexpected response kind");
+            };
+            let oracle = serial_gemm(1.0, a, b, 1.0, c0);
+            assert_eq!(
+                result.max_abs_diff(&oracle),
+                0.0,
+                "request {i} diverged from the serial oracle after the fault"
+            );
+        }
+    }
+    assert_eq!(faults.injected().panics, 1, "the shot is one-shot");
+
+    let metrics = server.shutdown();
+    let f = metrics.fault_stats();
+    assert_eq!(f.worker_panics, 1);
+    // The panic arms an 8-request degraded window; 9 survivors drain it.
+    assert_eq!(f.degraded_requests, 8);
+    let pool = metrics.pool_stats().expect("pooled server must report pool stats");
+    assert!(pool.epochs_poisoned >= 1, "the injected panic poisons an epoch");
+    assert_eq!(
+        pool.recoveries, pool.epochs_poisoned,
+        "every poisoned epoch must be recovered"
+    );
+    let summary = metrics.summary();
+    assert!(summary.contains("resilience:"), "faulted run must report a resilience line");
+    assert!(summary.contains("epochs poisoned"), "pool line must surface the poison count");
+}
+
+/// A panic during a factorization unwinds through the blocked-LU sweep;
+/// the pool recovers and later factorizations on the same pool are
+/// correct.
+#[test]
+fn factorization_survives_pool_panic_and_pool_stays_usable() {
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_workers(1)
+            .with_gemm_threads(3)
+            .with_faults(plan("panic@2:1")),
+    )
+    .expect("server start");
+
+    let mut rng = Pcg64::seed(601);
+    let a0 = MatrixF64::random_diag_dominant(96, &mut rng);
+    let err = server
+        .call(DlaRequest::LuFactor { a: a0.clone(), block: 24 })
+        .err()
+        .expect("first factorization takes the shot");
+    assert!(matches!(err, DlaError::Internal { .. }), "got {err:?}");
+
+    // Same pool, post-recovery: factorizations and solves are healthy.
+    let a1 = MatrixF64::random_diag_dominant(80, &mut rng);
+    let resp = server
+        .call(DlaRequest::LuFactor { a: a1.clone(), block: 20 })
+        .expect("post-recovery factorization");
+    let DlaResponse::Lu { factors, .. } = resp else { panic!("unexpected response kind") };
+    assert!(factors.reconstruction_error(&a1) < 1e-10);
+
+    let metrics = server.shutdown();
+    assert_eq!(metrics.fault_stats().worker_panics, 1);
+    let pool = metrics.pool_stats().expect("pool stats");
+    assert_eq!(pool.recoveries, pool.epochs_poisoned);
+}
+
+/// With a deadline armed and the worker stalled past it, requests get a
+/// typed [`DlaError::Timeout`] instead of a late answer or a hang, and
+/// the expiry is accounted in the metrics.
+#[test]
+fn stalled_requests_expire_with_typed_timeouts() {
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_workers(1)
+            .with_deadline(Duration::from_millis(25))
+            .with_faults(plan("stall:120")),
+    )
+    .expect("server start");
+
+    let mut rng = Pcg64::seed(602);
+    let mut pending = Vec::new();
+    for _ in 0..2 {
+        let req = DlaRequest::Gemm {
+            alpha: 1.0,
+            a: MatrixF64::random(32, 16, &mut rng),
+            b: MatrixF64::random(16, 24, &mut rng),
+            beta: 0.0,
+            c: MatrixF64::zeros(32, 24),
+        };
+        pending.push(server.submit(req).expect("submit"));
+    }
+    for rx in pending {
+        let resp = rx.recv().expect("expired requests are answered, not dropped");
+        match resp {
+            Err(DlaError::Timeout { waited_ms }) => {
+                assert!(waited_ms >= 25, "reported wait {waited_ms}ms is under the deadline")
+            }
+            Err(other) => panic!("stalled request must time out, got {other:?}"),
+            Ok(_) => panic!("stalled request must time out, got a late answer"),
+        }
+    }
+    let metrics = server.shutdown();
+    let f = metrics.fault_stats();
+    assert_eq!(f.timeouts, 2);
+    assert_eq!(f.expired_in_queue, 2, "both expired before being served");
+}
+
+/// Forced queue-full bursts: a short burst is absorbed by the jittered
+/// admission retries (the caller never notices), a burst longer than the
+/// retry budget surfaces as a typed [`DlaError::QueueFull`] — and both
+/// outcomes land in the shutdown metrics.
+#[test]
+fn queue_full_bursts_are_retried_then_rejected() {
+    let mut rng = Pcg64::seed(603);
+    let mut req = || DlaRequest::Gemm {
+        alpha: 1.0,
+        a: MatrixF64::random(24, 12, &mut rng),
+        b: MatrixF64::random(12, 16, &mut rng),
+        beta: 0.0,
+        c: MatrixF64::zeros(24, 16),
+    };
+
+    // Burst shorter than the retry budget: absorbed.
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined).with_faults(plan("queuefull:3")),
+    )
+    .expect("server start");
+    let resp = server.call(req()).expect("short burst must be absorbed by retries");
+    assert!(matches!(resp, DlaResponse::Matrix { .. }));
+    let metrics = server.shutdown();
+    let f = metrics.fault_stats();
+    assert_eq!(f.retries, 3, "one retry per forced rejection");
+    assert_eq!(f.queue_full_rejections, 0);
+
+    // Burst outlasting the budget: typed rejection, then recovery.
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined).with_faults(plan("queuefull:64")),
+    )
+    .expect("server start");
+    let err = server.call(req()).err().expect("endless burst must reject");
+    assert!(matches!(err, DlaError::QueueFull { retries } if retries >= 1), "got {err:?}");
+    let metrics = server.shutdown();
+    assert!(metrics.fault_stats().queue_full_rejections >= 1);
+}
+
+/// The storm drill: concurrent submitters, a slow rank, and a one-shot
+/// pool panic at once. Every request is answered (no hangs, no lost
+/// replies), at most the panic's victim fails, and the pool ends the
+/// run fully recovered.
+#[test]
+fn concurrent_storm_answers_every_request() {
+    let server = std::sync::Arc::new(
+        CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined)
+                .with_workers(2)
+                .with_gemm_threads(2)
+                .with_batching(BatchPolicy::disabled())
+                .with_faults(plan("slow@1:2,panic@0:3")),
+        )
+        .expect("server start"),
+    );
+
+    let per_thread = 8;
+    let submitters = 3;
+    let mut joins = Vec::new();
+    for t in 0..submitters {
+        let server = std::sync::Arc::clone(&server);
+        joins.push(thread::spawn(move || {
+            let mut rng = Pcg64::seed(700 + t as u64);
+            let mut outcomes = Vec::new();
+            for i in 0..per_thread {
+                let resp = if i % 4 == 3 {
+                    server.call(DlaRequest::LuFactor {
+                        a: MatrixF64::random_diag_dominant(48, &mut rng),
+                        block: 12,
+                    })
+                } else {
+                    server.call(DlaRequest::Gemm {
+                        alpha: 1.0,
+                        a: MatrixF64::random(48, 32, &mut rng),
+                        b: MatrixF64::random(32, 40, &mut rng),
+                        beta: 0.0,
+                        c: MatrixF64::zeros(48, 40),
+                    })
+                };
+                outcomes.push(resp);
+            }
+            outcomes
+        }));
+    }
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for j in joins {
+        for resp in j.join().expect("submitter thread must not die") {
+            match resp {
+                Ok(_) => ok += 1,
+                Err(DlaError::Internal { .. }) => failed += 1,
+                Err(other) => panic!("unexpected error under the storm: {other:?}"),
+            }
+        }
+    }
+    assert_eq!(ok + failed, submitters * per_thread, "every request is answered");
+    assert!(failed <= 1, "only the panic's victim may fail, got {failed}");
+
+    let faults = server.fault_state().expect("armed");
+    assert_eq!(faults.injected().panics, 1);
+    assert!(faults.injected().delays >= 1, "the slow rank must actually have slept");
+
+    let server = std::sync::Arc::into_inner(server).expect("all submitters joined");
+    let metrics = server.shutdown();
+    assert_eq!(metrics.fault_stats().worker_panics, 1);
+    let pool = metrics.pool_stats().expect("pool stats");
+    assert_eq!(pool.recoveries, pool.epochs_poisoned, "storm must end recovered");
+}

@@ -210,7 +210,8 @@ fn harness_smoke_all_experiments() {
 fn server_isolates_request_failures() {
     let server = CoordinatorServer::start(
         ServerConfig::new(host_xeon(), ConfigMode::Refined).with_workers(2),
-    );
+    )
+    .unwrap();
     let mut rng = Pcg64::seed(1004);
     let mut pending = Vec::new();
     for i in 0..10 {
@@ -226,7 +227,7 @@ fn server_isolates_request_failures() {
                 c: MatrixF64::zeros(24, 20),
             }
         };
-        pending.push((i, server.submit(req)));
+        pending.push((i, server.submit(req).unwrap()));
     }
     for (i, rx) in pending {
         let resp = rx.recv().unwrap();
