@@ -1,0 +1,243 @@
+//! Open-loop SLO stress harness for the QoS serving path.
+//!
+//! Drives the coordinator server with sustained open-loop load at a
+//! multiple of its calibrated capacity (default 2×) — mixed problem
+//! shapes, mixed dtypes (f64 + f32 GEMMs), mixed priority tiers
+//! (~50% Interactive / 30% Batch / 20% Background) — through the async
+//! submit API, and reports per-tier latency percentiles (p50/p95/p99),
+//! shed/reject rates, and the server's own QoS ledger. Unlike the
+//! closed-loop ablation benches, arrivals do not wait for completions:
+//! overload actually accumulates queue delay, so the adaptive shedder
+//! and the per-tier retry budgets are exercised for real.
+//!
+//! Knobs: `DLA_THREADS` (pool width, default 4), `DLA_SLO_REQS` (total
+//! requests, default 600), `DLA_SLO_RATE_X` (offered-load multiple of
+//! calibrated capacity, default 2.0). Results append to the
+//! `BENCH_gemm.json` trend file (see ROADMAP).
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+use dla_codesign::arch::detect_host;
+use dla_codesign::bench::JsonBench;
+use dla_codesign::coordinator::{
+    CoordinatorServer, DlaError, DlaRequest, JobHandle, Priority, ServerConfig,
+};
+use dla_codesign::gemm::ConfigMode;
+use dla_codesign::runtime::FaultPlan;
+use dla_codesign::util::{MatrixF32, MatrixF64, Pcg64};
+
+/// Percentile of an ascending-sorted slice (nearest-rank).
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// The mixed-size / mixed-dtype request generator: three small-GEMM
+/// shapes, every fourth request in f32.
+fn request(i: usize, rng: &mut Pcg64) -> DlaRequest {
+    let shapes: [(usize, usize, usize); 3] = [(48, 48, 32), (32, 64, 16), (64, 32, 24)];
+    let (m, n, k) = shapes[i % shapes.len()];
+    if i % 4 == 3 {
+        DlaRequest::GemmF32 {
+            alpha: 1.0,
+            a: MatrixF32::random(m, k, rng),
+            b: MatrixF32::random(k, n, rng),
+            beta: 0.0,
+            c: MatrixF32::zeros(m, n),
+        }
+    } else {
+        DlaRequest::Gemm {
+            alpha: 1.0,
+            a: MatrixF64::random(m, k, rng),
+            b: MatrixF64::random(k, n, rng),
+            beta: 0.0,
+            c: MatrixF64::zeros(m, n),
+        }
+    }
+}
+
+/// ~50/30/20 tier mix, deterministic in the request index.
+fn tier_for(i: usize) -> Priority {
+    match i % 10 {
+        0..=4 => Priority::Interactive,
+        5..=7 => Priority::Batch,
+        _ => Priority::Background,
+    }
+}
+
+fn main() {
+    let arch = detect_host();
+    let threads: usize =
+        std::env::var("DLA_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(4).max(1);
+    let nreq: usize =
+        std::env::var("DLA_SLO_REQS").ok().and_then(|v| v.parse().ok()).unwrap_or(600).max(30);
+    let rate_x: f64 = std::env::var("DLA_SLO_RATE_X")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|x: &f64| x.is_finite() && *x > 0.0)
+        .unwrap_or(2.0);
+    let workers = 2usize;
+
+    // Pin the empty armed plan: a reproducible harness must not pick up
+    // whatever DLA_FAULTS drill the environment has exported.
+    let server = CoordinatorServer::start(
+        ServerConfig::new(arch, ConfigMode::Refined)
+            .with_workers(workers)
+            .with_gemm_threads(threads)
+            .with_faults(FaultPlan::parse("arm").expect("armed empty plan")),
+    )
+    .expect("server start");
+
+    // --- calibrate capacity: sequential closed-loop service rate -------
+    let mut rng = Pcg64::seed(90);
+    let cal_n = 20;
+    let sw = Instant::now();
+    for i in 0..cal_n {
+        server.call(request(i, &mut rng)).expect("calibration request");
+    }
+    let mean_service = sw.elapsed().as_secs_f64() / cal_n as f64;
+    let capacity_rps = workers as f64 / mean_service;
+    let offered_rps = rate_x * capacity_rps;
+    let interval = std::time::Duration::from_secs_f64(1.0 / offered_rps);
+    println!(
+        "=== slo stress: {nreq} reqs open-loop at {offered_rps:.0} req/s \
+         ({rate_x:.1}x of ~{capacity_rps:.0} req/s capacity, x{threads} pool, {workers} workers) ==="
+    );
+
+    // --- open-loop drive ------------------------------------------------
+    // Per-tier collector threads wait on the async handles in submission
+    // order, so a slow tier cannot inflate another tier's measured
+    // latency.
+    let mut txs = Vec::new();
+    let mut collectors = Vec::new();
+    for _ in Priority::ALL {
+        let (tx, rx) = mpsc::channel::<(Instant, JobHandle)>();
+        txs.push(tx);
+        collectors.push(thread::spawn(move || {
+            let mut lat_s: Vec<f64> = Vec::new();
+            let mut failed = 0u64;
+            for (t0, handle) in rx {
+                match handle.wait() {
+                    Ok(_) => lat_s.push(t0.elapsed().as_secs_f64()),
+                    Err(_) => failed += 1,
+                }
+            }
+            (lat_s, failed)
+        }));
+    }
+    let mut client_shed = [0u64; 3];
+    let mut client_rejected = [0u64; 3];
+    let drive = Instant::now();
+    for i in 0..nreq {
+        let next_at = drive + interval.mul_f64(i as f64);
+        // Open loop: pace arrivals on the clock, never on completions.
+        loop {
+            let now = Instant::now();
+            if now >= next_at {
+                break;
+            }
+            let ahead = next_at - now;
+            if ahead > std::time::Duration::from_micros(200) {
+                thread::sleep(ahead - std::time::Duration::from_micros(100));
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        let tier = tier_for(i);
+        let t0 = Instant::now();
+        match server.submit_async_at(request(i, &mut rng), tier) {
+            Ok(handle) => {
+                let _ = txs[tier.index()].send((t0, handle));
+            }
+            Err(DlaError::Overloaded { .. }) => client_shed[tier.index()] += 1,
+            Err(DlaError::QueueFull { .. }) | Err(DlaError::Timeout { .. }) => {
+                client_rejected[tier.index()] += 1
+            }
+            Err(e) => panic!("unexpected admission error: {e:?}"),
+        }
+    }
+    let drive_s = drive.elapsed().as_secs_f64();
+    drop(txs);
+    let mut per_tier: Vec<(Vec<f64>, u64)> = Vec::new();
+    for c in collectors {
+        per_tier.push(c.join().expect("collector thread"));
+    }
+    let drain_s = drive.elapsed().as_secs_f64();
+
+    let metrics = server.shutdown();
+    let qos = metrics.qos_stats();
+    println!("{}", metrics.summary());
+
+    // --- report ----------------------------------------------------------
+    let mut j = JsonBench::new(
+        "open-loop SLO stress (mixed shapes/dtypes/tiers at a capacity multiple)",
+    );
+    j.entry(
+        "slo_open_loop",
+        &[
+            ("threads", threads as f64),
+            ("workers", workers as f64),
+            ("requests", nreq as f64),
+            ("rate_multiple", rate_x),
+            ("capacity_rps_estimate", capacity_rps),
+            ("offered_rps", offered_rps),
+            ("drive_seconds", drive_s),
+            ("drain_seconds", drain_s),
+        ],
+    );
+    for tier in Priority::ALL {
+        let i = tier.index();
+        let (mut lat, failed) = (per_tier[i].0.clone(), per_tier[i].1);
+        lat.sort_by(f64::total_cmp);
+        let us = |s: f64| s * 1e6;
+        let p50 = us(pct(&lat, 0.50));
+        let p95 = us(pct(&lat, 0.95));
+        let p99 = us(pct(&lat, 0.99));
+        let submitted = qos.submitted[i];
+        let shed_rate = if submitted > 0 { qos.shed[i] as f64 / submitted as f64 } else { 0.0 };
+        println!(
+            "  {:<11} {:>4} completed / {:>4} submitted | p50 {:>9.0} us  p95 {:>9.0} us  \
+             p99 {:>9.0} us | {} shed ({:.0}%), {} rejected, {} failed",
+            tier.label(),
+            lat.len(),
+            submitted,
+            p50,
+            p95,
+            p99,
+            qos.shed[i],
+            shed_rate * 100.0,
+            qos.rejected[i],
+            qos.failed[i] + failed,
+        );
+        j.entry(
+            &format!("slo_tier_{}", tier.label()),
+            &[
+                ("submitted", submitted as f64),
+                ("completed", qos.completed[i] as f64),
+                ("shed", qos.shed[i] as f64),
+                ("rejected", qos.rejected[i] as f64),
+                ("failed", qos.failed[i] as f64),
+                ("cancelled", qos.cancelled[i] as f64),
+                ("shed_rate", shed_rate),
+                ("p50_us", p50),
+                ("p95_us", p95),
+                ("p99_us", p99),
+                ("client_shed_seen", client_shed[i] as f64),
+                ("client_rejected_seen", client_rejected[i] as f64),
+            ],
+        );
+    }
+    assert!(
+        qos.reconciles(),
+        "the ledger must reconcile — no silent drops under overload: {qos:?}"
+    );
+    match j.write("BENCH_gemm.json") {
+        Ok(()) => println!("-> BENCH_gemm.json written (per-tier SLO percentiles + shed rates)"),
+        Err(e) => eprintln!("warning: could not write BENCH_gemm.json: {e}"),
+    }
+}

@@ -188,6 +188,10 @@ pub struct FaultMetrics {
     /// Requests dropped in the admission queue because their deadline
     /// had already expired when a worker dequeued them.
     pub expired_in_queue: u64,
+    /// Degraded-window slots still unconsumed at shutdown (the window
+    /// was armed by a panic but the remaining requests never arrived).
+    /// Zero on a server that never degraded or fully drained its window.
+    pub degraded_remaining: u64,
 }
 
 impl FaultMetrics {
@@ -205,6 +209,71 @@ impl FaultMetrics {
         self.degraded_requests += other.degraded_requests;
         self.workers_lost += other.workers_lost;
         self.expired_in_queue += other.expired_in_queue;
+        self.degraded_remaining += other.degraded_remaining;
+    }
+}
+
+/// Per-tier QoS accounting: how many requests each [`Priority`] tier
+/// submitted and how every one of them was resolved. Arrays are indexed
+/// by `Priority::index()` (0 = Interactive, 1 = Batch, 2 = Background).
+/// The no-silent-drops invariant is [`QosMetrics::reconciles`]: per
+/// tier, `submitted == completed + failed + shed + rejected + cancelled`.
+///
+/// [`Priority`]: crate::coordinator::qos::Priority
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QosMetrics {
+    /// Validated requests that entered admission, per tier.
+    pub submitted: [u64; 3],
+    /// Requests answered `Ok`, per tier.
+    pub completed: [u64; 3],
+    /// Requests answered with a server-side error (panic, breakdown,
+    /// queue-expired deadline, ...), per tier.
+    pub failed: [u64; 3],
+    /// Requests shed at admission by the overload detector
+    /// (`DlaError::Overloaded`), per tier.
+    pub shed: [u64; 3],
+    /// Requests rejected at admission after the tier's retry budget
+    /// (`QueueFull`), on deadline expiry during backoff (`Timeout`), or
+    /// against a closed queue (`WorkerLost`), per tier.
+    pub rejected: [u64; 3],
+    /// Requests cancelled through their `JobHandle` while still queued,
+    /// per tier.
+    pub cancelled: [u64; 3],
+}
+
+impl QosMetrics {
+    /// True once any tier saw traffic (gates the summary line).
+    pub fn any(&self) -> bool {
+        self.submitted.iter().any(|&n| n > 0)
+    }
+
+    /// Total submissions across all tiers.
+    pub fn total_submitted(&self) -> u64 {
+        self.submitted.iter().sum()
+    }
+
+    /// The no-silent-drops invariant: every submitted request was
+    /// resolved exactly one way.
+    pub fn reconciles(&self) -> bool {
+        (0..3).all(|i| {
+            self.submitted[i]
+                == self.completed[i]
+                    + self.failed[i]
+                    + self.shed[i]
+                    + self.rejected[i]
+                    + self.cancelled[i]
+        })
+    }
+
+    pub fn merge(&mut self, other: &QosMetrics) {
+        for i in 0..3 {
+            self.submitted[i] += other.submitted[i];
+            self.completed[i] += other.completed[i];
+            self.failed[i] += other.failed[i];
+            self.shed[i] += other.shed[i];
+            self.rejected[i] += other.rejected[i];
+            self.cancelled[i] += other.cancelled[i];
+        }
     }
 }
 
@@ -231,6 +300,9 @@ pub struct Metrics {
     refine: RefineMetrics,
     /// Failure-path accounting (all-zero on a healthy server).
     faults: FaultMetrics,
+    /// Per-tier QoS accounting (all-zero until the server folds its
+    /// tier counters at shutdown).
+    qos: QosMetrics,
 }
 
 impl Metrics {
@@ -309,6 +381,17 @@ impl Metrics {
         &self.faults
     }
 
+    /// Mutable access to the per-tier QoS counters (the server folds its
+    /// shared `TierCounters` snapshot here at shutdown).
+    pub fn qos_mut(&mut self) -> &mut QosMetrics {
+        &mut self.qos
+    }
+
+    /// The per-tier QoS counters.
+    pub fn qos_stats(&self) -> &QosMetrics {
+        &self.qos
+    }
+
     pub fn merge(&mut self, other: Metrics) {
         // Workers of one server share a single pool, so every snapshot
         // observes the same monotone counters: keep the latest (largest
@@ -325,6 +408,7 @@ impl Metrics {
         self.batch.merge(&other.batch);
         self.refine.merge(&other.refine);
         self.faults.merge(&other.faults);
+        self.qos.merge(&other.qos);
         for (kind, km) in other.kinds {
             let mine = self.kinds.entry(kind).or_default();
             mine.flops.merge(&km.flops);
@@ -406,10 +490,18 @@ impl Metrics {
         }
         if !self.faults.is_clean() {
             let f = &self.faults;
+            // The remaining-window gauge only shows up when a degraded
+            // window was still armed at shutdown, so pre-existing
+            // resilience output is byte-identical.
+            let remaining = if f.degraded_remaining > 0 {
+                format!(", {} degraded-window remaining", f.degraded_remaining)
+            } else {
+                String::new()
+            };
             out.push_str(&format!(
                 "resilience: {} invalid inputs, {} timeouts ({} expired in queue), \
                  {} queue-full rejections ({} retries), {} worker panics, \
-                 {} degraded requests, {} workers lost\n",
+                 {} degraded requests, {} workers lost{}\n",
                 f.invalid_inputs,
                 f.timeouts,
                 f.expired_in_queue,
@@ -418,7 +510,27 @@ impl Metrics {
                 f.worker_panics,
                 f.degraded_requests,
                 f.workers_lost,
+                remaining,
             ));
+        }
+        if self.qos.any() {
+            let q = &self.qos;
+            for (i, label) in ["interactive", "batch", "background"].iter().enumerate() {
+                if q.submitted[i] == 0 {
+                    continue;
+                }
+                out.push_str(&format!(
+                    "qos {}: {} submitted, {} completed, {} shed, {} rejected, \
+                     {} failed, {} cancelled\n",
+                    label,
+                    q.submitted[i],
+                    q.completed[i],
+                    q.shed[i],
+                    q.rejected[i],
+                    q.failed[i],
+                    q.cancelled[i],
+                ));
+            }
         }
         out
     }
@@ -453,6 +565,47 @@ mod tests {
         assert!(s.contains("resilience: 2 invalid inputs"), "{s}");
         assert!(s.contains("4 timeouts"), "{s}");
         assert!(s.contains("4 degraded requests"), "{s}");
+    }
+
+    #[test]
+    fn qos_metrics_reconcile_merge_and_summarize() {
+        let mut a = Metrics::new();
+        assert!(!a.qos_stats().any());
+        assert!(!a.summary().contains("qos "), "no qos lines without tier traffic");
+        let q = a.qos_mut();
+        q.submitted = [5, 2, 4];
+        q.completed = [4, 2, 0];
+        q.failed = [1, 0, 0];
+        q.shed = [0, 0, 3];
+        q.rejected = [0, 0, 1];
+        assert!(a.qos_stats().reconciles());
+        assert_eq!(a.qos_stats().total_submitted(), 11);
+        let mut b = Metrics::new();
+        b.qos_mut().submitted = [1, 0, 0];
+        b.qos_mut().cancelled = [1, 0, 0];
+        a.merge(b);
+        let q = a.qos_stats();
+        assert!(q.reconciles());
+        assert_eq!(q.submitted, [6, 2, 4]);
+        assert_eq!(q.cancelled, [1, 0, 0]);
+        let s = a.summary();
+        assert!(s.contains("qos interactive: 6 submitted, 4 completed"), "{s}");
+        assert!(s.contains("qos background: 4 submitted, 0 completed, 3 shed, 1 rejected"), "{s}");
+        // A lopsided ledger fails to reconcile.
+        a.qos_mut().completed[0] += 1;
+        assert!(!a.qos_stats().reconciles());
+    }
+
+    #[test]
+    fn degraded_remaining_gauge_surfaces_only_when_armed() {
+        let mut m = Metrics::new();
+        m.faults_mut().degraded_requests = 3;
+        assert!(!m.summary().contains("degraded-window remaining"), "drained window: no gauge");
+        m.faults_mut().degraded_remaining = 5;
+        assert!(!m.fault_stats().is_clean());
+        let s = m.summary();
+        assert!(s.contains("3 degraded requests"), "{s}");
+        assert!(s.contains("5 degraded-window remaining"), "{s}");
     }
 
     #[test]

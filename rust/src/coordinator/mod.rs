@@ -50,6 +50,7 @@
 #[cfg(feature = "pjrt")]
 pub mod lu_driver;
 pub mod metrics;
+pub mod qos;
 pub mod requests;
 pub mod server;
 
@@ -57,9 +58,10 @@ pub mod server;
 pub use lu_driver::{lu_via_artifacts, LuArtifactResult};
 pub use crate::model::batchplan::BatchPolicy;
 pub use crate::util::DlaError;
-pub use metrics::{BatchMetrics, FaultMetrics, Metrics, RefineMetrics};
+pub use metrics::{BatchMetrics, FaultMetrics, Metrics, QosMetrics, RefineMetrics};
+pub use qos::{OverloadLevel, Priority};
 pub use requests::{DlaRequest, DlaResponse};
-pub use server::{CoordinatorServer, ServerConfig};
+pub use server::{CoordinatorServer, JobHandle, ServerConfig};
 
 use crate::arch::Arch;
 use crate::gemm::{ConfigMode, GemmEngine};

@@ -1,0 +1,653 @@
+//! QoS tiers, weighted-fair admission, and adaptive overload detection
+//! for the coordinator server.
+//!
+//! This module owns the three serving-policy pieces the overload layer
+//! is built from:
+//!
+//! - [`Priority`] — the three QoS tiers a request can be submitted at
+//!   (`Interactive` > `Batch` > `Background`), each carrying its own
+//!   dequeue weight and admission retry budget. The per-server default
+//!   tier comes from `DLA_PRIORITY` (pinned via
+//!   `ServerConfig::with_default_priority`), falling back to
+//!   `Interactive` so un-annotated traffic keeps the pre-QoS behavior:
+//!   never shed, full retry budget.
+//! - [`QosQueue`] — the tiered admission queue that replaces a plain
+//!   bounded channel: one FIFO per tier, one shared backpressure bound,
+//!   and a credit-based weighted-fair dequeue ([`WeightedCredits`]) with
+//!   a hard starvation bound — when every tier stays non-empty, each
+//!   tier is served at least `weight` times per refill cycle of
+//!   `sum(weights)` dispatches, so no tier can be starved forever by a
+//!   hotter one.
+//! - [`OverloadDetector`] — the queue-delay detector behind adaptive
+//!   load shedding: it smooths the measured admission-queue wait and the
+//!   per-request service cost (the larger of the `BatchPlanner` analytic
+//!   estimate and the measured wall time — the analytic model is the
+//!   floor, degraded service raises it) into two EWMAs and classifies
+//!   their ratio into an [`OverloadLevel`]. The server sheds
+//!   `Background` work at the first level and `Batch` work at the
+//!   second with typed `DlaError::Overloaded`; `Interactive` is never
+//!   shed. The severe level also arms *brownout*: a handler panic
+//!   widens the degraded window by [`OverloadLevel::brownout_factor`]
+//!   instead of letting the server collapse into a panic/retry spiral.
+//!
+//! Everything here is lock-light and allocation-free on the hot path:
+//! the queue is one mutex + condvar (exactly what the channel it
+//! replaces cost), the detector is two relaxed atomics.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use super::metrics::QosMetrics;
+
+/// A request's QoS tier. Lower discriminant = higher priority.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive traffic: highest dequeue weight, the full
+    /// admission retry budget, and **never shed** by the overload
+    /// detector — the tier whose deadlines the shedding policy protects.
+    Interactive = 0,
+    /// Throughput traffic that still has a caller waiting: middle
+    /// weight, middle retry budget, shed only at the severe overload
+    /// level.
+    Batch = 1,
+    /// Best-effort work (bulk jobs, speculative prefetch, the `flood:N`
+    /// drill): lowest weight, a minimal retry budget, first to be shed.
+    Background = 2,
+}
+
+impl Priority {
+    /// All tiers, highest priority first (index order).
+    pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Batch, Priority::Background];
+
+    /// Number of tiers (array dimension for per-tier counters).
+    pub const COUNT: usize = 3;
+
+    /// Dense index (0 = Interactive, 1 = Batch, 2 = Background).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Human label, also carried inside `DlaError::Overloaded`.
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::Background => "background",
+        }
+    }
+
+    /// Weighted-fair dequeue weight: per refill cycle of
+    /// `4 + 2 + 1 = 7` dispatches, Interactive is served 4 times, Batch
+    /// 2, Background 1 (when every tier has work).
+    pub fn weight(self) -> u32 {
+        match self {
+            Priority::Interactive => 4,
+            Priority::Batch => 2,
+            Priority::Background => 1,
+        }
+    }
+
+    /// The per-tier admission retry budget: total `try_push` attempts
+    /// (initial + retries) before a persistently full queue turns into
+    /// `DlaError::QueueFull`. Interactive keeps the full pre-QoS budget;
+    /// lower tiers give up sooner so their retries cannot amplify an
+    /// overload.
+    pub fn admission_attempts(self) -> u32 {
+        match self {
+            Priority::Interactive => 8,
+            Priority::Batch => 4,
+            Priority::Background => 2,
+        }
+    }
+
+    /// Parse a tier name (`interactive` / `batch` / `background`,
+    /// case-insensitive). `None` for anything else — a typo must fail
+    /// toward the default tier, never toward silently shed traffic.
+    pub fn parse(s: &str) -> Option<Priority> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("interactive") {
+            Some(Priority::Interactive)
+        } else if s.eq_ignore_ascii_case("batch") {
+            Some(Priority::Batch)
+        } else if s.eq_ignore_ascii_case("background") {
+            Some(Priority::Background)
+        } else {
+            None
+        }
+    }
+
+    /// The `DLA_PRIORITY` environment override for servers that did not
+    /// pin a default tier; `None` when unset or unparseable.
+    pub fn from_env() -> Option<Priority> {
+        Priority::parse(std::env::var("DLA_PRIORITY").ok()?.as_str())
+    }
+}
+
+impl Default for Priority {
+    /// Un-annotated traffic is Interactive: never shed, full retry
+    /// budget — exactly the pre-QoS serving behavior.
+    fn default() -> Self {
+        Priority::Interactive
+    }
+}
+
+/// Credit-based weighted round-robin over the three tiers.
+///
+/// Each tier starts with `weight` credits. A pick scans tiers in
+/// priority order and serves the first *eligible* (non-empty) tier that
+/// still has credit, spending one; when every eligible tier is out of
+/// credit, all credits refill to the weights and the scan repeats. The
+/// starvation bound follows directly: a tier that stays eligible is
+/// served at least `weight` times within every refill cycle, and a
+/// cycle is at most `sum(weights)` picks long.
+#[derive(Clone, Debug)]
+pub struct WeightedCredits {
+    weights: [u32; Priority::COUNT],
+    credits: [u32; Priority::COUNT],
+}
+
+impl Default for WeightedCredits {
+    fn default() -> Self {
+        let weights =
+            [Priority::Interactive.weight(), Priority::Batch.weight(), Priority::Background.weight()];
+        Self { weights, credits: weights }
+    }
+}
+
+impl WeightedCredits {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sum of all weights — the refill-cycle length, and therefore the
+    /// starvation bound in dispatches.
+    pub fn cycle_len(&self) -> u32 {
+        self.weights.iter().sum()
+    }
+
+    /// Pick the tier index to serve among the `eligible` tiers, spending
+    /// one credit (refilling every credit when the eligible tiers are
+    /// all spent). `None` only when no tier is eligible.
+    pub fn pick(&mut self, eligible: [bool; Priority::COUNT]) -> Option<usize> {
+        if !eligible.iter().any(|&e| e) {
+            return None;
+        }
+        loop {
+            for i in 0..Priority::COUNT {
+                if eligible[i] && self.credits[i] > 0 {
+                    self.credits[i] -= 1;
+                    return Some(i);
+                }
+            }
+            // Every eligible tier is out of credit: start a new cycle.
+            self.credits = self.weights;
+        }
+    }
+}
+
+/// Why a [`QosQueue::try_push`] handed the item back.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue is at its shared backpressure bound; the caller may
+    /// retry (within its tier's budget) or reject.
+    Full(T),
+    /// The queue was closed (server shutting down); never retried.
+    Closed(T),
+}
+
+struct QosState<T> {
+    queues: [VecDeque<T>; Priority::COUNT],
+    credits: WeightedCredits,
+    pending: usize,
+    closed: bool,
+}
+
+/// The tiered admission queue: one FIFO per [`Priority`], a single
+/// shared backpressure bound across all tiers (so low-priority floods
+/// cannot grow memory without bound), and a blocking weighted-fair
+/// [`QosQueue::pop`]. Replaces the server's bounded `sync_channel` —
+/// same cost shape (one mutex + condvar), tier-aware dequeue.
+pub struct QosQueue<T> {
+    max_pending: usize,
+    state: Mutex<QosState<T>>,
+    cv: Condvar,
+}
+
+impl<T> QosQueue<T> {
+    /// A queue bounded at `max_pending` total entries across all tiers.
+    pub fn new(max_pending: usize) -> Self {
+        Self {
+            max_pending: max_pending.max(1),
+            state: Mutex::new(QosState {
+                queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                credits: WeightedCredits::new(),
+                pending: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue at a tier, or hand the item back when the queue is at its
+    /// bound ([`PushError::Full`], retryable) or closed
+    /// ([`PushError::Closed`], terminal).
+    pub fn try_push(&self, tier: Priority, item: T) -> Result<(), PushError<T>> {
+        {
+            let mut st = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            if st.closed {
+                return Err(PushError::Closed(item));
+            }
+            if st.pending >= self.max_pending {
+                return Err(PushError::Full(item));
+            }
+            st.pending += 1;
+            st.queues[tier.index()].push_back(item);
+        }
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking weighted-fair dequeue. Returns `None` only once the
+    /// queue is closed **and** fully drained — every accepted entry is
+    /// handed to a consumer before shutdown completes.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        loop {
+            let eligible = [
+                !st.queues[0].is_empty(),
+                !st.queues[1].is_empty(),
+                !st.queues[2].is_empty(),
+            ];
+            if eligible.iter().any(|&e| e) {
+                if let Some(i) = st.credits.pick(eligible) {
+                    if let Some(item) = st.queues[i].pop_front() {
+                        st.pending -= 1;
+                        return Some(item);
+                    }
+                }
+                // Defensive: pick() disagreed with the emptiness probe
+                // (impossible under this lock) — re-evaluate, never hang.
+                continue;
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    /// Entries currently parked across all tiers.
+    pub fn pending(&self) -> usize {
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner).pending
+    }
+
+    /// Close the queue: pushes fail with [`PushError::Closed`], pops
+    /// drain the remaining entries and then return `None`. Idempotent.
+    pub fn close(&self) {
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner).closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// The overload classification the detector reports, ordered by
+/// severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OverloadLevel {
+    /// Queue delay is commensurate with service cost: admit everything.
+    Healthy = 0,
+    /// Queue delay has outrun service cost: shed `Background`.
+    SheddingBackground = 1,
+    /// Severe overload: shed `Batch` too, and arm brownout — a handler
+    /// panic in this state widens the degraded window by
+    /// [`Self::brownout_factor`] instead of collapsing.
+    SheddingBatch = 2,
+}
+
+impl OverloadLevel {
+    /// How much a handler panic widens the degraded serial window at
+    /// this level (brownout: under severe overload the server trades
+    /// much more throughput for stability instead of oscillating between
+    /// the pooled path and fresh panics).
+    pub fn brownout_factor(self) -> u64 {
+        match self {
+            OverloadLevel::Healthy | OverloadLevel::SheddingBackground => 1,
+            OverloadLevel::SheddingBatch => 4,
+        }
+    }
+}
+
+/// EWMA smoothing shift: `alpha = 1/8` (new = old - old/8 + sample/8),
+/// seeded with the first sample so one genuinely long wait is visible
+/// immediately.
+const EWMA_SHIFT: u32 = 3;
+/// Below this smoothed queue delay the server is Healthy regardless of
+/// the ratio — microsecond-scale waits on microsecond-scale requests are
+/// not overload.
+const MIN_WAIT_US: u64 = 500;
+/// Floor for the smoothed cost, so the ratio stays meaningful for
+/// near-zero estimates (degenerate shapes).
+const COST_FLOOR_US: u64 = 50;
+/// Queue delay / service cost ratio at which Background is shed.
+const SHED_BACKGROUND_RATIO: u64 = 4;
+/// Ratio at which Batch is shed too and brownout arms.
+const SHED_BATCH_RATIO: u64 = 12;
+
+/// Queue-delay overload detector: two EWMAs (measured admission-queue
+/// wait; per-request service cost = max(analytic estimate, measured
+/// wall time)) and a ratio classifier. All updates are relaxed atomics —
+/// the detector tolerates torn interleavings, it only has to be right on
+/// average.
+#[derive(Debug, Default)]
+pub struct OverloadDetector {
+    ewma_wait_us: AtomicU64,
+    ewma_cost_us: AtomicU64,
+}
+
+fn ewma_update(cell: &AtomicU64, sample: u64) {
+    let _ = cell.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |old| {
+        Some(if old == 0 {
+            sample
+        } else {
+            old - (old >> EWMA_SHIFT) + (sample >> EWMA_SHIFT)
+        })
+    });
+}
+
+impl OverloadDetector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request's measured admission-queue wait (submit →
+    /// dequeue), in microseconds.
+    pub fn observe_wait_us(&self, us: u64) {
+        ewma_update(&self.ewma_wait_us, us);
+    }
+
+    /// Record one request's service cost in microseconds — the caller
+    /// passes `max(analytic estimate, measured wall time)`: the
+    /// `BatchPlanner` model is the floor, so a debug build or a degraded
+    /// machine (measured ≫ model) raises the baseline instead of
+    /// tripping the detector on model error.
+    pub fn observe_cost_us(&self, us: u64) {
+        ewma_update(&self.ewma_cost_us, us.max(1));
+    }
+
+    /// The smoothed queue delay, in microseconds (what
+    /// `DlaError::Overloaded` carries).
+    pub fn queue_delay_us(&self) -> u64 {
+        self.ewma_wait_us.load(Ordering::Relaxed)
+    }
+
+    /// Classify the current wait/cost ratio.
+    pub fn level(&self) -> OverloadLevel {
+        let wait = self.ewma_wait_us.load(Ordering::Relaxed);
+        if wait < MIN_WAIT_US {
+            return OverloadLevel::Healthy;
+        }
+        let cost = self.ewma_cost_us.load(Ordering::Relaxed).max(COST_FLOOR_US);
+        if wait >= cost.saturating_mul(SHED_BATCH_RATIO) {
+            OverloadLevel::SheddingBatch
+        } else if wait >= cost.saturating_mul(SHED_BACKGROUND_RATIO) {
+            OverloadLevel::SheddingBackground
+        } else {
+            OverloadLevel::Healthy
+        }
+    }
+
+    /// Does the current level shed this tier? `Interactive` is never
+    /// shed — the whole point of shedding the others is to keep its
+    /// deadlines safe.
+    pub fn sheds(&self, tier: Priority) -> bool {
+        match tier {
+            Priority::Interactive => false,
+            Priority::Batch => self.level() >= OverloadLevel::SheddingBatch,
+            Priority::Background => self.level() >= OverloadLevel::SheddingBackground,
+        }
+    }
+}
+
+/// Per-tier submission/outcome counters, shared (`Arc`) between the
+/// submit side, the workers, and the batcher; folded into
+/// [`QosMetrics`] at shutdown. The accounting invariant (asserted by
+/// `tests/qos.rs`): for every tier,
+/// `submitted == completed + failed + shed + rejected + cancelled` —
+/// no silent drops.
+#[derive(Debug, Default)]
+pub struct TierCounters {
+    submitted: [AtomicU64; Priority::COUNT],
+    completed: [AtomicU64; Priority::COUNT],
+    failed: [AtomicU64; Priority::COUNT],
+    shed: [AtomicU64; Priority::COUNT],
+    rejected: [AtomicU64; Priority::COUNT],
+    cancelled: [AtomicU64; Priority::COUNT],
+}
+
+impl TierCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A validated request entered admission at this tier.
+    pub fn add_submitted(&self, t: Priority) {
+        self.submitted[t.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was answered `Ok`.
+    pub fn add_completed(&self, t: Priority) {
+        self.completed[t.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was answered with a server-side error (panic, breakdown,
+    /// deadline expiry in the queue, ...).
+    pub fn add_failed(&self, t: Priority) {
+        self.failed[t.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The overload detector shed the request at admission
+    /// (`DlaError::Overloaded`).
+    pub fn add_shed(&self, t: Priority) {
+        self.shed[t.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Admission gave up (`QueueFull` after the tier's retry budget,
+    /// deadline expiry during backoff, or a closed queue).
+    pub fn add_rejected(&self, t: Priority) {
+        self.rejected[t.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The caller cancelled the job while it was still queued.
+    pub fn add_cancelled(&self, t: Priority) {
+        self.cancelled[t.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot into the plain metrics struct.
+    pub fn snapshot(&self) -> QosMetrics {
+        let load = |a: &[AtomicU64; Priority::COUNT]| {
+            [a[0].load(Ordering::Relaxed), a[1].load(Ordering::Relaxed), a[2].load(Ordering::Relaxed)]
+        };
+        QosMetrics {
+            submitted: load(&self.submitted),
+            completed: load(&self.completed),
+            failed: load(&self.failed),
+            shed: load(&self.shed),
+            rejected: load(&self.rejected),
+            cancelled: load(&self.cancelled),
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_parse_and_env_default() {
+        assert_eq!(Priority::parse("interactive"), Some(Priority::Interactive));
+        assert_eq!(Priority::parse(" Batch "), Some(Priority::Batch));
+        assert_eq!(Priority::parse("BACKGROUND"), Some(Priority::Background));
+        assert_eq!(Priority::parse("realtime"), None, "typos fail toward the default tier");
+        assert_eq!(Priority::default(), Priority::Interactive);
+        assert!(Priority::Interactive < Priority::Batch);
+        assert_eq!(Priority::ALL.map(Priority::index), [0, 1, 2]);
+    }
+
+    #[test]
+    fn budgets_and_weights_are_tier_ordered() {
+        assert!(Priority::Interactive.weight() > Priority::Batch.weight());
+        assert!(Priority::Batch.weight() > Priority::Background.weight());
+        assert!(
+            Priority::Interactive.admission_attempts() > Priority::Batch.admission_attempts()
+        );
+        assert!(
+            Priority::Batch.admission_attempts() > Priority::Background.admission_attempts()
+        );
+    }
+
+    #[test]
+    fn weighted_credits_follow_the_weights() {
+        let mut c = WeightedCredits::new();
+        let all = [true, true, true];
+        let cycle = c.cycle_len() as usize;
+        let picks: Vec<usize> = (0..cycle).map(|_| c.pick(all).unwrap()).collect();
+        let count = |t: usize| picks.iter().filter(|&&p| p == t).count() as u32;
+        assert_eq!(count(0), Priority::Interactive.weight());
+        assert_eq!(count(1), Priority::Batch.weight());
+        assert_eq!(count(2), Priority::Background.weight());
+        // Only one tier eligible: it is always picked (credits refill).
+        for _ in 0..20 {
+            assert_eq!(c.pick([false, false, true]), Some(2));
+        }
+        assert_eq!(c.pick([false, false, false]), None);
+    }
+
+    #[test]
+    fn queue_is_weighted_fair_and_starvation_bounded() {
+        let q: QosQueue<usize> = QosQueue::new(64);
+        for i in 0..12 {
+            q.try_push(Priority::Interactive, i).ok().unwrap();
+        }
+        for i in 0..6 {
+            q.try_push(Priority::Batch, 100 + i).ok().unwrap();
+        }
+        for i in 0..3 {
+            q.try_push(Priority::Background, 200 + i).ok().unwrap();
+        }
+        q.close();
+        let mut order = Vec::new();
+        while let Some(v) = q.pop() {
+            order.push(v);
+        }
+        assert_eq!(order.len(), 21, "close drains everything");
+        // First refill cycle (7 pops): 4 interactive, 2 batch, 1
+        // background — the weights, in priority-scan order.
+        assert_eq!(&order[..7], &[0, 1, 2, 3, 100, 101, 200]);
+        // Starvation bound: while background stays non-empty, the gap
+        // between consecutive background pops is at most one refill
+        // cycle.
+        let bg: Vec<usize> =
+            order.iter().enumerate().filter(|(_, &v)| v >= 200).map(|(i, _)| i).collect();
+        assert_eq!(bg.len(), 3);
+        for w in bg.windows(2) {
+            assert!(w[1] - w[0] <= 7, "background starved: pops at {bg:?}");
+        }
+        // Per-tier FIFO order is preserved.
+        let inter: Vec<usize> = order.iter().copied().filter(|&v| v < 100).collect();
+        assert_eq!(inter, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn queue_bounds_and_close_semantics() {
+        let q: QosQueue<u32> = QosQueue::new(2);
+        assert!(q.try_push(Priority::Background, 1).is_ok());
+        assert!(q.try_push(Priority::Interactive, 2).is_ok());
+        match q.try_push(Priority::Interactive, 3) {
+            Err(PushError::Full(v)) => assert_eq!(v, 3, "the bound hands the item back"),
+            _ => panic!("third push must see Full"),
+        }
+        assert_eq!(q.pending(), 2);
+        q.close();
+        match q.try_push(Priority::Interactive, 4) {
+            Err(PushError::Closed(v)) => assert_eq!(v, 4),
+            _ => panic!("post-close push must see Closed"),
+        }
+        // Drain-then-None: accepted entries are never dropped.
+        assert_eq!(q.pop(), Some(2), "interactive first");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn detector_levels_and_shedding_policy() {
+        let d = OverloadDetector::new();
+        assert_eq!(d.level(), OverloadLevel::Healthy);
+        assert!(!d.sheds(Priority::Background), "cold detector sheds nothing");
+        // Commensurate wait and cost: healthy even at millisecond scale.
+        d.observe_wait_us(2_000);
+        d.observe_cost_us(1_500);
+        assert_eq!(d.level(), OverloadLevel::Healthy);
+        // Waits outrun cost past the first ratio: Background shed.
+        for _ in 0..40 {
+            d.observe_wait_us(10_000);
+        }
+        assert_eq!(d.level(), OverloadLevel::SheddingBackground);
+        assert!(d.sheds(Priority::Background));
+        assert!(!d.sheds(Priority::Batch));
+        assert!(!d.sheds(Priority::Interactive));
+        // Far past the severe ratio: Batch shed too, brownout armed.
+        for _ in 0..60 {
+            d.observe_wait_us(60_000);
+        }
+        assert_eq!(d.level(), OverloadLevel::SheddingBatch);
+        assert!(d.sheds(Priority::Batch));
+        assert!(!d.sheds(Priority::Interactive), "interactive is never shed");
+        assert!(d.queue_delay_us() > MIN_WAIT_US);
+        // Recovery: waits fall back toward cost → healthy again.
+        for _ in 0..120 {
+            d.observe_wait_us(100);
+        }
+        assert_eq!(d.level(), OverloadLevel::Healthy);
+    }
+
+    #[test]
+    fn sub_threshold_waits_never_shed() {
+        let d = OverloadDetector::new();
+        // Huge ratio but microsecond-scale waits: not overload.
+        for _ in 0..50 {
+            d.observe_wait_us(400);
+            d.observe_cost_us(1);
+        }
+        assert_eq!(d.level(), OverloadLevel::Healthy);
+    }
+
+    #[test]
+    fn brownout_factor_by_level() {
+        assert_eq!(OverloadLevel::Healthy.brownout_factor(), 1);
+        assert_eq!(OverloadLevel::SheddingBackground.brownout_factor(), 1);
+        assert_eq!(OverloadLevel::SheddingBatch.brownout_factor(), 4);
+    }
+
+    #[test]
+    fn tier_counters_snapshot_and_reconcile() {
+        let c = TierCounters::new();
+        for _ in 0..5 {
+            c.add_submitted(Priority::Interactive);
+        }
+        c.add_completed(Priority::Interactive);
+        c.add_completed(Priority::Interactive);
+        c.add_failed(Priority::Interactive);
+        c.add_cancelled(Priority::Interactive);
+        c.add_rejected(Priority::Interactive);
+        c.add_submitted(Priority::Background);
+        c.add_shed(Priority::Background);
+        let m = c.snapshot();
+        assert!(m.reconciles(), "{m:?}");
+        assert_eq!(m.submitted[0], 5);
+        assert_eq!(m.shed[2], 1);
+        assert_eq!(m.total_submitted(), 6);
+    }
+}

@@ -9,6 +9,13 @@ use crate::model::GemmDims;
 use crate::util::{DlaError, MatrixF32, MatrixF64};
 
 /// A DLA service request.
+///
+/// A request carries *what* to compute; *how urgently* rides the submit
+/// API instead (`CoordinatorServer::submit_at` /
+/// `submit_async_at` take a [`Priority`] tier) so existing construction
+/// sites — and serialized request shapes — stay unchanged.
+///
+/// [`Priority`]: crate::coordinator::qos::Priority
 pub enum DlaRequest {
     /// `C = alpha * A * B + beta * C` (FP64).
     Gemm { alpha: f64, a: MatrixF64, b: MatrixF64, beta: f64, c: MatrixF64 },
@@ -127,6 +134,22 @@ impl DlaRequest {
             }
         }
         Ok(())
+    }
+
+    /// The synthetic request the `flood:N` fault injects at admission: a
+    /// small, finite, well-formed f64 GEMM, cheap enough that N of them
+    /// stress the queue rather than the pool. Injected at `Background`
+    /// tier with no reply consumer, so the overload drill exercises the
+    /// tier queues and the shedding policy end to end without a load
+    /// generator.
+    pub fn flood_probe() -> DlaRequest {
+        DlaRequest::Gemm {
+            alpha: 1.0,
+            a: MatrixF64::zeros(16, 8),
+            b: MatrixF64::zeros(8, 16),
+            beta: 0.0,
+            c: MatrixF64::zeros(16, 16),
+        }
     }
 
     /// Nominal flop count (for throughput accounting).
@@ -310,6 +333,15 @@ mod tests {
             c: MatrixF64::zeros(10, 30),
         };
         assert!(!bad.gemm_shape_consistent());
+    }
+
+    #[test]
+    fn flood_probe_is_a_valid_batchable_gemm() {
+        let p = DlaRequest::flood_probe();
+        assert!(p.validate().is_ok(), "the drill must never count as an invalid input");
+        assert_eq!(p.kind(), "gemm");
+        assert_eq!(p.gemm_dims(), Some(GemmDims::new(16, 16, 8)));
+        assert!(p.gemm_shape_consistent());
     }
 
     #[test]

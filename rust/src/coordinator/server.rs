@@ -80,11 +80,50 @@
 //! `resilience:` summary line). Fault *injection* for drills and the
 //! chaos suite is armed with [`ServerConfig::with_faults`] or the
 //! `DLA_FAULTS` environment knob (see `runtime::faults`).
+//!
+//! # QoS tiers and overload resilience
+//!
+//! Surviving faults is not the same as surviving *demand*: when offered
+//! load exceeds the pool's capacity, something has to give, and the
+//! server makes that choice by policy instead of by queue order (see
+//! [`super::qos`] for the machinery):
+//!
+//! - **Priority tiers.** Every request rides a [`Priority`] tier
+//!   (`submit_at` / `submit_async_at`; the per-server default comes from
+//!   [`ServerConfig::with_default_priority`] or `DLA_PRIORITY`, falling
+//!   back to `Interactive`). The request queue is a tiered
+//!   [`QosQueue`] with weighted-fair dequeue (weights 4/2/1) and a hard
+//!   starvation bound; the batch scheduler's bucket picker applies the
+//!   same credits across bucket *classes* (a bucket's class is its
+//!   highest-priority member), so neither scheduler can starve a tier.
+//! - **Async handles.** [`Self::submit_async`] returns a [`JobHandle`]
+//!   that can be polled, waited on with a deadline, or cancelled.
+//!   Cancellation of still-queued work is guaranteed (the worker
+//!   observes the cancel flag before starting and answers
+//!   [`DlaError::Cancelled`]); in-flight work runs to completion.
+//! - **Per-tier retry budgets.** A full queue is retried with the same
+//!   jittered backoff as before, but the budget is tiered
+//!   (Interactive 8 / Batch 4 / Background 2 attempts): low-priority
+//!   retries must not amplify an overload.
+//! - **Adaptive shedding.** An [`OverloadDetector`] compares the
+//!   smoothed measured queue wait against the smoothed service cost
+//!   (the larger of the `BatchPlanner` analytic estimate and measured
+//!   wall time). When waits outrun cost ~4×, Background submissions are
+//!   shed at admission with typed [`DlaError::Overloaded`]; ~12×, Batch
+//!   is shed too. Interactive is never shed — shedding exists to protect
+//!   its deadlines. Every shed is counted per tier
+//!   ([`super::metrics::QosMetrics`]) and the ledger reconciles:
+//!   `submitted == completed + failed + shed + rejected + cancelled`.
+//! - **Brownout.** At the severe level a handler panic widens the
+//!   degraded window by [`OverloadLevel::brownout_factor`] (default ×4)
+//!   instead of letting the server oscillate between the pooled path and
+//!   fresh panics. The window length itself is configurable
+//!   ([`ServerConfig::with_degraded_window`] / `DLA_DEGRADED_WINDOW`).
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -99,18 +138,23 @@ use crate::runtime::pool::WorkerPool;
 use crate::util::error::{panic_reason, DlaError};
 
 use super::metrics::Metrics;
+use super::qos::{OverloadDetector, OverloadLevel, Priority, PushError, QosQueue, TierCounters};
 use super::requests::{DlaRequest, DlaResponse};
 use super::Coordinator;
 
-/// How many requests a worker serves on the pool-less serial fallback
-/// path after isolating a handler panic, before trusting the pooled
-/// path again. The serial blocked path is bitwise identical to the
-/// pooled one (asserted by `tests/chaos.rs`), so correctness is never
-/// degraded — only throughput.
+/// Default degraded-window length: how many requests a worker serves on
+/// the pool-less serial fallback path after isolating a handler panic,
+/// before trusting the pooled path again. The serial blocked path is
+/// bitwise identical to the pooled one (asserted by `tests/chaos.rs`),
+/// so correctness is never degraded — only throughput. Override with
+/// [`ServerConfig::with_degraded_window`] or `DLA_DEGRADED_WINDOW`.
 pub const DEGRADED_WINDOW: u64 = 8;
 
 /// Admission attempts before a persistently full queue turns into
-/// [`DlaError::QueueFull`] (initial try + retries with backoff).
+/// [`DlaError::QueueFull`] (initial try + retries with backoff). This is
+/// the **Interactive** tier's budget — the legacy single-tier behavior;
+/// lower tiers run tighter budgets (see
+/// [`Priority::admission_attempts`], asserted equal in the tests).
 const MAX_ADMISSION_ATTEMPTS: u32 = 8;
 
 /// Server configuration.
@@ -137,6 +181,14 @@ pub struct ServerConfig {
     /// defers to the `DLA_FAULTS` environment override (unset = hooks
     /// un-armed, zero cost).
     pub faults: Option<FaultPlan>,
+    /// Degraded-window length armed by a handler panic; `None` defers to
+    /// the `DLA_DEGRADED_WINDOW` environment override, then
+    /// [`DEGRADED_WINDOW`].
+    pub degraded_window: Option<u64>,
+    /// Default [`Priority`] for `submit` / `submit_async`; `None` defers
+    /// to the `DLA_PRIORITY` environment override, then
+    /// `Priority::Interactive`.
+    pub default_priority: Option<Priority>,
 }
 
 impl ServerConfig {
@@ -151,6 +203,8 @@ impl ServerConfig {
             batching: None,
             deadline: None,
             faults: None,
+            degraded_window: None,
+            default_priority: None,
         }
     }
 
@@ -193,6 +247,23 @@ impl ServerConfig {
         self.faults = Some(plan);
         self
     }
+
+    /// Pin the degraded-window length (requests served on the serial
+    /// fallback after a handler panic). A pinned window wins over the
+    /// `DLA_DEGRADED_WINDOW` override; clamped to at least 1 so a panic
+    /// always buys *some* cooldown.
+    pub fn with_degraded_window(mut self, n: u64) -> Self {
+        self.degraded_window = Some(n.max(1));
+        self
+    }
+
+    /// Pin the default QoS tier used by `submit` / `submit_async` when
+    /// the caller does not name one. A pinned tier wins over the
+    /// `DLA_PRIORITY` override.
+    pub fn with_default_priority(mut self, tier: Priority) -> Self {
+        self.default_priority = Some(tier);
+        self
+    }
 }
 
 /// The `DLA_DEADLINE_MS` override: a positive integer arms a per-request
@@ -206,14 +277,63 @@ fn deadline_from_env() -> Option<Duration> {
         .map(Duration::from_millis)
 }
 
+/// The `DLA_DEGRADED_WINDOW` override: a positive integer resizes the
+/// post-panic serial window on servers that did not pin one; unset /
+/// unparseable / `0` keeps the [`DEGRADED_WINDOW`] default (a typo must
+/// not disable the cooldown).
+fn degraded_window_from_env() -> Option<u64> {
+    std::env::var("DLA_DEGRADED_WINDOW")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&n| n > 0)
+}
+
+/// Cancellation state shared between a [`JobHandle`] and the worker that
+/// eventually dequeues its job: a three-state flag (queued → claimed |
+/// cancelled) advanced only by compare-and-swap, so exactly one side
+/// wins. A worker that loses the race answers [`DlaError::Cancelled`]
+/// without starting the work; a caller that loses observes the job
+/// already claimed and the work runs to completion.
+struct HandleCtrl(AtomicU8);
+
+const CTRL_QUEUED: u8 = 0;
+const CTRL_CLAIMED: u8 = 1;
+const CTRL_CANCELLED: u8 = 2;
+
+impl HandleCtrl {
+    fn new() -> Self {
+        Self(AtomicU8::new(CTRL_QUEUED))
+    }
+
+    /// Worker side: claim the job for execution. False when the caller
+    /// cancelled first.
+    fn claim(&self) -> bool {
+        self.0
+            .compare_exchange(CTRL_QUEUED, CTRL_CLAIMED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Caller side: cancel the still-queued job. False when a worker
+    /// already claimed it (or it was already cancelled).
+    fn cancel(&self) -> bool {
+        self.0
+            .compare_exchange(CTRL_QUEUED, CTRL_CANCELLED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+}
+
 /// One request in flight between `submit` and a worker.
 struct Job {
     req: DlaRequest,
+    /// The QoS tier the request was submitted at.
+    tier: Priority,
     /// When `submit` accepted the request (the latency/timeout anchor).
     submitted: Instant,
     /// Absolute expiry, if the server has a deadline.
     deadline: Option<Instant>,
     reply: mpsc::Sender<Result<DlaResponse, DlaError>>,
+    /// Cancellation flag, present only for `submit_async` jobs.
+    ctrl: Option<Arc<HandleCtrl>>,
 }
 
 /// One admitted request parked in the admission queue (always a
@@ -221,6 +341,7 @@ struct Job {
 /// to execute and answer it.
 struct PendingGemm {
     req: DlaRequest,
+    tier: Priority,
     reply: mpsc::Sender<Result<DlaResponse, DlaError>>,
     enqueued: Instant,
     deadline: Option<Instant>,
@@ -237,6 +358,10 @@ struct QueueState {
     buckets: HashMap<GemmDims, Bucket>,
     /// Entries across all buckets (the backpressure bound).
     pending: usize,
+    /// Weighted-fair credits across bucket *classes* (a bucket's class
+    /// is its highest-priority member) — the same scheduler the request
+    /// queue uses, so the batcher cannot starve a tier either.
+    credits: super::qos::WeightedCredits,
     closed: bool,
 }
 
@@ -302,33 +427,51 @@ impl BatchQueue {
 
     /// Block until a bucket is dispatchable — full (`>= max_batch`),
     /// expired (oldest entry waited `wait_us`), or anything at all once
-    /// closed — and take the whole bucket. Oldest bucket first, so no
-    /// shape can be starved by a hot one. Returns `None` when closed and
-    /// fully drained.
+    /// closed — and take the whole bucket. Among ready buckets the
+    /// weighted-fair credits pick a tier class (so a flood of Background
+    /// buckets cannot starve Interactive ones), then the oldest bucket
+    /// of that class dispatches (so no shape is starved by a hot one
+    /// within a class). Returns `None` when closed and fully drained.
     fn next_batch(&self) -> Option<Vec<PendingGemm>> {
         let mut st = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         loop {
             let now = Instant::now();
-            let ready = st
-                .buckets
-                .iter()
-                .filter(|(_, b)| {
-                    st.closed
-                        || b.entries.len() >= self.policy.max_batch
-                        || now.duration_since(b.first_at) >= self.policy.wait()
-                })
-                .min_by_key(|(_, b)| b.first_at)
-                .map(|(&dims, _)| dims);
-            if let Some(dims) = ready {
-                match st.buckets.remove(&dims) {
-                    Some(bucket) => {
+            let mut eligible = [false; Priority::COUNT];
+            let mut ready: Vec<(GemmDims, Instant, usize)> = Vec::new();
+            for (&dims, b) in &st.buckets {
+                let dispatchable = st.closed
+                    || b.entries.len() >= self.policy.max_batch
+                    || now.duration_since(b.first_at) >= self.policy.wait();
+                if dispatchable {
+                    let class = b
+                        .entries
+                        .iter()
+                        .map(|e| e.tier.index())
+                        .min()
+                        .unwrap_or(Priority::Background.index());
+                    eligible[class] = true;
+                    ready.push((dims, b.first_at, class));
+                }
+            }
+            if !ready.is_empty() {
+                let class = st.credits.pick(eligible);
+                let chosen = class
+                    .and_then(|c| {
+                        ready.iter().filter(|r| r.2 == c).min_by_key(|r| r.1).map(|r| r.0)
+                    })
+                    // Defensive: the credits disagreed with the
+                    // eligibility probe — fall back to oldest overall
+                    // rather than stall the batcher.
+                    .or_else(|| ready.iter().min_by_key(|r| r.1).map(|r| r.0));
+                if let Some(dims) = chosen {
+                    if let Some(bucket) = st.buckets.remove(&dims) {
                         st.pending -= bucket.entries.len();
                         return Some(bucket.entries);
                     }
-                    // Impossible (`ready` came from this map under the
-                    // same lock), but re-evaluate rather than panic.
-                    None => continue,
                 }
+                // Impossible (`ready` came from this map under the same
+                // lock), but re-evaluate rather than panic.
+                continue;
             }
             if st.closed {
                 return None; // closed and drained
@@ -367,6 +510,7 @@ fn batcher_loop(
     arch: Arch,
     mode: ConfigMode,
     pool: Option<Arc<WorkerPool>>,
+    tiers: Arc<TierCounters>,
 ) -> Metrics {
     let mut co = Coordinator::new(arch, mode);
     if let Some(pool) = pool {
@@ -381,6 +525,7 @@ fn batcher_loop(
             let fm = co.metrics.faults_mut();
             fm.timeouts += 1;
             fm.expired_in_queue += 1;
+            tiers.add_failed(e.tier);
             let _ = e.reply.send(Err(DlaError::Timeout {
                 waited_ms: e.enqueued.elapsed().as_millis() as u64,
             }));
@@ -418,6 +563,7 @@ fn batcher_loop(
                     reason: format!("fused dispatch panicked: {}", panic_reason(&*payload)),
                 };
                 for e in entries {
+                    tiers.add_failed(e.tier);
                     let _ = e.reply.send(Err(err.clone()));
                 }
                 continue;
@@ -433,6 +579,7 @@ fn batcher_loop(
             // Every member of the fused epoch observed the epoch's wall
             // time as its service latency.
             co.metrics.record("gemm", dt, flops);
+            tiers.add_completed(e.tier);
             let _ = e.reply.send(Ok(DlaResponse::Matrix {
                 result: c,
                 config: Some(cfg.to_string()),
@@ -444,48 +591,87 @@ fn batcher_loop(
     co.metrics
 }
 
-/// Serve one request on a worker thread with panic isolation and the
-/// degraded-mode ladder: while the shared degraded budget is armed, the
-/// request runs on a lazily created pool-less serial coordinator
-/// (bitwise identical, reduced throughput); a handler panic is caught,
-/// answered with [`DlaError::Internal`], and arms the budget.
-fn serve_one(
-    co: &mut Coordinator,
-    serial: &mut Option<Coordinator>,
-    degraded: &AtomicU64,
-    arch: &Arch,
-    mode: &ConfigMode,
-    req: DlaRequest,
-    reply: &mpsc::Sender<Result<DlaResponse, DlaError>>,
-) {
-    let use_degraded = degraded.load(Ordering::Relaxed) > 0
-        && degraded
-            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| n.checked_sub(1))
-            .is_ok();
-    let outcome = {
-        let target: &mut Coordinator = if use_degraded {
-            serial.get_or_insert_with(|| Coordinator::new(arch.clone(), mode.clone()))
-        } else {
-            co
+/// Per-worker serving context: the degraded-mode ladder, the overload
+/// detector feed, and the per-tier outcome ledger, bundled so the worker
+/// loop and its solo-fallback paths serve through one code path.
+struct ServeCtx {
+    /// The degraded fallback coordinator: pool-less, created lazily on
+    /// the first degraded request.
+    serial: Option<Coordinator>,
+    /// Shared count-down of requests still to serve degraded.
+    degraded: Arc<AtomicU64>,
+    /// Window a fresh panic arms (before any brownout widening).
+    window: u64,
+    detector: Arc<OverloadDetector>,
+    tiers: Arc<TierCounters>,
+    arch: Arch,
+    mode: ConfigMode,
+}
+
+impl ServeCtx {
+    /// Serve one request with panic isolation and the degraded-mode
+    /// ladder: while the shared degraded budget is armed, the request
+    /// runs on the serial coordinator (bitwise identical, reduced
+    /// throughput); a handler panic is caught, answered with
+    /// [`DlaError::Internal`], and arms the budget — widened by the
+    /// brownout factor when the overload detector is at its severe
+    /// level. `analytic_us` is the cost model's estimate for this
+    /// request (0 when the model has none); the detector's cost EWMA
+    /// observes `max(analytic, measured)` so a debug build or a degraded
+    /// machine raises the overload baseline instead of tripping it.
+    fn serve_one(
+        &mut self,
+        co: &mut Coordinator,
+        tier: Priority,
+        analytic_us: u64,
+        req: DlaRequest,
+        reply: &mpsc::Sender<Result<DlaResponse, DlaError>>,
+    ) {
+        let use_degraded = self.degraded.load(Ordering::Relaxed) > 0
+            && self
+                .degraded
+                .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| n.checked_sub(1))
+                .is_ok();
+        let t0 = Instant::now();
+        let outcome = {
+            let arch = &self.arch;
+            let mode = &self.mode;
+            let target: &mut Coordinator = if use_degraded {
+                self.serial
+                    .get_or_insert_with(|| Coordinator::new(arch.clone(), mode.clone()))
+            } else {
+                co
+            };
+            catch_unwind(AssertUnwindSafe(|| target.handle(req)))
         };
-        catch_unwind(AssertUnwindSafe(|| target.handle(req)))
-    };
-    match outcome {
-        Ok(resp) => {
-            if use_degraded {
-                co.metrics.faults_mut().degraded_requests += 1;
+        match outcome {
+            Ok(resp) => {
+                if use_degraded {
+                    co.metrics.faults_mut().degraded_requests += 1;
+                }
+                let measured_us = t0.elapsed().as_micros() as u64;
+                self.detector.observe_cost_us(measured_us.max(analytic_us));
+                if resp.is_ok() {
+                    self.tiers.add_completed(tier);
+                } else {
+                    self.tiers.add_failed(tier);
+                }
+                let _ = reply.send(resp);
             }
-            let _ = reply.send(resp);
-        }
-        Err(payload) => {
-            // By the time the panic reached us the pool already ran its
-            // epoch recovery (poison cleared, workspaces reset) — see
-            // runtime::pool. Isolate, arm the degraded window, answer.
-            co.metrics.faults_mut().worker_panics += 1;
-            degraded.fetch_max(DEGRADED_WINDOW, Ordering::AcqRel);
-            let _ = reply.send(Err(DlaError::Internal {
-                reason: format!("request handler panicked: {}", panic_reason(&*payload)),
-            }));
+            Err(payload) => {
+                // By the time the panic reached us the pool already ran
+                // its epoch recovery (poison cleared, workspaces reset)
+                // — see runtime::pool. Isolate, arm the degraded window
+                // (brownout-widened under severe overload), answer.
+                co.metrics.faults_mut().worker_panics += 1;
+                let window =
+                    self.window.saturating_mul(self.detector.level().brownout_factor());
+                self.degraded.fetch_max(window, Ordering::AcqRel);
+                self.tiers.add_failed(tier);
+                let _ = reply.send(Err(DlaError::Internal {
+                    reason: format!("request handler panicked: {}", panic_reason(&*payload)),
+                }));
+            }
         }
     }
 }
@@ -501,15 +687,132 @@ struct SubmitCounters {
     workers_lost: AtomicU64,
 }
 
+/// A non-blocking handle to a request submitted with
+/// [`CoordinatorServer::submit_async`]: poll for completion, wait with
+/// the server's deadline, or cancel still-queued work. Dropping the
+/// handle abandons the result (the worker's reply send fails silently);
+/// it does not cancel the job.
+pub struct JobHandle {
+    rx: mpsc::Receiver<Result<DlaResponse, DlaError>>,
+    ctrl: Arc<HandleCtrl>,
+    submitted: Instant,
+    /// Absolute expiry mirroring the server deadline, bounding `wait`.
+    deadline: Option<Instant>,
+    /// Result buffered by `poll` / `wait_for` until the caller takes it.
+    done: Option<Result<DlaResponse, DlaError>>,
+    counters: Arc<SubmitCounters>,
+}
+
+impl JobHandle {
+    /// Non-blocking: is the result ready? Once true, [`Self::wait`] and
+    /// [`Self::wait_for`] return immediately (the result is buffered in
+    /// the handle; polling never loses it).
+    pub fn poll(&mut self) -> bool {
+        if self.done.is_some() {
+            return true;
+        }
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.done = Some(r);
+                true
+            }
+            Err(mpsc::TryRecvError::Empty) => false,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.counters.workers_lost.fetch_add(1, Ordering::Relaxed);
+                self.done = Some(Err(DlaError::WorkerLost {
+                    reason: "worker dropped the reply channel".to_string(),
+                }));
+                true
+            }
+        }
+    }
+
+    /// Cancel the job if it is still queued. True when the cancellation
+    /// won: the job will never start, and the result is
+    /// [`DlaError::Cancelled`]. False when a worker already claimed (or
+    /// finished) it — in-flight work runs to completion and its result
+    /// stays available.
+    pub fn cancel(&mut self) -> bool {
+        if self.done.is_some() {
+            return false;
+        }
+        self.ctrl.cancel()
+    }
+
+    /// Block up to `timeout` for the result. `Some` hands the result
+    /// out (call once; the handle is spent for result delivery after
+    /// that), `None` means the job is still running and the handle
+    /// remains valid to keep polling or waiting.
+    pub fn wait_for(&mut self, timeout: Duration) -> Option<Result<DlaResponse, DlaError>> {
+        if let Some(r) = self.done.take() {
+            return Some(r);
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.counters.workers_lost.fetch_add(1, Ordering::Relaxed);
+                Some(Err(DlaError::WorkerLost {
+                    reason: "worker dropped the reply channel".to_string(),
+                }))
+            }
+        }
+    }
+
+    /// Block for the result. With a server deadline armed the wait is
+    /// bounded: a result that does not arrive in time yields
+    /// [`DlaError::Timeout`] instead of blocking forever.
+    pub fn wait(mut self) -> Result<DlaResponse, DlaError> {
+        if let Some(r) = self.done.take() {
+            return r;
+        }
+        match self.deadline {
+            None => match self.rx.recv() {
+                Ok(r) => r,
+                Err(_) => {
+                    self.counters.workers_lost.fetch_add(1, Ordering::Relaxed);
+                    Err(DlaError::WorkerLost {
+                        reason: "worker dropped the reply channel".to_string(),
+                    })
+                }
+            },
+            Some(d) => {
+                let remaining = d.saturating_duration_since(Instant::now());
+                match self.rx.recv_timeout(remaining) {
+                    Ok(r) => r,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        self.counters.timeouts.fetch_add(1, Ordering::Relaxed);
+                        Err(DlaError::Timeout {
+                            waited_ms: self.submitted.elapsed().as_millis() as u64,
+                        })
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        self.counters.workers_lost.fetch_add(1, Ordering::Relaxed);
+                        Err(DlaError::WorkerLost {
+                            reason: "worker dropped the reply channel".to_string(),
+                        })
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// A running coordinator server.
 pub struct CoordinatorServer {
-    tx: Option<mpsc::SyncSender<Job>>,
+    queue: Option<Arc<QosQueue<Job>>>,
     handles: Vec<thread::JoinHandle<Metrics>>,
     batch_queue: Option<Arc<BatchQueue>>,
     batch_handle: Option<thread::JoinHandle<Metrics>>,
     deadline: Option<Duration>,
     faults: Option<Arc<FaultState>>,
     counters: Arc<SubmitCounters>,
+    /// Per-tier outcome ledger, shared with workers and the batcher.
+    tiers: Arc<TierCounters>,
+    detector: Arc<OverloadDetector>,
+    /// Shared degraded-window count-down (for the shutdown gauge).
+    degraded: Arc<AtomicU64>,
+    default_tier: Priority,
     /// splitmix64 state for backoff jitter (no RNG dependency; the
     /// constant seed is fine — jitter decorrelates concurrent
     /// submitters, it does not need to be unpredictable).
@@ -554,51 +857,77 @@ impl CoordinatorServer {
             .filter(|_| cfg.gemm_threads >= 2);
         let batch_queue =
             batching.map(|policy| Arc::new(BatchQueue::new(policy, cfg.queue_depth)));
-        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
+        let degraded_window =
+            cfg.degraded_window.or_else(degraded_window_from_env).unwrap_or(DEGRADED_WINDOW);
+        let default_tier = cfg.default_priority.or_else(Priority::from_env).unwrap_or_default();
+        let queue = Arc::new(QosQueue::<Job>::new(cfg.queue_depth));
         // The shared pool consults the same armed fault state as the
         // server, so `panic@R:E` shots land inside real pooled epochs.
         let gemm_pool = (cfg.gemm_threads > 1)
             .then(|| Arc::new(WorkerPool::with_fault_state(cfg.gemm_threads, faults.clone())));
         let gemm_threads = cfg.gemm_threads.max(1);
         let degraded = Arc::new(AtomicU64::new(0));
+        let detector = Arc::new(OverloadDetector::new());
+        let tiers = Arc::new(TierCounters::new());
+        // Spawn-error cleanup: already-spawned workers block on the
+        // queue; closing both queues unblocks them so they exit instead
+        // of leaking when start() fails partway.
+        let abort = |queue: &QosQueue<Job>, batch_queue: &Option<Arc<BatchQueue>>| {
+            queue.close();
+            if let Some(q) = batch_queue {
+                q.close();
+            }
+        };
         let mut handles = Vec::new();
         for i in 0..cfg.workers {
-            let rx = rx.clone();
+            let queue = queue.clone();
             let arch = cfg.arch.clone();
             let mode = cfg.mode.clone();
             let pool = gemm_pool.clone();
             let lookahead = cfg.lookahead;
-            let queue = batch_queue.clone();
+            let batch = batch_queue.clone();
             let faults = faults.clone();
-            let degraded = degraded.clone();
-            let handle = thread::Builder::new()
+            let mut ctx = ServeCtx {
+                serial: None,
+                degraded: degraded.clone(),
+                window: degraded_window,
+                detector: detector.clone(),
+                tiers: tiers.clone(),
+                arch: cfg.arch.clone(),
+                mode: cfg.mode.clone(),
+            };
+            let spawned = thread::Builder::new()
                 .name(format!("dla-worker-{i}"))
                 .spawn(move || {
-                    let mut co = Coordinator::new(arch.clone(), mode.clone());
+                    let mut co = Coordinator::new(arch, mode);
                     if let Some(pool) = pool {
                         co = co.with_pool(pool);
                     }
                     if let Some(la) = lookahead {
                         co = co.with_lookahead(la);
                     }
-                    // The degraded fallback coordinator: pool-less,
-                    // created lazily on the first degraded request.
-                    let mut serial: Option<Coordinator> = None;
                     // Per-worker admission memo (scorer runs once per
                     // distinct shape, not once per request).
                     let planner = BatchPlanner::new();
-                    loop {
-                        // Hold the lock only while receiving; a
-                        // poisoned lock (a sibling died mid-recv) must
-                        // not take this worker down with it.
-                        let job = {
-                            rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner).recv()
-                        };
-                        let Job { req, submitted, deadline, reply } = match job {
-                            Ok(j) => j,
-                            Err(_) => break, // channel closed: drain done
-                        };
+                    // pop() blocks (weighted-fair across tiers) and
+                    // returns None only when the queue is closed and
+                    // fully drained.
+                    while let Some(job) = queue.pop() {
+                        let Job { req, tier, submitted, deadline, reply, ctrl } = job;
+                        // The true queue wait, observed before any
+                        // injected stall (a stall models slow handling,
+                        // not queueing).
+                        ctx.detector.observe_wait_us(submitted.elapsed().as_micros() as u64);
+                        // Guaranteed cancellation of still-queued work:
+                        // claim before any execution; a lost claim means
+                        // the caller cancelled while we held the job.
+                        if let Some(c) = &ctrl {
+                            if !c.claim() {
+                                ctx.tiers.add_cancelled(tier);
+                                let _ = reply.send(Err(DlaError::Cancelled));
+                                continue;
+                            }
+                        }
                         if let Some(f) = &faults {
                             f.stall_request();
                         }
@@ -608,6 +937,7 @@ impl CoordinatorServer {
                             let fm = co.metrics.faults_mut();
                             fm.timeouts += 1;
                             fm.expired_in_queue += 1;
+                            ctx.tiers.add_failed(tier);
                             let _ = reply.send(Err(DlaError::Timeout {
                                 waited_ms: submitted.elapsed().as_millis() as u64,
                             }));
@@ -618,78 +948,110 @@ impl CoordinatorServer {
                         // everything else (factorizations, large
                         // GEMMs, deadline-tight requests) keeps the
                         // solo path.
-                        if let Some(q) = &queue {
-                            if let Some(dims) = req.gemm_dims() {
-                                let remaining = deadline
-                                    .map(|d| d.saturating_duration_since(Instant::now()));
-                                let admit = req.gemm_shape_consistent()
-                                    && q.policy.fits_deadline(remaining)
-                                    && planner.is_batchable(
-                                        &co.engine.arch,
-                                        co.engine.plan_config(dims),
-                                        dims,
-                                        gemm_threads,
-                                        &q.policy,
-                                    );
-                                if admit {
-                                    let entry = PendingGemm {
-                                        req,
-                                        reply,
-                                        enqueued: Instant::now(),
-                                        deadline,
-                                    };
-                                    if let Err(e) = q.try_enqueue(dims, entry) {
-                                        // Queue at its backpressure
-                                        // bound (or closed): serve solo.
-                                        serve_one(
-                                            &mut co, &mut serial, &degraded, &arch, &mode,
-                                            e.req, &e.reply,
-                                        );
-                                    }
-                                    continue;
+                        let consistent_dims =
+                            req.gemm_dims().filter(|_| req.gemm_shape_consistent());
+                        if let (Some(q), Some(dims)) = (&batch, consistent_dims) {
+                            let gemm_cfg = co.engine.plan_config(dims);
+                            let remaining =
+                                deadline.map(|d| d.saturating_duration_since(Instant::now()));
+                            let admit = q.policy.fits_deadline(remaining)
+                                && planner.is_batchable(
+                                    &co.engine.arch,
+                                    gemm_cfg,
+                                    dims,
+                                    gemm_threads,
+                                    &q.policy,
+                                );
+                            if admit {
+                                let entry = PendingGemm {
+                                    req,
+                                    tier,
+                                    reply,
+                                    enqueued: Instant::now(),
+                                    deadline,
+                                };
+                                if let Err(e) = q.try_enqueue(dims, entry) {
+                                    // Queue at its backpressure bound
+                                    // (or closed): serve solo.
+                                    let analytic =
+                                        planner.estimate_us(&co.engine.arch, gemm_cfg, dims);
+                                    ctx.serve_one(&mut co, e.tier, analytic, e.req, &e.reply);
                                 }
+                                continue;
                             }
                         }
-                        serve_one(&mut co, &mut serial, &degraded, &arch, &mode, req, &reply);
+                        let analytic_us = match consistent_dims {
+                            Some(dims) => {
+                                let gemm_cfg = co.engine.plan_config(dims);
+                                planner.estimate_us(&co.engine.arch, gemm_cfg, dims)
+                            }
+                            None => 0,
+                        };
+                        ctx.serve_one(&mut co, tier, analytic_us, req, &reply);
                     }
                     co.snapshot_pool_stats();
-                    if let Some(s) = serial {
+                    if let Some(s) = ctx.serial.take() {
                         co.metrics.merge(s.metrics);
                     }
                     co.metrics
-                })
-                .map_err(|e| DlaError::Internal {
-                    reason: format!("spawning server worker: {e}"),
-                })?;
-            handles.push(handle);
+                });
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    abort(&queue, &batch_queue);
+                    return Err(DlaError::Internal {
+                        reason: format!("spawning server worker: {e}"),
+                    });
+                }
+            }
         }
         let batch_handle = match batch_queue.as_ref() {
             None => None,
             Some(q) => {
-                let queue = Arc::clone(q);
+                let bq = Arc::clone(q);
                 let arch = cfg.arch.clone();
                 let mode = cfg.mode.clone();
                 let pool = gemm_pool.clone();
-                Some(
-                    thread::Builder::new()
-                        .name("dla-batcher".to_string())
-                        .spawn(move || batcher_loop(queue, arch, mode, pool))
-                        .map_err(|e| DlaError::Internal {
+                let btiers = tiers.clone();
+                match thread::Builder::new()
+                    .name("dla-batcher".to_string())
+                    .spawn(move || batcher_loop(bq, arch, mode, pool, btiers))
+                {
+                    Ok(h) => Some(h),
+                    Err(e) => {
+                        abort(&queue, &batch_queue);
+                        return Err(DlaError::Internal {
                             reason: format!("spawning batcher: {e}"),
-                        })?,
-                )
+                        });
+                    }
+                }
             }
         };
-        Ok(Self {
-            tx: Some(tx),
+        let server = Self {
+            queue: Some(queue),
             handles,
             batch_queue,
             batch_handle,
             deadline,
             faults,
             counters: Arc::new(SubmitCounters::default()),
+            tiers,
+            detector,
+            degraded,
+            default_tier,
             jitter_seed: AtomicU64::new(0x243F_6A88_85A3_08D3),
-        })
+        };
+        // The canned overload drill: inject the planned flood as
+        // Background-tier requests through the real admission path
+        // (validation, shedding, tier budget), with the replies
+        // abandoned. Outcomes land in the per-tier ledger like any other
+        // traffic, so the drill is observable and reconciles.
+        if let Some(f) = &server.faults {
+            for _ in 0..f.take_flood() {
+                let _ = server.enqueue(DlaRequest::flood_probe(), Priority::Background, None);
+            }
+        }
+        Ok(server)
     }
 
     /// The armed fault state, if any (chaos tests assert delivered-shot
@@ -720,64 +1082,138 @@ impl CoordinatorServer {
         Duration::from_micros(base / 2 + self.jitter() % (base / 2 + 1))
     }
 
-    /// Submit a request; returns a receiver for the response.
-    ///
-    /// Fails fast with [`DlaError::InvalidInput`] on malformed requests
-    /// (before consuming any queue capacity), retries a full queue with
-    /// bounded jittered backoff before giving up with
-    /// [`DlaError::QueueFull`], and reports a dead worker side as
-    /// [`DlaError::WorkerLost`] (not retried — the request cannot be
-    /// safely replayed once ownership moved). With a deadline armed,
-    /// backoff never sleeps past the deadline ([`DlaError::Timeout`]).
-    pub fn submit(
+    /// The admission core shared by every submit variant: validate,
+    /// account the tier, consult the load shedder, then push into the
+    /// weighted-fair queue under the tier's retry budget.
+    fn enqueue(
         &self,
         req: DlaRequest,
+        tier: Priority,
+        ctrl: Option<Arc<HandleCtrl>>,
     ) -> Result<mpsc::Receiver<Result<DlaResponse, DlaError>>, DlaError> {
         if let Err(e) = req.validate() {
             self.counters.invalid_inputs.fetch_add(1, Ordering::Relaxed);
             return Err(e);
         }
-        let tx = match &self.tx {
-            Some(tx) => tx,
+        let queue = match &self.queue {
+            Some(q) => q,
             None => {
                 return Err(DlaError::Internal { reason: "server already shut down".to_string() })
             }
         };
+        // Everything past validation is ledgered: submitted must equal
+        // completed + failed + shed + rejected + cancelled at shutdown.
+        self.tiers.add_submitted(tier);
+        // Adaptive shedding: when measured queue delay runs far ahead
+        // of the analytic cost baseline, refuse low-tier work up front
+        // instead of queueing it to miss its deadline.
+        if self.detector.sheds(tier) {
+            self.tiers.add_shed(tier);
+            return Err(DlaError::Overloaded {
+                tier: tier.label(),
+                queue_delay_us: self.detector.queue_delay_us(),
+            });
+        }
         let submitted = Instant::now();
         let deadline = self.deadline.map(|d| submitted + d);
         let (reply_tx, reply_rx) = mpsc::channel();
-        let mut job = Job { req, submitted, deadline, reply: reply_tx };
+        let mut job = Job { req, tier, submitted, deadline, reply: reply_tx, ctrl };
+        let budget = tier.admission_attempts();
         let mut attempt: u32 = 0;
         loop {
             // An injected queue-full (chaos drill) consumes an attempt
-            // exactly like a real full channel.
+            // exactly like a real full queue.
             let forced = self.faults.as_deref().is_some_and(FaultState::admission_queue_full);
             if !forced {
-                match tx.try_send(job) {
+                match queue.try_push(tier, job) {
                     Ok(()) => return Ok(reply_rx),
-                    Err(mpsc::TrySendError::Full(j)) => job = j,
-                    Err(mpsc::TrySendError::Disconnected(_)) => {
+                    Err(PushError::Full(j)) => job = j,
+                    Err(PushError::Closed(_)) => {
                         self.counters.workers_lost.fetch_add(1, Ordering::Relaxed);
+                        self.tiers.add_rejected(tier);
                         return Err(DlaError::WorkerLost {
-                            reason: "request channel disconnected (no live workers)".to_string(),
+                            reason: "request queue closed (no live workers)".to_string(),
                         });
                     }
                 }
             }
             attempt += 1;
             self.counters.retries.fetch_add(1, Ordering::Relaxed);
-            if attempt >= MAX_ADMISSION_ATTEMPTS {
+            if attempt >= budget {
                 self.counters.queue_full_rejections.fetch_add(1, Ordering::Relaxed);
+                self.tiers.add_rejected(tier);
                 return Err(DlaError::QueueFull { retries: attempt });
             }
             if deadline.is_some_and(|d| Instant::now() >= d) {
                 self.counters.timeouts.fetch_add(1, Ordering::Relaxed);
+                self.tiers.add_rejected(tier);
                 return Err(DlaError::Timeout {
                     waited_ms: submitted.elapsed().as_millis() as u64,
                 });
             }
             thread::sleep(self.backoff(attempt));
         }
+    }
+
+    /// Submit a request at the server's default tier; returns a
+    /// receiver for the response.
+    ///
+    /// Fails fast with [`DlaError::InvalidInput`] on malformed requests
+    /// (before consuming any queue capacity), sheds under overload with
+    /// [`DlaError::Overloaded`] (low tiers first — Interactive is never
+    /// shed), retries a full queue with bounded jittered backoff up to
+    /// the tier's budget before giving up with [`DlaError::QueueFull`],
+    /// and reports a closed queue as [`DlaError::WorkerLost`] (not
+    /// retried — the request cannot be safely replayed once ownership
+    /// moved). With a deadline armed, backoff never sleeps past the
+    /// deadline ([`DlaError::Timeout`]).
+    pub fn submit(
+        &self,
+        req: DlaRequest,
+    ) -> Result<mpsc::Receiver<Result<DlaResponse, DlaError>>, DlaError> {
+        self.submit_at(req, self.default_tier)
+    }
+
+    /// [`Self::submit`] at an explicit QoS tier.
+    pub fn submit_at(
+        &self,
+        req: DlaRequest,
+        tier: Priority,
+    ) -> Result<mpsc::Receiver<Result<DlaResponse, DlaError>>, DlaError> {
+        self.enqueue(req, tier, None)
+    }
+
+    /// Non-blocking submit at the server's default tier: returns a
+    /// [`JobHandle`] that can be polled, waited on (deadline-bounded),
+    /// or cancelled.
+    pub fn submit_async(&self, req: DlaRequest) -> Result<JobHandle, DlaError> {
+        self.submit_async_at(req, self.default_tier)
+    }
+
+    /// [`Self::submit_async`] at an explicit QoS tier.
+    ///
+    /// Admission errors (invalid input, shed, queue full) surface here
+    /// synchronously; once a handle is returned the request is queued
+    /// and [`JobHandle::cancel`] can still revoke it before a worker
+    /// claims it.
+    pub fn submit_async_at(&self, req: DlaRequest, tier: Priority) -> Result<JobHandle, DlaError> {
+        let ctrl = Arc::new(HandleCtrl::new());
+        let submitted = Instant::now();
+        let rx = self.enqueue(req, tier, Some(ctrl.clone()))?;
+        Ok(JobHandle {
+            rx,
+            ctrl,
+            submitted,
+            deadline: self.deadline.map(|d| submitted + d),
+            done: None,
+            counters: self.counters.clone(),
+        })
+    }
+
+    /// The overload detector's current verdict (healthy, shedding
+    /// Background, or shedding Batch-and-below).
+    pub fn overload_level(&self) -> OverloadLevel {
+        self.detector.level()
     }
 
     /// Submit and wait. With a deadline armed the wait is bounded: a
@@ -825,11 +1261,11 @@ impl CoordinatorServer {
     /// Every request accepted by [`Self::submit`] is served before any
     /// thread is joined — nothing is dropped, in two stages:
     ///
-    /// 1. **Channel drain.** Dropping the sender makes each worker's
-    ///    `recv` yield every already-queued request before reporting
-    ///    disconnect, so workers finish (or route into the batcher) all
-    ///    of them and only then exit; joining here cannot strand queued
-    ///    work.
+    /// 1. **Queue drain.** Closing the weighted-fair queue makes each
+    ///    worker's `pop` yield every already-queued request before
+    ///    reporting closure, so workers finish (or route into the
+    ///    batcher) all of them and only then exit; joining here cannot
+    ///    strand queued work.
     /// 2. **Admission-queue drain.** Only after every worker has exited
     ///    (i.e. no enqueuer remains) is the batch queue closed; `close`
     ///    makes the batcher flush every pending bucket immediately —
@@ -844,7 +1280,9 @@ impl CoordinatorServer {
     /// the latest shared-pool idle snapshot, and the submit-side fault
     /// counters).
     pub fn shutdown(mut self) -> Metrics {
-        drop(self.tx.take());
+        if let Some(q) = self.queue.take() {
+            q.close();
+        }
         let mut all = Metrics::new();
         for h in self.handles.drain(..) {
             match h.join() {
@@ -868,20 +1306,24 @@ impl CoordinatorServer {
         f.queue_full_rejections += c.queue_full_rejections.load(Ordering::Relaxed);
         f.timeouts += c.timeouts.load(Ordering::Relaxed);
         f.workers_lost += c.workers_lost.load(Ordering::Relaxed);
+        f.degraded_remaining += self.degraded.load(Ordering::Relaxed);
+        *all.qos_mut() = self.tiers.snapshot();
         all
     }
 }
 
 impl Drop for CoordinatorServer {
     /// Dropping without [`Self::shutdown`] must not leak threads: close
-    /// the channel and the admission queue so workers and the batcher
-    /// unblock and exit (releasing their `Arc` on the shared pool, whose
-    /// own `Drop` then retires the team). Metrics are lost and the
-    /// threads are detached, not joined — call `shutdown` for the
-    /// orderly two-stage drain. After `shutdown` every field is already
-    /// `None` and this is a no-op.
+    /// the request queue and the batcher's admission queue so workers
+    /// and the batcher unblock and exit (releasing their `Arc` on the
+    /// shared pool, whose own `Drop` then retires the team). Metrics
+    /// are lost and the threads are detached, not joined — call
+    /// `shutdown` for the orderly two-stage drain. After `shutdown`
+    /// every field is already `None` and this is a no-op.
     fn drop(&mut self) {
-        drop(self.tx.take());
+        if let Some(q) = self.queue.take() {
+            q.close();
+        }
         if let Some(q) = self.batch_queue.take() {
             q.close();
         }
@@ -1174,6 +1616,7 @@ mod tests {
                 beta: 0.0,
                 c: MatrixF64::zeros(8, 8),
             },
+            tier: Priority::Interactive,
             reply: mpsc::channel().0,
             enqueued: Instant::now(),
             deadline: None,
@@ -1247,5 +1690,89 @@ mod tests {
         let metrics = server.shutdown();
         assert_eq!(metrics.count("lu"), 1);
         assert_eq!(metrics.batch_stats().total_requests(), 0, "LU must not touch the batcher");
+    }
+
+    #[test]
+    fn interactive_budget_is_the_legacy_admission_cap() {
+        // The chaos suite pins `queuefull:100` and asserts
+        // `QueueFull { retries: MAX_ADMISSION_ATTEMPTS }` on the default
+        // (Interactive) tier — the tier budget must stay in lockstep.
+        assert_eq!(Priority::Interactive.admission_attempts(), MAX_ADMISSION_ATTEMPTS);
+    }
+
+    #[test]
+    fn next_batch_prefers_the_higher_tier_bucket() {
+        // Two ready buckets: the Background one parked first (older),
+        // the Interactive one second. Weighted-fair dispatch must open
+        // its cycle with the Interactive-class bucket, not the oldest.
+        let q = BatchQueue::new(BatchPolicy::default().with_max_batch(8), 16);
+        let entry = |tier| PendingGemm {
+            req: DlaRequest::Gemm {
+                alpha: 1.0,
+                a: MatrixF64::zeros(8, 8),
+                b: MatrixF64::zeros(8, 8),
+                beta: 0.0,
+                c: MatrixF64::zeros(8, 8),
+            },
+            tier,
+            reply: mpsc::channel().0,
+            enqueued: Instant::now(),
+            deadline: None,
+        };
+        let bg_dims = GemmDims::new(8, 8, 8);
+        let it_dims = GemmDims::new(8, 8, 16);
+        assert!(q.try_enqueue(bg_dims, entry(Priority::Background)).is_ok());
+        thread::sleep(Duration::from_millis(2));
+        assert!(q.try_enqueue(it_dims, entry(Priority::Interactive)).is_ok());
+        // Closing makes both buckets immediately dispatchable.
+        q.close();
+        let first = q.next_batch().expect("closed queue flushes");
+        assert_eq!(first[0].tier, Priority::Interactive, "interactive bucket dispatches first");
+        let second = q.next_batch().expect("background bucket still pending");
+        assert_eq!(second[0].tier, Priority::Background);
+        assert!(q.next_batch().is_none(), "closed and drained");
+    }
+
+    #[test]
+    fn submit_at_background_round_trips() {
+        let server =
+            CoordinatorServer::start(ServerConfig::new(host_xeon(), ConfigMode::Refined)).unwrap();
+        let mut rng = Pcg64::seed(44);
+        let rx = server.submit_at(gemm_req(&mut rng, 24, 24, 8), Priority::Background).unwrap();
+        rx.recv().unwrap().unwrap();
+        let metrics = server.shutdown();
+        assert_eq!(metrics.count("gemm"), 1);
+        let qos = metrics.qos_stats();
+        assert_eq!(qos.submitted[Priority::Background.index()], 1);
+        assert_eq!(qos.completed[Priority::Background.index()], 1);
+        assert!(qos.reconciles(), "{qos:?}");
+    }
+
+    #[test]
+    fn async_handle_polls_then_waits() {
+        let server =
+            CoordinatorServer::start(ServerConfig::new(host_xeon(), ConfigMode::Refined)).unwrap();
+        let mut rng = Pcg64::seed(45);
+        let mut handle = server.submit_async(gemm_req(&mut rng, 24, 24, 8)).unwrap();
+        // Poll until ready (bounded), then wait() returns the buffered
+        // response without blocking.
+        let t0 = Instant::now();
+        while !handle.poll() {
+            assert!(t0.elapsed() < Duration::from_secs(30), "gemm must complete");
+            thread::sleep(Duration::from_millis(1));
+        }
+        handle.wait().unwrap();
+        let metrics = server.shutdown();
+        assert_eq!(metrics.count("gemm"), 1);
+        assert!(metrics.qos_stats().reconciles());
+    }
+
+    #[test]
+    fn degraded_window_env_parser_accepts_positive_integers_only() {
+        // Pure parser check (no env mutation): the config override path.
+        let cfg = ServerConfig::new(host_xeon(), ConfigMode::Refined).with_degraded_window(3);
+        assert_eq!(cfg.degraded_window, Some(3));
+        let clamped = ServerConfig::new(host_xeon(), ConfigMode::Refined).with_degraded_window(0);
+        assert_eq!(clamped.degraded_window, Some(1), "window 0 would disable recovery");
     }
 }

@@ -211,6 +211,14 @@ impl BatchPlanner {
         t
     }
 
+    /// Memoized FP64 estimate in whole microseconds (floor 1 µs) — the
+    /// overload detector's analytic cost baseline: queue delay is judged
+    /// against what the model says a request *should* cost, and the
+    /// detector works in integer microseconds.
+    pub fn estimate_us(&self, arch: &Arch, cfg: GemmConfig, dims: GemmDims) -> u64 {
+        (self.estimate(arch, cfg, dims) * 1e6).max(1.0) as u64
+    }
+
     /// Is a GEMM of `dims` (configured as `cfg`) worth coalescing
     /// instead of dispatching alone on a `threads`-wide pool? True when
     /// the model says the request is small (estimate below
@@ -371,6 +379,13 @@ mod tests {
         let e32 = planner.estimate_elem(&arch, cfg, dims, 4);
         assert_eq!(planner.estimates.borrow().len(), 2, "dtype must not share estimates");
         assert!(e32 < direct, "f32-width estimate must beat f64 at equal shape");
+        // The microsecond form floors at 1 and agrees with the seconds
+        // estimate.
+        let us = planner.estimate_us(&arch, cfg, dims);
+        assert!(us >= 1);
+        assert_eq!(us, (direct * 1e6).max(1.0) as u64);
+        let degen = GemmDims::new(1, 1, 1);
+        assert!(planner.estimate_us(&arch, cfg_for(&arch, degen), degen) >= 1);
     }
 
     #[test]

@@ -35,6 +35,9 @@
 //! - `stall:MS` — every served request stalls `MS` milliseconds in the
 //!   worker before being handled.
 //! - `queuefull:N` — the next `N` admission attempts see a full queue.
+//! - `flood:N` — the server injects `N` synthetic Background-tier
+//!   requests at admission when it starts (a canned overload, so load
+//!   shedding is testable without an external generator).
 //! - `1` / `on` / `arm` — arm an empty plan (hooks active, no faults).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -55,6 +58,9 @@ pub struct FaultPlan {
     pub stall_ms: Option<u64>,
     /// Number of admission attempts forced to observe a full queue.
     pub queue_full: u64,
+    /// Number of synthetic Background-tier requests the server injects
+    /// at admission when it starts (the canned-overload drill).
+    pub flood: u64,
 }
 
 impl FaultPlan {
@@ -89,6 +95,10 @@ impl FaultPlan {
                 if let Ok(n) = rest.parse::<u64>() {
                     plan.queue_full = n;
                 }
+            } else if let Some(rest) = tok.strip_prefix("flood:") {
+                if let Ok(n) = rest.parse::<u64>() {
+                    plan.flood = n;
+                }
             }
             // "1" / "on" / "arm" / anything unrecognized: armed, no-op.
         }
@@ -116,6 +126,8 @@ pub struct FaultCounters {
     pub delays: u64,
     /// Admission attempts forced to see a full queue.
     pub queue_full: u64,
+    /// Synthetic flood requests actually injected at server start.
+    pub floods: u64,
 }
 
 /// An armed [`FaultPlan`]: the plan plus the one-shot / count-down state
@@ -126,22 +138,27 @@ pub struct FaultState {
     plan: FaultPlan,
     panic_fired: AtomicBool,
     queue_full_left: AtomicU64,
+    flood_left: AtomicU64,
     panics: AtomicU64,
     delays: AtomicU64,
     queue_fulls: AtomicU64,
+    floods: AtomicU64,
 }
 
 impl FaultState {
     /// Arm a plan.
     pub fn new(plan: FaultPlan) -> Self {
         let queue_full_left = AtomicU64::new(plan.queue_full);
+        let flood_left = AtomicU64::new(plan.flood);
         Self {
             plan,
             panic_fired: AtomicBool::new(false),
             queue_full_left,
+            flood_left,
             panics: AtomicU64::new(0),
             delays: AtomicU64::new(0),
             queue_fulls: AtomicU64::new(0),
+            floods: AtomicU64::new(0),
         }
     }
 
@@ -161,7 +178,19 @@ impl FaultState {
             panics: self.panics.load(Ordering::Relaxed),
             delays: self.delays.load(Ordering::Relaxed),
             queue_full: self.queue_fulls.load(Ordering::Relaxed),
+            floods: self.floods.load(Ordering::Relaxed),
         }
+    }
+
+    /// Server hook: claim the planned flood exactly once (the first
+    /// server to start against this armed state injects the burst; any
+    /// later server sees zero). Records the claimed count as delivered.
+    pub fn take_flood(&self) -> u64 {
+        let n = self.flood_left.swap(0, Ordering::AcqRel);
+        if n > 0 {
+            self.floods.fetch_add(n, Ordering::Relaxed);
+        }
+        n
     }
 
     /// Pool hook: called by every rank at the start of its job share,
@@ -224,12 +253,21 @@ mod tests {
 
     #[test]
     fn grammar_round_trip() {
-        let p = FaultPlan::parse("panic@1:3, slow@2:15, stall:40, queuefull:5").unwrap();
+        let p = FaultPlan::parse("panic@1:3, slow@2:15, stall:40, queuefull:5, flood:64").unwrap();
         assert_eq!(p.panic_at, Some((1, 3)));
         assert_eq!(p.slow, Some((2, 15)));
         assert_eq!(p.stall_ms, Some(40));
         assert_eq!(p.queue_full, 5);
+        assert_eq!(p.flood, 64);
         assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn flood_is_claimed_exactly_once() {
+        let st = FaultState::new(FaultPlan::parse("flood:7").unwrap());
+        assert_eq!(st.take_flood(), 7);
+        assert_eq!(st.take_flood(), 0);
+        assert_eq!(st.injected().floods, 7);
     }
 
     #[test]

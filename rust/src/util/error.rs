@@ -41,6 +41,17 @@ pub enum DlaError {
     /// `reason` carries the panic payload. The request that triggered it
     /// fails, the server keeps serving.
     Internal { reason: String },
+    /// The overload detector shed this request by policy before it was
+    /// admitted: measured queue delay had grown past the analytic service
+    /// estimate far enough that serving the `tier` named here would put
+    /// Interactive deadlines at risk. `queue_delay_us` is the smoothed
+    /// queue wait that tripped the detector. Transient — the caller may
+    /// re-submit once load subsides (or at a higher tier).
+    Overloaded { tier: &'static str, queue_delay_us: u64 },
+    /// The caller cancelled the job through its [`JobHandle`] while it
+    /// was still queued; the work was never started. Not transient in the
+    /// retry sense — the caller asked for this outcome.
+    Cancelled,
 }
 
 impl fmt::Display for DlaError {
@@ -58,6 +69,10 @@ impl fmt::Display for DlaError {
             }
             DlaError::WorkerLost { reason } => write!(f, "worker lost: {reason}"),
             DlaError::Internal { reason } => write!(f, "internal fault: {reason}"),
+            DlaError::Overloaded { tier, queue_delay_us } => {
+                write!(f, "overloaded: {tier} tier shed at {queue_delay_us} us queue delay")
+            }
+            DlaError::Cancelled => write!(f, "cancelled before execution"),
         }
     }
 }
@@ -70,7 +85,10 @@ impl DlaError {
     pub fn is_transient(&self) -> bool {
         matches!(
             self,
-            DlaError::Timeout { .. } | DlaError::QueueFull { .. } | DlaError::WorkerLost { .. }
+            DlaError::Timeout { .. }
+                | DlaError::QueueFull { .. }
+                | DlaError::WorkerLost { .. }
+                | DlaError::Overloaded { .. }
         )
     }
 
@@ -87,6 +105,12 @@ impl DlaError {
     }
 }
 
+/// Free-function form of [`DlaError::panic_reason`], for call sites that
+/// import it alongside the enum.
+pub fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+    DlaError::panic_reason(payload)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,6 +122,11 @@ mod tests {
             (DlaError::Singular { pivot: 3 }, "factorization breakdown at pivot column 3"),
             (DlaError::Timeout { waited_ms: 25 }, "deadline expired after 25 ms"),
             (DlaError::QueueFull { retries: 8 }, "admission queue full after 8 retries"),
+            (
+                DlaError::Overloaded { tier: "background", queue_delay_us: 900 },
+                "overloaded: background tier shed at 900 us queue delay",
+            ),
+            (DlaError::Cancelled, "cancelled before execution"),
         ];
         for (e, text) in cases {
             assert_eq!(format!("{e}"), text);
@@ -109,6 +138,8 @@ mod tests {
         assert!(DlaError::Timeout { waited_ms: 1 }.is_transient());
         assert!(DlaError::QueueFull { retries: 0 }.is_transient());
         assert!(DlaError::WorkerLost { reason: "x".into() }.is_transient());
+        assert!(DlaError::Overloaded { tier: "batch", queue_delay_us: 1 }.is_transient());
+        assert!(!DlaError::Cancelled.is_transient());
         assert!(!DlaError::InvalidInput { reason: "x".into() }.is_transient());
         assert!(!DlaError::Singular { pivot: 0 }.is_transient());
         assert!(!DlaError::Internal { reason: "x".into() }.is_transient());

@@ -21,7 +21,7 @@ use std::time::Duration;
 
 use dla_codesign::arch::host_xeon;
 use dla_codesign::coordinator::{
-    BatchPolicy, CoordinatorServer, DlaRequest, DlaResponse, DlaError, ServerConfig,
+    BatchPolicy, CoordinatorServer, DlaRequest, DlaResponse, DlaError, Priority, ServerConfig,
 };
 use dla_codesign::gemm::{ConfigMode, GemmEngine};
 use dla_codesign::runtime::FaultPlan;
@@ -237,6 +237,72 @@ fn queue_full_bursts_are_retried_then_rejected() {
     assert!(matches!(err, DlaError::QueueFull { retries } if retries >= 1), "got {err:?}");
     let metrics = server.shutdown();
     assert!(metrics.fault_stats().queue_full_rejections >= 1);
+}
+
+/// Per-tier retry budgets under a sustained queue-full burst: the same
+/// burst that a Background submission gives up on (typed
+/// [`DlaError::QueueFull`] after its 2-attempt budget, with bounded
+/// latency — no unbounded retry amplification) is absorbed by an
+/// Interactive submission's larger budget, and the survivor is bitwise
+/// identical to the serial oracle.
+#[test]
+fn retry_budget_exhaustion_is_tiered_typed_and_bounded() {
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined).with_faults(plan("queuefull:3")),
+    )
+    .expect("server start");
+
+    let mut rng = Pcg64::seed(604);
+    let t0 = std::time::Instant::now();
+    let err = server
+        .submit_at(
+            DlaRequest::Gemm {
+                alpha: 1.0,
+                a: MatrixF64::random(24, 12, &mut rng),
+                b: MatrixF64::random(12, 16, &mut rng),
+                beta: 0.0,
+                c: MatrixF64::zeros(24, 16),
+            },
+            Priority::Background,
+        )
+        .err()
+        .expect("the burst outlasts the background budget");
+    assert_eq!(err, DlaError::QueueFull { retries: 2 }, "budget = 2 attempts, typed");
+    assert!(err.is_transient());
+    // 2 attempts = at most one backoff sleep (≤ 10 ms cap): the tight
+    // budget bounds rejection latency instead of amplifying the storm.
+    assert!(t0.elapsed() < Duration::from_secs(2), "rejection must be prompt");
+
+    // The same storm has one forced rejection left; the Interactive
+    // budget (8 attempts) absorbs it without the caller noticing.
+    let a = MatrixF64::random(24, 12, &mut rng);
+    let b = MatrixF64::random(12, 16, &mut rng);
+    let c0 = MatrixF64::zeros(24, 16);
+    let rx = server
+        .submit_at(
+            DlaRequest::Gemm { alpha: 1.0, a: a.clone(), b: b.clone(), beta: 0.0, c: c0.clone() },
+            Priority::Interactive,
+        )
+        .expect("interactive budget must absorb the burst tail");
+    let DlaResponse::Matrix { result, .. } =
+        rx.recv().expect("answered").expect("survivor succeeds")
+    else {
+        panic!("unexpected response kind");
+    };
+    assert_eq!(
+        result.max_abs_diff(&serial_gemm(1.0, &a, &b, 0.0, &c0)),
+        0.0,
+        "the survivor is bitwise identical to the serial oracle"
+    );
+
+    let metrics = server.shutdown();
+    let f = metrics.fault_stats();
+    assert_eq!(f.retries, 3, "2 background + 1 interactive: every forced shot costs one retry");
+    assert_eq!(f.queue_full_rejections, 1, "only the background submission was rejected");
+    let q = metrics.qos_stats();
+    assert_eq!(q.rejected[Priority::Background.index()], 1, "{q:?}");
+    assert_eq!(q.completed[Priority::Interactive.index()], 1, "{q:?}");
+    assert!(q.reconciles(), "every submission is accounted: {q:?}");
 }
 
 /// The storm drill: concurrent submitters, a slow rank, and a one-shot

@@ -1,0 +1,370 @@
+//! QoS suite: priority tiers, weighted-fair dispatch, async submit
+//! handles, adaptive load shedding, and the degraded-window override —
+//! all through the public serving API.
+//!
+//! Tests that assert exact counters pin a [`FaultPlan`] (the empty
+//! `arm` plan when no faults are wanted): a pinned plan always beats the
+//! `DLA_FAULTS` environment override, so the CI overload leg's
+//! `flood:64` cannot skew these ledgers.
+
+use std::time::{Duration, Instant};
+
+use dla_codesign::arch::host_xeon;
+use dla_codesign::coordinator::qos::QosQueue;
+use dla_codesign::coordinator::{
+    BatchPolicy, CoordinatorServer, DlaError, DlaRequest, DlaResponse, OverloadLevel, Priority,
+    ServerConfig,
+};
+use dla_codesign::gemm::{ConfigMode, GemmEngine};
+use dla_codesign::runtime::FaultPlan;
+use dla_codesign::util::{MatrixF64, Pcg64};
+
+/// The serial oracle: what a solo, pool-less dispatch of this GEMM
+/// produces (bitwise — the pooled G4 schedule is team-width
+/// independent, see `tests/batching.rs`).
+fn serial_gemm(alpha: f64, a: &MatrixF64, b: &MatrixF64, beta: f64, c0: &MatrixF64) -> MatrixF64 {
+    let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+    let mut c = c0.clone();
+    eng.gemm(alpha, a.view(), b.view(), beta, &mut c.view_mut());
+    c
+}
+
+fn plan(spec: &str) -> FaultPlan {
+    FaultPlan::parse(spec).expect("test fault spec must parse")
+}
+
+fn gemm_req(rng: &mut Pcg64, m: usize, n: usize, k: usize) -> DlaRequest {
+    DlaRequest::Gemm {
+        alpha: 1.0,
+        a: MatrixF64::random(m, k, rng),
+        b: MatrixF64::random(k, n, rng),
+        beta: 0.0,
+        c: MatrixF64::zeros(m, n),
+    }
+}
+
+/// Weighted-fair dispatch with a hard starvation bound, under sustained
+/// higher-tier pressure: a parked Background item is dequeued within one
+/// credit cycle even though Interactive work keeps arriving.
+#[test]
+fn background_survives_sustained_interactive_pressure() {
+    let q = QosQueue::<u32>::new(64);
+    q.try_push(Priority::Background, 200).expect("push");
+    for i in 0..4u32 {
+        q.try_push(Priority::Interactive, i).expect("push");
+    }
+    let mut seq = Vec::new();
+    for i in 0..6u32 {
+        seq.push(q.pop().expect("queue is non-empty"));
+        // Sustained pressure: every dequeue is matched by a fresh
+        // Interactive arrival.
+        q.try_push(Priority::Interactive, 10 + i).expect("push");
+    }
+    // One cycle: 4 Interactive credits spend first, then (Batch empty)
+    // the Background credit — the parked item cannot be starved.
+    assert_eq!(seq[..4], [0, 1, 2, 3], "interactive drains FIFO first");
+    assert_eq!(seq[4], 200, "background dispatches within its credit cycle");
+    assert_eq!(seq[5], 10, "refilled credits return to interactive");
+    let bg_position = seq.iter().position(|&v| v == 200).expect("background served");
+    assert!(bg_position < 7, "starvation bound is one full credit cycle");
+    // Close → drain-then-None.
+    q.close();
+    let mut drained = 0;
+    while q.pop().is_some() {
+        drained += 1;
+    }
+    assert_eq!(drained, 5, "close drains the already-queued items");
+    assert!(q.pop().is_none(), "closed and drained");
+    assert!(
+        q.try_push(Priority::Interactive, 99).is_err(),
+        "closed queue refuses new work"
+    );
+}
+
+/// Async handles across all three tiers: poll → wait round-trips, every
+/// completed request bitwise identical to the serial oracle, and the
+/// per-tier ledger reconciles exactly.
+#[test]
+fn async_mixed_tier_results_are_bitwise_identical() {
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_workers(2)
+            .with_gemm_threads(4)
+            .with_batching(BatchPolicy::disabled())
+            .with_faults(plan("arm")),
+    )
+    .expect("server start");
+
+    let mut rng = Pcg64::seed(800);
+    let inputs: Vec<_> = (0..9)
+        .map(|_| {
+            (
+                MatrixF64::random(96, 64, &mut rng),
+                MatrixF64::random(64, 80, &mut rng),
+                MatrixF64::random(96, 80, &mut rng),
+            )
+        })
+        .collect();
+    let handles: Vec<_> = inputs
+        .iter()
+        .enumerate()
+        .map(|(i, (a, b, c0))| {
+            let tier = Priority::ALL[i % 3];
+            server
+                .submit_async_at(
+                    DlaRequest::Gemm {
+                        alpha: 1.0,
+                        a: a.clone(),
+                        b: b.clone(),
+                        beta: 1.0,
+                        c: c0.clone(),
+                    },
+                    tier,
+                )
+                .expect("submit_async_at")
+        })
+        .collect();
+    for (i, mut h) in handles.into_iter().enumerate() {
+        // Exercise the poll path before the blocking wait: polling must
+        // never lose the result.
+        let t0 = Instant::now();
+        while !h.poll() {
+            assert!(t0.elapsed() < Duration::from_secs(60), "request {i} must complete");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let resp = h.wait().expect("polled-ready request must succeed");
+        let DlaResponse::Matrix { result, .. } = resp else { panic!("unexpected response kind") };
+        let (a, b, c0) = &inputs[i];
+        let oracle = serial_gemm(1.0, a, b, 1.0, c0);
+        assert_eq!(result.max_abs_diff(&oracle), 0.0, "request {i} diverged from the oracle");
+    }
+
+    let metrics = server.shutdown();
+    let q = metrics.qos_stats();
+    assert_eq!(q.submitted, [3, 3, 3], "{q:?}");
+    assert_eq!(q.completed, [3, 3, 3], "{q:?}");
+    assert!(q.reconciles(), "{q:?}");
+    let s = metrics.summary();
+    assert!(s.contains("qos interactive: 3 submitted, 3 completed"), "{s}");
+    assert!(s.contains("qos background: 3 submitted, 3 completed"), "{s}");
+}
+
+/// Cancellation semantics: a still-queued job is guaranteed cancellable
+/// (typed [`DlaError::Cancelled`], never started); a claimed job runs to
+/// completion and reports that the cancel lost.
+#[test]
+fn cancel_is_guaranteed_for_queued_work_only() {
+    // One worker stalling 100 ms per request: the second submission is
+    // reliably still queued when we cancel it.
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_workers(1)
+            .with_faults(plan("stall:100")),
+    )
+    .expect("server start");
+
+    let mut rng = Pcg64::seed(801);
+    let mut in_flight = server.submit_async(gemm_req(&mut rng, 24, 24, 12)).expect("submit");
+    assert!(
+        in_flight.wait_for(Duration::from_millis(1)).is_none(),
+        "stalled request cannot be done after 1 ms; the handle stays usable"
+    );
+    // Give the worker time to claim the first job, then park a second.
+    std::thread::sleep(Duration::from_millis(30));
+    let mut queued = server.submit_async(gemm_req(&mut rng, 24, 24, 12)).expect("submit");
+    assert!(queued.cancel(), "still-queued work must be cancellable");
+    assert!(!queued.cancel(), "a second cancel reports the job already cancelled");
+    let err = queued.wait().err().expect("cancelled job must not produce a result");
+    assert_eq!(err, DlaError::Cancelled);
+    assert!(!err.is_transient(), "a cancelled request must not be blindly retried");
+
+    // The in-flight job ran to completion; cancelling it now loses.
+    let t0 = Instant::now();
+    while !in_flight.poll() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "first request must complete");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(!in_flight.cancel(), "completed work cannot be cancelled");
+    in_flight.wait().expect("in-flight work runs to completion");
+
+    let metrics = server.shutdown();
+    let q = metrics.qos_stats();
+    assert_eq!(q.submitted[Priority::Interactive.index()], 2, "{q:?}");
+    assert_eq!(q.completed[Priority::Interactive.index()], 1, "{q:?}");
+    assert_eq!(q.cancelled[Priority::Interactive.index()], 1, "{q:?}");
+    assert!(q.reconciles(), "{q:?}");
+    assert!(metrics.summary().contains("1 cancelled"), "{}", metrics.summary());
+}
+
+/// Adaptive shedding under sustained overload: Background submissions
+/// are refused with a typed [`DlaError::Overloaded`] once measured queue
+/// delay runs far ahead of the cost baseline, Interactive is still
+/// admitted, every accepted request completes, and the ledger
+/// reconciles — no silent drops.
+#[test]
+fn background_sheds_under_overload_while_interactive_is_admitted() {
+    // One worker, 30 ms stall per request: queue wait grows ~30 ms per
+    // parked request while measured service cost stays small, so the
+    // wait/cost ratio crosses the Background shed threshold quickly.
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_workers(1)
+            .with_faults(plan("stall:30")),
+    )
+    .expect("server start");
+
+    let mut rng = Pcg64::seed(802);
+    let mut accepted = Vec::new();
+    for _ in 0..8 {
+        accepted.push(
+            server
+                .submit_at(gemm_req(&mut rng, 16, 16, 8), Priority::Background)
+                .expect("cold server must admit background work"),
+        );
+    }
+    // Let the worker observe the growing queue waits.
+    std::thread::sleep(Duration::from_millis(250));
+    let mut shed = None;
+    for _ in 0..50 {
+        match server.submit_at(gemm_req(&mut rng, 16, 16, 8), Priority::Background) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                shed = Some(e);
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let err = shed.expect("sustained overload must shed background work");
+    match &err {
+        DlaError::Overloaded { tier, queue_delay_us } => {
+            assert_eq!(*tier, "background");
+            assert!(*queue_delay_us > 0, "the rejection reports the measured delay");
+        }
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    assert!(err.is_transient(), "overload is retryable later");
+    assert!(
+        server.overload_level() >= OverloadLevel::SheddingBackground,
+        "the detector must report the shedding level"
+    );
+    // Interactive is never shed: it still gets in while Background is
+    // refused.
+    let vip = server
+        .submit_at(gemm_req(&mut rng, 16, 16, 8), Priority::Interactive)
+        .expect("interactive must be admitted under overload");
+
+    // Every accepted request completes (shedding only refuses at
+    // admission; it never drops queued work).
+    for rx in accepted {
+        rx.recv().expect("accepted request is answered").expect("and succeeds");
+    }
+    vip.recv().expect("answered").expect("succeeds");
+
+    let metrics = server.shutdown();
+    let q = metrics.qos_stats();
+    let bg = Priority::Background.index();
+    assert!(q.shed[bg] >= 1, "{q:?}");
+    assert_eq!(q.submitted[bg], q.completed[bg] + q.shed[bg], "{q:?}");
+    assert_eq!(q.completed[Priority::Interactive.index()], 1, "{q:?}");
+    assert!(q.reconciles(), "{q:?}");
+    assert!(metrics.summary().contains("shed"), "{}", metrics.summary());
+}
+
+/// The `flood:N` drill: the server injects N synthetic Background
+/// requests through the real admission path at start; they are served,
+/// counted, and the ledger reconciles.
+#[test]
+fn flood_drill_is_injected_served_and_ledgered() {
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined).with_faults(plan("flood:16")),
+    )
+    .expect("server start");
+    let faults = server.fault_state().expect("pinned plan must be armed");
+    assert_eq!(faults.injected().floods, 16, "the flood is claimed at start, exactly once");
+
+    let metrics = server.shutdown();
+    assert_eq!(metrics.count("gemm"), 16, "every probe is a real served gemm");
+    let q = metrics.qos_stats();
+    let bg = Priority::Background.index();
+    assert_eq!(q.submitted[bg], 16, "{q:?}");
+    assert_eq!(q.completed[bg], 16, "{q:?}");
+    assert!(q.reconciles(), "{q:?}");
+}
+
+/// The degraded-window override: a pinned window of 4 arms exactly 4
+/// serial-fallback slots after a panic; the unconsumed remainder
+/// surfaces as the `degraded-window remaining` gauge.
+#[test]
+fn degraded_window_override_and_remaining_gauge() {
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_workers(1)
+            .with_gemm_threads(4)
+            .with_batching(BatchPolicy::disabled())
+            .with_degraded_window(4)
+            .with_faults(plan("panic@1:1")),
+    )
+    .expect("server start");
+
+    let mut rng = Pcg64::seed(803);
+    let inputs: Vec<_> = (0..3)
+        .map(|_| {
+            (
+                MatrixF64::random(96, 64, &mut rng),
+                MatrixF64::random(64, 80, &mut rng),
+                MatrixF64::random(96, 80, &mut rng),
+            )
+        })
+        .collect();
+    for (i, (a, b, c0)) in inputs.iter().enumerate() {
+        let resp = server.call(DlaRequest::Gemm {
+            alpha: 1.0,
+            a: a.clone(),
+            b: b.clone(),
+            beta: 1.0,
+            c: c0.clone(),
+        });
+        if i == 0 {
+            assert!(
+                matches!(resp, Err(DlaError::Internal { .. })),
+                "the first pooled epoch takes the shot: {resp:?}"
+            );
+        } else {
+            let DlaResponse::Matrix { result, .. } = resp.expect("degraded survivor") else {
+                panic!("unexpected response kind");
+            };
+            let oracle = serial_gemm(1.0, a, b, 1.0, c0);
+            assert_eq!(result.max_abs_diff(&oracle), 0.0, "degraded path must stay bitwise");
+        }
+    }
+
+    let metrics = server.shutdown();
+    let f = metrics.fault_stats();
+    assert_eq!(f.worker_panics, 1);
+    assert_eq!(f.degraded_requests, 2, "two survivors consumed two of the four slots");
+    assert_eq!(f.degraded_remaining, 2, "the rest of the pinned window is still armed");
+    let s = metrics.summary();
+    assert!(s.contains("2 degraded-window remaining"), "{s}");
+}
+
+/// The pinned default tier routes bare `submit` calls: the ledger books
+/// them under the configured tier, not Interactive.
+#[test]
+fn pinned_default_priority_routes_bare_submits() {
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_default_priority(Priority::Batch)
+            .with_faults(plan("arm")),
+    )
+    .expect("server start");
+    let mut rng = Pcg64::seed(804);
+    let rx = server.submit(gemm_req(&mut rng, 24, 24, 8)).expect("submit");
+    rx.recv().expect("answered").expect("succeeds");
+    let metrics = server.shutdown();
+    let q = metrics.qos_stats();
+    assert_eq!(q.submitted[Priority::Batch.index()], 1, "{q:?}");
+    assert_eq!(q.completed[Priority::Batch.index()], 1, "{q:?}");
+    assert_eq!(q.submitted[Priority::Interactive.index()], 0, "{q:?}");
+    assert!(q.reconciles(), "{q:?}");
+}
