@@ -33,14 +33,19 @@
 //!    cache params), and the mixed-precision LU solve (factor f32 +
 //!    iteratively refine to f64 residual accuracy) vs the plain f64
 //!    factor+solve. Appended to the same `BENCH_gemm.json`.
+//! 9. **ABFT overhead** — the same GEMM and blocked LU with
+//!    checksum verification (`VerifyPolicy::Detect`) armed vs off.
+//!    Detect mode is bitwise identical to plain when no fault fires,
+//!    so the delta is pure checksum work (target <= 10%). Appended to
+//!    the same `BENCH_gemm.json`.
 use dla_codesign::arch::detect_host;
 use dla_codesign::coordinator::{BatchPolicy, CoordinatorServer, DlaRequest, ServerConfig};
 use dla_codesign::bench::{BenchGroup, JsonBench};
 use dla_codesign::gemm::microkernel::for_shape;
 use dla_codesign::gemm::parallel::{gemm_parallel, gemm_parallel_spawning};
 use dla_codesign::gemm::{
-    gemm_blocked, ConfigMode, GemmEngine, Lookahead, ParallelLoop, ThreadPlan, Workspace,
-    AUTO_PANEL_WORKERS,
+    gemm_blocked, ConfigMode, GemmEngine, Lookahead, ParallelLoop, ThreadPlan, VerifyPolicy,
+    Workspace, AUTO_PANEL_WORKERS,
 };
 use dla_codesign::lapack::refine::{lu_solve_f64, lu_solve_mixed, RefineOptions};
 use dla_codesign::lapack::{getf2, lu_blocked, lu_flops};
@@ -537,6 +542,101 @@ fn main() {
         );
     }
     g8.finish("bench_ablation_dtype");
+
+    // --- 9. ABFT overhead: checksum-verified vs plain GEMM + LU --------
+    // The robustness tax, measured: the same GEMM and blocked LU with
+    // `VerifyPolicy::Detect` armed (checksummed packing + the macro-block
+    // verification epilogue + LU panel re-verification) vs verification
+    // off. Detect mode with no fault firing is bitwise identical to the
+    // plain path, so the delta is pure checksum work; the target from
+    // the ABFT literature — and this stack's acceptance bar — is <= 10%.
+    // Appended to the same BENCH_gemm.json.
+    println!("=== ablation 9: ABFT overhead, verified vs plain (x{threads}) ===");
+    let mut g9 = BenchGroup::new("abft: verified vs plain");
+    {
+        let mut plain = GemmEngine::new(arch.clone(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads, target: ParallelLoop::G4 });
+        let mut verified = GemmEngine::new(arch.clone(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads, target: ParallelLoop::G4 })
+            .with_verify(VerifyPolicy::Detect);
+        let mut c9 = MatrixF64::zeros(mn, mn);
+        let base = g9
+            .case(&format!("gemm plain {mn}x{mn}x{k} x{threads}"), dims.flops(), || {
+                plain.gemm(1.0, a.view(), b.view(), 0.0, &mut c9.view_mut());
+            })
+            .clone();
+        let checked = g9
+            .case(&format!("gemm verified {mn}x{mn}x{k} x{threads}"), dims.flops(), || {
+                verified.gemm(1.0, a.view(), b.view(), 0.0, &mut c9.view_mut());
+            })
+            .clone();
+        let stats = verified.abft_stats().snapshot();
+        assert_eq!(stats.detected, 0, "no fault armed: the bench must verify clean");
+        let overhead = checked.measurement.mean_s / base.measurement.mean_s - 1.0;
+        println!(
+            "  gemm: verified {:.2} GFLOPS vs plain {:.2} GFLOPS ({:+.2}% overhead)",
+            checked.gflops(),
+            base.gflops(),
+            overhead * 100.0
+        );
+        j.entry(
+            "abft_gemm_overhead",
+            &[
+                ("threads", threads as f64),
+                ("mn", mn as f64),
+                ("k", k as f64),
+                ("plain_gflops", base.gflops()),
+                ("verified_gflops", checked.gflops()),
+                ("overhead_frac", overhead),
+                ("verified_epochs", stats.verified_epochs as f64),
+                ("verified_blocks", stats.verified_blocks as f64),
+                ("checksum_work_ms", stats.overhead_ns as f64 / 1e6),
+            ],
+        );
+    }
+    for &s in &lu_sizes {
+        let mut rng9 = Pcg64::seed(s as u64 ^ 0xabf7);
+        let a0 = MatrixF64::random_diag_dominant(s, &mut rng9);
+        let mut plain = GemmEngine::new(arch.clone(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads, target: ParallelLoop::G4 });
+        let mut verified = GemmEngine::new(arch.clone(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads, target: ParallelLoop::G4 })
+            .with_verify(VerifyPolicy::Detect);
+        let base = g9
+            .case(&format!("lu plain n={s} b={lu_block} x{threads}"), lu_flops(s), || {
+                let mut m = a0.clone();
+                lu_blocked(&mut m, lu_block, &mut plain).expect("diag-dominant LU");
+            })
+            .clone();
+        let checked = g9
+            .case(&format!("lu verified n={s} b={lu_block} x{threads}"), lu_flops(s), || {
+                let mut m = a0.clone();
+                lu_blocked(&mut m, lu_block, &mut verified).expect("diag-dominant LU");
+            })
+            .clone();
+        let stats = verified.abft_stats().snapshot();
+        assert_eq!(stats.detected, 0, "no fault armed: the bench must verify clean");
+        let overhead = checked.measurement.mean_s / base.measurement.mean_s - 1.0;
+        println!(
+            "  lu n={s}: verified {:.4}s vs plain {:.4}s ({:+.2}% overhead)",
+            checked.measurement.mean_s,
+            base.measurement.mean_s,
+            overhead * 100.0
+        );
+        j.entry(
+            &format!("abft_lu_overhead_n{s}"),
+            &[
+                ("threads", threads as f64),
+                ("block", lu_block as f64),
+                ("plain_seconds", base.measurement.mean_s),
+                ("verified_seconds", checked.measurement.mean_s),
+                ("overhead_frac", overhead),
+                ("verified_epochs", stats.verified_epochs as f64),
+                ("checksum_work_ms", stats.overhead_ns as f64 / 1e6),
+            ],
+        );
+    }
+    g9.finish("bench_ablation_abft");
 
     match j.write("BENCH_gemm.json") {
         Ok(()) => println!(

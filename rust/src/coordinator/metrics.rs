@@ -277,6 +277,61 @@ impl QosMetrics {
     }
 }
 
+/// Counters of the ABFT verified-compute path (the serving-side view of
+/// [`crate::gemm::AbftStats`]): how much work ran checksum-verified,
+/// how many mismatches the checksums caught, how many the one-shot
+/// recompute repaired, and what the verification cost. All-zero on a
+/// server running with `VerifyPolicy::Off` — the summary omits the
+/// `abft:` line entirely in that case.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AbftMetrics {
+    /// Requests (GEMM dispatches / fused factorization jobs) that ran
+    /// with checksums armed.
+    pub verified_epochs: u64,
+    /// Macro-blocks and factorization panels whose checksums verified
+    /// clean.
+    pub verified_blocks: u64,
+    /// Checksum mismatches detected.
+    pub detected: u64,
+    /// Mismatches repaired by the one-shot recompute (`Correct` mode).
+    pub corrected: u64,
+    /// Mismatches that survived the recompute, plus every `Detect`-mode
+    /// hit (detect never repairs).
+    pub uncorrectable: u64,
+    /// Nanoseconds spent computing and comparing checksums.
+    pub overhead_ns: u64,
+}
+
+impl AbftMetrics {
+    /// True once any verified work (or any detection) happened — gates
+    /// the summary line.
+    pub fn any(&self) -> bool {
+        self.verified_epochs > 0 || self.verified_blocks > 0 || self.detected > 0
+    }
+
+    pub fn merge(&mut self, other: &AbftMetrics) {
+        self.verified_epochs += other.verified_epochs;
+        self.verified_blocks += other.verified_blocks;
+        self.detected += other.detected;
+        self.corrected += other.corrected;
+        self.uncorrectable += other.uncorrectable;
+        self.overhead_ns += other.overhead_ns;
+    }
+}
+
+impl From<crate::gemm::AbftCounters> for AbftMetrics {
+    fn from(c: crate::gemm::AbftCounters) -> Self {
+        Self {
+            verified_epochs: c.verified_epochs,
+            verified_blocks: c.verified_blocks,
+            detected: c.detected,
+            corrected: c.corrected,
+            uncorrectable: c.uncorrectable,
+            overhead_ns: c.overhead_ns,
+        }
+    }
+}
+
 /// Metrics for one request kind.
 #[derive(Default)]
 pub struct KindMetrics {
@@ -303,6 +358,12 @@ pub struct Metrics {
     /// Per-tier QoS accounting (all-zero until the server folds its
     /// tier counters at shutdown).
     qos: QosMetrics,
+    /// ABFT verified-compute accounting (all-zero under
+    /// `VerifyPolicy::Off`).
+    abft: AbftMetrics,
+    /// Admission-queue wait histogram (microsecond log2 buckets) — the
+    /// percentile-capable companion of `batch.queue_wait_ns`.
+    queue_wait: LatencyHistogram,
 }
 
 impl Metrics {
@@ -353,6 +414,20 @@ impl Metrics {
     /// Record one batched dispatch (see [`BatchMetrics::record_dispatch`]).
     pub fn record_batch_dispatch(&mut self, size: usize, waits_ns: &[u64]) {
         self.batch.record_dispatch(size, waits_ns);
+        for &w in waits_ns {
+            self.queue_wait.record_secs(w as f64 * 1e-9);
+        }
+    }
+
+    /// Replace the ABFT snapshot (the engine's counters are cumulative,
+    /// so each call supersedes the previous one).
+    pub fn set_abft(&mut self, c: crate::gemm::AbftCounters) {
+        self.abft = AbftMetrics::from(c);
+    }
+
+    /// The ABFT verified-compute counters.
+    pub fn abft_stats(&self) -> &AbftMetrics {
+        &self.abft
     }
 
     /// The batch scheduler's coalescing counters.
@@ -409,6 +484,11 @@ impl Metrics {
         self.refine.merge(&other.refine);
         self.faults.merge(&other.faults);
         self.qos.merge(&other.qos);
+        // Workers own disjoint engines, so ABFT counters sum.
+        self.abft.merge(&other.abft);
+        for _ in 0..other.queue_wait.count() {
+            self.queue_wait.record_secs(other.queue_wait.mean_us() * 1e-6);
+        }
         for (kind, km) in other.kinds {
             let mine = self.kinds.entry(kind).or_default();
             mine.flops.merge(&km.flops);
@@ -513,6 +593,19 @@ impl Metrics {
                 remaining,
             ));
         }
+        if self.abft.any() {
+            let a = &self.abft;
+            out.push_str(&format!(
+                "abft: {} verified epochs ({} blocks), {} detected, {} corrected, \
+                 {} uncorrectable, checksum overhead {:.3} ms\n",
+                a.verified_epochs,
+                a.verified_blocks,
+                a.detected,
+                a.corrected,
+                a.uncorrectable,
+                a.overhead_ns as f64 / 1e6,
+            ));
+        }
         if self.qos.any() {
             let q = &self.qos;
             for (i, label) in ["interactive", "batch", "background"].iter().enumerate() {
@@ -533,6 +626,132 @@ impl Metrics {
             }
         }
         out
+    }
+
+    /// One JSON object holding every counter family — the
+    /// machine-readable counterpart of [`Metrics::summary`], dumped at
+    /// server shutdown when `DLA_METRICS_JSON=1`. All keys are always
+    /// present (zeroed families included) so downstream parsers never
+    /// need existence checks; `pool` is `null` for sequential engines.
+    pub fn snapshot_json(&self) -> String {
+        let kinds: Vec<String> = self
+            .kinds
+            .iter()
+            .map(|(kind, km)| {
+                format!(
+                    "\"{}\":{{\"count\":{},\"mean_ms\":{:.3},\"p50_ms\":{:.3},\
+                     \"p99_ms\":{:.3},\"max_ms\":{:.3},\"gflops\":{:.2}}}",
+                    kind,
+                    km.latency.count(),
+                    km.latency.mean_us() / 1e3,
+                    km.latency.quantile_us(0.5) / 1e3,
+                    km.latency.quantile_us(0.99) / 1e3,
+                    km.latency.max_us() / 1e3,
+                    self.mean_gflops(kind),
+                )
+            })
+            .collect();
+        let qw = &self.queue_wait;
+        let queue_wait = format!(
+            "{{\"count\":{},\"mean_us\":{:.1},\"p50_us\":{:.1},\"p90_us\":{:.1},\
+             \"p99_us\":{:.1},\"max_us\":{:.1}}}",
+            qw.count(),
+            qw.mean_us(),
+            qw.quantile_us(0.5),
+            qw.quantile_us(0.9),
+            qw.quantile_us(0.99),
+            qw.max_us(),
+        );
+        let pool = match self.pool {
+            None => "null".to_string(),
+            Some(p) => format!(
+                "{{\"jobs\":{},\"leader_wait_ns\":{},\"idle_ns\":{},\"panel_idle_ns\":{},\
+                 \"update_idle_ns\":{},\"queue_stall_ns\":{},\"epochs_poisoned\":{},\
+                 \"recoveries\":{}}}",
+                p.jobs,
+                p.leader_wait_ns,
+                p.idle_ns,
+                p.panel_idle_ns,
+                p.update_idle_ns,
+                p.queue_stall_ns,
+                p.epochs_poisoned,
+                p.recoveries,
+            ),
+        };
+        let b = &self.batch;
+        let batch = format!(
+            "{{\"batches\":{},\"coalesced_requests\":{},\"solo\":{},\"mean_size\":{:.2}}}",
+            b.batches,
+            b.coalesced_requests,
+            b.solo,
+            b.mean_batch_size(),
+        );
+        let q = &self.qos;
+        let tiers: Vec<String> = ["interactive", "batch", "background"]
+            .iter()
+            .enumerate()
+            .map(|(i, label)| {
+                format!(
+                    "\"{}\":{{\"submitted\":{},\"completed\":{},\"failed\":{},\"shed\":{},\
+                     \"rejected\":{},\"cancelled\":{}}}",
+                    label,
+                    q.submitted[i],
+                    q.completed[i],
+                    q.failed[i],
+                    q.shed[i],
+                    q.rejected[i],
+                    q.cancelled[i],
+                )
+            })
+            .collect();
+        let r = &self.refine;
+        let refine = format!(
+            "{{\"solves\":{},\"fallbacks\":{},\"mean_iterations\":{:.2},\
+             \"f32_factor_ms_mean\":{:.3},\"refine_ms_mean\":{:.3}}}",
+            r.solves,
+            r.fallbacks,
+            r.iterations.mean(),
+            r.f32_factor_s.mean() * 1e3,
+            r.refine_s.mean() * 1e3,
+        );
+        let f = &self.faults;
+        let faults = format!(
+            "{{\"invalid_inputs\":{},\"timeouts\":{},\"expired_in_queue\":{},\
+             \"queue_full_rejections\":{},\"retries\":{},\"worker_panics\":{},\
+             \"degraded_requests\":{},\"workers_lost\":{},\"degraded_remaining\":{}}}",
+            f.invalid_inputs,
+            f.timeouts,
+            f.expired_in_queue,
+            f.queue_full_rejections,
+            f.retries,
+            f.worker_panics,
+            f.degraded_requests,
+            f.workers_lost,
+            f.degraded_remaining,
+        );
+        let a = &self.abft;
+        let abft = format!(
+            "{{\"verified_epochs\":{},\"verified_blocks\":{},\"detected\":{},\
+             \"corrected\":{},\"uncorrectable\":{},\"overhead_ns\":{}}}",
+            a.verified_epochs,
+            a.verified_blocks,
+            a.detected,
+            a.corrected,
+            a.uncorrectable,
+            a.overhead_ns,
+        );
+        format!(
+            "{{\"requests\":{{{}}},\"queue_wait\":{},\"pool\":{},\"batch\":{},\
+             \"qos\":{{{}}},\"refine\":{},\"faults\":{},\"abft\":{}}}",
+            kinds.join(","),
+            queue_wait,
+            pool,
+            batch,
+            tiers.join(","),
+            refine,
+            faults,
+            abft,
+        )
     }
 }
 
@@ -622,6 +841,66 @@ mod tests {
         });
         let s = m.summary();
         assert!(s.contains("2 epochs poisoned (2 recovered)"), "{s}");
+    }
+
+    #[test]
+    fn abft_metrics_merge_and_summarize() {
+        use crate::gemm::AbftCounters;
+        let mut a = Metrics::new();
+        assert!(!a.abft_stats().any());
+        assert!(!a.summary().contains("abft:"), "no line without verified traffic");
+        a.set_abft(AbftCounters {
+            verified_epochs: 3,
+            verified_blocks: 12,
+            detected: 1,
+            corrected: 1,
+            uncorrectable: 0,
+            overhead_ns: 2_000_000,
+        });
+        let mut b = Metrics::new();
+        b.set_abft(AbftCounters {
+            verified_epochs: 1,
+            verified_blocks: 4,
+            overhead_ns: 500_000,
+            ..AbftCounters::default()
+        });
+        a.merge(b);
+        let m = a.abft_stats();
+        assert_eq!((m.verified_epochs, m.verified_blocks), (4, 16));
+        assert_eq!((m.detected, m.corrected, m.uncorrectable), (1, 1, 0));
+        assert_eq!(m.overhead_ns, 2_500_000);
+        let s = a.summary();
+        assert!(s.contains("abft: 4 verified epochs (16 blocks), 1 detected, 1 corrected"), "{s}");
+    }
+
+    #[test]
+    fn snapshot_json_holds_every_family_and_stays_one_object() {
+        use crate::gemm::AbftCounters;
+        use crate::runtime::pool::PoolStats;
+        let mut m = Metrics::new();
+        // Empty metrics still produce every key.
+        let j = m.snapshot_json();
+        for key in ["requests", "queue_wait", "pool", "batch", "qos", "refine", "faults", "abft"] {
+            assert!(j.contains(&format!("\"{key}\":")), "missing {key} in {j}");
+        }
+        assert!(j.contains("\"pool\":null"), "{j}");
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(!j.contains('\n'), "one line, one object");
+        // Populated metrics surface their numbers.
+        m.record("gemm", 0.002, 4e6);
+        m.record_batch_dispatch(2, &[1_000, 3_000]);
+        m.set_pool_stats(PoolStats { jobs: 9, ..PoolStats::default() });
+        m.set_abft(AbftCounters { verified_epochs: 2, detected: 1, ..AbftCounters::default() });
+        m.faults_mut().timeouts = 7;
+        m.qos_mut().submitted = [3, 0, 0];
+        let j = m.snapshot_json();
+        assert!(j.contains("\"gemm\":{\"count\":1"), "{j}");
+        assert!(j.contains("\"jobs\":9"), "{j}");
+        assert!(j.contains("\"verified_epochs\":2"), "{j}");
+        assert!(j.contains("\"detected\":1"), "{j}");
+        assert!(j.contains("\"timeouts\":7"), "{j}");
+        assert!(j.contains("\"interactive\":{\"submitted\":3"), "{j}");
+        assert!(j.contains("\"count\":2,\"mean_us\":2.0"), "queue-wait stats in {j}");
     }
 
     #[test]

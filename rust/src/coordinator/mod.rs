@@ -39,9 +39,11 @@
 //! admission-validated inputs ([`DlaRequest::validate`]), factorization
 //! breakdown as [`DlaError::Singular`], caught panics as
 //! [`DlaError::Internal`], deadlines/backpressure as
-//! [`DlaError::Timeout`] / [`DlaError::QueueFull`]. See the "Failure
-//! model" section of `lapack/README.md` for the full taxonomy and the
-//! degradation ladder.
+//! [`DlaError::Timeout`] / [`DlaError::QueueFull`], and checksum
+//! mismatches the verified-compute mode could not repair as
+//! [`DlaError::DataCorrupt`] ([`crate::gemm::VerifyPolicy`],
+//! `DLA_VERIFY`). See the "Failure model" section of
+//! `lapack/README.md` for the full taxonomy and the degradation ladder.
 
 // The serving path must stay panic-free: every unwrap/expect below is
 // either allow-listed with a justification or lives in test code.
@@ -58,7 +60,7 @@ pub mod server;
 pub use lu_driver::{lu_via_artifacts, LuArtifactResult};
 pub use crate::model::batchplan::BatchPolicy;
 pub use crate::util::DlaError;
-pub use metrics::{BatchMetrics, FaultMetrics, Metrics, QosMetrics, RefineMetrics};
+pub use metrics::{AbftMetrics, BatchMetrics, FaultMetrics, Metrics, QosMetrics, RefineMetrics};
 pub use qos::{OverloadLevel, Priority};
 pub use requests::{DlaRequest, DlaResponse};
 pub use server::{CoordinatorServer, JobHandle, ServerConfig};
@@ -96,13 +98,25 @@ impl Coordinator {
         self
     }
 
+    /// Pin the engine's ABFT verification policy (see
+    /// [`crate::gemm::VerifyPolicy`]): every GEMM and factorization this
+    /// coordinator serves runs checksum-verified, and a detected
+    /// mismatch surfaces as [`DlaError::DataCorrupt`] instead of a
+    /// silently wrong result.
+    pub fn with_verify(mut self, policy: crate::gemm::VerifyPolicy) -> Self {
+        self.engine.set_verify(policy);
+        self
+    }
+
     /// Refresh the metrics' snapshot of the engine pool's idle accounting
-    /// (no-op for sequential engines). Called after every request so the
-    /// summary always reflects the latest counters.
+    /// (no-op for sequential engines) and of the engine's ABFT counters.
+    /// Called after every request so the summary always reflects the
+    /// latest counters.
     fn snapshot_pool_stats(&mut self) {
         if let Some(pool) = self.engine.pool() {
             self.metrics.set_pool_stats(pool.stats());
         }
+        self.metrics.set_abft(self.engine.abft_stats().snapshot());
     }
 
     /// Hit/miss accounting of the engine's config-selection memo cache
@@ -113,8 +127,22 @@ impl Coordinator {
 
     /// Handle one request synchronously. Malformed operands are rejected
     /// up front with [`DlaError::InvalidInput`]; factorization breakdown
-    /// comes back as [`DlaError::Singular`] — never a panic.
+    /// comes back as [`DlaError::Singular`]; a checksum mismatch the
+    /// verified path could not repair comes back as
+    /// [`DlaError::DataCorrupt`] — never a panic, never a silently wrong
+    /// matrix.
     pub fn handle(&mut self, req: DlaRequest) -> Result<DlaResponse, DlaError> {
+        let resp = self.handle_inner(req);
+        // An unrepaired checksum mismatch trumps whatever the drive
+        // produced: the computed matrix is not trustworthy.
+        if let Some(corrupt) = self.engine.take_abft_failure() {
+            self.snapshot_pool_stats();
+            return Err(corrupt);
+        }
+        resp
+    }
+
+    fn handle_inner(&mut self, req: DlaRequest) -> Result<DlaResponse, DlaError> {
         req.validate()?;
         let sw = Stopwatch::start();
         let resp = match req {

@@ -75,6 +75,16 @@
 //! - **Poison-tolerant shutdown.** [`Self::shutdown`] never unwraps a
 //!   `join`: a dead worker is counted as `workers_lost` and the
 //!   surviving workers' metrics are still merged.
+//! - **Verified compute.** With [`ServerConfig::with_verify`] (or
+//!   `DLA_VERIFY=detect|correct`) every worker engine runs its GEMMs
+//!   and factorization trailing updates checksum-verified (ABFT): a
+//!   silent bit flip in a packed operand or an accumulator is detected,
+//!   in `correct` mode repaired by a one-shot recompute of the affected
+//!   tile, and anything unrepaired is answered as typed
+//!   [`DlaError::DataCorrupt`] — never a silently wrong matrix.
+//!   Verification counters land in [`super::metrics::AbftMetrics`] (the
+//!   `abft:` summary line); batching is disabled under verification
+//!   (the fused batch driver is unverified by design).
 //!
 //! Every fault is counted in [`super::metrics::FaultMetrics`] (the
 //! `resilience:` summary line). Fault *injection* for drills and the
@@ -130,7 +140,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::arch::Arch;
-use crate::gemm::{ConfigMode, GemmBatchItem, Lookahead};
+use crate::gemm::{ConfigMode, GemmBatchItem, Lookahead, VerifyPolicy};
 use crate::model::batchplan::{BatchPlanner, BatchPolicy};
 use crate::model::GemmDims;
 use crate::runtime::faults::{FaultPlan, FaultState};
@@ -156,6 +166,12 @@ pub const DEGRADED_WINDOW: u64 = 8;
 /// lower tiers run tighter budgets (see
 /// [`Priority::admission_attempts`], asserted equal in the tests).
 const MAX_ADMISSION_ATTEMPTS: u32 = 8;
+
+/// Default backoff-jitter seed (an arbitrary odd constant — the stream
+/// only decorrelates concurrent submitters). Override per server with
+/// [`ServerConfig::with_jitter_seed`] to make retry drills
+/// deterministic.
+const DEFAULT_JITTER_SEED: u64 = 0x243F_6A88_85A3_08D3;
 
 /// Server configuration.
 #[derive(Clone)]
@@ -189,6 +205,15 @@ pub struct ServerConfig {
     /// to the `DLA_PRIORITY` environment override, then
     /// `Priority::Interactive`.
     pub default_priority: Option<Priority>,
+    /// ABFT verification policy applied to every worker engine; `None`
+    /// defers to the `DLA_VERIFY` environment override, then
+    /// [`VerifyPolicy::Off`].
+    pub verify: Option<VerifyPolicy>,
+    /// Seed for the admission backoff's jitter stream; `None` keeps the
+    /// built-in constant. Pin a seed per test to make retry drills
+    /// deterministic (jitter only decorrelates concurrent submitters —
+    /// any seed is as good as any other in production).
+    pub jitter_seed: Option<u64>,
 }
 
 impl ServerConfig {
@@ -205,6 +230,8 @@ impl ServerConfig {
             faults: None,
             degraded_window: None,
             default_priority: None,
+            verify: None,
+            jitter_seed: None,
         }
     }
 
@@ -262,6 +289,25 @@ impl ServerConfig {
     /// `DLA_PRIORITY` override.
     pub fn with_default_priority(mut self, tier: Priority) -> Self {
         self.default_priority = Some(tier);
+        self
+    }
+
+    /// Pin the ABFT verification policy every worker engine serves with
+    /// (see [`VerifyPolicy`]): `Detect` turns silent data corruption
+    /// into typed [`DlaError::DataCorrupt`] responses, `Correct` also
+    /// recomputes corrupted packed-operand tiles once. A pinned policy
+    /// wins over the `DLA_VERIFY` override. With verification enabled
+    /// the batch scheduler is disabled — every GEMM takes the verified
+    /// solo path (the fused batch driver is unverified by design).
+    pub fn with_verify(mut self, policy: VerifyPolicy) -> Self {
+        self.verify = Some(policy);
+        self
+    }
+
+    /// Pin the jitter-stream seed used by admission backoff, making
+    /// retry timing reproducible for drills and tests.
+    pub fn with_jitter_seed(mut self, seed: u64) -> Self {
+        self.jitter_seed = Some(seed);
         self
     }
 }
@@ -606,6 +652,9 @@ struct ServeCtx {
     tiers: Arc<TierCounters>,
     arch: Arch,
     mode: ConfigMode,
+    /// The server's resolved ABFT policy: the degraded serial fallback
+    /// coordinator must verify exactly like the pooled path it replaces.
+    verify: VerifyPolicy,
 }
 
 impl ServeCtx {
@@ -636,9 +685,11 @@ impl ServeCtx {
         let outcome = {
             let arch = &self.arch;
             let mode = &self.mode;
+            let verify = self.verify;
             let target: &mut Coordinator = if use_degraded {
-                self.serial
-                    .get_or_insert_with(|| Coordinator::new(arch.clone(), mode.clone()))
+                self.serial.get_or_insert_with(|| {
+                    Coordinator::new(arch.clone(), mode.clone()).with_verify(verify)
+                })
             } else {
                 co
             };
@@ -846,15 +897,24 @@ impl CoordinatorServer {
             .map(|p| Arc::new(FaultState::new(p)))
             .or_else(FaultState::from_env);
         let deadline = cfg.deadline.or_else(deadline_from_env);
+        // ABFT policy: pinned wins, then the DLA_VERIFY override, then
+        // Off. This is the *only* place DLA_VERIFY is read — engines
+        // never consult the environment themselves, so a stray env var
+        // cannot silently change results outside the serving path.
+        let verify = cfg.verify.or_else(VerifyPolicy::from_env).unwrap_or(VerifyPolicy::Off);
         // A pinned batching policy always wins (so BatchPolicy::disabled()
         // really disables); un-pinned servers take the env override. On a
         // 1-thread pool admission can never succeed (is_batchable needs a
         // team to waste), so no queue or batcher thread is created at all.
+        // A verified server disables batching outright: the fused batch
+        // driver is unverified by design, and every request must get the
+        // checksum-verified solo path.
         let batching = cfg
             .batching
             .or_else(BatchPolicy::from_env)
             .filter(BatchPolicy::enabled)
-            .filter(|_| cfg.gemm_threads >= 2);
+            .filter(|_| cfg.gemm_threads >= 2)
+            .filter(|_| !verify.enabled());
         let batch_queue =
             batching.map(|policy| Arc::new(BatchQueue::new(policy, cfg.queue_depth)));
         let degraded_window =
@@ -895,11 +955,12 @@ impl CoordinatorServer {
                 tiers: tiers.clone(),
                 arch: cfg.arch.clone(),
                 mode: cfg.mode.clone(),
+                verify,
             };
             let spawned = thread::Builder::new()
                 .name(format!("dla-worker-{i}"))
                 .spawn(move || {
-                    let mut co = Coordinator::new(arch, mode);
+                    let mut co = Coordinator::new(arch, mode).with_verify(verify);
                     if let Some(pool) = pool {
                         co = co.with_pool(pool);
                     }
@@ -1039,7 +1100,7 @@ impl CoordinatorServer {
             detector,
             degraded,
             default_tier,
-            jitter_seed: AtomicU64::new(0x243F_6A88_85A3_08D3),
+            jitter_seed: AtomicU64::new(cfg.jitter_seed.unwrap_or(DEFAULT_JITTER_SEED)),
         };
         // The canned overload drill: inject the planned flood as
         // Background-tier requests through the real admission path
@@ -1308,6 +1369,11 @@ impl CoordinatorServer {
         f.workers_lost += c.workers_lost.load(Ordering::Relaxed);
         f.degraded_remaining += self.degraded.load(Ordering::Relaxed);
         *all.qos_mut() = self.tiers.snapshot();
+        // Machine-readable counterpart of the summary table: one JSON
+        // object on stdout, opt-in so interactive output stays clean.
+        if std::env::var("DLA_METRICS_JSON").is_ok_and(|v| v.trim() == "1") {
+            println!("{}", all.snapshot_json());
+        }
         all
     }
 }

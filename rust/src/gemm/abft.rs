@@ -1,0 +1,1069 @@
+//! Algorithm-based fault tolerance (ABFT) for the blocked GEMM drivers
+//! and the LAPACK panel factorizations: Huang–Abraham-style checksum
+//! verification at macro-block granularity, with an optional one-round
+//! recompute that repairs corruption in the packed operands.
+//!
+//! # Scheme
+//!
+//! The co-designed stack owns the packed-buffer format, which makes the
+//! classical checksum trick nearly free: for every `(jc, pc, ic)`
+//! macro-block the verified drivers carry
+//!
+//! - `acs[p] = Σ_i alpha*A[i, p]` — column sums of the packed-`Ac`
+//!   block (alpha folded, exactly as packing folds it), plus the
+//!   matching absolute sums `aabs`;
+//! - `brs[p] = Σ_j B[p, j]` over the verified column range, plus
+//!   absolute sums `babs`.
+//!
+//! Both are accumulated in `f64` **from the source operands** (for the
+//! sequential driver they are additionally stored at the tail of the
+//! packed buffers — see `pack_a_checked` / `pack_b_checked`), so the
+//! reference sums stay clean no matter where a flip lands. After the
+//! macro-kernel updates its C region the epilogue checks two
+//! independent invariants against the pre-update column/row sums of C:
+//!
+//! - **column check** — `Δcol[j] ≈ Σ_p acs[p] * Bc[p, j]`, which
+//!   catches corruption in the packed `Ac` and in the C tiles;
+//! - **row check** — `Δrow[i] ≈ Σ_p Ac[i, p] * brs[p]`, which catches
+//!   corruption in the packed `Bc` (invisible to the column check,
+//!   because a flipped `Bc` entry perturbs both of its sides equally).
+//!
+//! Tolerances scale with the block dimensions and the absolute-value
+//! sums (`eps * 4*(dim1 + dim2 + 16) * (magnitude + |C_pre| + 1)`), so
+//! rounding never trips a false positive while an exponent-bit flip —
+//! many orders of magnitude outside the bound — always does.
+//!
+//! In `Detect` mode a mismatch records a typed failure
+//! ([`AbftStats::take_failure`] → `DlaError::DataCorrupt`). In
+//! `Correct` mode the epilogue restores the saved C region, privately
+//! repacks the block from the (clean) source views, recomputes once —
+//! bitwise identical to the original schedule, because the verified
+//! column range is `nr`-aligned — and re-verifies; only a second
+//! mismatch fails typed.
+//!
+//! The factored panels of LU/Cholesky get their own detect-only checks
+//! ([`verify_lu_panel`], [`verify_chol_panel`]): the pre-factorization
+//! column sums are invariant under partial pivoting, so
+//! `colsum_j(P·A) = Σ_t colsum(L[:,t]) · U[t, j]` verifies the panel
+//! without knowing the pivot order.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::model::ccp::GemmConfig;
+use crate::runtime::faults::FaultState;
+use crate::util::elem::{DType, Elem};
+use crate::util::matrix::{MatView, MatViewMut};
+
+use super::blocked::{macro_kernel, scale_c, Workspace};
+use super::microkernel::MicroKernelImpl;
+use super::packing::{
+    pack_a, pack_a_checked, pack_b, pack_b_checked, packed_a_len, packed_a_len_checked,
+    packed_b_len, packed_b_len_checked,
+};
+
+/// How much checksum verification a GEMM/factorization request gets.
+/// Resolved by the coordinator as pinned-config-beats-`DLA_VERIFY`; a
+/// bare engine defaults to `Off` (the environment is deliberately *not*
+/// consulted at engine construction, so armed CI legs cannot flip
+/// unrelated engines into verified mode).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum VerifyPolicy {
+    /// No verification: the exact pre-ABFT code paths.
+    #[default]
+    Off,
+    /// Verify every macro-block; a mismatch fails typed
+    /// (`DlaError::DataCorrupt`) without recomputing. Fault-free results
+    /// are bitwise identical to `Off`.
+    Detect,
+    /// Verify, and on a mismatch restore + recompute the block once from
+    /// the source operands before failing typed.
+    Correct,
+}
+
+impl VerifyPolicy {
+    /// Parse a `DLA_VERIFY` value; `None` for empty/unknown spellings
+    /// (which must fail toward "no verification", like the fault
+    /// grammar fails toward "no fault").
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "0" => Some(VerifyPolicy::Off),
+            "detect" | "on" | "1" => Some(VerifyPolicy::Detect),
+            "correct" => Some(VerifyPolicy::Correct),
+            _ => None,
+        }
+    }
+
+    /// The `DLA_VERIFY` environment policy, if set and well-formed.
+    pub fn from_env() -> Option<Self> {
+        Self::parse(std::env::var("DLA_VERIFY").ok()?.as_str())
+    }
+
+    /// True when verification work happens at all.
+    pub fn enabled(&self) -> bool {
+        !matches!(self, VerifyPolicy::Off)
+    }
+
+    pub const fn name(&self) -> &'static str {
+        match self {
+            VerifyPolicy::Off => "off",
+            VerifyPolicy::Detect => "detect",
+            VerifyPolicy::Correct => "correct",
+        }
+    }
+}
+
+/// Which verified stage detected a corruption (the `phase` of
+/// `DlaError::DataCorrupt`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AbftPhase {
+    /// A GEMM macro-block epilogue check.
+    Gemm,
+    /// The post-`getf2` LU panel check.
+    LuPanel,
+    /// The post-`potf2` Cholesky panel check.
+    CholPanel,
+}
+
+impl AbftPhase {
+    pub const fn as_str(self) -> &'static str {
+        match self {
+            AbftPhase::Gemm => "gemm",
+            AbftPhase::LuPanel => "lu-panel",
+            AbftPhase::CholPanel => "chol-panel",
+        }
+    }
+
+    const fn code(self) -> u64 {
+        match self {
+            AbftPhase::Gemm => 1,
+            AbftPhase::LuPanel => 2,
+            AbftPhase::CholPanel => 3,
+        }
+    }
+
+    fn from_code(c: u64) -> Self {
+        match c {
+            2 => AbftPhase::LuPanel,
+            3 => AbftPhase::CholPanel,
+            _ => AbftPhase::Gemm,
+        }
+    }
+}
+
+/// A point-in-time copy of the ABFT counters (what the coordinator
+/// merges into its `AbftMetrics`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AbftCounters {
+    /// Verified GEMM dispatches (one per engine-level call, not per
+    /// block).
+    pub verified_epochs: u64,
+    /// Macro-block regions that ran the checksum epilogue.
+    pub verified_blocks: u64,
+    /// Checksum mismatches observed (before any recompute).
+    pub detected: u64,
+    /// Mismatches repaired by the one-round recompute.
+    pub corrected: u64,
+    /// Mismatches that survived the recompute (correct mode only).
+    pub uncorrectable: u64,
+    /// Cumulative time spent computing/verifying checksums, in ns
+    /// (summed across ranks, so it over-counts wall clock on purpose —
+    /// it is the *work* overhead the ablation measures).
+    pub overhead_ns: u64,
+}
+
+/// Shared, thread-safe ABFT accounting for one engine: counters plus a
+/// first-writer-wins record of the failure that should surface as the
+/// request's typed error. Ranks record concurrently; the driver thread
+/// claims the failure after the pool job completes.
+#[derive(Debug, Default)]
+pub struct AbftStats {
+    verified_epochs: AtomicU64,
+    verified_blocks: AtomicU64,
+    detected: AtomicU64,
+    corrected: AtomicU64,
+    uncorrectable: AtomicU64,
+    overhead_ns: AtomicU64,
+    failure_set: AtomicBool,
+    failure_claimed: AtomicBool,
+    failure_phase: AtomicU64,
+    failure_row: AtomicU64,
+    failure_col: AtomicU64,
+}
+
+impl AbftStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Count one verified engine-level dispatch.
+    pub fn begin_epoch(&self) {
+        self.verified_epochs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn block_done(&self) {
+        self.verified_blocks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn detection(&self) {
+        self.detected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn correction(&self) {
+        self.corrected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn uncorrectable(&self) {
+        self.uncorrectable.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_overhead(&self, d: Duration) {
+        self.overhead_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Record a corruption that must surface as a typed error. First
+    /// writer wins (concurrent ranks may detect the same epoch's flip);
+    /// later failures are still counted, just not re-recorded until the
+    /// pending one is claimed.
+    pub fn record_failure(&self, phase: AbftPhase, tile: (usize, usize)) {
+        if self
+            .failure_set
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            self.failure_phase.store(phase.code(), Ordering::Relaxed);
+            self.failure_row.store(tile.0 as u64, Ordering::Relaxed);
+            self.failure_col.store(tile.1 as u64, Ordering::Relaxed);
+            self.failure_claimed.store(false, Ordering::Release);
+        }
+    }
+
+    /// Claim the pending failure, if any: returns `(phase, tile)` once
+    /// per recorded corruption. Drivers call this after every verified
+    /// compute call to convert out-of-band rank-side detection into the
+    /// request's typed error.
+    pub fn take_failure(&self) -> Option<(AbftPhase, (usize, usize))> {
+        if !self.failure_set.load(Ordering::Acquire) {
+            return None;
+        }
+        if self
+            .failure_claimed
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return None;
+        }
+        let phase = AbftPhase::from_code(self.failure_phase.load(Ordering::Relaxed));
+        let tile = (
+            self.failure_row.load(Ordering::Relaxed) as usize,
+            self.failure_col.load(Ordering::Relaxed) as usize,
+        );
+        self.failure_set.store(false, Ordering::Release);
+        Some((phase, tile))
+    }
+
+    /// Snapshot the counters.
+    pub fn snapshot(&self) -> AbftCounters {
+        AbftCounters {
+            verified_epochs: self.verified_epochs.load(Ordering::Relaxed),
+            verified_blocks: self.verified_blocks.load(Ordering::Relaxed),
+            detected: self.detected.load(Ordering::Relaxed),
+            corrected: self.corrected.load(Ordering::Relaxed),
+            uncorrectable: self.uncorrectable.load(Ordering::Relaxed),
+            overhead_ns: self.overhead_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The per-dispatch verification context threaded (as
+/// `Option<&AbftCtx>`) through the blocked/parallel drivers. `Sync`:
+/// shared by reference across every rank of a pool job.
+pub(crate) struct AbftCtx<'a> {
+    pub policy: VerifyPolicy,
+    pub stats: &'a AbftStats,
+    /// The armed fault plan, for the `flip@R:E[:bit]` drill; `None`
+    /// outside chaos runs (the zero-cost-when-unarmed contract).
+    pub faults: Option<&'a FaultState>,
+    /// This dispatch's 1-based verified epoch (the `flip@` clock).
+    pub epoch: u64,
+}
+
+impl AbftCtx<'_> {
+    /// Injection hook: flip one bit of `packed` (the calling rank's own
+    /// just-packed, pre-barrier share) if the armed plan has an
+    /// unconsumed `flip@` shot for this (rank, epoch). The first element
+    /// of a rank's share is always a live (never padding) row, so a
+    /// delivered flip is always a *consequential* corruption.
+    pub(crate) fn maybe_flip<E: Elem>(&self, rank: usize, packed: &mut [E]) {
+        if let Some(f) = self.faults {
+            if !packed.is_empty() {
+                if let Some(bit) = f.take_flip(rank, self.epoch) {
+                    flip_bit_in_slice(packed, 0, bit);
+                }
+            }
+        }
+    }
+}
+
+/// XOR bit `bit` (modulo the element width) of `buf[idx]`.
+pub(crate) fn flip_bit_in_slice<E: Elem>(buf: &mut [E], idx: usize, bit: u32) {
+    assert!(idx < buf.len(), "flip target out of bounds");
+    let bits = (std::mem::size_of::<E>() * 8) as u32;
+    let bit = bit % bits;
+    // SAFETY: idx is in bounds (asserted) and every Elem is a plain
+    // byte-flippable float with no invalid bit patterns.
+    unsafe {
+        let p = (buf.as_mut_ptr().add(idx) as *mut u8).add((bit / 8) as usize);
+        *p ^= 1u8 << (bit % 8);
+    }
+}
+
+/// Machine epsilon of the element type, as the f64 the checks accumulate
+/// in.
+fn eps_for(dt: DType) -> f64 {
+    match dt {
+        DType::F32 => f32::EPSILON as f64,
+        DType::F64 => f64::EPSILON,
+    }
+}
+
+/// The reference checksums for one verified macro-block region: A-block
+/// column sums (alpha-folded, f64-accumulated) and B-block row sums over
+/// the verified column range, each with the matching absolute sums that
+/// scale the tolerance.
+pub(crate) struct CheckSums {
+    pub acs: Vec<f64>,
+    pub aabs: Vec<f64>,
+    pub brs: Vec<f64>,
+    pub babs: Vec<f64>,
+}
+
+impl CheckSums {
+    /// Compute from the clean source views: `a_src` is the `mc_eff x
+    /// kc_eff` A block, `b_cols` the `kc_eff x w` verified slice of the
+    /// B block.
+    pub(crate) fn from_views<E: Elem>(a_src: MatView<'_, E>, alpha: E, b_cols: MatView<'_, E>) -> Self {
+        let kc_eff = a_src.cols;
+        debug_assert_eq!(b_cols.rows, kc_eff);
+        let al = alpha.to_f64();
+        let mut acs = vec![0.0f64; kc_eff];
+        let mut aabs = vec![0.0f64; kc_eff];
+        for p in 0..kc_eff {
+            let col = &a_src.data[p * a_src.ld..p * a_src.ld + a_src.rows];
+            let mut s = 0.0;
+            let mut sa = 0.0;
+            for &v in col {
+                let v = al * v.to_f64();
+                s += v;
+                sa += v.abs();
+            }
+            acs[p] = s;
+            aabs[p] = sa;
+        }
+        let mut brs = vec![0.0f64; kc_eff];
+        let mut babs = vec![0.0f64; kc_eff];
+        for j in 0..b_cols.cols {
+            for p in 0..kc_eff {
+                let v = b_cols.at(p, j).to_f64();
+                brs[p] += v;
+                babs[p] += v.abs();
+            }
+        }
+        Self { acs, aabs, brs, babs }
+    }
+
+    /// Timed wrapper: the checksum pass is the overhead the ablation
+    /// measures.
+    pub(crate) fn from_views_timed<E: Elem>(
+        a_src: MatView<'_, E>,
+        alpha: E,
+        b_cols: MatView<'_, E>,
+        stats: &AbftStats,
+    ) -> Self {
+        let t0 = Instant::now();
+        let s = Self::from_views(a_src, alpha, b_cols);
+        stats.add_overhead(t0.elapsed());
+        s
+    }
+
+    /// Read the checksums a `pack_a_checked` / `pack_b_checked` pair
+    /// appended at the tails of the packed buffers (the sequential
+    /// driver's layout: `[sums; kc_eff][abs sums; kc_eff]` right after
+    /// the packed micro-panels).
+    pub(crate) fn from_tails<E: Elem>(a_tail: &[E], b_tail: &[E], kc_eff: usize) -> Self {
+        let grab = |t: &[E], off: usize| -> Vec<f64> {
+            t[off..off + kc_eff].iter().map(|v| v.to_f64()).collect()
+        };
+        Self {
+            acs: grab(a_tail, 0),
+            aabs: grab(a_tail, kc_eff),
+            brs: grab(b_tail, 0),
+            babs: grab(b_tail, kc_eff),
+        }
+    }
+}
+
+/// Post-update verification of one C region (`mc_eff` rows x `w` cols
+/// starting at packed-B column `bcol0`): both the column and the row
+/// invariant, with NaN-poisoned sums counting as corrupt.
+///
+/// # Safety
+/// `creg` must point at the first verified column of a valid column-major
+/// region of at least `mc_eff x w` elements with stride `ldc`.
+#[allow(clippy::too_many_arguments)]
+unsafe fn region_checks<E: Elem>(
+    kc_eff: usize,
+    mc_eff: usize,
+    w: usize,
+    a_buf: &[E],
+    b_buf: &[E],
+    bcol0: usize,
+    creg: *const E,
+    ldc: usize,
+    pre_col: &[f64],
+    pre_col_abs: &[f64],
+    pre_row: &[f64],
+    pre_row_abs: &[f64],
+    sums: &CheckSums,
+    mr: usize,
+    nr: usize,
+) -> bool {
+    let eps = eps_for(E::DTYPE);
+    let mut post_col = vec![0.0f64; w];
+    let mut post_row = vec![0.0f64; mc_eff];
+    for j in 0..w {
+        for i in 0..mc_eff {
+            let v = (*creg.add(j * ldc + i)).to_f64();
+            post_col[j] += v;
+            post_row[i] += v;
+        }
+    }
+    // Column check (catches packed-A and C corruption): the update each
+    // column received must match the checksum product acs · Bc[:, j].
+    let kcol = 4.0 * (mc_eff + kc_eff + 16) as f64;
+    for j in 0..w {
+        let col = bcol0 + j;
+        let base = (col / nr) * nr * kc_eff + col % nr;
+        let mut e = 0.0f64;
+        let mut t = 0.0f64;
+        for p in 0..kc_eff {
+            let bv = b_buf[base + p * nr].to_f64();
+            e += sums.acs[p] * bv;
+            t += sums.aabs[p] * bv.abs();
+        }
+        let tol = eps * kcol * (t + pre_col_abs[j] + 1.0);
+        let delta = post_col[j] - pre_col[j] - e;
+        // `!(x <= tol)` (not `x > tol`) so a NaN delta reads as corrupt.
+        if !(delta.abs() <= tol) {
+            return false;
+        }
+    }
+    // Row check (catches packed-B corruption, which perturbs both sides
+    // of the column check equally): Δrow[i] ≈ Ac[i, :] · brs.
+    let krow = 4.0 * (w + kc_eff + 16) as f64;
+    for i in 0..mc_eff {
+        let base = (i / mr) * mr * kc_eff + i % mr;
+        let mut e = 0.0f64;
+        let mut u = 0.0f64;
+        for p in 0..kc_eff {
+            let av = a_buf[base + p * mr].to_f64();
+            e += av * sums.brs[p];
+            u += av.abs() * sums.babs[p];
+        }
+        let tol = eps * krow * (u + pre_row_abs[i] + 1.0);
+        let delta = post_row[i] - pre_row[i] - e;
+        if !(delta.abs() <= tol) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Run [`macro_kernel`] on one packed block with the ABFT epilogue:
+/// pre-sums, kernel, checksum verification, and — in `Correct` mode — a
+/// single restore-repack-recompute round before recording a typed
+/// failure. Fault-free results are bitwise identical to a bare
+/// `macro_kernel` call (the kernel invocation itself is untouched; the
+/// recompute path only runs after a detected corruption).
+///
+/// `a_src`/`b_src` are the *source* views the packed block was built
+/// from (`mc_eff x kc_eff` and `kc_eff x nc_eff`); `tile` is the global
+/// (row, col) origin of the block, used for error reporting.
+///
+/// # Safety
+/// Same contract as [`macro_kernel`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn verified_macro_kernel<E: Elem>(
+    kernel: &MicroKernelImpl<E>,
+    kc_eff: usize,
+    mc_eff: usize,
+    nc_eff: usize,
+    a_buf: &[E],
+    b_buf: &[E],
+    c_ptr: *mut E,
+    ldc: usize,
+    jr_range: (usize, usize),
+    alpha: E,
+    a_src: MatView<'_, E>,
+    b_src: MatView<'_, E>,
+    sums: &CheckSums,
+    ctx: &AbftCtx<'_>,
+    tile: (usize, usize),
+) {
+    let (lo, hi) = jr_range;
+    if lo >= hi || mc_eff == 0 || kc_eff == 0 {
+        macro_kernel(kernel, kc_eff, mc_eff, nc_eff, a_buf, b_buf, c_ptr, ldc, jr_range);
+        return;
+    }
+    let w = hi - lo;
+    let t0 = Instant::now();
+    let mut pre_col = vec![0.0f64; w];
+    let mut pre_col_abs = vec![0.0f64; w];
+    let mut pre_row = vec![0.0f64; mc_eff];
+    let mut pre_row_abs = vec![0.0f64; mc_eff];
+    for j in 0..w {
+        for i in 0..mc_eff {
+            let v = (*c_ptr.add((lo + j) * ldc + i)).to_f64();
+            pre_col[j] += v;
+            pre_col_abs[j] += v.abs();
+            pre_row[i] += v;
+            pre_row_abs[i] += v.abs();
+        }
+    }
+    // Correct mode keeps a private copy of the region so a detected
+    // corruption can be rolled back and recomputed.
+    let saved: Option<Vec<E>> = if ctx.policy == VerifyPolicy::Correct {
+        let mut s = Vec::with_capacity(mc_eff * w);
+        for j in 0..w {
+            for i in 0..mc_eff {
+                s.push(*c_ptr.add((lo + j) * ldc + i));
+            }
+        }
+        Some(s)
+    } else {
+        None
+    };
+    ctx.stats.add_overhead(t0.elapsed());
+
+    macro_kernel(kernel, kc_eff, mc_eff, nc_eff, a_buf, b_buf, c_ptr, ldc, jr_range);
+
+    let t1 = Instant::now();
+    let (mr, nr) = (kernel.spec.mr, kernel.spec.nr);
+    let clean = region_checks(
+        kc_eff,
+        mc_eff,
+        w,
+        a_buf,
+        b_buf,
+        lo,
+        c_ptr.add(lo * ldc) as *const E,
+        ldc,
+        &pre_col,
+        &pre_col_abs,
+        &pre_row,
+        &pre_row_abs,
+        sums,
+        mr,
+        nr,
+    );
+    ctx.stats.block_done();
+    if clean {
+        ctx.stats.add_overhead(t1.elapsed());
+        return;
+    }
+    ctx.stats.detection();
+    let tile = (tile.0, tile.1 + lo);
+    let Some(saved) = saved else {
+        // Detect mode: surface immediately, leaving the (corrupt)
+        // region in place — the request will fail typed before the
+        // result is handed back.
+        ctx.stats.record_failure(AbftPhase::Gemm, tile);
+        ctx.stats.add_overhead(t1.elapsed());
+        return;
+    };
+    // Correct mode: roll back the region, privately repack this rank's
+    // operands from the clean sources and recompute once. `lo` is
+    // nr-aligned (the jr partition grain), so the standalone repack of
+    // columns [lo, hi) is bitwise identical to the corresponding slice
+    // of the shared packed buffer — and therefore so is the recomputed
+    // region when the sources are clean.
+    for j in 0..w {
+        for i in 0..mc_eff {
+            *c_ptr.add((lo + j) * ldc + i) = saved[j * mc_eff + i];
+        }
+    }
+    let mut a2 = vec![E::ZERO; packed_a_len(mc_eff, kc_eff, mr)];
+    pack_a(a_src, &mut a2, mr, alpha);
+    let mut b2 = vec![E::ZERO; packed_b_len(kc_eff, w, nr)];
+    pack_b(b_src.sub(0, lo, kc_eff, w), &mut b2, nr);
+    macro_kernel(kernel, kc_eff, mc_eff, w, &a2, &b2, c_ptr.add(lo * ldc), ldc, (0, w));
+    let clean2 = region_checks(
+        kc_eff,
+        mc_eff,
+        w,
+        &a2,
+        &b2,
+        0,
+        c_ptr.add(lo * ldc) as *const E,
+        ldc,
+        &pre_col,
+        &pre_col_abs,
+        &pre_row,
+        &pre_row_abs,
+        sums,
+        mr,
+        nr,
+    );
+    if clean2 {
+        ctx.stats.correction();
+    } else {
+        ctx.stats.uncorrectable();
+        ctx.stats.record_failure(AbftPhase::Gemm, tile);
+    }
+    ctx.stats.add_overhead(t1.elapsed());
+}
+
+/// The sequential verified blocked GEMM: the exact `gemm_blocked` loop
+/// nest with checksummed packing (`pack_a_checked` / `pack_b_checked`
+/// append the reference sums at the buffer tails) and the verified
+/// macro-kernel epilogue. Fault-free results are bitwise identical to
+/// `gemm_blocked` with the same configuration.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_blocked_abft<E: Elem>(
+    cfg: &GemmConfig,
+    kernel: &MicroKernelImpl<E>,
+    alpha: E,
+    a: MatView<'_, E>,
+    b: MatView<'_, E>,
+    beta: E,
+    c: &mut MatViewMut<'_, E>,
+    ws: &mut Workspace,
+    ctx: &AbftCtx<'_>,
+) {
+    assert_eq!(kernel.spec, cfg.mk, "kernel/config shape mismatch");
+    assert_eq!(a.cols, b.rows, "inner dimension mismatch");
+    assert_eq!(c.rows, a.rows, "C row mismatch");
+    assert_eq!(c.cols, b.cols, "C col mismatch");
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    scale_c(beta, c);
+    if m == 0 || n == 0 || k == 0 || alpha == E::ZERO {
+        return;
+    }
+    let ccp = cfg.ccp.clamp_to(crate::model::GemmDims::new(m, n, k));
+    let (mc, nc, kc) = (ccp.mc, ccp.nc, ccp.kc);
+    let (mr, nr) = (cfg.mk.mr, cfg.mk.nr);
+    let a_need = packed_a_len_checked(mc, kc, mr);
+    let b_need = packed_b_len_checked(kc, nc, nr);
+    let (a_buf, b_buf) = ws.bufs_mut::<E>(a_need, b_need);
+
+    let mut jc = 0; // Loop G1
+    while jc < n {
+        let nc_eff = nc.min(n - jc);
+        let mut pc = 0; // Loop G2
+        while pc < k {
+            let kc_eff = kc.min(k - pc);
+            let b_src = b.sub(pc, jc, kc_eff, nc_eff);
+            let tb = Instant::now();
+            pack_b_checked(b_src, b_buf, nr);
+            ctx.stats.add_overhead(tb.elapsed());
+            let b_base = packed_b_len(kc_eff, nc_eff, nr);
+            let mut ic = 0; // Loop G3
+            while ic < m {
+                let mc_eff = mc.min(m - ic);
+                let a_src = a.sub(ic, pc, mc_eff, kc_eff);
+                let ta = Instant::now();
+                pack_a_checked(a_src, a_buf, mr, alpha);
+                ctx.stats.add_overhead(ta.elapsed());
+                let a_base = packed_a_len(mc_eff, kc_eff, mr);
+                // The injection point: the checksums above were
+                // accumulated from the source view, so a flip here
+                // corrupts only the packed data — never the reference.
+                ctx.maybe_flip(0, &mut a_buf[..a_base]);
+                let sums = CheckSums::from_tails(
+                    &a_buf[a_base..a_base + 2 * kc_eff],
+                    &b_buf[b_base..b_base + 2 * kc_eff],
+                    kc_eff,
+                );
+                let c_ptr = unsafe { c.data.as_mut_ptr().add(jc * c.ld + ic) };
+                unsafe {
+                    verified_macro_kernel(
+                        kernel,
+                        kc_eff,
+                        mc_eff,
+                        nc_eff,
+                        &a_buf[..a_base],
+                        &b_buf[..b_base],
+                        c_ptr,
+                        c.ld,
+                        (0, nc_eff),
+                        alpha,
+                        a_src,
+                        b_src,
+                        &sums,
+                        ctx,
+                        (ic, jc),
+                    );
+                }
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+/// Full-column sums (value + absolute) of a panel view, f64-accumulated:
+/// the pre-factorization reference for [`verify_lu_panel`].
+pub(crate) fn panel_colsums<E: Elem>(p: MatView<'_, E>) -> (Vec<f64>, Vec<f64>) {
+    let mut s = vec![0.0f64; p.cols];
+    let mut sa = vec![0.0f64; p.cols];
+    for j in 0..p.cols {
+        let col = &p.data[j * p.ld..j * p.ld + p.rows];
+        for &v in col {
+            let v = v.to_f64();
+            s[j] += v;
+            sa[j] += v.abs();
+        }
+    }
+    (s, sa)
+}
+
+/// Lower-region column sums (`i >= j`) of a panel view: the
+/// pre-factorization reference for [`verify_chol_panel`] (only the lower
+/// triangle of the Cholesky panel is factored state; the strict upper
+/// part still holds the untouched symmetric source).
+pub(crate) fn lower_panel_colsums<E: Elem>(p: MatView<'_, E>) -> (Vec<f64>, Vec<f64>) {
+    let mut s = vec![0.0f64; p.cols];
+    let mut sa = vec![0.0f64; p.cols];
+    for j in 0..p.cols {
+        for i in j..p.rows {
+            let v = p.at(i, j).to_f64();
+            s[j] += v;
+            sa[j] += v.abs();
+        }
+    }
+    (s, sa)
+}
+
+/// Verify a just-factored LU panel (`r x b`, unit-lower `L` below the
+/// diagonal, `U` on and above) against its pre-factorization column sums.
+/// Partial pivoting permutes rows, and column sums are permutation
+/// invariant, so `pre[j] = colsum_j(P·A) = Σ_{t<=j} w[t]·U[t,j]` with
+/// `w[t] = 1 + Σ_{i>t} L[i,t]` — no pivot bookkeeping needed. Detect
+/// only: panels are recomputed nowhere (the correction scope is the GEMM
+/// packed operands).
+pub(crate) fn verify_lu_panel<E: Elem>(panel: MatView<'_, E>, pre: &[f64], pre_abs: &[f64]) -> bool {
+    let (r, b) = (panel.rows, panel.cols);
+    debug_assert_eq!(pre.len(), b);
+    let eps = eps_for(E::DTYPE);
+    let tmax = r.min(b);
+    let mut w = vec![0.0f64; tmax];
+    let mut wabs = vec![0.0f64; tmax];
+    for (t, (wt, wat)) in w.iter_mut().zip(wabs.iter_mut()).enumerate() {
+        let mut s = 1.0f64; // the implicit unit diagonal of L
+        let mut sa = 1.0f64;
+        for i in t + 1..r {
+            let v = panel.at(i, t).to_f64();
+            s += v;
+            sa += v.abs();
+        }
+        *wt = s;
+        *wat = sa;
+    }
+    let scale = eps * 4.0 * (r + b + 16) as f64;
+    for j in 0..b {
+        let mut check = 0.0f64;
+        let mut mag = 0.0f64;
+        for t in 0..(j + 1).min(tmax) {
+            let u = panel.at(t, j).to_f64();
+            check += w[t] * u;
+            mag += wabs[t] * u.abs();
+        }
+        let tol = scale * (mag + pre_abs[j] + 1.0);
+        let delta = pre[j] - check;
+        if !(delta.abs() <= tol) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Verify a just-factored Cholesky panel (`r x b` lower-trapezoidal `L`:
+/// `L11` in the top `b x b` lower triangle, `L21` below) against the
+/// lower-region column sums of the pre-factorization panel:
+/// `pre[j] = Σ_{i>=j} (L·Lᵀ)[i,j] = Σ_{t<=j} L[j,t] · Σ_{i>=j} L[i,t]`.
+/// The strict upper triangle is never read (it holds unfactored source
+/// data). Detect only.
+pub(crate) fn verify_chol_panel<E: Elem>(
+    panel: MatView<'_, E>,
+    pre: &[f64],
+    pre_abs: &[f64],
+) -> bool {
+    let (r, b) = (panel.rows, panel.cols);
+    debug_assert_eq!(pre.len(), b);
+    let eps = eps_for(E::DTYPE);
+    let tmax = r.min(b);
+    let mut post = vec![0.0f64; b];
+    let mut mag = vec![0.0f64; b];
+    let mut sfx = vec![0.0f64; b];
+    let mut sfxa = vec![0.0f64; b];
+    for t in 0..tmax {
+        // Suffix sums over the column: sfx[j] = Σ_{i>=j} L[i,t] for the
+        // j in [t, b) that consume them, via one exact backward pass.
+        let mut s = 0.0f64;
+        let mut sa = 0.0f64;
+        for i in (t..r).rev() {
+            let v = panel.at(i, t).to_f64();
+            s += v;
+            sa += v.abs();
+            if i < b {
+                sfx[i] = s;
+                sfxa[i] = sa;
+            }
+        }
+        for j in t..b {
+            let l = panel.at(j, t).to_f64();
+            post[j] += l * sfx[j];
+            mag[j] += l.abs() * sfxa[j];
+        }
+    }
+    let scale = eps * 4.0 * (r + b + 16) as f64;
+    for j in 0..b {
+        let tol = scale * (mag[j] + pre_abs[j] + 1.0);
+        let delta = pre[j] - post[j];
+        if !(delta.abs() <= tol) {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::gemm::microkernel::for_shape;
+    use crate::model::{Ccp, MicroKernel};
+    use crate::runtime::faults::FaultPlan;
+    use crate::util::{MatrixF64, Pcg64};
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(VerifyPolicy::parse("off"), Some(VerifyPolicy::Off));
+        assert_eq!(VerifyPolicy::parse("detect"), Some(VerifyPolicy::Detect));
+        assert_eq!(VerifyPolicy::parse("CORRECT"), Some(VerifyPolicy::Correct));
+        assert_eq!(VerifyPolicy::parse(""), None);
+        assert_eq!(VerifyPolicy::parse("wat"), None);
+        assert!(!VerifyPolicy::Off.enabled());
+        assert!(VerifyPolicy::Detect.enabled());
+        assert_eq!(VerifyPolicy::Correct.name(), "correct");
+    }
+
+    #[test]
+    fn failure_record_is_first_writer_wins_and_claimed_once() {
+        let st = AbftStats::new();
+        assert_eq!(st.take_failure(), None);
+        st.record_failure(AbftPhase::Gemm, (12, 34));
+        st.record_failure(AbftPhase::LuPanel, (1, 2)); // loses the race
+        assert_eq!(st.take_failure(), Some((AbftPhase::Gemm, (12, 34))));
+        assert_eq!(st.take_failure(), None);
+        // The slot is free again after the claim.
+        st.record_failure(AbftPhase::CholPanel, (5, 6));
+        assert_eq!(st.take_failure(), Some((AbftPhase::CholPanel, (5, 6))));
+    }
+
+    #[test]
+    fn bit_flip_is_loud_and_involutive() {
+        let mut buf = vec![1.0f64, 2.0, 3.0];
+        flip_bit_in_slice(&mut buf, 1, 62);
+        assert_ne!(buf[1], 2.0);
+        assert!(buf[1].abs() > 1e10 || buf[1].abs() < 1e-10 || !buf[1].is_finite());
+        flip_bit_in_slice(&mut buf, 1, 62);
+        assert_eq!(buf, vec![1.0, 2.0, 3.0]);
+        // f32: the bit index wraps into the element width.
+        let mut b32 = vec![1.0f32; 2];
+        flip_bit_in_slice(&mut b32, 0, 62); // -> bit 30: f32 exponent
+        assert_ne!(b32[0], 1.0f32);
+    }
+
+    fn ctx_on<'a>(
+        stats: &'a AbftStats,
+        faults: Option<&'a FaultState>,
+        policy: VerifyPolicy,
+    ) -> AbftCtx<'a> {
+        AbftCtx { policy, stats, faults, epoch: 1 }
+    }
+
+    #[test]
+    fn sequential_detect_catches_flip_and_correct_repairs_it() {
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp: Ccp::new(32, 24, 16) };
+        let mut rng = Pcg64::seed(42);
+        let a = MatrixF64::random(50, 40, &mut rng);
+        let b = MatrixF64::random(40, 30, &mut rng);
+        let c0 = MatrixF64::random(50, 30, &mut rng);
+
+        // Clean baseline.
+        let mut c_ref = c0.clone();
+        let mut ws = Workspace::new();
+        crate::gemm::gemm_blocked(&cfg, &kernel, 1.0, a.view(), b.view(), 1.0, &mut c_ref.view_mut(), &mut ws);
+
+        // Detect + armed flip on rank 0: typed failure, no silent wrong
+        // answer escapes.
+        let stats = AbftStats::new();
+        let faults = FaultState::new(FaultPlan::parse("flip@0:1").unwrap());
+        assert_eq!(faults.begin_verified_epoch(), 1);
+        let ctx = ctx_on(&stats, Some(&faults), VerifyPolicy::Detect);
+        let mut c1 = c0.clone();
+        let mut ws1 = Workspace::new();
+        gemm_blocked_abft(&cfg, &kernel, 1.0, a.view(), b.view(), 1.0, &mut c1.view_mut(), &mut ws1, &ctx);
+        assert_eq!(faults.injected().flips, 1);
+        let snap = stats.snapshot();
+        assert_eq!(snap.detected, 1, "the flip must be detected");
+        assert!(stats.take_failure().is_some());
+
+        // Correct mode repairs the same flip bitwise.
+        let stats2 = AbftStats::new();
+        let faults2 = FaultState::new(FaultPlan::parse("flip@0:1").unwrap());
+        faults2.begin_verified_epoch();
+        let ctx2 = ctx_on(&stats2, Some(&faults2), VerifyPolicy::Correct);
+        let mut c2 = c0.clone();
+        let mut ws2 = Workspace::new();
+        gemm_blocked_abft(&cfg, &kernel, 1.0, a.view(), b.view(), 1.0, &mut c2.view_mut(), &mut ws2, &ctx2);
+        assert_eq!(faults2.injected().flips, 1);
+        let snap2 = stats2.snapshot();
+        assert_eq!(snap2.detected, 1);
+        assert_eq!(snap2.corrected, 1);
+        assert_eq!(snap2.uncorrectable, 0);
+        assert_eq!(stats2.take_failure(), None);
+        assert_eq!(c2.max_abs_diff(&c_ref), 0.0, "corrected result must be bitwise clean");
+    }
+
+    #[test]
+    fn verified_fault_free_is_bitwise_identical_and_flags_nothing() {
+        let mk = MicroKernel::new(8, 6);
+        let kernel = for_shape(mk).unwrap();
+        let cfg = GemmConfig { mk, ccp: Ccp::new(37, 29, 13) };
+        let mut rng = Pcg64::seed(7);
+        let a = MatrixF64::random(61, 47, &mut rng);
+        let b = MatrixF64::random(47, 53, &mut rng);
+        let c0 = MatrixF64::random(61, 53, &mut rng);
+        let mut c_ref = c0.clone();
+        let mut ws = Workspace::new();
+        crate::gemm::gemm_blocked(&cfg, &kernel, -0.5, a.view(), b.view(), 2.0, &mut c_ref.view_mut(), &mut ws);
+        let stats = AbftStats::new();
+        let ctx = ctx_on(&stats, None, VerifyPolicy::Detect);
+        let mut c1 = c0.clone();
+        let mut ws1 = Workspace::new();
+        gemm_blocked_abft(&cfg, &kernel, -0.5, a.view(), b.view(), 2.0, &mut c1.view_mut(), &mut ws1, &ctx);
+        assert_eq!(c1.max_abs_diff(&c_ref), 0.0);
+        let snap = stats.snapshot();
+        assert_eq!(snap.detected, 0);
+        assert!(snap.verified_blocks > 0);
+        assert_eq!(stats.take_failure(), None);
+    }
+
+    #[test]
+    fn lu_panel_check_accepts_clean_and_rejects_corrupt() {
+        // Build a known L·U, factor "result" = combined panel storage.
+        let (r, b) = (10, 4);
+        let mut rng = Pcg64::seed(11);
+        let mut lower = MatrixF64::zeros(r, b);
+        let mut upper = MatrixF64::zeros(b, b);
+        for t in 0..b {
+            for i in t + 1..r {
+                lower[(i, t)] = (rng.next_f64() - 0.5) * 0.9;
+            }
+            for j in t..b {
+                upper[(t, j)] = rng.next_f64() + 0.5;
+            }
+        }
+        // A = L·U with an explicit unit-diagonal L.
+        let mut lmat = lower.clone();
+        for t in 0..b {
+            lmat[(t, t)] = 1.0;
+        }
+        let mut a = MatrixF64::zeros(r, b);
+        for j in 0..b {
+            for i in 0..r {
+                let mut s = 0.0;
+                for t in 0..b {
+                    s += lmat[(i, t)] * upper[(t, j)];
+                }
+                a[(i, j)] = s;
+            }
+        }
+        let (pre, pre_abs) = panel_colsums(a.view());
+        // The factored panel: L below the diagonal, U on/above.
+        let mut panel = MatrixF64::zeros(r, b);
+        for j in 0..b {
+            for i in 0..r {
+                panel[(i, j)] = if i > j { lower[(i, j)] } else { upper[(i, j)] };
+            }
+        }
+        assert!(verify_lu_panel(panel.view(), &pre, &pre_abs));
+        let mut bad = panel.clone();
+        bad[(2, 1)] += 1.0;
+        assert!(!verify_lu_panel(bad.view(), &pre, &pre_abs));
+    }
+
+    #[test]
+    fn chol_panel_check_accepts_clean_and_rejects_corrupt() {
+        let (r, b) = (9, 3);
+        let mut rng = Pcg64::seed(13);
+        let mut l = MatrixF64::zeros(r, b);
+        for t in 0..b {
+            l[(t, t)] = 1.0 + rng.next_f64();
+            for i in t + 1..r {
+                l[(i, t)] = (rng.next_f64() - 0.5) * 0.8;
+            }
+        }
+        // Lower region of A = (L·Lᵀ) restricted to i >= j, j < b.
+        let mut a = MatrixF64::zeros(r, b);
+        for j in 0..b {
+            for i in j..r {
+                let mut s = 0.0;
+                for t in 0..=j {
+                    s += l[(i, t)] * l[(j, t)];
+                }
+                a[(i, j)] = s;
+            }
+        }
+        let (pre, pre_abs) = lower_panel_colsums(a.view());
+        // The factored panel is L in the lower region; poison the strict
+        // upper part to prove it is never read.
+        let mut panel = l.clone();
+        for j in 1..b {
+            for i in 0..j {
+                panel[(i, j)] = f64::NAN;
+            }
+        }
+        assert!(verify_chol_panel(panel.view(), &pre, &pre_abs));
+        let mut bad = panel.clone();
+        bad[(4, 1)] *= 4.0;
+        assert!(!verify_chol_panel(bad.view(), &pre, &pre_abs));
+    }
+
+    #[test]
+    fn checksum_tails_match_view_computation() {
+        let mut rng = Pcg64::seed(3);
+        let a = MatrixF64::random(13, 7, &mut rng);
+        let b = MatrixF64::random(7, 11, &mut rng);
+        let (mr, nr) = (4, 6);
+        let mut abuf = vec![0.0f64; packed_a_len_checked(13, 7, mr)];
+        let mut bbuf = vec![0.0f64; packed_b_len_checked(7, 11, nr)];
+        pack_a_checked(a.view(), &mut abuf, mr, -2.0);
+        pack_b_checked(b.view(), &mut bbuf, nr);
+        let a_base = packed_a_len(13, 7, mr);
+        let b_base = packed_b_len(7, 11, nr);
+        let tails = CheckSums::from_tails(&abuf[a_base..a_base + 14], &bbuf[b_base..b_base + 14], 7);
+        let views = CheckSums::from_views(a.view(), -2.0, b.view());
+        for p in 0..7 {
+            assert!((tails.acs[p] - views.acs[p]).abs() < 1e-12);
+            assert!((tails.aabs[p] - views.aabs[p]).abs() < 1e-12);
+            assert!((tails.brs[p] - views.brs[p]).abs() < 1e-12);
+            assert!((tails.babs[p] - views.babs[p]).abs() < 1e-12);
+        }
+    }
+}

@@ -48,11 +48,14 @@ use crate::runtime::pool::{SubTeam, WorkerPool};
 use crate::util::elem::{DType, Elem};
 use crate::util::matrix::{MatView, MatViewMut};
 
+use crate::util::error::DlaError;
+
+use super::abft::{gemm_blocked_abft, AbftCtx, AbftStats, VerifyPolicy};
 use super::blocked::{gemm_blocked, Workspace};
 use super::microkernel::{for_shape, for_shape_f32, registry, registry_f32, MicroKernelImpl};
 use super::parallel::{
-    gemm_batch_parallel, gemm_fused_trailing_ranges, gemm_fused_trailing_ranges_seq,
-    gemm_parallel, BatchGemm, ThreadPlan,
+    gemm_batch_parallel, gemm_fused_trailing_ranges_abft, gemm_fused_trailing_ranges_seq,
+    gemm_parallel_abft, BatchGemm, ThreadPlan,
 };
 
 /// An element type the [`GemmEngine`] can drive end to end: ties an
@@ -268,8 +271,20 @@ pub struct GemmEngine {
     /// [`Self::with_kernels`], which pins the f64 family for the
     /// experiment harness).
     kernels_f32: Vec<MicroKernelImpl<f32>>,
-    /// Memoized `(mode, dtype, dims) -> config` selections.
-    config_cache: RefCell<HashMap<(ModeKey, DType, GemmDims), GemmConfig>>,
+    /// ABFT verification policy for every GEMM this engine dispatches.
+    /// Defaults to `Off`; deliberately **not** read from the environment
+    /// here — only the coordinator's `ServerConfig` resolves
+    /// `DLA_VERIFY`, so an armed CI leg cannot flip bare engines in
+    /// unrelated suites into verified mode.
+    verify: VerifyPolicy,
+    /// Shared ABFT accounting (counters + the pending typed failure);
+    /// `Arc` so the coordinator can merge counters after the engine
+    /// moved into a worker thread.
+    abft: Arc<AbftStats>,
+    /// Memoized `(mode, dtype, dims, verified) -> config` selections
+    /// (verified configs shave one granule off mc/nc for the checksum
+    /// storage, so they memoize separately).
+    config_cache: RefCell<HashMap<(ModeKey, DType, GemmDims, bool), GemmConfig>>,
     cache_stats: Cell<ConfigCacheStats>,
     /// Memoized panel-team-size selections (the malleable `t_p` model).
     team_sizer: TeamSizeSelector,
@@ -313,6 +328,8 @@ impl GemmEngine {
             workspace: Workspace::new(),
             pool: None,
             lookahead: None,
+            verify: VerifyPolicy::Off,
+            abft: Arc::new(AbftStats::new()),
             config_cache: RefCell::new(HashMap::new()),
             cache_stats: Cell::new(ConfigCacheStats::default()),
             team_sizer: TeamSizeSelector::new(),
@@ -380,6 +397,37 @@ impl GemmEngine {
             panic!("invalid lookahead policy: {e}");
         }
         self.lookahead = Some(la);
+    }
+
+    /// Pin the ABFT verification policy; builder form.
+    pub fn with_verify(mut self, policy: VerifyPolicy) -> Self {
+        self.set_verify(policy);
+        self
+    }
+
+    /// Set the ABFT verification policy in place.
+    pub fn set_verify(&mut self, policy: VerifyPolicy) {
+        self.verify = policy;
+    }
+
+    /// The engine's ABFT verification policy.
+    pub fn verify(&self) -> VerifyPolicy {
+        self.verify
+    }
+
+    /// The shared ABFT accounting (counters + pending failure record).
+    pub fn abft_stats(&self) -> &Arc<AbftStats> {
+        &self.abft
+    }
+
+    /// Claim the pending ABFT failure, if verification recorded one, as
+    /// the typed error the request must return. Call after every
+    /// verified compute call — detection happens out-of-band on the pool
+    /// ranks, so the compute APIs keep their signatures.
+    pub fn take_abft_failure(&self) -> Option<DlaError> {
+        self.abft
+            .take_failure()
+            .map(|(phase, tile)| DlaError::DataCorrupt { phase: phase.as_str(), tile })
     }
 
     /// Resolve the effective lookahead policy: an explicitly pinned
@@ -515,14 +563,27 @@ impl GemmEngine {
     /// dtype, so an f32 and an f64 request of equal shape each get (and
     /// cache) their own width-aware selection.
     pub fn plan_config_t<E: GemmElem>(&self, dims: GemmDims) -> GemmConfig {
-        let key = (mode_key(&self.mode), E::DTYPE, dims);
+        let verified = self.verify.enabled();
+        let key = (mode_key(&self.mode), E::DTYPE, dims, verified);
         if let Some(cfg) = self.config_cache.borrow().get(&key) {
             let mut s = self.cache_stats.get();
             s.hits += 1;
             self.cache_stats.set(s);
             return *cfg;
         }
-        let cfg = self.compute_config::<E>(dims);
+        let mut cfg = self.compute_config::<E>(dims);
+        if verified {
+            // Verified dispatches carry checksum state alongside the
+            // packed panels (reference sums, pre/post C sums, and in
+            // correct mode a saved copy of the active C region). Shave
+            // one granule off mc and nc so the resident set still fits
+            // the cache level the model sized the block for. kc is
+            // untouched: only the k-blocking determines each element's
+            // accumulation grouping, so the verified schedule stays
+            // bitwise identical to the unverified one.
+            cfg.ccp.mc = cfg.ccp.mc.saturating_sub(cfg.mk.mr).max(cfg.mk.mr);
+            cfg.ccp.nc = cfg.ccp.nc.saturating_sub(cfg.mk.nr).max(cfg.mk.nr);
+        }
         {
             let mut cache = self.config_cache.borrow_mut();
             if cache.len() >= Self::CONFIG_CACHE_CAP {
@@ -642,9 +703,42 @@ impl GemmEngine {
         beta: E,
         c: &mut MatViewMut<'_, E>,
     ) {
+        if self.verify.enabled() {
+            self.abft.begin_epoch();
+            let faults = self.pool.as_ref().and_then(|p| p.fault_state());
+            let epoch = faults.as_ref().map_or(0, |f| f.begin_verified_epoch());
+            let ctx = AbftCtx {
+                policy: self.verify,
+                stats: self.abft.as_ref(),
+                faults: faults.as_deref(),
+                epoch,
+            };
+            match &self.pool {
+                Some(pool) if self.plan.threads > 1 => {
+                    gemm_parallel_abft(
+                        cfg,
+                        kernel,
+                        alpha,
+                        a,
+                        b,
+                        beta,
+                        c,
+                        self.plan.target,
+                        pool,
+                        Some(&ctx),
+                    );
+                }
+                _ => {
+                    gemm_blocked_abft(cfg, kernel, alpha, a, b, beta, c, &mut self.workspace, &ctx)
+                }
+            }
+            return;
+        }
         match &self.pool {
             Some(pool) if self.plan.threads > 1 => {
-                gemm_parallel(cfg, kernel, alpha, a, b, beta, c, self.plan.target, pool);
+                gemm_parallel_abft(
+                    cfg, kernel, alpha, a, b, beta, c, self.plan.target, pool, None,
+                );
             }
             _ => gemm_blocked(cfg, kernel, alpha, a, b, beta, c, &mut self.workspace),
         }
@@ -722,7 +816,11 @@ impl GemmEngine {
         if let Some(cfg) = configs.last() {
             self.last_config = Some(*cfg);
         }
-        let pooled = self.plan.threads > 1 && self.pool.is_some();
+        // Verified mode serializes the members through the verified
+        // dispatch path: the fused batch driver shares pool barriers
+        // across member groups and stays unverified by design (the
+        // coordinator routes verified requests around the batcher too).
+        let pooled = self.plan.threads > 1 && self.pool.is_some() && !self.verify.enabled();
         if !pooled {
             // Serialized fallback: identical to handling each request
             // alone on this engine.
@@ -856,9 +954,24 @@ impl GemmEngine {
         let cfg = self.plan_config_t::<E>(dims);
         let kernel = self.implementation_for_t::<E>(cfg.mk);
         self.last_config = Some(cfg);
+        let verified = self.verify.enabled();
+        let faults = if verified {
+            self.abft.begin_epoch();
+            self.pool.as_ref().and_then(|p| p.fault_state())
+        } else {
+            None
+        };
+        let epoch = faults.as_ref().map_or(0, |f| f.begin_verified_epoch());
+        let ctx = AbftCtx {
+            policy: self.verify,
+            stats: self.abft.as_ref(),
+            faults: faults.as_deref(),
+            epoch,
+        };
+        let abft = verified.then_some(&ctx);
         match &self.pool {
             Some(pool) => {
-                gemm_fused_trailing_ranges(
+                gemm_fused_trailing_ranges_abft(
                     &cfg,
                     &kernel,
                     alpha,
@@ -871,11 +984,13 @@ impl GemmEngine {
                     panel_queue_empty,
                     panel_task,
                     pool,
+                    abft,
                 );
             }
             None => {
                 gemm_fused_trailing_ranges_seq(
                     &cfg, &kernel, alpha, a, b, c, head, tail, panel_task, &mut self.workspace,
+                    abft,
                 );
             }
         }

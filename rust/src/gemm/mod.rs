@@ -14,12 +14,14 @@
 //!   micro-kernel and CCPs (the paper's contribution) with memoization,
 //!   plus the static BLIS-like baseline mode.
 
+pub mod abft;
 pub mod api;
 pub mod blocked;
 pub mod microkernel;
 pub mod packing;
 pub mod parallel;
 
+pub use abft::{AbftCounters, AbftPhase, AbftStats, VerifyPolicy};
 pub use api::{
     ConfigCacheStats, ConfigMode, GemmBatchItem, GemmElem, GemmEngine, Lookahead,
     AUTO_PANEL_WORKERS,

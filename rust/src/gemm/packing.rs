@@ -94,6 +94,72 @@ pub fn pack_b<E: Elem>(b: MatView<'_, E>, buf: &mut [E], nr: usize) {
     }
 }
 
+/// Elements a [`pack_a_checked`] buffer needs for an `mc x kc` block:
+/// the packed micro-panels plus a `2*kc` checksum tail (column sums and
+/// absolute column sums, one each per p).
+pub fn packed_a_len_checked(mc: usize, kc: usize, mr: usize) -> usize {
+    packed_a_len(mc, kc, mr) + 2 * kc
+}
+
+/// Elements a [`pack_b_checked`] buffer needs for a `kc x nc` block:
+/// the packed micro-panels plus a `2*kc` checksum tail (row sums and
+/// absolute row sums, one each per p).
+pub fn packed_b_len_checked(kc: usize, nc: usize, nr: usize) -> usize {
+    packed_b_len(kc, nc, nr) + 2 * kc
+}
+
+/// [`pack_a`], then append the ABFT checksum tail directly after the
+/// packed micro-panels: `buf[base..base+kc]` holds the alpha-folded
+/// column sums of `a` (`Σ_i alpha*a[i,p]`) and `buf[base+kc..base+2kc]`
+/// the matching absolute sums, where `base = packed_a_len(mc, kc, mr)`.
+/// Both are accumulated in f64 **from the source view** — never from the
+/// packed data — so the reference sums stay clean even if the packed
+/// panels are later corrupted.
+pub fn pack_a_checked<E: Elem>(a: MatView<'_, E>, buf: &mut [E], mr: usize, alpha: E) {
+    let (mc, kc) = (a.rows, a.cols);
+    let base = packed_a_len(mc, kc, mr);
+    assert!(buf.len() >= base + 2 * kc, "pack_a_checked buffer too small");
+    pack_a(a, buf, mr, alpha);
+    let al = alpha.to_f64();
+    for p in 0..kc {
+        let col = &a.data[p * a.ld..p * a.ld + mc];
+        let mut s = 0.0f64;
+        let mut sa = 0.0f64;
+        for &v in col {
+            let v = al * v.to_f64();
+            s += v;
+            sa += v.abs();
+        }
+        buf[base + p] = E::from_f64(s);
+        buf[base + kc + p] = E::from_f64(sa);
+    }
+}
+
+/// [`pack_b`], then append the ABFT checksum tail after the packed
+/// micro-panels: `buf[base..base+kc]` holds the row sums of `b`
+/// (`Σ_j b[p,j]`) and `buf[base+kc..base+2kc]` the absolute sums, where
+/// `base = packed_b_len(kc, nc, nr)`. f64-accumulated from the source
+/// view, like [`pack_a_checked`].
+pub fn pack_b_checked<E: Elem>(b: MatView<'_, E>, buf: &mut [E], nr: usize) {
+    let (kc, nc) = (b.rows, b.cols);
+    let base = packed_b_len(kc, nc, nr);
+    assert!(buf.len() >= base + 2 * kc, "pack_b_checked buffer too small");
+    pack_b(b, buf, nr);
+    let mut s = vec![0.0f64; kc];
+    let mut sa = vec![0.0f64; kc];
+    for j in 0..nc {
+        for (p, (sp, sap)) in s.iter_mut().zip(sa.iter_mut()).enumerate() {
+            let v = b.at(p, j).to_f64();
+            *sp += v;
+            *sap += v.abs();
+        }
+    }
+    for p in 0..kc {
+        buf[base + p] = E::from_f64(s[p]);
+        buf[base + kc + p] = E::from_f64(sa[p]);
+    }
+}
+
 /// Test helper: read element (i, p) of a packed Ac.
 #[cfg(test)]
 pub fn packed_a_at(buf: &[f64], mr: usize, kc: usize, i: usize, p: usize) -> f64 {
@@ -188,5 +254,58 @@ mod tests {
     fn packed_lengths() {
         assert_eq!(packed_a_len(10, 3, 4), 12 * 3);
         assert_eq!(packed_b_len(4, 11, 6), 12 * 4);
+        assert_eq!(packed_a_len_checked(10, 3, 4), 12 * 3 + 6);
+        assert_eq!(packed_b_len_checked(4, 11, 6), 12 * 4 + 8);
+    }
+
+    #[test]
+    fn pack_a_checked_appends_alpha_folded_column_sums() {
+        let mut rng = Pcg64::seed(7);
+        let a = MatrixF64::random(10, 3, &mut rng);
+        let mr = 4;
+        let mut buf = vec![f64::NAN; packed_a_len_checked(10, 3, mr)];
+        pack_a_checked(a.view(), &mut buf, mr, -2.0);
+        // The packed panels are identical to a plain pack_a.
+        for i in 0..10 {
+            for p in 0..3 {
+                assert_eq!(packed_a_at(&buf, mr, 3, i, p), -2.0 * a[(i, p)]);
+            }
+        }
+        let base = packed_a_len(10, 3, mr);
+        for p in 0..3 {
+            let mut s = 0.0;
+            let mut sa = 0.0;
+            for i in 0..10 {
+                s += -2.0 * a[(i, p)];
+                sa += (-2.0 * a[(i, p)]).abs();
+            }
+            assert!((buf[base + p] - s).abs() < 1e-12);
+            assert!((buf[base + 3 + p] - sa).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pack_b_checked_appends_row_sums() {
+        let mut rng = Pcg64::seed(8);
+        let b = MatrixF64::random(4, 11, &mut rng);
+        let nr = 6;
+        let mut buf = vec![f64::NAN; packed_b_len_checked(4, 11, nr)];
+        pack_b_checked(b.view(), &mut buf, nr);
+        for p in 0..4 {
+            for j in 0..11 {
+                assert_eq!(packed_b_at_kc(&buf, nr, 4, j, p), b[(p, j)]);
+            }
+        }
+        let base = packed_b_len(4, 11, nr);
+        for p in 0..4 {
+            let mut s = 0.0;
+            let mut sa = 0.0;
+            for j in 0..11 {
+                s += b[(p, j)];
+                sa += b[(p, j)].abs();
+            }
+            assert!((buf[base + p] - s).abs() < 1e-12);
+            assert!((buf[base + 4 + p] - sa).abs() < 1e-12);
+        }
     }
 }

@@ -64,6 +64,7 @@ use crate::runtime::pool::{PoolCtx, SubTeam, WorkerPool};
 use crate::util::elem::Elem;
 use crate::util::matrix::{MatView, MatViewMut};
 
+use super::abft::{gemm_blocked_abft, verified_macro_kernel, AbftCtx, CheckSums};
 use super::blocked::{gemm_blocked, macro_kernel, scale_c, Workspace};
 use super::microkernel::MicroKernelImpl;
 use super::packing::{pack_a, pack_b, packed_a_len, packed_b_len};
@@ -276,13 +277,36 @@ pub fn gemm_parallel<E: Elem>(
     target: ParallelLoop,
     pool: &WorkerPool,
 ) {
+    gemm_parallel_abft(cfg, kernel, alpha, a, b, beta, c, target, pool, None);
+}
+
+/// [`gemm_parallel`] with an optional ABFT context: when `abft` is
+/// `Some`, every macro-block runs the checksum-verified epilogue (and the
+/// armed `flip@` drill gets its injection points). `None` is the exact
+/// unverified path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_parallel_abft<E: Elem>(
+    cfg: &GemmConfig,
+    kernel: &MicroKernelImpl<E>,
+    alpha: E,
+    a: MatView<'_, E>,
+    b: MatView<'_, E>,
+    beta: E,
+    c: &mut MatViewMut<'_, E>,
+    target: ParallelLoop,
+    pool: &WorkerPool,
+    abft: Option<&AbftCtx<'_>>,
+) {
     assert_eq!(kernel.spec, cfg.mk, "kernel/config shape mismatch");
     assert_eq!(a.cols, b.rows, "inner dimension mismatch");
     assert_eq!(c.rows, a.rows, "C row mismatch");
     assert_eq!(c.cols, b.cols, "C col mismatch");
     if pool.threads() == 1 {
         let mut ws = pool.workspace(0);
-        gemm_blocked(cfg, kernel, alpha, a, b, beta, c, &mut ws);
+        match abft {
+            Some(ctx) => gemm_blocked_abft(cfg, kernel, alpha, a, b, beta, c, &mut ws, ctx),
+            None => gemm_blocked(cfg, kernel, alpha, a, b, beta, c, &mut ws),
+        }
         return;
     }
     let (m, n, k) = (a.rows, b.cols, a.cols);
@@ -293,8 +317,8 @@ pub fn gemm_parallel<E: Elem>(
     let ccp = cfg.ccp.clamp_to(GemmDims::new(m, n, k));
     let eff = GemmConfig { mk: cfg.mk, ccp };
     match target {
-        ParallelLoop::G4 => gemm_parallel_g4(&eff, kernel, alpha, a, b, c, pool),
-        ParallelLoop::G3 => gemm_parallel_g3(&eff, kernel, alpha, a, b, c, pool),
+        ParallelLoop::G4 => gemm_parallel_g4(&eff, kernel, alpha, a, b, c, pool, abft),
+        ParallelLoop::G3 => gemm_parallel_g3(&eff, kernel, alpha, a, b, c, pool, abft),
     }
 }
 
@@ -321,6 +345,7 @@ fn g4_sweep<E: Elem>(
     rank: usize,
     threads: usize,
     sync: &dyn Fn(),
+    abft: Option<&AbftCtx<'_>>,
 ) {
     let (m, n, k) = (a.rows, b.cols, a.cols);
     let (mc, nc, kc) = (cfg.ccp.mc, cfg.ccp.nc, cfg.ccp.kc);
@@ -338,23 +363,66 @@ fn g4_sweep<E: Elem>(
                 let mc_eff = mc.min(m - ic);
                 sync(); // prior compute done: Ac may be overwritten
                 coop_pack_a(rank, threads, a.sub(ic, pc, mc_eff, kc_eff), a_shared, mr, alpha);
+                if let Some(actx) = abft {
+                    // Injection drill: a rank may flip one bit in its own
+                    // just-packed (pre-barrier, so un-raced) Ac share.
+                    let (flo, fhi) = partition_rank(mc_eff, threads, rank, mr);
+                    if flo < fhi {
+                        let off = (flo / mr) * mr * kc_eff;
+                        let len = packed_a_len(fhi - flo, kc_eff, mr);
+                        // SAFETY: same disjoint range this rank just
+                        // packed; the pack-complete barrier is below.
+                        actx.maybe_flip(rank, unsafe { a_shared.range_mut(off, len) });
+                    }
+                }
                 sync(); // packs complete: buffers readable
                 let (lo, hi) = partition_rank(nc_eff, threads, rank, nr);
                 if lo < hi {
                     // SAFETY: pack phases are barrier-complete; each
                     // rank updates a disjoint jr-range of C.
-                    unsafe {
-                        macro_kernel(
-                            kernel,
-                            kc_eff,
-                            mc_eff,
-                            nc_eff,
-                            a_shared.as_slice(),
-                            b_shared.as_slice(),
-                            cbase.ptr().add(jc * ldc + ic),
-                            ldc,
-                            (lo, hi),
-                        );
+                    match abft {
+                        Some(actx) => {
+                            let a_src = a.sub(ic, pc, mc_eff, kc_eff);
+                            let b_src = b.sub(pc, jc, kc_eff, nc_eff);
+                            let sums = CheckSums::from_views_timed(
+                                a_src,
+                                alpha,
+                                b_src.sub(0, lo, kc_eff, hi - lo),
+                                actx.stats,
+                            );
+                            unsafe {
+                                verified_macro_kernel(
+                                    kernel,
+                                    kc_eff,
+                                    mc_eff,
+                                    nc_eff,
+                                    a_shared.as_slice(),
+                                    b_shared.as_slice(),
+                                    cbase.ptr().add(jc * ldc + ic),
+                                    ldc,
+                                    (lo, hi),
+                                    alpha,
+                                    a_src,
+                                    b_src,
+                                    &sums,
+                                    actx,
+                                    (ic, jc),
+                                );
+                            }
+                        }
+                        None => unsafe {
+                            macro_kernel(
+                                kernel,
+                                kc_eff,
+                                mc_eff,
+                                nc_eff,
+                                a_shared.as_slice(),
+                                b_shared.as_slice(),
+                                cbase.ptr().add(jc * ldc + ic),
+                                ldc,
+                                (lo, hi),
+                            );
+                        },
                     }
                 }
                 ic += mc;
@@ -373,6 +441,7 @@ fn gemm_parallel_g4<E: Elem>(
     b: MatView<'_, E>,
     c: &mut MatViewMut<'_, E>,
     pool: &WorkerPool,
+    abft: Option<&AbftCtx<'_>>,
 ) {
     let ldc = c.ld;
     // The team-shared Ac/Bc are pinned in the pool's rank-0 workspace;
@@ -389,7 +458,7 @@ fn gemm_parallel_g4<E: Elem>(
     pool.run(&|ctx: &PoolCtx<'_>| {
         g4_sweep(
             cfg, kernel, alpha, a, b, cbase, ldc, a_shared, b_shared, ctx.rank, ctx.threads,
-            &|| ctx.barrier(),
+            &|| ctx.barrier(), abft,
         );
     });
     drop(ws0);
@@ -403,6 +472,7 @@ fn gemm_parallel_g3<E: Elem>(
     b: MatView<'_, E>,
     c: &mut MatViewMut<'_, E>,
     pool: &WorkerPool,
+    abft: Option<&AbftCtx<'_>>,
 ) {
     let (m, n, k) = (a.rows, b.cols, a.cols);
     let (mc, nc, kc) = (cfg.ccp.mc, cfg.ccp.nc, cfg.ccp.kc);
@@ -447,20 +517,53 @@ fn gemm_parallel_g3<E: Elem>(
                         None => unsafe { a0_buf.range_mut(0, a0_buf.len) },
                     };
                     pack_a(a.sub(ic, pc, mc_eff, kc_eff), a_buf, mr, alpha);
+                    if let Some(actx) = abft {
+                        // Injection drill on this rank's private Ac.
+                        let len = packed_a_len(mc_eff, kc_eff, mr);
+                        actx.maybe_flip(rank, &mut a_buf[..len]);
+                    }
                     // SAFETY: Bc is barrier-complete; each rank updates a
                     // disjoint (mc-aligned) row-range of C.
-                    unsafe {
-                        macro_kernel(
-                            kernel,
-                            kc_eff,
-                            mc_eff,
-                            nc_eff,
-                            a_buf,
-                            b_shared.as_slice(),
-                            cbase.ptr().add(jc * ldc + ic),
-                            ldc,
-                            (0, nc_eff),
-                        );
+                    match abft {
+                        Some(actx) => {
+                            let a_src = a.sub(ic, pc, mc_eff, kc_eff);
+                            let b_src = b.sub(pc, jc, kc_eff, nc_eff);
+                            let sums = CheckSums::from_views_timed(
+                                a_src, alpha, b_src, actx.stats,
+                            );
+                            unsafe {
+                                verified_macro_kernel(
+                                    kernel,
+                                    kc_eff,
+                                    mc_eff,
+                                    nc_eff,
+                                    a_buf,
+                                    b_shared.as_slice(),
+                                    cbase.ptr().add(jc * ldc + ic),
+                                    ldc,
+                                    (0, nc_eff),
+                                    alpha,
+                                    a_src,
+                                    b_src,
+                                    &sums,
+                                    actx,
+                                    (ic, jc),
+                                );
+                            }
+                        }
+                        None => unsafe {
+                            macro_kernel(
+                                kernel,
+                                kc_eff,
+                                mc_eff,
+                                nc_eff,
+                                a_buf,
+                                b_shared.as_slice(),
+                                cbase.ptr().add(jc * ldc + ic),
+                                ldc,
+                                (0, nc_eff),
+                            );
+                        },
                     }
                     ic += mc;
                 }
@@ -543,6 +646,7 @@ fn fused_col_sweep<E: Elem>(
     rank: usize,
     threads: usize,
     sync: &dyn Fn(),
+    abft: Option<&AbftCtx<'_>>,
 ) {
     let (m, k) = (a.rows, a.cols);
     let (mc, nc, kc) = (cfg.ccp.mc, cfg.ccp.nc, cfg.ccp.kc);
@@ -569,6 +673,21 @@ fn fused_col_sweep<E: Elem>(
                     coop_pack_a(rank, threads, a.sub(ic, pc, mc_eff, kc_eff), slot, mr, alpha);
                     ic += mc;
                 }
+                if let Some(actx) = abft {
+                    // Injection drill: flip a bit in this rank's own
+                    // just-packed share of the first Ac slot, before the
+                    // pack-complete barrier publishes it.
+                    let mc_eff0 = mc.min(m);
+                    let (flo, fhi) = partition_rank(mc_eff0, threads, rank, mr);
+                    if flo < fhi {
+                        let slot =
+                            a_shared.window(layout.offset(pc, 0), layout.block_len(pc, 0));
+                        let off = (flo / mr) * mr * kc_eff;
+                        let len = packed_a_len(fhi - flo, kc_eff, mr);
+                        // SAFETY: same disjoint range this rank packed.
+                        actx.maybe_flip(rank, unsafe { slot.range_mut(off, len) });
+                    }
+                }
             }
             sync(); // packs complete: buffers readable
             let (lo, hi) = partition_rank(nc_eff, threads, rank, nr);
@@ -580,18 +699,49 @@ fn fused_col_sweep<E: Elem>(
                     let len = layout.block_len(pc, ic);
                     // SAFETY: packs are barrier-complete; each rank
                     // updates a disjoint jr-range of C.
-                    unsafe {
-                        macro_kernel(
-                            kernel,
-                            kc_eff,
-                            mc_eff,
-                            nc_eff,
-                            &a_shared.as_slice()[off..off + len],
-                            b_shared.as_slice(),
-                            cbase.ptr().add(jc * ldc + ic),
-                            ldc,
-                            (lo, hi),
-                        );
+                    match abft {
+                        Some(actx) => {
+                            let a_src = a.sub(ic, pc, mc_eff, kc_eff);
+                            let b_src = b.sub(pc, jc, kc_eff, nc_eff);
+                            let sums = CheckSums::from_views_timed(
+                                a_src,
+                                alpha,
+                                b_src.sub(0, lo, kc_eff, hi - lo),
+                                actx.stats,
+                            );
+                            unsafe {
+                                verified_macro_kernel(
+                                    kernel,
+                                    kc_eff,
+                                    mc_eff,
+                                    nc_eff,
+                                    &a_shared.as_slice()[off..off + len],
+                                    b_shared.as_slice(),
+                                    cbase.ptr().add(jc * ldc + ic),
+                                    ldc,
+                                    (lo, hi),
+                                    alpha,
+                                    a_src,
+                                    b_src,
+                                    &sums,
+                                    actx,
+                                    (ic, jc),
+                                );
+                            }
+                        }
+                        None => unsafe {
+                            macro_kernel(
+                                kernel,
+                                kc_eff,
+                                mc_eff,
+                                nc_eff,
+                                &a_shared.as_slice()[off..off + len],
+                                b_shared.as_slice(),
+                                cbase.ptr().add(jc * ldc + ic),
+                                ldc,
+                                (lo, hi),
+                            );
+                        },
                     }
                     ic += mc;
                 }
@@ -688,6 +838,32 @@ pub fn gemm_fused_trailing_ranges<E: Elem>(
     panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
     pool: &WorkerPool,
 ) {
+    gemm_fused_trailing_ranges_abft(
+        cfg, kernel, alpha, a, b, c, head, tail, panel_workers, panel_queue_empty, panel_task,
+        pool, None,
+    );
+}
+
+/// [`gemm_fused_trailing_ranges`] with an optional ABFT context: `Some`
+/// runs every trailing-update macro-block through the checksum-verified
+/// epilogue (the lookahead pipelines' verified mode), `None` is the
+/// exact unverified path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_fused_trailing_ranges_abft<E: Elem>(
+    cfg: &GemmConfig,
+    kernel: &MicroKernelImpl<E>,
+    alpha: E,
+    a: MatView<'_, E>,
+    b: MatView<'_, E>,
+    c: &mut MatViewMut<'_, E>,
+    head: &[(usize, usize)],
+    tail: (usize, usize),
+    panel_workers: usize,
+    panel_queue_empty: bool,
+    panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
+    pool: &WorkerPool,
+    abft: Option<&AbftCtx<'_>>,
+) {
     assert_eq!(kernel.spec, cfg.mk, "kernel/config shape mismatch");
     assert_eq!(a.cols, b.rows, "inner dimension mismatch");
     assert_eq!(c.rows, a.rows, "C row mismatch");
@@ -710,7 +886,9 @@ pub fn gemm_fused_trailing_ranges<E: Elem>(
     let eff = GemmConfig { mk: cfg.mk, ccp };
     if pool.threads() == 1 {
         let mut ws = pool.workspace(0);
-        gemm_fused_trailing_ranges_seq(&eff, kernel, alpha, a, b, c, head, tail, panel_task, &mut ws);
+        gemm_fused_trailing_ranges_seq(
+            &eff, kernel, alpha, a, b, c, head, tail, panel_task, &mut ws, abft,
+        );
         return;
     }
     let layout = PackedALayout { m, k, mc: ccp.mc, kc: ccp.kc, mr: eff.mk.mr };
@@ -736,7 +914,7 @@ pub fn gemm_fused_trailing_ranges<E: Elem>(
         for &(lo, hi) in head {
             fused_col_sweep(
                 &eff, kernel, alpha, a, b, cbase, ldc, (lo, hi), !packed, layout, a_shared,
-                b_shared, ctx.rank, ctx.threads, &|| ctx.barrier(),
+                b_shared, ctx.rank, ctx.threads, &|| ctx.barrier(), abft,
             );
             packed = packed || hi > lo;
         }
@@ -750,7 +928,7 @@ pub fn gemm_fused_trailing_ranges<E: Elem>(
             // packed them).
             fused_col_sweep(
                 &eff, kernel, alpha, a, b, cbase, ldc, tail, !any_head, layout, a_shared,
-                b_shared, sub.rank, sub.threads, &|| sub.barrier(),
+                b_shared, sub.rank, sub.threads, &|| sub.barrier(), abft,
             );
         }
         // Rejoin: panel results and tail columns published; waits are
@@ -776,19 +954,25 @@ pub(crate) fn gemm_fused_trailing_ranges_seq<E: Elem>(
     tail: (usize, usize),
     panel_task: &(dyn Fn(&SubTeam<'_>) + Sync),
     ws: &mut Workspace,
+    abft: Option<&AbftCtx<'_>>,
 ) {
+    let mut run = |b1: MatView<'_, E>, c1: &mut MatViewMut<'_, E>, ws: &mut Workspace| match abft
+    {
+        Some(ctx) => gemm_blocked_abft(cfg, kernel, alpha, a, b1, E::ONE, c1, ws, ctx),
+        None => gemm_blocked(cfg, kernel, alpha, a, b1, E::ONE, c1, ws),
+    };
     for &(lo, hi) in head {
         if hi > lo {
             let b1 = b.sub(0, lo, b.rows, hi - lo);
             let mut c1 = c.sub_mut(0, lo, c.rows, hi - lo);
-            gemm_blocked(cfg, kernel, alpha, a, b1, E::ONE, &mut c1, ws);
+            run(b1, &mut c1, ws);
         }
     }
     panel_task(&SubTeam::solo_panel());
     if tail.1 > tail.0 {
         let b2 = b.sub(0, tail.0, b.rows, tail.1 - tail.0);
         let mut c2 = c.sub_mut(0, tail.0, c.rows, tail.1 - tail.0);
-        gemm_blocked(cfg, kernel, alpha, a, b2, E::ONE, &mut c2, ws);
+        run(b2, &mut c2, ws);
     }
 }
 
@@ -939,7 +1123,7 @@ pub fn gemm_batch_parallel<E: Elem>(
         }
         g4_sweep(
             &d.cfg, &d.kernel, d.alpha, d.a, d.b, d.cbase, d.ldc, a_shared, b_shared, grp.rank,
-            grp.threads, &|| grp.barrier(),
+            grp.threads, &|| grp.barrier(), None,
         );
     });
     drop(guards);

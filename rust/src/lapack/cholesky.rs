@@ -22,10 +22,11 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::gemm::abft::{lower_panel_colsums, verify_chol_panel, AbftPhase, AbftStats};
 use crate::gemm::{gemm_blocked, GemmEngine, Workspace};
 use crate::model::GemmDims;
 use crate::runtime::pool::SubTeam;
-use crate::util::matrix::{MatrixF64, MatViewMut};
+use crate::util::matrix::{MatView, MatrixF64, MatViewMut};
 
 use super::pfact::{SharedPanel, NO_ERR};
 use super::trsm::trsm_right_upper;
@@ -59,6 +60,40 @@ pub fn potf2(a: &mut MatViewMut<'_>) -> Result<(), usize> {
     Ok(())
 }
 
+/// Pre-factorization lower-triangle column sums of a panel
+/// (f64-accumulated, overhead-accounted). Taken before `potf2`; only
+/// entries `i >= j` are read — the strict upper triangle still holds
+/// untouched symmetric input and stays out of the checksum entirely.
+fn chol_panel_pre_sums(panel: MatView<'_>, stats: &AbftStats) -> (Vec<f64>, Vec<f64>) {
+    let t0 = std::time::Instant::now();
+    let sums = lower_panel_colsums(panel);
+    stats.add_overhead(t0.elapsed());
+    sums
+}
+
+/// Detect-only ABFT re-verification of a factored Cholesky panel
+/// (`potf2` + panel TRSM both applied): the factored L must reproduce
+/// the pre-factorization lower column sums via the suffix-sum identity
+/// checked by [`verify_chol_panel`]. A mismatch is recorded on the
+/// engine's [`AbftStats`]; the caller surfaces it as
+/// `DlaError::DataCorrupt { phase: "chol-panel", .. }`.
+fn chol_panel_check(
+    panel: MatView<'_>,
+    pre: &(Vec<f64>, Vec<f64>),
+    origin: (usize, usize),
+    stats: &AbftStats,
+) {
+    let t0 = std::time::Instant::now();
+    let ok = verify_chol_panel(panel, &pre.0, &pre.1);
+    stats.add_overhead(t0.elapsed());
+    if ok {
+        stats.block_done();
+    } else {
+        stats.detection();
+        stats.record_failure(AbftPhase::CholPanel, origin);
+    }
+}
+
 /// Blocked lower Cholesky in place; only the lower triangle of `a` is
 /// referenced and overwritten with L. Trailing updates run through the
 /// engine so they follow the co-design policy (and, like LU, reuse the
@@ -80,9 +115,11 @@ fn cholesky_blocked_baseline(
 ) -> Result<(), usize> {
     let s = a.rows();
     assert_eq!(a.cols(), s);
+    let verify = engine.verify().enabled();
     let mut k = 0;
     while k < s {
         let b = block.min(s - k);
+        let pre = verify.then(|| chol_panel_pre_sums(a.sub(k, k, s - k, b), engine.abft_stats()));
         // A11 = L11 L11^T
         {
             let mut a11 = a.sub_mut(k, k, b, b);
@@ -103,6 +140,10 @@ fn cholesky_blocked_baseline(
                 let mut a22 = a.sub_mut(k + b, k + b, rest, rest);
                 engine.gemm(-1.0, a21.view(), a21t.view(), 1.0, &mut a22);
             }
+        }
+        // Re-verify once the whole panel (potf2 + TRSM) is in place.
+        if let Some(pre) = &pre {
+            chol_panel_check(a.sub(k, k, s - k, b), pre, (k, k), engine.abft_stats());
         }
         k += b;
     }
@@ -148,11 +189,20 @@ fn cholesky_blocked_lookahead(
     let col_of = |t: usize| (t * block).min(s);
     let width_of = |t: usize| col_of(t + 1) - col_of(t);
     let chain_ws = Mutex::new(Workspace::new());
+    // ABFT panel re-verification (detect-only): owned stats handle +
+    // flag, because the fused-job call holds the engine mutably while
+    // the chain closure runs on the pool.
+    let abft_on = engine.verify().enabled();
+    let abft_stats = std::sync::Arc::clone(engine.abft_stats());
     // Panel 0 up front.
     {
         let b0 = width_of(0);
         let mut pv = a.sub_mut(0, 0, s, b0);
+        let pre = abft_on.then(|| chol_panel_pre_sums(pv.as_view(), &abft_stats));
         factor_panel(&mut pv, b0)?;
+        if let Some(pre) = &pre {
+            chol_panel_check(pv.as_view(), pre, (0, 0), &abft_stats);
+        }
     }
     let mut nf = 1usize;
     for t in 0..panels {
@@ -218,9 +268,13 @@ fn cholesky_blocked_lookahead(
                 }
                 // SAFETY: as above; panel w's columns are fully updated.
                 let mut pv = unsafe { shared.sub(wc, wc, s - cw, bw).view_mut() };
+                let pre = abft_on.then(|| chol_panel_pre_sums(pv.as_view(), &abft_stats));
                 if let Err(j) = factor_panel(&mut pv, bw) {
                     errs[wi].store(j, Ordering::Release);
                     return;
+                }
+                if let Some(pre) = &pre {
+                    chol_panel_check(pv.as_view(), pre, (cw, cw), &abft_stats);
                 }
             }
         };

@@ -53,11 +53,12 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::gemm::abft::{panel_colsums, verify_lu_panel, AbftPhase, AbftStats};
 use crate::gemm::{gemm_blocked, GemmElem, GemmEngine, MicroKernelImpl, Workspace};
 use crate::model::{GemmDims, PanelShape};
 use crate::runtime::pool::SubTeam;
 use crate::util::elem::Elem;
-use crate::util::matrix::{Matrix, MatrixF64, MatViewMut};
+use crate::util::matrix::{Matrix, MatrixF64, MatView, MatViewMut};
 
 use super::pfact::{getf2, getf2_team, laswp, laswp_parallel, SharedPanel, NO_ERR};
 use super::trsm::trsm_left_lower_unit;
@@ -177,6 +178,42 @@ fn apply_panel_swaps<E: Elem>(
     }
 }
 
+/// Pre-factorization column sums of a panel, f64-accumulated
+/// (overhead-accounted on `stats`). Column sums are invariant under the
+/// panel's own row interchanges, so they can be taken *before* `getf2`
+/// and checked against the factored `L`/`U` afterwards.
+fn lu_panel_pre_sums<E: Elem>(panel: MatView<'_, E>, stats: &AbftStats) -> (Vec<f64>, Vec<f64>) {
+    let t0 = std::time::Instant::now();
+    let sums = panel_colsums(panel);
+    stats.add_overhead(t0.elapsed());
+    sums
+}
+
+/// Detect-only ABFT re-verification of a factored panel: the factored
+/// `L`/`U` must reproduce the pre-factorization column sums via the
+/// permutation-invariant identity checked by
+/// [`verify_lu_panel`]. A mismatch is recorded on
+/// the engine's [`AbftStats`] with the panel's global origin; the driver
+/// finishes and the caller surfaces the failure as
+/// `DlaError::DataCorrupt { phase: "lu-panel", .. }` (panels are not
+/// recomputed — correction covers the packed GEMM operands only).
+fn lu_panel_check<E: Elem>(
+    panel: MatView<'_, E>,
+    pre: &(Vec<f64>, Vec<f64>),
+    origin: (usize, usize),
+    stats: &AbftStats,
+) {
+    let t0 = std::time::Instant::now();
+    let ok = verify_lu_panel(panel, &pre.0, &pre.1);
+    stats.add_overhead(t0.elapsed());
+    if ok {
+        stats.block_done();
+    } else {
+        stats.detection();
+        stats.record_failure(AbftPhase::LuPanel, origin);
+    }
+}
+
 /// Blocked right-looking LU with partial pivoting, in place over `a`,
 /// trailing updates through the supplied [`GemmEngine`] (this is where
 /// the co-design policy — CCPs + micro-kernel per call — takes effect).
@@ -224,6 +261,7 @@ fn lu_blocked_baseline<E: GemmElem>(
     let s = a.rows();
     assert_eq!(a.cols(), s, "LU requires a square matrix");
     assert!(block >= 1);
+    let verify = engine.verify().enabled();
     let mut pivots = vec![0usize; s];
     let mut k = 0;
     while k < s {
@@ -231,8 +269,12 @@ fn lu_blocked_baseline<E: GemmElem>(
         // --- PFACT on the panel A[k.., k..k+b] --------------------------
         {
             let mut panel = a.sub_mut(k, k, s - k, b);
+            let pre = verify.then(|| lu_panel_pre_sums(panel.as_view(), engine.abft_stats()));
             let mut piv_local = vec![0usize; b];
             getf2(&mut panel, &mut piv_local).map_err(|j| k + j)?;
+            if let Some(pre) = &pre {
+                lu_panel_check(panel.as_view(), pre, (k, k), engine.abft_stats());
+            }
             for (j, pj) in piv_local.iter().enumerate() {
                 pivots[k + j] = k + pj;
             }
@@ -303,12 +345,21 @@ fn lu_blocked_lookahead<E: GemmElem>(
     // Scratch for the chain's restricted mini-updates; one allocation
     // per factorization, locked only by the panel sub-team leader.
     let chain_ws = Mutex::new(Workspace::new());
+    // ABFT panel re-verification (detect-only): captured as an owned
+    // stats handle + flag because the fused-job call below holds the
+    // engine mutably while the chain closure runs on the pool.
+    let abft_on = engine.verify().enabled();
+    let abft_stats = std::sync::Arc::clone(engine.abft_stats());
     // Factor panel 0 up front (nothing to overlap it with yet).
     {
         let b0 = width_of(0);
         let mut panel = a.sub_mut(0, 0, s, b0);
+        let pre = abft_on.then(|| lu_panel_pre_sums(panel.as_view(), &abft_stats));
         let mut piv_local = vec![0usize; b0];
         getf2(&mut panel, &mut piv_local)?;
+        if let Some(pre) = &pre {
+            lu_panel_check(panel.as_view(), pre, (0, 0), &abft_stats);
+        }
         pivots[..b0].copy_from_slice(&piv_local);
     }
     let mut nf = 1usize; // work-queue head: first unfactored panel
@@ -423,9 +474,23 @@ fn lu_blocked_lookahead<E: GemmElem>(
                 }
                 // Panel w is ready: the whole panel sub-team factors it.
                 let panel_sh = shared.sub(wc, wc, s - cw, bw);
+                // ABFT pre-sums on the readied panel (after the replay,
+                // before factoring). SAFETY: rank 0 is the sole toucher
+                // of these columns until the first getf2_team barrier,
+                // where the other ranks are still waiting.
+                let pre = (abft_on && sub.rank == 0)
+                    .then(|| unsafe { lu_panel_pre_sums(panel_sh.view_mut().as_view(), &abft_stats) });
                 getf2_team(&panel_sh, &piv_next[wi], &errs[wi], sub);
                 if errs[wi].load(Ordering::Acquire) != NO_ERR {
                     return; // uniform: every rank observes the error
+                }
+                // SAFETY: getf2_team's final barrier ordered every
+                // rank's writes before this read, and no rank writes
+                // panel w's columns again within this job.
+                if let Some(pre) = &pre {
+                    unsafe {
+                        lu_panel_check(panel_sh.view_mut().as_view(), pre, (cw, cw), &abft_stats);
+                    }
                 }
             }
         };

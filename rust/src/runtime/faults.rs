@@ -38,6 +38,15 @@
 //! - `flood:N` — the server injects `N` synthetic Background-tier
 //!   requests at admission when it starts (a canned overload, so load
 //!   shedding is testable without an external generator).
+//! - `flip@R:E[:BIT]` — one-shot silent-data-corruption drill: rank `R`
+//!   flips bit `BIT` (default 62, an exponent bit — a loud corruption)
+//!   of one element of its own just-packed A panel on the first
+//!   **verified** GEMM epoch `>= E` (1-based, counted by
+//!   [`FaultState::begin_verified_epoch`]). The flip lands *before* the
+//!   pack-complete barrier and only in the flipping rank's own share,
+//!   so it is exactly the data race-free shape of a real SDC event in a
+//!   packed buffer. Consumed only by verified dispatches — unverified
+//!   work is never corrupted (armed-but-benign legs stay green).
 //! - `1` / `on` / `arm` — arm an empty plan (hooks active, no faults).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -61,6 +70,10 @@ pub struct FaultPlan {
     /// Number of synthetic Background-tier requests the server injects
     /// at admission when it starts (the canned-overload drill).
     pub flood: u64,
+    /// One-shot bit flip: (rank, 1-based verified epoch, bit index).
+    /// Fires once, on the first verified GEMM epoch `>=` the target,
+    /// only on the named rank, corrupting its own packed-A share.
+    pub flip: Option<(usize, u64, u32)>,
 }
 
 impl FaultPlan {
@@ -99,6 +112,19 @@ impl FaultPlan {
                 if let Ok(n) = rest.parse::<u64>() {
                     plan.flood = n;
                 }
+            } else if let Some(rest) = tok.strip_prefix("flip@") {
+                // `R:E` or `R:E:BIT`; default bit 62 (an f64 exponent
+                // bit, so the corruption is far outside any tolerance).
+                let mut it = rest.splitn(3, ':');
+                let r = it.next().and_then(|s| s.trim().parse::<usize>().ok());
+                let e = it.next().and_then(|s| s.trim().parse::<u64>().ok());
+                let bit = match it.next() {
+                    Some(s) => s.trim().parse::<u32>().ok(),
+                    None => Some(62),
+                };
+                if let (Some(r), Some(e), Some(bit)) = (r, e, bit) {
+                    plan.flip = Some((r, e, bit.min(63)));
+                }
             }
             // "1" / "on" / "arm" / anything unrecognized: armed, no-op.
         }
@@ -128,6 +154,8 @@ pub struct FaultCounters {
     pub queue_full: u64,
     /// Synthetic flood requests actually injected at server start.
     pub floods: u64,
+    /// One-shot bit flips delivered into a packed buffer.
+    pub flips: u64,
 }
 
 /// An armed [`FaultPlan`]: the plan plus the one-shot / count-down state
@@ -137,12 +165,19 @@ pub struct FaultCounters {
 pub struct FaultState {
     plan: FaultPlan,
     panic_fired: AtomicBool,
+    flip_fired: AtomicBool,
     queue_full_left: AtomicU64,
     flood_left: AtomicU64,
+    /// 1-based count of verified GEMM dispatches begun against this
+    /// state (the epoch clock the `flip@` shot is gated on). Tracked
+    /// here rather than on the pool because only verified dispatches
+    /// may consume the flip.
+    verified_epoch: AtomicU64,
     panics: AtomicU64,
     delays: AtomicU64,
     queue_fulls: AtomicU64,
     floods: AtomicU64,
+    flips: AtomicU64,
 }
 
 impl FaultState {
@@ -153,12 +188,15 @@ impl FaultState {
         Self {
             plan,
             panic_fired: AtomicBool::new(false),
+            flip_fired: AtomicBool::new(false),
             queue_full_left,
             flood_left,
+            verified_epoch: AtomicU64::new(0),
             panics: AtomicU64::new(0),
             delays: AtomicU64::new(0),
             queue_fulls: AtomicU64::new(0),
             floods: AtomicU64::new(0),
+            flips: AtomicU64::new(0),
         }
     }
 
@@ -179,7 +217,35 @@ impl FaultState {
             delays: self.delays.load(Ordering::Relaxed),
             queue_full: self.queue_fulls.load(Ordering::Relaxed),
             floods: self.floods.load(Ordering::Relaxed),
+            flips: self.flips.load(Ordering::Relaxed),
         }
+    }
+
+    /// Verified-GEMM hook: advance the verified-epoch clock and return
+    /// the new (1-based) epoch. Called once per verified dispatch by the
+    /// engine; the returned epoch is what [`Self::take_flip`] gates on.
+    pub fn begin_verified_epoch(&self) -> u64 {
+        self.verified_epoch.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// Packing hook: claim the one-shot bit flip if this (rank, verified
+    /// epoch) is at or past the planned shot. Returns the bit index to
+    /// flip in the rank's own packed share; `None` on every call after
+    /// the shot fires (or when no flip is planned).
+    pub fn take_flip(&self, rank: usize, verified_epoch: u64) -> Option<u32> {
+        let (r, e, bit) = self.plan.flip?;
+        if rank != r || verified_epoch < e {
+            return None;
+        }
+        if self
+            .flip_fired
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            self.flips.fetch_add(1, Ordering::Relaxed);
+            return Some(bit);
+        }
+        None
     }
 
     /// Server hook: claim the planned flood exactly once (the first
@@ -253,13 +319,46 @@ mod tests {
 
     #[test]
     fn grammar_round_trip() {
-        let p = FaultPlan::parse("panic@1:3, slow@2:15, stall:40, queuefull:5, flood:64").unwrap();
+        let p = FaultPlan::parse(
+            "panic@1:3, slow@2:15, stall:40, queuefull:5, flood:64, flip@1:2:51",
+        )
+        .unwrap();
         assert_eq!(p.panic_at, Some((1, 3)));
         assert_eq!(p.slow, Some((2, 15)));
         assert_eq!(p.stall_ms, Some(40));
         assert_eq!(p.queue_full, 5);
         assert_eq!(p.flood, 64);
+        assert_eq!(p.flip, Some((1, 2, 51)));
         assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn flip_grammar_defaults_and_rejects() {
+        // Default bit is 62 (exponent bit — loud).
+        assert_eq!(FaultPlan::parse("flip@1:2").unwrap().flip, Some((1, 2, 62)));
+        // Out-of-range bit indices clamp to 63 instead of disarming.
+        assert_eq!(FaultPlan::parse("flip@0:1:99").unwrap().flip, Some((0, 1, 63)));
+        // Malformed specs fail toward no fault.
+        assert_eq!(FaultPlan::parse("flip@x:2").unwrap().flip, None);
+        assert_eq!(FaultPlan::parse("flip@1").unwrap().flip, None);
+        assert_eq!(FaultPlan::parse("flip@1:2:zz").unwrap().flip, None);
+    }
+
+    #[test]
+    fn flip_shot_is_one_shot_epoch_and_rank_gated() {
+        let st = FaultState::new(FaultPlan::parse("flip@1:3").unwrap());
+        assert_eq!(st.begin_verified_epoch(), 1);
+        assert_eq!(st.begin_verified_epoch(), 2);
+        // Wrong rank, early epoch: no fire.
+        assert_eq!(st.take_flip(0, 3), None);
+        assert_eq!(st.take_flip(1, 2), None);
+        assert_eq!(st.injected().flips, 0);
+        // Epoch past the target still fires (the shot cannot be missed).
+        assert_eq!(st.take_flip(1, 4), Some(62));
+        assert_eq!(st.injected().flips, 1);
+        // One-shot: never again.
+        assert_eq!(st.take_flip(1, 5), None);
+        assert_eq!(st.injected().flips, 1);
     }
 
     #[test]

@@ -52,6 +52,14 @@ pub enum DlaError {
     /// was still queued; the work was never started. Not transient in the
     /// retry sense — the caller asked for this outcome.
     Cancelled,
+    /// ABFT checksum verification caught silent data corruption (a bit
+    /// flip in a packed panel, a C tile, or a factored panel) that the
+    /// recompute pass — if `DLA_VERIFY=correct` — could not repair.
+    /// `phase` names the verified stage ("gemm", "lu-panel", ...),
+    /// `tile` the (row, col) origin of the corrupted block. Transient:
+    /// the flip lived in runtime state, not in the operand, so a clean
+    /// retry is expected to succeed.
+    DataCorrupt { phase: &'static str, tile: (usize, usize) },
 }
 
 impl fmt::Display for DlaError {
@@ -73,6 +81,13 @@ impl fmt::Display for DlaError {
                 write!(f, "overloaded: {tier} tier shed at {queue_delay_us} us queue delay")
             }
             DlaError::Cancelled => write!(f, "cancelled before execution"),
+            DlaError::DataCorrupt { phase, tile } => {
+                write!(
+                    f,
+                    "silent data corruption detected in {phase} at tile ({}, {})",
+                    tile.0, tile.1
+                )
+            }
         }
     }
 }
@@ -89,6 +104,7 @@ impl DlaError {
                 | DlaError::QueueFull { .. }
                 | DlaError::WorkerLost { .. }
                 | DlaError::Overloaded { .. }
+                | DlaError::DataCorrupt { .. }
         )
     }
 
@@ -127,6 +143,10 @@ mod tests {
                 "overloaded: background tier shed at 900 us queue delay",
             ),
             (DlaError::Cancelled, "cancelled before execution"),
+            (
+                DlaError::DataCorrupt { phase: "gemm", tile: (128, 256) },
+                "silent data corruption detected in gemm at tile (128, 256)",
+            ),
         ];
         for (e, text) in cases {
             assert_eq!(format!("{e}"), text);
@@ -139,6 +159,7 @@ mod tests {
         assert!(DlaError::QueueFull { retries: 0 }.is_transient());
         assert!(DlaError::WorkerLost { reason: "x".into() }.is_transient());
         assert!(DlaError::Overloaded { tier: "batch", queue_delay_us: 1 }.is_transient());
+        assert!(DlaError::DataCorrupt { phase: "gemm", tile: (0, 0) }.is_transient());
         assert!(!DlaError::Cancelled.is_transient());
         assert!(!DlaError::InvalidInput { reason: "x".into() }.is_transient());
         assert!(!DlaError::Singular { pivot: 0 }.is_transient());

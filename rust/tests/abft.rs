@@ -1,0 +1,404 @@
+//! ABFT suite: checksum-verified GEMM/LU against injected bit flips.
+//!
+//! Exercises the algorithm-based fault-tolerance layer end to end:
+//!
+//! 1. **Zero false positives, zero drift** — with no fault armed,
+//!    verified runs (detect *and* correct) are *bitwise identical* to
+//!    unverified runs and never report corruption.
+//! 2. **Typed detection** — an injected `flip@R:E` bit flip in a packed
+//!    operand surfaces as [`DlaError::DataCorrupt`] (a typed, transient
+//!    error), never as a silently wrong matrix.
+//! 3. **Correction** — in `Correct` mode the affected tile is recomputed
+//!    from pristine sources; the result is bitwise identical to the
+//!    fault-free run and the incident is accounted as `corrected`.
+//! 4. **Serving semantics** — the coordinator propagates verification
+//!    through the pool (and the degraded fallback), reports
+//!    [`AbftMetrics`](dla_codesign::coordinator::AbftMetrics), and the
+//!    CI `sdc` leg's env knobs (`DLA_VERIFY`, `DLA_FAULTS`) uphold the
+//!    "correct bits or typed error" invariant.
+//!
+//! Tests pin their own plans/policies (no env mutation) except the
+//! final env-adaptive drill, which is what the CI leg drives.
+
+use std::sync::Arc;
+
+use dla_codesign::arch::host_xeon;
+use dla_codesign::coordinator::{
+    CoordinatorServer, DlaError, DlaRequest, DlaResponse, ServerConfig,
+};
+use dla_codesign::gemm::{ConfigMode, GemmEngine, VerifyPolicy};
+use dla_codesign::runtime::{FaultPlan, FaultState, WorkerPool};
+use dla_codesign::util::{MatrixF64, Pcg64};
+
+fn plan(spec: &str) -> FaultPlan {
+    FaultPlan::parse(spec).expect("test fault spec must parse")
+}
+
+/// A pooled engine with `threads` workers, an optional armed fault
+/// plan, and the given verification policy.
+fn pooled_engine(threads: usize, faults: Option<&str>, verify: VerifyPolicy) -> GemmEngine {
+    let state = faults.map(|spec| Arc::new(FaultState::new(plan(spec))));
+    let pool = Arc::new(WorkerPool::with_fault_state(threads, state));
+    let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+    eng.set_shared_pool(pool);
+    eng.set_verify(verify);
+    eng
+}
+
+fn gemm_with(eng: &mut GemmEngine, seed: u64) -> MatrixF64 {
+    let mut rng = Pcg64::seed(seed);
+    let a = MatrixF64::random(192, 144, &mut rng);
+    let b = MatrixF64::random(144, 160, &mut rng);
+    let mut c = MatrixF64::random(192, 160, &mut rng);
+    eng.gemm(1.25, a.view(), b.view(), -0.5, &mut c.view_mut());
+    c
+}
+
+/// With no fault armed, detect and correct mode produce the same bits
+/// as an unverified engine — sequential and pooled — while counting
+/// verified epochs and reporting no corruption.
+#[test]
+fn verification_without_faults_is_bitwise_clean() {
+    // Sequential oracle (verification off).
+    let mut base = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+    let oracle = gemm_with(&mut base, 810);
+    assert_eq!(base.abft_stats().snapshot().verified_epochs, 0, "off mode must not verify");
+
+    for policy in [VerifyPolicy::Detect, VerifyPolicy::Correct] {
+        // Sequential verified run.
+        let mut seq = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+        seq.set_verify(policy);
+        let c_seq = gemm_with(&mut seq, 810);
+        assert_eq!(
+            c_seq.max_abs_diff(&oracle),
+            0.0,
+            "{policy:?}: sequential verified run must be bitwise identical"
+        );
+        let s = seq.abft_stats().snapshot();
+        assert!(s.verified_epochs >= 1 && s.verified_blocks >= 1, "must actually verify: {s:?}");
+        assert_eq!((s.detected, s.corrected, s.uncorrectable), (0, 0, 0), "{s:?}");
+        assert!(s.overhead_ns > 0, "checksum work must be accounted");
+        assert!(seq.take_abft_failure().is_none());
+
+        // Pooled verified run (4-way team, no fault plan).
+        let mut par = pooled_engine(4, None, policy);
+        let c_par = gemm_with(&mut par, 810);
+        assert_eq!(
+            c_par.max_abs_diff(&oracle),
+            0.0,
+            "{policy:?}: pooled verified run must be bitwise identical"
+        );
+        let s = par.abft_stats().snapshot();
+        assert_eq!((s.detected, s.corrected, s.uncorrectable), (0, 0, 0), "{s:?}");
+        assert!(par.take_abft_failure().is_none());
+    }
+}
+
+/// An armed flip in a packed operand is detected: the engine records a
+/// typed [`DlaError::DataCorrupt`] naming the GEMM phase, and the flip
+/// is one-shot (a second verified epoch runs clean).
+#[test]
+fn detect_mode_turns_flip_into_typed_data_corrupt() {
+    let mut eng = pooled_engine(4, Some("flip@1:1"), VerifyPolicy::Detect);
+    let _ = gemm_with(&mut eng, 811);
+
+    let faults = eng.pool().expect("pooled").fault_state().expect("armed");
+    assert_eq!(faults.injected().flips, 1, "the flip must have been delivered");
+
+    let s = eng.abft_stats().snapshot();
+    assert!(s.detected >= 1, "the flip must be detected: {s:?}");
+    assert_eq!(s.corrected, 0, "detect mode never recomputes");
+    let err = eng.take_abft_failure().expect("detection must surface a typed failure");
+    match &err {
+        DlaError::DataCorrupt { phase, .. } => assert_eq!(*phase, "gemm"),
+        other => panic!("expected DataCorrupt, got {other:?}"),
+    }
+    assert!(err.is_transient(), "SDC is transient — a retry may succeed");
+    assert!(eng.take_abft_failure().is_none(), "the failure is claimed exactly once");
+
+    // The shot was one-shot: the next verified epoch is clean and
+    // bitwise identical to a fault-free engine.
+    let c2 = gemm_with(&mut eng, 812);
+    assert!(eng.take_abft_failure().is_none(), "second epoch must be clean");
+    let mut base = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+    assert_eq!(c2.max_abs_diff(&gemm_with(&mut base, 812)), 0.0);
+}
+
+/// Correct mode repairs the flipped tile from pristine sources: the
+/// returned matrix is bitwise identical to the fault-free result, no
+/// error is recorded, and the incident is accounted as corrected.
+#[test]
+fn correct_mode_recovers_the_flip_bitwise() {
+    let mut eng = pooled_engine(4, Some("flip@1:1"), VerifyPolicy::Correct);
+    let c = gemm_with(&mut eng, 813);
+
+    let faults = eng.pool().expect("pooled").fault_state().expect("armed");
+    assert_eq!(faults.injected().flips, 1, "the flip must have been delivered");
+
+    let s = eng.abft_stats().snapshot();
+    assert!(s.detected >= 1, "the flip must first be detected: {s:?}");
+    assert!(s.corrected >= 1, "the flip must be repaired: {s:?}");
+    assert_eq!(s.uncorrectable, 0, "a packed-operand flip is always recoverable: {s:?}");
+    assert!(eng.take_abft_failure().is_none(), "a corrected run is a clean run");
+
+    let mut base = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+    assert_eq!(
+        c.max_abs_diff(&gemm_with(&mut base, 813)),
+        0.0,
+        "the recomputed tile must restore the exact fault-free bits"
+    );
+}
+
+/// Verified serving, detect mode: with a flip armed, exactly one GEMM
+/// request observes [`DlaError::DataCorrupt`]; every other response is
+/// bitwise identical to the serial oracle, and the shutdown metrics
+/// carry the ABFT ledger (summary line + JSON snapshot).
+#[test]
+fn served_gemm_under_flip_fails_typed_never_silently_wrong() {
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_workers(1)
+            .with_gemm_threads(4)
+            .with_verify(VerifyPolicy::Detect)
+            .with_faults(plan("flip@1:2")),
+    )
+    .expect("server start");
+
+    let mut rng = Pcg64::seed(820);
+    let n = 6;
+    let inputs: Vec<_> = (0..n)
+        .map(|_| {
+            (
+                MatrixF64::random(192, 144, &mut rng),
+                MatrixF64::random(144, 160, &mut rng),
+                MatrixF64::random(192, 160, &mut rng),
+            )
+        })
+        .collect();
+    let mut corrupt = 0usize;
+    for (a, b, c0) in &inputs {
+        let resp = server.call(DlaRequest::Gemm {
+            alpha: 1.0,
+            a: a.clone(),
+            b: b.clone(),
+            beta: 1.0,
+            c: c0.clone(),
+        });
+        match resp {
+            Err(DlaError::DataCorrupt { phase, .. }) => {
+                assert_eq!(phase, "gemm");
+                corrupt += 1;
+            }
+            Err(other) => panic!("only DataCorrupt is acceptable here, got {other:?}"),
+            Ok(DlaResponse::Matrix { result, .. }) => {
+                let mut oracle = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+                let mut c = c0.clone();
+                oracle.gemm(1.0, a.view(), b.view(), 1.0, &mut c.view_mut());
+                assert_eq!(
+                    result.max_abs_diff(&c),
+                    0.0,
+                    "a served Ok must be bitwise identical to the serial oracle"
+                );
+            }
+            Ok(_) => panic!("unexpected response kind"),
+        }
+    }
+    assert_eq!(corrupt, 1, "the flip costs exactly its victim");
+
+    let faults = server.fault_state().expect("armed");
+    assert_eq!(faults.injected().flips, 1);
+
+    let metrics = server.shutdown();
+    let abft = *metrics.abft_stats();
+    assert!(abft.verified_epochs >= n as u64, "every request ran verified: {abft:?}");
+    assert!(abft.detected >= 1, "{abft:?}");
+    assert_eq!(abft.corrected, 0, "detect mode never recomputes: {abft:?}");
+    let summary = metrics.summary();
+    assert!(summary.contains("abft:"), "verified run must report an abft line:\n{summary}");
+    assert!(metrics.snapshot_json().contains("\"abft\":{"), "JSON snapshot must carry abft");
+}
+
+/// Verified serving, correct mode: the same flip is absorbed — every
+/// request succeeds, the victim's bits match the oracle, and the repair
+/// is visible in the ABFT ledger.
+#[test]
+fn served_gemm_in_correct_mode_absorbs_the_flip() {
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_workers(1)
+            .with_gemm_threads(4)
+            .with_verify(VerifyPolicy::Correct)
+            .with_faults(plan("flip@1:2")),
+    )
+    .expect("server start");
+
+    let mut rng = Pcg64::seed(821);
+    for _ in 0..4 {
+        let a = MatrixF64::random(192, 144, &mut rng);
+        let b = MatrixF64::random(144, 160, &mut rng);
+        let c0 = MatrixF64::random(192, 160, &mut rng);
+        let resp = server
+            .call(DlaRequest::Gemm {
+                alpha: 1.0,
+                a: a.clone(),
+                b: b.clone(),
+                beta: 1.0,
+                c: c0.clone(),
+            })
+            .expect("correct mode must absorb the flip");
+        let DlaResponse::Matrix { result, .. } = resp else { panic!("unexpected kind") };
+        let mut oracle = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+        let mut c = c0.clone();
+        oracle.gemm(1.0, a.view(), b.view(), 1.0, &mut c.view_mut());
+        assert_eq!(result.max_abs_diff(&c), 0.0, "repaired bits must match the oracle");
+    }
+
+    let faults = server.fault_state().expect("armed");
+    assert_eq!(faults.injected().flips, 1, "the flip must actually have fired");
+    let metrics = server.shutdown();
+    let abft = *metrics.abft_stats();
+    assert!(abft.corrected >= 1, "the repair must be ledgered: {abft:?}");
+    assert_eq!(abft.uncorrectable, 0, "{abft:?}");
+}
+
+/// Verified factorization: a flip during the trailing-update GEMM of a
+/// blocked LU is caught (detect → typed `DataCorrupt`, never a wrong
+/// factor) and repaired (correct → factors reconstruct the input).
+#[test]
+fn served_lu_under_flip_detects_then_corrects() {
+    let mut rng = Pcg64::seed(822);
+    let a0 = MatrixF64::random_diag_dominant(192, &mut rng);
+
+    // Detect: the factorization must fail typed, not return bad factors.
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_workers(1)
+            .with_gemm_threads(4)
+            .with_verify(VerifyPolicy::Detect)
+            .with_faults(plan("flip@1:1")),
+    )
+    .expect("server start");
+    let err = server
+        .call(DlaRequest::LuFactor { a: a0.clone(), block: 48 })
+        .err()
+        .expect("the flipped factorization must fail");
+    assert!(matches!(err, DlaError::DataCorrupt { .. }), "got {err:?}");
+    assert_eq!(server.fault_state().expect("armed").injected().flips, 1);
+    // The same server, next request: factorization is healthy again.
+    let resp = server.call(DlaRequest::LuFactor { a: a0.clone(), block: 48 });
+    let DlaResponse::Lu { factors, .. } = resp.expect("post-flip factorization") else {
+        panic!("unexpected kind")
+    };
+    assert!(factors.reconstruction_error(&a0) < 1e-10);
+    server.shutdown();
+
+    // Correct: the same flip is absorbed and the factors are good.
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_workers(1)
+            .with_gemm_threads(4)
+            .with_verify(VerifyPolicy::Correct)
+            .with_faults(plan("flip@1:1")),
+    )
+    .expect("server start");
+    let resp = server
+        .call(DlaRequest::LuFactor { a: a0.clone(), block: 48 })
+        .expect("correct mode must absorb the flip");
+    let DlaResponse::Lu { factors, .. } = resp else { panic!("unexpected kind") };
+    assert!(factors.reconstruction_error(&a0) < 1e-10);
+    assert_eq!(server.fault_state().expect("armed").injected().flips, 1);
+    let metrics = server.shutdown();
+    assert!(metrics.abft_stats().corrected >= 1, "{:?}", metrics.abft_stats());
+}
+
+/// Cholesky runs its panel re-verification without false positives and
+/// stays bitwise identical to the unverified path.
+#[test]
+fn served_cholesky_verifies_clean() {
+    let spd = |s: usize, rng: &mut Pcg64| {
+        let m = MatrixF64::random(s, s, rng);
+        let mt = m.transposed();
+        let mut a = MatrixF64::zeros(s, s);
+        dla_codesign::gemm::gemm_reference(1.0, m.view(), mt.view(), 0.0, &mut a.view_mut());
+        for i in 0..s {
+            a[(i, i)] += s as f64;
+        }
+        a
+    };
+    let mut rng = Pcg64::seed(823);
+    let a0 = spd(160, &mut rng);
+
+    let run = |verify: Option<VerifyPolicy>| {
+        // Pin an empty plan and an explicit policy so the CI `sdc` leg's
+        // env knobs cannot reach this drill.
+        let mut cfg = ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_workers(1)
+            .with_gemm_threads(4)
+            .with_faults(FaultPlan::default());
+        if verify.is_none() {
+            cfg = cfg.with_verify(VerifyPolicy::Off);
+        }
+        if let Some(v) = verify {
+            cfg = cfg.with_verify(v);
+        }
+        let server = CoordinatorServer::start(cfg).expect("server start");
+        let resp = server
+            .call(DlaRequest::Cholesky { a: a0.clone(), block: 40 })
+            .expect("SPD factorization succeeds");
+        let DlaResponse::Matrix { result, .. } = resp else { panic!("unexpected kind") };
+        let metrics = server.shutdown();
+        (result, *metrics.abft_stats())
+    };
+
+    let (plain, _) = run(None);
+    let (checked, abft) = run(Some(VerifyPolicy::Detect));
+    assert_eq!(checked.max_abs_diff(&plain), 0.0, "verified Cholesky must not drift");
+    assert!(abft.verified_blocks >= 1, "panels must actually be verified: {abft:?}");
+    assert_eq!(abft.detected, 0, "no fault, no detection: {abft:?}");
+}
+
+/// The CI `sdc` leg's contract, adaptive to the environment: a server
+/// configured purely from `DLA_VERIFY`/`DLA_FAULTS` answers every GEMM
+/// with either the oracle's exact bits or a typed transient error —
+/// never a silently wrong matrix. Under the plain tier-1 leg (no env)
+/// this degenerates to "everything is Ok and bitwise exact".
+#[test]
+fn env_driven_serving_never_returns_silently_wrong_bits() {
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined).with_workers(1).with_gemm_threads(4),
+    )
+    .expect("server start");
+
+    let env_faults = std::env::var("DLA_FAULTS").is_ok();
+    let mut rng = Pcg64::seed(824);
+    let mut failures = 0usize;
+    let n = 5;
+    for _ in 0..n {
+        let a = MatrixF64::random(192, 144, &mut rng);
+        let b = MatrixF64::random(144, 160, &mut rng);
+        let c0 = MatrixF64::random(192, 160, &mut rng);
+        match server.call(DlaRequest::Gemm {
+            alpha: 1.0,
+            a: a.clone(),
+            b: b.clone(),
+            beta: 1.0,
+            c: c0.clone(),
+        }) {
+            Ok(DlaResponse::Matrix { result, .. }) => {
+                let mut oracle = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+                let mut c = c0.clone();
+                oracle.gemm(1.0, a.view(), b.view(), 1.0, &mut c.view_mut());
+                assert_eq!(result.max_abs_diff(&c), 0.0, "Ok answers must be exact");
+            }
+            Ok(_) => panic!("unexpected response kind"),
+            Err(e) => {
+                assert!(e.is_transient(), "only typed transient failures allowed, got {e:?}");
+                failures += 1;
+            }
+        }
+    }
+    if !env_faults {
+        assert_eq!(failures, 0, "no armed fault may fail a request");
+    }
+    server.shutdown();
+}
