@@ -38,17 +38,26 @@
 //!    Detect mode is bitwise identical to plain when no fault fires,
 //!    so the delta is pure checksum work (target <= 10%). Appended to
 //!    the same `BENCH_gemm.json`.
+//! 10. **Fused lookahead vs tile-DAG scheduler** — the same blocked LU
+//!     and Cholesky sweep under the fused split-team pipeline vs the
+//!     dataflow drain (`SchedPolicy::Dag`: work-stealing deques on the
+//!     same persistent pool, no stop-the-world rejoins). The per-phase
+//!     rejoin-idle deltas (panel/update/queue-stall rank-ms — zero by
+//!     construction under the DAG) and the steal-side counters
+//!     (executed tasks, steals, failed probes, deque high-water) show
+//!     where the dataflow drain spends the recovered wait time.
+//!     Appended to the same `BENCH_gemm.json`.
 use dla_codesign::arch::detect_host;
 use dla_codesign::coordinator::{BatchPolicy, CoordinatorServer, DlaRequest, ServerConfig};
 use dla_codesign::bench::{BenchGroup, JsonBench};
 use dla_codesign::gemm::microkernel::for_shape;
 use dla_codesign::gemm::parallel::{gemm_parallel, gemm_parallel_spawning};
 use dla_codesign::gemm::{
-    gemm_blocked, ConfigMode, GemmEngine, Lookahead, ParallelLoop, ThreadPlan, VerifyPolicy,
-    Workspace, AUTO_PANEL_WORKERS,
+    gemm_blocked, gemm_reference, ConfigMode, GemmEngine, Lookahead, ParallelLoop, SchedPolicy,
+    ThreadPlan, VerifyPolicy, Workspace, AUTO_PANEL_WORKERS,
 };
 use dla_codesign::lapack::refine::{lu_solve_f64, lu_solve_mixed, RefineOptions};
-use dla_codesign::lapack::{getf2, lu_blocked, lu_flops};
+use dla_codesign::lapack::{cholesky_blocked, getf2, lu_blocked, lu_flops};
 use dla_codesign::model::ccp::GemmConfig;
 use dla_codesign::model::{refined_ccp, Ccp, GemmDims, MicroKernel};
 use dla_codesign::runtime::pool::WorkerPool;
@@ -637,6 +646,94 @@ fn main() {
         );
     }
     g9.finish("bench_ablation_abft");
+
+    // --- 10. fused lookahead vs tile-DAG dataflow scheduler ------------
+    // The same blocked LU and Cholesky sweep under the two schedulers on
+    // the same persistent pool. The lookahead arm pays its fused-rejoin
+    // waits in the per-phase buckets (panel/update idle, queue stalls);
+    // the DAG arm has no rejoin at all — its phase buckets stay zero by
+    // construction and the steal counters show how the deques kept the
+    // ranks fed instead. Results are bitwise identical between arms
+    // (tests/dag.rs), so the delta is pure scheduling.
+    println!("=== ablation 10: fused lookahead vs tile-DAG scheduler (x{threads}, b={lu_block}) ===");
+    let mut g10 = BenchGroup::new("lookahead vs tile-DAG factorizations");
+    let sched_arms: [(&str, SchedPolicy); 2] =
+        [("lookahead", SchedPolicy::Lookahead), ("dag", SchedPolicy::Dag)];
+    for &s in &lu_sizes {
+        let mut rng10 = Pcg64::seed(s as u64 ^ 0xda6);
+        let a0 = MatrixF64::random_diag_dominant(s, &mut rng10);
+        // SPD input for the Cholesky arm: M Mᵀ + s I.
+        let spd = {
+            let m = MatrixF64::random(s, s, &mut rng10);
+            let mt = m.transposed();
+            let mut sym = MatrixF64::zeros(s, s);
+            gemm_reference(1.0, m.view(), mt.view(), 0.0, &mut sym.view_mut());
+            for i in 0..s {
+                sym[(i, i)] += s as f64;
+            }
+            sym
+        };
+        for (label, sched) in sched_arms {
+            let mut eng = GemmEngine::new(arch.clone(), ConfigMode::Refined)
+                .with_plan(ThreadPlan { threads, target: ParallelLoop::G4 })
+                .with_lookahead(Lookahead { depth: 1, panel_workers: (threads / 8).max(1) })
+                .with_sched(sched);
+            let d = |x: u64, y: u64| x.saturating_sub(y) as f64 / 1e6;
+            for (kind, flops) in [("lu", lu_flops(s)), ("chol", (s * s * s) as f64 / 3.0)] {
+                let before = eng.pool().map(|p| p.stats()).unwrap_or_default();
+                let case = g10
+                    .case(&format!("{kind} {s} b={lu_block} {label} x{threads}"), flops, || {
+                        match kind {
+                            "lu" => {
+                                let mut m = a0.clone();
+                                lu_blocked(&mut m, lu_block, &mut eng).expect("diag-dominant LU");
+                            }
+                            _ => {
+                                let mut m = spd.clone();
+                                cholesky_blocked(&mut m, lu_block, &mut eng).expect("SPD Cholesky");
+                            }
+                        }
+                    })
+                    .clone();
+                let after = eng.pool().map(|p| p.stats()).unwrap_or_default();
+                j.entry(
+                    &format!("sched_{kind}_n{s}_{label}"),
+                    &[
+                        ("threads", threads as f64),
+                        ("block", lu_block as f64),
+                        ("dag", if matches!(sched, SchedPolicy::Dag) { 1.0 } else { 0.0 }),
+                        ("mean_seconds", case.measurement.mean_s),
+                        ("min_seconds", case.measurement.min_s),
+                        ("gflops", case.gflops()),
+                        ("pool_jobs", after.jobs.saturating_sub(before.jobs) as f64),
+                        ("pool_leader_wait_ms", d(after.leader_wait_ns, before.leader_wait_ns)),
+                        ("pool_between_job_idle_ms", d(after.idle_ns, before.idle_ns)),
+                        ("panel_idle_rank_ms", d(after.panel_idle_ns, before.panel_idle_ns)),
+                        ("update_idle_rank_ms", d(after.update_idle_ns, before.update_idle_ns)),
+                        ("queue_stall_rank_ms", d(after.queue_stall_ns, before.queue_stall_ns)),
+                        ("dag_tasks", after.dag_tasks.saturating_sub(before.dag_tasks) as f64),
+                        ("dag_steals", after.dag_steals.saturating_sub(before.dag_steals) as f64),
+                        (
+                            "dag_steal_fails",
+                            after.dag_steal_fails.saturating_sub(before.dag_steal_fails) as f64,
+                        ),
+                        ("dag_deque_high_water", after.dag_deque_high_water as f64),
+                    ],
+                );
+                let rejoin_ms = d(after.panel_idle_ns, before.panel_idle_ns)
+                    + d(after.update_idle_ns, before.update_idle_ns)
+                    + d(after.queue_stall_ns, before.queue_stall_ns);
+                println!(
+                    "  {kind} n={s} {label}: {:.2} GFLOPS, rejoin idle {rejoin_ms:.3} rank-ms, \
+                     {} tasks / {} steals",
+                    case.gflops(),
+                    after.dag_tasks.saturating_sub(before.dag_tasks),
+                    after.dag_steals.saturating_sub(before.dag_steals),
+                );
+            }
+        }
+    }
+    g10.finish("bench_ablation_sched");
 
     match j.write("BENCH_gemm.json") {
         Ok(()) => println!(

@@ -538,6 +538,15 @@ impl Metrics {
                 p.idle_ns as f64 / 1e6,
                 poison,
             ));
+            // DAG scheduler accounting only shows up once a tile graph
+            // actually ran, so lookahead-only output is byte-identical.
+            if p.dag_tasks > 0 {
+                out.push_str(&format!(
+                    "dag scheduler: {} tasks, {} steals ({} failed probes), \
+                     deque high-water {}\n",
+                    p.dag_tasks, p.dag_steals, p.dag_steal_fails, p.dag_deque_high_water,
+                ));
+            }
             out.push_str(&format!(
                 "lookahead phases: panel-idle {:.3} ms, update-idle {:.3} ms, \
                  queue-stall {:.3} ms (rank-ms)\n",
@@ -667,7 +676,8 @@ impl Metrics {
             Some(p) => format!(
                 "{{\"jobs\":{},\"leader_wait_ns\":{},\"idle_ns\":{},\"panel_idle_ns\":{},\
                  \"update_idle_ns\":{},\"queue_stall_ns\":{},\"epochs_poisoned\":{},\
-                 \"recoveries\":{}}}",
+                 \"recoveries\":{},\"dag_tasks\":{},\"dag_steals\":{},\"dag_steal_fails\":{},\
+                 \"dag_deque_high_water\":{}}}",
                 p.jobs,
                 p.leader_wait_ns,
                 p.idle_ns,
@@ -676,6 +686,10 @@ impl Metrics {
                 p.queue_stall_ns,
                 p.epochs_poisoned,
                 p.recoveries,
+                p.dag_tasks,
+                p.dag_steals,
+                p.dag_steal_fails,
+                p.dag_deque_high_water,
             ),
         };
         let b = &self.batch;
@@ -841,6 +855,37 @@ mod tests {
         });
         let s = m.summary();
         assert!(s.contains("2 epochs poisoned (2 recovered)"), "{s}");
+    }
+
+    #[test]
+    fn dag_scheduler_counters_surface_only_when_nonzero() {
+        use crate::runtime::pool::PoolStats;
+        let mut m = Metrics::new();
+        m.set_pool_stats(PoolStats { jobs: 1, ..PoolStats::default() });
+        assert!(!m.summary().contains("dag scheduler"), "lookahead-only summary unchanged");
+        assert!(m.snapshot_json().contains("\"dag_tasks\":0"), "{}", m.snapshot_json());
+        m.set_pool_stats(PoolStats {
+            jobs: 2,
+            dag_tasks: 12,
+            dag_steals: 3,
+            dag_steal_fails: 5,
+            dag_deque_high_water: 4,
+            ..PoolStats::default()
+        });
+        let s = m.summary();
+        assert!(
+            s.contains("dag scheduler: 12 tasks, 3 steals (5 failed probes), deque high-water 4"),
+            "{s}"
+        );
+        let j = m.snapshot_json();
+        for frag in [
+            "\"dag_tasks\":12",
+            "\"dag_steals\":3",
+            "\"dag_steal_fails\":5",
+            "\"dag_deque_high_water\":4",
+        ] {
+            assert!(j.contains(frag), "{j}");
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use crate::lapack::LuFactors;
 use crate::model::GemmDims;
-use crate::util::{DlaError, MatrixF32, MatrixF64};
+use crate::util::{DlaError, DType, MatrixF32, MatrixF64};
 
 /// A DLA service request.
 ///
@@ -45,14 +45,25 @@ impl DlaRequest {
         }
     }
 
-    /// The GEMM problem shape, for requests that are **f64** GEMMs — the
-    /// batch scheduler's bucketing/admission key. `None` for
-    /// factorizations and for f32 GEMMs (the admission queue buckets one
-    /// dtype; f32 requests keep the solo path on the shared pool —
-    /// dtype-aware buckets are a ROADMAP follow-on).
+    /// The GEMM problem shape, for requests that are GEMMs of either
+    /// precision — half of the batch scheduler's bucketing/admission key
+    /// (the other half is [`Self::gemm_dtype`], so precisions never
+    /// share a bucket). `None` for factorizations, which always keep
+    /// the solo path.
     pub fn gemm_dims(&self) -> Option<GemmDims> {
         match self {
             DlaRequest::Gemm { a, b, .. } => Some(GemmDims::new(a.rows(), b.cols(), a.cols())),
+            DlaRequest::GemmF32 { a, b, .. } => Some(GemmDims::new(a.rows(), b.cols(), a.cols())),
+            _ => None,
+        }
+    }
+
+    /// The element type of a GEMM request — the dtype half of the batch
+    /// scheduler's bucket key. `None` for non-GEMM kinds.
+    pub fn gemm_dtype(&self) -> Option<DType> {
+        match self {
+            DlaRequest::Gemm { .. } => Some(DType::F64),
+            DlaRequest::GemmF32 { .. } => Some(DType::F32),
             _ => None,
         }
     }
@@ -345,7 +356,7 @@ mod tests {
     }
 
     #[test]
-    fn f32_and_mixed_kinds_bypass_the_batcher() {
+    fn f32_gemms_bucket_by_dtype_and_mixed_kinds_bypass_the_batcher() {
         let g32 = DlaRequest::GemmF32 {
             alpha: 1.0,
             a: MatrixF32::zeros(10, 20),
@@ -355,7 +366,12 @@ mod tests {
         };
         assert_eq!(g32.kind(), "gemm_f32");
         assert_eq!(g32.flops(), 2.0 * 10.0 * 30.0 * 20.0);
-        assert_eq!(g32.gemm_dims(), None, "f32 GEMMs keep the solo path");
+        assert_eq!(
+            g32.gemm_dims(),
+            Some(GemmDims::new(10, 30, 20)),
+            "f32 GEMMs are batchable; dtype keeps them in their own buckets"
+        );
+        assert_eq!(g32.gemm_dtype(), Some(DType::F32));
         assert!(g32.gemm_shape_consistent(), "well-formed f32 shapes are consistent");
         let bad32 = DlaRequest::GemmF32 {
             alpha: 1.0,
@@ -372,6 +388,7 @@ mod tests {
         };
         assert_eq!(mx.kind(), "mixed_lu");
         assert_eq!(mx.gemm_dims(), None, "factorization-class: bypasses the batcher");
+        assert_eq!(mx.gemm_dtype(), None);
         assert!(!mx.gemm_shape_consistent());
         assert!(mx.flops() > 0.0);
     }

@@ -23,8 +23,9 @@
 //!    [`crate::model::batchplan`] cost model says a full-team dispatch
 //!    would waste the machine (estimated single-core time below the
 //!    policy threshold, or a G4 grain too small to feed the team). The
-//!    queue **buckets by problem shape**; factorizations and large GEMMs
-//!    bypass the batcher entirely and keep the existing (lookahead)
+//!    queue **buckets by dtype and problem shape** (an f64 and an f32
+//!    GEMM of the same shape never coalesce); factorizations and large
+//!    GEMMs bypass the batcher entirely and keep the existing (lookahead)
 //!    path — the two schedulers compose on one shared pool. Parked
 //!    entries are bounded by `queue_depth` (preserving the channel's
 //!    backpressure); at the bound, requests are served solo. Requests
@@ -146,6 +147,7 @@ use crate::model::GemmDims;
 use crate::runtime::faults::{FaultPlan, FaultState};
 use crate::runtime::pool::WorkerPool;
 use crate::util::error::{panic_reason, DlaError};
+use crate::util::DType;
 
 use super::metrics::Metrics;
 use super::qos::{OverloadDetector, OverloadLevel, Priority, PushError, QosQueue, TierCounters};
@@ -382,9 +384,14 @@ struct Job {
     ctrl: Option<Arc<HandleCtrl>>,
 }
 
+/// The admission queue's bucket key: only same-dtype, same-shape GEMMs
+/// may coalesce into one fused dispatch.
+type BucketKey = (DType, GemmDims);
+
 /// One admitted request parked in the admission queue (always a
-/// `DlaRequest::Gemm` — admission guarantees it), with everything needed
-/// to execute and answer it.
+/// `DlaRequest::Gemm` or `DlaRequest::GemmF32`, matching its bucket's
+/// dtype — admission guarantees it), with everything needed to execute
+/// and answer it.
 struct PendingGemm {
     req: DlaRequest,
     tier: Priority,
@@ -401,7 +408,7 @@ struct Bucket {
 
 #[derive(Default)]
 struct QueueState {
-    buckets: HashMap<GemmDims, Bucket>,
+    buckets: HashMap<BucketKey, Bucket>,
     /// Entries across all buckets (the backpressure bound).
     pending: usize,
     /// Weighted-fair credits across bucket *classes* (a bucket's class
@@ -412,7 +419,7 @@ struct QueueState {
 }
 
 /// The admission queue of the batch scheduler: workers push admitted
-/// small GEMMs in (bucketed by shape), the batcher thread pulls whole
+/// small GEMMs in (bucketed by dtype + shape), the batcher thread pulls whole
 /// buckets out when they are worth dispatching. Total parked entries are
 /// bounded by `max_pending` so the admission queue cannot defeat the
 /// bounded request channel's backpressure — an over-limit request is
@@ -439,7 +446,7 @@ impl BatchQueue {
     /// serve it solo). The closed check matters when the server is
     /// dropped without `shutdown()`: the batcher may already be gone,
     /// and a parked entry would never be answered.
-    fn try_enqueue(&self, dims: GemmDims, entry: PendingGemm) -> Result<(), PendingGemm> {
+    fn try_enqueue(&self, key: BucketKey, entry: PendingGemm) -> Result<(), PendingGemm> {
         let wake = {
             let mut st = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             if st.closed || st.pending >= self.max_pending {
@@ -447,10 +454,10 @@ impl BatchQueue {
             }
             st.pending += 1;
             let first_at = entry.enqueued;
-            let created = !st.buckets.contains_key(&dims);
+            let created = !st.buckets.contains_key(&key);
             let bucket = st
                 .buckets
-                .entry(dims)
+                .entry(key)
                 .or_insert_with(|| Bucket { first_at, entries: Vec::new() });
             bucket.entries.push(entry);
             // Only a new bucket (fresh deadline) or a full one changes
@@ -483,8 +490,8 @@ impl BatchQueue {
         loop {
             let now = Instant::now();
             let mut eligible = [false; Priority::COUNT];
-            let mut ready: Vec<(GemmDims, Instant, usize)> = Vec::new();
-            for (&dims, b) in &st.buckets {
+            let mut ready: Vec<(BucketKey, Instant, usize)> = Vec::new();
+            for (&key, b) in &st.buckets {
                 let dispatchable = st.closed
                     || b.entries.len() >= self.policy.max_batch
                     || now.duration_since(b.first_at) >= self.policy.wait();
@@ -496,7 +503,7 @@ impl BatchQueue {
                         .min()
                         .unwrap_or(Priority::Background.index());
                     eligible[class] = true;
-                    ready.push((dims, b.first_at, class));
+                    ready.push((key, b.first_at, class));
                 }
             }
             if !ready.is_empty() {
@@ -509,8 +516,8 @@ impl BatchQueue {
                     // eligibility probe — fall back to oldest overall
                     // rather than stall the batcher.
                     .or_else(|| ready.iter().min_by_key(|r| r.1).map(|r| r.0));
-                if let Some(dims) = chosen {
-                    if let Some(bucket) = st.buckets.remove(&dims) {
+                if let Some(key) = chosen {
+                    if let Some(bucket) = st.buckets.remove(&key) {
                         st.pending -= bucket.entries.len();
                         return Some(bucket.entries);
                     }
@@ -582,24 +589,48 @@ fn batcher_loop(
         let t0 = Instant::now();
         let waits: Vec<u64> =
             entries.iter().map(|e| t0.duration_since(e.enqueued).as_nanos() as u64).collect();
-        let dispatch = catch_unwind(AssertUnwindSafe(|| {
-            let mut items: Vec<GemmBatchItem<'_>> = entries
-                .iter_mut()
-                .map(|e| {
-                    let DlaRequest::Gemm { alpha, a, b, beta, c } = &mut e.req else {
-                        unreachable!("only Gemm requests are admitted");
-                    };
-                    GemmBatchItem {
-                        alpha: *alpha,
-                        a: a.view(),
-                        b: b.view(),
-                        beta: *beta,
-                        c: c.view_mut(),
-                    }
-                })
-                .collect();
-            co.engine.gemm_batch(&mut items)
-        }));
+        // A bucket's key carries the dtype, so a batch is uniformly f64
+        // or uniformly f32 — one fused dispatch per precision path.
+        let f32_batch = entries.first().is_some_and(|e| matches!(e.req, DlaRequest::GemmF32 { .. }));
+        let dispatch = if f32_batch {
+            catch_unwind(AssertUnwindSafe(|| {
+                let mut items: Vec<GemmBatchItem<'_, f32>> = entries
+                    .iter_mut()
+                    .map(|e| {
+                        let DlaRequest::GemmF32 { alpha, a, b, beta, c } = &mut e.req else {
+                            unreachable!("dtype-keyed buckets admit one precision");
+                        };
+                        GemmBatchItem {
+                            alpha: *alpha,
+                            a: a.view(),
+                            b: b.view(),
+                            beta: *beta,
+                            c: c.view_mut(),
+                        }
+                    })
+                    .collect();
+                co.engine.gemm_batch_t::<f32>(&mut items)
+            }))
+        } else {
+            catch_unwind(AssertUnwindSafe(|| {
+                let mut items: Vec<GemmBatchItem<'_>> = entries
+                    .iter_mut()
+                    .map(|e| {
+                        let DlaRequest::Gemm { alpha, a, b, beta, c } = &mut e.req else {
+                            unreachable!("dtype-keyed buckets admit one precision");
+                        };
+                        GemmBatchItem {
+                            alpha: *alpha,
+                            a: a.view(),
+                            b: b.view(),
+                            beta: *beta,
+                            c: c.view_mut(),
+                        }
+                    })
+                    .collect();
+                co.engine.gemm_batch(&mut items)
+            }))
+        };
         let configs = match dispatch {
             Ok(configs) => configs,
             Err(payload) => {
@@ -619,18 +650,25 @@ fn batcher_loop(
         co.metrics.record_batch_dispatch(entries.len(), &waits);
         for (e, cfg) in entries.into_iter().zip(configs) {
             let flops = e.req.flops();
-            let DlaRequest::Gemm { c, .. } = e.req else {
-                unreachable!("only Gemm requests are admitted");
-            };
+            let kind = e.req.kind();
             // Every member of the fused epoch observed the epoch's wall
             // time as its service latency.
-            co.metrics.record("gemm", dt, flops);
+            co.metrics.record(kind, dt, flops);
             tiers.add_completed(e.tier);
-            let _ = e.reply.send(Ok(DlaResponse::Matrix {
-                result: c,
-                config: Some(cfg.to_string()),
-                seconds: dt,
-            }));
+            let resp = match e.req {
+                DlaRequest::Gemm { c, .. } => DlaResponse::Matrix {
+                    result: c,
+                    config: Some(cfg.to_string()),
+                    seconds: dt,
+                },
+                DlaRequest::GemmF32 { c, .. } => DlaResponse::MatrixF32 {
+                    result: c,
+                    config: Some(cfg.to_string()),
+                    seconds: dt,
+                },
+                _ => unreachable!("only GEMM requests are admitted"),
+            };
+            let _ = e.reply.send(Ok(resp));
         }
         co.snapshot_pool_stats();
     }
@@ -1005,23 +1043,33 @@ impl CoordinatorServer {
                             continue;
                         }
                         // Admission: route model-judged-small,
-                        // well-formed GEMMs into the batcher;
-                        // everything else (factorizations, large
-                        // GEMMs, deadline-tight requests) keeps the
-                        // solo path.
-                        let consistent_dims =
-                            req.gemm_dims().filter(|_| req.gemm_shape_consistent());
-                        if let (Some(q), Some(dims)) = (&batch, consistent_dims) {
-                            let gemm_cfg = co.engine.plan_config(dims);
+                        // well-formed GEMMs (either precision) into
+                        // the batcher; everything else
+                        // (factorizations, large GEMMs,
+                        // deadline-tight requests) keeps the solo
+                        // path. The bucket key pairs dtype with shape
+                        // so precisions never coalesce, and each
+                        // precision is judged by its own config and
+                        // rate model.
+                        let consistent_key = req
+                            .gemm_dtype()
+                            .zip(req.gemm_dims())
+                            .filter(|_| req.gemm_shape_consistent());
+                        if let (Some(q), Some((dt, dims))) = (&batch, consistent_key) {
+                            let gemm_cfg = match dt {
+                                DType::F64 => co.engine.plan_config(dims),
+                                DType::F32 => co.engine.plan_config_t::<f32>(dims),
+                            };
                             let remaining =
                                 deadline.map(|d| d.saturating_duration_since(Instant::now()));
                             let admit = q.policy.fits_deadline(remaining)
-                                && planner.is_batchable(
+                                && planner.is_batchable_elem(
                                     &co.engine.arch,
                                     gemm_cfg,
                                     dims,
                                     gemm_threads,
                                     &q.policy,
+                                    dt.size_bytes(),
                                 );
                             if admit {
                                 let entry = PendingGemm {
@@ -1031,20 +1079,32 @@ impl CoordinatorServer {
                                     enqueued: Instant::now(),
                                     deadline,
                                 };
-                                if let Err(e) = q.try_enqueue(dims, entry) {
+                                if let Err(e) = q.try_enqueue((dt, dims), entry) {
                                     // Queue at its backpressure bound
                                     // (or closed): serve solo.
-                                    let analytic =
-                                        planner.estimate_us(&co.engine.arch, gemm_cfg, dims);
+                                    let analytic = planner.estimate_us_elem(
+                                        &co.engine.arch,
+                                        gemm_cfg,
+                                        dims,
+                                        dt.size_bytes(),
+                                    );
                                     ctx.serve_one(&mut co, e.tier, analytic, e.req, &e.reply);
                                 }
                                 continue;
                             }
                         }
-                        let analytic_us = match consistent_dims {
-                            Some(dims) => {
-                                let gemm_cfg = co.engine.plan_config(dims);
-                                planner.estimate_us(&co.engine.arch, gemm_cfg, dims)
+                        let analytic_us = match consistent_key {
+                            Some((dt, dims)) => {
+                                let gemm_cfg = match dt {
+                                    DType::F64 => co.engine.plan_config(dims),
+                                    DType::F32 => co.engine.plan_config_t::<f32>(dims),
+                                };
+                                planner.estimate_us_elem(
+                                    &co.engine.arch,
+                                    gemm_cfg,
+                                    dims,
+                                    dt.size_bytes(),
+                                )
                             }
                             None => 0,
                         };
@@ -1668,12 +1728,67 @@ mod tests {
     }
 
     #[test]
+    fn batching_server_coalesces_f32_gemms_in_their_own_buckets() {
+        use crate::util::MatrixF32;
+        // Same shape in both precisions with admit_all: the dtype-keyed
+        // buckets must coalesce each precision separately — four f32
+        // requests fill one f32 bucket (full-trigger dispatch through
+        // gemm_batch_t::<f32>) while the four same-shape f64 requests
+        // fill their own. A shape-only key would mix them and the fused
+        // dispatch would reinterpret operands of the wrong width.
+        let server = CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined)
+                .with_workers(2)
+                .with_gemm_threads(3)
+                .with_batching(
+                    BatchPolicy::default().with_max_batch(4).with_wait_us(5_000_000).admit_all(),
+                ),
+        )
+        .unwrap();
+        let mut rng = Pcg64::seed(77);
+        let mut f32_jobs = Vec::new();
+        let mut f64_jobs = Vec::new();
+        for _ in 0..4 {
+            let a = MatrixF32::random(24, 12, &mut rng);
+            let b = MatrixF32::random(12, 24, &mut rng);
+            let mut expect = MatrixF32::zeros(24, 24);
+            crate::gemm::gemm_reference(1.0f32, a.view(), b.view(), 0.0f32, &mut expect.view_mut());
+            let rx = server
+                .submit(DlaRequest::GemmF32 {
+                    alpha: 1.0,
+                    a,
+                    b,
+                    beta: 0.0,
+                    c: MatrixF32::zeros(24, 24),
+                })
+                .unwrap();
+            f32_jobs.push((rx, expect));
+            f64_jobs.push(server.submit(gemm_req(&mut rng, 24, 24, 12)).unwrap());
+        }
+        let metrics = server.shutdown();
+        for (rx, expect) in f32_jobs {
+            let DlaResponse::MatrixF32 { result, .. } = rx.recv().unwrap().unwrap() else {
+                panic!("f32 request must answer with an f32 matrix")
+            };
+            assert!(result.max_abs_diff(&expect) < 1e-3);
+        }
+        for rx in f64_jobs {
+            rx.recv().unwrap().unwrap();
+        }
+        assert_eq!(metrics.count("gemm_f32"), 4);
+        assert_eq!(metrics.count("gemm"), 4);
+        let b = metrics.batch_stats();
+        assert_eq!(b.total_requests(), 8, "both precisions go through the batcher: {b:?}");
+        assert!(b.batches >= 2, "each precision dispatches as its own bucket: {b:?}");
+    }
+
+    #[test]
     fn batch_queue_bounds_pending_entries() {
         // The admission queue must preserve the server's backpressure: at
         // the bound, try_enqueue hands the entry back (the worker serves
         // it solo); draining a bucket frees capacity.
         let q = BatchQueue::new(BatchPolicy::default().with_max_batch(2), 2);
-        let dims = GemmDims::new(8, 8, 8);
+        let dims = (DType::F64, GemmDims::new(8, 8, 8));
         let entry = || PendingGemm {
             req: DlaRequest::Gemm {
                 alpha: 1.0,
@@ -1785,8 +1900,8 @@ mod tests {
             enqueued: Instant::now(),
             deadline: None,
         };
-        let bg_dims = GemmDims::new(8, 8, 8);
-        let it_dims = GemmDims::new(8, 8, 16);
+        let bg_dims = (DType::F64, GemmDims::new(8, 8, 8));
+        let it_dims = (DType::F64, GemmDims::new(8, 8, 16));
         assert!(q.try_enqueue(bg_dims, entry(Priority::Background)).is_ok());
         thread::sleep(Duration::from_millis(2));
         assert!(q.try_enqueue(it_dims, entry(Priority::Interactive)).is_ok());

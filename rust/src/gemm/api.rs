@@ -122,6 +122,44 @@ pub struct Lookahead {
 /// choose `t_p` per iteration.
 pub const AUTO_PANEL_WORKERS: usize = 0;
 
+/// Which execution model the blocked factorizations (LU / Cholesky / QR)
+/// run on this engine:
+///
+/// - [`SchedPolicy::Lookahead`] (the default) — the fused fork-join
+///   pipeline of PRs 2–3: per-iteration broadcast jobs with split
+///   sub-teams and the deep work queue when [`Lookahead`] is enabled.
+/// - [`SchedPolicy::Dag`] — the tile-DAG dataflow scheduler
+///   (`runtime/dag.rs`): the factorization is decomposed into b×b tile
+///   tasks with explicit dependencies and drained by the pool ranks
+///   through work-stealing deques, with **no** per-iteration barriers.
+///
+/// Resolution mirrors [`Lookahead`]: an explicitly pinned policy always
+/// wins, then the `DLA_SCHED` environment override (`dag` /
+/// `lookahead`), then the default. Both paths produce bitwise-identical
+/// factors (the tile decompositions replay the serialized baseline's
+/// per-column op order under configs planned on the full trailing dims),
+/// so flipping the knob is a pure scheduling ablation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Fork-join epochs with the (optional) fused lookahead pipeline.
+    #[default]
+    Lookahead,
+    /// Tile-DAG dataflow over work-stealing deques.
+    Dag,
+}
+
+impl SchedPolicy {
+    /// Environment override: `DLA_SCHED=dag` or `DLA_SCHED=lookahead`
+    /// (case-insensitive); unset, empty or unrecognized is ignored.
+    pub fn from_env() -> Option<Self> {
+        match std::env::var("DLA_SCHED").ok().as_deref().map(str::trim) {
+            Some(v) if v.eq_ignore_ascii_case("dag") => Some(Self::Dag),
+            Some(v) if v.eq_ignore_ascii_case("lookahead") => Some(Self::Lookahead),
+            _ => None,
+        }
+    }
+}
+
 impl Lookahead {
     /// Lookahead off: the factorizations serialize panel and update.
     pub fn disabled() -> Self {
@@ -267,6 +305,10 @@ pub struct GemmEngine {
     /// environment override, else the heuristic for the plan width
     /// (resolved by [`Self::lookahead`]).
     lookahead: Option<Lookahead>,
+    /// Explicitly pinned factorization scheduler (always wins); `None` =
+    /// the `DLA_SCHED` environment override, else the default
+    /// (resolved by [`Self::sched`]).
+    sched: Option<SchedPolicy>,
     /// Host kernel set for the f32 path (never restricted by
     /// [`Self::with_kernels`], which pins the f64 family for the
     /// experiment harness).
@@ -328,6 +370,7 @@ impl GemmEngine {
             workspace: Workspace::new(),
             pool: None,
             lookahead: None,
+            sched: None,
             verify: VerifyPolicy::Off,
             abft: Arc::new(AbftStats::new()),
             config_cache: RefCell::new(HashMap::new()),
@@ -397,6 +440,31 @@ impl GemmEngine {
             panic!("invalid lookahead policy: {e}");
         }
         self.lookahead = Some(la);
+    }
+
+    /// Pin the factorization scheduler ([`SchedPolicy`]); builder form.
+    /// A pinned policy wins over the `DLA_SCHED` environment override,
+    /// so an ablation arm stays on its scheduler regardless of stray
+    /// environment.
+    pub fn with_sched(mut self, sched: SchedPolicy) -> Self {
+        self.set_sched(sched);
+        self
+    }
+
+    /// Pin the factorization scheduler in place.
+    pub fn set_sched(&mut self, sched: SchedPolicy) {
+        self.sched = Some(sched);
+    }
+
+    /// Resolve the effective factorization scheduler: pinned policy,
+    /// then the `DLA_SCHED` environment override, then the default
+    /// ([`SchedPolicy::Lookahead`]) — the same resolution order as
+    /// [`Self::lookahead`].
+    pub fn sched(&self) -> SchedPolicy {
+        if let Some(s) = self.sched {
+            return s;
+        }
+        SchedPolicy::from_env().unwrap_or_default()
     }
 
     /// Pin the ABFT verification policy; builder form.
@@ -628,6 +696,22 @@ impl GemmEngine {
     pub fn plan_kernel_t<E: GemmElem>(&self, dims: GemmDims) -> (GemmConfig, MicroKernelImpl<E>) {
         let cfg = self.plan_config_t::<E>(dims);
         (cfg, self.implementation_for_t::<E>(cfg.mk))
+    }
+
+    /// Model-selected tile size for the blocked/DAG factorizations of an
+    /// order-`s` problem at element type `E`: the analytic scorer's
+    /// cache-sized k-block (`kc`) for the square `s` shape. Every
+    /// trailing tile GEMM of a blocked factorization has k-dimension
+    /// equal to the tile width, so tiles of width `kc` stream through
+    /// the cache exactly as the model planned — and the selection is
+    /// dtype-aware (f32 configs are wider). The factorization drivers
+    /// use this when called with the `block == 0` sentinel.
+    pub fn dag_tile_size_t<E: GemmElem>(&self, s: usize) -> usize {
+        if s == 0 {
+            return 1;
+        }
+        let cfg = self.plan_config_t::<E>(GemmDims::new(s, s, s));
+        cfg.ccp.kc.clamp(1, s)
     }
 
     /// The panel sub-team width `t_p` for one fused iteration

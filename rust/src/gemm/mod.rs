@@ -23,7 +23,7 @@ pub mod parallel;
 
 pub use abft::{AbftCounters, AbftPhase, AbftStats, VerifyPolicy};
 pub use api::{
-    ConfigCacheStats, ConfigMode, GemmBatchItem, GemmElem, GemmEngine, Lookahead,
+    ConfigCacheStats, ConfigMode, GemmBatchItem, GemmElem, GemmEngine, Lookahead, SchedPolicy,
     AUTO_PANEL_WORKERS,
 };
 pub use blocked::{gemm_blocked, Workspace};

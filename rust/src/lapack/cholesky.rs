@@ -23,10 +23,12 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::gemm::abft::{lower_panel_colsums, verify_chol_panel, AbftPhase, AbftStats};
-use crate::gemm::{gemm_blocked, GemmEngine, Workspace};
+use crate::gemm::{gemm_blocked, GemmElem, GemmEngine, MicroKernelImpl, SchedPolicy, Workspace};
 use crate::model::GemmDims;
+use crate::runtime::dag::{execute_rank, execute_serial, GraphBuilder};
 use crate::runtime::pool::SubTeam;
-use crate::util::matrix::{MatView, MatrixF64, MatViewMut};
+use crate::util::elem::Elem;
+use crate::util::matrix::{Matrix, MatrixF64, MatView, MatViewMut};
 
 use super::pfact::{SharedPanel, NO_ERR};
 use super::trsm::trsm_right_upper;
@@ -35,6 +37,14 @@ use super::trsm::trsm_right_upper;
 /// triangle left untouched). Returns `Err(j)` when the matrix is not
 /// positive definite at step j.
 pub fn potf2(a: &mut MatViewMut<'_>) -> Result<(), usize> {
+    potf2_t::<f64>(a)
+}
+
+/// [`potf2`] per element type. The square root goes through f64
+/// (`E::from_f64(d.to_f64().sqrt())`), which is the identity
+/// composition for `E = f64` — the historical path bit for bit — and a
+/// correctly-converted f64 sqrt for f32.
+pub fn potf2_t<E: Elem>(a: &mut MatViewMut<'_, E>) -> Result<(), usize> {
     let q = a.rows;
     assert_eq!(a.cols, q);
     for j in 0..q {
@@ -43,12 +53,12 @@ pub fn potf2(a: &mut MatViewMut<'_>) -> Result<(), usize> {
             let l = a.at(j, t);
             d -= l * l;
         }
-        if d <= 0.0 {
+        if d.to_f64() <= 0.0 {
             return Err(j);
         }
-        let d = d.sqrt();
+        let d = E::from_f64(d.to_f64().sqrt());
         a.set(j, j, d);
-        let inv = 1.0 / d;
+        let inv = E::ONE / d;
         for i in j + 1..q {
             let mut v = a.at(i, j);
             for t in 0..j {
@@ -64,7 +74,7 @@ pub fn potf2(a: &mut MatViewMut<'_>) -> Result<(), usize> {
 /// (f64-accumulated, overhead-accounted). Taken before `potf2`; only
 /// entries `i >= j` are read — the strict upper triangle still holds
 /// untouched symmetric input and stays out of the checksum entirely.
-fn chol_panel_pre_sums(panel: MatView<'_>, stats: &AbftStats) -> (Vec<f64>, Vec<f64>) {
+fn chol_panel_pre_sums<E: Elem>(panel: MatView<'_, E>, stats: &AbftStats) -> (Vec<f64>, Vec<f64>) {
     let t0 = std::time::Instant::now();
     let sums = lower_panel_colsums(panel);
     stats.add_overhead(t0.elapsed());
@@ -77,8 +87,8 @@ fn chol_panel_pre_sums(panel: MatView<'_>, stats: &AbftStats) -> (Vec<f64>, Vec<
 /// checked by [`verify_chol_panel`]. A mismatch is recorded on the
 /// engine's [`AbftStats`]; the caller surfaces it as
 /// `DlaError::DataCorrupt { phase: "chol-panel", .. }`.
-fn chol_panel_check(
-    panel: MatView<'_>,
+fn chol_panel_check<E: Elem>(
+    panel: MatView<'_, E>,
     pre: &(Vec<f64>, Vec<f64>),
     origin: (usize, usize),
     stats: &AbftStats,
@@ -101,20 +111,39 @@ fn chol_panel_check(
 /// With the engine's lookahead enabled the SYRK sweep overlaps the next
 /// panel's `potf2` + TRSM (module docs); results are bitwise identical.
 pub fn cholesky_blocked(a: &mut MatrixF64, block: usize, engine: &mut GemmEngine) -> Result<(), usize> {
-    if engine.lookahead().enabled() {
-        cholesky_blocked_lookahead(a, block, engine)
-    } else {
-        cholesky_blocked_baseline(a, block, engine)
+    let block = if block == 0 { engine.dag_tile_size_t::<f64>(a.rows()) } else { block };
+    match engine.sched() {
+        SchedPolicy::Dag => cholesky_blocked_dag::<f64>(a, block, engine),
+        SchedPolicy::Lookahead if engine.lookahead().enabled() => {
+            cholesky_blocked_lookahead(a, block, engine)
+        }
+        SchedPolicy::Lookahead => cholesky_blocked_baseline(a, block, engine),
     }
 }
 
-fn cholesky_blocked_baseline(
-    a: &mut MatrixF64,
+/// The dtype-generic blocked Cholesky behind [`cholesky_blocked`]: DAG
+/// or serialized baseline. The deep-lookahead pipeline stays f64-only;
+/// f64 callers reach it through [`cholesky_blocked`].
+pub fn cholesky_blocked_t<E: GemmElem>(
+    a: &mut Matrix<E>,
+    block: usize,
+    engine: &mut GemmEngine,
+) -> Result<(), usize> {
+    let block = if block == 0 { engine.dag_tile_size_t::<E>(a.rows()) } else { block };
+    match engine.sched() {
+        SchedPolicy::Dag => cholesky_blocked_dag(a, block, engine),
+        SchedPolicy::Lookahead => cholesky_blocked_baseline(a, block, engine),
+    }
+}
+
+fn cholesky_blocked_baseline<E: GemmElem>(
+    a: &mut Matrix<E>,
     block: usize,
     engine: &mut GemmEngine,
 ) -> Result<(), usize> {
     let s = a.rows();
     assert_eq!(a.cols(), s);
+    assert!(block >= 1);
     let verify = engine.verify().enabled();
     let mut k = 0;
     while k < s {
@@ -123,7 +152,7 @@ fn cholesky_blocked_baseline(
         // A11 = L11 L11^T
         {
             let mut a11 = a.sub_mut(k, k, b, b);
-            potf2(&mut a11).map_err(|j| k + j)?;
+            potf2_t(&mut a11).map_err(|j| k + j)?;
         }
         if k + b < s {
             let rest = s - k - b;
@@ -138,7 +167,7 @@ fn cholesky_blocked_baseline(
                 let a21 = a.sub(k + b, k, rest, b).to_owned_matrix();
                 let a21t = a21.transposed();
                 let mut a22 = a.sub_mut(k + b, k + b, rest, rest);
-                engine.gemm(-1.0, a21.view(), a21t.view(), 1.0, &mut a22);
+                engine.gemm_t(E::from_f64(-1.0), a21.view(), a21t.view(), E::ONE, &mut a22);
             }
         }
         // Re-verify once the whole panel (potf2 + TRSM) is in place.
@@ -150,14 +179,157 @@ fn cholesky_blocked_baseline(
     Ok(())
 }
 
+/// One node of the Cholesky tile DAG (see [`cholesky_blocked_dag`]).
+#[derive(Clone, Copy)]
+enum CholTask {
+    /// ABFT pre-sums, `potf2` + panel TRSM, ABFT re-check on panel `t`.
+    Panel { t: usize },
+    /// Step-`t` SYRK slice on trailing block-column `j > t`.
+    Update { t: usize, j: usize },
+}
+
+/// The tile-DAG dataflow pipeline (`DLA_SCHED=dag`): `Panel(t)` and
+/// `Update(t, j)` tasks with edges `Panel(t) <- Update(t-1, t)`,
+/// `Update(t, j) <- Panel(t)` and `<- Update(t-1, j)`, drained by the
+/// pool ranks through work-stealing deques in one broadcast job
+/// ([`crate::runtime::dag`]). Unlike LU there is no pivoting, so
+/// nothing rewrites a factored panel: `Update(t, j)` reads `A21` of
+/// step `t` zero-copy from the live matrix (stable after `Panel(t)`)
+/// and needs no snapshots. Each update runs the step's GEMM slice under
+/// the config planned on the **full** trailing dims, so the factor is
+/// bitwise identical to the serialized baseline (`tests/dag.rs`).
+fn cholesky_blocked_dag<E: GemmElem>(
+    a: &mut Matrix<E>,
+    block: usize,
+    engine: &mut GemmEngine,
+) -> Result<(), usize> {
+    let s = a.rows();
+    assert_eq!(a.cols(), s);
+    assert!(block >= 1);
+    let panels = s.div_ceil(block);
+    let col_of = |t: usize| (t * block).min(s);
+    let width_of = |t: usize| col_of(t + 1) - col_of(t);
+    let abft_on = engine.verify().enabled();
+    let abft_stats = std::sync::Arc::clone(engine.abft_stats());
+    // Per-step SYRK configs on the full trailing dims (bitwise doctrine;
+    // pre-planned — the engine's config memo is not Sync).
+    let plans: Vec<(crate::model::ccp::GemmConfig, MicroKernelImpl<E>)> = (0..panels)
+        .map(|t| {
+            let rest = s - col_of(t + 1);
+            let dims = if rest > 0 {
+                GemmDims::new(rest, rest, width_of(t))
+            } else {
+                GemmDims::new(1, 1, 1) // last panel: never used
+            };
+            engine.plan_kernel_t::<E>(dims)
+        })
+        .collect();
+    let err = AtomicUsize::new(NO_ERR);
+    // --- Static task graph -------------------------------------------
+    let mut gb = GraphBuilder::new();
+    let mut tasks: Vec<CholTask> = Vec::new();
+    let mut update_id: Vec<Vec<usize>> = vec![Vec::new(); panels]; // [t][j - t - 1]
+    for t in 0..panels {
+        let pid = gb.add_task();
+        tasks.push(CholTask::Panel { t });
+        if t > 0 {
+            gb.add_edge(update_id[t - 1][0], pid); // Update(t-1, t)
+        }
+        for j in (t + 1)..panels {
+            let id = gb.add_task();
+            tasks.push(CholTask::Update { t, j });
+            gb.add_edge(pid, id);
+            if t > 0 {
+                gb.add_edge(update_id[t - 1][j - t], id); // Update(t-1, j)
+            }
+            update_id[t].push(id);
+        }
+    }
+    let pool = engine.pool().cloned();
+    let threads = pool.as_ref().map_or(1, |p| p.threads());
+    let graph = gb.seal(threads);
+    let mut av = a.view_mut();
+    let shared = SharedPanel::new(&mut av);
+    let graph_ref = &graph;
+    let body = |task: usize, ws: &mut Workspace| match tasks[task] {
+        CholTask::Panel { t } => {
+            let k = col_of(t);
+            let b = width_of(t);
+            // SAFETY: block-column t's earlier writers (Update(0..t, t))
+            // are predecessors; its later readers (Update(t, ·)) are
+            // successors; concurrent tasks touch other block-columns.
+            let mut pv = unsafe { shared.sub(k, k, s - k, b).view_mut() };
+            let pre = abft_on.then(|| chol_panel_pre_sums(pv.as_view(), &abft_stats));
+            if let Err(j) = factor_panel(&mut pv, b) {
+                err.store(k + j, Ordering::Release);
+                graph_ref.cancel();
+                return;
+            }
+            if let Some(pre) = &pre {
+                chol_panel_check(pv.as_view(), pre, (k, k), &abft_stats);
+            }
+        }
+        CholTask::Update { t, j } => {
+            let k = col_of(t);
+            let b = width_of(t);
+            let o = k + b;
+            let (cj, bj) = (col_of(j), width_of(j));
+            // SAFETY: block-column j's previous writer Update(t-1, j) is
+            // a predecessor; A21 of step t is stable (no task writes
+            // block-column t after Panel(t)), so the immutable views
+            // below may be shared with the step's other update tasks.
+            unsafe {
+                let a21 = shared.sub(o, k, s - o, b).view();
+                // B = (A21)^T restricted to block-column j's columns
+                // = transpose of A21's rows [cj - o, cj - o + bj).
+                let bslice = shared.sub(cj, k, bj, b).to_owned_matrix().transposed();
+                let (cfg, kern) = &plans[t];
+                let mut c_s = shared.sub(o, cj, s - o, bj).view_mut();
+                gemm_blocked(
+                    cfg,
+                    kern,
+                    E::from_f64(-1.0),
+                    a21,
+                    bslice.view(),
+                    E::ONE,
+                    &mut c_s,
+                    ws,
+                );
+            }
+        }
+    };
+    if !graph.is_empty() {
+        match &pool {
+            Some(p) => {
+                let job = |ctx: &crate::runtime::pool::PoolCtx<'_>| {
+                    execute_rank(&graph, ctx, |t| {
+                        let mut ws = ctx.workspace();
+                        body(t, &mut ws);
+                    });
+                };
+                p.run(&job);
+            }
+            None => {
+                let mut ws = Workspace::new();
+                execute_serial(&graph, |t| body(t, &mut ws));
+            }
+        }
+    }
+    let failed = err.load(Ordering::Acquire);
+    if failed != NO_ERR {
+        return Err(failed);
+    }
+    Ok(())
+}
+
 /// Factor one panel in place: `potf2` on the `b x b` diagonal block, then
 /// the panel TRSM on the rows below it. Runs on the panel sub-team leader
 /// inside the fused trailing update (and up front for panel 0).
-fn factor_panel(pv: &mut MatViewMut<'_>, b: usize) -> Result<(), usize> {
+fn factor_panel<E: Elem>(pv: &mut MatViewMut<'_, E>, b: usize) -> Result<(), usize> {
     let rows = pv.rows;
     {
         let mut a11 = pv.sub_mut(0, 0, b, b);
-        potf2(&mut a11)?;
+        potf2_t(&mut a11)?;
     }
     if b < rows {
         let l11t = pv.as_view().sub(0, 0, b, b).to_owned_matrix().transposed();

@@ -54,8 +54,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::gemm::abft::{panel_colsums, verify_lu_panel, AbftPhase, AbftStats};
-use crate::gemm::{gemm_blocked, GemmElem, GemmEngine, MicroKernelImpl, Workspace};
+use crate::gemm::{gemm_blocked, GemmElem, GemmEngine, MicroKernelImpl, SchedPolicy, Workspace};
 use crate::model::{GemmDims, PanelShape};
+use crate::runtime::dag::{execute_rank, execute_serial, GraphBuilder};
 use crate::runtime::pool::SubTeam;
 use crate::util::elem::Elem;
 use crate::util::matrix::{Matrix, MatrixF64, MatView, MatViewMut};
@@ -244,10 +245,18 @@ pub fn lu_blocked_t<E: GemmElem>(
     block: usize,
     engine: &mut GemmEngine,
 ) -> Result<Vec<usize>, usize> {
-    if engine.lookahead().enabled() {
-        lu_blocked_lookahead(a, block, engine)
-    } else {
-        lu_blocked_baseline(a, block, engine)
+    // `block == 0` is the model-selection sentinel: the analytic scorer
+    // picks the tile width for this order and dtype.
+    let block = if block == 0 { engine.dag_tile_size_t::<E>(a.rows()) } else { block };
+    match engine.sched() {
+        SchedPolicy::Dag => lu_blocked_dag(a, block, engine),
+        SchedPolicy::Lookahead => {
+            if engine.lookahead().enabled() {
+                lu_blocked_lookahead(a, block, engine)
+            } else {
+                lu_blocked_baseline(a, block, engine)
+            }
+        }
     }
 }
 
@@ -303,6 +312,261 @@ fn lu_blocked_baseline<E: GemmElem>(
         k += b;
     }
     Ok(pivots)
+}
+
+/// One node of the LU tile DAG (see [`lu_blocked_dag`]).
+#[derive(Clone, Copy)]
+enum LuTask {
+    /// PFACT on panel `t` (ABFT pre-sums / `getf2` / re-check), pivot
+    /// publication, and the `L11`/`L21` snapshots the update tasks read.
+    Panel { t: usize },
+    /// Deferred step-`t` row interchanges on finished block-column
+    /// `j < t` (the "left of the panel" half of the baseline's swap).
+    Left { t: usize, j: usize },
+    /// Step-`t` ops on trailing block-column `j > t`: row interchanges,
+    /// TSOLVE slice, and the trailing-update GEMM slice.
+    Update { t: usize, j: usize },
+}
+
+/// The tile-DAG dataflow pipeline (`DLA_SCHED=dag`): the factorization
+/// is decomposed into per-block-column tasks — `Panel(t)`, `Update(t,
+/// j)` for `j > t`, `Left(t, j)` for `j < t` — with explicit dataflow
+/// edges
+///
+/// - `Panel(t) <- Update(t-1, t)` (the panel must receive step t-1),
+/// - `Update(t, j) <- Panel(t)` and `<- Update(t-1, j)`,
+/// - `Left(t, j) <- Panel(t)` and `<- Left(t-1, j)` when `j < t - 1`
+///   (for `j = t - 1` the `Panel(t-1) -> Update(t-1, t) -> Panel(t)`
+///   chain already orders the hand-off),
+///
+/// drained by the pool ranks through per-worker work-stealing deques
+/// ([`crate::runtime::dag`]) inside **one** broadcast job — no
+/// stop-the-world barrier between iterations, and zero thread spawns.
+///
+/// `Panel(t)` snapshots `L11`/`L21` into per-step scratch before
+/// publishing: `Left(t+1, t)` swaps rows of live block-column `t`
+/// concurrently with `Update(t, j)` reads, so the update tasks read the
+/// frozen snapshot, never the live panel. Each `Update(t, j)` runs the
+/// baseline's exact per-column op sequence (swap, TSOLVE, GEMM slice
+/// under the step's config planned on the **full** trailing dims), so
+/// factors and pivots are bitwise identical to the serialized baseline
+/// — the same argument as the lookahead chain, asserted by
+/// `tests/dag.rs`.
+///
+/// Breakdown (zero/non-finite pivot) stores the failing global column
+/// in an error slot and cancels the graph: in-flight tasks finish,
+/// nothing new is scheduled, and the driver returns `Err(col)`.
+fn lu_blocked_dag<E: GemmElem>(
+    a: &mut Matrix<E>,
+    block: usize,
+    engine: &mut GemmEngine,
+) -> Result<Vec<usize>, usize> {
+    let s = a.rows();
+    assert_eq!(a.cols(), s, "LU requires a square matrix");
+    assert!(block >= 1);
+    let panels = s.div_ceil(block);
+    let col_of = |t: usize| (t * block).min(s);
+    let width_of = |t: usize| col_of(t + 1) - col_of(t);
+    let abft_on = engine.verify().enabled();
+    let abft_stats = std::sync::Arc::clone(engine.abft_stats());
+    // Per-step trailing-GEMM configs, planned on the FULL trailing dims
+    // (the bitwise doctrine: every column slice of step t runs under the
+    // config the serialized baseline would use for the whole update).
+    // Planned up front — the engine's config memo is not Sync.
+    let plans: Vec<(crate::model::ccp::GemmConfig, MicroKernelImpl<E>)> = (0..panels)
+        .map(|t| {
+            let rest = s - col_of(t + 1);
+            let dims = if rest > 0 {
+                GemmDims::new(rest, rest, width_of(t))
+            } else {
+                GemmDims::new(1, 1, 1) // last panel: never used
+            };
+            engine.plan_kernel_t::<E>(dims)
+        })
+        .collect();
+    // Per-step L11 / L21 snapshot storage (written once by Panel(t),
+    // read concurrently by every Update(t, j)).
+    let mut l11_store: Vec<Matrix<E>> =
+        (0..panels).map(|t| Matrix::zeros(width_of(t), width_of(t))).collect();
+    let mut a21_store: Vec<Matrix<E>> = (0..panels)
+        .map(|t| Matrix::zeros((s - col_of(t + 1)).max(1), width_of(t)))
+        .collect();
+    let l11_sp: Vec<SharedPanel<E>> = l11_store
+        .iter_mut()
+        .map(|m| {
+            let mut v = m.view_mut();
+            SharedPanel::new(&mut v)
+        })
+        .collect();
+    let a21_sp: Vec<SharedPanel<E>> = a21_store
+        .iter_mut()
+        .map(|m| {
+            let mut v = m.view_mut();
+            SharedPanel::new(&mut v)
+        })
+        .collect();
+    // Pivot slots (published by Panel(t) with Release; consumed by the
+    // swap tasks, which are graph-ordered after it) and the breakdown
+    // slot. Panels are totally ordered by the dependency chain, so at
+    // most one panel can fail before the cancellation lands.
+    let pivots_a: Vec<AtomicUsize> = (0..s).map(|_| AtomicUsize::new(0)).collect();
+    let err = AtomicUsize::new(NO_ERR);
+    // --- Static task graph -------------------------------------------
+    let mut gb = GraphBuilder::new();
+    let mut tasks: Vec<LuTask> = Vec::new();
+    // update_id[t][j - t - 1] = Update(t, j); left_id[t][j] = Left(t, j).
+    let mut update_id: Vec<Vec<usize>> = vec![Vec::new(); panels];
+    let mut left_id: Vec<Vec<usize>> = vec![Vec::new(); panels];
+    for t in 0..panels {
+        let pid = gb.add_task();
+        tasks.push(LuTask::Panel { t });
+        if t > 0 {
+            gb.add_edge(update_id[t - 1][0], pid); // Update(t-1, t)
+        }
+        for j in 0..t {
+            let id = gb.add_task();
+            tasks.push(LuTask::Left { t, j });
+            gb.add_edge(pid, id);
+            if j + 1 < t {
+                gb.add_edge(left_id[t - 1][j], id);
+            }
+            left_id[t].push(id);
+        }
+        for j in (t + 1)..panels {
+            let id = gb.add_task();
+            tasks.push(LuTask::Update { t, j });
+            gb.add_edge(pid, id);
+            if t > 0 {
+                gb.add_edge(update_id[t - 1][j - t], id); // Update(t-1, j)
+            }
+            update_id[t].push(id);
+        }
+    }
+    let pool = engine.pool().cloned();
+    let threads = pool.as_ref().map_or(1, |p| p.threads());
+    let graph = gb.seal(threads);
+    let mut av = a.view_mut();
+    let shared = SharedPanel::new(&mut av);
+    let graph_ref = &graph;
+    let body = |task: usize, ws: &mut Workspace| match tasks[task] {
+        LuTask::Panel { t } => {
+            let k = col_of(t);
+            let b = width_of(t);
+            let rest = s - k - b;
+            // SAFETY: Panel(t) is block-column t's sole toucher here —
+            // every earlier writer (Update(0..t, t)) is a predecessor,
+            // and later readers/writers (Update(t, ·) read snapshots,
+            // Left(·, t) swaps) are successors.
+            let mut pv = unsafe { shared.sub(k, k, s - k, b).view_mut() };
+            let pre = abft_on.then(|| lu_panel_pre_sums(pv.as_view(), &abft_stats));
+            let mut piv_local = vec![0usize; b];
+            if let Err(j) = getf2(&mut pv, &mut piv_local) {
+                err.store(k + j, Ordering::Release);
+                graph_ref.cancel();
+                return;
+            }
+            if let Some(pre) = &pre {
+                lu_panel_check(pv.as_view(), pre, (k, k), &abft_stats);
+            }
+            for (j, pj) in piv_local.iter().enumerate() {
+                pivots_a[k + j].store(k + pj, Ordering::Release);
+            }
+            if rest > 0 {
+                // Freeze L11 / L21 for the update tasks: Left(t+1, t)
+                // will swap the live panel while they run.
+                // SAFETY: the snapshots are written only here, and every
+                // reader is a graph successor.
+                unsafe {
+                    let mut l11d = l11_sp[t].view_mut();
+                    for c in 0..b {
+                        for r in 0..b {
+                            l11d.set(r, c, pv.at(r, c));
+                        }
+                    }
+                    let mut a21d = a21_sp[t].view_mut();
+                    for c in 0..b {
+                        for r in 0..rest {
+                            a21d.set(r, c, pv.at(b + r, c));
+                        }
+                    }
+                }
+            }
+        }
+        LuTask::Left { t, j } => {
+            let k = col_of(t);
+            let b = width_of(t);
+            let (cj, bj) = (col_of(j), width_of(j));
+            let piv_local: Vec<usize> =
+                (0..b).map(|jj| pivots_a[k + jj].load(Ordering::Acquire) - k).collect();
+            // SAFETY: block-column j's previous writer (Left(t-1, j) or,
+            // for j = t - 1, Panel(t-1) via the panel chain) is a
+            // predecessor; concurrent tasks touch other block-columns.
+            unsafe {
+                let mut colsj = shared.sub(0, cj, s, bj).view_mut();
+                laswp(&mut colsj, k, &piv_local);
+            }
+        }
+        LuTask::Update { t, j } => {
+            let k = col_of(t);
+            let b = width_of(t);
+            let o = k + b;
+            let (cj, bj) = (col_of(j), width_of(j));
+            let piv_local: Vec<usize> =
+                (0..b).map(|jj| pivots_a[k + jj].load(Ordering::Acquire) - k).collect();
+            // SAFETY: block-column j's previous writer Update(t-1, j) is
+            // a predecessor; L11/L21 are frozen snapshots (read-only
+            // after Panel(t)); concurrent tasks touch other columns.
+            unsafe {
+                {
+                    let mut colsj = shared.sub(0, cj, s, bj).view_mut();
+                    laswp(&mut colsj, k, &piv_local);
+                }
+                {
+                    let l11 = l11_sp[t].view();
+                    let mut a12 = shared.sub(k, cj, b, bj).view_mut();
+                    trsm_left_lower_unit(l11, &mut a12);
+                }
+                {
+                    let b12 = shared.sub(k, cj, b, bj).to_owned_matrix();
+                    let a21 = a21_sp[t].view();
+                    let (cfg, kern) = &plans[t];
+                    let mut c_s = shared.sub(o, cj, s - o, bj).view_mut();
+                    gemm_blocked(
+                        cfg,
+                        kern,
+                        E::from_f64(-1.0),
+                        a21,
+                        b12.view(),
+                        E::ONE,
+                        &mut c_s,
+                        ws,
+                    );
+                }
+            }
+        }
+    };
+    if !graph.is_empty() {
+        match &pool {
+            Some(p) => {
+                let job = |ctx: &crate::runtime::pool::PoolCtx<'_>| {
+                    execute_rank(&graph, ctx, |t| {
+                        let mut ws = ctx.workspace();
+                        body(t, &mut ws);
+                    });
+                };
+                p.run(&job);
+            }
+            None => {
+                let mut ws = Workspace::new();
+                execute_serial(&graph, |t| body(t, &mut ws));
+            }
+        }
+    }
+    let failed = err.load(Ordering::Acquire);
+    if failed != NO_ERR {
+        return Err(failed);
+    }
+    Ok(pivots_a.iter().map(|p| p.load(Ordering::Acquire)).collect())
 }
 
 /// The dynamic deep-lookahead pipeline (module docs): a work-queue of

@@ -23,9 +23,14 @@
 //! ahead of the trailing sweep, readied by a malleable panel sub-team
 //! (sized per iteration by the team-size model) *inside* the fused
 //! trailing-update jobs, with results bitwise identical to the
-//! serialized path at every depth. See `README.md` in this directory
-//! for the pipeline write-up (queue states, malleability rule,
-//! deferred-swap windows, `DLA_LOOKAHEAD`/`DLA_PANEL_WORKERS`/`DLA_PIN`
+//! serialized path at every depth. With `DLA_SCHED=dag` (or
+//! [`crate::gemm::SchedPolicy::Dag`] pinned on the engine) they instead
+//! run as **tile DAGs**: per-block-column tasks with explicit dataflow
+//! edges, drained by the pool ranks through work-stealing deques in one
+//! broadcast job ([`crate::runtime::dag`]) — still bitwise identical.
+//! See `README.md` in this directory for both write-ups (queue states,
+//! malleability rule, deferred-swap windows, DAG task/dependency rules,
+//! `DLA_LOOKAHEAD`/`DLA_PANEL_WORKERS`/`DLA_PIN`/`DLA_SCHED`
 //! semantics).
 
 pub mod cholesky;
@@ -36,9 +41,10 @@ pub mod qr;
 pub mod refine;
 pub mod trsm;
 
+pub use cholesky::{cholesky_blocked, cholesky_blocked_t, cholesky_residual, potf2, potf2_t};
 pub use level3::{syrk_lower, trsm_blocked_left_lower_unit};
 pub use lu::{lu_blocked, lu_blocked_t, lu_factor, lu_factor_t, lu_flops, LuFactors};
-pub use qr::{qr_blocked, QrFactors};
+pub use qr::{geqr2, geqr2_t, qr_blocked, qr_blocked_t, QrFactors};
 pub use pfact::{getf2, getf2_team, laswp, laswp_parallel, SharedPanel, NO_ERR};
 pub use refine::{lu_solve_f64, lu_solve_mixed, RefineOptions, RefineResult};
 pub use trsm::{trsm_left_lower_unit, trsm_right_upper};

@@ -75,6 +75,23 @@ impl<E: Elem> SharedPanel<E> {
         Matrix::from_fn(self.rows, self.cols, |i, j| self.at(i, j))
     }
 
+    /// Rebuild an immutable view — the read-only analog of
+    /// [`Self::view_mut`], for DAG tile tasks that *concurrently read*
+    /// a stable region (a factored panel, a snapshot) without copying.
+    ///
+    /// # Safety
+    /// No rank may be mutating the region for the lifetime of the
+    /// returned view; concurrent readers are fine.
+    pub unsafe fn view<'a>(&self) -> crate::util::matrix::MatView<'a, E> {
+        let len = if self.cols == 0 { 0 } else { (self.cols - 1) * self.ld + self.rows };
+        crate::util::matrix::MatView {
+            rows: self.rows,
+            cols: self.cols,
+            ld: self.ld,
+            data: std::slice::from_raw_parts(self.ptr, len),
+        }
+    }
+
     /// Rebuild a mutable view.
     ///
     /// # Safety

@@ -18,44 +18,47 @@
 
 use std::sync::Mutex;
 
-use crate::gemm::{gemm_blocked, GemmEngine, Workspace};
+use crate::gemm::{gemm_blocked, GemmElem, GemmEngine, MicroKernelImpl, SchedPolicy, Workspace};
 use crate::model::GemmDims;
+use crate::runtime::dag::{execute_rank, execute_serial, GraphBuilder};
 use crate::runtime::pool::SubTeam;
-use crate::util::matrix::{MatrixF64, MatViewMut};
+use crate::util::elem::Elem;
+use crate::util::matrix::{Matrix, MatrixF64, MatViewMut};
 
 use super::pfact::SharedPanel;
 
-/// Result of a blocked QR factorization.
-pub struct QrFactors {
+/// Result of a blocked QR factorization (generic over the element type;
+/// default `f64`, so pre-generic code keeps compiling unchanged).
+pub struct QrFactors<E = f64> {
     /// Packed factors: R in the upper triangle, Householder vectors V
     /// (unit lower trapezoid, implicit leading 1) below the diagonal.
-    pub qr: MatrixF64,
+    pub qr: Matrix<E>,
     /// Scalar reflector coefficients tau, one per column.
-    pub tau: Vec<f64>,
+    pub tau: Vec<E>,
     pub block: usize,
 }
 
-impl QrFactors {
+impl<E: Elem> QrFactors<E> {
     /// Assemble the explicit `m x m` orthogonal factor Q (test/demo use).
-    pub fn q_matrix(&self) -> MatrixF64 {
+    pub fn q_matrix(&self) -> Matrix<E> {
         let m = self.qr.rows();
         let n = self.qr.cols().min(m);
-        let mut q = MatrixF64::identity(m);
+        let mut q = Matrix::from_fn(m, m, |i, j| if i == j { E::ONE } else { E::ZERO });
         // Apply H_0 H_1 ... H_{n-1} to I from the left, in reverse.
         for j in (0..n).rev() {
             let tau = self.tau[j];
-            if tau == 0.0 {
+            if tau.to_f64() == 0.0 {
                 continue;
             }
             // v = [0_{j}, 1, qr[j+1.., j]]
-            let mut v = vec![0.0; m];
-            v[j] = 1.0;
+            let mut v = vec![E::ZERO; m];
+            v[j] = E::ONE;
             for i in j + 1..m {
                 v[i] = self.qr[(i, j)];
             }
             // Q := (I - tau v v^T) Q
             for c in 0..m {
-                let mut dot = 0.0;
+                let mut dot = E::ZERO;
                 for r in j..m {
                     dot += v[r] * q[(r, c)];
                 }
@@ -70,17 +73,17 @@ impl QrFactors {
     }
 
     /// Explicit R (upper triangular/trapezoidal).
-    pub fn r_matrix(&self) -> MatrixF64 {
+    pub fn r_matrix(&self) -> Matrix<E> {
         let (m, n) = (self.qr.rows(), self.qr.cols());
-        MatrixF64::from_fn(m, n, |i, j| if i <= j { self.qr[(i, j)] } else { 0.0 })
+        Matrix::from_fn(m, n, |i, j| if i <= j { self.qr[(i, j)] } else { E::ZERO })
     }
 
     /// `max |A - Q R| / max|A|`.
-    pub fn reconstruction_error(&self, a0: &MatrixF64) -> f64 {
+    pub fn reconstruction_error(&self, a0: &Matrix<E>) -> f64 {
         let q = self.q_matrix();
         let r = self.r_matrix();
-        let mut qr = MatrixF64::zeros(a0.rows(), a0.cols());
-        crate::gemm::gemm_reference(1.0, q.view(), r.view(), 0.0, &mut qr.view_mut());
+        let mut qr = Matrix::<E>::zeros(a0.rows(), a0.cols());
+        crate::gemm::gemm_reference(E::ONE, q.view(), r.view(), E::ZERO, &mut qr.view_mut());
         qr.max_abs_diff(a0) / a0.max_abs().max(1e-300)
     }
 
@@ -88,34 +91,43 @@ impl QrFactors {
     pub fn orthogonality_error(&self) -> f64 {
         let q = self.q_matrix();
         let qt = q.transposed();
-        let mut qtq = MatrixF64::zeros(q.rows(), q.rows());
-        crate::gemm::gemm_reference(1.0, qt.view(), q.view(), 0.0, &mut qtq.view_mut());
-        qtq.max_abs_diff(&MatrixF64::identity(q.rows()))
+        let mut qtq = Matrix::<E>::zeros(q.rows(), q.rows());
+        crate::gemm::gemm_reference(E::ONE, qt.view(), q.view(), E::ZERO, &mut qtq.view_mut());
+        let eye = Matrix::from_fn(q.rows(), q.rows(), |i, j| if i == j { E::ONE } else { E::ZERO });
+        qtq.max_abs_diff(&eye)
     }
 }
 
 /// Unblocked Householder QR of a panel (LAPACK `geqr2`), in place.
 pub fn geqr2(a: &mut MatViewMut<'_>, tau: &mut [f64]) {
+    geqr2_t::<f64>(a, tau);
+}
+
+/// [`geqr2`] per element type. The column norm goes through f64
+/// (`E::from_f64((alpha^2 + xnorm2).to_f64().sqrt())`) — the identity
+/// composition for `E = f64`, so the historical path is bit for bit
+/// unchanged, and a correctly-converted f64 sqrt for f32.
+pub fn geqr2_t<E: Elem>(a: &mut MatViewMut<'_, E>, tau: &mut [E]) {
     let (m, n) = (a.rows, a.cols);
     let steps = m.min(n);
     assert!(tau.len() >= steps);
     for j in 0..steps {
         // Householder vector for column j below the diagonal.
         let alpha = a.at(j, j);
-        let mut xnorm2 = 0.0;
+        let mut xnorm2 = E::ZERO;
         for i in j + 1..m {
             let v = a.at(i, j);
             xnorm2 += v * v;
         }
-        if xnorm2 == 0.0 {
-            tau[j] = 0.0;
+        if xnorm2.to_f64() == 0.0 {
+            tau[j] = E::ZERO;
             continue;
         }
-        let norm = (alpha * alpha + xnorm2).sqrt();
-        let beta = if alpha >= 0.0 { -norm } else { norm };
+        let norm = E::from_f64((alpha * alpha + xnorm2).to_f64().sqrt());
+        let beta = if alpha.to_f64() >= 0.0 { E::from_f64(-norm.to_f64()) } else { norm };
         let tj = (beta - alpha) / beta;
         tau[j] = tj;
-        let scale = 1.0 / (alpha - beta);
+        let scale = E::ONE / (alpha - beta);
         for i in j + 1..m {
             let v = a.at(i, j) * scale;
             a.set(i, j, v);
@@ -141,31 +153,31 @@ pub fn geqr2(a: &mut MatViewMut<'_>, tau: &mut [f64]) {
 /// Build the upper-triangular compact-WY factor T (LAPACK `larft`,
 /// forward/columnwise) for the b reflectors stored in `v` (unit lower
 /// trapezoid, `rows x b`).
-fn larft(v: &MatrixF64, tau: &[f64]) -> MatrixF64 {
+fn larft<E: Elem>(v: &Matrix<E>, tau: &[E]) -> Matrix<E> {
     let b = v.cols();
     let rows = v.rows();
-    let mut t = MatrixF64::zeros(b, b);
+    let mut t = Matrix::<E>::zeros(b, b);
     for j in 0..b {
         t[(j, j)] = tau[j];
-        if tau[j] == 0.0 {
+        if tau[j].to_f64() == 0.0 {
             continue;
         }
         // t[0..j, j] = -tau_j * T[0..j, 0..j] * V[:, 0..j]^T v_j
-        let mut w = vec![0.0; j];
+        let mut w = vec![E::ZERO; j];
         for c in 0..j {
             // dot of V[:, c] (unit at row c) with v_j (unit at row j).
-            let mut dot = if j < rows { v[(j, c)] } else { 0.0 }; // V[j, c] * v_j[j] (=1)
+            let mut dot = if j < rows { v[(j, c)] } else { E::ZERO }; // V[j, c] * v_j[j] (=1)
             for r in j + 1..rows {
                 dot += v[(r, c)] * v[(r, j)];
             }
             w[c] = dot;
         }
         for r in 0..j {
-            let mut acc = 0.0;
+            let mut acc = E::ZERO;
             for c in r..j {
                 acc += t[(r, c)] * w[c];
             }
-            t[(r, j)] = -tau[j] * acc;
+            t[(r, j)] = E::from_f64(-tau[j].to_f64()) * acc;
         }
     }
     t
@@ -183,18 +195,40 @@ pub fn qr_blocked(a0: &MatrixF64, block: usize, engine: &mut GemmEngine) -> QrFa
     assert!(m >= n, "qr_blocked expects m >= n");
     let mut a = a0.clone();
     let mut tau = vec![0.0; n];
-    let b = block.max(1);
-    if engine.lookahead().enabled() {
-        qr_lookahead(&mut a, &mut tau, b, engine);
-    } else {
-        qr_baseline(&mut a, &mut tau, b, engine);
+    let b = if block == 0 { engine.dag_tile_size_t::<f64>(m) } else { block.max(1) };
+    match engine.sched() {
+        SchedPolicy::Dag => qr_dag::<f64>(&mut a, &mut tau, b, engine),
+        SchedPolicy::Lookahead if engine.lookahead().enabled() => {
+            qr_lookahead(&mut a, &mut tau, b, engine)
+        }
+        SchedPolicy::Lookahead => qr_baseline(&mut a, &mut tau, b, engine),
+    }
+    QrFactors { qr: a, tau, block: b }
+}
+
+/// The dtype-generic blocked QR behind [`qr_blocked`]: DAG or serialized
+/// baseline. The deep-lookahead pipeline stays f64-only; f64 callers
+/// reach it through [`qr_blocked`].
+pub fn qr_blocked_t<E: GemmElem>(
+    a0: &Matrix<E>,
+    block: usize,
+    engine: &mut GemmEngine,
+) -> QrFactors<E> {
+    let (m, n) = (a0.rows(), a0.cols());
+    assert!(m >= n, "qr_blocked_t expects m >= n");
+    let mut a = a0.clone();
+    let mut tau = vec![E::ZERO; n];
+    let b = if block == 0 { engine.dag_tile_size_t::<E>(m) } else { block.max(1) };
+    match engine.sched() {
+        SchedPolicy::Dag => qr_dag(&mut a, &mut tau, b, engine),
+        SchedPolicy::Lookahead => qr_baseline(&mut a, &mut tau, b, engine),
     }
     QrFactors { qr: a, tau, block: b }
 }
 
 /// The serialized path: factor the panel, then apply the compact-WY
 /// update to the whole trailing matrix, per iteration.
-fn qr_baseline(a: &mut MatrixF64, tau: &mut [f64], b: usize, engine: &mut GemmEngine) {
+fn qr_baseline<E: GemmElem>(a: &mut Matrix<E>, tau: &mut [E], b: usize, engine: &mut GemmEngine) {
     let (m, n) = (a.rows(), a.cols());
     let mut k = 0;
     while k < n {
@@ -202,36 +236,264 @@ fn qr_baseline(a: &mut MatrixF64, tau: &mut [f64], b: usize, engine: &mut GemmEn
         let rows = m - k;
         {
             let mut panel = a.sub_mut(k, k, rows, bb);
-            geqr2(&mut panel, &mut tau[k..k + bb]);
+            geqr2_t(&mut panel, &mut tau[k..k + bb]);
         }
         // Trailing update: A2 := (I - V T V^T)^T A2 = A2 - V T^T (V^T A2).
         if k + bb < n {
             let cols = n - k - bb;
             // V: rows x bb unit-lower-trapezoid from the factored panel.
-            let v = MatrixF64::from_fn(rows, bb, |i, j| {
+            let v = Matrix::from_fn(rows, bb, |i, j| {
                 if i == j {
-                    1.0
+                    E::ONE
                 } else if i > j {
                     a[(k + i, k + j)]
                 } else {
-                    0.0
+                    E::ZERO
                 }
             });
             let t = larft(&v, &tau[k..k + bb]);
             let a2 = a.sub(k, k + bb, rows, cols).to_owned_matrix();
             // W = V^T A2  (bb x cols): skinny-k GEMM, k-dim = rows.
             let vt = v.transposed();
-            let mut w = MatrixF64::zeros(bb, cols);
-            engine.gemm(1.0, vt.view(), a2.view(), 0.0, &mut w.view_mut());
+            let mut w = Matrix::<E>::zeros(bb, cols);
+            engine.gemm_t(E::ONE, vt.view(), a2.view(), E::ZERO, &mut w.view_mut());
             // W := T^T W (small triangular multiply).
             let tt = t.transposed();
-            let mut tw = MatrixF64::zeros(bb, cols);
-            engine.gemm(1.0, tt.view(), w.view(), 0.0, &mut tw.view_mut());
+            let mut tw = Matrix::<E>::zeros(bb, cols);
+            engine.gemm_t(E::ONE, tt.view(), w.view(), E::ZERO, &mut tw.view_mut());
             // A2 := A2 - V W: the paper's skinny-k trailing update.
             let mut a2m = a.sub_mut(k, k + bb, rows, cols);
-            engine.gemm(-1.0, v.view(), tw.view(), 1.0, &mut a2m);
+            engine.gemm_t(E::from_f64(-1.0), v.view(), tw.view(), E::ONE, &mut a2m);
         }
         k += bb;
+    }
+}
+
+/// One node of the QR tile DAG (see [`qr_dag`]).
+#[derive(Clone, Copy)]
+enum QrTask {
+    /// `geqr2` on panel `t`, tau publication, and the `V`/`V^T`/`T^T`
+    /// snapshots the update tasks read.
+    Panel { t: usize },
+    /// Step-`t` compact-WY update slice on trailing block-column `j > t`.
+    Update { t: usize, j: usize },
+}
+
+/// The tile-DAG dataflow pipeline (`DLA_SCHED=dag`): `Panel(t)` and
+/// `Update(t, j)` tasks with edges `Panel(t) <- Update(t-1, t)`,
+/// `Update(t, j) <- Panel(t)` and `<- Update(t-1, j)`, drained by the
+/// pool ranks through work-stealing deques in one broadcast job
+/// ([`crate::runtime::dag`]). `Panel(t)` materializes `V_t` / `V_t^T` /
+/// `T_t^T` once into shared scratch (read concurrently, zero-copy, by
+/// every `Update(t, ·)`); each update runs the baseline's three GEMMs
+/// (`W = V^T A2`, `TW = T^T W`, `A2 -= V TW`) restricted to its
+/// block-column, under configs planned on the step's **full** trailing
+/// dims — so factors and tau are bitwise identical to the serialized
+/// baseline (`tests/dag.rs`).
+fn qr_dag<E: GemmElem>(a: &mut Matrix<E>, tau: &mut [E], b: usize, engine: &mut GemmEngine) {
+    let (m, n) = (a.rows(), a.cols());
+    assert!(b >= 1);
+    let panels = n.div_ceil(b);
+    let col_of = |t: usize| (t * b).min(n);
+    let width_of = |t: usize| col_of(t + 1) - col_of(t);
+    // Per-step (W, TW, update) configs on the full trailing dims
+    // (bitwise doctrine; pre-planned — the config memo is not Sync).
+    type PlanT<E> = (crate::model::ccp::GemmConfig, MicroKernelImpl<E>);
+    let plans: Vec<(PlanT<E>, PlanT<E>, PlanT<E>)> = (0..panels)
+        .map(|t| {
+            let (k, bb) = (col_of(t), width_of(t));
+            let (rows, cols) = (m - k, n - k - bb);
+            if cols > 0 {
+                (
+                    engine.plan_kernel_t::<E>(GemmDims::new(bb, cols, rows)),
+                    engine.plan_kernel_t::<E>(GemmDims::new(bb, cols, bb)),
+                    engine.plan_kernel_t::<E>(GemmDims::new(rows, cols, bb)),
+                )
+            } else {
+                let dummy = GemmDims::new(1, 1, 1); // last panel: never used
+                (
+                    engine.plan_kernel_t::<E>(dummy),
+                    engine.plan_kernel_t::<E>(dummy),
+                    engine.plan_kernel_t::<E>(dummy),
+                )
+            }
+        })
+        .collect();
+    // Shared scratch written once by Panel(t), read concurrently by the
+    // step's update tasks: V (unit lower trapezoid), V^T, T^T, and the
+    // tau slices (disjoint rows of one column vector).
+    let mut v_store: Vec<Matrix<E>> =
+        (0..panels).map(|t| Matrix::zeros(m - col_of(t), width_of(t))).collect();
+    let mut vt_store: Vec<Matrix<E>> =
+        (0..panels).map(|t| Matrix::zeros(width_of(t), m - col_of(t))).collect();
+    let mut tt_store: Vec<Matrix<E>> =
+        (0..panels).map(|t| Matrix::zeros(width_of(t), width_of(t))).collect();
+    let mut tau_mat: Matrix<E> = Matrix::zeros(n.max(1), 1);
+    let v_sp: Vec<SharedPanel<E>> = v_store
+        .iter_mut()
+        .map(|mm| {
+            let mut vv = mm.view_mut();
+            SharedPanel::new(&mut vv)
+        })
+        .collect();
+    let vt_sp: Vec<SharedPanel<E>> = vt_store
+        .iter_mut()
+        .map(|mm| {
+            let mut vv = mm.view_mut();
+            SharedPanel::new(&mut vv)
+        })
+        .collect();
+    let tt_sp: Vec<SharedPanel<E>> = tt_store
+        .iter_mut()
+        .map(|mm| {
+            let mut vv = mm.view_mut();
+            SharedPanel::new(&mut vv)
+        })
+        .collect();
+    let tau_sp = {
+        let mut tv = tau_mat.view_mut();
+        SharedPanel::new(&mut tv)
+    };
+    // --- Static task graph -------------------------------------------
+    let mut gb = GraphBuilder::new();
+    let mut tasks: Vec<QrTask> = Vec::new();
+    let mut update_id: Vec<Vec<usize>> = vec![Vec::new(); panels]; // [t][j - t - 1]
+    for t in 0..panels {
+        let pid = gb.add_task();
+        tasks.push(QrTask::Panel { t });
+        if t > 0 {
+            gb.add_edge(update_id[t - 1][0], pid); // Update(t-1, t)
+        }
+        for j in (t + 1)..panels {
+            let id = gb.add_task();
+            tasks.push(QrTask::Update { t, j });
+            gb.add_edge(pid, id);
+            if t > 0 {
+                gb.add_edge(update_id[t - 1][j - t], id); // Update(t-1, j)
+            }
+            update_id[t].push(id);
+        }
+    }
+    let pool = engine.pool().cloned();
+    let threads = pool.as_ref().map_or(1, |p| p.threads());
+    let graph = gb.seal(threads);
+    let mut av = a.view_mut();
+    let shared = SharedPanel::new(&mut av);
+    let body = |task: usize, ws: &mut Workspace| match tasks[task] {
+        QrTask::Panel { t } => {
+            let (k, bb) = (col_of(t), width_of(t));
+            let rows = m - k;
+            // SAFETY: block-column t's earlier writers (Update(0..t, t))
+            // are predecessors; concurrent tasks touch other columns.
+            let mut pv = unsafe { shared.sub(k, k, rows, bb).view_mut() };
+            let mut tau_local = vec![E::ZERO; bb];
+            geqr2_t(&mut pv, &mut tau_local);
+            // Publish tau (disjoint rows per panel).
+            // SAFETY: sole writer of rows k..k+bb; readers are graph
+            // successors (or the post-drain copy).
+            unsafe {
+                let mut td = tau_sp.sub(k, 0, bb, 1).view_mut();
+                for j in 0..bb {
+                    td.set(j, 0, tau_local[j]);
+                }
+            }
+            if k + bb < n {
+                // Materialize V / V^T / T^T once for the update tasks.
+                let v = Matrix::from_fn(rows, bb, |i, j| {
+                    if i == j {
+                        E::ONE
+                    } else if i > j {
+                        pv.at(i, j)
+                    } else {
+                        E::ZERO
+                    }
+                });
+                let tmat = larft(&v, &tau_local);
+                // SAFETY: snapshots are written only here; every reader
+                // is a graph successor.
+                unsafe {
+                    let mut vd = v_sp[t].view_mut();
+                    let mut vtd = vt_sp[t].view_mut();
+                    for c in 0..bb {
+                        for r in 0..rows {
+                            vd.set(r, c, v[(r, c)]);
+                            vtd.set(c, r, v[(r, c)]);
+                        }
+                    }
+                    let mut ttd = tt_sp[t].view_mut();
+                    for c in 0..bb {
+                        for r in 0..bb {
+                            ttd.set(c, r, tmat[(r, c)]);
+                        }
+                    }
+                }
+            }
+        }
+        QrTask::Update { t, j } => {
+            let (k, bb) = (col_of(t), width_of(t));
+            let rows = m - k;
+            let (cj, bj) = (col_of(j), width_of(j));
+            let ((cfg_w, kern_w), (cfg_tw, kern_tw), (cfg_u, kern_u)) = &plans[t];
+            // SAFETY: block-column j's previous writer Update(t-1, j) is
+            // a predecessor; V/V^T/T^T are frozen snapshots (read-only
+            // after Panel(t)); concurrent tasks touch other columns.
+            unsafe {
+                let a2s = shared.sub(k, cj, rows, bj).to_owned_matrix();
+                let mut w = Matrix::<E>::zeros(bb, bj);
+                gemm_blocked(
+                    cfg_w,
+                    kern_w,
+                    E::ONE,
+                    vt_sp[t].view(),
+                    a2s.view(),
+                    E::ZERO,
+                    &mut w.view_mut(),
+                    ws,
+                );
+                let mut tw = Matrix::<E>::zeros(bb, bj);
+                gemm_blocked(
+                    cfg_tw,
+                    kern_tw,
+                    E::ONE,
+                    tt_sp[t].view(),
+                    w.view(),
+                    E::ZERO,
+                    &mut tw.view_mut(),
+                    ws,
+                );
+                let mut c_s = shared.sub(k, cj, rows, bj).view_mut();
+                gemm_blocked(
+                    cfg_u,
+                    kern_u,
+                    E::from_f64(-1.0),
+                    v_sp[t].view(),
+                    tw.view(),
+                    E::ONE,
+                    &mut c_s,
+                    ws,
+                );
+            }
+        }
+    };
+    if !graph.is_empty() {
+        match &pool {
+            Some(p) => {
+                let job = |ctx: &crate::runtime::pool::PoolCtx<'_>| {
+                    execute_rank(&graph, ctx, |t| {
+                        let mut ws = ctx.workspace();
+                        body(t, &mut ws);
+                    });
+                };
+                p.run(&job);
+            }
+            None => {
+                let mut ws = Workspace::new();
+                execute_serial(&graph, |t| body(t, &mut ws));
+            }
+        }
+    }
+    for (i, slot) in tau.iter_mut().enumerate().take(n) {
+        *slot = tau_mat[(i, 0)];
     }
 }
 

@@ -216,7 +216,13 @@ impl BatchPlanner {
     /// against what the model says a request *should* cost, and the
     /// detector works in integer microseconds.
     pub fn estimate_us(&self, arch: &Arch, cfg: GemmConfig, dims: GemmDims) -> u64 {
-        (self.estimate(arch, cfg, dims) * 1e6).max(1.0) as u64
+        self.estimate_us_elem(arch, cfg, dims, 8)
+    }
+
+    /// [`Self::estimate_us`] at an explicit element width in bytes, so
+    /// f32 requests are judged against f32-rate estimates.
+    pub fn estimate_us_elem(&self, arch: &Arch, cfg: GemmConfig, dims: GemmDims, esize: usize) -> u64 {
+        (self.estimate_elem(arch, cfg, dims, esize) * 1e6).max(1.0) as u64
     }
 
     /// Is a GEMM of `dims` (configured as `cfg`) worth coalescing
@@ -234,6 +240,22 @@ impl BatchPlanner {
         threads: usize,
         policy: &BatchPolicy,
     ) -> bool {
+        self.is_batchable_elem(arch, cfg, dims, threads, policy, 8)
+    }
+
+    /// [`Self::is_batchable`] at an explicit element width in bytes —
+    /// the dtype-aware admission test behind the server's per-precision
+    /// buckets (an f32 GEMM is judged small against the f32 rate model,
+    /// and its grain check uses the f32 kernel's `nr`).
+    pub fn is_batchable_elem(
+        &self,
+        arch: &Arch,
+        cfg: GemmConfig,
+        dims: GemmDims,
+        threads: usize,
+        policy: &BatchPolicy,
+        esize: usize,
+    ) -> bool {
         if threads < 2 {
             return false;
         }
@@ -241,7 +263,7 @@ impl BatchPlanner {
             return true; // degenerate: trivially small
         }
         let starved = dims.n.div_ceil(cfg.mk.nr) < threads;
-        starved || self.estimate(arch, cfg, dims) < policy.small_seconds
+        starved || self.estimate_elem(arch, cfg, dims, esize) < policy.small_seconds
     }
 
     /// Partition a `threads`-wide team across the members of one fused

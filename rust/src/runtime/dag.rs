@@ -1,0 +1,385 @@
+//! Tile-DAG dataflow scheduler: a statically enumerated task graph with
+//! atomic in-degree counters, drained by the persistent pool workers
+//! through per-worker work-stealing deques — **no stop-the-world
+//! barriers** between tile tasks.
+//!
+//! The LAPACK drivers decompose a factorization into b×b tile tasks
+//! (GETRF/TRSM/GEMM for LU, POTRF/TRSM/SYRK slices for Cholesky,
+//! GEQRT/LARFB slices for QR), enumerate the graph up front with a
+//! [`GraphBuilder`], and drain it inside **one** broadcast job of the
+//! existing [`super::pool::WorkerPool`] (zero thread spawns, and the
+//! pool's poison/recovery machinery applies unchanged): each rank loops
+//! popping from its own deque and stealing from the others until the
+//! graph is empty. This is the Buttari–Langou–Kurzak–Dongarra tile
+//! dataflow model (arXiv 0709.1272) grafted onto our persistent pool.
+//!
+//! # Ready-queue protocol (Chase–Lev-style discipline)
+//!
+//! Each rank owns one deque of ready task ids:
+//!
+//! - **LIFO local pops** (`pop_back`): a task readied by this rank's
+//!   last completion touches the tiles it just wrote — popping newest
+//!   first keeps the working set cache-warm (depth-first descent of the
+//!   DAG, exactly the Chase–Lev owner end);
+//! - **FIFO steals** (`pop_front`): thieves take the *oldest* ready
+//!   task, which sits closest to the DAG's frontier and is least likely
+//!   to share cache lines with the victim's current tile.
+//!
+//! The deques here are mutex-protected ring buffers rather than the
+//! lock-free Chase–Lev array: every pop/steal brackets a tile task that
+//! is thousands of cycles of packed GEMM, so the lock is never the
+//! bottleneck, and the protocol (owner LIFO / thief FIFO, one owner per
+//! deque) is the part that matters for locality.
+//!
+//! # Dependency protocol
+//!
+//! Every edge `a -> b` contributes one unit to `b`'s in-degree counter.
+//! Completing `a` decrements each successor with `AcqRel`; the rank that
+//! observes the count hit zero pushes the successor onto **its own**
+//! deque (the new task reads tiles this rank just wrote). The
+//! read-modify-write chain on the counter gives every predecessor's
+//! writes a happens-before edge to the task's execution; stolen tasks
+//! inherit it through the deque mutex.
+//!
+//! # Termination, cancellation and panic recovery
+//!
+//! A shared `remaining` count reaches zero exactly when every task ran —
+//! idle ranks spin (yielding) on it instead of blocking on a barrier.
+//! Three things can end a drain early:
+//!
+//! - [`TaskGraph::cancel`] — a task hit a *typed* breakdown (singular
+//!   pivot, non-SPD block): completed work stops publishing successors
+//!   and every rank unwinds out cleanly; the driver reads its error slot.
+//! - A **panic inside a task**: a drop guard flips the same abort flag
+//!   before the unwind leaves the task, then the panic propagates into
+//!   the pool's catch/poison/recover machinery exactly like any job
+//!   panic.
+//! - A **rank dying outside any task** (e.g. an injected fault fires in
+//!   the pool's pre-job hook): no task guard runs, so idle ranks also
+//!   poll [`super::pool::PoolCtx::job_poisoned`] — the dying rank
+//!   poisons the pool barriers on its way out, which the survivors
+//!   observe and exit on instead of spinning forever on a `remaining`
+//!   that can no longer reach zero.
+//!
+//! Per-rank tallies (tasks executed, steals, failed steal probes, deque
+//! high-water mark) are folded into [`super::pool::PoolStats`] once per
+//! drain via [`super::pool::PoolCtx::note_dag_stats`].
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use super::pool::PoolCtx;
+
+/// Lock, shrugging off poison (same contract as the pool's own helper:
+/// the protected state is a plain id queue, always left consistent, and
+/// a panicked drain is re-thrown by the pool leader anyway).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Builder for a [`TaskGraph`]: add tasks, then edges, then [`seal`].
+///
+/// [`seal`]: GraphBuilder::seal
+#[derive(Default)]
+pub struct GraphBuilder {
+    succ: Vec<Vec<u32>>,
+    indeg: Vec<u32>,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a task; returns its id (dense, starting at 0).
+    pub fn add_task(&mut self) -> usize {
+        self.succ.push(Vec::new());
+        self.indeg.push(0);
+        self.succ.len() - 1
+    }
+
+    /// Add the dependency edge `from -> to` (`to` cannot start until
+    /// `from` completed). Duplicate edges are legal (each contributes
+    /// one in-degree unit and one matching decrement).
+    pub fn add_edge(&mut self, from: usize, to: usize) {
+        assert!(from < self.succ.len() && to < self.succ.len(), "edge endpoint out of range");
+        assert_ne!(from, to, "self-edge would deadlock the drain");
+        self.succ[from].push(to as u32);
+        self.indeg[to] += 1;
+    }
+
+    /// Freeze the graph for one drain by a `threads`-wide team. Panics
+    /// on a cyclic graph (a driver bug — a cycle would spin every rank
+    /// forever), verified with a full Kahn pass; the graphs here are a
+    /// few thousand tasks at most, so the check is noise next to one
+    /// tile GEMM.
+    pub fn seal(self, threads: usize) -> TaskGraph {
+        let n = self.succ.len();
+        let threads = threads.max(1);
+        let roots: Vec<u32> =
+            (0..n as u32).filter(|&t| self.indeg[t as usize] == 0).collect();
+        // Kahn pass over a scratch copy of the in-degrees.
+        let mut scratch = self.indeg.clone();
+        let mut stack: Vec<u32> = roots.clone();
+        let mut seen = 0usize;
+        while let Some(t) = stack.pop() {
+            seen += 1;
+            for &s in &self.succ[t as usize] {
+                scratch[s as usize] -= 1;
+                if scratch[s as usize] == 0 {
+                    stack.push(s);
+                }
+            }
+        }
+        assert_eq!(seen, n, "task graph has a cycle ({} of {n} tasks reachable)", seen);
+        TaskGraph {
+            succ: self.succ,
+            indeg: self.indeg.into_iter().map(AtomicU32::new).collect(),
+            roots,
+            remaining: AtomicUsize::new(n),
+            abort: AtomicBool::new(false),
+            deques: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+        }
+    }
+}
+
+/// A sealed, single-use task graph: in-degree counters, successor lists
+/// and the per-rank ready deques. Build one per factorization; a drained
+/// graph cannot be re-armed (the counters are consumed).
+pub struct TaskGraph {
+    succ: Vec<Vec<u32>>,
+    indeg: Vec<AtomicU32>,
+    roots: Vec<u32>,
+    /// Tasks not yet completed; 0 terminates the drain.
+    remaining: AtomicUsize,
+    /// Stop scheduling: set by [`TaskGraph::cancel`] (typed breakdown)
+    /// or by the unwind guard of a panicking task.
+    abort: AtomicBool,
+    deques: Vec<Mutex<VecDeque<u32>>>,
+}
+
+impl TaskGraph {
+    /// Number of tasks.
+    pub fn len(&self) -> usize {
+        self.succ.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.succ.is_empty()
+    }
+
+    /// Cancel the drain: no further successors are published, and every
+    /// rank exits its drain loop after the task it is currently running.
+    /// Used for typed breakdowns (singular pivot, non-SPD diagonal) —
+    /// the driver records the error in its own slot, cancels, and reads
+    /// the slot back after the pool job returns cleanly.
+    pub fn cancel(&self) {
+        self.abort.store(true, Ordering::Release);
+    }
+
+    /// Whether the drain was cancelled (or a task panicked).
+    pub fn cancelled(&self) -> bool {
+        self.abort.load(Ordering::Acquire)
+    }
+}
+
+/// Flips the graph's abort flag if the wrapped scope unwinds, so sibling
+/// ranks stop spinning for successors a dead task will never publish.
+struct AbortOnUnwind<'a>(&'a AtomicBool);
+
+impl Drop for AbortOnUnwind<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.store(true, Ordering::Release);
+        }
+    }
+}
+
+/// One rank's share of a pool-wide drain: call from every rank of a
+/// single broadcast job (`pool.run(&|ctx| execute_rank(&g, ctx, ...))`).
+/// `run_task` receives the task id; it runs with no locks held (the
+/// rank's deque is unlocked around it).
+///
+/// The graph must have been sealed with the pool's thread count.
+pub fn execute_rank<F: FnMut(usize)>(g: &TaskGraph, ctx: &PoolCtx<'_>, mut run_task: F) {
+    let threads = ctx.threads.min(g.deques.len());
+    let rank = ctx.rank;
+    assert!(
+        rank < g.deques.len(),
+        "graph sealed for {} ranks, executed by rank {rank}",
+        g.deques.len()
+    );
+    let (mut tasks, mut steals, mut steal_fails, mut hwm) = (0u64, 0u64, 0u64, 0u64);
+    // Seed this rank's deque with its round-robin share of the roots.
+    {
+        let mut dq = lock(&g.deques[rank]);
+        for (i, &root) in g.roots.iter().enumerate() {
+            if i % threads == rank {
+                dq.push_back(root);
+            }
+        }
+        hwm = hwm.max(dq.len() as u64);
+    }
+    loop {
+        // LIFO local pop: the most recently readied tile reads what this
+        // rank just wrote — the cache-warm end of the deque.
+        let popped = lock(&g.deques[rank]).pop_back();
+        let task = match popped {
+            Some(t) => t,
+            None => {
+                if g.remaining.load(Ordering::Acquire) == 0 || g.abort.load(Ordering::Acquire) {
+                    break;
+                }
+                if ctx.job_poisoned() {
+                    // A rank died outside any task (no abort guard ran):
+                    // `remaining` can never reach zero, so exit on the
+                    // poison the dying rank left on the pool barriers.
+                    break;
+                }
+                // FIFO steal sweep, round-robin from the next rank up.
+                let mut stolen = None;
+                for off in 1..threads {
+                    let victim = (rank + off) % threads;
+                    if let Some(t) = lock(&g.deques[victim]).pop_front() {
+                        steals += 1;
+                        stolen = Some(t);
+                        break;
+                    }
+                    steal_fails += 1;
+                }
+                match stolen {
+                    Some(t) => t,
+                    None => {
+                        std::thread::yield_now();
+                        continue;
+                    }
+                }
+            }
+        };
+        {
+            // If run_task panics, flag the abort before unwinding into
+            // the pool's poison/recovery machinery.
+            let _guard = AbortOnUnwind(&g.abort);
+            run_task(task as usize);
+        }
+        tasks += 1;
+        if !g.abort.load(Ordering::Acquire) {
+            let mut dq = lock(&g.deques[rank]);
+            for &s in &g.succ[task as usize] {
+                // AcqRel: release this task's writes to whoever runs the
+                // successor, acquire the other predecessors' writes when
+                // this decrement is the one that reaches zero.
+                if g.indeg[s as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
+                    dq.push_back(s);
+                }
+            }
+            hwm = hwm.max(dq.len() as u64);
+        }
+        g.remaining.fetch_sub(1, Ordering::AcqRel);
+    }
+    ctx.note_dag_stats(tasks, steals, steal_fails, hwm);
+}
+
+/// Inline drain on the calling thread (engines with no pool, i.e. a
+/// 1-thread plan): same LIFO descent as a 1-rank pool drain, so the
+/// task execution order — and for the bitwise-deterministic tile
+/// decompositions, every result bit — matches the pooled path.
+pub fn execute_serial<F: FnMut(usize)>(g: &TaskGraph, mut run_task: F) {
+    let mut stack: Vec<u32> = g.roots.clone();
+    while let Some(task) = stack.pop() {
+        run_task(task as usize);
+        if g.abort.load(Ordering::Acquire) {
+            return;
+        }
+        for &s in &g.succ[task as usize] {
+            if g.indeg[s as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
+                stack.push(s);
+            }
+        }
+        g.remaining.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::runtime::pool::WorkerPool;
+    use std::sync::atomic::AtomicU64;
+
+    /// A diamond a -> {b, c} -> d must run a first and d last.
+    #[test]
+    fn diamond_order_respected_serial() {
+        let mut gb = GraphBuilder::new();
+        let (a, b, c, d) = (gb.add_task(), gb.add_task(), gb.add_task(), gb.add_task());
+        gb.add_edge(a, b);
+        gb.add_edge(a, c);
+        gb.add_edge(b, d);
+        gb.add_edge(c, d);
+        let g = gb.seal(1);
+        let mut order = Vec::new();
+        execute_serial(&g, |t| order.push(t));
+        assert_eq!(order.len(), 4);
+        assert_eq!(order[0], a);
+        assert_eq!(order[3], d);
+    }
+
+    #[test]
+    fn pooled_drain_runs_every_task_once_and_counts() {
+        let pool = WorkerPool::new(4);
+        let mut gb = GraphBuilder::new();
+        // A 3-wide, 20-deep grid: task (r, c) depends on (r-1, c).
+        let ids: Vec<Vec<usize>> = (0..3)
+            .map(|_| (0..20).map(|_| gb.add_task()).collect())
+            .collect();
+        for chain in &ids {
+            for w in chain.windows(2) {
+                gb.add_edge(w[0], w[1]);
+            }
+        }
+        let g = gb.seal(pool.threads());
+        let ran: Vec<AtomicU64> = (0..g.len()).map(|_| AtomicU64::new(0)).collect();
+        let before = pool.stats();
+        pool.run(&|ctx| {
+            execute_rank(&g, ctx, |t| {
+                ran[t].fetch_add(1, Ordering::Relaxed);
+            })
+        });
+        for (t, r) in ran.iter().enumerate() {
+            assert_eq!(r.load(Ordering::Relaxed), 1, "task {t} ran a wrong number of times");
+        }
+        let after = pool.stats();
+        assert_eq!(after.dag_tasks - before.dag_tasks, g.len() as u64);
+        assert!(after.dag_deque_high_water >= 1);
+    }
+
+    #[test]
+    fn cancel_stops_scheduling_dependents() {
+        let mut gb = GraphBuilder::new();
+        let a = gb.add_task();
+        let b = gb.add_task();
+        gb.add_edge(a, b);
+        let g = gb.seal(1);
+        let mut ran = Vec::new();
+        execute_serial(&g, |t| {
+            ran.push(t);
+            g.cancel();
+        });
+        assert_eq!(ran, vec![a]);
+        assert!(g.cancelled());
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cycle_rejected_at_seal() {
+        let mut gb = GraphBuilder::new();
+        let a = gb.add_task();
+        let b = gb.add_task();
+        gb.add_edge(a, b);
+        gb.add_edge(b, a);
+        let _ = gb.seal(2);
+    }
+}

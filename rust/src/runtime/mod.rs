@@ -10,6 +10,12 @@
 //!   the seed's spawn-per-macro-block threading. A panicked job poisons
 //!   the epoch, drains, and is reported as a typed
 //!   [`pool::EpochError`] — the pool recovers instead of dying.
+//! - [`dag`] — the **tile-DAG dataflow scheduler**: statically
+//!   enumerated task graphs with atomic in-degree counters, drained by
+//!   the pool's ranks through per-worker work-stealing deques (LIFO
+//!   local pops, FIFO steals) inside a single broadcast job — the
+//!   barrier-free execution model of Buttari et al. for the blocked
+//!   factorizations, selected via `DLA_SCHED=dag`.
 //! - [`faults`] — the fault-injection harness behind the chaos suite
 //!   (`DLA_FAULTS`): one-shot rank panics, slow-rank delays, request
 //!   stalls and forced queue-full at admission, all free when un-armed.
@@ -26,6 +32,7 @@
 //!   restore [`convert`], [`registry`], [`PjrtEngine`] and the artifact
 //!   LU driver.
 
+pub mod dag;
 pub mod faults;
 pub mod pool;
 
@@ -39,6 +46,7 @@ pub use convert::{literal_to_matrix, matrix_to_literal};
 #[cfg(feature = "pjrt")]
 pub use registry::{Artifact, ArtifactKind, Registry};
 
+pub use dag::{execute_rank, execute_serial, GraphBuilder, TaskGraph};
 pub use faults::{FaultCounters, FaultPlan, FaultState};
 pub use pool::{EpochError, PinPolicy, PoolCtx, PoolStats, SubTeam, WorkerPool};
 

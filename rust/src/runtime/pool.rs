@@ -282,6 +282,18 @@ struct Shared {
     /// reset, a typed error returned); equals `epochs_poisoned` unless a
     /// recovery is in flight.
     recoveries: AtomicU64,
+    /// Tile tasks executed by the DAG scheduler (`runtime/dag.rs`),
+    /// summed over ranks and drains.
+    dag_tasks: AtomicU64,
+    /// Successful steals: tasks a rank took FIFO from another rank's
+    /// deque because its own was empty.
+    dag_steals: AtomicU64,
+    /// Failed steal probes (victim deque empty at inspection) — the DAG
+    /// path's idle metric, counted per probe rather than in wall time.
+    dag_steal_fails: AtomicU64,
+    /// High-water mark of any single rank's deque depth (fetch_max),
+    /// bounding the scheduler's ready-queue memory footprint.
+    dag_deque_high_water: AtomicU64,
     /// Armed fault-injection plan (`DLA_FAULTS` or an explicit plan);
     /// `None` costs one branch per job.
     faults: Option<Arc<FaultState>>,
@@ -380,6 +392,13 @@ impl PoolBarrier {
         }
     }
 
+    /// Whether a panicked rank has poisoned this barrier (polled by the
+    /// barrier-free DAG drain, which otherwise never observes a peer's
+    /// death).
+    fn is_poisoned(&self) -> bool {
+        lock_pool(&self.lock).poisoned
+    }
+
     /// Wake every waiter with a panic; idempotent.
     fn poison(&self) {
         let mut st = lock_pool(&self.lock);
@@ -446,6 +465,28 @@ impl<'p> PoolCtx<'p> {
             &self.shared.update_idle_ns
         };
         slot.fetch_add(waited, Ordering::Relaxed);
+    }
+
+    /// Whether this job's team barrier has been poisoned by a panicked
+    /// rank. The DAG drain (`runtime/dag.rs`) never blocks on barriers,
+    /// so its idle ranks poll this instead: a rank that dies *outside*
+    /// any tile task leaves the graph's task count stuck, and the poison
+    /// it sets on the way out is the survivors' only exit signal.
+    pub fn job_poisoned(&self) -> bool {
+        self.shared.barrier.is_poisoned()
+    }
+
+    /// Fold one rank's DAG-drain tallies into the pool counters: tasks
+    /// executed, successful steals, failed steal probes, and this rank's
+    /// deque high-water mark (merged with `fetch_max` so the pool-level
+    /// figure is the max over ranks and drains). Called once per rank at
+    /// the end of a `runtime/dag.rs` drain — per-task atomics on the hot
+    /// path would serialize the very stalls the scheduler removes.
+    pub fn note_dag_stats(&self, tasks: u64, steals: u64, steal_fails: u64, high_water: u64) {
+        self.shared.dag_tasks.fetch_add(tasks, Ordering::Relaxed);
+        self.shared.dag_steals.fetch_add(steals, Ordering::Relaxed);
+        self.shared.dag_steal_fails.fetch_add(steal_fails, Ordering::Relaxed);
+        self.shared.dag_deque_high_water.fetch_max(high_water, Ordering::Relaxed);
     }
 
     /// Partition the team into contiguous *groups* — one per entry of
@@ -589,6 +630,14 @@ pub struct PoolStats {
     /// Poisoned epochs fully recovered from (drained, barriers cleared,
     /// workspaces reset, typed error returned).
     pub recoveries: u64,
+    /// Tile tasks executed by the DAG scheduler (all ranks, all drains).
+    pub dag_tasks: u64,
+    /// Successful FIFO steals from other ranks' deques.
+    pub dag_steals: u64,
+    /// Failed steal probes (victim empty) — DAG idle, counted per probe.
+    pub dag_steal_fails: u64,
+    /// High-water mark of any single rank's deque depth.
+    pub dag_deque_high_water: u64,
 }
 
 /// A persistent team of `threads - 1` parked workers plus the caller.
@@ -653,6 +702,10 @@ impl WorkerPool {
             prefaulted_bytes: AtomicU64::new(0),
             epochs_poisoned: AtomicU64::new(0),
             recoveries: AtomicU64::new(0),
+            dag_tasks: AtomicU64::new(0),
+            dag_steals: AtomicU64::new(0),
+            dag_steal_fails: AtomicU64::new(0),
+            dag_deque_high_water: AtomicU64::new(0),
             faults,
             last_job_end: Mutex::new(None),
             workspaces: (0..threads).map(|_| Mutex::new(Workspace::new())).collect(),
@@ -714,6 +767,10 @@ impl WorkerPool {
             prefaulted_bytes: self.shared.prefaulted_bytes.load(Ordering::Relaxed),
             epochs_poisoned: self.shared.epochs_poisoned.load(Ordering::Relaxed),
             recoveries: self.shared.recoveries.load(Ordering::Relaxed),
+            dag_tasks: self.shared.dag_tasks.load(Ordering::Relaxed),
+            dag_steals: self.shared.dag_steals.load(Ordering::Relaxed),
+            dag_steal_fails: self.shared.dag_steal_fails.load(Ordering::Relaxed),
+            dag_deque_high_water: self.shared.dag_deque_high_water.load(Ordering::Relaxed),
         }
     }
 

@@ -348,3 +348,76 @@ fn batch_metrics_are_sane_under_forced_coalescing() {
     let s = metrics.summary();
     assert!(s.contains("batching: 1 fused dispatches"), "{s}");
 }
+
+#[test]
+fn f32_batched_server_is_bitwise_identical_to_serialized_f32() {
+    use dla_codesign::util::MatrixF32;
+    // The dtype-aware buckets: a stream of same-shape f32 GEMMs through
+    // a batching server must coalesce (dtype-keyed bucket, fused
+    // gemm_batch_t::<f32> dispatch) and every member must be bitwise
+    // identical to a solo f32 engine dispatch. Mixed-precision
+    // interleaving exercises the key: f64 requests of the *same shape*
+    // flow alongside and must never share a fused epoch with the f32s.
+    let mut rng = Pcg64::seed(271828);
+    let shapes = [(32usize, 32usize, 16usize), (24, 48, 8)];
+    let reqs32: Vec<(f32, MatrixF32, MatrixF32, f32, MatrixF32)> = (0..8)
+        .map(|i| {
+            let (m, n, k) = shapes[i % shapes.len()];
+            (
+                1.0 - (i % 3) as f32,
+                MatrixF32::random(m, k, &mut rng),
+                MatrixF32::random(k, n, &mut rng),
+                (i % 2) as f32,
+                MatrixF32::random(m, n, &mut rng),
+            )
+        })
+        .collect();
+    let run = |batching: BatchPolicy| -> Vec<MatrixF32> {
+        let server = CoordinatorServer::start(
+            ServerConfig::new(host_xeon(), ConfigMode::Refined)
+                .with_workers(2)
+                .with_gemm_threads(3)
+                .with_batching(batching),
+        )
+        .unwrap();
+        let pending: Vec<_> = reqs32
+            .iter()
+            .map(|(alpha, a, b, beta, c0)| {
+                // Same-shape f64 decoy sharing the admission window.
+                let a64 = MatrixF64::random(a.rows(), a.cols(), &mut Pcg64::seed(7));
+                let b64 = MatrixF64::random(b.rows(), b.cols(), &mut Pcg64::seed(8));
+                let c64 = MatrixF64::zeros(a.rows(), b.cols());
+                let _ = server.submit(gemm_req(1.0, &a64, &b64, 0.0, &c64)).unwrap();
+                server
+                    .submit(DlaRequest::GemmF32 {
+                        alpha: *alpha,
+                        a: a.clone(),
+                        b: b.clone(),
+                        beta: *beta,
+                        c: c0.clone(),
+                    })
+                    .unwrap()
+            })
+            .collect();
+        server.shutdown();
+        pending
+            .into_iter()
+            .map(|rx| match rx.recv().unwrap().unwrap() {
+                DlaResponse::MatrixF32 { result, .. } => result,
+                _ => panic!("f32 request must answer as MatrixF32"),
+            })
+            .collect()
+    };
+    let serial = run(BatchPolicy::disabled());
+    let batched = run(BatchPolicy::default().with_max_batch(4).with_wait_us(2_000).admit_all());
+    for (i, (s, b)) in serial.iter().zip(&batched).enumerate() {
+        assert_eq!(s.max_abs_diff(b), 0.0, "f32 request {i}: batched bits differ from serialized");
+    }
+    // And both match an independent solo f32 engine oracle.
+    for (i, ((alpha, a, b, beta, c0), got)) in reqs32.iter().zip(&batched).enumerate() {
+        let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+        let mut c = c0.clone();
+        eng.gemm_t::<f32>(*alpha, a.view(), b.view(), *beta, &mut c.view_mut());
+        assert_eq!(got.max_abs_diff(&c), 0.0, "f32 request {i} diverges from the solo oracle");
+    }
+}

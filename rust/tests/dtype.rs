@@ -192,18 +192,23 @@ fn f32_batched_gemm_bitwise_matches_serial() {
 /// tolerance.
 #[test]
 fn f32_lookahead_lu_bitwise_matches_baseline() {
+    use dla_codesign::gemm::SchedPolicy;
     let threads = threads_from_env().max(2);
     let (s, b) = (96usize, 16usize);
     let mut rng = Pcg64::seed(s as u64);
     let a0 = MatrixF32::random_diag_dominant(s, &mut rng);
-    // Serialized baseline (lookahead off, sequential engine).
-    let mut base_eng =
-        GemmEngine::new(host_xeon(), ConfigMode::Refined).with_lookahead(Lookahead::disabled());
+    // Serialized baseline (lookahead off, sequential engine). The sched
+    // pin keeps this a *lookahead* test under the CI `DLA_SCHED=dag`
+    // leg (tests/dag.rs covers the DAG driver at f32).
+    let mut base_eng = GemmEngine::new(host_xeon(), ConfigMode::Refined)
+        .with_lookahead(Lookahead::disabled())
+        .with_sched(SchedPolicy::Lookahead);
     let base: LuFactors<f32> = lu_factor_t::<f32>(&a0, b, &mut base_eng).unwrap();
     assert!(base.reconstruction_error(&a0) < 1e-4);
     for depth in [1usize, 2] {
         let mut eng = engine(threads, ParallelLoop::G4)
-            .with_lookahead(Lookahead { depth, panel_workers: AUTO_PANEL_WORKERS });
+            .with_lookahead(Lookahead { depth, panel_workers: AUTO_PANEL_WORKERS })
+            .with_sched(SchedPolicy::Lookahead);
         let f = lu_factor_t::<f32>(&a0, b, &mut eng).unwrap();
         assert_eq!(f.pivots, base.pivots, "depth {depth}: f32 pivots must match baseline");
         assert_eq!(

@@ -15,16 +15,20 @@
 use std::sync::Arc;
 
 use dla_codesign::gemm::{
-    ConfigMode, GemmEngine, Lookahead, ParallelLoop, ThreadPlan, AUTO_PANEL_WORKERS,
+    ConfigMode, GemmEngine, Lookahead, ParallelLoop, SchedPolicy, ThreadPlan, AUTO_PANEL_WORKERS,
 };
 use dla_codesign::arch::host_xeon;
 use dla_codesign::lapack::{self, cholesky::cholesky_blocked, lu_factor, qr_blocked};
 use dla_codesign::util::{MatrixF64, Pcg64};
 
+/// Every engine in this suite pins the lookahead scheduler: the CI
+/// matrix's `DLA_SCHED=dag` leg must not silently turn these into
+/// DAG-vs-DAG comparisons (the DAG suite is `tests/dag.rs`).
 fn engine(threads: usize, la: Lookahead) -> GemmEngine {
     GemmEngine::new(host_xeon(), ConfigMode::Refined)
         .with_plan(ThreadPlan { threads, target: ParallelLoop::G4 })
         .with_lookahead(la)
+        .with_sched(SchedPolicy::Lookahead)
 }
 
 /// Thread widths under test: the fixed {1, 2, 4} of the acceptance
