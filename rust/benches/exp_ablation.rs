@@ -47,6 +47,14 @@
 //!     (executed tasks, steals, failed probes, deque high-water) show
 //!     where the dataflow drain spends the recovered wait time.
 //!     Appended to the same `BENCH_gemm.json`.
+//! 11. **Analytic-only vs measurement-calibrated selection** — the same
+//!     engine with and without an online [`PerfProfile`] attached, over
+//!     the two workloads where a profile has time to get hot: the
+//!     LU-style trailing-update sweep (m = n shrinking, skinny fixed k)
+//!     and a repeated-shape small-GEMM serving mix through the
+//!     coordinator server (`CalibratePolicy` pinned per arm). The store
+//!     /memo counters land next to the timings. Appended to the same
+//!     `BENCH_gemm.json`.
 use dla_codesign::arch::detect_host;
 use dla_codesign::coordinator::{BatchPolicy, CoordinatorServer, DlaRequest, ServerConfig};
 use dla_codesign::bench::{BenchGroup, JsonBench};
@@ -59,7 +67,8 @@ use dla_codesign::gemm::{
 use dla_codesign::lapack::refine::{lu_solve_f64, lu_solve_mixed, RefineOptions};
 use dla_codesign::lapack::{cholesky_blocked, getf2, lu_blocked, lu_flops};
 use dla_codesign::model::ccp::GemmConfig;
-use dla_codesign::model::{refined_ccp, Ccp, GemmDims, MicroKernel};
+use dla_codesign::model::{refined_ccp, CalibratePolicy, Ccp, GemmDims, MicroKernel, PerfProfile};
+use std::sync::Arc;
 use dla_codesign::runtime::pool::WorkerPool;
 use dla_codesign::util::timer::measure;
 use dla_codesign::util::{MatrixF32, MatrixF64, Pcg64, Stopwatch};
@@ -734,6 +743,146 @@ fn main() {
         }
     }
     g10.finish("bench_ablation_sched");
+
+    // --- 11. analytic-only vs measurement-calibrated selection ---------
+    // Calibration off is bitwise-identical selection (tests/calibration),
+    // so any delta here is the measured-truth re-ranking plus the
+    // warm-state pack discount actually paying for themselves. Two
+    // repeated-shape workloads where the store has time to get hot; the
+    // acceptance bar is match-or-beat on both.
+    println!("=== ablation 11: analytic-only vs calibrated selection (x{threads}) ===");
+    let mut g11 = BenchGroup::new("analytic vs calibrated selection");
+    // (a) The factorization hot sequence: trailing updates m = n
+    // shrinking at a skinny fixed k — the shape class the warm-state
+    // discount targets (the k-panel stays resident between updates).
+    let calib_k = 64usize;
+    let mut trail = Vec::new();
+    let mut st = mn.saturating_sub(calib_k);
+    while st >= calib_k {
+        trail.push(st);
+        st -= calib_k;
+    }
+    let trail_flops: f64 = trail.iter().map(|&s| 2.0 * (s * s * calib_k) as f64).sum();
+    let mut trail_secs = [0.0f64; 2];
+    for calibrated in [false, true] {
+        let label = if calibrated { "calibrated" } else { "analytic" };
+        let mut eng = GemmEngine::new(arch.clone(), ConfigMode::Refined)
+            .with_plan(ThreadPlan { threads, target: ParallelLoop::G4 });
+        let profile = calibrated.then(|| Arc::new(PerfProfile::new()));
+        if let Some(p) = &profile {
+            eng.set_calibration(Some(Arc::clone(p)));
+        }
+        // Two untimed warm passes for both arms: the analytic arm warms
+        // its config memo, the calibrated arm additionally records its
+        // first measurements so the timed passes run on a hot store.
+        for _ in 0..2 {
+            for &s in &trail {
+                let mut cv = c.sub_mut(0, 0, s, s);
+                eng.gemm(1.0, a.sub(0, 0, s, calib_k), b.sub(0, 0, calib_k, s), 0.0, &mut cv);
+            }
+        }
+        let case = g11
+            .case(&format!("trailing sweep {label} k={calib_k} x{threads}"), trail_flops, || {
+                for &s in &trail {
+                    let mut cv = c.sub_mut(0, 0, s, s);
+                    eng.gemm(1.0, a.sub(0, 0, s, calib_k), b.sub(0, 0, calib_k, s), 0.0, &mut cv);
+                }
+            })
+            .clone();
+        trail_secs[calibrated as usize] = case.measurement.mean_s;
+        let ps = profile.as_ref().map(|p| p.stats()).unwrap_or_default();
+        j.entry(
+            &format!("calib_trailing_{label}"),
+            &[
+                ("threads", threads as f64),
+                ("k", calib_k as f64),
+                ("updates", trail.len() as f64),
+                ("mean_seconds", case.measurement.mean_s),
+                ("min_seconds", case.measurement.min_s),
+                ("gflops", case.gflops()),
+                ("observations", ps.observations as f64),
+                ("store_entries", ps.entries as f64),
+                ("blended", ps.blended as f64),
+                ("explorations", ps.explorations as f64),
+            ],
+        );
+    }
+    println!(
+        "  trailing sweep: calibrated {:.4}s vs analytic {:.4}s ({:.3}x)",
+        trail_secs[1],
+        trail_secs[0],
+        trail_secs[0] / trail_secs[1]
+    );
+    j.entry("calib_trailing_speedup", &[("mean", trail_secs[0] / trail_secs[1])]);
+    // (b) The repeated-shape serving mix of ablation 7 (batching pinned
+    // off in both arms so the delta is selection, not coalescing): the
+    // calibrated server learns from its own request stream mid-run.
+    let mut serve_secs = [0.0f64; 2];
+    for calibrated in [false, true] {
+        let label = if calibrated { "calibrated" } else { "analytic" };
+        let policy = if calibrated { CalibratePolicy::On } else { CalibratePolicy::Off };
+        let server = CoordinatorServer::start(
+            ServerConfig::new(arch.clone(), ConfigMode::Refined)
+                .with_workers(2)
+                .with_gemm_threads(threads)
+                .with_batching(BatchPolicy::disabled())
+                .with_calibration(policy),
+        )
+        .expect("server start");
+        let sw = Stopwatch::start();
+        {
+            let mut rng11 = Pcg64::seed(11);
+            let mut pending = Vec::with_capacity(nreq);
+            for i in 0..nreq {
+                let (m, n, kk) = shapes[i % shapes.len()];
+                pending.push(
+                    server
+                        .submit(DlaRequest::Gemm {
+                            alpha: 1.0,
+                            a: MatrixF64::random(m, kk, &mut rng11),
+                            b: MatrixF64::random(kk, n, &mut rng11),
+                            beta: 0.0,
+                            c: MatrixF64::zeros(m, n),
+                        })
+                        .expect("submit"),
+                );
+            }
+            for rx in pending {
+                rx.recv().unwrap().unwrap();
+            }
+        }
+        let secs = sw.elapsed_secs();
+        serve_secs[calibrated as usize] = secs;
+        g11.record(&format!("serve {label} x{threads} ({nreq} reqs)"), secs, mix_flops);
+        let metrics = server.shutdown();
+        let cs = *metrics.calibration_stats();
+        println!(
+            "  serve {label}: {:.0} req/s, {} observations ({} store entries), {} blended",
+            nreq as f64 / secs,
+            cs.observations,
+            cs.store_entries,
+            cs.blended,
+        );
+        j.entry(
+            &format!("calib_serving_{label}"),
+            &[
+                ("threads", threads as f64),
+                ("workers", 2.0),
+                ("requests", nreq as f64),
+                ("mean_seconds", secs),
+                ("req_per_s", nreq as f64 / secs),
+                ("gflops", mix_flops / secs / 1e9),
+                ("observations", cs.observations as f64),
+                ("store_entries", cs.store_entries as f64),
+                ("blended", cs.blended as f64),
+                ("explorations", cs.explorations as f64),
+                ("config_hits", cs.config_hits as f64),
+                ("config_misses", cs.config_misses as f64),
+            ],
+        );
+    }
+    j.entry("calib_serving_speedup", &[("mean", serve_secs[0] / serve_secs[1])]);
+    g11.finish("bench_ablation_calibration");
 
     match j.write("BENCH_gemm.json") {
         Ok(()) => println!(

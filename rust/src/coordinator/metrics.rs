@@ -11,7 +11,11 @@
 //! the failure-path accounting ([`FaultMetrics`]: rejected inputs,
 //! expired deadlines, admission retries/rejections, worker panics and
 //! the degraded-mode request count), so an operator can see a server
-//! absorbing faults instead of silently retrying.
+//! absorbing faults instead of silently retrying — and the
+//! measurement-calibration counters ([`CalibrationMetrics`]: profile
+//! observations, blended scores, explorations, config/team-size memo
+//! hit rates), so calibrated selection is observable alongside the
+//! analytic baseline.
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::collections::BTreeMap;
@@ -332,6 +336,64 @@ impl From<crate::gemm::AbftCounters> for AbftMetrics {
     }
 }
 
+/// Counters of the measurement-calibrated selection layer (see
+/// `crate::model::profile`): whether calibration is armed, how many
+/// timings the shared [`PerfProfile`] absorbed, how often the blended
+/// scorer actually consulted it, how many epsilon-exploration detours
+/// fired, plus the engine-side config/team-size memo hit rates the
+/// profile's generation key governs. All-zero-and-disabled on a server
+/// running without `DLA_CALIBRATE` — the summary omits the
+/// `calibration:` line entirely in that case, so the default output is
+/// byte-identical.
+///
+/// [`PerfProfile`]: crate::model::PerfProfile
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CalibrationMetrics {
+    /// True when a [`PerfProfile`](crate::model::PerfProfile) is
+    /// attached to the engine (calibration armed).
+    pub enabled: bool,
+    /// Timed epochs recorded into the measurement store.
+    pub observations: u64,
+    /// Epsilon-exploration selections (runner-up configs tried).
+    pub explorations: u64,
+    /// Selections that blended a measured mean into the analytic score.
+    pub blended: u64,
+    /// Distinct (shape-bucket, dtype, config, width) keys in the store.
+    pub store_entries: u64,
+    /// GEMM config-cache memo hits.
+    pub config_hits: u64,
+    /// GEMM config-cache memo misses (full selection runs).
+    pub config_misses: u64,
+    /// Panel-team-size memo hits.
+    pub team_hits: u64,
+    /// Panel-team-size memo misses (model evaluations).
+    pub team_misses: u64,
+}
+
+impl CalibrationMetrics {
+    /// True once calibration is armed or any measurement landed — gates
+    /// the summary line (memo counters alone don't; they predate this
+    /// family and the healthy default output must stay byte-identical).
+    pub fn any(&self) -> bool {
+        self.enabled || self.observations > 0
+    }
+
+    pub fn merge(&mut self, other: &CalibrationMetrics) {
+        self.enabled |= other.enabled;
+        // Workers own disjoint engines, so memo counters sum...
+        self.config_hits += other.config_hits;
+        self.config_misses += other.config_misses;
+        self.team_hits += other.team_hits;
+        self.team_misses += other.team_misses;
+        // ...but share one profile store, so every snapshot observes the
+        // same monotone counters: keep the largest.
+        self.observations = self.observations.max(other.observations);
+        self.explorations = self.explorations.max(other.explorations);
+        self.blended = self.blended.max(other.blended);
+        self.store_entries = self.store_entries.max(other.store_entries);
+    }
+}
+
 /// Metrics for one request kind.
 #[derive(Default)]
 pub struct KindMetrics {
@@ -361,6 +423,9 @@ pub struct Metrics {
     /// ABFT verified-compute accounting (all-zero under
     /// `VerifyPolicy::Off`).
     abft: AbftMetrics,
+    /// Measurement-calibration accounting (disabled and all-zero
+    /// without `DLA_CALIBRATE`; memo counters populate regardless).
+    calibration: CalibrationMetrics,
     /// Admission-queue wait histogram (microsecond log2 buckets) — the
     /// percentile-capable companion of `batch.queue_wait_ns`.
     queue_wait: LatencyHistogram,
@@ -430,6 +495,17 @@ impl Metrics {
         &self.abft
     }
 
+    /// Replace the calibration snapshot (profile and memo counters are
+    /// cumulative, so each call supersedes the previous one).
+    pub fn set_calibration(&mut self, c: CalibrationMetrics) {
+        self.calibration = c;
+    }
+
+    /// The measurement-calibration counters.
+    pub fn calibration_stats(&self) -> &CalibrationMetrics {
+        &self.calibration
+    }
+
     /// The batch scheduler's coalescing counters.
     pub fn batch_stats(&self) -> &BatchMetrics {
         &self.batch
@@ -486,6 +562,9 @@ impl Metrics {
         self.qos.merge(&other.qos);
         // Workers own disjoint engines, so ABFT counters sum.
         self.abft.merge(&other.abft);
+        // Memo counters sum (disjoint engines); profile-store counters
+        // keep the max (one shared store observed repeatedly).
+        self.calibration.merge(&other.calibration);
         for _ in 0..other.queue_wait.count() {
             self.queue_wait.record_secs(other.queue_wait.mean_us() * 1e-6);
         }
@@ -613,6 +692,21 @@ impl Metrics {
                 a.corrected,
                 a.uncorrectable,
                 a.overhead_ns as f64 / 1e6,
+            ));
+        }
+        if self.calibration.any() {
+            let c = &self.calibration;
+            out.push_str(&format!(
+                "calibration: {} observations ({} store entries), {} blended scores, \
+                 {} explorations, config memo {}/{} hits, team memo {}/{} hits\n",
+                c.observations,
+                c.store_entries,
+                c.blended,
+                c.explorations,
+                c.config_hits,
+                c.config_hits + c.config_misses,
+                c.team_hits,
+                c.team_hits + c.team_misses,
             ));
         }
         if self.qos.any() {
@@ -754,9 +848,24 @@ impl Metrics {
             a.uncorrectable,
             a.overhead_ns,
         );
+        let c = &self.calibration;
+        let calibration = format!(
+            "{{\"enabled\":{},\"observations\":{},\"explorations\":{},\"blended\":{},\
+             \"store_entries\":{},\"config_hits\":{},\"config_misses\":{},\
+             \"team_hits\":{},\"team_misses\":{}}}",
+            c.enabled,
+            c.observations,
+            c.explorations,
+            c.blended,
+            c.store_entries,
+            c.config_hits,
+            c.config_misses,
+            c.team_hits,
+            c.team_misses,
+        );
         format!(
             "{{\"requests\":{{{}}},\"queue_wait\":{},\"pool\":{},\"batch\":{},\
-             \"qos\":{{{}}},\"refine\":{},\"faults\":{},\"abft\":{}}}",
+             \"qos\":{{{}}},\"refine\":{},\"faults\":{},\"abft\":{},\"calibration\":{}}}",
             kinds.join(","),
             queue_wait,
             pool,
@@ -765,6 +874,7 @@ impl Metrics {
             refine,
             faults,
             abft,
+            calibration,
         )
     }
 }
@@ -925,7 +1035,17 @@ mod tests {
         let mut m = Metrics::new();
         // Empty metrics still produce every key.
         let j = m.snapshot_json();
-        for key in ["requests", "queue_wait", "pool", "batch", "qos", "refine", "faults", "abft"] {
+        for key in [
+            "requests",
+            "queue_wait",
+            "pool",
+            "batch",
+            "qos",
+            "refine",
+            "faults",
+            "abft",
+            "calibration",
+        ] {
             assert!(j.contains(&format!("\"{key}\":")), "missing {key} in {j}");
         }
         assert!(j.contains("\"pool\":null"), "{j}");
@@ -946,6 +1066,62 @@ mod tests {
         assert!(j.contains("\"timeouts\":7"), "{j}");
         assert!(j.contains("\"interactive\":{\"submitted\":3"), "{j}");
         assert!(j.contains("\"count\":2,\"mean_us\":2.0"), "queue-wait stats in {j}");
+    }
+
+    #[test]
+    fn calibration_metrics_merge_and_summarize() {
+        let mut a = Metrics::new();
+        assert!(!a.calibration_stats().any());
+        assert!(!a.summary().contains("calibration:"), "no line without calibration traffic");
+        // Memo counters alone (uncalibrated engine) must not add a line.
+        a.set_calibration(CalibrationMetrics {
+            config_hits: 7,
+            config_misses: 3,
+            team_hits: 2,
+            team_misses: 1,
+            ..CalibrationMetrics::default()
+        });
+        assert!(!a.summary().contains("calibration:"), "memo counters alone stay silent");
+        assert!(a.snapshot_json().contains("\"config_hits\":7"), "{}", a.snapshot_json());
+        // Armed calibration surfaces the line even before observations.
+        a.set_calibration(CalibrationMetrics {
+            enabled: true,
+            observations: 40,
+            explorations: 2,
+            blended: 12,
+            store_entries: 5,
+            config_hits: 7,
+            config_misses: 3,
+            team_hits: 2,
+            team_misses: 1,
+        });
+        let s = a.summary();
+        assert!(s.contains("calibration: 40 observations (5 store entries)"), "{s}");
+        assert!(s.contains("config memo 7/10 hits"), "{s}");
+        assert!(s.contains("team memo 2/3 hits"), "{s}");
+        // Merge: memo counters sum (disjoint engines), shared-store
+        // counters keep the max (one profile observed twice).
+        let mut b = Metrics::new();
+        b.set_calibration(CalibrationMetrics {
+            enabled: true,
+            observations: 55,
+            explorations: 1,
+            blended: 9,
+            store_entries: 6,
+            config_hits: 4,
+            config_misses: 2,
+            team_hits: 1,
+            team_misses: 1,
+        });
+        a.merge(b);
+        let c = a.calibration_stats();
+        assert!(c.enabled);
+        assert_eq!((c.config_hits, c.config_misses), (11, 5));
+        assert_eq!((c.team_hits, c.team_misses), (3, 2));
+        assert_eq!((c.observations, c.explorations), (55, 2));
+        assert_eq!((c.blended, c.store_entries), (12, 6));
+        let j = a.snapshot_json();
+        assert!(j.contains("\"calibration\":{\"enabled\":true,\"observations\":55"), "{j}");
     }
 
     #[test]

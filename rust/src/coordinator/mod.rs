@@ -60,7 +60,10 @@ pub mod server;
 pub use lu_driver::{lu_via_artifacts, LuArtifactResult};
 pub use crate::model::batchplan::BatchPolicy;
 pub use crate::util::DlaError;
-pub use metrics::{AbftMetrics, BatchMetrics, FaultMetrics, Metrics, QosMetrics, RefineMetrics};
+pub use metrics::{
+    AbftMetrics, BatchMetrics, CalibrationMetrics, FaultMetrics, Metrics, QosMetrics,
+    RefineMetrics,
+};
 pub use qos::{OverloadLevel, Priority};
 pub use requests::{DlaRequest, DlaResponse};
 pub use server::{CoordinatorServer, JobHandle, ServerConfig};
@@ -108,15 +111,42 @@ impl Coordinator {
         self
     }
 
+    /// Attach a (shared) measurement store (see
+    /// [`crate::model::profile`]): the engine times its pool dispatches
+    /// and blends the analytic selection priors with measured GFLOPS,
+    /// so config, team-size and batch decisions refine toward measured
+    /// truth as this coordinator serves traffic.
+    pub fn with_calibration(
+        mut self,
+        profile: std::sync::Arc<crate::model::PerfProfile>,
+    ) -> Self {
+        self.engine.set_calibration(Some(profile));
+        self
+    }
+
     /// Refresh the metrics' snapshot of the engine pool's idle accounting
-    /// (no-op for sequential engines) and of the engine's ABFT counters.
-    /// Called after every request so the summary always reflects the
-    /// latest counters.
+    /// (no-op for sequential engines), of the engine's ABFT counters, and
+    /// of the calibration/memo-cache counters. Called after every request
+    /// so the summary always reflects the latest counters.
     fn snapshot_pool_stats(&mut self) {
         if let Some(pool) = self.engine.pool() {
             self.metrics.set_pool_stats(pool.stats());
         }
         self.metrics.set_abft(self.engine.abft_stats().snapshot());
+        let cfg = self.engine.config_cache_stats();
+        let team = self.engine.team_size_cache_stats();
+        let prof = self.engine.profile().map(|p| p.stats()).unwrap_or_default();
+        self.metrics.set_calibration(metrics::CalibrationMetrics {
+            enabled: self.engine.profile().is_some(),
+            observations: prof.observations,
+            explorations: prof.explorations,
+            blended: prof.blended,
+            store_entries: prof.entries,
+            config_hits: cfg.hits,
+            config_misses: cfg.misses,
+            team_hits: team.hits,
+            team_misses: team.misses,
+        });
     }
 
     /// Hit/miss accounting of the engine's config-selection memo cache

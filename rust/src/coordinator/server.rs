@@ -130,6 +130,26 @@
 //!   instead of letting the server oscillate between the pooled path and
 //!   fresh panics. The window length itself is configurable
 //!   ([`ServerConfig::with_degraded_window`] / `DLA_DEGRADED_WINDOW`).
+//!
+//! # Measurement-calibrated selection
+//!
+//! With [`ServerConfig::with_calibration`] (or `DLA_CALIBRATE=1`) every
+//! worker engine and the batcher share one
+//! [`PerfProfile`](crate::model::PerfProfile): pool-epoch timings
+//! recorded by the engines refine the analytic config/team-size/
+//! admission scores online (confidence-weighted blending — see
+//! `crate::model::profile`), `DLA_PROFILE=path` persists the store
+//! across processes (loaded at [`CoordinatorServer::start`], saved at
+//! [`CoordinatorServer::shutdown`]), and bounded deterministic
+//! exploration occasionally tries the runner-up configuration — never
+//! for Interactive-tier requests, and never in the batcher (a fused
+//! bucket may carry Interactive members). Off (the default) attaches
+//! nothing: selections are bitwise identical to the pure-analytic path
+//! and the timing hooks never fire. The degraded serial fallback
+//! coordinator also stays pure-analytic by design — a post-panic
+//! cooldown is the wrong place to learn from timings. Calibration
+//! counters land in [`super::metrics::CalibrationMetrics`] (the
+//! `calibration:` summary line).
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::collections::HashMap;
@@ -143,7 +163,7 @@ use std::time::{Duration, Instant};
 use crate::arch::Arch;
 use crate::gemm::{ConfigMode, GemmBatchItem, Lookahead, VerifyPolicy};
 use crate::model::batchplan::{BatchPlanner, BatchPolicy};
-use crate::model::GemmDims;
+use crate::model::{CalibratePolicy, GemmDims, PerfProfile};
 use crate::runtime::faults::{FaultPlan, FaultState};
 use crate::runtime::pool::WorkerPool;
 use crate::util::error::{panic_reason, DlaError};
@@ -216,6 +236,12 @@ pub struct ServerConfig {
     /// deterministic (jitter only decorrelates concurrent submitters —
     /// any seed is as good as any other in production).
     pub jitter_seed: Option<u64>,
+    /// Measurement-calibrated selection policy; `None` defers to the
+    /// `DLA_CALIBRATE` environment override, then `Off`. Off (the
+    /// default) means no profile is attached anywhere: selections are
+    /// bitwise identical to the pure-analytic path and the timing hooks
+    /// never fire.
+    pub calibration: Option<CalibratePolicy>,
 }
 
 impl ServerConfig {
@@ -234,6 +260,7 @@ impl ServerConfig {
             default_priority: None,
             verify: None,
             jitter_seed: None,
+            calibration: None,
         }
     }
 
@@ -310,6 +337,18 @@ impl ServerConfig {
     /// retry timing reproducible for drills and tests.
     pub fn with_jitter_seed(mut self, seed: u64) -> Self {
         self.jitter_seed = Some(seed);
+        self
+    }
+
+    /// Pin the measurement-calibration policy (see
+    /// `crate::model::profile`): `On` attaches one shared
+    /// [`PerfProfile`] to every worker engine and the batcher, so epoch
+    /// timings refine the analytic selection online. A pinned policy
+    /// wins over the `DLA_CALIBRATE` override; pin
+    /// [`CalibratePolicy::Off`] to force calibration off regardless of
+    /// the environment.
+    pub fn with_calibration(mut self, policy: CalibratePolicy) -> Self {
+        self.calibration = Some(policy);
         self
     }
 }
@@ -564,10 +603,19 @@ fn batcher_loop(
     mode: ConfigMode,
     pool: Option<Arc<WorkerPool>>,
     tiers: Arc<TierCounters>,
+    profile: Option<Arc<PerfProfile>>,
 ) -> Metrics {
     let mut co = Coordinator::new(arch, mode);
     if let Some(pool) = pool {
         co = co.with_pool(pool);
+    }
+    if let Some(p) = profile {
+        // The batcher's per-member config selection reads the blended
+        // scores, but fused epochs are not timed (one epoch serves many
+        // members; per-member attribution is unknowable) and never
+        // explored (a bucket may carry Interactive-tier members).
+        co = co.with_calibration(p);
+        co.engine.set_explore_allowed(false);
     }
     while let Some(batch) = queue.next_batch() {
         // Deadline-expired entries get a Timeout, not a late answer.
@@ -906,6 +954,12 @@ pub struct CoordinatorServer {
     /// constant seed is fine — jitter decorrelates concurrent
     /// submitters, it does not need to be unpredictable).
     jitter_seed: AtomicU64,
+    /// The shared measurement store (calibrated servers only), kept for
+    /// the `DLA_PROFILE` save at shutdown and for test introspection.
+    profile: Option<Arc<PerfProfile>>,
+    /// Where to persist the store at shutdown (`DLA_PROFILE`, read once
+    /// at start and only on calibrated servers).
+    profile_path: Option<String>,
 }
 
 impl CoordinatorServer {
@@ -940,6 +994,27 @@ impl CoordinatorServer {
         // never consult the environment themselves, so a stray env var
         // cannot silently change results outside the serving path.
         let verify = cfg.verify.or_else(VerifyPolicy::from_env).unwrap_or(VerifyPolicy::Off);
+        // Calibration: pinned wins, then the DLA_CALIBRATE override,
+        // then Off. One shared profile is the cross-worker measurement
+        // memory: every worker engine and the batcher blend against it.
+        // The degraded serial fallback coordinator deliberately stays
+        // pure-analytic — a post-panic cooldown window is the wrong
+        // place to learn from timings.
+        let calibrate =
+            cfg.calibration.or_else(CalibratePolicy::from_env).unwrap_or(CalibratePolicy::Off);
+        let profile = calibrate.enabled().then(|| Arc::new(PerfProfile::new()));
+        // DLA_PROFILE persistence: load once here (a missing or
+        // malformed file warns and cold-starts), save at shutdown.
+        // Read only when calibration is armed, so an off server never
+        // touches the filesystem.
+        let profile_path = profile
+            .is_some()
+            .then(|| std::env::var("DLA_PROFILE").ok())
+            .flatten()
+            .filter(|p| !p.trim().is_empty());
+        if let (Some(p), Some(path)) = (&profile, &profile_path) {
+            p.load_from_path(path);
+        }
         // A pinned batching policy always wins (so BatchPolicy::disabled()
         // really disables); un-pinned servers take the env override. On a
         // 1-thread pool admission can never succeed (is_batchable needs a
@@ -985,6 +1060,7 @@ impl CoordinatorServer {
             let lookahead = cfg.lookahead;
             let batch = batch_queue.clone();
             let faults = faults.clone();
+            let profile = profile.clone();
             let mut ctx = ServeCtx {
                 serial: None,
                 degraded: degraded.clone(),
@@ -1005,9 +1081,20 @@ impl CoordinatorServer {
                     if let Some(la) = lookahead {
                         co = co.with_lookahead(la);
                     }
+                    if let Some(p) = &profile {
+                        co = co.with_calibration(Arc::clone(p));
+                    }
                     // Per-worker admission memo (scorer runs once per
-                    // distinct shape, not once per request).
-                    let planner = BatchPlanner::new();
+                    // distinct shape, not once per request). Calibrated
+                    // servers blend measured rates into the admission
+                    // estimates too (same shared store).
+                    let planner = {
+                        let mut pl = BatchPlanner::new();
+                        if let Some(p) = &profile {
+                            pl.set_profile(Some(Arc::clone(p)));
+                        }
+                        pl
+                    };
                     // pop() blocks (weighted-fair across tiers) and
                     // returns None only when the queue is closed and
                     // fully drained.
@@ -1029,6 +1116,13 @@ impl CoordinatorServer {
                         }
                         if let Some(f) = &faults {
                             f.stall_request();
+                        }
+                        // Exploration trades one request's latency for
+                        // information — never spend an Interactive
+                        // request on it. Meaningless (and skipped)
+                        // without a profile attached.
+                        if profile.is_some() {
+                            co.engine.set_explore_allowed(tier != Priority::Interactive);
                         }
                         // Deadline already blown in the queue: drop the
                         // request instead of serving it late.
@@ -1134,9 +1228,10 @@ impl CoordinatorServer {
                 let mode = cfg.mode.clone();
                 let pool = gemm_pool.clone();
                 let btiers = tiers.clone();
+                let bprofile = profile.clone();
                 match thread::Builder::new()
                     .name("dla-batcher".to_string())
-                    .spawn(move || batcher_loop(bq, arch, mode, pool, btiers))
+                    .spawn(move || batcher_loop(bq, arch, mode, pool, btiers, bprofile))
                 {
                     Ok(h) => Some(h),
                     Err(e) => {
@@ -1161,6 +1256,8 @@ impl CoordinatorServer {
             degraded,
             default_tier,
             jitter_seed: AtomicU64::new(cfg.jitter_seed.unwrap_or(DEFAULT_JITTER_SEED)),
+            profile,
+            profile_path,
         };
         // The canned overload drill: inject the planned flood as
         // Background-tier requests through the real admission path
@@ -1179,6 +1276,12 @@ impl CoordinatorServer {
     /// counters through this).
     pub fn fault_state(&self) -> Option<Arc<FaultState>> {
         self.faults.clone()
+    }
+
+    /// The shared measurement store, if calibration is armed (tests
+    /// assert observation counts and store integrity through this).
+    pub fn profile(&self) -> Option<Arc<PerfProfile>> {
+        self.profile.clone()
     }
 
     /// splitmix64 step for backoff jitter.
@@ -1429,6 +1532,14 @@ impl CoordinatorServer {
         f.workers_lost += c.workers_lost.load(Ordering::Relaxed);
         f.degraded_remaining += self.degraded.load(Ordering::Relaxed);
         *all.qos_mut() = self.tiers.snapshot();
+        // Persist the measurement store for the next process (the
+        // DLA_PROFILE round-trip). A write failure warns and is
+        // otherwise ignored: persistence must never fail a shutdown.
+        if let (Some(p), Some(path)) = (&self.profile, &self.profile_path) {
+            if let Err(e) = p.save_to_path(path) {
+                eprintln!("dla: failed to save DLA_PROFILE={path:?}: {e}");
+            }
+        }
         // Machine-readable counterpart of the summary table: one JSON
         // object on stdout, opt-in so interactive output stays clean.
         if std::env::var("DLA_METRICS_JSON").is_ok_and(|v| v.trim() == "1") {

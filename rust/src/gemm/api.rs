@@ -37,11 +37,13 @@
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::arch::Arch;
 use crate::model::batchplan::BatchPlanner;
 use crate::model::ccp::GemmConfig;
-use crate::model::selector::{select_from_elem, AnalyticScorer};
+use crate::model::profile::PerfProfile;
+use crate::model::selector::{select_from_elem, AnalyticScorer, Scorer};
 use crate::model::teamsize::{PanelShape, TeamSizeSelector, TeamSizeStats};
 use crate::model::{blis_static_dt, original_ccp_elem, refined_ccp_elem, GemmDims, MicroKernel};
 use crate::runtime::pool::{SubTeam, WorkerPool};
@@ -150,12 +152,23 @@ pub enum SchedPolicy {
 
 impl SchedPolicy {
     /// Environment override: `DLA_SCHED=dag` or `DLA_SCHED=lookahead`
-    /// (case-insensitive); unset, empty or unrecognized is ignored.
+    /// (case-insensitive); unset or empty is ignored. Anything else
+    /// falls back to the default scheduler with one warning line — a
+    /// typo must fail towards the bitwise-oracle lookahead path, not
+    /// silently pick a scheduler the operator did not ask for (the
+    /// `DLA_BATCH` convention).
     pub fn from_env() -> Option<Self> {
         match std::env::var("DLA_SCHED").ok().as_deref().map(str::trim) {
+            None | Some("") => None,
             Some(v) if v.eq_ignore_ascii_case("dag") => Some(Self::Dag),
             Some(v) if v.eq_ignore_ascii_case("lookahead") => Some(Self::Lookahead),
-            _ => None,
+            Some(v) => {
+                eprintln!(
+                    "dla: unrecognized DLA_SCHED={v:?}; keeping the default scheduler \
+                     (expected dag or lookahead)"
+                );
+                None
+            }
         }
     }
 }
@@ -323,11 +336,31 @@ pub struct GemmEngine {
     /// `Arc` so the coordinator can merge counters after the engine
     /// moved into a worker thread.
     abft: Arc<AbftStats>,
-    /// Memoized `(mode, dtype, dims, verified) -> config` selections
-    /// (verified configs shave one granule off mc/nc for the checksum
-    /// storage, so they memoize separately).
-    config_cache: RefCell<HashMap<(ModeKey, DType, GemmDims, bool), GemmConfig>>,
+    /// Memoized `(mode, dtype, dims, verified, generation) -> config`
+    /// selections (verified configs shave one granule off mc/nc for the
+    /// checksum storage, so they memoize separately; the generation is
+    /// the attached profile's memo-invalidation epoch, constant 0 when
+    /// calibration is off).
+    config_cache: RefCell<HashMap<(ModeKey, DType, GemmDims, bool, u64), GemmConfig>>,
     cache_stats: Cell<ConfigCacheStats>,
+    /// Shared measurement store when calibration is on. `None` (the
+    /// default) keeps every selection purely analytic — bitwise
+    /// identical to the uncalibrated engine, no timing hooks.
+    profile: Option<Arc<PerfProfile>>,
+    /// May epsilon-exploration fire? Server worker loops clear this per
+    /// Interactive-tier request (latency-critical callers must never be
+    /// handed a deliberately sub-optimal trial config).
+    explore_allowed: Cell<bool>,
+    /// Deterministic exploration tick: every `EXPLORE_PERIOD`-th
+    /// calibrated re-selection tries the runner-up candidate instead of
+    /// the blended best (no RNG — reproducible in tests).
+    explore_tick: Cell<u64>,
+    /// Warm-state tracker: dtype + k of the most recently planned GEMM.
+    /// A consecutive plan with the same k means the k-panel is resident
+    /// across pipeline iterations (the lookahead/DAG trailing sweeps
+    /// re-use one packed panel layout), so the analytic prior drops the
+    /// A-pack cost (the Peise-style sequence discount).
+    last_planned_k: Cell<Option<(DType, usize)>>,
     /// Memoized panel-team-size selections (the malleable `t_p` model).
     team_sizer: TeamSizeSelector,
     /// Memoized batch cost estimates (team shares for fused batches).
@@ -375,6 +408,10 @@ impl GemmEngine {
             abft: Arc::new(AbftStats::new()),
             config_cache: RefCell::new(HashMap::new()),
             cache_stats: Cell::new(ConfigCacheStats::default()),
+            profile: None,
+            explore_allowed: Cell::new(true),
+            explore_tick: Cell::new(0),
+            last_planned_k: Cell::new(None),
             team_sizer: TeamSizeSelector::new(),
             batch_planner: BatchPlanner::new(),
             panel_schedule,
@@ -481,6 +518,38 @@ impl GemmEngine {
     /// The engine's ABFT verification policy.
     pub fn verify(&self) -> VerifyPolicy {
         self.verify
+    }
+
+    /// Attach a (shared) measurement store; builder form. Calibrated
+    /// engines time their pool dispatches, blend analytic priors with
+    /// the store's observations on every config re-selection, and may
+    /// occasionally explore a runner-up candidate (see
+    /// [`crate::model::profile`]).
+    pub fn with_calibration(mut self, profile: Arc<PerfProfile>) -> Self {
+        self.set_calibration(Some(profile));
+        self
+    }
+
+    /// Attach or detach the measurement store in place. `None` restores
+    /// the pure-analytic engine (bitwise identical selections, zero
+    /// timing overhead).
+    pub fn set_calibration(&mut self, profile: Option<Arc<PerfProfile>>) {
+        self.batch_planner.set_profile(profile.clone());
+        self.profile = profile;
+        self.explore_tick.set(0);
+        self.last_planned_k.set(None);
+    }
+
+    /// The attached measurement store, if calibration is on.
+    pub fn profile(&self) -> Option<&Arc<PerfProfile>> {
+        self.profile.as_ref()
+    }
+
+    /// Allow or forbid epsilon-exploration (forbid for Interactive-tier
+    /// requests: a latency-critical caller must always get the blended
+    /// best config). No-op without an attached profile.
+    pub fn set_explore_allowed(&mut self, allowed: bool) {
+        self.explore_allowed.set(allowed);
     }
 
     /// The shared ABFT accounting (counters + pending failure record).
@@ -627,19 +696,85 @@ impl GemmEngine {
         self.plan_config_t::<f64>(dims)
     }
 
+    /// Calibrated re-selection period: every N-th cache-missing
+    /// re-selection on an explore-allowed engine dispatches the blended
+    /// runner-up instead of the best, feeding the store measurements of
+    /// nearby candidates it would otherwise never see. Deterministic
+    /// (a tick counter, no RNG) and bounded: at most 1-in-N dispatches,
+    /// never memoized, never on Interactive-tier requests.
+    const EXPLORE_PERIOD: u64 = 16;
+
+    /// The calibrated replacement for [`Self::compute_config`] on the
+    /// [`ConfigMode::Refined`] path: re-rank the scorer's candidate list
+    /// by the profile's confidence-weighted blend of (warm-discounted)
+    /// analytic prior and measured GFLOPS, optionally exploring the
+    /// runner-up. Returns `(config, explored)`; explored selections are
+    /// never memoized. Every other mode — and every engine without a
+    /// profile — takes the pure-analytic path unchanged.
+    fn compute_config_calibrated<E: GemmElem>(&self, dims: GemmDims) -> (GemmConfig, bool) {
+        let profile = match (&self.profile, &self.mode) {
+            (Some(p), ConfigMode::Refined) => Arc::clone(p),
+            _ => return (self.compute_config::<E>(dims), false),
+        };
+        let esize = E::DTYPE.size_bytes();
+        let sel = select_from_elem(&self.arch, dims, &AnalyticScorer, &self.family_t::<E>(), esize);
+        let warm = self.last_planned_k.get() == Some((E::DTYPE, dims.k));
+        let width = self.plan.threads.max(1);
+        let mut ranked: Vec<(GemmConfig, f64)> = sel
+            .ranked
+            .into_iter()
+            .map(|(cfg, analytic)| {
+                // Warm-state sequence discount: when the k-panel is
+                // resident from the previous pipeline iteration the
+                // A-pack pass mostly hits cache, so the prior drops that
+                // term (floored at half the cold estimate — packing is
+                // never entirely free).
+                let prior = if warm {
+                    let pack =
+                        AnalyticScorer.pack_a_cost_elem(&self.arch, dims, cfg.mk, cfg.ccp, esize);
+                    (analytic - pack).max(0.5 * analytic)
+                } else {
+                    analytic
+                };
+                (cfg, profile.blend(dims, E::DTYPE, cfg, width, prior))
+            })
+            .collect();
+        ranked.sort_by(|a, b| a.1.total_cmp(&b.1));
+        let tick = self.explore_tick.get() + 1;
+        self.explore_tick.set(tick);
+        if self.explore_allowed.get() && ranked.len() > 1 && tick % Self::EXPLORE_PERIOD == 0 {
+            profile.note_exploration();
+            return (ranked[1].0, true);
+        }
+        (ranked[0].0, false)
+    }
+
     /// [`Self::plan_config`] per element type. The memo key carries the
     /// dtype, so an f32 and an f64 request of equal shape each get (and
     /// cache) their own width-aware selection.
     pub fn plan_config_t<E: GemmElem>(&self, dims: GemmDims) -> GemmConfig {
         let verified = self.verify.enabled();
-        let key = (mode_key(&self.mode), E::DTYPE, dims, verified);
+        // The profile's generation is part of the memo key: a bump (every
+        // ~32 observations, and on clear) turns cached selections into
+        // fresh misses, which is where new measurements — and exploration
+        // — get to change a decision. Without a profile the generation is
+        // the constant 0 and the key behaves exactly as before.
+        let calibrated = self.profile.is_some();
+        let gen = self.profile.as_ref().map_or(0, |p| p.generation());
+        let key = (mode_key(&self.mode), E::DTYPE, dims, verified, gen);
         if let Some(cfg) = self.config_cache.borrow().get(&key) {
             let mut s = self.cache_stats.get();
             s.hits += 1;
             self.cache_stats.set(s);
+            if calibrated {
+                self.last_planned_k.set(Some((E::DTYPE, dims.k)));
+            }
             return *cfg;
         }
-        let mut cfg = self.compute_config::<E>(dims);
+        let (mut cfg, explored) = self.compute_config_calibrated::<E>(dims);
+        if calibrated {
+            self.last_planned_k.set(Some((E::DTYPE, dims.k)));
+        }
         if verified {
             // Verified dispatches carry checksum state alongside the
             // packed panels (reference sums, pre/post C sums, and in
@@ -652,7 +787,10 @@ impl GemmEngine {
             cfg.ccp.mc = cfg.ccp.mc.saturating_sub(cfg.mk.mr).max(cfg.mk.mr);
             cfg.ccp.nc = cfg.ccp.nc.saturating_sub(cfg.mk.nr).max(cfg.mk.nr);
         }
-        {
+        if !explored {
+            // An exploration trial is a one-shot: memoizing it would pin
+            // the deliberately sub-optimal candidate until the next
+            // generation bump.
             let mut cache = self.config_cache.borrow_mut();
             if cache.len() >= Self::CONFIG_CACHE_CAP {
                 cache.clear();
@@ -676,12 +814,21 @@ impl GemmEngine {
     }
 
     /// Drop all memoized selections — GEMM configs, team sizes *and*
-    /// batch cost estimates — and reset the accountings.
+    /// batch cost estimates — and reset the accountings. With
+    /// calibration on, the measurement store and exploration state are
+    /// cleared too (and the store's generation bumps): measurements
+    /// taken under an old plan or arch must never influence selections
+    /// after the change.
     pub fn clear_config_cache(&mut self) {
         self.config_cache.borrow_mut().clear();
         self.cache_stats.set(ConfigCacheStats::default());
         self.team_sizer.clear();
         self.batch_planner.clear();
+        self.explore_tick.set(0);
+        self.last_planned_k.set(None);
+        if let Some(p) = &self.profile {
+            p.clear();
+        }
     }
 
     /// Memoized configuration **and** its runnable kernel implementation
@@ -758,14 +905,28 @@ impl GemmEngine {
             return schedule[idx].min(threads - 1);
         }
         let cfg = self.plan_config_t::<E>(update);
-        self.team_sizer.select_elem(
-            &self.arch,
-            cfg,
-            panel,
-            update,
-            threads,
-            E::DTYPE.size_bytes(),
-        )
+        let esize = E::DTYPE.size_bytes();
+        match &self.profile {
+            Some(p) => {
+                // Calibrated: the min-max balance judges the trailing
+                // sweep by the blended (measured-refined) single-core
+                // estimate instead of the raw analytic score, keyed by
+                // the profile generation so a hotter store re-balances.
+                let analytic = AnalyticScorer.score_elem(&self.arch, update, cfg.mk, cfg.ccp, esize);
+                let blended = p.blend_serial(update, E::DTYPE, cfg, analytic);
+                self.team_sizer.select_elem_with(
+                    &self.arch,
+                    cfg,
+                    panel,
+                    update,
+                    threads,
+                    esize,
+                    p.generation(),
+                    Some(blended),
+                )
+            }
+            None => self.team_sizer.select_elem(&self.arch, cfg, panel, update, threads, esize),
+        }
     }
 
     /// Hit/miss accounting of the team-size memo cache (the malleable
@@ -775,9 +936,36 @@ impl GemmEngine {
     }
 
     /// Dispatch one configured GEMM to the pool-parallel or sequential
-    /// blocked driver.
+    /// blocked driver. With calibration on, the dispatch is bracketed by
+    /// one `Instant` pair (the epoch boundaries the pool's `PoolStats`
+    /// already account — no extra syscalls inside the epoch) and the
+    /// measured GFLOPS lands in the profile under the dispatched config
+    /// and team width.
     #[allow(clippy::too_many_arguments)]
     fn dispatch<E: GemmElem>(
+        &mut self,
+        cfg: &GemmConfig,
+        kernel: &MicroKernelImpl<E>,
+        alpha: E,
+        a: MatView<'_, E>,
+        b: MatView<'_, E>,
+        beta: E,
+        c: &mut MatViewMut<'_, E>,
+    ) {
+        match self.profile.clone() {
+            Some(profile) => {
+                let dims = GemmDims::new(a.rows, b.cols, a.cols);
+                let width = self.plan.threads.max(1);
+                let t0 = Instant::now();
+                self.dispatch_inner(cfg, kernel, alpha, a, b, beta, c);
+                profile.record(dims, E::DTYPE, *cfg, width, t0.elapsed().as_secs_f64());
+            }
+            None => self.dispatch_inner(cfg, kernel, alpha, a, b, beta, c),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_inner<E: GemmElem>(
         &mut self,
         cfg: &GemmConfig,
         kernel: &MicroKernelImpl<E>,
@@ -1053,6 +1241,12 @@ impl GemmEngine {
             epoch,
         };
         let abft = verified.then_some(&ctx);
+        // Calibration timing for the pipeline's fused epochs: the
+        // measurement covers the whole epoch (trailing sweep + the
+        // overlapped panel work), which is exactly the cost the
+        // selector should optimize — the epoch ends when both halves
+        // do.
+        let timer = self.profile.as_ref().map(|p| (Arc::clone(p), Instant::now()));
         match &self.pool {
             Some(pool) => {
                 gemm_fused_trailing_ranges_abft(
@@ -1077,6 +1271,10 @@ impl GemmEngine {
                     abft,
                 );
             }
+        }
+        if let Some((profile, t0)) = timer {
+            let width = self.plan.threads.max(1);
+            profile.record(dims, E::DTYPE, cfg, width, t0.elapsed().as_secs_f64());
         }
     }
 

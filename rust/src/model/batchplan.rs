@@ -28,12 +28,15 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::arch::Arch;
 use crate::model::ccp::GemmConfig;
+use crate::model::profile::PerfProfile;
 use crate::model::selector::{AnalyticScorer, Scorer};
 use crate::model::GemmDims;
+use crate::util::DType;
 
 /// Default full-bucket dispatch trigger.
 pub const DEFAULT_MAX_BATCH: usize = 8;
@@ -173,7 +176,14 @@ pub fn serial_estimate_elem(arch: &Arch, cfg: GemmConfig, dims: GemmDims, esize:
 /// of equal shape never share a (rate-dependent) estimate.
 #[derive(Default)]
 pub struct BatchPlanner {
-    estimates: RefCell<HashMap<(GemmConfig, GemmDims, usize), f64>>,
+    estimates: RefCell<HashMap<(GemmConfig, GemmDims, usize, u64), f64>>,
+    /// Optional measurement store (the calibrated serving path): when
+    /// attached, estimates blend the analytic score with measured
+    /// single-core-equivalent costs, keyed by the store's generation so
+    /// a hotter profile re-estimates. `None` (default) keeps every
+    /// estimate purely analytic and bitwise identical to the
+    /// uncalibrated planner.
+    profile: Option<Arc<PerfProfile>>,
 }
 
 impl BatchPlanner {
@@ -183,6 +193,15 @@ impl BatchPlanner {
 
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Attach or detach the measurement store (see
+    /// `GemmEngine::set_calibration`, which forwards its profile here so
+    /// batch admission and shares see the same measured truth as config
+    /// selection).
+    pub fn set_profile(&mut self, profile: Option<Arc<PerfProfile>>) {
+        self.profile = profile;
+        self.estimates.borrow_mut().clear();
     }
 
     /// Drop every memoized estimate.
@@ -196,13 +215,22 @@ impl BatchPlanner {
     }
 
     /// Memoized [`serial_estimate_elem`]; the element width is part of
-    /// the memo key.
+    /// the memo key. With a profile attached the analytic estimate is
+    /// blended with measured single-core-equivalent costs
+    /// ([`PerfProfile::blend_serial`]); without one (generation pinned
+    /// to 0) the value and the memo behavior are exactly the historical
+    /// ones.
     pub fn estimate_elem(&self, arch: &Arch, cfg: GemmConfig, dims: GemmDims, esize: usize) -> f64 {
-        let key = (cfg, dims, esize);
+        let gen = self.profile.as_ref().map_or(0, |p| p.generation());
+        let key = (cfg, dims, esize, gen);
         if let Some(&t) = self.estimates.borrow().get(&key) {
             return t;
         }
-        let t = serial_estimate_elem(arch, cfg, dims, esize);
+        let mut t = serial_estimate_elem(arch, cfg, dims, esize);
+        if let Some(p) = &self.profile {
+            let dtype = if esize == 4 { DType::F32 } else { DType::F64 };
+            t = p.blend_serial(dims, dtype, cfg, t);
+        }
         let mut cache = self.estimates.borrow_mut();
         if cache.len() >= Self::CACHE_CAP {
             cache.clear();
@@ -444,5 +472,29 @@ mod tests {
         if std::env::var("DLA_BATCH").is_err() {
             assert_eq!(BatchPolicy::from_env(), None);
         }
+    }
+
+    #[test]
+    fn attached_profile_blends_the_estimate() {
+        use crate::model::profile::PerfProfile;
+        use crate::util::DType;
+        let arch = host_xeon();
+        let mut planner = BatchPlanner::new();
+        let dims = GemmDims::new(48, 48, 32);
+        let cfg = cfg_for(&arch, dims);
+        let analytic = serial_estimate(&arch, cfg, dims);
+        // The machine measures this bucket 10x slower than the model
+        // says (single-core observations, so width scaling is identity).
+        let profile = Arc::new(PerfProfile::new());
+        for _ in 0..32 {
+            profile.record(dims, DType::F64, cfg, 1, 10.0 * analytic);
+        }
+        planner.set_profile(Some(Arc::clone(&profile)));
+        let blended = planner.estimate(&arch, cfg, dims);
+        assert!(blended > 2.0 * analytic, "blend {blended} ignored the measurements");
+        // Detaching restores the exact analytic estimate (off = bitwise
+        // identical).
+        planner.set_profile(None);
+        assert_eq!(planner.estimate(&arch, cfg, dims), analytic);
     }
 }

@@ -19,6 +19,10 @@
 //! - [`batchplan`] — the serving-layer batch planner: the same scorer
 //!   decides which requests are too small for a full-team dispatch and
 //!   how to partition the team across the members of a fused batch.
+//! - [`profile`] — the online measurement store: per-(shape-bucket,
+//!   dtype, config, width) measured GFLOPS blended with the analytic
+//!   priors via confidence-weighted shrinkage, so selections refine
+//!   toward measured truth as the server warms up.
 
 pub mod analytical;
 pub mod autotune;
@@ -26,6 +30,7 @@ pub mod batchplan;
 pub mod ccp;
 pub mod microkernel;
 pub mod occupancy;
+pub mod profile;
 pub mod refined;
 pub mod selector;
 pub mod teamsize;
@@ -38,6 +43,7 @@ pub use batchplan::{BatchPlanner, BatchPolicy};
 pub use ccp::{blis_static, blis_static_dt, Ccp, GemmDims};
 pub use microkernel::{candidate_family_lanes, MicroKernel};
 pub use occupancy::{occupancy_row, OccupancyRow};
+pub use profile::{CalibratePolicy, PerfProfile, ProfileStats};
 pub use refined::{refined_ccp, refined_ccp_elem};
 pub use selector::{select, select_from_elem, AnalyticScorer, Scorer, Selection};
 pub use teamsize::{PanelShape, TeamSizeSelector, TeamSizeStats};

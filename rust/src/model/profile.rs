@@ -1,0 +1,591 @@
+//! Online measurement-refined selection: a performance store that
+//! records **measured** per-(shape-bucket, dtype, config, team-width)
+//! GFLOPS from lightweight timing hooks around pool epochs and blends
+//! them with the [`AnalyticScorer`]'s priors via confidence-weighted
+//! shrinkage.
+//!
+//! The paper's analytic model is static; Peise & Bientinesi (arxiv
+//! 1409.8602, 1402.5897 in PAPERS.md) show cache-aware *measured*
+//! models predict kernel sequences far better, especially when operands
+//! are cache-warm from a prior kernel. The store is the runtime
+//! feedback loop the ROADMAP names: cold entries fall back to the pure
+//! model (zero observations → the blend returns the analytic estimate
+//! **exactly**), hot entries converge to measured truth, and the
+//! engine's warm-state pack discount (see `GemmEngine::plan_config_t`)
+//! captures the sequence effect across pipeline iterations.
+//!
+//! Design constraints inherited from the memo caches it refines:
+//!
+//! - **Off = bitwise identical.** When no profile is attached the
+//!   selectors never consult this module; every existing equivalence
+//!   suite must pass unchanged. The blend itself preserves that
+//!   property entry-wise: `blend` with zero observations *is* the
+//!   analytic score, bit for bit.
+//! - **Near-zero overhead on the hot path.** A record is one `Instant`
+//!   pair the engine already brackets around its pool dispatch, one
+//!   short mutex hold, and a few relaxed atomics. Lookups happen only
+//!   on memo *misses* (the generation counter below forces a periodic
+//!   re-miss so fresh measurements can change a cached decision).
+//! - **Shared.** One `Arc<PerfProfile>` serves every worker engine; the
+//!   map sits behind a `Mutex` (never held across a dispatch) and the
+//!   counters are atomics.
+//!
+//! [`AnalyticScorer`]: crate::model::selector::AnalyticScorer
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::model::ccp::GemmConfig;
+use crate::model::GemmDims;
+use crate::util::DType;
+
+/// Shrinkage prior weight: an entry needs this many observations to pull
+/// the blend halfway from the analytic prior to the measured mean.
+const PRIOR_WEIGHT: f64 = 4.0;
+/// Running-mean window cap: keeps hot entries adaptive (a machine-state
+/// change shows up within ~this many observations instead of being
+/// averaged away by an unbounded history).
+const OBS_WINDOW: u64 = 256;
+/// Observations between generation bumps. Memo keys embed the
+/// generation, so a bump turns every cached selection into one fresh
+/// miss — the point where new measurements (and exploration) can change
+/// a decision without per-call store lookups.
+const GENERATION_STRIDE: u64 = 32;
+
+/// Calibration switch: pinned [`ServerConfig::with_calibration`] beats
+/// `DLA_CALIBRATE` beats the default (**off**). Off means the engines
+/// never see a profile — selections stay bitwise identical to the
+/// analytic-only stack and the timing hooks compile down to an
+/// `Option::is_some` test.
+///
+/// [`ServerConfig::with_calibration`]: crate::coordinator::ServerConfig::with_calibration
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CalibratePolicy {
+    #[default]
+    Off,
+    On,
+}
+
+impl CalibratePolicy {
+    pub fn enabled(self) -> bool {
+        matches!(self, Self::On)
+    }
+
+    /// Environment override for un-pinned servers: `DLA_CALIBRATE`
+    /// unset means no override; empty / `0` / `off` / `false` pin
+    /// calibration off; `1` / `on` / `true` enable it; anything
+    /// unparseable is treated as **off** with one warning line (a typo
+    /// must fail towards the plain analytic path, not silently enable
+    /// an adaptive selector the operator did not ask for — the
+    /// `DLA_BATCH` convention).
+    pub fn from_env() -> Option<Self> {
+        let v = std::env::var("DLA_CALIBRATE").ok()?;
+        match v.trim() {
+            "" | "0" | "off" | "false" => Some(Self::Off),
+            "1" | "on" | "true" => Some(Self::On),
+            other => {
+                eprintln!(
+                    "dla: unrecognized DLA_CALIBRATE={other:?}; calibration stays off \
+                     (expected 0/off/false or 1/on/true)"
+                );
+                Some(Self::Off)
+            }
+        }
+    }
+}
+
+/// Power-of-two shape bucket: GEMMs whose dimension rounds up to the
+/// same power of two share measurements. Coarse on purpose — the store
+/// must get hot from a serving mix of *similar*, not identical, shapes,
+/// and the analytic prior still separates candidates within a bucket.
+fn lg_bucket(x: usize) -> u8 {
+    x.max(1).next_power_of_two().trailing_zeros() as u8
+}
+
+/// One store key: shape bucket, dtype, the configuration fingerprint
+/// (`mr`/`nr`/`mc`/`kc`/`nc` — raw numbers, so persistence never has to
+/// reconstruct a `MicroKernel`), and the team width the measurement was
+/// taken at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ProfileKey {
+    pub bucket: (u8, u8, u8),
+    pub dtype: DType,
+    pub fp: (usize, usize, usize, usize, usize),
+    pub width: usize,
+}
+
+impl ProfileKey {
+    pub fn new(dims: GemmDims, dtype: DType, cfg: GemmConfig, width: usize) -> Self {
+        Self {
+            bucket: (lg_bucket(dims.m), lg_bucket(dims.n), lg_bucket(dims.k)),
+            dtype,
+            fp: (cfg.mk.mr, cfg.mk.nr, cfg.ccp.mc, cfg.ccp.kc, cfg.ccp.nc),
+            width: width.max(1),
+        }
+    }
+}
+
+/// Windowed running mean of measured GFLOPS for one key.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Obs {
+    count: u64,
+    mean_gflops: f64,
+}
+
+/// Snapshot of the store's counters (for metrics and tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProfileStats {
+    /// Distinct keys currently held.
+    pub entries: u64,
+    /// Measurements recorded since construction/clear.
+    pub observations: u64,
+    /// Exploration trials taken (engine-side counter, kept here so every
+    /// worker's engine shares one tally).
+    pub explorations: u64,
+    /// Blend calls that actually mixed a measurement in (≥ 1 obs).
+    pub blended: u64,
+    /// Current generation (memo-invalidation epoch).
+    pub generation: u64,
+}
+
+/// The shared measurement store. One per server (behind an `Arc`), or
+/// one per engine in tests.
+#[derive(Default)]
+pub struct PerfProfile {
+    store: Mutex<HashMap<ProfileKey, Obs>>,
+    observations: AtomicU64,
+    explorations: AtomicU64,
+    blended: AtomicU64,
+    generation: AtomicU64,
+}
+
+impl PerfProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Memo-invalidation epoch: starts at 1 (memo keys use generation 0
+    /// for "no profile attached", so attaching a profile alone already
+    /// separates calibrated from uncalibrated cache entries) and bumps
+    /// every [`GENERATION_STRIDE`] observations.
+    pub fn generation(&self) -> u64 {
+        1 + self.generation.load(Ordering::Relaxed)
+    }
+
+    /// Record one measured GEMM: `secs` of wall time for `dims` at
+    /// `width` ranks under `cfg`. Degenerate timings (zero flops or a
+    /// sub-tick duration) are dropped — a 0-second epoch says nothing
+    /// about throughput.
+    pub fn record(&self, dims: GemmDims, dtype: DType, cfg: GemmConfig, width: usize, secs: f64) {
+        let flops = dims.flops();
+        if !(secs > 1e-9) || flops <= 0.0 {
+            return;
+        }
+        let gflops = flops / secs / 1e9;
+        let key = ProfileKey::new(dims, dtype, cfg, width);
+        {
+            let mut store = self.store.lock().unwrap();
+            let obs = store.entry(key).or_insert(Obs { count: 0, mean_gflops: 0.0 });
+            obs.count += 1;
+            // Windowed running mean: the effective sample size saturates
+            // at OBS_WINDOW so late observations keep real weight.
+            let n = obs.count.min(OBS_WINDOW) as f64;
+            obs.mean_gflops += (gflops - obs.mean_gflops) / n;
+        }
+        let seen = self.observations.fetch_add(1, Ordering::Relaxed) + 1;
+        if seen % GENERATION_STRIDE == 0 {
+            self.generation.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Confidence-weighted shrinkage blend for one candidate at a known
+    /// team width: with `n` observations, the measured mean gets weight
+    /// `n / (n + PRIOR_WEIGHT)` and the analytic prior the rest. Zero
+    /// observations returns `analytic_secs` **exactly** (no float
+    /// arithmetic touches it), so a cold store is bitwise-transparent.
+    pub fn blend(
+        &self,
+        dims: GemmDims,
+        dtype: DType,
+        cfg: GemmConfig,
+        width: usize,
+        analytic_secs: f64,
+    ) -> f64 {
+        let key = ProfileKey::new(dims, dtype, cfg, width);
+        let obs = match self.store.lock().unwrap().get(&key) {
+            Some(&o) if o.count > 0 && o.mean_gflops > 0.0 => o,
+            _ => return analytic_secs,
+        };
+        self.blended.fetch_add(1, Ordering::Relaxed);
+        let measured_secs = dims.flops() / (obs.mean_gflops * 1e9);
+        let n = obs.count.min(OBS_WINDOW) as f64;
+        let w = n / (n + PRIOR_WEIGHT);
+        w * measured_secs + (1.0 - w) * analytic_secs
+    }
+
+    /// Blend for the *single-core* estimates the team-size selector and
+    /// batch planner work in: measurements taken at any width are
+    /// converted to single-core-equivalent seconds (`secs * width` — the
+    /// G4 partition scales near-linearly at `nr` grain, the same
+    /// assumption `TeamSizeSelector` already makes) and combined
+    /// count-weighted across widths. Zero observations in the bucket
+    /// returns `analytic_secs` exactly.
+    pub fn blend_serial(
+        &self,
+        dims: GemmDims,
+        dtype: DType,
+        cfg: GemmConfig,
+        analytic_secs: f64,
+    ) -> f64 {
+        let probe = ProfileKey::new(dims, dtype, cfg, 1);
+        let (mut weight, mut serial_sum) = (0.0f64, 0.0f64);
+        {
+            let store = self.store.lock().unwrap();
+            for (key, obs) in store.iter() {
+                if key.bucket != probe.bucket || key.dtype != probe.dtype || key.fp != probe.fp {
+                    continue;
+                }
+                if obs.count == 0 || !(obs.mean_gflops > 0.0) {
+                    continue;
+                }
+                let n = obs.count.min(OBS_WINDOW) as f64;
+                let serial = dims.flops() / (obs.mean_gflops * 1e9) * key.width as f64;
+                weight += n;
+                serial_sum += n * serial;
+            }
+        }
+        if weight <= 0.0 {
+            return analytic_secs;
+        }
+        self.blended.fetch_add(1, Ordering::Relaxed);
+        let measured = serial_sum / weight;
+        let w = weight.min(OBS_WINDOW as f64) / (weight.min(OBS_WINDOW as f64) + PRIOR_WEIGHT);
+        w * measured + (1.0 - w) * analytic_secs
+    }
+
+    /// Count one exploration trial (the engine calls this when it
+    /// dispatches a nearby candidate instead of the blended best).
+    pub fn note_exploration(&self) {
+        self.explorations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> ProfileStats {
+        ProfileStats {
+            entries: self.store.lock().unwrap().len() as u64,
+            observations: self.observations.load(Ordering::Relaxed),
+            explorations: self.explorations.load(Ordering::Relaxed),
+            blended: self.blended.load(Ordering::Relaxed),
+            generation: self.generation(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every measurement and reset the counters, bumping the
+    /// generation so any memoized decision that consulted the old
+    /// measurements re-misses (stale observations must not outlive a
+    /// plan or arch change — see `GemmEngine::clear_config_cache`).
+    pub fn clear(&self) {
+        self.store.lock().unwrap().clear();
+        self.observations.store(0, Ordering::Relaxed);
+        self.explorations.store(0, Ordering::Relaxed);
+        self.blended.store(0, Ordering::Relaxed);
+        self.generation.fetch_add(1, Ordering::Relaxed);
+    }
+
+    // --- Persistence (`DLA_PROFILE=path`) -------------------------------
+    //
+    // Hand-rolled JSON (the repo has no serde): a flat entry array of
+    // numeric fields plus the dtype name. The writer is canonical
+    // (sorted keys) so a save/load/save round-trip is byte-stable.
+
+    /// Serialize the store to a JSON string.
+    pub fn to_json(&self) -> String {
+        let store = self.store.lock().unwrap();
+        let mut entries: Vec<(&ProfileKey, &Obs)> = store.iter().collect();
+        entries.sort_by_key(|(k, _)| {
+            (k.bucket, k.dtype.size_bytes(), k.fp, k.width)
+        });
+        let mut out = String::from("{\"version\":1,\"entries\":[");
+        for (i, (k, o)) in entries.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"bm\":{},\"bn\":{},\"bk\":{},\"dtype\":\"{}\",\"mr\":{},\"nr\":{},\
+                 \"mc\":{},\"kc\":{},\"nc\":{},\"width\":{},\"count\":{},\"gflops\":{}}}",
+                k.bucket.0,
+                k.bucket.1,
+                k.bucket.2,
+                k.dtype.name(),
+                k.fp.0,
+                k.fp.1,
+                k.fp.2,
+                k.fp.3,
+                k.fp.4,
+                k.width,
+                o.count,
+                o.mean_gflops,
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Load entries from a JSON string produced by [`Self::to_json`],
+    /// replacing the current store. Returns the number of entries
+    /// loaded, or an error describing the first malformed field — the
+    /// caller must fail toward an **empty** store (never a partial or
+    /// corrupt one).
+    pub fn load_json(&self, text: &str) -> Result<usize, String> {
+        let mut parsed: Vec<(ProfileKey, Obs)> = Vec::new();
+        let body = text.trim();
+        if !body.starts_with('{') || !body.ends_with('}') {
+            return Err("profile is not a JSON object".into());
+        }
+        let entries_at =
+            body.find("\"entries\"").ok_or_else(|| "missing \"entries\" array".to_string())?;
+        let open = body[entries_at..]
+            .find('[')
+            .map(|i| entries_at + i)
+            .ok_or_else(|| "missing entries '['".to_string())?;
+        let close = body.rfind(']').ok_or_else(|| "missing entries ']'".to_string())?;
+        if close < open {
+            return Err("malformed entries array".into());
+        }
+        let array = &body[open + 1..close];
+        for chunk in array.split('{').skip(1) {
+            let obj = match chunk.find('}') {
+                Some(end) => &chunk[..end],
+                None => return Err("unterminated entry object".into()),
+            };
+            let field = |name: &str| -> Result<&str, String> {
+                let tag = format!("\"{name}\":");
+                let at = obj.find(&tag).ok_or_else(|| format!("entry missing {name:?}"))?;
+                let rest = &obj[at + tag.len()..];
+                let end = rest.find(',').unwrap_or(rest.len());
+                Ok(rest[..end].trim())
+            };
+            let num = |name: &str| -> Result<u64, String> {
+                field(name)?.parse::<u64>().map_err(|_| format!("bad numeric field {name:?}"))
+            };
+            let dtype = match field("dtype")?.trim_matches('"') {
+                "f64" => DType::F64,
+                "f32" => DType::F32,
+                other => return Err(format!("unknown dtype {other:?}")),
+            };
+            let gflops = field("gflops")?
+                .parse::<f64>()
+                .map_err(|_| "bad numeric field \"gflops\"".to_string())?;
+            if !(gflops.is_finite() && gflops >= 0.0) {
+                return Err("non-finite gflops".into());
+            }
+            let key = ProfileKey {
+                bucket: (num("bm")? as u8, num("bn")? as u8, num("bk")? as u8),
+                dtype,
+                fp: (
+                    num("mr")? as usize,
+                    num("nr")? as usize,
+                    num("mc")? as usize,
+                    num("kc")? as usize,
+                    num("nc")? as usize,
+                ),
+                width: (num("width")? as usize).max(1),
+            };
+            parsed.push((key, Obs { count: num("count")?, mean_gflops: gflops }));
+        }
+        let n = parsed.len();
+        let mut store = self.store.lock().unwrap();
+        store.clear();
+        store.extend(parsed);
+        Ok(n)
+    }
+
+    /// Write the store to `path` (used at server shutdown when
+    /// `DLA_PROFILE` is set). Errors are returned, not panicked — a
+    /// failed save must never take the server down.
+    pub fn save_to_path(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
+    /// Load the store from `path`. A missing or malformed file fails
+    /// toward an empty store with a warning (the `DLA_BATCH`
+    /// convention): serving must start, calibration just starts cold.
+    pub fn load_from_path(&self, path: &str) -> usize {
+        match std::fs::read_to_string(path) {
+            Ok(text) => match self.load_json(&text) {
+                Ok(n) => n,
+                Err(e) => {
+                    eprintln!("dla: ignoring malformed profile {path:?}: {e}; starting cold");
+                    self.store.lock().unwrap().clear();
+                    0
+                }
+            },
+            Err(e) => {
+                eprintln!("dla: cannot read DLA_PROFILE={path:?}: {e}; starting cold");
+                0
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::host_xeon;
+    use crate::model::{refined_ccp, MicroKernel};
+
+    fn cfg_for(dims: GemmDims) -> GemmConfig {
+        let arch = host_xeon();
+        let mk = MicroKernel::new(8, 6);
+        GemmConfig { mk, ccp: refined_ccp(&arch, mk, dims).clamp_to(dims) }
+    }
+
+    #[test]
+    fn cold_blend_is_exactly_analytic() {
+        let p = PerfProfile::new();
+        let dims = GemmDims::new(512, 512, 64);
+        let cfg = cfg_for(dims);
+        let analytic = 1.2345e-3;
+        assert_eq!(p.blend(dims, DType::F64, cfg, 4, analytic), analytic);
+        assert_eq!(p.blend_serial(dims, DType::F64, cfg, analytic), analytic);
+        assert_eq!(p.stats().blended, 0);
+    }
+
+    #[test]
+    fn observations_pull_the_blend_toward_measured_truth() {
+        let p = PerfProfile::new();
+        let dims = GemmDims::new(512, 512, 64);
+        let cfg = cfg_for(dims);
+        // Analytic says 1 ms; the machine actually does it in ~100 µs.
+        let analytic = 1.0e-3;
+        let measured = dims.flops() / 1.0e-4; // flops/sec
+        let secs = dims.flops() / measured;
+        let mut last = analytic;
+        for _ in 0..64 {
+            p.record(dims, DType::F64, cfg, 4, secs);
+            let b = p.blend(dims, DType::F64, cfg, 4, analytic);
+            assert!(b <= last + 1e-12, "blend must move monotonically toward measured");
+            last = b;
+        }
+        // After 64 observations the blend sits much nearer measured than
+        // analytic.
+        assert!(last < 0.2 * analytic, "blend {last} still near analytic {analytic}");
+        assert!(last > 0.9 * secs, "blend {last} overshot measured {secs}");
+        let s = p.stats();
+        assert_eq!(s.observations, 64);
+        assert!(s.blended >= 64);
+        assert!(s.generation > 1, "64 observations must bump the generation");
+    }
+
+    #[test]
+    fn serial_blend_scales_by_width() {
+        let p = PerfProfile::new();
+        let dims = GemmDims::new(256, 256, 64);
+        let cfg = cfg_for(dims);
+        // A 4-wide epoch finishing in t seconds is ~4t of serial work.
+        let secs = 1.0e-4;
+        for _ in 0..32 {
+            p.record(dims, DType::F64, cfg, 4, secs);
+        }
+        let analytic = 4.0 * secs; // prior agrees with the measurement
+        let b = p.blend_serial(dims, DType::F64, cfg, analytic);
+        assert!((b - analytic).abs() < 0.05 * analytic, "serial blend {b} vs {analytic}");
+    }
+
+    #[test]
+    fn degenerate_timings_are_dropped() {
+        let p = PerfProfile::new();
+        let dims = GemmDims::new(64, 64, 64);
+        let cfg = cfg_for(dims);
+        p.record(dims, DType::F64, cfg, 1, 0.0);
+        p.record(dims, DType::F64, cfg, 1, -1.0);
+        p.record(GemmDims::new(0, 64, 64), DType::F64, cfg, 1, 1.0e-3);
+        assert!(p.is_empty());
+        assert_eq!(p.stats().observations, 0);
+    }
+
+    #[test]
+    fn clear_resets_and_bumps_generation() {
+        let p = PerfProfile::new();
+        let dims = GemmDims::new(128, 128, 32);
+        let cfg = cfg_for(dims);
+        p.record(dims, DType::F64, cfg, 2, 1.0e-4);
+        p.note_exploration();
+        let g = p.generation();
+        p.clear();
+        assert!(p.is_empty());
+        let s = p.stats();
+        assert_eq!((s.observations, s.explorations, s.blended), (0, 0, 0));
+        assert!(p.generation() > g, "clear must invalidate memoized decisions");
+    }
+
+    #[test]
+    fn json_round_trip_preserves_entries_and_blends() {
+        let p = PerfProfile::new();
+        let d64 = GemmDims::new(512, 512, 64);
+        let d32 = GemmDims::new(96, 4096, 96);
+        let (c64, c32) = (cfg_for(d64), cfg_for(d32));
+        for _ in 0..8 {
+            p.record(d64, DType::F64, c64, 4, 2.0e-4);
+            p.record(d32, DType::F32, c32, 8, 5.0e-5);
+        }
+        let json = p.to_json();
+        let q = PerfProfile::new();
+        assert_eq!(q.load_json(&json).unwrap(), 2);
+        // The loaded store blends identically to the original.
+        let analytic = 1.0e-3;
+        assert_eq!(
+            p.blend(d64, DType::F64, c64, 4, analytic),
+            q.blend(d64, DType::F64, c64, 4, analytic)
+        );
+        assert_eq!(
+            p.blend(d32, DType::F32, c32, 8, analytic),
+            q.blend(d32, DType::F32, c32, 8, analytic)
+        );
+        // And the writer is canonical: a second save is byte-identical.
+        assert_eq!(q.to_json(), json);
+    }
+
+    #[test]
+    fn malformed_json_fails_toward_empty() {
+        let p = PerfProfile::new();
+        assert!(p.load_json("not json at all").is_err());
+        assert!(p.load_json("{\"version\":1}").is_err());
+        assert!(p
+            .load_json("{\"version\":1,\"entries\":[{\"bm\":1}]}")
+            .is_err());
+        assert!(p.is_empty());
+        // A valid empty store loads zero entries.
+        assert_eq!(p.load_json("{\"version\":1,\"entries\":[]}").unwrap(), 0);
+    }
+
+    #[test]
+    fn env_policy_parsing() {
+        // from_env reads the live environment, so only exercise it when
+        // the variable is unset (the CI matrix sets it on purpose).
+        if std::env::var("DLA_CALIBRATE").is_err() {
+            assert_eq!(CalibratePolicy::from_env(), None);
+        }
+        assert!(!CalibratePolicy::default().enabled());
+        assert!(CalibratePolicy::On.enabled());
+    }
+
+    #[test]
+    fn buckets_are_coarse_powers_of_two() {
+        let a = ProfileKey::new(GemmDims::new(500, 500, 60), DType::F64, cfg_for(GemmDims::new(512, 512, 64)), 4);
+        let b = ProfileKey::new(GemmDims::new(512, 512, 64), DType::F64, cfg_for(GemmDims::new(512, 512, 64)), 4);
+        assert_eq!(a.bucket, b.bucket, "nearby shapes share a bucket");
+        assert_eq!(lg_bucket(1), 0);
+        assert_eq!(lg_bucket(0), 0);
+        assert_eq!(lg_bucket(64), 6);
+        assert_eq!(lg_bucket(65), 7);
+    }
+}

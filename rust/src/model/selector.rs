@@ -51,6 +51,33 @@ pub trait Scorer {
 ///   amplified by `k/kc` passes.
 pub struct AnalyticScorer;
 
+impl AnalyticScorer {
+    /// The A-panel *packing* share of [`Scorer::score_elem`]: one
+    /// memory-latency pass over `m x k` elements (the
+    /// `mf * kf * cyc(l3_lat) / line` addend of the memory term),
+    /// de-rated by the same overlap factor the full score applies.
+    /// The calibrated selector subtracts this when the k-panel is
+    /// already resident from the previous pipeline iteration (the
+    /// Peise-style warm-sequence discount) — splitting it out here
+    /// keeps the discount exactly consistent with the score it
+    /// discounts.
+    pub fn pack_a_cost_elem(
+        &self,
+        arch: &Arch,
+        dims: GemmDims,
+        mk: MicroKernel,
+        ccp: Ccp,
+        esize: usize,
+    ) -> f64 {
+        let (mf, kf) = (dims.m as f64, dims.k as f64);
+        let cyc = |c: f64| c / (arch.freq_ghz * 1e9);
+        let l3_lat = arch.l3().map(|l| l.latency_cycles).unwrap_or(arch.mem_latency_cycles);
+        let line = arch.line_elems_for(esize) as f64;
+        let overlap = (mk.flops_per_memop(ccp.kc) / 8.0).min(0.95);
+        (1.0 - overlap) * mf * kf * cyc(l3_lat) / line
+    }
+}
+
 impl Scorer for AnalyticScorer {
     fn score(&self, arch: &Arch, dims: GemmDims, mk: MicroKernel, ccp: Ccp) -> f64 {
         self.score_elem(arch, dims, mk, ccp, 8)

@@ -65,6 +65,10 @@ struct Key {
     /// Element width in bytes: the f32 pipeline sees double peak and
     /// different cache costs, so selections are memoized per dtype.
     esize: usize,
+    /// Measurement-store generation of the calibrated path (constant 0
+    /// on the uncalibrated path): a generation bump re-misses so a
+    /// hotter profile can re-balance a previously memoized split.
+    gen: u64,
 }
 
 /// Efficiency of the scalar panel kernel relative to one core's peak
@@ -116,16 +120,19 @@ impl TeamSizeSelector {
         serial_flops / rate + par_flops / (rate * t_p as f64) + sync
     }
 
-    /// Run the min-max balance (uncached).
-    fn compute(arch: &Arch, key: &Key) -> usize {
+    /// Run the min-max balance (uncached). `update_1` overrides the
+    /// analytic single-core trailing-sweep estimate when the caller has
+    /// a measurement-blended one (the calibrated engine path).
+    fn compute(arch: &Arch, key: &Key, update_1: Option<f64>) -> usize {
         let t = key.threads;
         if t <= 2 {
             return 1;
         }
         // Single-core trailing-sweep estimate from the cache model, under
         // the configuration the engine actually selected for this shape.
-        let update_1 =
-            AnalyticScorer.score_elem(arch, key.update, key.cfg.mk, key.cfg.ccp, key.esize);
+        let update_1 = update_1.unwrap_or_else(|| {
+            AnalyticScorer.score_elem(arch, key.update, key.cfg.mk, key.cfg.ccp, key.esize)
+        });
         // More ranks than panel columns cannot help the column-split
         // kernel.
         let t_max = (t - 1).min(key.panel.cols.max(1));
@@ -169,14 +176,35 @@ impl TeamSizeSelector {
         threads: usize,
         esize: usize,
     ) -> usize {
-        let key = Key { threads, panel, update, cfg, esize };
+        self.select_elem_with(arch, cfg, panel, update, threads, esize, 0, None)
+    }
+
+    /// The calibrated entry behind [`Self::select_elem`]: `gen` is the
+    /// measurement-store generation (part of the memo key; 0 on the
+    /// uncalibrated path, so `select_elem` keys exactly as before) and
+    /// `update_1` an optional measurement-blended single-core estimate
+    /// of the trailing sweep that replaces the analytic one in the
+    /// min-max balance.
+    #[allow(clippy::too_many_arguments)]
+    pub fn select_elem_with(
+        &self,
+        arch: &Arch,
+        cfg: GemmConfig,
+        panel: PanelShape,
+        update: GemmDims,
+        threads: usize,
+        esize: usize,
+        gen: u64,
+        update_1: Option<f64>,
+    ) -> usize {
+        let key = Key { threads, panel, update, cfg, esize, gen };
         if let Some(&t_p) = self.cache.borrow().get(&key) {
             let mut s = self.stats.get();
             s.hits += 1;
             self.stats.set(s);
             return t_p;
         }
-        let t_p = Self::compute(arch, &key);
+        let t_p = Self::compute(arch, &key, update_1);
         {
             let mut cache = self.cache.borrow_mut();
             if cache.len() >= Self::CACHE_CAP {
@@ -268,6 +296,27 @@ mod tests {
         let thin = PanelShape::new(4096, 2);
         let t_p = sel.select(&arch, cfg, thin, GemmDims::new(64, 64, 2), threads);
         assert!(t_p <= 2, "2-column panel cannot use {t_p} ranks");
+    }
+
+    #[test]
+    fn blended_update_estimate_shifts_the_balance() {
+        let arch = host_xeon();
+        let sel = TeamSizeSelector::new();
+        let dims = GemmDims::new(2048, 2048, 128);
+        let cfg = cfg_for(&arch, dims);
+        let panel = PanelShape::new(2048, 128);
+        let base = sel.select_elem(&arch, cfg, panel, dims, 16, 8);
+        // A measured trailing sweep 8x slower than the model says: the
+        // update team needs the ranks more, so t_p must not grow — and
+        // the gen-keyed calibrated entry must not collide with the
+        // baseline one.
+        let analytic = AnalyticScorer.score_elem(&arch, dims, cfg.mk, cfg.ccp, 8);
+        let slow = sel.select_elem_with(&arch, cfg, panel, dims, 16, 8, 1, Some(8.0 * analytic));
+        assert!(slow <= base, "slower measured update grew t_p: {slow} > {base}");
+        assert_eq!(sel.len(), 2, "generation must be part of the memo key");
+        // The zero-gen, no-override call is bitwise the plain select.
+        assert_eq!(sel.select_elem_with(&arch, cfg, panel, dims, 16, 8, 0, None), base);
+        assert_eq!(sel.stats().hits, 1);
     }
 
     #[test]

@@ -603,6 +603,17 @@ impl SubTeam<'_> {
 
 /// Pool idle-time accounting (see the module docs): cumulative since pool
 /// construction, taken with [`WorkerPool::stats`].
+///
+/// The epoch boundary these counters are keyed on — `run` entered,
+/// leader handshake completed — is also the measurement quantum of the
+/// calibration layer: a calibrated engine wraps exactly one dispatch
+/// (one pool epoch, or its sequential equivalent) per timing sample it
+/// feeds to [`crate::model::PerfProfile`], so the measured seconds line
+/// up one-to-one with the `jobs` counter here and no timing hook ever
+/// reaches inside an epoch. Epoch recovery after a poisoned job runs
+/// *before* the dispatch returns, so a panicking epoch never records a
+/// sample at all (the unwinding dispatch skips the hook) and the store
+/// cannot absorb a corrupted timing.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PoolStats {
     /// Completed broadcast jobs.

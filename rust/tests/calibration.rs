@@ -1,0 +1,340 @@
+//! Measurement-calibrated selection suite (`DLA_CALIBRATE` /
+//! `ServerConfig::with_calibration` — see `model::profile`): calibration
+//! **off** must be bitwise invisible (attach-then-detach restores the
+//! pure-analytic engine across the lookahead AND DAG schedulers, a cold
+//! store selects exactly the analytic config), calibration **on** must
+//! converge (overwhelming measured evidence steers the selection to the
+//! measured-best candidate), stale measurements must not outlive
+//! `clear_config_cache`, exploration must be deterministic, bounded, and
+//! gated off for Interactive-tier traffic, the store must round-trip
+//! through its JSON persistence (including the server's `DLA_PROFILE`
+//! save-at-shutdown), and a mid-epoch pool panic must never corrupt the
+//! store.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
+
+use dla_codesign::arch::host_xeon;
+use dla_codesign::coordinator::{
+    CoordinatorServer, DlaRequest, Priority, ServerConfig,
+};
+use dla_codesign::gemm::{ConfigMode, GemmEngine, ParallelLoop, SchedPolicy, ThreadPlan};
+use dla_codesign::lapack::lu_factor;
+use dla_codesign::model::ccp::GemmConfig;
+use dla_codesign::model::selector::{select_from_elem, AnalyticScorer};
+use dla_codesign::model::{CalibratePolicy, GemmDims, PerfProfile};
+use dla_codesign::runtime::{FaultPlan, FaultState, WorkerPool};
+use dla_codesign::util::{DType, MatrixF64, Pcg64};
+
+/// Serializes the tests that read or write process environment
+/// (`DLA_PROFILE`) or that start calibrated servers which consult it.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn engine(threads: usize, sched: SchedPolicy) -> GemmEngine {
+    let eng = GemmEngine::new(host_xeon(), ConfigMode::Refined).with_sched(sched);
+    if threads > 1 {
+        eng.with_plan(ThreadPlan { threads, target: ParallelLoop::G4 })
+    } else {
+        eng
+    }
+}
+
+fn gemm_req(rng: &mut Pcg64, m: usize, n: usize, k: usize) -> DlaRequest {
+    DlaRequest::Gemm {
+        alpha: 1.0,
+        a: MatrixF64::random(m, k, rng),
+        b: MatrixF64::random(k, n, rng),
+        beta: 0.0,
+        c: MatrixF64::zeros(m, n),
+    }
+}
+
+#[test]
+fn calibration_off_is_bitwise_invisible_across_schedulers() {
+    // The transparency acceptance: an engine that had a profile attached
+    // and detached again is the pure-analytic engine — factors bitwise
+    // identical to a never-calibrated baseline, under both the lookahead
+    // and the DAG scheduler, sequential and pooled.
+    let mut rng = Pcg64::seed(7101);
+    let a0 = MatrixF64::random(96, 96, &mut rng);
+    for sched in [SchedPolicy::Lookahead, SchedPolicy::Dag] {
+        for threads in [1usize, 4] {
+            let base = lu_factor(&a0, 16, &mut engine(threads, sched)).unwrap();
+            let mut detached = engine(threads, sched);
+            detached.set_calibration(Some(Arc::new(PerfProfile::new())));
+            detached.set_calibration(None);
+            let redo = lu_factor(&a0, 16, &mut detached).unwrap();
+            assert_eq!(redo.pivots, base.pivots, "{sched:?} x{threads}: pivots differ");
+            assert_eq!(
+                redo.lu.max_abs_diff(&base.lu),
+                0.0,
+                "{sched:?} x{threads}: factors not bitwise identical"
+            );
+        }
+    }
+}
+
+#[test]
+fn cold_profile_selects_exactly_the_analytic_config() {
+    // Zero observations → the blend returns the analytic prior exactly,
+    // so a freshly attached store cannot move a selection. Distinct k
+    // per query keeps the warm-sequence discount (a deliberate prior
+    // change on repeated k) out of this transparency check.
+    let analytic = engine(1, SchedPolicy::Lookahead);
+    let mut calibrated = engine(1, SchedPolicy::Lookahead);
+    let profile = Arc::new(PerfProfile::new());
+    calibrated.set_calibration(Some(Arc::clone(&profile)));
+    calibrated.set_explore_allowed(false);
+    for (m, n, k) in [(64, 64, 64), (512, 512, 32), (300, 200, 100), (48, 1000, 16)] {
+        let dims = GemmDims::new(m, n, k);
+        assert_eq!(
+            calibrated.plan_config(dims),
+            analytic.plan_config(dims),
+            "cold-store selection must equal the analytic one for {m}x{n}x{k}"
+        );
+    }
+    let s = profile.stats();
+    assert_eq!(s.blended, 0, "no observation may have entered a blend: {s:?}");
+    assert_eq!(s.observations, 0, "plan_config alone must not record: {s:?}");
+}
+
+/// Steer one engine: overwhelming synthetic evidence that the
+/// analytically-worst family member is actually the fastest. Returns
+/// `None` (nothing to steer) on a single-kernel family.
+fn steer() -> Option<(GemmEngine, Arc<PerfProfile>, GemmDims, GemmConfig, GemmConfig)> {
+    let mut eng = engine(1, SchedPolicy::Lookahead);
+    let profile = Arc::new(PerfProfile::new());
+    eng.set_calibration(Some(Arc::clone(&profile)));
+    eng.set_explore_allowed(false);
+    let dims = GemmDims::new(256, 256, 64);
+    let family = eng.family();
+    if family.len() < 2 {
+        return None;
+    }
+    let analytic_best = eng.plan_config(dims);
+    let sel = select_from_elem(&host_xeon(), dims, &AnalyticScorer, &family, 8);
+    assert_eq!(sel.config, analytic_best, "the memoized selection is the scorer's best");
+    let worst = sel.ranked.last().unwrap().0;
+    assert_ne!(worst, analytic_best, "ranked list must have distinct ends");
+    // 64 observations at ~8 TFLOPS (2*256*256*64 flops in 1 µs): enough
+    // to cross two generation bumps (so the memoized analytic selection
+    // re-misses) and to pull the blend weight to 64/(64+4) ≈ 0.94.
+    for _ in 0..64 {
+        profile.record(dims, DType::F64, worst, 1, 1e-6);
+    }
+    Some((eng, profile, dims, analytic_best, worst))
+}
+
+#[test]
+fn observations_steer_the_selection_to_the_measured_best() {
+    let Some((eng, profile, dims, analytic_best, worst)) = steer() else {
+        eprintln!("single-kernel family on this host; nothing to steer");
+        return;
+    };
+    let steered = eng.plan_config(dims);
+    assert_eq!(
+        steered, worst,
+        "measured truth must override the analytic ranking (analytic best {analytic_best:?})"
+    );
+    let s = profile.stats();
+    assert!(s.blended > 0, "the re-selection must have consulted the store: {s:?}");
+    assert_eq!(s.observations, 64, "{s:?}");
+}
+
+#[test]
+fn clear_config_cache_drops_stale_measurements() {
+    // The plan/arch-change regression: measurements taken under an old
+    // configuration must not survive `clear_config_cache` — the store
+    // empties, its generation bumps (so memoized decisions re-miss), and
+    // the next selection is the pure-analytic one again.
+    let Some((mut eng, profile, dims, analytic_best, worst)) = steer() else {
+        eprintln!("single-kernel family on this host; nothing to steer");
+        return;
+    };
+    assert_eq!(eng.plan_config(dims), worst, "precondition: the store steers the selection");
+    let gen_before = profile.generation();
+    eng.clear_config_cache();
+    assert!(profile.is_empty(), "clear must empty the shared store");
+    assert_eq!(profile.stats().observations, 0);
+    assert!(profile.generation() > gen_before, "clear must bump the generation");
+    assert_eq!(
+        eng.plan_config(dims),
+        analytic_best,
+        "stale measurements must not outlive the clear"
+    );
+}
+
+#[test]
+fn exploration_is_deterministic_bounded_and_gated() {
+    let mut eng = engine(1, SchedPolicy::Lookahead);
+    let profile = Arc::new(PerfProfile::new());
+    eng.set_calibration(Some(Arc::clone(&profile)));
+    if eng.family().len() < 2 {
+        eprintln!("single-kernel family on this host; exploration has no runner-up");
+        return;
+    }
+    // Forbidden (the Interactive-tier stance): any number of cache-missing
+    // re-selections, zero explorations.
+    eng.set_explore_allowed(false);
+    for i in 0..40 {
+        let _ = eng.plan_config(GemmDims::new(32 + i, 32, 32));
+    }
+    assert_eq!(
+        profile.stats().explorations,
+        0,
+        "explore-forbidden engines must never take the runner-up"
+    );
+    // Allowed: every 16th missing re-selection explores — ticks 41..=80
+    // contain the multiples 48, 64, 80, so exactly 3 explorations, with
+    // no RNG anywhere (re-runs reproduce the count bit for bit).
+    eng.set_explore_allowed(true);
+    for i in 0..40 {
+        let _ = eng.plan_config(GemmDims::new(200 + i, 48, 24));
+    }
+    assert_eq!(profile.stats().explorations, 3, "deterministic 1-in-16 exploration");
+    // A fresh engine on a fresh store restarts the tick: 40 misses from
+    // zero hit the multiples 16 and 32.
+    let mut eng2 = engine(1, SchedPolicy::Lookahead);
+    let p2 = Arc::new(PerfProfile::new());
+    eng2.set_calibration(Some(Arc::clone(&p2)));
+    for i in 0..40 {
+        let _ = eng2.plan_config(GemmDims::new(32 + i, 32, 32));
+    }
+    assert_eq!(p2.stats().explorations, 2, "tick restarts with the attachment");
+}
+
+#[test]
+fn profile_round_trips_through_disk() {
+    let profile = Arc::new(PerfProfile::new());
+    let mut eng = engine(1, SchedPolicy::Lookahead);
+    eng.set_calibration(Some(Arc::clone(&profile)));
+    let dims = GemmDims::new(128, 96, 32);
+    let cfg = eng.plan_config(dims);
+    for _ in 0..8 {
+        profile.record(dims, DType::F64, cfg, 1, 2e-6);
+    }
+    for _ in 0..3 {
+        profile.record(dims, DType::F32, cfg, 2, 1e-6);
+    }
+    let path = std::env::temp_dir()
+        .join(format!("dla_profile_rt_{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    profile.save_to_path(&path).expect("temp-dir write");
+    let restored = PerfProfile::new();
+    assert_eq!(restored.load_from_path(&path), profile.len(), "every entry must reload");
+    // Canonical writer: the reloaded store serializes byte-identically,
+    // and blends exactly like the original.
+    assert_eq!(restored.to_json(), profile.to_json());
+    let analytic = 1.0;
+    assert_eq!(
+        restored.blend(dims, DType::F64, cfg, 1, analytic),
+        profile.blend(dims, DType::F64, cfg, 1, analytic),
+        "a reloaded store must blend identically"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn calibrated_server_records_persists_and_never_explores_interactive() {
+    let _guard = ENV_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let path = std::env::temp_dir()
+        .join(format!("dla_profile_server_{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    std::fs::remove_file(&path).ok();
+    std::env::set_var("DLA_PROFILE", &path);
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_workers(2)
+            .with_calibration(CalibratePolicy::On),
+    )
+    .unwrap();
+    let profile = server.profile().expect("calibrated server must expose its store");
+    let mut rng = Pcg64::seed(7107);
+    for _ in 0..6 {
+        let rx = server.submit_at(gemm_req(&mut rng, 48, 40, 16), Priority::Interactive).unwrap();
+        rx.recv().unwrap().unwrap();
+    }
+    assert!(profile.stats().observations > 0, "served GEMMs must be timed into the store");
+    assert_eq!(
+        profile.stats().explorations,
+        0,
+        "Interactive traffic must never pay for exploration"
+    );
+    let metrics = server.shutdown();
+    std::env::remove_var("DLA_PROFILE");
+    let c = *metrics.calibration_stats();
+    assert!(c.enabled, "{c:?}");
+    assert!(c.observations > 0, "{c:?}");
+    assert!(c.config_misses > 0, "the memo counters must surface too: {c:?}");
+    let s = metrics.summary();
+    assert!(s.contains("calibration:"), "{s}");
+    let j = metrics.snapshot_json();
+    assert!(j.contains("\"calibration\":{\"enabled\":true"), "{j}");
+    // The shutdown save landed and a fresh store reloads it (the
+    // cross-process DLA_PROFILE round-trip).
+    let restored = PerfProfile::new();
+    assert!(restored.load_from_path(&path) > 0, "persisted store must reload");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn uncalibrated_server_attaches_no_store() {
+    let _guard = ENV_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    // Pinned Off wins over any ambient DLA_CALIBRATE (the CI calibrate
+    // leg exports it): no store, no timing, and the summary keeps its
+    // pre-calibration shape.
+    let server = CoordinatorServer::start(
+        ServerConfig::new(host_xeon(), ConfigMode::Refined)
+            .with_calibration(CalibratePolicy::Off),
+    )
+    .unwrap();
+    assert!(server.profile().is_none(), "Off must attach nothing");
+    let mut rng = Pcg64::seed(7109);
+    let rx = server.submit(gemm_req(&mut rng, 30, 20, 10)).unwrap();
+    rx.recv().unwrap().unwrap();
+    let metrics = server.shutdown();
+    assert!(!metrics.calibration_stats().enabled);
+    assert!(
+        !metrics.summary().contains("calibration:"),
+        "default summary output must stay byte-identical"
+    );
+}
+
+#[test]
+fn pool_panic_never_corrupts_the_profile_store() {
+    // One-shot worker panic inside the first pooled epoch of a
+    // calibrated factorization: the unwinding dispatch must skip its
+    // timing hook (no garbage sample), the store must stay internally
+    // consistent (its canonical JSON still parses), and the same engine
+    // must keep calibrating afterwards.
+    let plan = FaultPlan::parse("panic@1:1").expect("fault spec");
+    let pool = Arc::new(WorkerPool::with_fault_state(4, Some(Arc::new(FaultState::new(plan)))));
+    let mut eng = GemmEngine::new(host_xeon(), ConfigMode::Refined);
+    eng.set_shared_pool(Arc::clone(&pool));
+    let profile = Arc::new(PerfProfile::new());
+    eng.set_calibration(Some(Arc::clone(&profile)));
+    let mut rng = Pcg64::seed(7108);
+    let a0 = MatrixF64::random(96, 96, &mut rng);
+    let shot = catch_unwind(AssertUnwindSafe(|| lu_factor(&a0, 16, &mut eng)));
+    assert!(shot.is_err(), "the injected panic must unwind out of the dispatch");
+    let s = pool.stats();
+    assert!(s.epochs_poisoned >= 1, "the shot must poison an epoch: {s:?}");
+    let before = profile.stats();
+    let json = profile.to_json();
+    let restored = PerfProfile::new();
+    restored.load_json(&json).expect("post-panic store must still serialize consistently");
+    assert_eq!(restored.len(), profile.len());
+    // Post-recovery, same pool, same engine, same store: accurate
+    // factors and a growing observation count.
+    let redo = lu_factor(&a0, 16, &mut eng).unwrap();
+    let err = redo.reconstruction_error(&a0);
+    assert!(err < 1e-10, "|PA-LU| = {err}");
+    assert!(
+        profile.stats().observations > before.observations,
+        "the recovered engine must keep recording: {:?} -> {:?}",
+        before,
+        profile.stats()
+    );
+}
